@@ -1,0 +1,123 @@
+//! End-to-end driver (DESIGN.md §6 / EXPERIMENTS.md §E2E): exercises every
+//! layer of the stack on a real small workload and proves they compose.
+//!
+//! Pipeline (the paper's Fig. 3, bottom to top):
+//!   1. JAX build path (ran once via `make artifacts`): model authored in
+//!      JAX, quantized, exported (arch.json + weights.bin), goldens dumped,
+//!      FP32 graph AOT-lowered to HLO.
+//!   2. `dlrt compile`: quantize + bitplane-pack -> .dlrt.
+//!   3. Runtime correctness: .dlrt outputs match the JAX deploy-sim goldens.
+//!   4. Cross-engine: bitserial vs FP32-native vs INT8 vs the PJRT-compiled
+//!      XLA artifact (framework baseline) on the same input.
+//!   5. Serving: batched requests through the coordinator; latency +
+//!      throughput + compression reported (paper's headline metrics).
+//!
+//! Run: `cargo run --release --example e2e_pipeline`
+
+use std::path::Path;
+use std::sync::Arc;
+use std::time::Duration;
+
+use anyhow::{bail, Context, Result};
+use dlrt::bench_harness::{bench_ms, ms, speedup, Table};
+use dlrt::compiler::{compile_graph, load_arch, EngineChoice};
+use dlrt::coordinator::{InferenceServer, ServerConfig};
+use dlrt::dlrt::format;
+use dlrt::exec::Executor;
+use dlrt::util::json::Json;
+use dlrt::Tensor;
+
+fn main() -> Result<()> {
+    let dir = Path::new("artifacts");
+    if !dir.join("golden/resnet18_mini.json").exists() {
+        bail!("run `make artifacts` first");
+    }
+
+    // ---- stage 1+2: exported model -> .dlrt ------------------------------
+    println!("[1/5] compiling exported resnet18_mini (QAT 2A/2W mixed) ...");
+    let g = load_arch(&dir.join("models/resnet18_mini"))?;
+    let quant = compile_graph(&g, EngineChoice::Auto)?;
+    let dlrt_path = std::env::temp_dir().join("e2e_resnet18.dlrt");
+    format::save(&quant, &dlrt_path)?;
+    let model = format::load(&dlrt_path)?;
+    println!("      engines {:?}, {} weight bytes", model.engine_summary(),
+             model.weight_bytes());
+
+    // ---- stage 3: golden parity ------------------------------------------
+    println!("[2/5] verifying against JAX deploy-sim goldens ...");
+    let golden = Json::parse(&std::fs::read_to_string(
+        dir.join("golden/resnet18_mini.json"))?)?;
+    let input = Tensor::new(
+        golden.get("input_shape")?.usize_vec()?,
+        golden.get("input")?.f32_vec()?,
+    )?;
+    let want = &golden.get("outputs")?.arr()?[0];
+    let want_t = Tensor::new(want.get("shape")?.usize_vec()?,
+                             want.get("data")?.f32_vec()?)?;
+    let mut ex = Executor::new(1);
+    let got = ex.run(&model, &input)?;
+    let scale = want_t.data.iter().fold(0.0f32, |m, v| m.max(v.abs())).max(1.0);
+    let diff = got[0].max_abs_diff(&want_t) / scale;
+    println!("      relative diff vs JAX: {diff:.2e}");
+    if diff > 2e-4 {
+        bail!("golden parity failed: {diff}");
+    }
+
+    // ---- stage 4: cross-engine comparison --------------------------------
+    println!("[3/5] cross-engine latency on the same checkpoint ...");
+    let fp32 = compile_graph(&g, EngineChoice::ForceFp32)?;
+    let int8 = compile_graph(&g, EngineChoice::ForceInt8)?;
+    let reps = 10;
+    let t_q = bench_ms(2, reps, || { ex.run(&model, &input).unwrap(); });
+    let t_f = bench_ms(2, reps, || { ex.run(&fp32, &input).unwrap(); });
+    let t_8 = bench_ms(2, reps, || { ex.run(&int8, &input).unwrap(); });
+
+    // PJRT framework baseline: the same architecture AOT-compiled by XLA
+    println!("[4/5] PJRT (XLA CPU) framework baseline ...");
+    let rt = dlrt::runtime::PjrtRuntime::cpu()?;
+    let pjrt = rt.load_hlo(&dir.join("resnet18_mini_2a2w"))?;
+    let mut rng = dlrt::util::rng::Rng::new(5);
+    let mut pj_inputs: Vec<Tensor> = pjrt.manifest.params.iter()
+        .map(|(_, shape)| {
+            let n: usize = shape.iter().product::<usize>().max(1);
+            Tensor::new(shape.clone(), (0..n).map(|_| rng.f32() * 0.1 + 0.05).collect())
+                .unwrap()
+        })
+        .collect();
+    pj_inputs.push(input.clone());
+    let t_pj = bench_ms(1, 5, || { pjrt.run_f32(&pj_inputs).unwrap(); });
+
+    let mut table = Table::new("e2e — resnet18_mini (64px), host CPU, 1 thread",
+                               &["engine", "median", "vs FP32-native"]);
+    table.row(vec!["DLRT bitserial 2A2W".into(), ms(t_q.median_ms),
+                   speedup(t_f.median_ms, t_q.median_ms)]);
+    table.row(vec!["INT8 native".into(), ms(t_8.median_ms),
+                   speedup(t_f.median_ms, t_8.median_ms)]);
+    table.row(vec!["FP32 native".into(), ms(t_f.median_ms), "1.00x".into()]);
+    table.row(vec!["XLA/PJRT (quantized graph)".into(), ms(t_pj.median_ms),
+                   speedup(t_f.median_ms, t_pj.median_ms)]);
+    table.print();
+    table.save_json("e2e_pipeline");
+
+    // ---- stage 5: serving ------------------------------------------------
+    println!("\n[5/5] serving 64 batched requests through the coordinator ...");
+    let server = InferenceServer::start(Arc::new(model), ServerConfig {
+        workers: 1,
+        max_batch: 8,
+        max_wait: Duration::from_millis(2),
+        threads_per_worker: 1,
+    });
+    let t0 = std::time::Instant::now();
+    let rxs: Vec<_> = (0..64).map(|_| server.submit(input.clone())).collect();
+    for rx in rxs {
+        rx.recv().expect("server alive")?;
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    let msn = server.metrics();
+    println!("      throughput {:.1} req/s | exec p50 {} | mean batch {:.2}",
+             64.0 / wall, ms(msn.p50_exec_ms), msn.mean_batch);
+    server.shutdown();
+    std::fs::remove_file(&dlrt_path).ok();
+    println!("\nE2E OK — all five stages composed.");
+    Ok(())
+}

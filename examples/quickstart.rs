@@ -1,0 +1,65 @@
+//! Quickstart: the five-line DeepliteRT story.
+//!
+//! 1. load a model exported by the JAX build path (`make artifacts`),
+//! 2. compile it (quantize + bitplane-pack) to a deployable `.dlrt`,
+//! 3. load the `.dlrt` back (this is all a device would ship),
+//! 4. run inference,
+//! 5. compare size + latency against the FP32 baseline engine.
+//!
+//! Run: `cargo run --release --example quickstart`
+
+use std::path::Path;
+
+use anyhow::{Context, Result};
+use dlrt::bench_harness::{bench_ms, ms, speedup};
+use dlrt::compiler::{compile_graph, load_arch, EngineChoice};
+use dlrt::dlrt::format;
+use dlrt::exec::Executor;
+use dlrt::util::rng::Rng;
+use dlrt::Tensor;
+
+fn main() -> Result<()> {
+    let model_dir = Path::new("artifacts/models/resnet18_mini");
+    let graph = load_arch(model_dir)
+        .context("run `make artifacts` first (builds the exported models)")?;
+    println!("loaded {} ({} convs)", graph.name, graph.conv_nodes().count());
+
+    // 2. compile: mixed-precision 2A/2W bitserial per the exported QCfg
+    let quantized = compile_graph(&graph, EngineChoice::Auto)?;
+    let out = std::env::temp_dir().join("quickstart_resnet18.dlrt");
+    format::save(&quantized, &out)?;
+    println!("compiled -> {} ({} bytes)", out.display(),
+             std::fs::metadata(&out)?.len());
+
+    // 3. deployable artifact only from here on
+    let model = format::load(&out)?;
+    println!("engines: {:?}", model.engine_summary());
+
+    // 4. inference on a random image
+    let mut rng = Rng::new(42);
+    let s = model.graph.input_shape;
+    let mut x = Tensor::zeros(vec![1, s[1], s[2], s[3]]);
+    for v in x.data.iter_mut() {
+        *v = rng.f32();
+    }
+    let mut ex = Executor::new(1);
+    let y = ex.run(&model, &x)?;
+    println!("logits: {:?}", &y[0].data);
+
+    // 5. against the FP32 baseline engine (same checkpoint)
+    let fp32 = compile_graph(&graph, EngineChoice::ForceFp32)?;
+    let t_q = bench_ms(2, 10, || {
+        ex.run(&model, &x).unwrap();
+    });
+    let t_f = bench_ms(2, 10, || {
+        ex.run(&fp32, &x).unwrap();
+    });
+    println!("\nmodel size : {} B (fp32 engine: {} B, {:.1}x smaller)",
+             model.weight_bytes(), fp32.weight_bytes(),
+             fp32.weight_bytes() as f64 / model.weight_bytes() as f64);
+    println!("latency    : {} (fp32 engine: {}, {} faster)",
+             ms(t_q.median_ms), ms(t_f.median_ms),
+             speedup(t_f.median_ms, t_q.median_ms));
+    std::fs::remove_file(&out).ok();
+    Ok(())
+}

@@ -1,0 +1,154 @@
+"""AOT build: lower JAX graphs to HLO text + export interchange artifacts.
+
+Run once via ``make artifacts`` (never on the request path). Produces under
+``artifacts/``:
+
+* ``<name>.hlo.txt``        — HLO text for the Rust PJRT runtime
+  (HLO *text*, not ``.serialize()``: jax>=0.5 emits 64-bit instruction ids
+  that xla_extension 0.5.1 rejects; the text parser reassigns ids)
+* ``<name>.manifest.json``  — parameter order/shapes for the HLO entry
+* ``models/<name>/``        — arch.json + weights.bin for ``dlrt compile``
+* ``golden/``               — cross-layer parity vectors (kernel + model)
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import export as ex
+from . import jax_exec
+from .graph import Graph, set_mixed_precision
+from .kernels import bitserial
+from .models import REGISTRY
+
+
+def to_hlo_text(lowered) -> str:
+    from jax._src.lib import xla_client as xc
+
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True)
+    return comp.as_hlo_text()
+
+
+def lower_graph(g: Graph, params: dict, state: dict, mode: str,
+                out_dir: Path, name: str) -> None:
+    """Lower ``run(g, ...)`` to HLO text with parameters passed positionally.
+
+    Parameter order = sorted(params) ++ sorted(state) ++ [input]; recorded in
+    the manifest so the Rust runtime can feed literals in order.
+    """
+    pkeys = sorted(params)
+    skeys = sorted(state)
+
+    def fn(*args):
+        p = dict(zip(pkeys, args[: len(pkeys)]))
+        s = dict(zip(skeys, args[len(pkeys): len(pkeys) + len(skeys)]))
+        x = args[-1]
+        outs, _ = jax_exec.run(g, p, s, x, mode=mode, train=False)
+        return tuple(outs)
+
+    specs = [jax.ShapeDtypeStruct(np.asarray(params[k]).shape, jnp.float32)
+             for k in pkeys]
+    specs += [jax.ShapeDtypeStruct(np.asarray(state[k]).shape, jnp.float32)
+              for k in skeys]
+    specs.append(jax.ShapeDtypeStruct(g.input_shape, jnp.float32))
+    lowered = jax.jit(fn, keep_unused=True).lower(*specs)
+    (out_dir / f"{name}.hlo.txt").write_text(to_hlo_text(lowered))
+    manifest = {
+        "name": name, "graph": g.name, "mode": mode,
+        "input_shape": list(g.input_shape),
+        "params": [{"name": k, "shape": list(np.asarray(params[k]).shape)}
+                   for k in pkeys],
+        "state": [{"name": k, "shape": list(np.asarray(state[k]).shape)}
+                  for k in skeys],
+        "outputs": g.outputs,
+    }
+    (out_dir / f"{name}.manifest.json").write_text(json.dumps(manifest, indent=1))
+
+
+def lower_bitserial_gemm(out_dir: Path, m: int = 256, k: int = 256, n: int = 128,
+                         a_bits: int = 2, w_bits: int = 2) -> None:
+    """Kernel-only artifact: the Pallas bitserial GEMM as loadable HLO."""
+
+    def fn(aq, wq):
+        return (bitserial.bitserial_gemm(aq, wq, a_bits=a_bits, w_bits=w_bits),)
+
+    specs = (jax.ShapeDtypeStruct((m, k), jnp.int32),
+             jax.ShapeDtypeStruct((n, k), jnp.int32))
+    lowered = jax.jit(fn, keep_unused=True).lower(*specs)
+    name = f"bitserial_gemm_m{m}k{k}n{n}_{a_bits}a{w_bits}w"
+    (out_dir / f"{name}.hlo.txt").write_text(to_hlo_text(lowered))
+    (out_dir / f"{name}.manifest.json").write_text(json.dumps({
+        "name": name, "m": m, "k": k, "n": n,
+        "a_bits": a_bits, "w_bits": w_bits}))
+
+
+def build_artifacts(out_root: str) -> None:
+    out = Path(out_root)
+    (out / "models").mkdir(parents=True, exist_ok=True)
+    (out / "golden").mkdir(exist_ok=True)
+
+    # --- kernel goldens (Rust unit tests consume these)
+    ex.export_kernel_goldens(out / "golden" / "kernels.json")
+
+    # --- kernel-only PJRT artifacts
+    lower_bitserial_gemm(out)
+    lower_bitserial_gemm(out, m=64, k=64, n=32, a_bits=1, w_bits=2)
+
+    # --- interchange + goldens for small models (format/parity tests)
+    rng = np.random.default_rng(0)
+    small_models = [
+        ("resnet18_mini", REGISTRY["resnet18"](num_classes=2, resolution=64,
+                                               width_mult=0.25)),
+        ("yolov5n_mini", REGISTRY["yolov5n"](num_classes=8, resolution=64,
+                                             width_mult=0.5)),
+    ]
+    for name, g in small_models:
+        set_mixed_precision(g, quantize_from=1, w_bits=2, a_bits=2)
+        params, state = jax_exec.init_params(g, seed=42)
+        # randomize BN state a bit so folding is non-trivial in parity tests
+        for k in state:
+            if k.endswith(".mean"):
+                state[k] = jnp.asarray(rng.normal(0, 0.05, state[k].shape),
+                                       jnp.float32)
+            else:
+                state[k] = jnp.asarray(rng.uniform(0.5, 1.5, state[k].shape),
+                                       jnp.float32)
+        # calibrate activation scales so the quantized path is non-degenerate
+        xs = [jnp.asarray(rng.uniform(0, 1, (2, *g.input_shape[1:])), jnp.float32)]
+        params = jax_exec.calibrate_activation_scales(g, params, state, xs)
+        ex.export_model(g, params, state, out / "models" / name)
+        x = jnp.asarray(rng.uniform(0, 1, g.input_shape), jnp.float32)
+        ex.export_golden(g, params, state, x, out / "golden" / f"{name}.json",
+                         mode="deploy_sim")
+        ex.export_golden(g, params, state, x,
+                         out / "golden" / f"{name}_fp32.json", mode="fp32")
+
+    # --- PJRT model artifacts (FP32 baseline engine + quantized kernel graph)
+    g = REGISTRY["resnet18"](num_classes=1000, resolution=96)
+    params, state = jax_exec.init_params(g, seed=0)
+    lower_graph(g, params, state, "fp32", out, "resnet18_fp32_96")
+
+    g = REGISTRY["resnet18"](num_classes=2, resolution=64, width_mult=0.25)
+    set_mixed_precision(g, quantize_from=1, w_bits=2, a_bits=2)
+    params, state = jax_exec.init_params(g, seed=42)
+    lower_graph(g, params, state, "deploy_kernel", out, "resnet18_mini_2a2w")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    args = ap.parse_args()
+    build_artifacts(args.out)
+    print(f"artifacts written to {args.out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,125 @@
+"""Synthetic datasets standing in for VWW / COCO-8 / ImageNet (DESIGN.md §2).
+
+The reproduced quantity is the *accuracy drop under ultra-low-bit QAT*, not
+absolute SOTA accuracy, so each generator is built to (a) be learnable by a
+small CNN in a few hundred steps on one CPU core and (b) have enough texture
+that 1–2 bit quantization actually costs accuracy (plain constant-color
+tasks quantize for free and would fake a 0% drop).
+
+* ``synth_vww``    — person-present stand-in: binary label, a bright soft
+                     blob + distractor noise. (Visual Wake Words analog.)
+* ``synth_cls``    — k-class stand-in for ImageNet: class = (blob position
+                     quadrant, stripe orientation) combinations.
+* ``synth_shapes`` — detection stand-in for COCO-8/VOC: up to ``max_obj``
+                     axis-aligned shapes from 8 classes; targets are YOLO
+                     grid tensors (obj, class, box) per cell.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+
+def _blob(h: int, w: int, cy: float, cx: float, r: float) -> np.ndarray:
+    yy, xx = np.mgrid[0:h, 0:w]
+    return np.exp(-(((yy - cy) ** 2 + (xx - cx) ** 2) / (2 * r * r)))
+
+
+def synth_vww(rng: np.random.Generator, n: int, res: int = 32):
+    """Returns (x [n,res,res,3] float in [0,1], y [n] {0,1})."""
+    x = rng.uniform(0.0, 0.35, size=(n, res, res, 3)).astype(np.float32)
+    y = rng.integers(0, 2, size=n)
+    for i in range(n):
+        # distractor texture either way
+        fy, fx = rng.uniform(4, res - 4, 2)
+        x[i, :, :, rng.integers(0, 3)] += 0.15 * _blob(res, res, fy, fx, res / 3)
+        if y[i]:
+            cy, cx = rng.uniform(res * 0.25, res * 0.75, 2)
+            r = rng.uniform(res / 10, res / 6)
+            person = _blob(res, res, cy, cx, r)
+            # "person": vertical bright blob with a head bump
+            head = 0.8 * _blob(res, res, cy - 2 * r, cx, r / 2)
+            for c in range(3):
+                x[i, :, :, c] += (0.5 + 0.2 * c / 3) * (person + head)
+    return np.clip(x, 0, 1).astype(np.float32), y.astype(np.int32)
+
+
+def synth_cls(rng: np.random.Generator, n: int, res: int = 32, k: int = 10):
+    """k-class classification; class encodes quadrant (4) x orientation (k/4)."""
+    x = rng.uniform(0.0, 0.3, size=(n, res, res, 3)).astype(np.float32)
+    y = rng.integers(0, k, size=n)
+    for i in range(n):
+        cls = int(y[i])
+        quad, phase = cls % 4, cls // 4
+        cy = res * (0.3 if quad in (0, 1) else 0.7)
+        cx = res * (0.3 if quad in (0, 2) else 0.7)
+        r = res / 8
+        x[i, :, :, 0] += _blob(res, res, cy, cx, r)
+        yy, xx = np.mgrid[0:res, 0:res]
+        stripes = 0.5 * (1 + np.sin((xx if phase % 2 else yy) * (0.4 + 0.25 * phase)))
+        x[i, :, :, 1] += 0.35 * stripes
+    return np.clip(x, 0, 1).astype(np.float32), y.astype(np.int32)
+
+
+SHAPE_CLASSES = ["person", "dog", "cat", "car", "bus", "truck", "bicycle",
+                 "motorcycle"]  # the paper's COCO-8 subset
+
+
+def synth_shapes(rng: np.random.Generator, n: int, res: int = 64,
+                 num_classes: int = 8, max_obj: int = 3, grid: int = 8):
+    """Detection set. Returns (x, targets) with YOLO-style grid targets.
+
+    targets: [n, grid, grid, 5 + num_classes] = (obj, cx, cy, w, h, onehot);
+    cx/cy are cell-relative in [0,1], w/h image-relative.
+    Each class is a distinct drawing primitive (filled box, ring, cross,
+    stripes, ...) so classification is learnable from local appearance.
+    """
+    x = rng.uniform(0.0, 0.25, size=(n, res, res, 3)).astype(np.float32)
+    t = np.zeros((n, grid, grid, 5 + num_classes), np.float32)
+    cell = res / grid
+    for i in range(n):
+        for _ in range(int(rng.integers(1, max_obj + 1))):
+            cls = int(rng.integers(0, num_classes))
+            bw = rng.uniform(res / 8, res / 3)
+            bh = rng.uniform(res / 8, res / 3)
+            cy = rng.uniform(bh / 2, res - bh / 2)
+            cx = rng.uniform(bw / 2, res - bw / 2)
+            y0, y1 = int(cy - bh / 2), int(cy + bh / 2)
+            x0, x1 = int(cx - bw / 2), int(cx + bw / 2)
+            patch = x[i, y0:y1, x0:x1]
+            ph, pw = patch.shape[:2]
+            if ph < 2 or pw < 2:
+                continue
+            yy, xx = np.mgrid[0:ph, 0:pw]
+            c = cls % 8
+            if c == 0:      # filled bright box
+                patch[..., 0] += 0.8
+            elif c == 1:    # ring
+                rr = np.hypot(yy - ph / 2, xx - pw / 2)
+                patch[..., 1] += 0.8 * ((rr > min(ph, pw) / 4) & (rr < min(ph, pw) / 2.2))
+            elif c == 2:    # cross
+                patch[..., 2] += 0.8 * ((np.abs(yy - ph / 2) < ph / 8) |
+                                        (np.abs(xx - pw / 2) < pw / 8))
+            elif c == 3:    # horizontal stripes
+                patch[..., 0] += 0.7 * ((yy // max(2, ph // 6)) % 2)
+            elif c == 4:    # vertical stripes
+                patch[..., 1] += 0.7 * ((xx // max(2, pw // 6)) % 2)
+            elif c == 5:    # diagonal
+                patch[..., 2] += 0.7 * (((yy + xx) // max(2, (ph + pw) // 12)) % 2)
+            elif c == 6:    # filled disk
+                rr = np.hypot(yy - ph / 2, xx - pw / 2)
+                patch[..., 0] += 0.8 * (rr < min(ph, pw) / 2.5)
+                patch[..., 1] += 0.6 * (rr < min(ph, pw) / 2.5)
+            else:           # checkerboard
+                patch[..., 2] += 0.7 * (((yy // max(2, ph // 4)) +
+                                         (xx // max(2, pw // 4))) % 2)
+            gi, gj = min(grid - 1, int(cy / cell)), min(grid - 1, int(cx / cell))
+            if t[i, gi, gj, 0] == 1.0:
+                continue  # one object per cell
+            t[i, gi, gj, 0] = 1.0
+            t[i, gi, gj, 1] = cx / cell - gj
+            t[i, gi, gj, 2] = cy / cell - gi
+            t[i, gi, gj, 3] = bw / res
+            t[i, gi, gj, 4] = bh / res
+            t[i, gi, gj, 5 + cls] = 1.0
+    return np.clip(x, 0, 1).astype(np.float32), t

@@ -1,0 +1,142 @@
+"""Serialize graph-IR models to ``arch.json`` + ``weights.bin``.
+
+This is the interchange the Rust ``dlrt compile`` pass consumes
+(rust/src/compiler/). Layout:
+
+* ``arch.json`` — graph topology; every tensor-valued field is a
+  ``{"offset": <f32 element offset>, "len": <element count>}`` reference
+  into ``weights.bin``.
+* ``weights.bin`` — little-endian f32, concatenated in reference order.
+
+Conv nodes carry deployment-ready data: raw f32 weights (HWIO), the QAT
+scales ``s_w`` / ``s_a`` when quantized, and per-channel folded-BN
+``scale`` / ``bias`` (identity scale + plain bias when the conv had no BN).
+The Rust compiler performs the integer quantization + bitplane packing.
+"""
+
+from __future__ import annotations
+
+import json
+import struct
+from pathlib import Path
+
+import numpy as np
+
+from . import jax_exec
+from .graph import Graph
+
+
+class _WeightWriter:
+    def __init__(self) -> None:
+        self.chunks: list[bytes] = []
+        self.offset = 0
+
+    def put(self, arr) -> dict:
+        a = np.asarray(arr, dtype=np.float32).ravel()
+        ref = {"offset": self.offset, "len": int(a.size)}
+        self.chunks.append(a.tobytes())
+        self.offset += int(a.size)
+        return ref
+
+    def bytes(self) -> bytes:
+        return b"".join(self.chunks)
+
+
+def export_model(g: Graph, params: dict, state: dict, out_dir: str | Path) -> Path:
+    """Write ``<out_dir>/arch.json`` and ``weights.bin``. Returns out_dir."""
+    out = Path(out_dir)
+    out.mkdir(parents=True, exist_ok=True)
+    ww = _WeightWriter()
+    nodes = []
+    for n in g.nodes:
+        jn: dict = {"op": n.op, "name": n.name, "inputs": n.inputs,
+                    "output": n.output}
+        if n.op == "conv2d":
+            qcfg = n.attrs["qcfg"]
+            scale, bias = jax_exec._bn_fold_scale_bias(params, state, n.name)
+            jn.update({
+                "stride": n.attrs["stride"], "padding": n.attrs["padding"],
+                "kernel": n.attrs["kernel"], "cin": n.attrs["cin"],
+                "cout": n.attrs["cout"],
+                "qcfg": qcfg.to_json(),
+                "w": ww.put(params[f"{n.name}.w"]),
+                "scale": ww.put(scale),
+                "bias": ww.put(bias),
+            })
+            if qcfg.enabled:
+                jn["s_w"] = float(params[f"{n.name}.s_w"])
+                jn["s_a"] = float(params[f"{n.name}.s_a"])
+        elif n.op == "dense":
+            jn.update({
+                "cin": n.attrs["cin"], "cout": n.attrs["cout"],
+                "w": ww.put(params[f"{n.name}.w"]),
+                "b": ww.put(params[f"{n.name}.b"]),
+            })
+        elif n.op == "maxpool2d":
+            jn.update({"kernel": n.attrs["kernel"], "stride": n.attrs["stride"],
+                       "padding": n.attrs["padding"]})
+        nodes.append(jn)
+
+    arch = {
+        "name": g.name,
+        "input": {"name": g.input_name, "shape": list(g.input_shape)},
+        "outputs": g.outputs,
+        "nodes": nodes,
+    }
+    (out / "arch.json").write_text(json.dumps(arch, indent=1))
+    (out / "weights.bin").write_bytes(ww.bytes())
+    return out
+
+
+def export_golden(g: Graph, params: dict, state: dict, x, out_path: str | Path,
+                  mode: str = "deploy_sim") -> None:
+    """Golden parity vector: input + per-output flats under deployment math."""
+    outs, _ = jax_exec.run(g, params, state, x, mode=mode)
+    data = {
+        "model": g.name,
+        "mode": mode,
+        "input_shape": list(np.asarray(x).shape),
+        "input": [float(v) for v in np.asarray(x, np.float32).ravel()],
+        "outputs": [
+            {"shape": list(np.asarray(o).shape),
+             "data": [float(v) for v in np.asarray(o, np.float32).ravel()]}
+            for o in outs
+        ],
+    }
+    Path(out_path).write_text(json.dumps(data))
+
+
+def export_kernel_goldens(out_path: str | Path, seed: int = 0) -> None:
+    """Random bitserial GEMM/conv cases with oracle outputs, for Rust tests."""
+    from .kernels import pack, ref
+
+    rng = np.random.default_rng(seed)
+    cases = []
+    for a_bits, w_bits, m, n, k in [(1, 1, 4, 5, 37), (2, 2, 8, 6, 64),
+                                    (1, 2, 7, 9, 130), (3, 2, 5, 4, 96),
+                                    (2, 3, 6, 8, 33), (4, 4, 3, 3, 70)]:
+        qp, qn = pack.qp_qn(w_bits, signed=True)
+        a = rng.integers(0, 2**a_bits, size=(m, k))
+        w = rng.integers(-qn, qp + 1, size=(n, k))
+        outp = np.asarray(ref.ref_gemm_i32(a, w))
+        cases.append({
+            "a_bits": a_bits, "w_bits": w_bits, "m": m, "n": n, "k": k,
+            "a": a.ravel().tolist(), "w": w.ravel().tolist(),
+            "out": outp.ravel().tolist(),
+        })
+    conv_cases = []
+    for a_bits, w_bits, hw, cin, cout, kk, s, p in [
+            (2, 2, 8, 5, 6, 3, 1, 1), (1, 2, 9, 4, 7, 3, 2, 1),
+            (2, 2, 7, 3, 4, 1, 1, 0), (3, 3, 6, 8, 5, 3, 1, 0)]:
+        qp, qn = pack.qp_qn(w_bits, signed=True)
+        x = rng.integers(0, 2**a_bits, size=(1, hw, hw, cin))
+        w = rng.integers(-qn, qp + 1, size=(kk, kk, cin, cout))
+        outp = np.asarray(ref.ref_qconv2d_i32(
+            np.asarray(x), np.asarray(w), (s, s), (p, p)))
+        conv_cases.append({
+            "a_bits": a_bits, "w_bits": w_bits, "h": hw, "w_in": hw,
+            "cin": cin, "cout": cout, "k": kk, "stride": s, "padding": p,
+            "x": x.ravel().tolist(), "w": w.ravel().tolist(),
+            "out_shape": list(outp.shape), "out": outp.ravel().tolist(),
+        })
+    Path(out_path).write_text(json.dumps({"gemm": cases, "conv": conv_cases}))

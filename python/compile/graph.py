@@ -1,0 +1,224 @@
+"""Serializable model graph IR shared between the JAX build path and DeepliteRT.
+
+Models are defined **once** as graph programs (see ``models/``); the same
+graph is
+
+* executed in JAX (``jax_exec.py``) for QAT training, golden outputs and
+  AOT lowering, and
+* serialized to ``arch.json`` + ``weights.bin`` (``export.py``) for the Rust
+  ``dlrt compile`` pass, which quantizes/packs it into a ``.dlrt`` binary.
+
+Supported ops mirror ``rust/src/dlrt/graph.rs`` exactly:
+
+    conv2d       attrs: stride, padding, qcfg (w_bits, a_bits, enabled)
+                 weights: w (HWIO), optional b (O); BN is folded at export
+    dense        weights: w (IN,OUT), optional b
+    maxpool2d    attrs: kernel, stride, padding
+    global_avg_pool
+    add | concat (concat: axis = channel)
+    upsample2x   (nearest)
+    relu | relu6 | silu | leaky_relu(0.1) | sigmoid
+    flatten
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any
+
+OPS = {
+    "conv2d", "dense", "maxpool2d", "global_avg_pool", "add", "concat",
+    "upsample2x", "relu", "relu6", "silu", "leaky_relu", "sigmoid", "flatten",
+}
+
+
+@dataclass
+class QCfg:
+    """Per-conv quantization config (the mixed-precision knob)."""
+
+    w_bits: int = 2
+    a_bits: int = 2
+    enabled: bool = True
+
+    @property
+    def tag(self) -> str:
+        return f"{self.a_bits}A{self.w_bits}W" if self.enabled else "FP32"
+
+    def to_json(self) -> dict:
+        return {"w_bits": self.w_bits, "a_bits": self.a_bits, "enabled": self.enabled}
+
+
+FP32 = QCfg(enabled=False)
+
+
+@dataclass
+class Node:
+    op: str
+    name: str
+    inputs: list[str]
+    output: str
+    attrs: dict[str, Any] = field(default_factory=dict)
+    # weight tensor names owned by this node, e.g. {"w": "conv1.w", "b": "conv1.b"}
+    weights: dict[str, str] = field(default_factory=dict)
+
+
+@dataclass
+class Graph:
+    name: str
+    input_name: str
+    input_shape: tuple[int, int, int, int]  # NHWC
+    nodes: list[Node] = field(default_factory=list)
+    outputs: list[str] = field(default_factory=list)
+
+    def conv_nodes(self) -> list[Node]:
+        return [n for n in self.nodes if n.op == "conv2d"]
+
+    def validate(self) -> None:
+        """Every input must be produced before use; output names unique."""
+        avail = {self.input_name}
+        for n in self.nodes:
+            if n.op not in OPS:
+                raise ValueError(f"unknown op {n.op!r} in node {n.name}")
+            for i in n.inputs:
+                if i not in avail:
+                    raise ValueError(f"node {n.name} reads undefined tensor {i!r}")
+            if n.output in avail:
+                raise ValueError(f"tensor {n.output!r} defined twice")
+            avail.add(n.output)
+        for o in self.outputs:
+            if o not in avail:
+                raise ValueError(f"graph output {o!r} undefined")
+        if not self.outputs:
+            raise ValueError("graph has no outputs")
+
+
+class GraphBuilder:
+    """Tiny DSL for writing model definitions.
+
+    All ``conv`` calls create *folded* conv nodes (bias absorbs BN at export
+    time); during QAT the JAX executor keeps separate BN state keyed off the
+    node name (see ``jax_exec.py``).
+    """
+
+    def __init__(self, name: str, input_shape: tuple[int, int, int, int],
+                 input_name: str = "input"):
+        self.g = Graph(name=name, input_name=input_name, input_shape=input_shape)
+        self._uid = 0
+        self._channels: dict[str, int] = {input_name: input_shape[3]}
+
+    def _fresh(self, prefix: str) -> str:
+        self._uid += 1
+        return f"{prefix}_{self._uid}"
+
+    def channels(self, t: str) -> int:
+        return self._channels[t]
+
+    def conv(self, x: str, cout: int, k: int = 3, stride: int = 1,
+             padding: int | None = None, qcfg: QCfg | None = None,
+             bn: bool = True, act: str | None = None, name: str | None = None) -> str:
+        """conv2d(+folded BN)+optional activation. Returns output tensor name."""
+        name = name or self._fresh("conv")
+        pad = padding if padding is not None else k // 2
+        cin = self._channels[x]
+        out = f"{name}.out"
+        node = Node(
+            op="conv2d", name=name, inputs=[x], output=out,
+            attrs={
+                "stride": [stride, stride], "padding": [pad, pad],
+                "kernel": [k, k], "cin": cin, "cout": cout,
+                "qcfg": (qcfg or FP32), "bn": bn,
+            },
+            weights={"w": f"{name}.w", "b": f"{name}.b"},
+        )
+        self.g.nodes.append(node)
+        self._channels[out] = cout
+        if act:
+            out = self.act(out, act, name=f"{name}.{act}")
+        return out
+
+    def act(self, x: str, kind: str, name: str | None = None) -> str:
+        assert kind in {"relu", "relu6", "silu", "leaky_relu", "sigmoid"}
+        name = name or self._fresh(kind)
+        out = f"{name}.out"
+        self.g.nodes.append(Node(op=kind, name=name, inputs=[x], output=out))
+        self._channels[out] = self._channels[x]
+        return out
+
+    def maxpool(self, x: str, k: int = 2, stride: int | None = None,
+                padding: int = 0, name: str | None = None) -> str:
+        name = name or self._fresh("maxpool")
+        out = f"{name}.out"
+        self.g.nodes.append(Node(
+            op="maxpool2d", name=name, inputs=[x], output=out,
+            attrs={"kernel": [k, k], "stride": [stride or k, stride or k],
+                   "padding": [padding, padding]},
+        ))
+        self._channels[out] = self._channels[x]
+        return out
+
+    def global_avg_pool(self, x: str, name: str | None = None) -> str:
+        name = name or self._fresh("gap")
+        out = f"{name}.out"
+        self.g.nodes.append(Node(op="global_avg_pool", name=name, inputs=[x], output=out))
+        self._channels[out] = self._channels[x]
+        return out
+
+    def add(self, a: str, b: str, name: str | None = None) -> str:
+        name = name or self._fresh("add")
+        out = f"{name}.out"
+        self.g.nodes.append(Node(op="add", name=name, inputs=[a, b], output=out))
+        self._channels[out] = self._channels[a]
+        return out
+
+    def concat(self, xs: list[str], name: str | None = None) -> str:
+        name = name or self._fresh("concat")
+        out = f"{name}.out"
+        self.g.nodes.append(Node(op="concat", name=name, inputs=list(xs), output=out))
+        self._channels[out] = sum(self._channels[x] for x in xs)
+        return out
+
+    def upsample2x(self, x: str, name: str | None = None) -> str:
+        name = name or self._fresh("up")
+        out = f"{name}.out"
+        self.g.nodes.append(Node(op="upsample2x", name=name, inputs=[x], output=out))
+        self._channels[out] = self._channels[x]
+        return out
+
+    def flatten(self, x: str, name: str | None = None) -> str:
+        name = name or self._fresh("flatten")
+        out = f"{name}.out"
+        self.g.nodes.append(Node(op="flatten", name=name, inputs=[x], output=out))
+        return out
+
+    def dense(self, x: str, cout: int, cin: int, name: str | None = None) -> str:
+        name = name or self._fresh("dense")
+        out = f"{name}.out"
+        self.g.nodes.append(Node(
+            op="dense", name=name, inputs=[x], output=out,
+            attrs={"cin": cin, "cout": cout},
+            weights={"w": f"{name}.w", "b": f"{name}.b"},
+        ))
+        return out
+
+    def finish(self, outputs: list[str]) -> Graph:
+        self.g.outputs = list(outputs)
+        self.g.validate()
+        return self.g
+
+
+def set_mixed_precision(g: Graph, quantize_from: int = 1, quantize_to: int | None = None,
+                        w_bits: int = 2, a_bits: int = 2) -> Graph:
+    """Apply the paper's 'conservative' mixed-precision policy in place.
+
+    Convs with index in [quantize_from, quantize_to) get (a_bits, w_bits);
+    the rest stay FP32. The paper keeps the first conv (and detection-
+    sensitive layers) in FP32.
+    """
+    convs = g.conv_nodes()
+    hi = len(convs) if quantize_to is None else quantize_to
+    for idx, n in enumerate(convs):
+        if quantize_from <= idx < hi:
+            n.attrs["qcfg"] = QCfg(w_bits=w_bits, a_bits=a_bits, enabled=True)
+        else:
+            n.attrs["qcfg"] = QCfg(enabled=False)
+    return g

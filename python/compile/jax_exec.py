@@ -1,0 +1,290 @@
+"""JAX executor for the shared graph IR (build path only).
+
+Modes
+-----
+``fp32``          plain float inference (BN applied from state)
+``qat``           LSQ fake-quant training: conv weights and conv inputs are
+                  fake-quantized with learned per-conv scales; live batchnorm
+                  with batch statistics (running stats updated in aux)
+``deploy_sim``    integer-exact deployment semantics: hard-quantize with the
+                  trained scales, integer conv accumulators, dequantize with
+                  per-channel folded BN scale/bias — the *same arithmetic*
+                  the Rust runtime executes; used for golden parity vectors
+``deploy_kernel`` like deploy_sim but the conv goes through the Pallas
+                  bitserial kernel; this is what ``aot.py`` lowers to HLO
+
+The executor is pure jnp, hence differentiable in ``qat`` mode.
+"""
+
+from __future__ import annotations
+
+from typing import Callable
+
+import jax
+import jax.lax as lax
+import jax.numpy as jnp
+
+from . import quant
+from .graph import Graph, Node, QCfg
+from .kernels import bitserial as bs
+from .kernels import ref as kref
+from .kernels.pack import qp_qn
+
+BN_EPS = 1e-5
+
+
+# ---------------------------------------------------------------------------
+# Initialization
+# ---------------------------------------------------------------------------
+
+def init_params(g: Graph, seed: int = 0) -> tuple[dict, dict]:
+    """He-normal init. Returns (params, state).
+
+    params: conv/dense weights + BN gamma/beta + LSQ scales (s_w, s_a).
+    state:  BN running mean/var.
+    """
+    import numpy as np
+
+    rng = np.random.default_rng(seed)
+    params: dict[str, jnp.ndarray] = {}
+    state: dict[str, jnp.ndarray] = {}
+    for n in g.nodes:
+        if n.op == "conv2d":
+            kh, kw = n.attrs["kernel"]
+            cin, cout = n.attrs["cin"], n.attrs["cout"]
+            fan_in = kh * kw * cin
+            w = rng.normal(0.0, (2.0 / fan_in) ** 0.5, size=(kh, kw, cin, cout))
+            params[f"{n.name}.w"] = jnp.asarray(w, jnp.float32)
+            params[f"{n.name}.b"] = jnp.zeros((cout,), jnp.float32)
+            if n.attrs.get("bn", True):
+                params[f"{n.name}.bn.gamma"] = jnp.ones((cout,), jnp.float32)
+                params[f"{n.name}.bn.beta"] = jnp.zeros((cout,), jnp.float32)
+                state[f"{n.name}.bn.mean"] = jnp.zeros((cout,), jnp.float32)
+                state[f"{n.name}.bn.var"] = jnp.ones((cout,), jnp.float32)
+            qcfg: QCfg = n.attrs["qcfg"]
+            if qcfg.enabled:
+                params[f"{n.name}.s_w"] = quant.init_scale(
+                    params[f"{n.name}.w"], qcfg.w_bits, signed=True)
+                params[f"{n.name}.s_a"] = jnp.float32(0.1)
+        elif n.op == "dense":
+            cin, cout = n.attrs["cin"], n.attrs["cout"]
+            w = rng.normal(0.0, (2.0 / cin) ** 0.5, size=(cin, cout))
+            params[f"{n.name}.w"] = jnp.asarray(w, jnp.float32)
+            params[f"{n.name}.b"] = jnp.zeros((cout,), jnp.float32)
+    return params, state
+
+
+# ---------------------------------------------------------------------------
+# Op implementations
+# ---------------------------------------------------------------------------
+
+def _conv_fp32(x, w, stride, padding):
+    return lax.conv_general_dilated(
+        x, w, window_strides=tuple(stride),
+        padding=[(padding[0], padding[0]), (padding[1], padding[1])],
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))
+
+
+def _bn_fold_scale_bias(params, state, name):
+    """Per-channel (scale, bias) equivalent of the trained BN (or plain bias)."""
+    if f"{name}.bn.gamma" in params:
+        gamma, beta = params[f"{name}.bn.gamma"], params[f"{name}.bn.beta"]
+        mean, var = state[f"{name}.bn.mean"], state[f"{name}.bn.var"]
+        inv = gamma / jnp.sqrt(var + BN_EPS)
+        return inv, beta - mean * inv
+    cout = params[f"{name}.b"].shape[0]
+    return jnp.ones((cout,), jnp.float32), params[f"{name}.b"]
+
+
+def _apply_act(op: str, x):
+    if op == "relu":
+        return jax.nn.relu(x)
+    if op == "relu6":
+        return jnp.clip(x, 0.0, 6.0)
+    if op == "silu":
+        return x * jax.nn.sigmoid(x)
+    if op == "leaky_relu":
+        return jnp.where(x >= 0, x, 0.1 * x)
+    if op == "sigmoid":
+        return jax.nn.sigmoid(x)
+    raise AssertionError(op)
+
+
+def _maxpool(x, kernel, stride, padding):
+    return lax.reduce_window(
+        x, -jnp.inf, lax.max,
+        window_dimensions=(1, kernel[0], kernel[1], 1),
+        window_strides=(1, stride[0], stride[1], 1),
+        padding=((0, 0), (padding[0], padding[0]), (padding[1], padding[1]), (0, 0)))
+
+
+def _upsample2x(x):
+    n, h, w, c = x.shape
+    return jnp.broadcast_to(x[:, :, None, :, None, :], (n, h, 2, w, 2, c)).reshape(
+        n, 2 * h, 2 * w, c)
+
+
+# ---------------------------------------------------------------------------
+# Conv flavor per mode
+# ---------------------------------------------------------------------------
+
+def _conv_qat(x, params, state, n: Node, train: bool):
+    """Fake-quantized conv + live BN (batch stats when train=True)."""
+    qcfg: QCfg = n.attrs["qcfg"]
+    name = n.name
+    w = params[f"{name}.w"]
+    if qcfg.enabled:
+        gs_w = quant.lsq_grad_scale(w.size, qcfg.w_bits, True)
+        w = quant.lsq_quantize(w, params[f"{name}.s_w"], qcfg.w_bits, True, gs_w)
+        gs_a = quant.lsq_grad_scale(x.size, qcfg.a_bits, False)
+        x = quant.lsq_quantize(x, params[f"{name}.s_a"], qcfg.a_bits, False, gs_a)
+    y = _conv_fp32(x, w, n.attrs["stride"], n.attrs["padding"])
+    aux = {}
+    if n.attrs.get("bn", True):
+        gamma, beta = params[f"{name}.bn.gamma"], params[f"{name}.bn.beta"]
+        if train:
+            mean = y.mean(axis=(0, 1, 2))
+            var = y.var(axis=(0, 1, 2))
+            aux[f"{name}.bn.mean"] = mean
+            aux[f"{name}.bn.var"] = var
+        else:
+            mean, var = state[f"{name}.bn.mean"], state[f"{name}.bn.var"]
+        y = (y - mean) / jnp.sqrt(var + BN_EPS) * gamma + beta
+    else:
+        y = y + params[f"{name}.b"]
+    return y, aux
+
+
+def _conv_deploy(x, params, state, n: Node, use_kernel: bool):
+    """Deployment-exact conv: integer accumulators + per-channel scale/bias.
+
+    Mirrors rust/src/exec/ops.rs arithmetic step for step.
+    """
+    qcfg: QCfg = n.attrs["qcfg"]
+    name = n.name
+    scale, bias = _bn_fold_scale_bias(params, state, name)
+    w = params[f"{name}.w"]
+    stride, padding = n.attrs["stride"], n.attrs["padding"]
+    if not qcfg.enabled:
+        y = _conv_fp32(x, w, stride, padding)
+        return y * scale + bias, {}
+    s_w = params[f"{name}.s_w"]
+    s_a = params[f"{name}.s_a"]
+    qp_a, _ = qp_qn(qcfg.a_bits, signed=False)
+    qp_w, qn_w = qp_qn(qcfg.w_bits, signed=True)
+    xq = jnp.clip(jnp.round(x / s_a), 0, qp_a).astype(jnp.int32)
+    wq = jnp.clip(jnp.round(w / s_w), -qn_w, qp_w).astype(jnp.int32)
+    if use_kernel:
+        acc = bs.bitserial_conv2d(xq, wq, a_bits=qcfg.a_bits, w_bits=qcfg.w_bits,
+                                  stride=tuple(stride), padding=tuple(padding))
+    else:
+        acc = kref.ref_qconv2d_i32(xq, wq, tuple(stride), tuple(padding))
+    y = acc.astype(jnp.float32) * (s_a * s_w)
+    return y * scale + bias, {}
+
+
+# ---------------------------------------------------------------------------
+# Graph executor
+# ---------------------------------------------------------------------------
+
+def run(g: Graph, params: dict, state: dict, x: jnp.ndarray, mode: str = "fp32",
+        train: bool = False) -> tuple[list[jnp.ndarray], dict]:
+    """Execute graph; returns (outputs, bn_aux)."""
+    assert mode in {"fp32", "qat", "deploy_sim", "deploy_kernel"}
+    env: dict[str, jnp.ndarray] = {g.input_name: x}
+    aux: dict[str, jnp.ndarray] = {}
+
+    for n in g.nodes:
+        if n.op == "conv2d":
+            if mode == "qat":
+                y, a = _conv_qat(env[n.inputs[0]], params, state, n, train)
+            elif mode in ("deploy_sim", "deploy_kernel"):
+                y, a = _conv_deploy(env[n.inputs[0]], params, state, n,
+                                    use_kernel=(mode == "deploy_kernel"))
+            else:  # fp32: honest float conv + BN from state
+                y = _conv_fp32(env[n.inputs[0]], params[f"{n.name}.w"],
+                               n.attrs["stride"], n.attrs["padding"])
+                scale, bias = _bn_fold_scale_bias(params, state, n.name)
+                y, a = y * scale + bias, {}
+            aux.update(a)
+        elif n.op == "dense":
+            xin = env[n.inputs[0]]
+            y = xin @ params[f"{n.name}.w"] + params[f"{n.name}.b"]
+        elif n.op == "maxpool2d":
+            y = _maxpool(env[n.inputs[0]], n.attrs["kernel"], n.attrs["stride"],
+                         n.attrs["padding"])
+        elif n.op == "global_avg_pool":
+            y = env[n.inputs[0]].mean(axis=(1, 2))
+        elif n.op == "add":
+            y = env[n.inputs[0]] + env[n.inputs[1]]
+        elif n.op == "concat":
+            y = jnp.concatenate([env[i] for i in n.inputs], axis=-1)
+        elif n.op == "upsample2x":
+            y = _upsample2x(env[n.inputs[0]])
+        elif n.op == "flatten":
+            xin = env[n.inputs[0]]
+            y = xin.reshape(xin.shape[0], -1)
+        elif n.op in {"relu", "relu6", "silu", "leaky_relu", "sigmoid"}:
+            y = _apply_act(n.op, env[n.inputs[0]])
+        else:
+            raise AssertionError(n.op)
+        env[n.output] = y
+
+    return [env[o] for o in g.outputs], aux
+
+
+def make_infer_fn(g: Graph, mode: str) -> Callable:
+    """Closure suitable for jax.jit / AOT lowering: (params, state, x) → outputs."""
+
+    def fn(params, state, x):
+        outs, _ = run(g, params, state, x, mode=mode, train=False)
+        return tuple(outs)
+
+    return fn
+
+
+def calibrate_activation_scales(g: Graph, params: dict, state: dict,
+                                xs: list[jnp.ndarray]) -> dict:
+    """PTQ path: set each quantized conv's s_a from observed input ranges.
+
+    Runs the fp32 graph on calibration batches, records per-conv input maxima,
+    and fits the unipolar scale (paper §IV calibration).
+    """
+    maxima: dict[str, float] = {}
+    for x in xs:
+        env: dict[str, jnp.ndarray] = {g.input_name: x}
+        for n in g.nodes:
+            ins = [env[i] for i in n.inputs]
+            if n.op == "conv2d":
+                qcfg: QCfg = n.attrs["qcfg"]
+                if qcfg.enabled:
+                    m = float(jnp.maximum(ins[0].max(), 0.0))
+                    maxima[n.name] = max(maxima.get(n.name, 0.0), m)
+                scale, bias = _bn_fold_scale_bias(params, state, n.name)
+                y = _conv_fp32(ins[0], params[f"{n.name}.w"], n.attrs["stride"],
+                               n.attrs["padding"]) * scale + bias
+            elif n.op == "dense":
+                y = ins[0] @ params[f"{n.name}.w"] + params[f"{n.name}.b"]
+            elif n.op == "maxpool2d":
+                y = _maxpool(ins[0], n.attrs["kernel"], n.attrs["stride"],
+                             n.attrs["padding"])
+            elif n.op == "global_avg_pool":
+                y = ins[0].mean(axis=(1, 2))
+            elif n.op == "add":
+                y = ins[0] + ins[1]
+            elif n.op == "concat":
+                y = jnp.concatenate(ins, axis=-1)
+            elif n.op == "upsample2x":
+                y = _upsample2x(ins[0])
+            elif n.op == "flatten":
+                y = ins[0].reshape(ins[0].shape[0], -1)
+            else:
+                y = _apply_act(n.op, ins[0])
+            env[n.output] = y
+    new = dict(params)
+    for n in g.conv_nodes():
+        qcfg: QCfg = n.attrs["qcfg"]
+        if qcfg.enabled and n.name in maxima:
+            qp_a, _ = qp_qn(qcfg.a_bits, signed=False)
+            new[f"{n.name}.s_a"] = jnp.float32(max(maxima[n.name] / qp_a, 1e-8))
+    return new

@@ -1,0 +1,186 @@
+"""Pallas bitserial GEMM / conv kernels (TPU-adapted, run with interpret=True).
+
+Hardware adaptation (DESIGN.md §3): the paper computes the low-bit dot
+product on Arm Neon as ``POPCOUNT(W[i] & A[j])`` over packed words. On a
+TPU there is no vector popcount, but over {0,1}-valued planes
+
+    POPCOUNT(W[i] & A[j])  ==  A[j] @ W[i].T
+
+so each bitplane pair becomes an MXU matmul, and the multi-bit product is
+
+    out = sum_i sum_j (A_planes[j] @ W_planes[i].T) << (i + j)
+          - Q_N * rowsum(A)                      (signed-weight offset fix)
+
+The kernel tiles M (rows = output pixels) and N (cols = output channels)
+across the Pallas grid and streams K (reduction = kh*kw*cin) in blocks,
+accumulating in the output ref — the BlockSpec schedule plays the role the
+paper's threadblock tiling plays on Arm (HBM→VMEM instead of DRAM→L1).
+
+Values are small integers; float32 accumulation is exact below 2^24 (the
+tests check tighter bounds than any real layer reaches).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import pack
+
+# Default tile sizes: chosen so one (a_bits + w_bits + 1)-plane working set
+# fits VMEM comfortably on a real TPU (see DESIGN.md §8) while staying
+# interpreter-friendly. 128 matches the MXU systolic dimension.
+TM, TN, TK = 128, 128, 128
+
+
+def _pad_to(x: jnp.ndarray, axis: int, mult: int) -> jnp.ndarray:
+    size = x.shape[axis]
+    pad = (-size) % mult
+    if pad == 0:
+        return x
+    cfg = [(0, 0)] * x.ndim
+    cfg[axis] = (0, pad)
+    return jnp.pad(x, cfg)
+
+
+def _bitserial_kernel(a_ref, w_ref, o_ref, *, a_bits: int, w_bits: int, nk: int):
+    """Grid = (M/TM, N/TN, K/TK); accumulate plane matmuls into o_ref."""
+
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    acc = o_ref[...]
+    for i in range(w_bits):
+        wp = w_ref[i]  # (TN, TK)
+        for j in range(a_bits):
+            ap = a_ref[j]  # (TM, TK)
+            # {0,1} plane matmul == AND+POPCOUNT reduction (MXU on real TPU)
+            dot = jax.lax.dot_general(
+                ap,
+                wp,
+                (((1,), (1,)), ((), ())),
+                preferred_element_type=jnp.float32,
+            )
+            acc = acc + dot * float(1 << (i + j))
+    o_ref[...] = acc
+
+
+@functools.partial(
+    jax.jit, static_argnames=("a_bits", "w_bits", "tm", "tn", "tk", "interpret")
+)
+def bitserial_gemm(
+    aq: jnp.ndarray,
+    wq: jnp.ndarray,
+    *,
+    a_bits: int,
+    w_bits: int,
+    tm: int = TM,
+    tn: int = TN,
+    tk: int = TK,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    """Bitserial GEMM: unsigned ``aq (M,K)`` x signed ``wq (N,K)`` → int32 (M,N).
+
+    Bit-exact vs ``ref.ref_gemm_i32`` for inputs in the quantizer's ranges.
+    """
+    m, k = aq.shape
+    n, k2 = wq.shape
+    assert k == k2, f"K mismatch: {k} vs {k2}"
+    _, qn = pack.qp_qn(w_bits, signed=True)
+
+    a_planes = pack.to_planes(aq, a_bits)  # (a_bits, M, K)
+    w_planes = pack.to_planes(pack.offset_encode(wq, w_bits), w_bits)
+
+    # Zero padding is safe: zero planes contribute nothing to any dot.
+    a_planes = _pad_to(_pad_to(a_planes, 1, tm), 2, tk)
+    w_planes = _pad_to(_pad_to(w_planes, 1, tn), 2, tk)
+    mp, kp = a_planes.shape[1], a_planes.shape[2]
+    np_ = w_planes.shape[1]
+    grid = (mp // tm, np_ // tn, kp // tk)
+
+    out = pl.pallas_call(
+        functools.partial(
+            _bitserial_kernel, a_bits=a_bits, w_bits=w_bits, nk=grid[2]
+        ),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((a_bits, tm, tk), lambda mi, ni, ki: (0, mi, ki)),
+            pl.BlockSpec((w_bits, tn, tk), lambda mi, ni, ki: (0, ni, ki)),
+        ],
+        out_specs=pl.BlockSpec((tm, tn), lambda mi, ni, ki: (mi, ni)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), jnp.float32),
+        interpret=interpret,
+    )(a_planes, w_planes)
+
+    out = out[:m, :n].astype(jnp.int32)
+    # signed-weight offset correction (computed once per row, cf. Rust kernel)
+    a_sum = aq.astype(jnp.int32).sum(axis=1, keepdims=True)
+    return out - qn * a_sum
+
+
+def bitserial_conv2d(
+    xq: jnp.ndarray,
+    wq: jnp.ndarray,
+    *,
+    a_bits: int,
+    w_bits: int,
+    stride: tuple[int, int] = (1, 1),
+    padding: tuple[int, int] = (0, 0),
+    tm: int = TM,
+    tn: int = TN,
+    tk: int = TK,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    """Bitserial conv2d = im2col + Pallas bitserial GEMM.
+
+    ``xq``: NHWC unsigned activations; ``wq``: HWIO signed weights → int32
+    NHWC accumulators. Matches ``ref.ref_qconv2d_i32`` exactly.
+    """
+    from . import ref as _ref
+
+    n, h, w, _c = xq.shape
+    kh, kw, _ci, co = wq.shape
+    cols = _ref.im2col(xq, kh, kw, stride, padding)
+    wmat = wq.reshape(-1, co).T
+    out = bitserial_gemm(
+        cols, wmat, a_bits=a_bits, w_bits=w_bits, tm=tm, tn=tn, tk=tk,
+        interpret=interpret,
+    )
+    oh, ow = _ref.conv_out_hw(h, w, kh, kw, stride, padding)
+    return out.reshape(n, oh, ow, co)
+
+
+def qconv2d_f32(
+    x: jnp.ndarray,
+    w: jnp.ndarray,
+    s_x: jnp.ndarray,
+    s_w: jnp.ndarray,
+    *,
+    a_bits: int,
+    w_bits: int,
+    stride: tuple[int, int] = (1, 1),
+    padding: tuple[int, int] = (0, 0),
+    bias: jnp.ndarray | None = None,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    """Full quantized conv: quantize f32 inputs → bitserial conv → dequantize.
+
+    This is the op the L2 model graphs call; the quantize / dequantize steps
+    fuse into the surrounding HLO at lowering time.
+    """
+    qp_a, _ = pack.qp_qn(a_bits, signed=False)
+    qp_w, qn_w = pack.qp_qn(w_bits, signed=True)
+    xq = jnp.clip(jnp.round(x / s_x), 0, qp_a).astype(jnp.int32)
+    wq = jnp.clip(jnp.round(w / s_w), -qn_w, qp_w).astype(jnp.int32)
+    acc = bitserial_conv2d(
+        xq, wq, a_bits=a_bits, w_bits=w_bits, stride=stride, padding=padding,
+        interpret=interpret,
+    )
+    out = acc.astype(jnp.float32) * (s_x * s_w)
+    if bias is not None:
+        out = out + bias
+    return out

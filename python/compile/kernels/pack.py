@@ -1,0 +1,129 @@
+"""Bitplane packing / unpacking for ultra-low-bit bitserial arithmetic.
+
+The paper (DeepliteRT §V) decomposes w-bit weights and a-bit activations into
+bitplanes so that the dot product becomes
+
+    W . A = sum_i sum_j  POPCOUNT(W[i] & A[j]) << (i + j)
+
+Two representations are provided here:
+
+* **plane representation** — each bitplane is a {0,1}-valued float array.
+  On TPU, ``POPCOUNT(W[i] & A[j])`` over {0,1} planes is *exactly* the
+  matmul ``A[j] @ W[i].T``, which the Pallas kernel feeds to the MXU
+  (see DESIGN.md §Hardware-Adaptation).
+* **packed-word representation** — bitplanes packed 32 lanes per ``uint32``
+  along the reduction axis, mirroring the Rust runtime's u64 layout
+  (modulo word width). Used as the golden reference for cross-layer
+  parity tests against the Rust popcount kernels.
+
+Encoding conventions (match the paper's quantizer, §IV):
+
+* activations: unipolar unsigned, ``a ∈ [0, 2^a_bits - 1]``
+* weights: signed, ``w ∈ [-Q_N, Q_P]`` with ``Q_P = 2^(b-1)-1``,
+  ``Q_N = 2^(b-1)``; bitserial kernels consume the *offset encoding*
+  ``w' = w + Q_N ∈ [0, 2^b - 1]`` and correct with ``- Q_N * sum(a)``.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def qp_qn(bits: int, signed: bool = True) -> tuple[int, int]:
+    """Clipping limits (Q_P, Q_N) for a ``bits``-bit code (paper §IV)."""
+    if bits < 1:
+        raise ValueError(f"bits must be >= 1, got {bits}")
+    if signed:
+        return 2 ** (bits - 1) - 1, 2 ** (bits - 1)
+    return 2**bits - 1, 0
+
+
+def to_planes(x: jnp.ndarray, bits: int) -> jnp.ndarray:
+    """Decompose unsigned integer-valued ``x`` into ``bits`` {0,1} planes.
+
+    Returns float32 array of shape ``(bits, *x.shape)``; plane ``i`` holds
+    bit ``i`` (LSB first). Values must lie in ``[0, 2^bits)``.
+    """
+    xi = x.astype(jnp.int32)
+    planes = [(xi >> i) & 1 for i in range(bits)]
+    return jnp.stack(planes).astype(jnp.float32)
+
+
+def from_planes(planes: jnp.ndarray) -> jnp.ndarray:
+    """Inverse of :func:`to_planes` → int32 array of shape ``planes.shape[1:]``."""
+    bits = planes.shape[0]
+    p = planes.astype(jnp.int32)
+    out = jnp.zeros(planes.shape[1:], jnp.int32)
+    for i in range(bits):
+        out = out + (p[i] << i)
+    return out
+
+
+def offset_encode(wq: jnp.ndarray, bits: int) -> jnp.ndarray:
+    """Signed quantized weights ``[-Q_N, Q_P]`` → unsigned ``[0, 2^bits)``."""
+    _, qn = qp_qn(bits, signed=True)
+    return wq.astype(jnp.int32) + qn
+
+
+def offset_decode(wu: jnp.ndarray, bits: int) -> jnp.ndarray:
+    _, qn = qp_qn(bits, signed=True)
+    return wu.astype(jnp.int32) - qn
+
+
+def pack_words_u32(x: jnp.ndarray, bits: int) -> jnp.ndarray:
+    """Pack the last axis of unsigned ``x`` into uint32 words per bitplane.
+
+    ``x``: integer-valued, shape ``(..., K)``, values in ``[0, 2^bits)``.
+    Returns uint32 of shape ``(bits, ..., ceil(K/32))``: bit ``k % 32`` of
+    word ``k // 32`` in plane ``i`` is bit ``i`` of ``x[..., k]``.
+
+    This mirrors the Rust runtime's packed layout (which uses u64 words;
+    2 consecutive u32 words == 1 u64 word, little-endian lane order).
+    """
+    k = x.shape[-1]
+    pad = (-k) % 32
+    xi = x.astype(jnp.uint32)
+    if pad:
+        xi = jnp.pad(xi, [(0, 0)] * (xi.ndim - 1) + [(0, pad)])
+    lanes = jnp.arange(32, dtype=jnp.uint32)
+    grouped = xi.reshape(*xi.shape[:-1], -1, 32)  # (..., W, 32)
+    planes = []
+    for i in range(bits):
+        bit = (grouped >> i) & 1
+        word = (bit << lanes).sum(axis=-1, dtype=jnp.uint32)
+        planes.append(word)
+    return jnp.stack(planes)
+
+
+def unpack_words_u32(words: jnp.ndarray, k: int) -> jnp.ndarray:
+    """Inverse of :func:`pack_words_u32` → int32 of shape ``(..., k)``."""
+    bits = words.shape[0]
+    lanes = jnp.arange(32, dtype=jnp.uint32)
+    out = jnp.zeros(words.shape[1:-1] + (words.shape[-1] * 32,), jnp.int32)
+    for i in range(bits):
+        bit = ((words[i][..., None] >> lanes) & 1).astype(jnp.int32)
+        out = out + (bit.reshape(*bit.shape[:-2], -1) << i)
+    return out[..., :k]
+
+
+def popcount_dot_words(a_words: jnp.ndarray, w_words: jnp.ndarray) -> jnp.ndarray:
+    """Bitserial dot product over packed words — the paper's eq. (§V), verbatim.
+
+    ``a_words``: uint32 ``(a_bits, M, W)``; ``w_words``: uint32 ``(w_bits, N, W)``.
+    Returns int32 ``(M, N)`` = sum_ij popcount(W[i] & A[j]) << (i+j).
+
+    Pure-jnp mirror of the Rust u64 kernel; used for parity goldens only
+    (the fast TPU path is the plane-matmul Pallas kernel).
+    """
+    import jax.lax as lax
+
+    a_bits, _m, _w = a_words.shape
+    w_bits = w_words.shape[0]
+    out = None
+    for i in range(w_bits):
+        for j in range(a_bits):
+            anded = jnp.bitwise_and(a_words[j][:, None, :], w_words[i][None, :, :])
+            pc = lax.population_count(anded).astype(jnp.int32).sum(axis=-1)
+            term = pc << (i + j)
+            out = term if out is None else out + term
+    return out

@@ -1,0 +1,125 @@
+"""Pure-jnp correctness oracles for the bitserial kernels.
+
+Everything here is written in the most obvious way possible (integer matmuls
+and ``lax.conv_general_dilated`` over small integers, which are exact in
+float32 up to 2^24) so it can serve as the trusted reference for:
+
+* the Pallas plane-matmul kernel (``bitserial.py``),
+* the packed-word popcount mirror (``pack.popcount_dot_words``),
+* the Rust native kernels (via golden vectors exported by ``aot.py``).
+"""
+
+from __future__ import annotations
+
+import jax.lax as lax
+import jax.numpy as jnp
+
+from . import pack
+
+
+def ref_gemm_i32(aq: jnp.ndarray, wq: jnp.ndarray) -> jnp.ndarray:
+    """Integer GEMM oracle: ``aq (M,K) @ wq (N,K).T`` in int32."""
+    return (aq.astype(jnp.int32) @ wq.astype(jnp.int32).T).astype(jnp.int32)
+
+
+def ref_bitserial_gemm(
+    aq: jnp.ndarray, wq: jnp.ndarray, a_bits: int, w_bits: int
+) -> jnp.ndarray:
+    """Bitserial GEMM oracle with signed weights via offset encoding.
+
+    ``aq``: unsigned activations ``(M, K)`` in ``[0, 2^a_bits)``.
+    ``wq``: *signed* weights ``(N, K)`` in ``[-Q_N, Q_P]``.
+    Computed the bitserial way (planes + shifts + offset correction) but with
+    dense integer arithmetic — must equal ``ref_gemm_i32(aq, wq)`` exactly.
+    """
+    _, qn = pack.qp_qn(w_bits, signed=True)
+    wu = pack.offset_encode(wq, w_bits)  # [0, 2^w)
+    a_planes = pack.to_planes(aq, a_bits)  # (a_bits, M, K)
+    w_planes = pack.to_planes(wu, w_bits)  # (w_bits, N, K)
+    out = jnp.zeros((aq.shape[0], wq.shape[0]), jnp.int32)
+    for i in range(w_bits):
+        for j in range(a_bits):
+            dot = a_planes[j].astype(jnp.int32) @ w_planes[i].astype(jnp.int32).T
+            out = out + (dot << (i + j))
+    # offset correction: W.A = W'.A - Q_N * sum_k a
+    a_sum = aq.astype(jnp.int32).sum(axis=1, keepdims=True)  # (M, 1)
+    return out - qn * a_sum
+
+
+def ref_qconv2d_i32(
+    xq: jnp.ndarray,
+    wq: jnp.ndarray,
+    stride: tuple[int, int] = (1, 1),
+    padding: tuple[int, int] = (0, 0),
+) -> jnp.ndarray:
+    """Integer conv oracle. ``xq``: NHWC uint, ``wq``: HWIO signed int.
+
+    Exact int32 result via float conv over small integers.
+    """
+    out = lax.conv_general_dilated(
+        xq.astype(jnp.float32),
+        wq.astype(jnp.float32),
+        window_strides=stride,
+        padding=[(padding[0], padding[0]), (padding[1], padding[1])],
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )
+    return jnp.round(out).astype(jnp.int32)
+
+
+def im2col(
+    x: jnp.ndarray,
+    kh: int,
+    kw: int,
+    stride: tuple[int, int] = (1, 1),
+    padding: tuple[int, int] = (0, 0),
+) -> jnp.ndarray:
+    """NHWC → (N*OH*OW, KH*KW*C) patch matrix (zero padded).
+
+    Row-major patch layout (kh, kw, c) — identical to the Rust runtime's
+    im2col so packed goldens line up word-for-word.
+    """
+    n, h, w, c = x.shape
+    ph, pw = padding
+    sh, sw = stride
+    xp = jnp.pad(x, ((0, 0), (ph, ph), (pw, pw), (0, 0)))
+    oh = (h + 2 * ph - kh) // sh + 1
+    ow = (w + 2 * pw - kw) // sw + 1
+    cols = []
+    for i in range(kh):
+        for j in range(kw):
+            patch = lax.slice(
+                xp,
+                (0, i, j, 0),
+                (n, i + (oh - 1) * sh + 1, j + (ow - 1) * sw + 1, c),
+                (1, sh, sw, 1),
+            )
+            cols.append(patch.reshape(n * oh * ow, c))
+    # interleave so each row is (kh, kw, c) contiguous per patch
+    stacked = jnp.stack(cols, axis=1)  # (rows, KH*KW, C)
+    return stacked.reshape(stacked.shape[0], -1)
+
+
+def conv_out_hw(
+    h: int, w: int, kh: int, kw: int, stride: tuple[int, int], padding: tuple[int, int]
+) -> tuple[int, int]:
+    oh = (h + 2 * padding[0] - kh) // stride[0] + 1
+    ow = (w + 2 * padding[1] - kw) // stride[1] + 1
+    return oh, ow
+
+
+def ref_bitserial_conv2d_i32(
+    xq: jnp.ndarray,
+    wq: jnp.ndarray,
+    a_bits: int,
+    w_bits: int,
+    stride: tuple[int, int] = (1, 1),
+    padding: tuple[int, int] = (0, 0),
+) -> jnp.ndarray:
+    """Bitserial conv oracle = im2col + ref_bitserial_gemm. NHWC/HWIO."""
+    n, h, w, _c = xq.shape
+    kh, kw, _ci, co = wq.shape
+    cols = im2col(xq, kh, kw, stride, padding)  # (N*OH*OW, KH*KW*C)
+    wmat = wq.reshape(-1, co).T  # (CO, KH*KW*C)
+    out = ref_bitserial_gemm(cols, wmat, a_bits, w_bits)
+    oh, ow = conv_out_hw(h, w, kh, kw, stride, padding)
+    return out.reshape(n, oh, ow, co)

@@ -1,0 +1,18 @@
+"""Model zoo: the architectures the paper evaluates (DESIGN.md §6).
+
+All models are graph-IR programs (see ``compile.graph``) so the same
+definition trains under QAT in JAX and compiles to ``.dlrt`` in Rust.
+"""
+
+from .resnet import build_resnet  # noqa: F401
+from .vgg_ssd import build_vgg16_ssd  # noqa: F401
+from .yolov5 import build_yolov5  # noqa: F401
+
+REGISTRY = {
+    "resnet18": lambda **kw: build_resnet(depth=18, **kw),
+    "resnet50": lambda **kw: build_resnet(depth=50, **kw),
+    "vgg16_ssd": build_vgg16_ssd,
+    "yolov5n": lambda **kw: build_yolov5(variant="n", **kw),
+    "yolov5s": lambda **kw: build_yolov5(variant="s", **kw),
+    "yolov5m": lambda **kw: build_yolov5(variant="m", **kw),
+}

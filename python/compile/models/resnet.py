@@ -1,0 +1,66 @@
+"""ResNet-18/50 (He et al.) as graph-IR programs.
+
+Faithful to the torchvision topology (7x7/2 stem, maxpool, 4 stages,
+global-avg-pool + fc), with two reproduction knobs:
+
+* ``width_mult`` / ``resolution`` — scale the network for the synthetic
+  accuracy experiments (e.g. the VWW stand-in trains a width/4 model), while
+  latency benches use the full architecture.
+* per-conv ``QCfg`` via :func:`compile.graph.set_mixed_precision` — the
+  paper's policy quantizes everything except the stem conv and keeps the fc
+  in FP32.
+"""
+
+from __future__ import annotations
+
+from ..graph import Graph, GraphBuilder, QCfg
+
+
+def _basic_block(b: GraphBuilder, x: str, cout: int, stride: int, name: str) -> str:
+    identity = x
+    y = b.conv(x, cout, k=3, stride=stride, act="relu", name=f"{name}.conv1")
+    y = b.conv(y, cout, k=3, stride=1, name=f"{name}.conv2")
+    if stride != 1 or b.channels(identity) != cout:
+        identity = b.conv(identity, cout, k=1, stride=stride, padding=0,
+                          name=f"{name}.down")
+    y = b.add(y, identity, name=f"{name}.add")
+    return b.act(y, "relu", name=f"{name}.relu")
+
+
+def _bottleneck(b: GraphBuilder, x: str, cmid: int, stride: int, name: str) -> str:
+    cout = cmid * 4
+    identity = x
+    y = b.conv(x, cmid, k=1, stride=1, padding=0, act="relu", name=f"{name}.conv1")
+    y = b.conv(y, cmid, k=3, stride=stride, act="relu", name=f"{name}.conv2")
+    y = b.conv(y, cout, k=1, stride=1, padding=0, name=f"{name}.conv3")
+    if stride != 1 or b.channels(identity) != cout:
+        identity = b.conv(identity, cout, k=1, stride=stride, padding=0,
+                          name=f"{name}.down")
+    y = b.add(y, identity, name=f"{name}.add")
+    return b.act(y, "relu", name=f"{name}.relu")
+
+
+def build_resnet(depth: int = 18, num_classes: int = 1000, resolution: int = 224,
+                 width_mult: float = 1.0, batch: int = 1) -> Graph:
+    if depth == 18:
+        blocks, fn, expansion = [2, 2, 2, 2], _basic_block, 1
+    elif depth == 50:
+        blocks, fn, expansion = [3, 4, 6, 3], _bottleneck, 4
+    else:
+        raise ValueError(f"unsupported ResNet depth {depth}")
+
+    def ch(c: int) -> int:
+        return max(8, int(round(c * width_mult)))
+
+    b = GraphBuilder(f"resnet{depth}", (batch, resolution, resolution, 3))
+    x = b.conv("input", ch(64), k=7, stride=2, padding=3, act="relu", name="stem")
+    x = b.maxpool(x, k=3, stride=2, padding=1, name="stem.pool")
+    widths = [64, 128, 256, 512]
+    for si, (nblk, w) in enumerate(zip(blocks, widths)):
+        for bi in range(nblk):
+            stride = 2 if (si > 0 and bi == 0) else 1
+            x = fn(b, x, ch(w), stride, name=f"layer{si + 1}.{bi}")
+    x = b.global_avg_pool(x, name="gap")
+    feat = ch(widths[-1]) * expansion
+    x = b.dense(x, num_classes, cin=feat, name="fc")
+    return b.finish([x])

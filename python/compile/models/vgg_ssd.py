@@ -1,0 +1,69 @@
+"""VGG16-SSD300 (Liu et al.) as a graph-IR program.
+
+Topology follows the canonical SSD300 implementation: VGG16 conv stack with
+ceil-mode pool3 replaced by pad-preserving pooling, dilation-free fc6/fc7
+convs (we use k=3 p=1 rather than dilated k=3 d=6 — dilation is not in the
+op set; receptive field differs slightly but layer shapes/compute match),
+extra feature layers conv8_1..conv11_2, and per-scale multibox heads.
+
+Feature maps (300px input): conv4_3 (38x38, 4 anchors), fc7 (19x19, 6),
+conv8_2 (10x10, 6), conv9_2 (5x5, 6), conv10_2 (3x3, 4), conv11_2 (1x1, 4)
+→ 8732 boxes total. Heads output raw loc/conf maps; decoding happens in the
+Rust coordinator's postprocessor.
+"""
+
+from __future__ import annotations
+
+from ..graph import Graph, GraphBuilder
+
+# (feature tensor tag, anchors per cell)
+_HEAD_SPEC = [("conv4_3", 4), ("fc7", 6), ("conv8_2", 6), ("conv9_2", 6),
+              ("conv10_2", 4), ("conv11_2", 4)]
+
+
+def build_vgg16_ssd(num_classes: int = 21, resolution: int = 300,
+                    width_mult: float = 1.0, batch: int = 1) -> Graph:
+    def ch(c: int) -> int:
+        return max(8, int(round(c * width_mult)))
+
+    b = GraphBuilder("vgg16_ssd", (batch, resolution, resolution, 3))
+    feats: dict[str, str] = {}
+
+    x = "input"
+    # VGG16 stack: (count, channels) per stage
+    for si, (cnt, c) in enumerate([(2, 64), (2, 128), (3, 256), (3, 512), (3, 512)]):
+        for ci in range(cnt):
+            x = b.conv(x, ch(c), k=3, act="relu", name=f"conv{si + 1}_{ci + 1}")
+            if si == 3 and ci == cnt - 1:
+                feats["conv4_3"] = x
+        if si < 4:
+            # pool3 is ceil-mode in canonical SSD300 (75 -> 38): emulate with
+            # symmetric padding (shapes match; alignment shift is immaterial)
+            pad = 1 if si == 2 else 0
+            x = b.maxpool(x, k=2, stride=2, padding=pad, name=f"pool{si + 1}")
+        else:
+            x = b.maxpool(x, k=3, stride=1, padding=1, name="pool5")
+    x = b.conv(x, ch(1024), k=3, act="relu", name="fc6")
+    x = b.conv(x, ch(1024), k=1, padding=0, act="relu", name="fc7")
+    feats["fc7"] = x
+    # extras: 1x1 squeeze + 3x3/2 (or valid 3x3) expand
+    x = b.conv(x, ch(256), k=1, padding=0, act="relu", name="conv8_1")
+    x = b.conv(x, ch(512), k=3, stride=2, act="relu", name="conv8_2")
+    feats["conv8_2"] = x
+    x = b.conv(x, ch(128), k=1, padding=0, act="relu", name="conv9_1")
+    x = b.conv(x, ch(256), k=3, stride=2, act="relu", name="conv9_2")
+    feats["conv9_2"] = x
+    x = b.conv(x, ch(128), k=1, padding=0, act="relu", name="conv10_1")
+    x = b.conv(x, ch(256), k=3, padding=0, act="relu", name="conv10_2")
+    feats["conv10_2"] = x
+    x = b.conv(x, ch(128), k=1, padding=0, act="relu", name="conv11_1")
+    x = b.conv(x, ch(256), k=3, padding=0, act="relu", name="conv11_2")
+    feats["conv11_2"] = x
+
+    outputs = []
+    for tag, anchors in _HEAD_SPEC:
+        f = feats[tag]
+        outputs.append(b.conv(f, anchors * 4, k=3, bn=False, name=f"{tag}.loc"))
+        outputs.append(b.conv(f, anchors * num_classes, k=3, bn=False,
+                              name=f"{tag}.conf"))
+    return b.finish(outputs)

@@ -1,0 +1,116 @@
+"""YOLOv5 n/s/m (Ultralytics) as graph-IR programs.
+
+Standard v6.0 topology: CSPDarknet backbone (Conv-BN-SiLU stem, C3 blocks,
+SPPF) + PANet neck + 3-scale Detect head. Variant scaling matches the
+Ultralytics yamls:
+
+    variant   depth_multiple  width_multiple
+    n         0.33            0.25
+    s         0.33            0.50
+    m         0.67            0.75
+
+The 6x6/2 stem conv of v6.0 is used (not the Focus slice). The Detect head
+emits raw per-scale maps ``(N, H, W, na*(5+nc))``; sigmoid/grid decoding and
+NMS live in the Rust coordinator postprocessor (as in the paper's runtime).
+"""
+
+from __future__ import annotations
+
+import math
+
+from ..graph import Graph, GraphBuilder
+
+VARIANTS = {"n": (0.33, 0.25), "s": (0.33, 0.50), "m": (0.67, 0.75)}
+NUM_ANCHORS = 3
+
+
+def _depth(n: int, dm: float) -> int:
+    return max(1, round(n * dm))
+
+
+def _width(c: int, wm: float) -> int:
+    return max(8, math.ceil(c * wm / 8) * 8)
+
+
+def _cbs(b: GraphBuilder, x: str, c: int, k: int, s: int, name: str) -> str:
+    pad = k // 2
+    return b.conv(x, c, k=k, stride=s, padding=pad, act="silu", name=name)
+
+
+def _bottleneck(b: GraphBuilder, x: str, c: int, shortcut: bool, name: str) -> str:
+    y = _cbs(b, x, c, 1, 1, f"{name}.cv1")
+    y = _cbs(b, y, c, 3, 1, f"{name}.cv2")
+    if shortcut and b.channels(x) == c:
+        y = b.add(y, x, name=f"{name}.add")
+    return y
+
+
+def _c3(b: GraphBuilder, x: str, cout: int, n: int, shortcut: bool, name: str) -> str:
+    ch = cout // 2
+    y1 = _cbs(b, x, ch, 1, 1, f"{name}.cv1")
+    for i in range(n):
+        y1 = _bottleneck(b, y1, ch, shortcut, f"{name}.m{i}")
+    y2 = _cbs(b, x, ch, 1, 1, f"{name}.cv2")
+    y = b.concat([y1, y2], name=f"{name}.cat")
+    return _cbs(b, y, cout, 1, 1, f"{name}.cv3")
+
+
+def _sppf(b: GraphBuilder, x: str, cout: int, name: str) -> str:
+    ch = b.channels(x) // 2
+    y = _cbs(b, x, ch, 1, 1, f"{name}.cv1")
+    p1 = b.maxpool(y, k=5, stride=1, padding=2, name=f"{name}.p1")
+    p2 = b.maxpool(p1, k=5, stride=1, padding=2, name=f"{name}.p2")
+    p3 = b.maxpool(p2, k=5, stride=1, padding=2, name=f"{name}.p3")
+    y = b.concat([y, p1, p2, p3], name=f"{name}.cat")
+    return _cbs(b, y, cout, 1, 1, f"{name}.cv2")
+
+
+def build_yolov5(variant: str = "n", num_classes: int = 80, resolution: int = 640,
+                 width_mult: float = 1.0, batch: int = 1) -> Graph:
+    """``width_mult`` stacks on top of the variant's width_multiple (for the
+    synthetic-data mini models used in accuracy experiments)."""
+    dm, wm = VARIANTS[variant]
+    wm = wm * width_mult
+
+    def cw(c: int) -> int:
+        return _width(c, wm)
+
+    b = GraphBuilder(f"yolov5{variant}", (batch, resolution, resolution, 3))
+
+    # ---- backbone
+    # v6.0 stem: k=6, s=2, p=2 (not the k//2 default)
+    x = b.conv("input", cw(64), k=6, stride=2, padding=2, act="silu", name="b0")  # P1/2
+    x = _cbs(b, x, cw(128), 3, 2, "b1")                  # P2/4
+    x = _c3(b, x, cw(128), _depth(3, dm), True, "b2")
+    x = _cbs(b, x, cw(256), 3, 2, "b3")                  # P3/8
+    p3 = _c3(b, x, cw(256), _depth(6, dm), True, "b4")
+    x = _cbs(b, p3, cw(512), 3, 2, "b5")                 # P4/16
+    p4 = _c3(b, x, cw(512), _depth(9, dm), True, "b6")
+    x = _cbs(b, p4, cw(1024), 3, 2, "b7")                # P5/32
+    x = _c3(b, x, cw(1024), _depth(3, dm), True, "b8")
+    p5 = _sppf(b, x, cw(1024), "b9")
+
+    # ---- PANet neck
+    h10 = _cbs(b, p5, cw(512), 1, 1, "n10")
+    up = b.upsample2x(h10, name="n11.up")
+    x = b.concat([up, p4], name="n11.cat")
+    h13 = _c3(b, x, cw(512), _depth(3, dm), False, "n13")
+    h14 = _cbs(b, h13, cw(256), 1, 1, "n14")
+    up = b.upsample2x(h14, name="n15.up")
+    x = b.concat([up, p3], name="n15.cat")
+    d17 = _c3(b, x, cw(256), _depth(3, dm), False, "n17")      # P3 out
+    x = _cbs(b, d17, cw(256), 3, 2, "n18")
+    x = b.concat([x, h14], name="n19.cat")
+    d20 = _c3(b, x, cw(512), _depth(3, dm), False, "n20")      # P4 out
+    x = _cbs(b, d20, cw(512), 3, 2, "n21")
+    x = b.concat([x, h10], name="n22.cat")
+    d23 = _c3(b, x, cw(1024), _depth(3, dm), False, "n23")     # P5 out
+
+    # ---- Detect head: 1x1 convs, raw maps out
+    no = NUM_ANCHORS * (5 + num_classes)
+    outs = [
+        b.conv(d17, no, k=1, padding=0, bn=False, name="detect.p3"),
+        b.conv(d20, no, k=1, padding=0, bn=False, name="detect.p4"),
+        b.conv(d23, no, k=1, padding=0, bn=False, name="detect.p5"),
+    ]
+    return b.finish(outs)

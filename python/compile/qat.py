@@ -1,0 +1,216 @@
+"""Quantization-aware training loop (the Neutrino analog, build path only).
+
+SGD with momentum over the graph executor's ``qat`` mode: conv weights and
+conv inputs are LSQ fake-quantized with learned per-conv scales, batchnorm
+runs on batch statistics, and running stats are tracked for deployment
+folding. Losses:
+
+* classification — softmax cross-entropy
+* detection      — single-scale YOLO-style grid loss (BCE objectness +
+                   BCE class + L2 box on positive cells), matching the
+                   ``datasets.synth_shapes`` target layout
+
+Both are deliberately compact: the experiments measure the *relative*
+accuracy drop FP32 → 2A/2W → 1A/2W, not leaderboard numbers (DESIGN.md §2).
+"""
+
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import jax_exec
+from .graph import Graph
+
+BN_MOMENTUM = 0.9
+
+
+@dataclass
+class TrainConfig:
+    lr: float = 0.05
+    momentum: float = 0.9
+    weight_decay: float = 1e-4
+    batch_size: int = 32
+    steps: int = 300
+    scale_lr_mult: float = 0.1  # LSQ scales move slower than weights
+    seed: int = 0
+    log_every: int = 50
+
+
+def softmax_xent(logits: jnp.ndarray, labels: jnp.ndarray) -> jnp.ndarray:
+    logp = jax.nn.log_softmax(logits)
+    return -logp[jnp.arange(labels.shape[0]), labels].mean()
+
+
+def detection_grid_loss(pred: jnp.ndarray, target: jnp.ndarray) -> jnp.ndarray:
+    """pred: raw map (N, G, G, 5+nc) — sigmoid applied here; target same layout."""
+    obj_t = target[..., 0]
+    obj_p = pred[..., 0]
+    bce_obj = jnp.maximum(obj_p, 0) - obj_p * obj_t + jnp.log1p(jnp.exp(-jnp.abs(obj_p)))
+    pos = obj_t
+    box_l2 = ((jax.nn.sigmoid(pred[..., 1:5]) - target[..., 1:5]) ** 2).sum(-1)
+    cls_p = pred[..., 5:]
+    cls_t = target[..., 5:]
+    bce_cls = (jnp.maximum(cls_p, 0) - cls_p * cls_t +
+               jnp.log1p(jnp.exp(-jnp.abs(cls_p)))).sum(-1)
+    npos = jnp.maximum(pos.sum(), 1.0)
+    return bce_obj.mean() + 5.0 * (pos * box_l2).sum() / npos + \
+        (pos * bce_cls).sum() / npos
+
+
+def _sgd_update(params, grads, vel, cfg: TrainConfig):
+    new_p, new_v = {}, {}
+    for k, p in params.items():
+        g = grads[k]
+        if k.endswith(".w") and cfg.weight_decay:
+            g = g + cfg.weight_decay * p
+        lr = cfg.lr * (cfg.scale_lr_mult if ".s_" in k else 1.0)
+        v = cfg.momentum * vel[k] + g
+        new_v[k] = v
+        new_p[k] = p - lr * v
+        if ".s_" in k:  # scales must stay positive
+            new_p[k] = jnp.maximum(new_p[k], 1e-6)
+    return new_p, new_v
+
+
+def train(g: Graph, data_fn, loss_fn, cfg: TrainConfig,
+          params=None, state=None, head: int = 0):
+    """Train graph ``g`` under QAT.
+
+    ``data_fn(rng, n) -> (x, y)`` supplies batches; ``loss_fn(outs, y)``
+    consumes graph output ``head``. Returns (params, state, history).
+    """
+    if params is None:
+        params, state = jax_exec.init_params(g, seed=cfg.seed)
+    vel = {k: jnp.zeros_like(v) for k, v in params.items()}
+    rng = np.random.default_rng(cfg.seed + 1)
+
+    @jax.jit
+    def step(params, state, vel, x, y):
+        def loss_of(p):
+            outs, aux = jax_exec.run(g, p, state, x, mode="qat", train=True)
+            return loss_fn(outs[head], y), aux
+
+        (loss, aux), grads = jax.value_and_grad(loss_of, has_aux=True)(params)
+        new_state = dict(state)
+        for k, v in aux.items():
+            new_state[k] = BN_MOMENTUM * state[k] + (1 - BN_MOMENTUM) * v
+        params, vel = _sgd_update(params, grads, vel, cfg)
+        return params, new_state, vel, loss
+
+    history = []
+    for it in range(cfg.steps):
+        x, y = data_fn(rng, cfg.batch_size)
+        params, state, vel, loss = step(params, state, vel,
+                                        jnp.asarray(x), jnp.asarray(y))
+        if it % cfg.log_every == 0 or it == cfg.steps - 1:
+            history.append((it, float(loss)))
+    return params, state, history
+
+
+def eval_classifier(g: Graph, params, state, x, y, mode: str = "deploy_sim",
+                    batch: int = 64, head: int = 0) -> float:
+    """Top-1 accuracy under the given execution mode."""
+    correct = 0
+    for i in range(0, len(x), batch):
+        outs, _ = jax_exec.run(g, params, state, jnp.asarray(x[i:i + batch]),
+                               mode=mode)
+        pred = np.asarray(outs[head]).argmax(-1)
+        correct += int((pred == y[i:i + batch]).sum())
+    return correct / len(x)
+
+
+def eval_detector_map(g: Graph, params, state, x, targets,
+                      mode: str = "deploy_sim", head: int = 0,
+                      iou_thresh: float = 0.5, batch: int = 32) -> float:
+    """mAP@0.5 on grid predictions (greedy per-cell decode, 11-pt AP).
+
+    Compact evaluator for the synth_shapes task: a predicted cell box matches
+    a GT cell box of the same class with IoU >= thresh.
+    """
+    num_classes = targets.shape[-1] - 5
+    all_scores: dict[int, list[tuple[float, int]]] = {c: [] for c in range(num_classes)}
+    total_gt = np.zeros(num_classes, np.int64)
+
+    for i in range(0, len(x), batch):
+        outs, _ = jax_exec.run(g, params, state, jnp.asarray(x[i:i + batch]), mode=mode)
+        pred = np.asarray(jax.nn.sigmoid(outs[head]))
+        tgt = targets[i:i + batch]
+        grid = pred.shape[1]
+        for bi in range(pred.shape[0]):
+            gt_boxes, gt_cls = _decode_grid(tgt[bi], grid, raw=False)
+            total_gt += np.bincount(gt_cls, minlength=num_classes) if len(gt_cls) else 0
+            pb, pc, ps = _decode_grid_pred(pred[bi], grid)
+            used = np.zeros(len(gt_boxes), bool)
+            order = np.argsort(-ps)
+            for j in order:
+                best, best_iou = -1, iou_thresh
+                for k in range(len(gt_boxes)):
+                    if used[k] or gt_cls[k] != pc[j]:
+                        continue
+                    iou = _iou(pb[j], gt_boxes[k])
+                    if iou >= best_iou:
+                        best, best_iou = k, iou
+                tp = best >= 0
+                if tp:
+                    used[best] = True
+                all_scores[int(pc[j])].append((float(ps[j]), int(tp)))
+
+    aps = []
+    for c in range(num_classes):
+        if total_gt[c] == 0:
+            continue
+        sc = sorted(all_scores[c], reverse=True)
+        tps = np.cumsum([s[1] for s in sc]) if sc else np.array([])
+        if len(tps) == 0:
+            aps.append(0.0)
+            continue
+        recall = tps / total_gt[c]
+        precision = tps / np.arange(1, len(tps) + 1)
+        ap = 0.0
+        for r in np.linspace(0, 1, 11):
+            mask = recall >= r
+            ap += (precision[mask].max() if mask.any() else 0.0) / 11
+        aps.append(float(ap))
+    return float(np.mean(aps)) if aps else 0.0
+
+
+def _decode_grid(t, grid, raw=True):
+    boxes, cls = [], []
+    for gi in range(grid):
+        for gj in range(grid):
+            if t[gi, gj, 0] > 0.5:
+                cx = (gj + t[gi, gj, 1]) / grid
+                cy = (gi + t[gi, gj, 2]) / grid
+                w, h = t[gi, gj, 3], t[gi, gj, 4]
+                boxes.append((cx - w / 2, cy - h / 2, cx + w / 2, cy + h / 2))
+                cls.append(int(np.argmax(t[gi, gj, 5:])))
+    return np.array(boxes).reshape(-1, 4), np.array(cls, np.int64)
+
+
+def _decode_grid_pred(p, grid, obj_thresh: float = 0.3):
+    boxes, cls, score = [], [], []
+    for gi in range(grid):
+        for gj in range(grid):
+            if p[gi, gj, 0] > obj_thresh:
+                cx = (gj + p[gi, gj, 1]) / grid
+                cy = (gi + p[gi, gj, 2]) / grid
+                w, h = p[gi, gj, 3], p[gi, gj, 4]
+                boxes.append((cx - w / 2, cy - h / 2, cx + w / 2, cy + h / 2))
+                c = int(np.argmax(p[gi, gj, 5:]))
+                cls.append(c)
+                score.append(float(p[gi, gj, 0] * p[gi, gj, 5 + c]))
+    return (np.array(boxes).reshape(-1, 4), np.array(cls, np.int64),
+            np.array(score, np.float64))
+
+
+def _iou(a, b) -> float:
+    x0, y0 = max(a[0], b[0]), max(a[1], b[1])
+    x1, y1 = min(a[2], b[2]), min(a[3], b[3])
+    inter = max(0.0, x1 - x0) * max(0.0, y1 - y0)
+    ua = (a[2] - a[0]) * (a[3] - a[1]) + (b[2] - b[0]) * (b[3] - b[1]) - inter
+    return inter / ua if ua > 0 else 0.0

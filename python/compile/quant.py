@@ -1,0 +1,138 @@
+"""Neutrino-style quantizers: LSQ quantization-aware training + PTQ calibration.
+
+Implements the paper's §IV quantizer
+
+    t_bar = round( clip( t / s, -Q_N, Q_P ) )        (training, STE)
+    t_hat = t_bar * s                                 (dequantized value)
+
+with the per-tensor scale ``s`` *learned* so the quantization error
+``t - t_hat`` is minimized — i.e. LSQ (Learned Step-size Quantization),
+which is what the learned-scale formulation in the paper describes.
+
+Weights use the signed range ``[-Q_N, Q_P]``; activations (post-ReLU)
+use the unipolar range ``[0, 2^b - 1]`` — matching the bitserial kernels'
+unipolar {0,1} encoding (§V).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.pack import qp_qn
+
+
+class QConfig(NamedTuple):
+    """Per-layer quantization configuration (paper's mixed precision knob)."""
+
+    w_bits: int = 2
+    a_bits: int = 2
+    enabled: bool = True  # False = layer kept FP32 ("conservative" layers)
+
+    @property
+    def tag(self) -> str:
+        return f"{self.a_bits}A{self.w_bits}W" if self.enabled else "FP32"
+
+
+FP32 = QConfig(enabled=False)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2, 3, 4))
+def lsq_quantize(t: jnp.ndarray, s: jnp.ndarray, bits: int, signed: bool,
+                 grad_scale: float) -> jnp.ndarray:
+    """Fake-quantize ``t`` with learned scale ``s`` (returns dequantized t_hat)."""
+    qp, qn = qp_qn(bits, signed)
+    v = jnp.clip(t / s, -float(qn), float(qp))
+    return jnp.round(v) * s
+
+
+def _lsq_fwd(t, s, bits, signed, grad_scale):
+    return lsq_quantize(t, s, bits, signed, grad_scale), (t, s)
+
+
+def _lsq_bwd(bits, signed, grad_scale, res, g):
+    """LSQ gradients: STE for t inside the clip range; scale grad per LSQ.
+
+    d t_hat / d s = -v + round(v)   if -Q_N < v < Q_P
+                  = -Q_N            if v <= -Q_N
+                  =  Q_P            if v >= Q_P
+    """
+    t, s = res
+    qp, qn = qp_qn(bits, signed)
+    v = t / s
+    lo, hi = -float(qn), float(qp)
+    in_range = (v > lo) & (v < hi)
+    dt = jnp.where(in_range, g, 0.0)
+    ds_elem = jnp.where(
+        v <= lo, lo, jnp.where(v >= hi, hi, jnp.round(v) - v)
+    )
+    ds = (g * ds_elem).sum() * grad_scale
+    return dt, jnp.asarray(ds, dtype=s.dtype)
+
+
+lsq_quantize.defvjp(_lsq_fwd, _lsq_bwd)
+
+
+def lsq_grad_scale(numel: int, bits: int, signed: bool = True) -> float:
+    """LSQ's gradient normalizer g = 1 / sqrt(numel * Q_P)."""
+    import math
+
+    qp, _ = qp_qn(bits, signed)
+    return 1.0 / math.sqrt(float(numel) * max(qp, 1))
+
+
+def init_scale(t: jnp.ndarray, bits: int, signed: bool = True) -> jnp.ndarray:
+    """LSQ init: s = 2 * mean(|t|) / sqrt(Q_P)."""
+    qp, _ = qp_qn(bits, signed)
+    s = 2.0 * jnp.abs(t).mean() / jnp.sqrt(float(max(qp, 1)))
+    return jnp.maximum(s, 1e-8).astype(jnp.float32)
+
+
+def quantize_int(t: jnp.ndarray, s: jnp.ndarray, bits: int, signed: bool) -> jnp.ndarray:
+    """Hard-quantize to the integer code (deployment path, no gradients)."""
+    qp, qn = qp_qn(bits, signed)
+    return jnp.clip(jnp.round(t / s), -float(qn), float(qp)).astype(jnp.int32)
+
+
+def dequantize(tq: jnp.ndarray, s: jnp.ndarray) -> jnp.ndarray:
+    return tq.astype(jnp.float32) * s
+
+
+# ---------------------------------------------------------------------------
+# PTQ calibration (the paper's comparison point; also used by the Rust
+# compiler when no QAT scales are provided).
+# ---------------------------------------------------------------------------
+
+def calibrate_minmax(t: jnp.ndarray, bits: int, signed: bool = True) -> jnp.ndarray:
+    """Min/max PTQ: pick s so the observed range maps onto [-Q_N, Q_P]."""
+    qp, qn = qp_qn(bits, signed)
+    if signed:
+        amax = jnp.abs(t).max()
+        s = amax / float(max(qn, 1))
+    else:
+        s = t.max() / float(max(qp, 1))
+    return jnp.maximum(s, 1e-8).astype(jnp.float32)
+
+
+def calibrate_mse(t: jnp.ndarray, bits: int, signed: bool = True,
+                  n_grid: int = 40) -> jnp.ndarray:
+    """MSE-optimal PTQ: grid-search the scale minimizing ||t - t_hat||^2."""
+    base = calibrate_minmax(t, bits, signed)
+    candidates = base * jnp.linspace(0.3, 1.2, n_grid)
+
+    def mse(s):
+        qp, qn = qp_qn(bits, signed)
+        th = jnp.clip(jnp.round(t / s), -float(qn), float(qp)) * s
+        return ((t - th) ** 2).mean()
+
+    errs = jax.vmap(mse)(candidates)
+    return candidates[jnp.argmin(errs)]
+
+
+def quant_error(t: jnp.ndarray, s: jnp.ndarray, bits: int, signed: bool) -> jnp.ndarray:
+    """error_q = t - t_hat  (paper §IV)."""
+    tq = quantize_int(t, s, bits, signed)
+    return t - dequantize(tq, s)

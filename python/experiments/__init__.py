@@ -1,0 +1,6 @@
+"""Accuracy experiments on synthetic stand-in datasets (DESIGN.md §2, §6).
+
+Each module trains small models under QAT and writes a JSON record to
+``artifacts/experiments/``; the Rust benches join these with the latency
+side, and EXPERIMENTS.md records paper-vs-measured.
+"""

@@ -1,0 +1,129 @@
+"""Shared helpers for the accuracy experiments."""
+
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+from compile import qat
+from compile.graph import Graph, GraphBuilder, QCfg
+
+OUT_DIR = Path(__file__).resolve().parents[2] / "artifacts" / "experiments"
+
+
+def save(name: str, record: dict) -> Path:
+    OUT_DIR.mkdir(parents=True, exist_ok=True)
+    path = OUT_DIR / f"{name}.json"
+    path.write_text(json.dumps(record, indent=1))
+    print(f"wrote {path}")
+    return path
+
+
+def small_detector(width: float, res: int, num_classes: int = 8,
+                   grid: int | None = None, qcfg: QCfg | None = None,
+                   mixed: str = "none") -> Graph:
+    """Single-scale YOLO-style detector used as the accuracy stand-in.
+
+    Downsamples 8x (grid = res/8). ``mixed`` controls the precision policy:
+      none   — every conv FP32
+      all    — every conv (except stem/head) quantized with ``qcfg``
+      conservative — like 'all' but the last body conv also stays FP32
+                     (the paper's Table-I policy)
+    """
+    q = qcfg or QCfg(2, 2)
+
+    def pick(i: int, total: int) -> QCfg:
+        if mixed == "none":
+            return QCfg(enabled=False)
+        if i == 0:  # stem
+            return QCfg(enabled=False)
+        if mixed == "conservative" and i >= total - 2:
+            return QCfg(enabled=False)
+        return q
+
+    c1 = max(8, int(16 * width))
+    c2 = max(8, int(32 * width))
+    c3 = max(12, int(64 * width))
+    total = 5
+    b = GraphBuilder("smalldet", (1, res, res, 3))
+    x = b.conv("input", c1, k=3, stride=2, act="relu", qcfg=pick(0, total), name="c0")
+    x = b.conv(x, c2, k=3, stride=2, act="relu", qcfg=pick(1, total), name="c1")
+    x = b.conv(x, c2, k=3, stride=1, act="relu", qcfg=pick(2, total), name="c2")
+    x = b.conv(x, c3, k=3, stride=2, act="relu", qcfg=pick(3, total), name="c3")
+    x = b.conv(x, c3, k=3, stride=1, act="relu", qcfg=pick(4, total), name="c4")
+    head = b.conv(x, 5 + num_classes, k=1, padding=0, bn=False,
+                  qcfg=QCfg(enabled=False), name="head")
+    return b.finish([head])
+
+
+def classifier(width: float, res: int, num_classes: int,
+               qcfg: QCfg | None = None, quantize: bool = True) -> Graph:
+    """ResNet-ish classifier stand-in (stem FP32, body quantizable)."""
+    from compile.graph import set_mixed_precision
+    from compile.models import REGISTRY
+
+    g = REGISTRY["resnet18"](num_classes=num_classes, resolution=res,
+                             width_mult=width)
+    if quantize and qcfg is not None:
+        set_mixed_precision(g, quantize_from=1, w_bits=qcfg.w_bits,
+                            a_bits=qcfg.a_bits)
+    else:
+        set_mixed_precision(g, quantize_from=10**9)  # all FP32
+    return g
+
+
+def warm_start(g_quant: Graph, fp32_params: dict, fp32_state: dict, seed: int = 0):
+    """Initialize a quantized graph from a trained FP32 checkpoint
+    (the Neutrino pipeline: full-precision training → QAT fine-tune)."""
+    from compile import jax_exec, quant
+
+    params, state = jax_exec.init_params(g_quant, seed=seed)
+    for k in params:
+        if k in fp32_params:
+            params[k] = fp32_params[k]
+    for k in state:
+        if k in fp32_state:
+            state[k] = fp32_state[k]
+    # re-fit weight scales on the warm weights
+    for n in g_quant.conv_nodes():
+        qcfg = n.attrs["qcfg"]
+        if qcfg.enabled:
+            params[f"{n.name}.s_w"] = quant.init_scale(
+                params[f"{n.name}.w"], qcfg.w_bits, signed=True)
+    return params, state
+
+
+def calibrate(g_quant: Graph, params: dict, state: dict, data_fn, batches: int = 2,
+              batch_size: int = 32):
+    """Set activation scales from observed FP32 ranges (PTQ-style init) —
+    without this, warm-started QAT starts from badly clipped activations."""
+    import numpy as np
+
+    from compile import jax_exec
+
+    rng = np.random.default_rng(99)
+    xs = [data_fn(rng, batch_size)[0] for _ in range(batches)]
+    import jax.numpy as jnp
+
+    return jax_exec.calibrate_activation_scales(
+        g_quant, params, state, [jnp.asarray(x) for x in xs])
+
+
+def train_eval_classifier(g: Graph, data_fn, eval_data, cfg: qat.TrainConfig,
+                          init=None):
+    params, state = init if init is not None else (None, None)
+    params, state, hist = qat.train(g, data_fn, qat.softmax_xent, cfg,
+                                    params=params, state=state)
+    xe, ye = eval_data
+    acc = qat.eval_classifier(g, params, state, xe, ye, mode="deploy_sim")
+    return acc, hist, (params, state)
+
+
+def train_eval_detector(g: Graph, data_fn, eval_data, cfg: qat.TrainConfig,
+                        init=None):
+    params, state = init if init is not None else (None, None)
+    params, state, hist = qat.train(g, data_fn, qat.detection_grid_loss, cfg,
+                                    params=params, state=state)
+    xe, te = eval_data
+    m = qat.eval_detector_map(g, params, state, xe, te, mode="deploy_sim")
+    return m, hist, (params, state)

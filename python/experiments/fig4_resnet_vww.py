@@ -1,0 +1,61 @@
+"""Fig. 4/5 accuracy side — ResNet18 on the VWW stand-in.
+
+Paper: 2A/2W drops < 1% accuracy, 1A/2W drops < 2% vs FP32 on VWW.
+We train the width-0.25 ResNet18 at 32px on synth-vww and measure the
+deployment (integer-exact) accuracy of FP32 vs 2A2W vs 1A2W.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from compile import datasets, qat
+from compile.graph import QCfg
+
+from . import common
+
+RES = 32
+STEPS = 220
+EVAL_N = 512
+
+
+def main() -> None:
+    rng = np.random.default_rng(1234)
+    eval_data = datasets.synth_vww(rng, EVAL_N, res=RES)
+    data_fn = lambda r, n: datasets.synth_vww(r, n, res=RES)
+    cfg = qat.TrainConfig(steps=STEPS, batch_size=32, lr=0.05, seed=0, log_every=50)
+
+    results = {}
+    g_fp = common.classifier(0.25, RES, 2, quantize=False)
+    acc, hist, ckpt = common.train_eval_classifier(g_fp, data_fn, eval_data, cfg)
+    results["FP32"] = {"accuracy": acc, "loss_curve": hist}
+    print(f"FP32: deploy accuracy {acc:.4f}")
+    ft_cfg = qat.TrainConfig(steps=STEPS // 2, batch_size=32, lr=0.01, seed=1,
+                             log_every=50)
+    for tag, qcfg in [("2A2W", QCfg(2, 2)), ("1A2W", QCfg(2, 1))]:
+        g = common.classifier(0.25, RES, 2, qcfg=qcfg, quantize=True)
+        init = common.warm_start(g, *ckpt)
+        init = (common.calibrate(g, init[0], init[1], data_fn), init[1])
+        acc, hist, _ = common.train_eval_classifier(g, data_fn, eval_data, ft_cfg,
+                                                    init=init)
+        results[tag] = {"accuracy": acc, "loss_curve": hist}
+        print(f"{tag}: deploy accuracy {acc:.4f}")
+
+    rec = {
+        "experiment": "fig4_resnet_vww",
+        "dataset": "synth-vww (VWW stand-in)",
+        "model": "resnet18 w0.25 @32px",
+        "steps": STEPS,
+        "paper": {"drop_2A2W": "<1%", "drop_1A2W": "<2%",
+                  "size_reduction": "15.58x", "speedup_pi3": "3.75x"},
+        "results": results,
+        "drop_2A2W": results["FP32"]["accuracy"] - results["2A2W"]["accuracy"],
+        "drop_1A2W": results["FP32"]["accuracy"] - results["1A2W"]["accuracy"],
+    }
+    common.save("fig4_resnet_vww", rec)
+    print(f"\ndrop 2A2W: {rec['drop_2A2W'] * 100:.2f}% (paper <1%)")
+    print(f"drop 1A2W: {rec['drop_1A2W'] * 100:.2f}% (paper <2%)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,122 @@
+"""Model zoo: topology validation, output shapes, mode consistency."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import jax_exec
+from compile.graph import QCfg, set_mixed_precision
+from compile.models import REGISTRY
+
+
+def _mini(name, **kw):
+    return REGISTRY[name](**kw)
+
+
+def test_resnet18_shapes():
+    g = _mini("resnet18", num_classes=10, resolution=64, width_mult=0.25)
+    params, state = jax_exec.init_params(g, seed=0)
+    x = jnp.zeros(g.input_shape, jnp.float32)
+    outs, _ = jax_exec.run(g, params, state, x, mode="fp32")
+    assert outs[0].shape == (1, 10)
+    # 20 convs in resnet18 (1 stem + 16 block + 3 downsample)
+    assert len(g.conv_nodes()) == 20
+
+
+def test_resnet50_shapes():
+    g = _mini("resnet50", num_classes=7, resolution=64, width_mult=0.125)
+    params, state = jax_exec.init_params(g, seed=0)
+    outs, _ = jax_exec.run(g, params, state, jnp.zeros(g.input_shape), mode="fp32")
+    assert outs[0].shape == (1, 7)
+    # 53 convs (1 stem + 48 block + 4 downsample)
+    assert len(g.conv_nodes()) == 53
+
+
+def test_vgg16_ssd_head_shapes():
+    g = _mini("vgg16_ssd", num_classes=21, resolution=300, width_mult=0.125)
+    params, state = jax_exec.init_params(g, seed=0)
+    outs, _ = jax_exec.run(g, params, state, jnp.zeros(g.input_shape), mode="fp32")
+    # 6 scales x (loc, conf); grid sizes of canonical SSD300
+    grids = [38, 19, 10, 5, 3, 1]
+    anchors = [4, 6, 6, 6, 4, 4]
+    assert len(outs) == 12
+    for si, (gsz, na) in enumerate(zip(grids, anchors)):
+        loc, conf = outs[2 * si], outs[2 * si + 1]
+        assert loc.shape == (1, gsz, gsz, na * 4), (si, loc.shape)
+        assert conf.shape == (1, gsz, gsz, na * 21)
+    total = sum(g_ * g_ * a for g_, a in zip(grids, anchors))
+    assert total == 8732  # the SSD300 box count
+
+
+@pytest.mark.parametrize("variant,res", [("n", 64), ("s", 64)])
+def test_yolov5_detect_shapes(variant, res):
+    g = _mini(f"yolov5{variant}", num_classes=8, resolution=res, width_mult=0.5)
+    params, state = jax_exec.init_params(g, seed=0)
+    outs, _ = jax_exec.run(g, params, state, jnp.zeros(g.input_shape), mode="fp32")
+    no = 3 * (5 + 8)
+    assert [o.shape for o in outs] == [
+        (1, res // 8, res // 8, no), (1, res // 16, res // 16, no),
+        (1, res // 32, res // 32, no)]
+
+
+def test_yolov5_variant_scaling():
+    gn = _mini("yolov5n", num_classes=80, resolution=64)
+    gs = _mini("yolov5s", num_classes=80, resolution=64)
+    gm = _mini("yolov5m", num_classes=80, resolution=64)
+    pn = sum(np.prod([*n.attrs["kernel"], n.attrs["cin"], n.attrs["cout"]])
+             for n in gn.conv_nodes())
+    ps = sum(np.prod([*n.attrs["kernel"], n.attrs["cin"], n.attrs["cout"]])
+             for n in gs.conv_nodes())
+    pm = sum(np.prod([*n.attrs["kernel"], n.attrs["cin"], n.attrs["cout"]])
+             for n in gm.conv_nodes())
+    assert pn < ps < pm
+    # s has ~4x the weights of n (width 0.5 vs 0.25); m deeper+wider still
+    assert 2.5 < ps / pn < 5.5
+    assert len(gm.conv_nodes()) > len(gs.conv_nodes())
+
+
+def test_graph_validation_catches_bad_graphs():
+    from compile.graph import Graph, Node
+
+    g = Graph("bad", "input", (1, 8, 8, 3),
+              [Node(op="relu", name="r", inputs=["nope"], output="r.out")],
+              ["r.out"])
+    with pytest.raises(ValueError, match="undefined"):
+        g.validate()
+
+
+def test_mixed_precision_policy():
+    g = _mini("resnet18", num_classes=2, resolution=32, width_mult=0.25)
+    set_mixed_precision(g, quantize_from=1, quantize_to=10, w_bits=2, a_bits=1)
+    convs = g.conv_nodes()
+    assert not convs[0].attrs["qcfg"].enabled          # stem stays FP32
+    assert convs[1].attrs["qcfg"].tag == "1A2W"
+    assert not convs[10].attrs["qcfg"].enabled
+
+
+def test_deploy_sim_close_to_qat_fakequant():
+    """Integer deployment must agree with fake-quant inference (same math)."""
+    g = _mini("resnet18", num_classes=4, resolution=32, width_mult=0.25)
+    set_mixed_precision(g, quantize_from=1, w_bits=2, a_bits=2)
+    params, state = jax_exec.init_params(g, seed=1)
+    rng = np.random.default_rng(2)
+    xs = [jnp.asarray(rng.uniform(0, 1, (2, 32, 32, 3)), jnp.float32)]
+    params = jax_exec.calibrate_activation_scales(g, params, state, xs)
+    x = jnp.asarray(rng.uniform(0, 1, (1, 32, 32, 3)), jnp.float32)
+    sim, _ = jax_exec.run(g, params, state, x, mode="deploy_sim")
+    qat, _ = jax_exec.run(g, params, state, x, mode="qat", train=False)
+    np.testing.assert_allclose(np.asarray(sim[0]), np.asarray(qat[0]),
+                               rtol=1e-3, atol=1e-3)
+
+
+def test_deploy_kernel_matches_deploy_sim():
+    """Pallas path == integer oracle path on a real (mini) network."""
+    g = _mini("resnet18", num_classes=3, resolution=32, width_mult=0.25)
+    set_mixed_precision(g, quantize_from=1, w_bits=2, a_bits=2)
+    params, state = jax_exec.init_params(g, seed=3)
+    rng = np.random.default_rng(4)
+    x = jnp.asarray(rng.uniform(0, 1, (1, 32, 32, 3)), jnp.float32)
+    sim, _ = jax_exec.run(g, params, state, x, mode="deploy_sim")
+    ker, _ = jax_exec.run(g, params, state, x, mode="deploy_kernel")
+    np.testing.assert_allclose(np.asarray(sim[0]), np.asarray(ker[0]),
+                               rtol=1e-5, atol=1e-5)

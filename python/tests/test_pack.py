@@ -1,0 +1,79 @@
+"""Bitplane packing round-trips and the popcount/plane-matmul identity."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import pack
+
+
+@pytest.mark.parametrize("bits", [1, 2, 3, 4])
+def test_planes_roundtrip(bits):
+    rng = np.random.default_rng(bits)
+    x = rng.integers(0, 2**bits, size=(5, 7))
+    planes = pack.to_planes(jnp.asarray(x), bits)
+    assert planes.shape == (bits, 5, 7)
+    assert set(np.unique(np.asarray(planes))) <= {0.0, 1.0}
+    back = pack.from_planes(planes)
+    np.testing.assert_array_equal(np.asarray(back), x)
+
+
+@pytest.mark.parametrize("bits", [1, 2, 3])
+def test_offset_encoding_roundtrip(bits):
+    qp, qn = pack.qp_qn(bits, signed=True)
+    w = np.arange(-qn, qp + 1)
+    wu = pack.offset_encode(jnp.asarray(w), bits)
+    assert int(wu.min()) == 0 and int(wu.max()) == 2**bits - 1
+    back = pack.offset_decode(wu, bits)
+    np.testing.assert_array_equal(np.asarray(back), w)
+
+
+@pytest.mark.parametrize("bits,signed,expect", [
+    (1, True, (0, 1)), (2, True, (1, 2)), (3, True, (3, 4)),
+    (8, True, (127, 128)), (1, False, (1, 0)), (2, False, (3, 0)),
+])
+def test_qp_qn(bits, signed, expect):
+    assert pack.qp_qn(bits, signed) == expect
+
+
+def test_qp_qn_rejects_zero_bits():
+    with pytest.raises(ValueError):
+        pack.qp_qn(0)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    bits=st.integers(1, 4),
+    k=st.integers(1, 70),
+    m=st.integers(1, 6),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_pack_words_roundtrip(bits, k, m, seed):
+    rng = np.random.default_rng(seed)
+    x = rng.integers(0, 2**bits, size=(m, k))
+    words = pack.pack_words_u32(jnp.asarray(x), bits)
+    assert words.shape == (bits, m, (k + 31) // 32)
+    back = pack.unpack_words_u32(words, k)
+    np.testing.assert_array_equal(np.asarray(back), x)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    a_bits=st.integers(1, 3),
+    w_bits=st.integers(1, 3),
+    m=st.integers(1, 5),
+    n=st.integers(1, 5),
+    k=st.integers(1, 80),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_popcount_dot_equals_int_gemm(a_bits, w_bits, m, n, k, seed):
+    """The paper's packed-word popcount equation == dense unsigned GEMM."""
+    rng = np.random.default_rng(seed)
+    a = rng.integers(0, 2**a_bits, size=(m, k))
+    w = rng.integers(0, 2**w_bits, size=(n, k))
+    aw = pack.pack_words_u32(jnp.asarray(a), a_bits)
+    ww = pack.pack_words_u32(jnp.asarray(w), w_bits)
+    got = pack.popcount_dot_words(aw, ww)
+    want = a @ w.T
+    np.testing.assert_array_equal(np.asarray(got), want)

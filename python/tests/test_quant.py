@@ -1,0 +1,107 @@
+"""LSQ quantizer and PTQ calibration tests."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import quant
+from compile.kernels.pack import qp_qn
+
+
+def test_fake_quant_values_on_grid():
+    t = jnp.asarray(np.linspace(-2, 2, 101), jnp.float32)
+    s = jnp.float32(0.25)
+    th = quant.lsq_quantize(t, s, 2, True, 1.0)
+    codes = np.asarray(th) / 0.25
+    np.testing.assert_allclose(codes, np.round(codes), atol=1e-6)
+    qp, qn = qp_qn(2, True)
+    assert codes.min() >= -qn and codes.max() <= qp
+
+
+@settings(max_examples=25, deadline=None)
+@given(bits=st.integers(1, 4), signed=st.booleans(), seed=st.integers(0, 2**31 - 1))
+def test_quant_error_bounded(bits, signed, seed):
+    """Inside the clip range, |t - t_hat| <= s/2."""
+    rng = np.random.default_rng(seed)
+    qp, qn = qp_qn(bits, signed)
+    s = 0.1
+    lo = -qn * s if signed else 0.0
+    t = jnp.asarray(rng.uniform(lo, qp * s, size=64), jnp.float32)
+    err = quant.quant_error(t, jnp.float32(s), bits, signed)
+    assert np.abs(np.asarray(err)).max() <= s / 2 + 1e-6
+
+
+def test_ste_gradient_passthrough_and_clip():
+    s = jnp.float32(0.5)
+    grad = jax.grad(lambda t: quant.lsq_quantize(t, s, 2, True, 1.0).sum())
+    t = jnp.asarray([-5.0, -0.3, 0.2, 5.0], jnp.float32)
+    g = np.asarray(grad(t))
+    # out-of-range elements get zero grad (clipped); in-range pass through
+    np.testing.assert_array_equal(g, [0.0, 1.0, 1.0, 0.0])
+
+
+def test_lsq_scale_gradient_signs():
+    """Clipped-high values push s up; exactly-representable values give ~0."""
+    s = jnp.float32(1.0)
+
+    def gfun(bits, t):
+        return float(jax.grad(
+            lambda s_: quant.lsq_quantize(jnp.asarray([t], jnp.float32), s_,
+                                          bits, True, 1.0).sum())(s))
+
+    # value far above Q_P*s: d/ds = Q_P (= 1 for 2-bit signed)
+    assert gfun(2, 10.0) == pytest.approx(1.0)
+    # value below -Q_N*s: d/ds = -Q_N (= -2 for 2-bit signed)
+    assert gfun(2, -10.0) == pytest.approx(-2.0)
+    # interior grid point (v=1 with Q_P=3): round(v) - v = 0
+    assert gfun(3, 1.0) == pytest.approx(0.0, abs=1e-6)
+
+
+def test_lsq_training_recovers_good_scale():
+    """Gradient descent on s alone should reduce quantization MSE."""
+    rng = np.random.default_rng(0)
+    t = jnp.asarray(rng.normal(0, 1, size=512), jnp.float32)
+    bits = 3
+    s = quant.init_scale(t, bits) * 3.0  # deliberately bad init
+    gs = quant.lsq_grad_scale(t.size, bits)
+
+    def loss(s_):
+        return ((quant.lsq_quantize(t, s_, bits, True, gs) - t) ** 2).sum()
+
+    l0 = float(loss(s))
+    g = jax.grad(loss)
+    for _ in range(200):
+        s = s - 0.05 * g(s)
+    assert float(loss(s)) < 0.5 * l0
+
+
+@pytest.mark.parametrize("bits", [1, 2, 3, 4])
+def test_calibrate_minmax_covers_range(bits):
+    rng = np.random.default_rng(bits)
+    t = jnp.asarray(rng.normal(0, 1, size=256), jnp.float32)
+    s = quant.calibrate_minmax(t, bits, signed=True)
+    tq = quant.quantize_int(t, s, bits, signed=True)
+    qp, qn = qp_qn(bits, True)
+    assert int(tq.min()) >= -qn and int(tq.max()) <= qp
+    # the max-|t| element must hit an extreme code
+    assert max(abs(int(tq.min())), int(tq.max())) in (qn, qp)
+
+
+def test_calibrate_mse_not_worse_than_minmax():
+    rng = np.random.default_rng(123)
+    # heavy-tailed tensor: minmax badly over-stretches the grid
+    t = jnp.asarray(rng.standard_t(2, size=1024), jnp.float32)
+    bits = 2
+
+    def mse(s):
+        return float((quant.quant_error(t, s, bits, True) ** 2).mean())
+
+    assert mse(quant.calibrate_mse(t, bits)) <= mse(quant.calibrate_minmax(t, bits)) + 1e-9
+
+
+def test_qconfig_tags():
+    assert quant.QConfig(2, 2).tag == "2A2W"
+    assert quant.QConfig(2, 1).tag == "1A2W"
+    assert quant.FP32.tag == "FP32"

@@ -1,0 +1,77 @@
+//! Ablation — the design choices DESIGN.md §5.2 calls out for the
+//! bitserial engine:
+//!   (a) thread scaling of the bitserial GEMM,
+//!   (b) bit-width sweep (1..4 bits each side) at fixed shape,
+//!   (c) activation packing cost share (pack+gemm vs gemm alone).
+//!
+//! Run: `cargo bench --bench ablation_tiling`
+
+use dlrt::bench_harness::{bench_ms, ms, Table};
+use dlrt::kernels::bitserial::{gemm_bitserial, pack_rows_u8, pack_weights_offset};
+use dlrt::util::rng::Rng;
+
+fn main() {
+    let (m, k, n) = (784usize, 1152usize, 128usize);
+    let mut rng = Rng::new(11);
+
+    // ---- (a) thread scaling ----------------------------------------------
+    let codes: Vec<u8> = (0..m * k).map(|_| rng.usize(4) as u8).collect();
+    let wq: Vec<i32> = (0..n * k).map(|_| rng.range(-2, 2) as i32).collect();
+    let ap = pack_rows_u8(&codes, m, k, 2);
+    let wp = pack_weights_offset(&wq, n, k, 2);
+    let mut out = vec![0i32; m * n];
+    let mut t = Table::new(
+        "Ablation (a): bitserial GEMM thread scaling (784x1152x128, 2A2W)",
+        &["threads", "median", "scaling"],
+    );
+    let base = bench_ms(1, 9, || gemm_bitserial(&ap, &wp, 2, &mut out, 1)).median_ms;
+    for threads in [1usize, 2, 4] {
+        let tt = bench_ms(1, 9, || gemm_bitserial(&ap, &wp, 2, &mut out, threads));
+        t.row(vec![threads.to_string(), ms(tt.median_ms),
+                   format!("{:.2}x", base / tt.median_ms)]);
+    }
+    t.print();
+    t.save_json("ablation_threads");
+
+    // ---- (b) bit-width sweep ---------------------------------------------
+    let mut t = Table::new(
+        "Ablation (b): bit-width sweep (same shape; cost ∝ w_bits*a_bits)",
+        &["config", "median", "vs 1A1W"],
+    );
+    let mut base_1a1w = 0.0;
+    for (ab, wb) in [(1usize, 1usize), (1, 2), (2, 2), (3, 2), (2, 3), (4, 4)] {
+        let codes: Vec<u8> = (0..m * k).map(|_| rng.usize(1 << ab) as u8).collect();
+        let wq: Vec<i32> = (0..n * k)
+            .map(|_| rng.range(-(1 << (wb - 1)), 1 << (wb - 1)) as i32)
+            .collect();
+        let ap = pack_rows_u8(&codes, m, k, ab);
+        let wp = pack_weights_offset(&wq, n, k, wb);
+        let tt = bench_ms(1, 7, || gemm_bitserial(&ap, &wp, wb, &mut out, 1));
+        if (ab, wb) == (1, 1) {
+            base_1a1w = tt.median_ms;
+        }
+        t.row(vec![format!("{ab}A{wb}W"), ms(tt.median_ms),
+                   format!("{:.2}x", tt.median_ms / base_1a1w)]);
+    }
+    t.print();
+    t.save_json("ablation_bits");
+
+    // ---- (c) packing cost share -------------------------------------------
+    let codes: Vec<u8> = (0..m * k).map(|_| rng.usize(4) as u8).collect();
+    let t_pack = bench_ms(1, 9, || {
+        std::hint::black_box(pack_rows_u8(&codes, m, k, 2));
+    });
+    let ap = pack_rows_u8(&codes, m, k, 2);
+    let t_gemm = bench_ms(1, 9, || gemm_bitserial(&ap, &wp, 2, &mut out, 1));
+    let mut t = Table::new(
+        "Ablation (c): activation packing cost share (2A2W)",
+        &["stage", "median", "share"],
+    );
+    let total = t_pack.median_ms + t_gemm.median_ms;
+    t.row(vec!["pack activations".into(), ms(t_pack.median_ms),
+               format!("{:.0}%", 100.0 * t_pack.median_ms / total)]);
+    t.row(vec!["bitserial GEMM".into(), ms(t_gemm.median_ms),
+               format!("{:.0}%", 100.0 * t_gemm.median_ms / total)]);
+    t.print();
+    t.save_json("ablation_pack");
+}

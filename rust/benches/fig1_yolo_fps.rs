@@ -1,0 +1,74 @@
+//! Fig. 1 — YOLOv5 FPS vs input resolution on the Raspberry Pi 4B
+//! (Cortex-A72), showing the paper's motivating point: even INT8 YOLOv5
+//! tops out at ~4-5 FPS unless the model is tiny and low-res.
+//!
+//! Projected series from the A72 cost model at paper scale, plus a measured
+//! host-CPU series at reduced width (ratios transfer; DESIGN.md §2).
+//!
+//! Run: `cargo bench --bench fig1_yolo_fps`
+
+use dlrt::bench_harness::{bench_ms, ms, Table};
+use dlrt::compiler::{compile_graph, EngineChoice};
+use dlrt::costmodel::{self, EngineKind, CORTEX_A72};
+use dlrt::dlrt::graph::QCfg;
+use dlrt::exec::Executor;
+use dlrt::models::build_yolov5;
+use dlrt::util::rng::Rng;
+use dlrt::Tensor;
+
+const RESOLUTIONS: [usize; 4] = [128, 192, 256, 320];
+
+fn main() {
+    // ---- paper-scale projections (the figure's series) -------------------
+    for engine in ["FP32", "INT8"] {
+        let force = if engine == "FP32" { EngineKind::Fp32 } else { EngineKind::Int8 };
+        let mut t = Table::new(
+            &format!("Fig.1 projection — YOLOv5 {engine} FPS on Cortex-A72 (4 threads)"),
+            &["variant", "128px", "192px", "256px", "320px"],
+        );
+        for v in ["n", "s", "m"] {
+            let mut cells = vec![format!("yolov5{v}")];
+            for res in RESOLUTIONS {
+                let g = build_yolov5(v, 80, res, 1.0, QCfg::FP32, 0);
+                let lat = costmodel::graph_latency_ms(&g, &CORTEX_A72, Some(force), 4)
+                    .unwrap();
+                cells.push(format!("{:.1}", 1000.0 / lat));
+            }
+            t.row(cells);
+        }
+        t.print();
+        t.save_json(&format!("fig1_{}", engine.to_lowercase()));
+    }
+    println!("\npaper's point: YOLOv5s INT8 @320px lands well under 5 FPS; only the");
+    println!("tiniest (n, <=256px) configurations are usable without DLRT.");
+
+    // ---- measured (host CPU, width 0.25, fp32 vs int8 vs bitserial) ------
+    let mut t = Table::new(
+        "Fig.1 measured — yolov5n width=0.25 on host CPU (1 thread)",
+        &["res", "FP32", "INT8", "DLRT 2A2W", "DLRT FPS"],
+    );
+    let mut rng = Rng::new(2);
+    for res in [128usize, 192] {
+        let g = build_yolov5("n", 80, res, 0.25, QCfg::new(2, 2), 0);
+        let mq = compile_graph(&g, EngineChoice::Auto).unwrap();
+        let mf = compile_graph(&g, EngineChoice::ForceFp32).unwrap();
+        let m8 = compile_graph(&g, EngineChoice::ForceInt8).unwrap();
+        let mut x = Tensor::zeros(vec![1, res, res, 3]);
+        for v in x.data.iter_mut() {
+            *v = rng.f32();
+        }
+        let mut ex = Executor::new(1);
+        let t_f = bench_ms(1, 5, || { ex.run(&mf, &x).unwrap(); });
+        let t_8 = bench_ms(1, 5, || { ex.run(&m8, &x).unwrap(); });
+        let t_q = bench_ms(1, 5, || { ex.run(&mq, &x).unwrap(); });
+        t.row(vec![
+            format!("{res}"),
+            ms(t_f.median_ms),
+            ms(t_8.median_ms),
+            ms(t_q.median_ms),
+            format!("{:.1}", 1000.0 / t_q.median_ms),
+        ]);
+    }
+    t.print();
+    t.save_json("fig1_measured");
+}

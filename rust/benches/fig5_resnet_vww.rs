@@ -1,0 +1,79 @@
+//! Fig. 4/5 — ResNet18 on VWW (224px): DeepliteRT 2A/2W and 1A/2W vs the
+//! FP32 (ONNX-Runtime-role) and INT8 (TFLite+XNNPACK-role) baselines on
+//! RPi 3B+ and RPi 4B. Paper headline: 3.75x (Pi3) and 2.90x (Pi4) speedup
+//! with 15.58x size reduction.
+//!
+//! Run: `cargo bench --bench fig5_resnet_vww`
+
+use dlrt::bench_harness::{bench_ms, ms, Table};
+use dlrt::compiler::{compile_graph, EngineChoice};
+use dlrt::costmodel::{self, EngineKind, CORTEX_A53, CORTEX_A72};
+use dlrt::dlrt::graph::QCfg;
+use dlrt::exec::Executor;
+use dlrt::models::build_resnet;
+use dlrt::util::rng::Rng;
+use dlrt::Tensor;
+
+fn main() {
+    // ---- projections at paper scale (224px, 4 threads) -------------------
+    let mut t = Table::new(
+        "Fig.4/5 projection — ResNet18-VWW @224px (4 threads)",
+        &["platform", "FP32", "INT8", "DLRT 2A2W", "DLRT 1A2W", "speedup (paper)"],
+    );
+    for (cpu, paper) in [(&CORTEX_A53, "3.75x"), (&CORTEX_A72, "2.90x")] {
+        let g22 = build_resnet(18, 2, 224, 1.0, QCfg::new(2, 2), 0);
+        let g12 = build_resnet(18, 2, 224, 1.0, QCfg::new(1, 2), 0);
+        let fp32 = costmodel::graph_latency_ms(&g22, cpu, Some(EngineKind::Fp32), 4)
+            .unwrap();
+        let int8 = costmodel::graph_latency_ms(&g22, cpu, Some(EngineKind::Int8), 4)
+            .unwrap();
+        let b22 = costmodel::graph_latency_ms(&g22, cpu, None, 4).unwrap();
+        let b12 = costmodel::graph_latency_ms(&g12, cpu, None, 4).unwrap();
+        t.row(vec![
+            cpu.name.to_string(),
+            ms(fp32),
+            ms(int8),
+            ms(b22),
+            ms(b12),
+            format!("{:.2}x ({paper})", fp32 / b22),
+        ]);
+    }
+    t.print();
+    t.save_json("fig5_projection");
+
+    // ---- measured on host CPU (reduced: 112px) ---------------------------
+    let mut m = Table::new(
+        "Fig.4/5 measured — ResNet18-VWW @112px, host CPU (1 thread)",
+        &["engine", "median", "speedup vs FP32"],
+    );
+    let g = build_resnet(18, 2, 112, 1.0, QCfg::new(2, 2), 0);
+    let mq = compile_graph(&g, EngineChoice::Auto).unwrap();
+    let mf = compile_graph(&g, EngineChoice::ForceFp32).unwrap();
+    let m8 = compile_graph(&g, EngineChoice::ForceInt8).unwrap();
+    let mut rng = Rng::new(3);
+    let mut x = Tensor::zeros(vec![1, 112, 112, 3]);
+    for v in x.data.iter_mut() {
+        *v = rng.f32();
+    }
+    let mut ex = Executor::new(1);
+    let t_f = bench_ms(1, 5, || { ex.run(&mf, &x).unwrap(); });
+    let t_8 = bench_ms(1, 5, || { ex.run(&m8, &x).unwrap(); });
+    let t_q = bench_ms(1, 5, || { ex.run(&mq, &x).unwrap(); });
+    m.row(vec!["FP32 native".into(), ms(t_f.median_ms), "1.00x".into()]);
+    m.row(vec!["INT8 native".into(), ms(t_8.median_ms),
+               format!("{:.2}x", t_f.median_ms / t_8.median_ms)]);
+    m.row(vec!["DLRT 2A2W (mixed)".into(), ms(t_q.median_ms),
+               format!("{:.2}x", t_f.median_ms / t_q.median_ms)]);
+    m.print();
+    m.save_json("fig5_measured");
+
+    // accuracy column comes from the python experiment (make exp-fig4);
+    // EXPERIMENTS.md joins both sides.
+    let acc = std::path::Path::new("artifacts/experiments/fig4_resnet_vww.json");
+    if acc.exists() {
+        println!("\naccuracy results found: {}", acc.display());
+        println!("{}", std::fs::read_to_string(acc).unwrap_or_default());
+    } else {
+        println!("\n(accuracy side: run `make exp-fig4` to train the VWW stand-in)");
+    }
+}

@@ -1,0 +1,91 @@
+//! Fig. 7 — ResNet18/50 on ImageNet: inference time across runtimes on the
+//! Jetson Nano (Cortex-A57), including the embedded-GPU reference bar.
+//! Paper headline: DLRT ~50% slower than the embedded GPU, 2-5x faster than
+//! CPU baselines.
+//!
+//! Measured side: native engines + the XLA/PJRT framework baseline at 96px.
+//!
+//! Run: `cargo bench --bench fig7_resnet_imagenet`
+
+use dlrt::bench_harness::{bench_ms, ms, Table};
+use dlrt::compiler::{compile_graph, EngineChoice};
+use dlrt::costmodel::{self, EngineKind, CORTEX_A57, JETSON_NANO_GPU};
+use dlrt::dlrt::graph::QCfg;
+use dlrt::exec::Executor;
+use dlrt::models::build_resnet;
+use dlrt::util::rng::Rng;
+use dlrt::Tensor;
+
+fn main() {
+    let mut t = Table::new(
+        "Fig.7 projection — ImageNet classification on Jetson Nano (A57, 4 threads)",
+        &["model", "FP32 CPU", "INT8 CPU", "DLRT 2A2W", "GPU (ref)", "DLRT/GPU"],
+    );
+    for depth in [18usize, 50] {
+        let g = build_resnet(depth, 1000, 224, 1.0, QCfg::new(2, 2), 0);
+        let fp32 =
+            costmodel::graph_latency_ms(&g, &CORTEX_A57, Some(EngineKind::Fp32), 4).unwrap();
+        let int8 =
+            costmodel::graph_latency_ms(&g, &CORTEX_A57, Some(EngineKind::Int8), 4).unwrap();
+        let b22 = costmodel::graph_latency_ms(&g, &CORTEX_A57, None, 4).unwrap();
+        let gpu = costmodel::gpu_latency_ms(&g, &JETSON_NANO_GPU).unwrap();
+        t.row(vec![
+            format!("resnet{depth}@224"),
+            ms(fp32),
+            ms(int8),
+            ms(b22),
+            ms(gpu),
+            format!("{:.2}x (paper ~1.5x)", b22 / gpu),
+        ]);
+    }
+    t.print();
+    t.save_json("fig7_projection");
+
+    // ---- measured: native engines + PJRT baseline @96px ------------------
+    let mut m = Table::new(
+        "Fig.7 measured — ResNet18 @96px, host CPU (1 thread)",
+        &["runtime", "median", "speedup vs FP32-native"],
+    );
+    let g = build_resnet(18, 1000, 96, 1.0, QCfg::new(2, 2), 0);
+    let mq = compile_graph(&g, EngineChoice::Auto).unwrap();
+    let mf = compile_graph(&g, EngineChoice::ForceFp32).unwrap();
+    let m8 = compile_graph(&g, EngineChoice::ForceInt8).unwrap();
+    let mut rng = Rng::new(5);
+    let mut x = Tensor::zeros(vec![1, 96, 96, 3]);
+    for v in x.data.iter_mut() {
+        *v = rng.f32();
+    }
+    let mut ex = Executor::new(1);
+    let t_f = bench_ms(1, 5, || { ex.run(&mf, &x).unwrap(); });
+    let t_8 = bench_ms(1, 5, || { ex.run(&m8, &x).unwrap(); });
+    let t_q = bench_ms(1, 5, || { ex.run(&mq, &x).unwrap(); });
+    m.row(vec!["FP32 native".into(), ms(t_f.median_ms), "1.00x".into()]);
+    m.row(vec!["INT8 native".into(), ms(t_8.median_ms),
+               format!("{:.2}x", t_f.median_ms / t_8.median_ms)]);
+    m.row(vec!["DLRT 2A2W (mixed)".into(), ms(t_q.median_ms),
+               format!("{:.2}x", t_f.median_ms / t_q.median_ms)]);
+
+    // XLA/PJRT framework baseline (the ONNX-Runtime role), same 96px graph
+    let stem = std::path::Path::new("artifacts/resnet18_fp32_96");
+    if stem.with_extension("hlo.txt").exists()
+        || std::path::Path::new("artifacts/resnet18_fp32_96.hlo.txt").exists()
+    {
+        let rt = dlrt::runtime::PjrtRuntime::cpu().unwrap();
+        let model = rt.load_hlo(stem).unwrap();
+        let mut inputs: Vec<Tensor> = model.manifest.params.iter()
+            .map(|(_, shape)| {
+                let n: usize = shape.iter().product::<usize>().max(1);
+                Tensor::new(shape.clone(),
+                            (0..n).map(|_| rng.f32() * 0.1 + 0.05).collect()).unwrap()
+            })
+            .collect();
+        inputs.push(x.clone());
+        let t_pj = bench_ms(1, 5, || { model.run_f32(&inputs).unwrap(); });
+        m.row(vec!["XLA/PJRT FP32 (framework baseline)".into(), ms(t_pj.median_ms),
+                   format!("{:.2}x", t_f.median_ms / t_pj.median_ms)]);
+    } else {
+        println!("(PJRT row skipped: run `make artifacts`)");
+    }
+    m.print();
+    m.save_json("fig7_measured");
+}

@@ -1,0 +1,69 @@
+//! Fig. 8 — YOLOv5s/m @320px: DLRT vs TFLite+XNNPACK (FP16) vs ONNX Runtime
+//! (FP32) on the Raspberry Pi 4B. Paper headlines: up to 2.2x over
+//! TFLite+XNNPACK, 3.2x over ONNX Runtime; ~9 FPS (s) and ~3 FPS (m).
+//!
+//! Role mapping (DESIGN.md §2): ONNX-Runtime-FP32 → our FP32 engine;
+//! TFLite+XNNPACK-FP16 → our FP32 engine at 0.7x cost (FP16 halves
+//! bandwidth, not Neon FMA throughput on A72 — XNNPACK gains ~1.4x).
+//!
+//! Run: `cargo bench --bench fig8_yolo_latency`
+
+use dlrt::bench_harness::{bench_ms, ms, Table};
+use dlrt::compiler::{compile_graph, EngineChoice};
+use dlrt::costmodel::{self, EngineKind, CORTEX_A72};
+use dlrt::dlrt::graph::QCfg;
+use dlrt::exec::Executor;
+use dlrt::models::build_yolov5;
+use dlrt::util::rng::Rng;
+use dlrt::Tensor;
+
+const XNNPACK_FP16_FACTOR: f64 = 0.7;
+
+fn main() {
+    let mut t = Table::new(
+        "Fig.8 projection — YOLOv5 @320px on Cortex-A72 (4 threads)",
+        &["model", "ORT FP32 (role)", "TFLite+XNN FP16 (role)", "DLRT mixed",
+          "DLRT FPS", "vs ORT", "vs XNN", "paper"],
+    );
+    for (v, paper) in [("s", "9 FPS, 3.2x/2.2x"), ("m", "3 FPS, 3.2x/2.2x")] {
+        let g = build_yolov5(v, 1 + 4, 320, 1.0, QCfg::new(2, 2), 0); // person class head
+        let ort = costmodel::graph_latency_ms(&g, &CORTEX_A72, Some(EngineKind::Fp32), 4)
+            .unwrap();
+        let xnn = ort * XNNPACK_FP16_FACTOR;
+        let dlrt_ms = costmodel::graph_latency_ms(&g, &CORTEX_A72, None, 4).unwrap();
+        t.row(vec![
+            format!("yolov5{v}"),
+            ms(ort),
+            ms(xnn),
+            ms(dlrt_ms),
+            format!("{:.1}", 1000.0 / dlrt_ms),
+            format!("{:.2}x", ort / dlrt_ms),
+            format!("{:.2}x", xnn / dlrt_ms),
+            paper.to_string(),
+        ]);
+    }
+    t.print();
+    t.save_json("fig8_projection");
+
+    // ---- measured at reduced scale (width 0.5 yolov5s @160px) ------------
+    let mut m = Table::new(
+        "Fig.8 measured — yolov5s width=0.5 @160px, host CPU (1 thread)",
+        &["engine", "median", "speedup vs FP32"],
+    );
+    let g = build_yolov5("s", 5, 160, 0.5, QCfg::new(2, 2), 0);
+    let mq = compile_graph(&g, EngineChoice::Auto).unwrap();
+    let mf = compile_graph(&g, EngineChoice::ForceFp32).unwrap();
+    let mut rng = Rng::new(6);
+    let mut x = Tensor::zeros(vec![1, 160, 160, 3]);
+    for v in x.data.iter_mut() {
+        *v = rng.f32();
+    }
+    let mut ex = Executor::new(1);
+    let t_f = bench_ms(1, 4, || { ex.run(&mf, &x).unwrap(); });
+    let t_q = bench_ms(1, 4, || { ex.run(&mq, &x).unwrap(); });
+    m.row(vec!["FP32 native".into(), ms(t_f.median_ms), "1.00x".into()]);
+    m.row(vec!["DLRT 2A2W (mixed)".into(), ms(t_q.median_ms),
+               format!("{:.2}x", t_f.median_ms / t_q.median_ms)]);
+    m.print();
+    m.save_json("fig8_measured");
+}

@@ -1,0 +1,99 @@
+//! Table I — YOLOv5n @352px on COCO-8 classes, Cortex-A53: conservative
+//! mixed precision (FP32 + 2-bit). Paper row: FP32 mAP 0.424 @ 250 ms →
+//! mixed mAP 0.414 @ 98.4 ms (2.54x).
+//!
+//! Latency side here (projection + measured-at-reduced-scale); the mAP
+//! column comes from `make exp-table1` (QAT on the synth-shapes COCO-8
+//! stand-in) and is joined if present.
+//!
+//! Run: `cargo bench --bench table1_yolov5n`
+
+use dlrt::bench_harness::{bench_ms, ms, Table};
+use dlrt::compiler::{compile_graph, EngineChoice};
+use dlrt::costmodel::{self, EngineKind, CORTEX_A53};
+use dlrt::dlrt::graph::QCfg;
+use dlrt::exec::Executor;
+use dlrt::models::{build_yolov5, set_mixed_precision};
+use dlrt::util::json::Json;
+use dlrt::util::rng::Rng;
+use dlrt::Tensor;
+
+fn main() {
+    // conservative policy: stem + detect heads + last C3 stay FP32
+    let mut g = build_yolov5("n", 8, 352, 1.0, QCfg::new(2, 2), 0);
+    let nconv = g.conv_nodes().count();
+    set_mixed_precision(&mut g, 1, Some(nconv - 6), 2, 2);
+
+    let fp32 = costmodel::graph_latency_ms(&g, &CORTEX_A53, Some(EngineKind::Fp32), 4)
+        .unwrap();
+    let mixed = costmodel::graph_latency_ms(&g, &CORTEX_A53, None, 4).unwrap();
+
+    // accuracy side from the python experiment, if present
+    let (map_fp32, map_mixed) = read_maps().unwrap_or((f64::NAN, f64::NAN));
+
+    let mut t = Table::new(
+        "Table I — YOLOv5n @352px, COCO-8, Cortex-A53 (projection + synth mAP)",
+        &["config", "mAP (synth)", "latency", "speedup", "paper"],
+    );
+    t.row(vec![
+        "YOLOv5n FP32".into(),
+        fmt_map(map_fp32),
+        ms(fp32),
+        "1.00x".into(),
+        "0.424 / 250 ms".into(),
+    ]);
+    t.row(vec![
+        "YOLOv5n mixed (FP32+2bit, conservative)".into(),
+        fmt_map(map_mixed),
+        ms(mixed),
+        format!("{:.2}x", fp32 / mixed),
+        "0.414 / 98.4 ms (2.54x)".into(),
+    ]);
+    t.print();
+    t.save_json("table1_projection");
+
+    // ---- measured latency at reduced scale. YOLOv5n's channels are thin
+    //      (16..256), so many layers sit in the small-k regime where u64
+    //      bitserial underutilizes words — expect a modest measured ratio
+    //      (the paper's Neon kernels at 128 bits face the same effect;
+    //      hence Table I's 2.54x rather than ResNet's 2.9-3.75x). ---------
+    let mut m = Table::new(
+        "Table I measured — yolov5n full width @160px, host CPU (1 thread)",
+        &["config", "median", "speedup"],
+    );
+    let mut gm = build_yolov5("n", 8, 160, 1.0, QCfg::new(2, 2), 0);
+    let nconv = gm.conv_nodes().count();
+    set_mixed_precision(&mut gm, 1, Some(nconv - 6), 2, 2);
+    let mq = compile_graph(&gm, EngineChoice::Auto).unwrap();
+    let mf = compile_graph(&gm, EngineChoice::ForceFp32).unwrap();
+    let mut rng = Rng::new(7);
+    let mut x = Tensor::zeros(vec![1, 160, 160, 3]);
+    for v in x.data.iter_mut() {
+        *v = rng.f32();
+    }
+    let mut ex = Executor::new(1);
+    let t_f = bench_ms(1, 5, || { ex.run(&mf, &x).unwrap(); });
+    let t_q = bench_ms(1, 5, || { ex.run(&mq, &x).unwrap(); });
+    m.row(vec!["FP32".into(), ms(t_f.median_ms), "1.00x".into()]);
+    m.row(vec!["mixed FP32+2bit".into(), ms(t_q.median_ms),
+               format!("{:.2}x", t_f.median_ms / t_q.median_ms)]);
+    m.print();
+    m.save_json("table1_measured");
+}
+
+fn fmt_map(v: f64) -> String {
+    if v.is_nan() {
+        "run `make exp-table1`".into()
+    } else {
+        format!("{v:.3}")
+    }
+}
+
+fn read_maps() -> Option<(f64, f64)> {
+    let text = std::fs::read_to_string("artifacts/experiments/table1_yolov5n.json").ok()?;
+    let v = Json::parse(&text).ok()?;
+    Some((
+        v.get("map_fp32").ok()?.num().ok()?,
+        v.get("map_mixed").ok()?.num().ok()?,
+    ))
+}

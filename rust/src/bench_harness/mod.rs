@@ -1,0 +1,181 @@
+//! Benchmark harness (criterion stand-in): robust timing + paper tables.
+//!
+//! Every `cargo bench` target uses [`bench_ms`] (warmup + median/MAD over
+//! repeats) and renders a [`Table`] that prints the paper's reported value
+//! next to ours, plus writes a JSON record under `target/bench_results/`
+//! for EXPERIMENTS.md bookkeeping.
+
+use std::time::Instant;
+
+use crate::util::json::{arr, num, obj, s, Json};
+
+/// Timing result in milliseconds.
+#[derive(Clone, Copy, Debug)]
+pub struct Timing {
+    pub median_ms: f64,
+    pub mad_ms: f64,
+    pub reps: usize,
+}
+
+/// Run `f` `reps` times after `warmup` runs; report median + MAD.
+pub fn bench_ms<F: FnMut()>(warmup: usize, reps: usize, mut f: F) -> Timing {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples: Vec<f64> = (0..reps.max(1))
+        .map(|_| {
+            let t0 = Instant::now();
+            f();
+            t0.elapsed().as_secs_f64() * 1e3
+        })
+        .collect();
+    samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let median = samples[samples.len() / 2];
+    let mut devs: Vec<f64> = samples.iter().map(|v| (v - median).abs()).collect();
+    devs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    Timing { median_ms: median, mad_ms: devs[devs.len() / 2], reps: samples.len() }
+}
+
+/// Adaptive repeat count: aim for ~`budget_ms` of total measurement.
+pub fn reps_for(first_run_ms: f64, budget_ms: f64) -> usize {
+    ((budget_ms / first_run_ms.max(0.01)) as usize).clamp(3, 200)
+}
+
+/// A paper-style results table.
+pub struct Table {
+    pub title: String,
+    pub columns: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: &str, columns: &[&str]) -> Table {
+        Table {
+            title: title.to_string(),
+            columns: columns.iter().map(|c| c.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        assert_eq!(cells.len(), self.columns.len(), "row arity mismatch");
+        self.rows.push(cells);
+    }
+
+    pub fn print(&self) {
+        let mut widths: Vec<usize> = self.columns.iter().map(|c| c.len()).collect();
+        for row in &self.rows {
+            for (i, cell) in row.iter().enumerate() {
+                widths[i] = widths[i].max(cell.len());
+            }
+        }
+        println!("\n== {} ==", self.title);
+        let header: Vec<String> = self
+            .columns
+            .iter()
+            .enumerate()
+            .map(|(i, c)| format!("{:w$}", c, w = widths[i]))
+            .collect();
+        println!("| {} |", header.join(" | "));
+        let sep: Vec<String> = widths.iter().map(|w| "-".repeat(*w)).collect();
+        println!("|-{}-|", sep.join("-|-"));
+        for row in &self.rows {
+            let cells: Vec<String> = row
+                .iter()
+                .enumerate()
+                .map(|(i, c)| format!("{:w$}", c, w = widths[i]))
+                .collect();
+            println!("| {} |", cells.join(" | "));
+        }
+    }
+
+    /// Persist under `target/bench_results/<name>.json`.
+    pub fn save_json(&self, name: &str) {
+        let dir = std::path::Path::new("target/bench_results");
+        let _ = std::fs::create_dir_all(dir);
+        let j = obj(vec![
+            ("title", s(&self.title)),
+            ("columns", arr(self.columns.iter().map(|c| s(c)).collect())),
+            ("rows", arr(self.rows.iter()
+                .map(|r| arr(r.iter().map(|c| s(c)).collect()))
+                .collect())),
+        ]);
+        let _ = std::fs::write(dir.join(format!("{name}.json")), j.to_string());
+    }
+}
+
+/// Format helpers for table cells.
+pub fn ms(v: f64) -> String {
+    if v >= 100.0 {
+        format!("{v:.0} ms")
+    } else if v >= 1.0 {
+        format!("{v:.1} ms")
+    } else {
+        format!("{:.2} ms", v)
+    }
+}
+
+pub fn speedup(base: f64, ours: f64) -> String {
+    format!("{:.2}x", base / ours)
+}
+
+pub fn fps(ms_v: f64) -> String {
+    format!("{:.1} FPS", 1000.0 / ms_v)
+}
+
+/// Record a perf-iteration entry (EXPERIMENTS.md §Perf bookkeeping).
+pub fn record_perf(name: &str, entries: &[(&str, f64)]) {
+    let dir = std::path::Path::new("target/bench_results");
+    let _ = std::fs::create_dir_all(dir);
+    let j = Json::Obj(
+        entries
+            .iter()
+            .map(|(k, v)| (k.to_string(), num(*v)))
+            .collect(),
+    );
+    let _ = std::fs::write(dir.join(format!("perf_{name}.json")), j.to_string());
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_measures_something() {
+        let t = bench_ms(1, 5, || {
+            std::hint::black_box((0..10_000).sum::<u64>());
+        });
+        assert!(t.median_ms >= 0.0);
+        assert_eq!(t.reps, 5);
+    }
+
+    #[test]
+    fn reps_clamped() {
+        assert_eq!(reps_for(1000.0, 500.0), 3);
+        assert_eq!(reps_for(0.0001, 1e9), 200);
+    }
+
+    #[test]
+    fn table_roundtrip() {
+        let mut t = Table::new("Test", &["a", "b"]);
+        t.row(vec!["1".into(), "2".into()]);
+        t.print();
+        assert_eq!(t.rows.len(), 1);
+    }
+
+    #[test]
+    #[should_panic(expected = "row arity")]
+    fn table_rejects_bad_row() {
+        let mut t = Table::new("Test", &["a", "b"]);
+        t.row(vec!["1".into()]);
+    }
+
+    #[test]
+    fn formatters() {
+        assert_eq!(ms(250.0), "250 ms");
+        assert_eq!(ms(12.34), "12.3 ms");
+        assert_eq!(ms(0.5), "0.50 ms");
+        assert_eq!(speedup(100.0, 50.0), "2.00x");
+        assert_eq!(fps(100.0), "10.0 FPS");
+    }
+}

@@ -1,0 +1,316 @@
+//! The "Deeplite Compiler" stage: arch.json + weights.bin → [`CompiledModel`].
+//!
+//! Responsibilities (paper §VI, Fig. 3):
+//! 1. parse the interchange exported by the JAX build path,
+//! 2. pick an engine per conv from its [`QCfg`] (mixed precision) or a
+//!    forced [`EngineChoice`] (to build the FP32 / INT8 baselines from the
+//!    same checkpoint),
+//! 3. quantize + bitplane-pack weights,
+//! 4. (optionally) serialize to a deployable `.dlrt` file — see
+//!    [`crate::dlrt::format`].
+
+use std::path::Path;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::dlrt::graph::{Graph, Node, NodeWeights, Op, QCfg};
+use crate::exec::{CompiledConv, CompiledDense, CompiledModel, ConvKernel};
+use crate::quant;
+use crate::util::json::Json;
+
+/// Engine selection policy for a whole model.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum EngineChoice {
+    /// Per-layer from QCfg: quantized layers → bitserial, FP32 layers → fp32.
+    Auto,
+    /// All convs on the FP32 engine (the paper's FP32 baselines).
+    ForceFp32,
+    /// All convs on the INT8 engine (the TFLite/ORT-INT8 baselines).
+    ForceInt8,
+}
+
+impl EngineChoice {
+    pub fn parse(s: &str) -> Result<EngineChoice> {
+        Ok(match s {
+            "auto" | "bitserial" => EngineChoice::Auto,
+            "fp32" => EngineChoice::ForceFp32,
+            "int8" => EngineChoice::ForceInt8,
+            _ => bail!("unknown engine {s:?} (auto|fp32|int8)"),
+        })
+    }
+}
+
+/// Default activation scale for INT8 when a layer carries no QAT scale:
+/// activations in our graphs are post-ReLU/SiLU features normalized by BN;
+/// a [0, 6] range (ReLU6 convention) is the standard PTQ assumption.
+const DEFAULT_INT8_ACT_MAX: f32 = 6.0;
+
+/// Parse `arch.json` + `weights.bin` from a model directory.
+pub fn load_arch(dir: &Path) -> Result<Graph> {
+    let arch_text = std::fs::read_to_string(dir.join("arch.json"))
+        .with_context(|| format!("reading {}", dir.join("arch.json").display()))?;
+    let weights = read_f32_bin(&dir.join("weights.bin"))?;
+    parse_arch(&arch_text, &weights)
+}
+
+pub fn read_f32_bin(path: &Path) -> Result<Vec<f32>> {
+    let bytes = std::fs::read(path).with_context(|| format!("reading {}", path.display()))?;
+    if bytes.len() % 4 != 0 {
+        bail!("{}: length not a multiple of 4", path.display());
+    }
+    Ok(bytes
+        .chunks_exact(4)
+        .map(|b| f32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+        .collect())
+}
+
+fn slice_ref<'a>(weights: &'a [f32], v: &Json) -> Result<&'a [f32]> {
+    let off = v.get("offset")?.usize()?;
+    let len = v.get("len")?.usize()?;
+    weights
+        .get(off..off + len)
+        .ok_or_else(|| anyhow!("weight ref {off}+{len} out of range ({})", weights.len()))
+}
+
+/// Parse the JSON interchange into a weighted [`Graph`].
+pub fn parse_arch(arch_text: &str, weights: &[f32]) -> Result<Graph> {
+    let v = Json::parse(arch_text)?;
+    let input = v.get("input")?;
+    let shape = input.get("shape")?.usize_vec()?;
+    if shape.len() != 4 {
+        bail!("input must be NHWC, got {shape:?}");
+    }
+    let mut g = Graph {
+        name: v.get("name")?.str()?.to_string(),
+        input_name: input.get("name")?.str()?.to_string(),
+        input_shape: [shape[0], shape[1], shape[2], shape[3]],
+        nodes: Vec::new(),
+        outputs: v.get("outputs")?.arr()?.iter().map(|o| Ok(o.str()?.to_string()))
+            .collect::<Result<_>>()?,
+        weights: Default::default(),
+    };
+    for jn in v.get("nodes")?.arr()? {
+        let op_name = jn.get("op")?.str()?;
+        let name = jn.get("name")?.str()?.to_string();
+        let inputs: Vec<String> = jn.get("inputs")?.arr()?.iter()
+            .map(|i| Ok(i.str()?.to_string())).collect::<Result<_>>()?;
+        let output = jn.get("output")?.str()?.to_string();
+        let pair = |key: &str| -> Result<[usize; 2]> {
+            let v = jn.get(key)?.usize_vec()?;
+            Ok([v[0], v[1]])
+        };
+        let op = match op_name {
+            "conv2d" => {
+                let qj = jn.get("qcfg")?;
+                let qcfg = if qj.get("enabled")?.bool()? {
+                    QCfg::new(qj.get("a_bits")?.usize()? as u8,
+                              qj.get("w_bits")?.usize()? as u8)
+                } else {
+                    QCfg::FP32
+                };
+                let nw = NodeWeights {
+                    w: slice_ref(weights, jn.get("w")?)?.to_vec(),
+                    scale: slice_ref(weights, jn.get("scale")?)?.to_vec(),
+                    bias: slice_ref(weights, jn.get("bias")?)?.to_vec(),
+                    s_w: jn.opt("s_w").map(|v| v.f32()).transpose()?.unwrap_or(0.0),
+                    s_a: jn.opt("s_a").map(|v| v.f32()).transpose()?.unwrap_or(0.0),
+                };
+                g.weights.insert(name.clone(), nw);
+                Op::Conv2d {
+                    stride: pair("stride")?,
+                    padding: pair("padding")?,
+                    kernel: pair("kernel")?,
+                    cin: jn.get("cin")?.usize()?,
+                    cout: jn.get("cout")?.usize()?,
+                    qcfg,
+                }
+            }
+            "dense" => {
+                let nw = NodeWeights {
+                    w: slice_ref(weights, jn.get("w")?)?.to_vec(),
+                    scale: Vec::new(),
+                    bias: slice_ref(weights, jn.get("b")?)?.to_vec(),
+                    s_w: 0.0,
+                    s_a: 0.0,
+                };
+                g.weights.insert(name.clone(), nw);
+                Op::Dense { cin: jn.get("cin")?.usize()?, cout: jn.get("cout")?.usize()? }
+            }
+            "maxpool2d" => Op::MaxPool2d {
+                kernel: pair("kernel")?,
+                stride: pair("stride")?,
+                padding: pair("padding")?,
+            },
+            "global_avg_pool" => Op::GlobalAvgPool,
+            "add" => Op::Add,
+            "concat" => Op::Concat,
+            "upsample2x" => Op::Upsample2x,
+            "relu" => Op::Relu,
+            "relu6" => Op::Relu6,
+            "silu" => Op::Silu,
+            "leaky_relu" => Op::LeakyRelu,
+            "sigmoid" => Op::Sigmoid,
+            "flatten" => Op::Flatten,
+            other => bail!("unknown op {other:?}"),
+        };
+        g.nodes.push(Node { op, name, inputs, output });
+    }
+    g.validate()?;
+    Ok(g)
+}
+
+/// Compile a weighted graph into an executable model.
+pub fn compile_graph(g: &Graph, engine: EngineChoice) -> Result<CompiledModel> {
+    let mut model = CompiledModel {
+        graph: g.clone(),
+        convs: Default::default(),
+        denses: Default::default(),
+    };
+    for node in &g.nodes {
+        match &node.op {
+            Op::Conv2d { kernel, cin, cout, qcfg, .. } => {
+                let nw = g
+                    .weights
+                    .get(&node.name)
+                    .ok_or_else(|| anyhow!("{}: missing weights", node.name))?;
+                let k = kernel[0] * kernel[1] * cin;
+                if nw.w.len() != k * cout {
+                    bail!("{}: weight size {} != {}", node.name, nw.w.len(), k * cout);
+                }
+                let compiled = compile_conv(nw, k, *cout, kernel, *cin, *qcfg, engine)?;
+                model.convs.insert(node.name.clone(), compiled);
+            }
+            Op::Dense { cin, cout } => {
+                let nw = g.weights.get(&node.name)
+                    .ok_or_else(|| anyhow!("{}: missing weights", node.name))?;
+                if nw.w.len() != cin * cout {
+                    bail!("{}: dense weight size mismatch", node.name);
+                }
+                model.denses.insert(node.name.clone(),
+                                    CompiledDense { w: nw.w.clone(), b: nw.bias.clone() });
+            }
+            _ => {}
+        }
+    }
+    Ok(model)
+}
+
+fn compile_conv(
+    nw: &NodeWeights,
+    k: usize,
+    cout: usize,
+    kernel: &[usize; 2],
+    cin: usize,
+    qcfg: QCfg,
+    engine: EngineChoice,
+) -> Result<CompiledConv> {
+    let kernel = match (engine, qcfg.enabled) {
+        (EngineChoice::Auto, true) => {
+            // QAT scales if provided, else PTQ min/max (paper §IV static PTQ)
+            let s_w = if nw.s_w > 0.0 {
+                nw.s_w
+            } else {
+                quant::calibrate_mse_signed(&nw.w, qcfg.w_bits, 40)
+            };
+            let s_a = if nw.s_a > 0.0 { nw.s_a } else { 0.1 };
+            let packed =
+                quant::pack_conv_weights(&nw.w, kernel[0], kernel[1], cin, cout, s_w,
+                                         qcfg.w_bits);
+            ConvKernel::Bitserial {
+                packed,
+                s_w,
+                s_a,
+                w_bits: qcfg.w_bits,
+                a_bits: qcfg.a_bits,
+            }
+        }
+        (EngineChoice::Auto, false) | (EngineChoice::ForceFp32, _) => {
+            ConvKernel::Fp32 { wt: quant::transpose_conv_weights(&nw.w, k, cout) }
+        }
+        (EngineChoice::ForceInt8, _) => {
+            let wt = quant::transpose_conv_weights(&nw.w, k, cout);
+            let (codes, s_w) = crate::kernels::int8::quantize_weights_i8(&wt);
+            // activation scale: reuse the QAT range if known, else assume
+            // the standard [0, 6] post-activation range
+            let (qp_a, _) = crate::dlrt::graph::qp_qn(qcfg.a_bits.max(1), false);
+            let a_max = if qcfg.enabled && nw.s_a > 0.0 {
+                nw.s_a * qp_a as f32
+            } else {
+                DEFAULT_INT8_ACT_MAX
+            };
+            ConvKernel::Int8 { codes, s_w, s_a: a_max / 255.0 }
+        }
+    };
+    Ok(CompiledConv { kernel, scale: nw.scale.clone(), bias: nw.bias.clone() })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::tiny_test_graph;
+
+    #[test]
+    fn engine_choice_parsing() {
+        assert_eq!(EngineChoice::parse("auto").unwrap(), EngineChoice::Auto);
+        assert_eq!(EngineChoice::parse("fp32").unwrap(), EngineChoice::ForceFp32);
+        assert_eq!(EngineChoice::parse("int8").unwrap(), EngineChoice::ForceInt8);
+        assert!(EngineChoice::parse("gpu").is_err());
+    }
+
+    #[test]
+    fn auto_respects_mixed_precision() {
+        let g = tiny_test_graph(true); // conv1 fp32, conv2+conv3 2A2W
+        let m = compile_graph(&g, EngineChoice::Auto).unwrap();
+        let summary = m.engine_summary();
+        assert_eq!(summary.get("bitserial"), Some(&2));
+        assert_eq!(summary.get("fp32"), Some(&1));
+    }
+
+    #[test]
+    fn forced_engines_cover_all_convs() {
+        let g = tiny_test_graph(true);
+        let m8 = compile_graph(&g, EngineChoice::ForceInt8).unwrap();
+        assert_eq!(m8.engine_summary().get("int8"), Some(&3));
+        let mf = compile_graph(&g, EngineChoice::ForceFp32).unwrap();
+        assert_eq!(mf.engine_summary().get("fp32"), Some(&3));
+    }
+
+    #[test]
+    fn bitserial_compresses_storage() {
+        let g = tiny_test_graph(true);
+        let mq = compile_graph(&g, EngineChoice::Auto).unwrap();
+        let mf = compile_graph(&g, EngineChoice::ForceFp32).unwrap();
+        assert!(mq.weight_bytes() < mf.weight_bytes());
+    }
+
+    #[test]
+    fn parse_arch_roundtrip_via_exported_file() {
+        // exercise the real exported interchange when artifacts exist
+        let dir = std::path::Path::new(concat!(env!("CARGO_MANIFEST_DIR"),
+                                               "/artifacts/models/resnet18_mini"));
+        if !dir.exists() {
+            eprintln!("skipping: run `make artifacts` first");
+            return;
+        }
+        let g = load_arch(dir).unwrap();
+        assert_eq!(g.name, "resnet18");
+        assert_eq!(g.input_shape, [1, 64, 64, 3]);
+        assert_eq!(g.conv_nodes().count(), 20);
+        let m = compile_graph(&g, EngineChoice::Auto).unwrap();
+        // mixed precision: stem fp32, the rest bitserial
+        assert_eq!(m.engine_summary().get("fp32"), Some(&1));
+        assert_eq!(m.engine_summary().get("bitserial"), Some(&19));
+    }
+
+    #[test]
+    fn parse_arch_rejects_bad_refs() {
+        let arch = r#"{"name":"x","input":{"name":"input","shape":[1,4,4,1]},
+            "outputs":["c.out"],
+            "nodes":[{"op":"conv2d","name":"c","inputs":["input"],"output":"c.out",
+              "stride":[1,1],"padding":[0,0],"kernel":[1,1],"cin":1,"cout":1,
+              "qcfg":{"w_bits":2,"a_bits":2,"enabled":false},
+              "w":{"offset":0,"len":9},"scale":{"offset":0,"len":1},
+              "bias":{"offset":0,"len":1}}]}"#;
+        assert!(parse_arch(arch, &[0.0; 4]).is_err()); // ref past end
+    }
+}

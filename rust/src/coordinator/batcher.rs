@@ -1,0 +1,107 @@
+//! Dynamic batching policy + batch assembly helpers.
+//!
+//! Policy: the worker blocks until at least one request is queued, then
+//! keeps the window open until either `max_batch` requests arrived or the
+//! oldest request has waited `max_wait`. This trades a bounded additional
+//! queueing delay for GEMM efficiency (bigger `rows` amortizes the packed
+//! weight streaming), the same trade serving systems make for LLM decode.
+
+use std::sync::atomic::Ordering;
+use std::time::Instant;
+
+use anyhow::{bail, Result};
+
+use super::{Request, Shared};
+use crate::dlrt::tensor::Tensor;
+
+/// Block until a batch is available; `None` means the server is stopping.
+pub(super) fn collect_batch(shared: &Shared) -> Option<Vec<Request>> {
+    let mut q = shared.queue.lock().unwrap();
+    loop {
+        if shared.stop.load(Ordering::SeqCst) {
+            return None;
+        }
+        if !q.is_empty() {
+            break;
+        }
+        q = shared.cv.wait(q).unwrap();
+    }
+    // window: oldest request anchors the deadline
+    let deadline = q[0].enqueued + shared.cfg.max_wait;
+    while q.len() < shared.cfg.max_batch {
+        let now = Instant::now();
+        if now >= deadline {
+            break;
+        }
+        let (nq, timeout) = shared.cv.wait_timeout(q, deadline - now).unwrap();
+        q = nq;
+        if shared.stop.load(Ordering::SeqCst) {
+            return None;
+        }
+        if timeout.timed_out() {
+            break;
+        }
+    }
+    let take = q.len().min(shared.cfg.max_batch);
+    Some(q.drain(..take).collect())
+}
+
+/// Stack [1,H,W,C] inputs into one [B,H,W,C] tensor.
+pub fn stack_inputs(inputs: &[&Tensor]) -> Result<Tensor> {
+    let first = inputs.first().ok_or_else(|| anyhow::anyhow!("empty batch"))?;
+    if first.shape.len() != 4 || first.shape[0] != 1 {
+        bail!("batcher expects [1,H,W,C] inputs, got {:?}", first.shape);
+    }
+    let mut data = Vec::with_capacity(first.numel() * inputs.len());
+    for t in inputs {
+        if t.shape != first.shape {
+            bail!("mixed shapes in batch: {:?} vs {:?}", t.shape, first.shape);
+        }
+        data.extend_from_slice(&t.data);
+    }
+    let mut shape = first.shape.clone();
+    shape[0] = inputs.len();
+    Tensor::new(shape, data)
+}
+
+/// Extract sample `i` of a batched output as a batch-1 tensor.
+pub fn slice_batch(t: &Tensor, i: usize) -> Result<Tensor> {
+    if t.shape.is_empty() {
+        bail!("scalar output cannot be sliced");
+    }
+    let b = t.shape[0];
+    if i >= b {
+        bail!("batch index {i} out of {b}");
+    }
+    let per: usize = t.shape[1..].iter().product();
+    let mut shape = t.shape.clone();
+    shape[0] = 1;
+    Tensor::new(shape, t.data[i * per..(i + 1) * per].to_vec())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stack_and_slice_roundtrip() {
+        let mut a = Tensor::zeros(vec![1, 2, 2, 1]);
+        let mut b = Tensor::zeros(vec![1, 2, 2, 1]);
+        a.data.iter_mut().for_each(|v| *v = 1.0);
+        b.data.iter_mut().for_each(|v| *v = 2.0);
+        let stacked = stack_inputs(&[&a, &b]).unwrap();
+        assert_eq!(stacked.shape, vec![2, 2, 2, 1]);
+        assert_eq!(slice_batch(&stacked, 0).unwrap().data, a.data);
+        assert_eq!(slice_batch(&stacked, 1).unwrap().data, b.data);
+        assert!(slice_batch(&stacked, 2).is_err());
+    }
+
+    #[test]
+    fn stack_rejects_mixed_shapes() {
+        let a = Tensor::zeros(vec![1, 2, 2, 1]);
+        let b = Tensor::zeros(vec![1, 3, 2, 1]);
+        assert!(stack_inputs(&[&a, &b]).is_err());
+        let c = Tensor::zeros(vec![2, 2, 2, 1]);
+        assert!(stack_inputs(&[&c]).is_err());
+    }
+}

@@ -1,0 +1,91 @@
+//! Serving metrics: queue/exec latency quantiles, batch sizes, throughput.
+
+use std::sync::Mutex;
+use std::time::Instant;
+
+#[derive(Default)]
+pub struct Metrics {
+    inner: Mutex<Inner>,
+}
+
+#[derive(Default)]
+struct Inner {
+    queue_ms: Vec<f64>,
+    exec_ms: Vec<f64>,
+    batch_sizes: Vec<usize>,
+    started: Option<Instant>,
+}
+
+#[derive(Clone, Debug, Default)]
+pub struct MetricsSnapshot {
+    pub completed: usize,
+    pub p50_exec_ms: f64,
+    pub p95_exec_ms: f64,
+    pub p50_queue_ms: f64,
+    pub p95_queue_ms: f64,
+    pub mean_batch: f64,
+    pub throughput_rps: f64,
+}
+
+impl Metrics {
+    pub fn observe(&self, queue_ms: f64, exec_ms: f64, batch: usize) {
+        let mut m = self.inner.lock().unwrap();
+        m.started.get_or_insert_with(Instant::now);
+        m.queue_ms.push(queue_ms);
+        m.exec_ms.push(exec_ms);
+        m.batch_sizes.push(batch);
+    }
+
+    pub fn snapshot(&self) -> MetricsSnapshot {
+        let m = self.inner.lock().unwrap();
+        let completed = m.exec_ms.len();
+        if completed == 0 {
+            return MetricsSnapshot::default();
+        }
+        let elapsed = m.started.map(|t| t.elapsed().as_secs_f64()).unwrap_or(0.0);
+        MetricsSnapshot {
+            completed,
+            p50_exec_ms: percentile(&m.exec_ms, 0.50),
+            p95_exec_ms: percentile(&m.exec_ms, 0.95),
+            p50_queue_ms: percentile(&m.queue_ms, 0.50),
+            p95_queue_ms: percentile(&m.queue_ms, 0.95),
+            mean_batch: m.batch_sizes.iter().sum::<usize>() as f64 / completed as f64,
+            throughput_rps: if elapsed > 0.0 { completed as f64 / elapsed } else { 0.0 },
+        }
+    }
+}
+
+pub fn percentile(xs: &[f64], q: f64) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    let mut v = xs.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let idx = ((v.len() as f64 - 1.0) * q).round() as usize;
+    v[idx.min(v.len() - 1)]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn percentiles() {
+        let xs: Vec<f64> = (0..=100).map(|v| v as f64).collect();
+        assert_eq!(percentile(&xs, 0.5), 50.0);
+        assert_eq!(percentile(&xs, 0.95), 95.0);
+        assert_eq!(percentile(&[], 0.5), 0.0);
+    }
+
+    #[test]
+    fn snapshot_aggregates() {
+        let m = Metrics::default();
+        for i in 0..10 {
+            m.observe(1.0, 2.0 + i as f64, 2);
+        }
+        let s = m.snapshot();
+        assert_eq!(s.completed, 10);
+        assert_eq!(s.mean_batch, 2.0);
+        assert!(s.p95_exec_ms >= s.p50_exec_ms);
+    }
+}

@@ -1,0 +1,169 @@
+//! Detection postprocessing: YOLOv5 decode + class-wise NMS.
+//!
+//! Runs in the coordinator (not the model graph), as in the paper's
+//! runtime: the `.dlrt` model emits raw per-scale maps; this decodes them
+//! into boxes with the Ultralytics v5 parameterization:
+//!
+//! ```text
+//!   xy = (2·σ(t_xy) − 0.5 + grid) · stride
+//!   wh = (2·σ(t_wh))² · anchor
+//! ```
+
+use crate::dlrt::tensor::Tensor;
+use crate::kernels::elementwise::sigmoid_scalar;
+
+/// Default YOLOv5 COCO anchors (pixels, per scale P3/P4/P5).
+pub const DEFAULT_ANCHORS: [[(f32, f32); 3]; 3] = [
+    [(10.0, 13.0), (16.0, 30.0), (33.0, 23.0)],
+    [(30.0, 61.0), (62.0, 45.0), (59.0, 119.0)],
+    [(116.0, 90.0), (156.0, 198.0), (373.0, 326.0)],
+];
+
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Detection {
+    /// xyxy in input-image pixels
+    pub bbox: [f32; 4],
+    pub class_id: usize,
+    pub score: f32,
+}
+
+/// Decode one batch element from the 3 raw head maps.
+///
+/// `maps[i]`: [1, H_i, W_i, na*(5+nc)]; `strides` typically [8, 16, 32].
+pub fn decode_yolo(
+    maps: &[Tensor],
+    num_classes: usize,
+    strides: &[usize],
+    anchors: &[[(f32, f32); 3]],
+    conf_thresh: f32,
+) -> Vec<Detection> {
+    let mut dets = Vec::new();
+    let no = 5 + num_classes;
+    for (si, map) in maps.iter().enumerate() {
+        let (_, h, w, cdim) = map.nhwc();
+        let na = cdim / no;
+        let stride = strides[si] as f32;
+        for gy in 0..h {
+            for gx in 0..w {
+                for a in 0..na {
+                    let base = ((gy * w + gx) * cdim) + a * no;
+                    let obj = sigmoid_scalar(map.data[base + 4]);
+                    if obj < conf_thresh {
+                        continue;
+                    }
+                    // best class
+                    let (mut best_c, mut best_p) = (0usize, f32::MIN);
+                    for c in 0..num_classes {
+                        let p = map.data[base + 5 + c];
+                        if p > best_p {
+                            best_p = p;
+                            best_c = c;
+                        }
+                    }
+                    let score = obj * sigmoid_scalar(best_p);
+                    if score < conf_thresh {
+                        continue;
+                    }
+                    let tx = sigmoid_scalar(map.data[base]);
+                    let ty = sigmoid_scalar(map.data[base + 1]);
+                    let tw = sigmoid_scalar(map.data[base + 2]);
+                    let th = sigmoid_scalar(map.data[base + 3]);
+                    let cx = (2.0 * tx - 0.5 + gx as f32) * stride;
+                    let cy = (2.0 * ty - 0.5 + gy as f32) * stride;
+                    let (aw, ah) = anchors[si][a.min(2)];
+                    let bw = (2.0 * tw) * (2.0 * tw) * aw;
+                    let bh = (2.0 * th) * (2.0 * th) * ah;
+                    dets.push(Detection {
+                        bbox: [cx - bw / 2.0, cy - bh / 2.0, cx + bw / 2.0, cy + bh / 2.0],
+                        class_id: best_c,
+                        score,
+                    });
+                }
+            }
+        }
+    }
+    dets
+}
+
+pub fn iou(a: &[f32; 4], b: &[f32; 4]) -> f32 {
+    let x0 = a[0].max(b[0]);
+    let y0 = a[1].max(b[1]);
+    let x1 = a[2].min(b[2]);
+    let y1 = a[3].min(b[3]);
+    let inter = (x1 - x0).max(0.0) * (y1 - y0).max(0.0);
+    let area_a = (a[2] - a[0]).max(0.0) * (a[3] - a[1]).max(0.0);
+    let area_b = (b[2] - b[0]).max(0.0) * (b[3] - b[1]).max(0.0);
+    let union = area_a + area_b - inter;
+    if union > 0.0 {
+        inter / union
+    } else {
+        0.0
+    }
+}
+
+/// Greedy class-wise non-maximum suppression.
+pub fn nms(mut dets: Vec<Detection>, iou_thresh: f32) -> Vec<Detection> {
+    dets.sort_by(|a, b| b.score.partial_cmp(&a.score).unwrap());
+    let mut keep: Vec<Detection> = Vec::new();
+    'outer: for d in dets {
+        for k in &keep {
+            if k.class_id == d.class_id && iou(&k.bbox, &d.bbox) > iou_thresh {
+                continue 'outer;
+            }
+        }
+        keep.push(d);
+    }
+    keep
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn iou_cases() {
+        assert_eq!(iou(&[0.0, 0.0, 2.0, 2.0], &[0.0, 0.0, 2.0, 2.0]), 1.0);
+        assert_eq!(iou(&[0.0, 0.0, 1.0, 1.0], &[2.0, 2.0, 3.0, 3.0]), 0.0);
+        let v = iou(&[0.0, 0.0, 2.0, 2.0], &[1.0, 1.0, 3.0, 3.0]);
+        assert!((v - 1.0 / 7.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn nms_suppresses_overlaps_keeps_classes() {
+        let dets = vec![
+            Detection { bbox: [0.0, 0.0, 10.0, 10.0], class_id: 0, score: 0.9 },
+            Detection { bbox: [1.0, 1.0, 11.0, 11.0], class_id: 0, score: 0.8 }, // suppressed
+            Detection { bbox: [1.0, 1.0, 11.0, 11.0], class_id: 1, score: 0.7 }, // other class
+            Detection { bbox: [50.0, 50.0, 60.0, 60.0], class_id: 0, score: 0.6 },
+        ];
+        let kept = nms(dets, 0.5);
+        assert_eq!(kept.len(), 3);
+        assert!(kept.iter().any(|d| d.class_id == 1));
+    }
+
+    #[test]
+    fn decode_finds_planted_object() {
+        // one 8x8 map, 1 anchor, 1 class; plant a confident object at (3,4)
+        let num_classes = 1;
+        let no = 6;
+        let mut map = Tensor::zeros(vec![1, 8, 8, no]);
+        for v in map.data.iter_mut() {
+            *v = -10.0; // sigmoid ~ 0 everywhere
+        }
+        let base = (3 * 8 + 4) * no;
+        map.data[base] = 0.0;       // tx: σ=0.5 → centered
+        map.data[base + 1] = 0.0;
+        map.data[base + 2] = 0.0;   // tw: (2·0.5)² = 1 → bw = anchor w
+        map.data[base + 3] = 0.0;
+        map.data[base + 4] = 8.0;   // obj ≈ 1
+        map.data[base + 5] = 8.0;   // class ≈ 1
+        let anchors = [[(16.0, 16.0); 3]];
+        let dets = decode_yolo(&[map], num_classes, &[8], &anchors, 0.3);
+        assert_eq!(dets.len(), 1);
+        let d = dets[0];
+        // center = (gx + 0.5) * 8 = 36, (gy + 0.5) * 8 = 28
+        assert!((d.bbox[0] - (36.0 - 8.0)).abs() < 1e-3);
+        assert!((d.bbox[1] - (28.0 - 8.0)).abs() < 1e-3);
+        assert!(d.score > 0.9);
+    }
+}

@@ -1,0 +1,205 @@
+//! Analytical Arm CPU cost model — projects layer latencies for the
+//! paper's target platforms (we have no Arm hardware; DESIGN.md §2).
+//!
+//! Per conv layer the model computes compute-bound and memory-bound times
+//! and takes the max (simple roofline):
+//!
+//! * FP32:  `t = MACs / (fp32_macs_per_cycle · f · cores·eff)`
+//! * INT8:  `t = MACs / (int8_macs_per_cycle · f · cores·eff)`
+//! * bitserial: word-ops = `rows · cout · ⌈k/64⌉ · w_bits · a_bits`
+//!   each word-op = AND + CNT + accumulate on the Neon pipe;
+//!   `t = word_ops / (bitops_per_cycle · f · cores·eff)`
+//!   plus the im2col+quantize pass: `rows · k` byte ops on the scalar pipe.
+//!
+//! Constants are derived from published microarchitecture numbers (see
+//! [`params`]) and sanity-checked against the paper's measured ratios
+//! (ResNet18 on A53: 2.9× @2A2W, 4.4× @1A1W vs FP32 — §V).
+
+pub mod params;
+
+use crate::dlrt::graph::{Graph, Op, QCfg};
+pub use params::{cpu_by_name, CpuParams, CORTEX_A53, CORTEX_A57, CORTEX_A72,
+                 JETSON_NANO_GPU};
+
+/// Which engine a layer runs on, for costing purposes.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum EngineKind {
+    Fp32,
+    Int8,
+    Bitserial { w_bits: u8, a_bits: u8 },
+}
+
+/// Cost of one conv layer on `cpu`, in seconds.
+pub fn conv_cost_s(
+    cpu: &CpuParams,
+    rows: usize,   // N*OH*OW output pixels
+    k: usize,      // patch = kh*kw*cin
+    cout: usize,
+    engine: EngineKind,
+    threads: usize,
+) -> f64 {
+    let eff_cores = effective_cores(cpu, threads);
+    let hz = cpu.freq_ghz * 1e9;
+    let macs = (rows * k * cout) as f64;
+    let compute = match engine {
+        EngineKind::Fp32 => macs / (cpu.fp32_macs_per_cycle * hz * eff_cores),
+        EngineKind::Int8 => {
+            let gemm = macs / (cpu.int8_macs_per_cycle * hz * eff_cores);
+            // quantize pass over the patch matrix
+            let quant = (rows * k) as f64 / (cpu.bytes_per_cycle_scalar * hz * eff_cores);
+            gemm + quant
+        }
+        EngineKind::Bitserial { w_bits, a_bits } => {
+            let words = k.div_ceil(64) as f64;
+            let word_ops = rows as f64 * cout as f64 * words
+                * (w_bits as f64 * a_bits as f64 + 0.5 /* row-sum correction */);
+            let gemm = word_ops / (cpu.bitops_per_cycle * hz * eff_cores);
+            // im2col + quantize + pack: ~3 passes over rows*k bytes
+            let pack = 3.0 * (rows * k) as f64
+                / (cpu.bytes_per_cycle_scalar * hz * eff_cores);
+            gemm + pack
+        }
+    };
+    // memory floor: stream weights + write outputs once
+    let weight_bytes = match engine {
+        EngineKind::Fp32 => (k * cout * 4) as f64,
+        EngineKind::Int8 => (k * cout) as f64,
+        EngineKind::Bitserial { w_bits, .. } => {
+            (k.div_ceil(64) * 8 * w_bits as usize * cout) as f64
+        }
+    };
+    let mem = (weight_bytes + (rows * cout * 4) as f64) / (cpu.mem_gbps * 1e9);
+    compute.max(mem)
+}
+
+fn effective_cores(cpu: &CpuParams, threads: usize) -> f64 {
+    let t = threads.clamp(1, cpu.cores) as f64;
+    // sub-linear thread scaling (shared L2 + DRAM): eff = t^alpha
+    t.powf(cpu.parallel_alpha)
+}
+
+/// Engine per conv implied by its QCfg under the given policy.
+fn engine_of(qcfg: QCfg, force: Option<EngineKind>) -> EngineKind {
+    if let Some(e) = force {
+        return e;
+    }
+    if qcfg.enabled {
+        EngineKind::Bitserial { w_bits: qcfg.w_bits, a_bits: qcfg.a_bits }
+    } else {
+        EngineKind::Fp32
+    }
+}
+
+/// Whole-graph latency projection in milliseconds.
+///
+/// `force`: cost every conv on one engine (baseline projections); `None`
+/// follows the graph's mixed-precision QCfg (FP32 layers stay FP32).
+/// Non-conv ops are costed as one memory pass over their output.
+pub fn graph_latency_ms(
+    g: &Graph,
+    cpu: &CpuParams,
+    force: Option<EngineKind>,
+    threads: usize,
+) -> anyhow::Result<f64> {
+    let shapes = g.infer_shapes()?;
+    let mut total = 0.0f64;
+    for n in &g.nodes {
+        match &n.op {
+            Op::Conv2d { kernel, cin, cout, qcfg, .. } => {
+                let os = &shapes[&n.output];
+                let rows = os[0] * os[1] * os[2];
+                let k = kernel[0] * kernel[1] * cin;
+                total += conv_cost_s(cpu, rows, k, *cout, engine_of(*qcfg, force), threads);
+            }
+            _ => {
+                let numel: usize = shapes[&n.output].iter().product();
+                total += (numel * 4) as f64 / (cpu.mem_gbps * 1e9);
+            }
+        }
+    }
+    Ok(total * 1e3)
+}
+
+/// GPU projection for the paper's Jetson Nano bar (Fig. 7): a flat
+/// utilization fraction of peak FMA throughput + a fixed launch overhead.
+pub fn gpu_latency_ms(g: &Graph, gpu: &params::GpuParams) -> anyhow::Result<f64> {
+    let macs = g.conv_macs()? as f64;
+    Ok((macs / (gpu.peak_mac_per_s * gpu.utilization) + gpu.overhead_s) * 1e3)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dlrt::graph::QCfg;
+    use crate::models::build_resnet;
+
+    #[test]
+    fn bitserial_speedup_matches_paper_band_a53() {
+        // Paper §V: ResNet18 on Cortex-A53, 4 threads: 2.9x @ 2-bit and
+        // 4.4x @ 1-bit over the optimized FP32 baseline. Like the paper we
+        // keep the stem FP32 (mixed precision); accept a generous band —
+        // the claim being reproduced is "2-3x at 2 bits, 4-6x at 1 bit,
+        // 1-bit > 2-bit" (DESIGN.md §6, §V row).
+        let g2 = build_resnet(18, 1000, 224, 1.0, QCfg::new(2, 2), 0);
+        let g1 = build_resnet(18, 1000, 224, 1.0, QCfg::new(1, 1), 0);
+        let fp32 = graph_latency_ms(&g2, &CORTEX_A53, Some(EngineKind::Fp32), 4).unwrap();
+        let b2 = graph_latency_ms(&g2, &CORTEX_A53, None, 4).unwrap();
+        let b1 = graph_latency_ms(&g1, &CORTEX_A53, None, 4).unwrap();
+        let s2 = fp32 / b2;
+        let s1 = fp32 / b1;
+        assert!((2.0..4.0).contains(&s2), "2-bit speedup {s2:.2} (paper 2.9)");
+        assert!((3.2..6.5).contains(&s1), "1-bit speedup {s1:.2} (paper 4.4)");
+        assert!(s1 > s2);
+    }
+
+    #[test]
+    fn absolute_fp32_latency_plausible_a72() {
+        // Public ResNet18/224 FP32 benchmarks on RPi 4B land in the few-
+        // hundred-ms band; the model should project inside [80, 900] ms.
+        let g = build_resnet(18, 1000, 224, 1.0, QCfg::FP32, 0);
+        let ms = graph_latency_ms(&g, &CORTEX_A72, Some(EngineKind::Fp32), 4).unwrap();
+        assert!((80.0..900.0).contains(&ms), "A72 fp32 projection {ms:.1} ms");
+    }
+
+    #[test]
+    fn a72_faster_than_a53() {
+        let g = build_resnet(18, 1000, 224, 1.0, QCfg::new(2, 2), 0);
+        let a53 = graph_latency_ms(&g, &CORTEX_A53, None, 4).unwrap();
+        let a72 = graph_latency_ms(&g, &CORTEX_A72, None, 4).unwrap();
+        assert!(a72 < a53);
+    }
+
+    #[test]
+    fn int8_between_fp32_and_2bit() {
+        let g = build_resnet(18, 1000, 224, 1.0, QCfg::new(2, 2), 0);
+        let fp32 = graph_latency_ms(&g, &CORTEX_A72, Some(EngineKind::Fp32), 4).unwrap();
+        let int8 = graph_latency_ms(&g, &CORTEX_A72, Some(EngineKind::Int8), 4).unwrap();
+        let b2 = graph_latency_ms(
+            &g, &CORTEX_A72, Some(EngineKind::Bitserial { w_bits: 2, a_bits: 2 }), 4,
+        ).unwrap();
+        assert!(int8 < fp32, "{int8} !< {fp32}");
+        assert!(b2 < int8, "{b2} !< {int8}");
+    }
+
+    #[test]
+    fn threads_scale_sublinearly() {
+        let g = build_resnet(18, 1000, 224, 1.0, QCfg::FP32, 0);
+        let t1 = graph_latency_ms(&g, &CORTEX_A53, Some(EngineKind::Fp32), 1).unwrap();
+        let t4 = graph_latency_ms(&g, &CORTEX_A53, Some(EngineKind::Fp32), 4).unwrap();
+        let speedup = t1 / t4;
+        assert!(speedup > 2.0 && speedup < 4.0, "4-thread speedup {speedup:.2}");
+    }
+
+    #[test]
+    fn dlrt_approaches_gpu_latency_on_nano() {
+        // Fig. 7's headline: "DLRT is only ~50% slower than the embedded
+        // GPU". Require the projection to land in the same ballpark
+        // (0.5x–3x of the GPU bar).
+        let g = build_resnet(18, 1000, 224, 1.0, QCfg::new(2, 2), 0);
+        let gpu = gpu_latency_ms(&g, &JETSON_NANO_GPU).unwrap();
+        let b2 = graph_latency_ms(&g, &CORTEX_A57, None, 4).unwrap();
+        let ratio = b2 / gpu;
+        assert!((0.5..3.0).contains(&ratio),
+                "DLRT/GPU ratio {ratio:.2} outside the paper's ballpark");
+    }
+}

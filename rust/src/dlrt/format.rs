@@ -1,0 +1,392 @@
+//! `.dlrt` — the deployable model file (paper §VI: Deeplite Compiler output).
+//!
+//! Layout (little-endian):
+//!
+//! ```text
+//!   bytes 0..4    magic  b"DLRT"
+//!   bytes 4..8    version u32 (currently 1)
+//!   bytes 8..16   header length u64
+//!   header        JSON: graph topology + per-layer engine records whose
+//!                 blob fields are {offset, len} references into the payload
+//!   payload       raw blobs, 8-byte aligned: u64 packed planes, f32
+//!                 scales/biases/weights, i8 codes
+//! ```
+//!
+//! The header is JSON (not a packed struct) so `dlrt inspect` can dump it
+//! and version skew stays debuggable; all bulk data lives in the payload.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::dlrt::graph::{Graph, Node, Op, QCfg};
+use crate::dlrt::tensor::Packed;
+use crate::exec::{CompiledConv, CompiledDense, CompiledModel, ConvKernel};
+use crate::util::json::{arr, num, obj, s, Json};
+
+pub const MAGIC: &[u8; 4] = b"DLRT";
+pub const VERSION: u32 = 1;
+
+// ---------------------------------------------------------------------------
+// payload writer / reader
+// ---------------------------------------------------------------------------
+
+#[derive(Default)]
+struct Payload {
+    bytes: Vec<u8>,
+}
+
+impl Payload {
+    fn align8(&mut self) {
+        while self.bytes.len() % 8 != 0 {
+            self.bytes.push(0);
+        }
+    }
+
+    fn put_f32(&mut self, data: &[f32]) -> Json {
+        self.align8();
+        let off = self.bytes.len();
+        for v in data {
+            self.bytes.extend_from_slice(&v.to_le_bytes());
+        }
+        obj(vec![("offset", num(off as f64)), ("len", num(data.len() as f64))])
+    }
+
+    fn put_u64(&mut self, data: &[u64]) -> Json {
+        self.align8();
+        let off = self.bytes.len();
+        for v in data {
+            self.bytes.extend_from_slice(&v.to_le_bytes());
+        }
+        obj(vec![("offset", num(off as f64)), ("len", num(data.len() as f64))])
+    }
+
+    fn put_i8(&mut self, data: &[i8]) -> Json {
+        self.align8();
+        let off = self.bytes.len();
+        self.bytes.extend(data.iter().map(|&v| v as u8));
+        obj(vec![("offset", num(off as f64)), ("len", num(data.len() as f64))])
+    }
+}
+
+fn get_f32(payload: &[u8], r: &Json) -> Result<Vec<f32>> {
+    let off = r.get("offset")?.usize()?;
+    let len = r.get("len")?.usize()?;
+    let bytes = payload.get(off..off + 4 * len).ok_or_else(|| anyhow!("f32 blob oob"))?;
+    Ok(bytes.chunks_exact(4).map(|b| f32::from_le_bytes([b[0], b[1], b[2], b[3]])).collect())
+}
+
+fn get_u64(payload: &[u8], r: &Json) -> Result<Vec<u64>> {
+    let off = r.get("offset")?.usize()?;
+    let len = r.get("len")?.usize()?;
+    let bytes = payload.get(off..off + 8 * len).ok_or_else(|| anyhow!("u64 blob oob"))?;
+    Ok(bytes
+        .chunks_exact(8)
+        .map(|b| u64::from_le_bytes([b[0], b[1], b[2], b[3], b[4], b[5], b[6], b[7]]))
+        .collect())
+}
+
+fn get_i8(payload: &[u8], r: &Json) -> Result<Vec<i8>> {
+    let off = r.get("offset")?.usize()?;
+    let len = r.get("len")?.usize()?;
+    let bytes = payload.get(off..off + len).ok_or_else(|| anyhow!("i8 blob oob"))?;
+    Ok(bytes.iter().map(|&b| b as i8).collect())
+}
+
+// ---------------------------------------------------------------------------
+// graph topology <-> json
+// ---------------------------------------------------------------------------
+
+fn usize2_json(v: [usize; 2]) -> Json {
+    arr(vec![num(v[0] as f64), num(v[1] as f64)])
+}
+
+fn node_to_json(n: &Node) -> Json {
+    let mut fields = vec![
+        ("op", s(n.op.name())),
+        ("name", s(&n.name)),
+        ("inputs", arr(n.inputs.iter().map(|i| s(i)).collect())),
+        ("output", s(&n.output)),
+    ];
+    match &n.op {
+        Op::Conv2d { stride, padding, kernel, cin, cout, qcfg } => {
+            fields.push(("stride", usize2_json(*stride)));
+            fields.push(("padding", usize2_json(*padding)));
+            fields.push(("kernel", usize2_json(*kernel)));
+            fields.push(("cin", num(*cin as f64)));
+            fields.push(("cout", num(*cout as f64)));
+            fields.push(("qcfg", obj(vec![
+                ("w_bits", num(qcfg.w_bits as f64)),
+                ("a_bits", num(qcfg.a_bits as f64)),
+                ("enabled", Json::Bool(qcfg.enabled)),
+            ])));
+        }
+        Op::Dense { cin, cout } => {
+            fields.push(("cin", num(*cin as f64)));
+            fields.push(("cout", num(*cout as f64)));
+        }
+        Op::MaxPool2d { kernel, stride, padding } => {
+            fields.push(("kernel", usize2_json(*kernel)));
+            fields.push(("stride", usize2_json(*stride)));
+            fields.push(("padding", usize2_json(*padding)));
+        }
+        _ => {}
+    }
+    obj(fields)
+}
+
+fn node_from_json(v: &Json) -> Result<Node> {
+    let pair = |key: &str| -> Result<[usize; 2]> {
+        let p = v.get(key)?.usize_vec()?;
+        Ok([p[0], p[1]])
+    };
+    let op = match v.get("op")?.str()? {
+        "conv2d" => {
+            let qj = v.get("qcfg")?;
+            let qcfg = if qj.get("enabled")?.bool()? {
+                QCfg::new(qj.get("a_bits")?.usize()? as u8, qj.get("w_bits")?.usize()? as u8)
+            } else {
+                QCfg::FP32
+            };
+            Op::Conv2d {
+                stride: pair("stride")?,
+                padding: pair("padding")?,
+                kernel: pair("kernel")?,
+                cin: v.get("cin")?.usize()?,
+                cout: v.get("cout")?.usize()?,
+                qcfg,
+            }
+        }
+        "dense" => Op::Dense { cin: v.get("cin")?.usize()?, cout: v.get("cout")?.usize()? },
+        "maxpool2d" => Op::MaxPool2d {
+            kernel: pair("kernel")?,
+            stride: pair("stride")?,
+            padding: pair("padding")?,
+        },
+        "global_avg_pool" => Op::GlobalAvgPool,
+        "add" => Op::Add,
+        "concat" => Op::Concat,
+        "upsample2x" => Op::Upsample2x,
+        "relu" => Op::Relu,
+        "relu6" => Op::Relu6,
+        "silu" => Op::Silu,
+        "leaky_relu" => Op::LeakyRelu,
+        "sigmoid" => Op::Sigmoid,
+        "flatten" => Op::Flatten,
+        other => bail!("unknown op {other:?}"),
+    };
+    Ok(Node {
+        op,
+        name: v.get("name")?.str()?.to_string(),
+        inputs: v.get("inputs")?.arr()?.iter().map(|i| Ok(i.str()?.to_string()))
+            .collect::<Result<_>>()?,
+        output: v.get("output")?.str()?.to_string(),
+    })
+}
+
+pub fn graph_to_json(g: &Graph) -> Json {
+    obj(vec![
+        ("name", s(&g.name)),
+        ("input", obj(vec![
+            ("name", s(&g.input_name)),
+            ("shape", arr(g.input_shape.iter().map(|&d| num(d as f64)).collect())),
+        ])),
+        ("outputs", arr(g.outputs.iter().map(|o| s(o)).collect())),
+        ("nodes", arr(g.nodes.iter().map(node_to_json).collect())),
+    ])
+}
+
+pub fn graph_from_json(v: &Json) -> Result<Graph> {
+    let input = v.get("input")?;
+    let shape = input.get("shape")?.usize_vec()?;
+    let g = Graph {
+        name: v.get("name")?.str()?.to_string(),
+        input_name: input.get("name")?.str()?.to_string(),
+        input_shape: [shape[0], shape[1], shape[2], shape[3]],
+        nodes: v.get("nodes")?.arr()?.iter().map(node_from_json).collect::<Result<_>>()?,
+        outputs: v.get("outputs")?.arr()?.iter().map(|o| Ok(o.str()?.to_string()))
+            .collect::<Result<_>>()?,
+        weights: BTreeMap::new(),
+    };
+    g.validate_topology()?;
+    Ok(g)
+}
+
+// ---------------------------------------------------------------------------
+// save / load
+// ---------------------------------------------------------------------------
+
+pub fn save(model: &CompiledModel, path: &Path) -> Result<()> {
+    let mut payload = Payload::default();
+    let mut convs = BTreeMap::new();
+    for (name, c) in &model.convs {
+        let mut fields = vec![
+            ("engine", s(c.kernel.engine_name())),
+            ("scale", payload.put_f32(&c.scale)),
+            ("bias", payload.put_f32(&c.bias)),
+        ];
+        match &c.kernel {
+            ConvKernel::Bitserial { packed, s_w, s_a, w_bits, a_bits } => {
+                fields.push(("rows", num(packed.rows as f64)));
+                fields.push(("k", num(packed.k as f64)));
+                fields.push(("bits", num(packed.bits as f64)));
+                fields.push(("planes", payload.put_u64(&packed.data)));
+                fields.push(("s_w", num(*s_w as f64)));
+                fields.push(("s_a", num(*s_a as f64)));
+                fields.push(("w_bits", num(*w_bits as f64)));
+                fields.push(("a_bits", num(*a_bits as f64)));
+            }
+            ConvKernel::Fp32 { wt } => {
+                fields.push(("wt", payload.put_f32(wt)));
+            }
+            ConvKernel::Int8 { codes, s_w, s_a } => {
+                fields.push(("codes", payload.put_i8(codes)));
+                fields.push(("s_w", num(*s_w as f64)));
+                fields.push(("s_a", num(*s_a as f64)));
+            }
+        }
+        convs.insert(name.clone(), obj(fields));
+    }
+    let mut denses = BTreeMap::new();
+    for (name, d) in &model.denses {
+        denses.insert(name.clone(),
+                      obj(vec![("w", payload.put_f32(&d.w)), ("b", payload.put_f32(&d.b))]));
+    }
+    let header = obj(vec![
+        ("graph", graph_to_json(&model.graph)),
+        ("convs", Json::Obj(convs)),
+        ("denses", Json::Obj(denses)),
+    ])
+    .to_string();
+
+    let mut out = Vec::with_capacity(16 + header.len() + payload.bytes.len());
+    out.extend_from_slice(MAGIC);
+    out.extend_from_slice(&VERSION.to_le_bytes());
+    out.extend_from_slice(&(header.len() as u64).to_le_bytes());
+    out.extend_from_slice(header.as_bytes());
+    out.extend_from_slice(&payload.bytes);
+    std::fs::write(path, out).with_context(|| format!("writing {}", path.display()))?;
+    Ok(())
+}
+
+pub fn load(path: &Path) -> Result<CompiledModel> {
+    let bytes = std::fs::read(path).with_context(|| format!("reading {}", path.display()))?;
+    if bytes.len() < 16 || &bytes[0..4] != MAGIC {
+        bail!("{}: not a .dlrt file", path.display());
+    }
+    let version = u32::from_le_bytes([bytes[4], bytes[5], bytes[6], bytes[7]]);
+    if version != VERSION {
+        bail!("unsupported .dlrt version {version}");
+    }
+    let hlen = u64::from_le_bytes(bytes[8..16].try_into().unwrap()) as usize;
+    let header_bytes = bytes.get(16..16 + hlen).ok_or_else(|| anyhow!("truncated header"))?;
+    let header = Json::parse(std::str::from_utf8(header_bytes)?)?;
+    // payload starts at the first 8-byte boundary the writer aligned to,
+    // relative to payload start (offsets are payload-relative)
+    let payload = &bytes[16 + hlen..];
+
+    let graph = graph_from_json(header.get("graph")?)?;
+    let mut model =
+        CompiledModel { graph, convs: BTreeMap::new(), denses: BTreeMap::new() };
+
+    if let Json::Obj(convs) = header.get("convs")? {
+        for (name, c) in convs {
+            let scale = get_f32(payload, c.get("scale")?)?;
+            let bias = get_f32(payload, c.get("bias")?)?;
+            let kernel = match c.get("engine")?.str()? {
+                "bitserial" => {
+                    let rows = c.get("rows")?.usize()?;
+                    let k = c.get("k")?.usize()?;
+                    let bits = c.get("bits")?.usize()?;
+                    let data = get_u64(payload, c.get("planes")?)?;
+                    let wpr = Packed::words_for(k);
+                    if data.len() != rows * bits * wpr {
+                        bail!("{name}: packed plane size mismatch");
+                    }
+                    ConvKernel::Bitserial {
+                        packed: Packed { rows, k, bits, words_per_row: wpr, data },
+                        s_w: c.get("s_w")?.f32()?,
+                        s_a: c.get("s_a")?.f32()?,
+                        w_bits: c.get("w_bits")?.usize()? as u8,
+                        a_bits: c.get("a_bits")?.usize()? as u8,
+                    }
+                }
+                "fp32" => ConvKernel::Fp32 { wt: get_f32(payload, c.get("wt")?)? },
+                "int8" => ConvKernel::Int8 {
+                    codes: get_i8(payload, c.get("codes")?)?,
+                    s_w: c.get("s_w")?.f32()?,
+                    s_a: c.get("s_a")?.f32()?,
+                },
+                other => bail!("unknown engine {other:?}"),
+            };
+            model.convs.insert(name.clone(), CompiledConv { kernel, scale, bias });
+        }
+    }
+    if let Json::Obj(denses) = header.get("denses")? {
+        for (name, d) in denses {
+            model.denses.insert(name.clone(), CompiledDense {
+                w: get_f32(payload, d.get("w")?)?,
+                b: get_f32(payload, d.get("b")?)?,
+            });
+        }
+    }
+    Ok(model)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compiler::{compile_graph, EngineChoice};
+    use crate::dlrt::tensor::Tensor;
+    use crate::exec::Executor;
+    use crate::models::tiny_test_graph;
+
+    fn tmp(name: &str) -> std::path::PathBuf {
+        std::env::temp_dir().join(format!("dlrt_test_{}_{name}", std::process::id()))
+    }
+
+    #[test]
+    fn save_load_roundtrip_preserves_outputs() {
+        for engine in [EngineChoice::Auto, EngineChoice::ForceFp32, EngineChoice::ForceInt8] {
+            let g = tiny_test_graph(false);
+            let m = compile_graph(&g, engine).unwrap();
+            let path = tmp(&format!("{engine:?}.dlrt"));
+            save(&m, &path).unwrap();
+            let m2 = load(&path).unwrap();
+            std::fs::remove_file(&path).ok();
+            assert_eq!(m.engine_summary(), m2.engine_summary());
+            let mut ex = Executor::new(1);
+            let mut x = Tensor::zeros(vec![1, 8, 8, 3]);
+            for (i, v) in x.data.iter_mut().enumerate() {
+                *v = (i % 5) as f32 * 0.1;
+            }
+            let y1 = ex.run(&m, &x).unwrap();
+            let y2 = ex.run(&m2, &x).unwrap();
+            assert_eq!(y1[0].data, y2[0].data, "{engine:?}");
+        }
+    }
+
+    #[test]
+    fn rejects_corrupt_files() {
+        let path = tmp("corrupt.dlrt");
+        std::fs::write(&path, b"NOPE").unwrap();
+        assert!(load(&path).is_err());
+        std::fs::write(&path, b"DLRT\x02\x00\x00\x00\x00\x00\x00\x00\x00\x00\x00\x00").unwrap();
+        assert!(load(&path).is_err()); // bad version
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn graph_json_roundtrip() {
+        let g = tiny_test_graph(false);
+        let j = graph_to_json(&g);
+        let g2 = graph_from_json(&j).unwrap();
+        assert_eq!(g.name, g2.name);
+        assert_eq!(g.nodes.len(), g2.nodes.len());
+        for (a, b) in g.nodes.iter().zip(&g2.nodes) {
+            assert_eq!(a.op, b.op, "{}", a.name);
+            assert_eq!(a.inputs, b.inputs);
+        }
+    }
+}

@@ -1,0 +1,365 @@
+//! Graph IR — mirrors `python/compile/graph.py` op-for-op.
+
+use std::collections::{BTreeMap, BTreeSet};
+
+use anyhow::{bail, Result};
+
+/// Per-conv quantization config (mixed-precision knob; paper §VII.D).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct QCfg {
+    pub w_bits: u8,
+    pub a_bits: u8,
+    pub enabled: bool,
+}
+
+impl QCfg {
+    pub const FP32: QCfg = QCfg { w_bits: 0, a_bits: 0, enabled: false };
+
+    pub fn new(a_bits: u8, w_bits: u8) -> QCfg {
+        QCfg { w_bits, a_bits, enabled: true }
+    }
+
+    pub fn tag(&self) -> String {
+        if self.enabled {
+            format!("{}A{}W", self.a_bits, self.w_bits)
+        } else {
+            "FP32".to_string()
+        }
+    }
+}
+
+/// Signed clipping limits for a b-bit code (paper §IV): (Q_P, Q_N).
+pub fn qp_qn(bits: u8, signed: bool) -> (i32, i32) {
+    assert!(bits >= 1);
+    if signed {
+        ((1 << (bits - 1)) - 1, 1 << (bits - 1))
+    } else {
+        ((1 << bits) - 1, 0)
+    }
+}
+
+#[derive(Clone, Debug, PartialEq)]
+pub enum Op {
+    Conv2d {
+        stride: [usize; 2],
+        padding: [usize; 2],
+        kernel: [usize; 2],
+        cin: usize,
+        cout: usize,
+        qcfg: QCfg,
+    },
+    Dense { cin: usize, cout: usize },
+    MaxPool2d { kernel: [usize; 2], stride: [usize; 2], padding: [usize; 2] },
+    GlobalAvgPool,
+    Add,
+    Concat,
+    Upsample2x,
+    Relu,
+    Relu6,
+    Silu,
+    LeakyRelu,
+    Sigmoid,
+    Flatten,
+}
+
+impl Op {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Op::Conv2d { .. } => "conv2d",
+            Op::Dense { .. } => "dense",
+            Op::MaxPool2d { .. } => "maxpool2d",
+            Op::GlobalAvgPool => "global_avg_pool",
+            Op::Add => "add",
+            Op::Concat => "concat",
+            Op::Upsample2x => "upsample2x",
+            Op::Relu => "relu",
+            Op::Relu6 => "relu6",
+            Op::Silu => "silu",
+            Op::LeakyRelu => "leaky_relu",
+            Op::Sigmoid => "sigmoid",
+            Op::Flatten => "flatten",
+        }
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct Node {
+    pub op: Op,
+    pub name: String,
+    pub inputs: Vec<String>,
+    pub output: String,
+}
+
+/// Weight payload attached to conv/dense nodes by the compiler.
+#[derive(Clone, Debug, Default)]
+pub struct NodeWeights {
+    /// Raw f32 weights (conv: HWIO, dense: IN×OUT).
+    pub w: Vec<f32>,
+    /// Per-channel folded-BN scale (conv) — empty for dense.
+    pub scale: Vec<f32>,
+    /// Per-channel bias (conv folded-BN beta / dense bias).
+    pub bias: Vec<f32>,
+    /// Quantization scales (set when qcfg.enabled).
+    pub s_w: f32,
+    pub s_a: f32,
+}
+
+#[derive(Clone, Debug)]
+pub struct Graph {
+    pub name: String,
+    pub input_name: String,
+    pub input_shape: [usize; 4], // NHWC
+    pub nodes: Vec<Node>,
+    pub outputs: Vec<String>,
+    /// node name → weights (convs and denses only)
+    pub weights: BTreeMap<String, NodeWeights>,
+}
+
+impl Graph {
+    /// Topology checks only (used for models loaded from `.dlrt`, whose
+    /// weights live in the compiled kernels, not on the graph).
+    pub fn validate_topology(&self) -> Result<()> {
+        let mut avail: BTreeSet<&str> = BTreeSet::new();
+        avail.insert(&self.input_name);
+        for n in &self.nodes {
+            for i in &n.inputs {
+                if !avail.contains(i.as_str()) {
+                    bail!("node {} reads undefined tensor {i:?}", n.name);
+                }
+            }
+            if !avail.insert(&n.output) {
+                bail!("tensor {:?} defined twice", n.output);
+            }
+        }
+        if self.outputs.is_empty() {
+            bail!("graph has no outputs");
+        }
+        for o in &self.outputs {
+            if !avail.contains(o.as_str()) {
+                bail!("graph output {o:?} undefined");
+            }
+        }
+        Ok(())
+    }
+
+    /// Topology + weight-presence checks (for freshly built/parsed graphs).
+    pub fn validate(&self) -> Result<()> {
+        self.validate_topology()?;
+        for n in &self.nodes {
+            if matches!(n.op, Op::Conv2d { .. } | Op::Dense { .. })
+                && !self.weights.contains_key(&n.name)
+            {
+                bail!("node {} has no weights", n.name);
+            }
+        }
+        Ok(())
+    }
+
+    pub fn conv_nodes(&self) -> impl Iterator<Item = &Node> {
+        self.nodes.iter().filter(|n| matches!(n.op, Op::Conv2d { .. }))
+    }
+
+    /// Infer the shape of every tensor from the input shape.
+    pub fn infer_shapes(&self) -> Result<BTreeMap<String, Vec<usize>>> {
+        let mut shapes: BTreeMap<String, Vec<usize>> = BTreeMap::new();
+        shapes.insert(self.input_name.clone(), self.input_shape.to_vec());
+        for n in &self.nodes {
+            let ins: Vec<&Vec<usize>> = n
+                .inputs
+                .iter()
+                .map(|i| shapes.get(i).ok_or_else(|| anyhow::anyhow!("missing {i}")))
+                .collect::<Result<_>>()?;
+            let out = infer_node_shape(&n.op, &ins, &n.name)?;
+            shapes.insert(n.output.clone(), out);
+        }
+        Ok(shapes)
+    }
+
+    /// Total conv MACs for one forward pass (used by the cost model).
+    pub fn conv_macs(&self) -> Result<u64> {
+        let shapes = self.infer_shapes()?;
+        let mut total = 0u64;
+        for n in self.conv_nodes() {
+            if let Op::Conv2d { kernel, cin, cout, .. } = n.op {
+                let os = &shapes[&n.output];
+                total += (os[0] * os[1] * os[2] * cout * kernel[0] * kernel[1] * cin) as u64;
+            }
+        }
+        Ok(total)
+    }
+}
+
+pub fn conv_out_hw(
+    h: usize,
+    w: usize,
+    kernel: [usize; 2],
+    stride: [usize; 2],
+    padding: [usize; 2],
+) -> (usize, usize) {
+    assert!(
+        h + 2 * padding[0] >= kernel[0] && w + 2 * padding[1] >= kernel[1],
+        "window {kernel:?} larger than padded input {h}x{w} (pad {padding:?}) — \
+         input resolution too small for this architecture"
+    );
+    (
+        (h + 2 * padding[0] - kernel[0]) / stride[0] + 1,
+        (w + 2 * padding[1] - kernel[1]) / stride[1] + 1,
+    )
+}
+
+fn infer_node_shape(op: &Op, ins: &[&Vec<usize>], name: &str) -> Result<Vec<usize>> {
+    let r4 = |s: &Vec<usize>| -> Result<[usize; 4]> {
+        if s.len() != 4 {
+            bail!("{name}: expected rank-4, got {s:?}");
+        }
+        Ok([s[0], s[1], s[2], s[3]])
+    };
+    Ok(match op {
+        Op::Conv2d { stride, padding, kernel, cin, cout, .. } => {
+            let [n, h, w, c] = r4(ins[0])?;
+            if c != *cin {
+                bail!("{name}: cin {cin} != input channels {c}");
+            }
+            let (oh, ow) = conv_out_hw(h, w, *kernel, *stride, *padding);
+            vec![n, oh, ow, *cout]
+        }
+        Op::Dense { cin, cout } => {
+            if ins[0].last() != Some(cin) {
+                bail!("{name}: dense cin mismatch {:?} vs {cin}", ins[0]);
+            }
+            let mut s = ins[0].clone();
+            *s.last_mut().unwrap() = *cout;
+            s
+        }
+        Op::MaxPool2d { kernel, stride, padding } => {
+            let [n, h, w, c] = r4(ins[0])?;
+            let (oh, ow) = conv_out_hw(h, w, *kernel, *stride, *padding);
+            vec![n, oh, ow, c]
+        }
+        Op::GlobalAvgPool => {
+            let [n, _, _, c] = r4(ins[0])?;
+            vec![n, c]
+        }
+        Op::Add => {
+            if ins[0] != ins[1] {
+                bail!("{name}: add shape mismatch {:?} vs {:?}", ins[0], ins[1]);
+            }
+            ins[0].clone()
+        }
+        Op::Concat => {
+            let [n, h, w, _] = r4(ins[0])?;
+            let mut c = 0;
+            for s in ins {
+                let [n2, h2, w2, c2] = r4(s)?;
+                if (n2, h2, w2) != (n, h, w) {
+                    bail!("{name}: concat spatial mismatch");
+                }
+                c += c2;
+            }
+            vec![n, h, w, c]
+        }
+        Op::Upsample2x => {
+            let [n, h, w, c] = r4(ins[0])?;
+            vec![n, 2 * h, 2 * w, c]
+        }
+        Op::Flatten => {
+            let numel: usize = ins[0][1..].iter().product();
+            vec![ins[0][0], numel]
+        }
+        Op::Relu | Op::Relu6 | Op::Silu | Op::LeakyRelu | Op::Sigmoid => ins[0].clone(),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny() -> Graph {
+        let mut g = Graph {
+            name: "t".into(),
+            input_name: "input".into(),
+            input_shape: [1, 8, 8, 3],
+            nodes: vec![
+                Node {
+                    op: Op::Conv2d {
+                        stride: [2, 2],
+                        padding: [1, 1],
+                        kernel: [3, 3],
+                        cin: 3,
+                        cout: 8,
+                        qcfg: QCfg::new(2, 2),
+                    },
+                    name: "c1".into(),
+                    inputs: vec!["input".into()],
+                    output: "c1.out".into(),
+                },
+                Node {
+                    op: Op::Relu,
+                    name: "r1".into(),
+                    inputs: vec!["c1.out".into()],
+                    output: "r1.out".into(),
+                },
+                Node {
+                    op: Op::GlobalAvgPool,
+                    name: "gap".into(),
+                    inputs: vec!["r1.out".into()],
+                    output: "gap.out".into(),
+                },
+            ],
+            outputs: vec!["gap.out".into()],
+            weights: BTreeMap::new(),
+        };
+        g.weights.insert(
+            "c1".into(),
+            NodeWeights {
+                w: vec![0.0; 3 * 3 * 3 * 8],
+                scale: vec![1.0; 8],
+                bias: vec![0.0; 8],
+                s_w: 0.1,
+                s_a: 0.1,
+            },
+        );
+        g
+    }
+
+    #[test]
+    fn validates_and_infers() {
+        let g = tiny();
+        g.validate().unwrap();
+        let shapes = g.infer_shapes().unwrap();
+        assert_eq!(shapes["c1.out"], vec![1, 4, 4, 8]);
+        assert_eq!(shapes["gap.out"], vec![1, 8]);
+        assert_eq!(g.conv_macs().unwrap(), (4 * 4 * 8 * 3 * 3 * 3) as u64);
+    }
+
+    #[test]
+    fn rejects_undefined_input() {
+        let mut g = tiny();
+        g.nodes[1].inputs[0] = "nope".into();
+        assert!(g.validate().is_err());
+    }
+
+    #[test]
+    fn rejects_missing_weights() {
+        let mut g = tiny();
+        g.weights.clear();
+        assert!(g.validate().is_err());
+    }
+
+    #[test]
+    fn qcfg_tags_and_limits() {
+        assert_eq!(QCfg::new(2, 2).tag(), "2A2W");
+        assert_eq!(QCfg::new(1, 2).tag(), "1A2W");
+        assert_eq!(QCfg::FP32.tag(), "FP32");
+        assert_eq!(qp_qn(2, true), (1, 2));
+        assert_eq!(qp_qn(1, true), (0, 1));
+        assert_eq!(qp_qn(2, false), (3, 0));
+        assert_eq!(qp_qn(8, true), (127, 128));
+    }
+
+    #[test]
+    fn conv_out_dims() {
+        assert_eq!(conv_out_hw(224, 224, [7, 7], [2, 2], [3, 3]), (112, 112));
+        assert_eq!(conv_out_hw(8, 8, [3, 3], [1, 1], [0, 0]), (6, 6));
+    }
+}

@@ -1,0 +1,5 @@
+//! Graph IR, tensors, and the `.dlrt` deployable model format.
+
+pub mod format;
+pub mod graph;
+pub mod tensor;

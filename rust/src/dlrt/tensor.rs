@@ -1,0 +1,177 @@
+//! Dense f32 tensor (NHWC activation layout) + packed bitplane storage.
+
+use anyhow::{bail, Result};
+
+/// Dense row-major f32 tensor. Activations use NHWC; conv weights HWIO.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Tensor {
+    pub shape: Vec<usize>,
+    pub data: Vec<f32>,
+}
+
+impl Tensor {
+    pub fn new(shape: Vec<usize>, data: Vec<f32>) -> Result<Tensor> {
+        let n: usize = shape.iter().product();
+        if n != data.len() {
+            bail!("shape {:?} wants {} elems, got {}", shape, n, data.len());
+        }
+        Ok(Tensor { shape, data })
+    }
+
+    pub fn zeros(shape: Vec<usize>) -> Tensor {
+        let n = shape.iter().product();
+        Tensor { shape, data: vec![0.0; n] }
+    }
+
+    pub fn numel(&self) -> usize {
+        self.data.len()
+    }
+
+    /// NHWC accessors (debug/test convenience; hot paths index manually).
+    pub fn nhwc(&self) -> (usize, usize, usize, usize) {
+        assert_eq!(self.shape.len(), 4, "not a rank-4 tensor: {:?}", self.shape);
+        (self.shape[0], self.shape[1], self.shape[2], self.shape[3])
+    }
+
+    pub fn at4(&self, n: usize, h: usize, w: usize, c: usize) -> f32 {
+        let (_, hh, ww, cc) = self.nhwc();
+        self.data[((n * hh + h) * ww + w) * cc + c]
+    }
+
+    /// Max |a-b| over elements; shape must match.
+    pub fn max_abs_diff(&self, other: &Tensor) -> f32 {
+        assert_eq!(self.shape, other.shape);
+        self.data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0, f32::max)
+    }
+}
+
+/// Bitplane-packed matrix: `rows` logical rows of `k` codes, each row stored
+/// as `bits` planes of `words_per_row` u64 words (LSB-first lanes).
+///
+/// This is the deployment layout of the paper's kernels: plane `i` of row
+/// `r` occupies `data[((r * bits) + i) * words_per_row ..][..words_per_row]`,
+/// so the innermost bitserial loop streams contiguous words for all planes
+/// of one row.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Packed {
+    pub rows: usize,
+    pub k: usize,
+    pub bits: usize,
+    pub words_per_row: usize,
+    pub data: Vec<u64>,
+}
+
+impl Packed {
+    pub fn words_for(k: usize) -> usize {
+        k.div_ceil(64)
+    }
+
+    pub fn new_zeroed(rows: usize, k: usize, bits: usize) -> Packed {
+        let wpr = Self::words_for(k);
+        Packed { rows, k, bits, words_per_row: wpr, data: vec![0; rows * bits * wpr] }
+    }
+
+    #[inline]
+    pub fn row_plane(&self, row: usize, plane: usize) -> &[u64] {
+        let base = (row * self.bits + plane) * self.words_per_row;
+        &self.data[base..base + self.words_per_row]
+    }
+
+    #[inline]
+    pub fn row_plane_mut(&mut self, row: usize, plane: usize) -> &mut [u64] {
+        let base = (row * self.bits + plane) * self.words_per_row;
+        &mut self.data[base..base + self.words_per_row]
+    }
+
+    /// Pack unsigned codes (`< 2^bits`) laid out as rows x k.
+    pub fn pack(codes: &[u32], rows: usize, k: usize, bits: usize) -> Packed {
+        assert_eq!(codes.len(), rows * k);
+        let mut p = Packed::new_zeroed(rows, k, bits);
+        for r in 0..rows {
+            for j in 0..k {
+                let v = codes[r * k + j];
+                debug_assert!(v < (1 << bits), "code {v} out of {bits}-bit range");
+                let word = j / 64;
+                let lane = j % 64;
+                for i in 0..bits {
+                    if (v >> i) & 1 == 1 {
+                        p.row_plane_mut(r, i)[word] |= 1u64 << lane;
+                    }
+                }
+            }
+        }
+        p
+    }
+
+    /// Unpack back to codes (tests / inspection).
+    pub fn unpack(&self) -> Vec<u32> {
+        let mut out = vec![0u32; self.rows * self.k];
+        for r in 0..self.rows {
+            for i in 0..self.bits {
+                let plane = self.row_plane(r, i);
+                for j in 0..self.k {
+                    let bit = (plane[j / 64] >> (j % 64)) & 1;
+                    out[r * self.k + j] |= (bit as u32) << i;
+                }
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::{prop, rng::Rng};
+
+    #[test]
+    fn tensor_shape_checks() {
+        assert!(Tensor::new(vec![2, 3], vec![0.0; 6]).is_ok());
+        assert!(Tensor::new(vec![2, 3], vec![0.0; 5]).is_err());
+        let t = Tensor::zeros(vec![1, 2, 2, 3]);
+        assert_eq!(t.numel(), 12);
+        assert_eq!(t.at4(0, 1, 1, 2), 0.0);
+    }
+
+    #[test]
+    fn pack_roundtrip_small() {
+        let codes: Vec<u32> = vec![0, 1, 2, 3, 3, 2, 1, 0];
+        let p = Packed::pack(&codes, 2, 4, 2);
+        assert_eq!(p.unpack(), codes);
+    }
+
+    #[test]
+    fn pack_roundtrip_property() {
+        prop::check(100, |rng, _| {
+            let bits = rng.usize(4) + 1;
+            let rows = rng.usize(6) + 1;
+            let k = rng.usize(200) + 1;
+            let codes: Vec<u32> =
+                (0..rows * k).map(|_| rng.usize(1 << bits) as u32).collect();
+            let p = Packed::pack(&codes, rows, k, bits);
+            prop::ensure(p.unpack() == codes, format!("bits={bits} rows={rows} k={k}"))
+        });
+    }
+
+    #[test]
+    fn plane_layout_is_contiguous_per_row() {
+        let mut rng = Rng::new(7);
+        let k = 130; // 3 words
+        let codes: Vec<u32> = (0..2 * k).map(|_| rng.usize(4) as u32).collect();
+        let p = Packed::pack(&codes, 2, k, 2);
+        assert_eq!(p.words_per_row, 3);
+        assert_eq!(p.data.len(), 2 * 2 * 3);
+        // popcount over planes reproduces code sums
+        let sum_codes: u32 = codes[..k].iter().sum();
+        let s: u32 = (0..2)
+            .map(|i| {
+                p.row_plane(0, i).iter().map(|w| w.count_ones()).sum::<u32>() << i
+            })
+            .sum();
+        assert_eq!(s, sum_codes);
+    }
+}

@@ -1,0 +1,79 @@
+//! Liveness analysis for buffer release during execution.
+//!
+//! The executor drops an intermediate tensor as soon as its last consumer
+//! has run (unless it is a graph output). `use_counts` computes the number
+//! of consumers per tensor; `peak_live_elems` estimates the resulting peak
+//! working set, which the `model_size`/footprint reports use.
+
+use std::collections::BTreeMap;
+
+use crate::dlrt::graph::Graph;
+
+/// tensor name -> number of consuming nodes (graph outputs add one use).
+pub fn use_counts(g: &Graph) -> BTreeMap<&str, usize> {
+    let mut counts: BTreeMap<&str, usize> = BTreeMap::new();
+    for n in &g.nodes {
+        for i in &n.inputs {
+            *counts.entry(i.as_str()).or_insert(0) += 1;
+        }
+    }
+    for o in &g.outputs {
+        *counts.entry(o.as_str()).or_insert(0) += 1;
+    }
+    counts
+}
+
+/// Peak number of live f32 elements across the schedule (input + all
+/// tensors whose consumers haven't all run yet).
+pub fn peak_live_elems(g: &Graph) -> anyhow::Result<usize> {
+    let shapes = g.infer_shapes()?;
+    let numel = |t: &str| -> usize { shapes[t].iter().product() };
+    let mut remaining = use_counts(g);
+    let mut live: BTreeMap<&str, usize> = BTreeMap::new();
+    live.insert(&g.input_name, numel(&g.input_name));
+    let mut peak = live[g.input_name.as_str()];
+    for n in &g.nodes {
+        live.insert(&n.output, numel(&n.output));
+        peak = peak.max(live.values().sum());
+        for i in &n.inputs {
+            if let Some(c) = remaining.get_mut(i.as_str()) {
+                *c -= 1;
+                if *c == 0 && !g.outputs.iter().any(|o| o == i) {
+                    live.remove(i.as_str());
+                }
+            }
+        }
+    }
+    Ok(peak)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::tiny_test_graph;
+
+    #[test]
+    fn counts_match_consumers() {
+        let g = tiny_test_graph(false);
+        let counts = use_counts(&g);
+        // every node input is counted; outputs get +1
+        for n in &g.nodes {
+            for i in &n.inputs {
+                assert!(counts[i.as_str()] >= 1);
+            }
+        }
+        for o in &g.outputs {
+            assert!(counts[o.as_str()] >= 1);
+        }
+    }
+
+    #[test]
+    fn peak_is_bounded_by_total() {
+        let g = tiny_test_graph(false);
+        let shapes = g.infer_shapes().unwrap();
+        let total: usize = shapes.values().map(|s| s.iter().product::<usize>()).sum();
+        let peak = peak_live_elems(&g).unwrap();
+        assert!(peak <= total);
+        assert!(peak > 0);
+    }
+}

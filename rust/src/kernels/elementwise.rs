@@ -1,0 +1,96 @@
+//! Elementwise activations + binary ops (match jax_exec semantics).
+
+pub fn relu(x: &mut [f32]) {
+    for v in x.iter_mut() {
+        if *v < 0.0 {
+            *v = 0.0;
+        }
+    }
+}
+
+pub fn relu6(x: &mut [f32]) {
+    for v in x.iter_mut() {
+        *v = v.clamp(0.0, 6.0);
+    }
+}
+
+#[inline]
+pub fn sigmoid_scalar(v: f32) -> f32 {
+    1.0 / (1.0 + (-v).exp())
+}
+
+pub fn sigmoid(x: &mut [f32]) {
+    for v in x.iter_mut() {
+        *v = sigmoid_scalar(*v);
+    }
+}
+
+pub fn silu(x: &mut [f32]) {
+    for v in x.iter_mut() {
+        *v *= sigmoid_scalar(*v);
+    }
+}
+
+pub fn leaky_relu(x: &mut [f32]) {
+    for v in x.iter_mut() {
+        if *v < 0.0 {
+            *v *= 0.1;
+        }
+    }
+}
+
+pub fn add(a: &[f32], b: &[f32], out: &mut [f32]) {
+    debug_assert!(a.len() == b.len() && a.len() == out.len());
+    for ((o, x), y) in out.iter_mut().zip(a).zip(b) {
+        *o = x + y;
+    }
+}
+
+/// Channel-dim concat of NHWC tensors with equal spatial dims.
+pub fn concat_channels(inputs: &[(&[f32], usize)], rows: usize, out: &mut [f32]) {
+    let ctot: usize = inputs.iter().map(|(_, c)| c).sum();
+    debug_assert_eq!(out.len(), rows * ctot);
+    for r in 0..rows {
+        let mut o = r * ctot;
+        for (data, c) in inputs {
+            out[o..o + c].copy_from_slice(&data[r * c..(r + 1) * c]);
+            o += c;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn activations() {
+        let mut x = vec![-2.0, 0.0, 3.0, 8.0];
+        relu(&mut x);
+        assert_eq!(x, vec![0.0, 0.0, 3.0, 8.0]);
+        let mut x = vec![-2.0, 3.0, 8.0];
+        relu6(&mut x);
+        assert_eq!(x, vec![0.0, 3.0, 6.0]);
+        let mut x = vec![-1.0, 1.0];
+        leaky_relu(&mut x);
+        assert_eq!(x, vec![-0.1, 1.0]);
+        assert!((sigmoid_scalar(0.0) - 0.5).abs() < 1e-7);
+        let mut x = vec![0.0];
+        silu(&mut x);
+        assert_eq!(x, vec![0.0]);
+    }
+
+    #[test]
+    fn add_and_concat() {
+        let mut out = vec![0.0; 3];
+        add(&[1.0, 2.0, 3.0], &[10.0, 20.0, 30.0], &mut out);
+        assert_eq!(out, vec![11.0, 22.0, 33.0]);
+
+        // two rows: a has 2 channels, b has 1
+        let a = vec![1.0, 2.0, 3.0, 4.0];
+        let b = vec![9.0, 8.0];
+        let mut out = vec![0.0; 6];
+        concat_channels(&[(&a, 2), (&b, 1)], 2, &mut out);
+        assert_eq!(out, vec![1.0, 2.0, 9.0, 3.0, 4.0, 8.0]);
+    }
+}

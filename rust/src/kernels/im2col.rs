@@ -1,0 +1,189 @@
+//! im2col: NHWC activations → (N*OH*OW, KH*KW*C) patch matrix.
+//!
+//! Patch layout is (kh, kw, c) row-major — identical to
+//! `python/compile/kernels/ref.py::im2col` so cross-layer goldens line up
+//! element-for-element. Out-of-image taps are zero (numerically correct for
+//! FP32/INT8 and for bitserial unipolar codes, where 0 contributes nothing).
+
+use crate::dlrt::graph::conv_out_hw;
+
+/// Dimensions bundle for a conv lowering.
+#[derive(Clone, Copy, Debug)]
+pub struct ConvDims {
+    pub n: usize,
+    pub h: usize,
+    pub w: usize,
+    pub c: usize,
+    pub kh: usize,
+    pub kw: usize,
+    pub stride: [usize; 2],
+    pub padding: [usize; 2],
+    pub oh: usize,
+    pub ow: usize,
+}
+
+impl ConvDims {
+    pub fn new(
+        n: usize,
+        h: usize,
+        w: usize,
+        c: usize,
+        kh: usize,
+        kw: usize,
+        stride: [usize; 2],
+        padding: [usize; 2],
+    ) -> ConvDims {
+        let (oh, ow) = conv_out_hw(h, w, [kh, kw], stride, padding);
+        ConvDims { n, h, w, c, kh, kw, stride, padding, oh, ow }
+    }
+
+    pub fn rows(&self) -> usize {
+        self.n * self.oh * self.ow
+    }
+
+    pub fn patch(&self) -> usize {
+        self.kh * self.kw * self.c
+    }
+}
+
+/// Fill `out` (rows × patch, pre-sized) with patches of `x` (NHWC).
+pub fn im2col_f32(x: &[f32], d: &ConvDims, out: &mut [f32]) {
+    let patch = d.patch();
+    debug_assert_eq!(out.len(), d.rows() * patch);
+    debug_assert_eq!(x.len(), d.n * d.h * d.w * d.c);
+    let (ph, pw) = (d.padding[0] as isize, d.padding[1] as isize);
+    for n in 0..d.n {
+        let xn = &x[n * d.h * d.w * d.c..][..d.h * d.w * d.c];
+        for oy in 0..d.oh {
+            let iy0 = (oy * d.stride[0]) as isize - ph;
+            for ox in 0..d.ow {
+                let ix0 = (ox * d.stride[1]) as isize - pw;
+                let row = ((n * d.oh + oy) * d.ow + ox) * patch;
+                let out_row = &mut out[row..row + patch];
+                let mut o = 0;
+                for ky in 0..d.kh {
+                    let iy = iy0 + ky as isize;
+                    if iy < 0 || iy >= d.h as isize {
+                        out_row[o..o + d.kw * d.c].fill(0.0);
+                        o += d.kw * d.c;
+                        continue;
+                    }
+                    let rowbase = iy as usize * d.w * d.c;
+                    for kx in 0..d.kw {
+                        let ix = ix0 + kx as isize;
+                        if ix < 0 || ix >= d.w as isize {
+                            out_row[o..o + d.c].fill(0.0);
+                        } else {
+                            let src = rowbase + ix as usize * d.c;
+                            out_row[o..o + d.c].copy_from_slice(&xn[src..src + d.c]);
+                        }
+                        o += d.c;
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// im2col with fused unsigned activation quantization:
+/// `code = clip(round(x / s_a), 0, qp)` — feeds the bitserial/int8 engines.
+/// Quantizing before patch extraction would also work, but fusing here keeps
+/// a single pass over memory (this is on the hot path).
+pub fn im2col_quant_u8(x: &[f32], d: &ConvDims, s_a: f32, qp: u8, out: &mut [u8]) {
+    let patch = d.patch();
+    debug_assert_eq!(out.len(), d.rows() * patch);
+    let inv = 1.0 / s_a;
+    let (ph, pw) = (d.padding[0] as isize, d.padding[1] as isize);
+    // cast-based saturating quantizer: for v >= -0.5*s_a this equals
+    // round-half-away (floor(v/s + 0.5)); negatives clip to 0 either way.
+    // `as u32` saturates at 0 for negative floats, `min` caps at Q_P.
+    let qpf = qp as u32;
+    let q = |v: f32| -> u8 { ((v * inv + 0.5) as u32).min(qpf) as u8 };
+    for n in 0..d.n {
+        let xn = &x[n * d.h * d.w * d.c..][..d.h * d.w * d.c];
+        for oy in 0..d.oh {
+            let iy0 = (oy * d.stride[0]) as isize - ph;
+            for ox in 0..d.ow {
+                let ix0 = (ox * d.stride[1]) as isize - pw;
+                let row = ((n * d.oh + oy) * d.ow + ox) * patch;
+                let out_row = &mut out[row..row + patch];
+                let mut o = 0;
+                for ky in 0..d.kh {
+                    let iy = iy0 + ky as isize;
+                    if iy < 0 || iy >= d.h as isize {
+                        out_row[o..o + d.kw * d.c].fill(0);
+                        o += d.kw * d.c;
+                        continue;
+                    }
+                    let rowbase = iy as usize * d.w * d.c;
+                    for kx in 0..d.kw {
+                        let ix = ix0 + kx as isize;
+                        if ix < 0 || ix >= d.w as isize {
+                            out_row[o..o + d.c].fill(0);
+                        } else {
+                            let src = rowbase + ix as usize * d.c;
+                            for (dst, &v) in
+                                out_row[o..o + d.c].iter_mut().zip(&xn[src..src + d.c])
+                            {
+                                *dst = q(v);
+                            }
+                        }
+                        o += d.c;
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn identity_1x1() {
+        let d = ConvDims::new(1, 2, 2, 3, 1, 1, [1, 1], [0, 0]);
+        let x: Vec<f32> = (0..12).map(|v| v as f32).collect();
+        let mut out = vec![0.0; d.rows() * d.patch()];
+        im2col_f32(&x, &d, &mut out);
+        assert_eq!(out, x);
+    }
+
+    #[test]
+    fn padding_zeroes_border() {
+        let d = ConvDims::new(1, 2, 2, 1, 3, 3, [1, 1], [1, 1]);
+        let x = vec![1.0, 2.0, 3.0, 4.0];
+        let mut out = vec![-1.0; d.rows() * d.patch()];
+        im2col_f32(&x, &d, &mut out);
+        // first output pixel (0,0): patch rows ky=0 all zero (above image)
+        assert_eq!(&out[0..3], &[0.0, 0.0, 0.0]);
+        // center tap of patch (ky=1,kx=1) = x[0,0]
+        assert_eq!(out[4], 1.0);
+        assert_eq!(d.rows(), 4);
+    }
+
+    #[test]
+    fn strides_select_correct_pixels() {
+        let d = ConvDims::new(1, 4, 4, 1, 1, 1, [2, 2], [0, 0]);
+        let x: Vec<f32> = (0..16).map(|v| v as f32).collect();
+        let mut out = vec![0.0; d.rows()];
+        im2col_f32(&x, &d, &mut out);
+        assert_eq!(out, vec![0.0, 2.0, 8.0, 10.0]);
+    }
+
+    #[test]
+    fn quantized_matches_plain_quant() {
+        let d = ConvDims::new(2, 5, 4, 3, 3, 3, [2, 1], [1, 0]);
+        let x: Vec<f32> = (0..d.n * d.h * d.w * d.c)
+            .map(|v| (v as f32 * 0.37).sin().abs())
+            .collect();
+        let mut cols = vec![0.0f32; d.rows() * d.patch()];
+        im2col_f32(&x, &d, &mut cols);
+        let mut q = vec![0u8; d.rows() * d.patch()];
+        im2col_quant_u8(&x, &d, 0.11, 3, &mut q);
+        for (c, qq) in cols.iter().zip(&q) {
+            let want = ((c / 0.11).round()).clamp(0.0, 3.0) as u8;
+            assert_eq!(want, *qq);
+        }
+    }
+}

@@ -1,0 +1,105 @@
+//! INT8 engine: i8×i8 → i32 GEMM — stands in for the TFLite/XNNPACK and
+//! ONNX Runtime INT8 baselines the paper compares against.
+//!
+//! Symmetric per-tensor quantization: `x ≈ s_x * xq`, `w ≈ s_w * wq`, so
+//! `conv(x, w) ≈ s_x * s_w * Σ xq*wq` with exact i32 accumulation
+//! (k < 2^16 per layer keeps i32 safely un-overflowed at 8 bits).
+
+use crate::util::threads;
+
+/// `a`: m×k (u8 codes, unsigned activations), `b`: n×k (i8 weights),
+/// `out[m][n] = Σ_k a*b` in i32.
+pub fn gemm_u8i8_i32(a: &[u8], b: &[i8], m: usize, n: usize, k: usize,
+                     out: &mut [i32], nthreads: usize) {
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(b.len(), n * k);
+    debug_assert_eq!(out.len(), m * n);
+    threads::par_ranges(m, nthreads, |lo, hi| {
+        // SAFETY of the cast: rows [lo, hi) are disjoint per worker.
+        let out_ptr = out.as_ptr() as *mut i32;
+        for i in lo..hi {
+            let arow = &a[i * k..(i + 1) * k];
+            for j in 0..n {
+                let brow = &b[j * k..(j + 1) * k];
+                let mut s0: i32 = 0;
+                let mut s1: i32 = 0;
+                let mut kk = 0;
+                // 2-way unrolled dot; autovectorizes to pmaddwd-ish code
+                while kk + 2 <= k {
+                    s0 += arow[kk] as i32 * brow[kk] as i32;
+                    s1 += arow[kk + 1] as i32 * brow[kk + 1] as i32;
+                    kk += 2;
+                }
+                if kk < k {
+                    s0 += arow[kk] as i32 * brow[kk] as i32;
+                }
+                unsafe { *out_ptr.add(i * n + j) = s0 + s1 };
+            }
+        }
+    });
+}
+
+/// Quantize weights to i8 codes with symmetric scale (returns codes, scale).
+pub fn quantize_weights_i8(w: &[f32]) -> (Vec<i8>, f32) {
+    let amax = w.iter().fold(0.0f32, |m, v| m.max(v.abs()));
+    let s = (amax / 127.0).max(1e-12);
+    let codes = w.iter().map(|v| (v / s).round().clamp(-127.0, 127.0) as i8).collect();
+    (codes, s)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+
+    fn naive(a: &[u8], b: &[i8], m: usize, n: usize, k: usize) -> Vec<i32> {
+        let mut out = vec![0i32; m * n];
+        for i in 0..m {
+            for j in 0..n {
+                out[i * n + j] =
+                    (0..k).map(|kk| a[i * k + kk] as i32 * b[j * k + kk] as i32).sum();
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn matches_naive_property() {
+        prop::check(60, |rng, _| {
+            let m = rng.usize(20) + 1;
+            let n = rng.usize(20) + 1;
+            let k = rng.usize(130) + 1;
+            let a: Vec<u8> = (0..m * k).map(|_| rng.usize(256) as u8).collect();
+            let b: Vec<i8> = (0..n * k).map(|_| rng.range(-128, 128) as i8).collect();
+            let mut got = vec![0; m * n];
+            gemm_u8i8_i32(&a, &b, m, n, k, &mut got, 1);
+            prop::ensure(got == naive(&a, &b, m, n, k), "int8 gemm mismatch")
+        });
+    }
+
+    #[test]
+    fn threaded_matches_single() {
+        prop::check(10, |rng, _| {
+            let (m, n, k) = (rng.usize(40) + 8, rng.usize(16) + 1, rng.usize(64) + 1);
+            let a: Vec<u8> = (0..m * k).map(|_| rng.usize(4) as u8).collect();
+            let b: Vec<i8> = (0..n * k).map(|_| rng.range(-2, 2) as i8).collect();
+            let mut g1 = vec![0; m * n];
+            let mut g4 = vec![0; m * n];
+            gemm_u8i8_i32(&a, &b, m, n, k, &mut g1, 1);
+            gemm_u8i8_i32(&a, &b, m, n, k, &mut g4, 4);
+            prop::ensure(g1 == g4, "thread count changed result")
+        });
+    }
+
+    #[test]
+    fn weight_quantization_bounds() {
+        let w = vec![-1.0, 0.5, 0.25, 1.0];
+        let (codes, s) = quantize_weights_i8(&w);
+        assert_eq!(codes[0], -127);
+        assert_eq!(codes[3], 127);
+        assert!((s - 1.0 / 127.0).abs() < 1e-9);
+        // zero-safe
+        let (codes, s) = quantize_weights_i8(&[0.0; 4]);
+        assert!(codes.iter().all(|&c| c == 0) && s > 0.0);
+    }
+}

@@ -1,0 +1,17 @@
+//! Compute kernels: the paper's bitserial engine plus FP32/INT8 baselines.
+//!
+//! All convolutions share the im2col → GEMM structure (as the paper's
+//! kernels do); the engines differ in how the GEMM inner product is
+//! computed:
+//!
+//! * [`bitserial`] — bitplane-packed `u64` words, `AND` + `POPCOUNT`
+//!   (the paper's contribution; Neon `VCNT` ≙ `u64::count_ones`).
+//! * [`fp32`] — blocked float GEMM (the "optimized FP32 baseline").
+//! * [`int8`] — i8×i8→i32 GEMM (the TFLite/ONNX-Runtime INT8 analog).
+
+pub mod bitserial;
+pub mod elementwise;
+pub mod fp32;
+pub mod im2col;
+pub mod int8;
+pub mod pool;

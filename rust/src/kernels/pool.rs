@@ -1,0 +1,127 @@
+//! Pooling ops (NHWC).
+
+use crate::dlrt::graph::conv_out_hw;
+
+/// Max pool; out-of-image taps act as -inf (matches jax reduce_window).
+pub fn maxpool2d(
+    x: &[f32],
+    n: usize,
+    h: usize,
+    w: usize,
+    c: usize,
+    kernel: [usize; 2],
+    stride: [usize; 2],
+    padding: [usize; 2],
+    out: &mut [f32],
+) {
+    let (oh, ow) = conv_out_hw(h, w, kernel, stride, padding);
+    debug_assert_eq!(out.len(), n * oh * ow * c);
+    let (ph, pw) = (padding[0] as isize, padding[1] as isize);
+    for ni in 0..n {
+        let xn = &x[ni * h * w * c..][..h * w * c];
+        for oy in 0..oh {
+            let iy0 = (oy * stride[0]) as isize - ph;
+            for ox in 0..ow {
+                let ix0 = (ox * stride[1]) as isize - pw;
+                let obase = ((ni * oh + oy) * ow + ox) * c;
+                let orow = &mut out[obase..obase + c];
+                orow.fill(f32::NEG_INFINITY);
+                for ky in 0..kernel[0] {
+                    let iy = iy0 + ky as isize;
+                    if iy < 0 || iy >= h as isize {
+                        continue;
+                    }
+                    for kx in 0..kernel[1] {
+                        let ix = ix0 + kx as isize;
+                        if ix < 0 || ix >= w as isize {
+                            continue;
+                        }
+                        let src = (iy as usize * w + ix as usize) * c;
+                        for ci in 0..c {
+                            let v = xn[src + ci];
+                            if v > orow[ci] {
+                                orow[ci] = v;
+                            }
+                        }
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Global average pool: NHWC → (N, C).
+pub fn global_avg_pool(x: &[f32], n: usize, h: usize, w: usize, c: usize, out: &mut [f32]) {
+    debug_assert_eq!(out.len(), n * c);
+    let inv = 1.0 / (h * w) as f32;
+    for ni in 0..n {
+        let acc = &mut out[ni * c..(ni + 1) * c];
+        acc.fill(0.0);
+        let xn = &x[ni * h * w * c..][..h * w * c];
+        for px in xn.chunks(c) {
+            for (a, v) in acc.iter_mut().zip(px) {
+                *a += v;
+            }
+        }
+        for a in acc.iter_mut() {
+            *a *= inv;
+        }
+    }
+}
+
+/// Nearest-neighbor 2x upsample.
+pub fn upsample2x(x: &[f32], n: usize, h: usize, w: usize, c: usize, out: &mut [f32]) {
+    debug_assert_eq!(out.len(), n * 4 * h * w * c);
+    let (oh, ow) = (2 * h, 2 * w);
+    for ni in 0..n {
+        for oy in 0..oh {
+            let iy = oy / 2;
+            for ox in 0..ow {
+                let ix = ox / 2;
+                let src = ((ni * h + iy) * w + ix) * c;
+                let dst = ((ni * oh + oy) * ow + ox) * c;
+                out[dst..dst + c].copy_from_slice(&x[src..src + c]);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn maxpool_2x2() {
+        // 1x4x4x1 ramp
+        let x: Vec<f32> = (0..16).map(|v| v as f32).collect();
+        let mut out = vec![0.0; 4];
+        maxpool2d(&x, 1, 4, 4, 1, [2, 2], [2, 2], [0, 0], &mut out);
+        assert_eq!(out, vec![5.0, 7.0, 13.0, 15.0]);
+    }
+
+    #[test]
+    fn maxpool_padding_ignores_outside() {
+        let x = vec![-1.0, -2.0, -3.0, -4.0]; // 1x2x2x1, all negative
+        let mut out = vec![0.0; 4];
+        maxpool2d(&x, 1, 2, 2, 1, [2, 2], [2, 2], [1, 1], &mut out);
+        // each window sees exactly one image pixel
+        assert_eq!(out, vec![-1.0, -2.0, -3.0, -4.0]);
+    }
+
+    #[test]
+    fn gap_means() {
+        let x = vec![1.0, 10.0, 3.0, 20.0, 5.0, 30.0, 7.0, 40.0]; // 1x2x2x2
+        let mut out = vec![0.0; 2];
+        global_avg_pool(&x, 1, 2, 2, 2, &mut out);
+        assert_eq!(out, vec![4.0, 25.0]);
+    }
+
+    #[test]
+    fn upsample_nearest() {
+        let x = vec![1.0, 2.0, 3.0, 4.0]; // 1x2x2x1
+        let mut out = vec![0.0; 16];
+        upsample2x(&x, 1, 2, 2, 1, &mut out);
+        assert_eq!(out[0..4], [1.0, 1.0, 2.0, 2.0]);
+        assert_eq!(out[12..16], [3.0, 3.0, 4.0, 4.0]);
+    }
+}

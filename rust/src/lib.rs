@@ -1,0 +1,52 @@
+//! # DeepliteRT (reproduction) — ultra-low-bit quantized inference runtime
+//!
+//! Rust implementation of the system described in *"Accelerating Deep
+//! Learning Model Inference on Arm CPUs with Ultra-Low Bit Quantization and
+//! Runtime"* (Deeplite, 2022): a standalone inference engine that executes
+//! CNNs whose convolutions are quantized to 1–3 bits using **bitserial**
+//! arithmetic — bitplane-packed weights/activations combined with
+//! `AND` + `POPCOUNT` word operations:
+//!
+//! ```text
+//!   W · A = Σᵢ Σⱼ POPCOUNT(W[i] & A[j]) << (i + j)
+//! ```
+//!
+//! The paper's Neon kernels map here onto `u64` lanes (`&` +
+//! `u64::count_ones`), with the same tiling/threading structure; Arm-target
+//! latencies are projected by [`costmodel`]. See DESIGN.md for the full
+//! substitution table.
+//!
+//! ## Crate layout (three-layer architecture)
+//!
+//! * [`kernels`] — the compute substrate: bitserial, FP32 (im2col + blocked
+//!   GEMM) and INT8 engines, pooling, elementwise ops.
+//! * [`quant`] — post-training calibration, integer quantization, bitplane
+//!   packing (the deployment half of the paper's Neutrino framework).
+//! * [`dlrt`] — graph IR + the `.dlrt` deployable model format.
+//! * [`compiler`] — `arch.json` + `weights.bin` (exported by the JAX build
+//!   path) → quantize → pack → `.dlrt` (the paper's "Deeplite Compiler").
+//! * [`exec`] — graph executor with arena memory planning.
+//! * [`runtime`] — PJRT client wrapper that loads JAX-AOT HLO artifacts
+//!   (the framework-baseline engine; python never runs at request time).
+//! * [`coordinator`] — serving layer: request router, dynamic batcher,
+//!   worker pool, detection postprocessing.
+//! * [`costmodel`] — analytical Cortex-A53/A72/A57 latency projection.
+//! * [`models`] — native graph builders for the paper's evaluation models.
+//! * [`bench_harness`] — timing + paper-table reporting used by `cargo bench`.
+//! * [`util`] — hand-rolled substrates for this offline environment: JSON
+//!   codec, xorshift RNG, mini property-test driver, CLI parsing.
+
+pub mod bench_harness;
+pub mod compiler;
+pub mod coordinator;
+pub mod costmodel;
+pub mod dlrt;
+pub mod exec;
+pub mod kernels;
+pub mod models;
+pub mod quant;
+pub mod runtime;
+pub mod util;
+
+pub use dlrt::graph::{Graph, Node, Op, QCfg};
+pub use dlrt::tensor::Tensor;

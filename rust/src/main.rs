@@ -1,0 +1,314 @@
+//! `dlrt` — DeepliteRT command-line interface.
+//!
+//! ```text
+//! dlrt compile <model_dir> --out <file.dlrt> [--engine auto|fp32|int8]
+//! dlrt run     <file.dlrt | model_dir> [--threads N] [--reps N] [--batch B]
+//! dlrt inspect <file.dlrt> [--layers]
+//! dlrt bench   [--model resnet18|resnet50|vgg16_ssd|yolov5n|s|m]
+//!              [--res N] [--engine auto|fp32|int8] [--threads N] [--reps N]
+//! dlrt cost    [--model ...] [--res N] [--cpu a53|a72|a57] [--threads N]
+//! dlrt serve   [--model ...] [--requests N] [--max-batch B] [--workers W]
+//! dlrt pjrt    <artifact_stem>        # run a JAX-AOT HLO artifact
+//! ```
+
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+
+use anyhow::{bail, Context, Result};
+
+use dlrt::bench_harness::{bench_ms, ms, reps_for, Table};
+use dlrt::compiler::{compile_graph, load_arch, EngineChoice};
+use dlrt::coordinator::{InferenceServer, ServerConfig};
+use dlrt::costmodel::{self, cpu_by_name, EngineKind};
+use dlrt::dlrt::format;
+use dlrt::dlrt::graph::QCfg;
+use dlrt::exec::Executor;
+use dlrt::models;
+use dlrt::util::cli::Args;
+use dlrt::util::rng::Rng;
+use dlrt::Tensor;
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    if argv.is_empty() {
+        print_usage();
+        std::process::exit(2);
+    }
+    let cmd = argv[0].clone();
+    let args = match Args::parse(argv[1..].to_vec()) {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("argument error: {e}");
+            std::process::exit(2);
+        }
+    };
+    let result = match cmd.as_str() {
+        "compile" => cmd_compile(&args),
+        "run" => cmd_run(&args),
+        "inspect" => cmd_inspect(&args),
+        "bench" => cmd_bench(&args),
+        "cost" => cmd_cost(&args),
+        "serve" => cmd_serve(&args),
+        "pjrt" => cmd_pjrt(&args),
+        "help" | "--help" => {
+            print_usage();
+            Ok(())
+        }
+        other => {
+            eprintln!("unknown command {other:?}");
+            print_usage();
+            std::process::exit(2);
+        }
+    };
+    if let Err(e) = result {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn print_usage() {
+    eprintln!("dlrt — ultra-low-bit bitserial inference runtime (DeepliteRT repro)");
+    eprintln!("commands: compile | run | inspect | bench | cost | serve | pjrt");
+    eprintln!("see rust/src/main.rs docs or README.md for flags");
+}
+
+/// Build a model either from an exported dir/.dlrt or a native builder name.
+fn load_model(args: &Args, engine: EngineChoice) -> Result<(String, dlrt::exec::CompiledModel)> {
+    if let Some(path) = args.positional.first() {
+        let p = Path::new(path);
+        if p.extension().map(|e| e == "dlrt").unwrap_or(false) {
+            return Ok((path.clone(), format::load(p)?));
+        }
+        let g = load_arch(p)?;
+        return Ok((g.name.clone(), compile_graph(&g, engine)?));
+    }
+    let name = args.get_or("model", "resnet18").to_string();
+    let res = args.usize_or("res", default_res(&name))?;
+    let g = build_named(&name, res, args)?;
+    Ok((format!("{name}@{res}"), compile_graph(&g, engine)?))
+}
+
+fn default_res(model: &str) -> usize {
+    match model {
+        "vgg16_ssd" => 300,
+        m if m.starts_with("yolov5") => 320,
+        _ => 224,
+    }
+}
+
+fn build_named(name: &str, res: usize, args: &Args) -> Result<dlrt::Graph> {
+    let wb = args.usize_or("w-bits", 2)? as u8;
+    let ab = args.usize_or("a-bits", 2)? as u8;
+    let q = QCfg::new(ab, wb);
+    let wm = args.f64_or("width-mult", 1.0)? as f32;
+    Ok(match name {
+        "resnet18" => models::build_resnet(18, 1000, res, wm, q, 0),
+        "resnet50" => models::build_resnet(50, 1000, res, wm, q, 0),
+        "vgg16_ssd" => models::build_vgg16_ssd(21, res, wm, q, 0),
+        "yolov5n" => models::build_yolov5("n", 80, res, wm, q, 0),
+        "yolov5s" => models::build_yolov5("s", 80, res, wm, q, 0),
+        "yolov5m" => models::build_yolov5("m", 80, res, wm, q, 0),
+        other => bail!("unknown model {other:?}"),
+    })
+}
+
+fn random_input(model: &dlrt::exec::CompiledModel, batch: usize, seed: u64) -> Tensor {
+    let s = model.graph.input_shape;
+    let mut rng = Rng::new(seed);
+    let mut t = Tensor::zeros(vec![batch, s[1], s[2], s[3]]);
+    for v in t.data.iter_mut() {
+        *v = rng.f32();
+    }
+    t
+}
+
+fn cmd_compile(args: &Args) -> Result<()> {
+    let dir = args.positional.first().context("usage: dlrt compile <model_dir> --out f.dlrt")?;
+    let engine = EngineChoice::parse(args.get_or("engine", "auto"))?;
+    let g = load_arch(Path::new(dir))?;
+    let model = compile_graph(&g, engine)?;
+    let out = PathBuf::from(args.get_or("out", "model.dlrt"));
+    format::save(&model, &out)?;
+    let fp32_bytes: usize = g.weights.values().map(|w| w.w.len() * 4).sum();
+    println!("compiled {} -> {}", g.name, out.display());
+    println!("engines: {:?}", model.engine_summary());
+    println!(
+        "weights: {} B packed vs {} B fp32 ({:.2}x compression)",
+        model.weight_bytes(),
+        fp32_bytes,
+        fp32_bytes as f64 / model.weight_bytes() as f64
+    );
+    Ok(())
+}
+
+fn cmd_run(args: &Args) -> Result<()> {
+    let engine = EngineChoice::parse(args.get_or("engine", "auto"))?;
+    let (name, model) = load_model(args, engine)?;
+    let threads = args.usize_or("threads", 1)?;
+    let batch = args.usize_or("batch", 1)?;
+    let mut ex = Executor::new(threads);
+    let x = random_input(&model, batch, 1);
+    let outs = ex.run(&model, &x)?;
+    let t0 = std::time::Instant::now();
+    ex.run(&model, &x)?;
+    let first_ms = t0.elapsed().as_secs_f64() * 1e3;
+    let reps = args.usize_or("reps", reps_for(first_ms, 2000.0))?;
+    let timing = bench_ms(1, reps, || {
+        ex.run(&model, &x).unwrap();
+    });
+    println!("model   : {name}");
+    println!("engines : {:?}", model.engine_summary());
+    println!("input   : {:?}", x.shape);
+    for (i, o) in outs.iter().enumerate() {
+        let mn = o.data.iter().cloned().fold(f32::INFINITY, f32::min);
+        let mx = o.data.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+        println!("output{} : {:?} range [{mn:.4}, {mx:.4}]", i, o.shape);
+    }
+    println!("latency : {} (median of {}, ±{})", ms(timing.median_ms), timing.reps,
+             ms(timing.mad_ms));
+    Ok(())
+}
+
+fn cmd_inspect(args: &Args) -> Result<()> {
+    let path = args.positional.first().context("usage: dlrt inspect <file.dlrt>")?;
+    let model = format::load(Path::new(path))?;
+    let g = &model.graph;
+    println!("model   : {}", g.name);
+    println!("input   : {} {:?}", g.input_name, g.input_shape);
+    println!("nodes   : {} ({} convs)", g.nodes.len(), g.conv_nodes().count());
+    println!("outputs : {:?}", g.outputs);
+    println!("engines : {:?}", model.engine_summary());
+    println!("weights : {} bytes", model.weight_bytes());
+    println!("peak act: {} f32 elems", dlrt::exec::planner::peak_live_elems(g)?);
+    if args.flag("layers") {
+        for n in g.conv_nodes() {
+            let c = &model.convs[&n.name];
+            println!("  {:<24} {:<9} scale[{}]", n.name, c.kernel.engine_name(),
+                     c.scale.len());
+        }
+    }
+    Ok(())
+}
+
+fn cmd_bench(args: &Args) -> Result<()> {
+    let engine = EngineChoice::parse(args.get_or("engine", "auto"))?;
+    let (name, model) = load_model(args, engine)?;
+    let threads = args.usize_or("threads", 1)?;
+    let mut ex = Executor::new(threads);
+    let x = random_input(&model, 1, 1);
+    ex.run(&model, &x)?; // warm
+    let t0 = std::time::Instant::now();
+    ex.run(&model, &x)?;
+    let first = t0.elapsed().as_secs_f64() * 1e3;
+    let reps = args.usize_or("reps", reps_for(first, 5000.0))?;
+    let timing = bench_ms(0, reps, || {
+        ex.run(&model, &x).unwrap();
+    });
+    let mut table = Table::new(&format!("dlrt bench — {name}"),
+                               &["engine", "threads", "median", "MAD", "reps"]);
+    table.row(vec![
+        format!("{:?}", model.engine_summary()),
+        threads.to_string(),
+        ms(timing.median_ms),
+        ms(timing.mad_ms),
+        timing.reps.to_string(),
+    ]);
+    table.print();
+    Ok(())
+}
+
+fn cmd_cost(args: &Args) -> Result<()> {
+    let name = args.get_or("model", "resnet18").to_string();
+    let res = args.usize_or("res", default_res(&name))?;
+    let g = build_named(&name, res, args)?;
+    let threads = args.usize_or("threads", 4)?;
+    let cpu = cpu_by_name(args.get_or("cpu", "a72"))
+        .context("unknown --cpu (a53|a72|a57)")?;
+    let mut table = Table::new(
+        &format!("cost projection — {name}@{res} on {} ({threads} threads)", cpu.name),
+        &["engine", "projected latency", "FPS"],
+    );
+    for (label, force) in [
+        ("FP32", Some(EngineKind::Fp32)),
+        ("INT8", Some(EngineKind::Int8)),
+        ("DLRT mixed (per-QCfg)", None),
+        ("DLRT all-2A2W", Some(EngineKind::Bitserial { w_bits: 2, a_bits: 2 })),
+        ("DLRT all-1A1W", Some(EngineKind::Bitserial { w_bits: 1, a_bits: 1 })),
+    ] {
+        let lat = costmodel::graph_latency_ms(&g, cpu, force, threads)?;
+        table.row(vec![label.to_string(), ms(lat), format!("{:.1}", 1000.0 / lat)]);
+    }
+    if name.starts_with("resnet") {
+        let gpu = costmodel::gpu_latency_ms(&g, &costmodel::JETSON_NANO_GPU)?;
+        table.row(vec!["Jetson Nano GPU (ref)".into(), ms(gpu),
+                       format!("{:.1}", 1000.0 / gpu)]);
+    }
+    table.print();
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    let engine = EngineChoice::parse(args.get_or("engine", "auto"))?;
+    let (name, model) = load_model(args, engine)?;
+    let requests = args.usize_or("requests", 32)?;
+    let cfg = ServerConfig {
+        workers: args.usize_or("workers", 1)?,
+        max_batch: args.usize_or("max-batch", 4)?,
+        max_wait: std::time::Duration::from_millis(args.usize_or("max-wait-ms", 2)? as u64),
+        threads_per_worker: args.usize_or("threads", 1)?,
+    };
+    let model = Arc::new(model);
+    println!("serving {name} with {cfg:?}; {requests} synthetic requests");
+    let server = InferenceServer::start(model.clone(), cfg);
+    let t0 = std::time::Instant::now();
+    let rxs: Vec<_> = (0..requests)
+        .map(|i| server.submit(random_input(&model, 1, i as u64)))
+        .collect();
+    for rx in rxs {
+        rx.recv().expect("server alive")?;
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    let m = server.metrics();
+    println!("completed : {}", m.completed);
+    println!("throughput: {:.2} req/s (wall {:.2}s)", requests as f64 / wall, wall);
+    println!("exec p50  : {}", ms(m.p50_exec_ms));
+    println!("exec p95  : {}", ms(m.p95_exec_ms));
+    println!("queue p50 : {}", ms(m.p50_queue_ms));
+    println!("mean batch: {:.2}", m.mean_batch);
+    server.shutdown();
+    Ok(())
+}
+
+fn cmd_pjrt(args: &Args) -> Result<()> {
+    let stem = args.positional.first().context("usage: dlrt pjrt <artifact_stem>")?;
+    let rt = dlrt::runtime::PjrtRuntime::cpu()?;
+    println!("PJRT platform: {}", rt.platform());
+    let model = rt.load_hlo(Path::new(stem))?;
+    println!("loaded {} ({} params)", model.name, model.manifest.params.len());
+    if !model.manifest.input_shape.is_empty() {
+        // feed random params + input per the manifest
+        let mut rng = Rng::new(0);
+        let mut inputs: Vec<Tensor> = Vec::new();
+        for (_, shape) in &model.manifest.params {
+            let n: usize = shape.iter().product::<usize>().max(1);
+            inputs.push(Tensor::new(shape.clone(),
+                                    (0..n).map(|_| rng.normal() * 0.05).collect())?);
+        }
+        inputs.push({
+            let s = &model.manifest.input_shape;
+            let mut t = Tensor::zeros(s.clone());
+            for v in t.data.iter_mut() {
+                *v = rng.f32();
+            }
+            t
+        });
+        let t0 = std::time::Instant::now();
+        let outs = model.run_f32(&inputs)?;
+        println!("executed in {:.2} ms; {} outputs", t0.elapsed().as_secs_f64() * 1e3,
+                 outs.len());
+        for (i, o) in outs.iter().enumerate().take(4) {
+            println!("  out{i}: {:?}", o.shape);
+        }
+    }
+    Ok(())
+}

@@ -1,0 +1,318 @@
+//! Native graph builders for the paper's evaluation models.
+//!
+//! These mirror `python/compile/models/*` node-for-node (a consistency test
+//! compares topologies against the exported arch.json). They exist so the
+//! latency benches can instantiate full-size architectures with seeded
+//! random weights without shipping hundred-MB weight files — latency is
+//! weight-value independent.
+
+pub mod resnet;
+pub mod vgg_ssd;
+pub mod yolov5;
+
+use crate::dlrt::graph::{Graph, Node, NodeWeights, Op, QCfg};
+use crate::util::rng::Rng;
+
+pub use resnet::build_resnet;
+pub use vgg_ssd::build_vgg16_ssd;
+pub use yolov5::build_yolov5;
+
+/// Shared builder DSL (mirror of python GraphBuilder).
+pub struct GraphBuilder {
+    pub g: Graph,
+    rng: Rng,
+    uid: usize,
+    channels: std::collections::BTreeMap<String, usize>,
+}
+
+impl GraphBuilder {
+    pub fn new(name: &str, input_shape: [usize; 4], seed: u64) -> GraphBuilder {
+        let mut channels = std::collections::BTreeMap::new();
+        channels.insert("input".to_string(), input_shape[3]);
+        GraphBuilder {
+            g: Graph {
+                name: name.to_string(),
+                input_name: "input".to_string(),
+                input_shape,
+                nodes: Vec::new(),
+                outputs: Vec::new(),
+                weights: Default::default(),
+            },
+            rng: Rng::new(seed),
+            uid: 0,
+            channels,
+        }
+    }
+
+    pub fn channels(&self, t: &str) -> usize {
+        self.channels[t]
+    }
+
+    fn fresh(&mut self, prefix: &str) -> String {
+        self.uid += 1;
+        format!("{prefix}_{}", self.uid)
+    }
+
+    /// conv2d with seeded He-normal weights, identity scale, zero bias, and
+    /// QAT-plausible scales (s_w from weight minmax, s_a = 0.05).
+    #[allow(clippy::too_many_arguments)]
+    pub fn conv_named(
+        &mut self,
+        name: &str,
+        x: &str,
+        cout: usize,
+        k: usize,
+        stride: usize,
+        padding: usize,
+        qcfg: QCfg,
+        act: Option<Op>,
+    ) -> String {
+        let cin = self.channels[x];
+        let out = format!("{name}.out");
+        let w = self.rng.he_normal(k * k * cin * cout, k * k * cin);
+        let s_w = if qcfg.enabled {
+            crate::quant::calibrate_minmax_signed(&w, qcfg.w_bits)
+        } else {
+            0.0
+        };
+        self.g.weights.insert(
+            name.to_string(),
+            NodeWeights {
+                w,
+                scale: vec![1.0; cout],
+                bias: vec![0.0; cout],
+                s_w,
+                s_a: if qcfg.enabled { 0.05 } else { 0.0 },
+            },
+        );
+        self.g.nodes.push(Node {
+            op: Op::Conv2d {
+                stride: [stride, stride],
+                padding: [padding, padding],
+                kernel: [k, k],
+                cin,
+                cout,
+                qcfg,
+            },
+            name: name.to_string(),
+            inputs: vec![x.to_string()],
+            output: out.clone(),
+        });
+        self.channels.insert(out.clone(), cout);
+        match act {
+            Some(op) => self.act_named(&format!("{name}.act"), &out, op),
+            None => out,
+        }
+    }
+
+    pub fn conv(&mut self, x: &str, cout: usize, k: usize, stride: usize,
+                qcfg: QCfg, act: Option<Op>) -> String {
+        let name = self.fresh("conv");
+        self.conv_named(&name, x, cout, k, stride, k / 2, qcfg, act)
+    }
+
+    pub fn act_named(&mut self, name: &str, x: &str, op: Op) -> String {
+        let out = format!("{name}.out");
+        self.g.nodes.push(Node {
+            op,
+            name: name.to_string(),
+            inputs: vec![x.to_string()],
+            output: out.clone(),
+        });
+        self.channels.insert(out.clone(), self.channels[x]);
+        out
+    }
+
+    pub fn maxpool(&mut self, x: &str, k: usize, stride: usize, padding: usize) -> String {
+        let name = self.fresh("maxpool");
+        let out = format!("{name}.out");
+        self.g.nodes.push(Node {
+            op: Op::MaxPool2d {
+                kernel: [k, k],
+                stride: [stride, stride],
+                padding: [padding, padding],
+            },
+            name,
+            inputs: vec![x.to_string()],
+            output: out.clone(),
+        });
+        self.channels.insert(out.clone(), self.channels[x]);
+        out
+    }
+
+    pub fn global_avg_pool(&mut self, x: &str) -> String {
+        let name = self.fresh("gap");
+        let out = format!("{name}.out");
+        self.g.nodes.push(Node {
+            op: Op::GlobalAvgPool,
+            name,
+            inputs: vec![x.to_string()],
+            output: out.clone(),
+        });
+        out
+    }
+
+    pub fn add(&mut self, a: &str, b: &str) -> String {
+        let name = self.fresh("add");
+        let out = format!("{name}.out");
+        self.g.nodes.push(Node {
+            op: Op::Add,
+            name,
+            inputs: vec![a.to_string(), b.to_string()],
+            output: out.clone(),
+        });
+        self.channels.insert(out.clone(), self.channels[a]);
+        out
+    }
+
+    pub fn concat(&mut self, xs: &[&str]) -> String {
+        let name = self.fresh("concat");
+        let out = format!("{name}.out");
+        let ctot = xs.iter().map(|x| self.channels[*x]).sum();
+        self.g.nodes.push(Node {
+            op: Op::Concat,
+            name,
+            inputs: xs.iter().map(|s| s.to_string()).collect(),
+            output: out.clone(),
+        });
+        self.channels.insert(out.clone(), ctot);
+        out
+    }
+
+    pub fn upsample2x(&mut self, x: &str) -> String {
+        let name = self.fresh("up");
+        let out = format!("{name}.out");
+        self.g.nodes.push(Node {
+            op: Op::Upsample2x,
+            name,
+            inputs: vec![x.to_string()],
+            output: out.clone(),
+        });
+        self.channels.insert(out.clone(), self.channels[x]);
+        out
+    }
+
+    pub fn dense(&mut self, x: &str, cin: usize, cout: usize) -> String {
+        let name = self.fresh("dense");
+        let out = format!("{name}.out");
+        let w = self.rng.he_normal(cin * cout, cin);
+        self.g.weights.insert(
+            name.clone(),
+            NodeWeights { w, scale: Vec::new(), bias: vec![0.0; cout], s_w: 0.0, s_a: 0.0 },
+        );
+        self.g.nodes.push(Node {
+            op: Op::Dense { cin, cout },
+            name,
+            inputs: vec![x.to_string()],
+            output: out.clone(),
+        });
+        out
+    }
+
+    pub fn finish(mut self, outputs: Vec<String>) -> Graph {
+        self.g.outputs = outputs;
+        self.g.validate().expect("builder produced invalid graph");
+        self.g
+    }
+}
+
+/// Mixed-precision policy matching python `set_mixed_precision`: convs with
+/// index in [from, to) get (a_bits, w_bits); the rest stay FP32.
+pub fn set_mixed_precision(g: &mut Graph, from: usize, to: Option<usize>,
+                           w_bits: u8, a_bits: u8) {
+    let conv_names: Vec<String> = g.conv_nodes().map(|n| n.name.clone()).collect();
+    let hi = to.unwrap_or(conv_names.len());
+    for n in g.nodes.iter_mut() {
+        if let Op::Conv2d { qcfg, .. } = &mut n.op {
+            let idx = conv_names.iter().position(|c| c == &n.name).unwrap();
+            *qcfg = if idx >= from && idx < hi {
+                QCfg::new(a_bits, w_bits)
+            } else {
+                QCfg::FP32
+            };
+            // refresh s_w for the new bit width
+            let enabled = qcfg.enabled;
+            let bits = qcfg.w_bits;
+            if let Some(nw) = g.weights.get_mut(&n.name) {
+                nw.s_w = if enabled {
+                    crate::quant::calibrate_minmax_signed(&nw.w, bits)
+                } else {
+                    0.0
+                };
+                if enabled && nw.s_a == 0.0 {
+                    nw.s_a = 0.05;
+                }
+            }
+        }
+    }
+}
+
+/// One quantized conv with weights snapped to exact codes (unit tests).
+pub fn single_conv_graph(w_bits: u8, a_bits: u8, s_w: f32, s_a: f32) -> Graph {
+    let mut b = GraphBuilder::new("oneconv", [1, 8, 8, 3], 11);
+    let x = b.conv_named("c", "input", 8, 3, 1, 1, QCfg::new(a_bits, w_bits), None);
+    let mut g = b.finish(vec![x]);
+    let nw = g.weights.get_mut("c").unwrap();
+    nw.s_w = s_w;
+    nw.s_a = s_a;
+    let (qp, qn) = crate::dlrt::graph::qp_qn(w_bits, true);
+    for w in nw.w.iter_mut() {
+        *w = (*w / s_w).round().clamp(-(qn as f32), qp as f32) * s_w;
+    }
+    g
+}
+
+/// Tiny 3-conv graph for unit tests. With `quant_exact`, weights/scales are
+/// chosen exactly representable at 2 bits so bitserial == fp32 bit-for-bit.
+pub fn tiny_test_graph(quant_exact: bool) -> Graph {
+    let mut b = GraphBuilder::new("tiny", [1, 8, 8, 3], 7);
+    let q = QCfg::new(2, 2);
+    let x = b.conv_named("c1", "input", 8, 3, 1, 1, QCfg::FP32, Some(Op::Relu));
+    let x = b.conv_named("c2", &x, 8, 3, 2, 1, q, Some(Op::Relu));
+    let x = b.conv_named("c3", &x, 4, 1, 1, 0, q, None);
+    let out = b.global_avg_pool(&x);
+    let mut g = b.finish(vec![out]);
+    if quant_exact {
+        for (name, nw) in g.weights.iter_mut() {
+            if name == "c1" {
+                continue;
+            }
+            // snap weights to {-2,-1,0,1} * 0.5 and scales to round values
+            nw.s_w = 0.5;
+            nw.s_a = 0.25;
+            for w in nw.w.iter_mut() {
+                *w = (*w / 0.5).round().clamp(-2.0, 1.0) * 0.5;
+            }
+        }
+    }
+    g
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tiny_graph_valid() {
+        let g = tiny_test_graph(false);
+        g.validate().unwrap();
+        assert_eq!(g.conv_nodes().count(), 3);
+        let shapes = g.infer_shapes().unwrap();
+        assert_eq!(shapes["c3.out"], vec![1, 4, 4, 4]);
+    }
+
+    #[test]
+    fn mixed_precision_reassignment() {
+        let mut g = tiny_test_graph(false);
+        set_mixed_precision(&mut g, 1, None, 1, 1);
+        let tags: Vec<String> = g
+            .conv_nodes()
+            .map(|n| match &n.op {
+                Op::Conv2d { qcfg, .. } => qcfg.tag(),
+                _ => unreachable!(),
+            })
+            .collect();
+        assert_eq!(tags, vec!["FP32", "1A1W", "1A1W"]);
+        assert!(g.weights["c2"].s_w > 0.0);
+    }
+}

@@ -1,0 +1,108 @@
+//! ResNet-18/50 native builders (mirror of python/compile/models/resnet.py).
+
+use crate::dlrt::graph::{Graph, Op, QCfg};
+
+use super::GraphBuilder;
+
+fn ch(c: usize, width_mult: f32) -> usize {
+    ((c as f32 * width_mult).round() as usize).max(8)
+}
+
+fn basic_block(b: &mut GraphBuilder, x: &str, cout: usize, stride: usize,
+               name: &str, q: QCfg) -> String {
+    let mut identity = x.to_string();
+    let y = b.conv_named(&format!("{name}.conv1"), x, cout, 3, stride, 1, q,
+                         Some(Op::Relu));
+    let y = b.conv_named(&format!("{name}.conv2"), &y, cout, 3, 1, 1, q, None);
+    if stride != 1 || b.channels(&identity) != cout {
+        identity = b.conv_named(&format!("{name}.down"), &identity, cout, 1,
+                                stride, 0, q, None);
+    }
+    let y = b.add(&y, &identity);
+    b.act_named(&format!("{name}.relu"), &y, Op::Relu)
+}
+
+fn bottleneck(b: &mut GraphBuilder, x: &str, cmid: usize, stride: usize,
+              name: &str, q: QCfg) -> String {
+    let cout = cmid * 4;
+    let mut identity = x.to_string();
+    let y = b.conv_named(&format!("{name}.conv1"), x, cmid, 1, 1, 0, q, Some(Op::Relu));
+    let y = b.conv_named(&format!("{name}.conv2"), &y, cmid, 3, stride, 1, q,
+                         Some(Op::Relu));
+    let y = b.conv_named(&format!("{name}.conv3"), &y, cout, 1, 1, 0, q, None);
+    if stride != 1 || b.channels(&identity) != cout {
+        identity = b.conv_named(&format!("{name}.down"), &identity, cout, 1,
+                                stride, 0, q, None);
+    }
+    let y = b.add(&y, &identity);
+    b.act_named(&format!("{name}.relu"), &y, Op::Relu)
+}
+
+/// Build ResNet-18 or -50. `qcfg` applies to all non-stem convs (pass
+/// `QCfg::FP32` for a float model; use `models::set_mixed_precision` for
+/// finer policies).
+pub fn build_resnet(depth: usize, num_classes: usize, resolution: usize,
+                    width_mult: f32, qcfg: QCfg, seed: u64) -> Graph {
+    let (blocks, use_bottleneck, expansion): (&[usize], bool, usize) = match depth {
+        18 => (&[2, 2, 2, 2], false, 1),
+        50 => (&[3, 4, 6, 3], true, 4),
+        _ => panic!("unsupported resnet depth {depth}"),
+    };
+    let mut b = GraphBuilder::new(&format!("resnet{depth}"), [1, resolution, resolution, 3],
+                                  seed);
+    // stem stays FP32 (the paper's conservative policy)
+    let x = b.conv_named("stem", "input", ch(64, width_mult), 7, 2, 3, QCfg::FP32,
+                         Some(Op::Relu));
+    let mut x = b.maxpool(&x, 3, 2, 1);
+    let widths = [64usize, 128, 256, 512];
+    for (si, (&nblk, &w)) in blocks.iter().zip(widths.iter()).enumerate() {
+        for bi in 0..nblk {
+            let stride = if si > 0 && bi == 0 { 2 } else { 1 };
+            let name = format!("layer{}.{}", si + 1, bi);
+            x = if use_bottleneck {
+                bottleneck(&mut b, &x, ch(w, width_mult), stride, &name, qcfg)
+            } else {
+                basic_block(&mut b, &x, ch(w, width_mult), stride, &name, qcfg)
+            };
+        }
+    }
+    let x = b.global_avg_pool(&x);
+    let feat = ch(widths[3], width_mult) * expansion;
+    let out = b.dense(&x, feat, num_classes);
+    b.finish(vec![out])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn resnet18_topology_matches_python() {
+        let g = build_resnet(18, 1000, 224, 1.0, QCfg::new(2, 2), 0);
+        assert_eq!(g.conv_nodes().count(), 20);
+        let shapes = g.infer_shapes().unwrap();
+        assert_eq!(shapes[&g.outputs[0]], vec![1, 1000]);
+        // stem downsamples to 112, maxpool to 56, stages to 7
+        assert_eq!(shapes["layer4.1.relu.out"], vec![1, 7, 7, 512]);
+        // ~1.8 GMACs at 224px (paper-standard number)
+        let g1 = g.conv_macs().unwrap();
+        assert!((1.6e9..2.0e9).contains(&(g1 as f64)), "got {g1}");
+    }
+
+    #[test]
+    fn resnet50_topology() {
+        let g = build_resnet(50, 1000, 224, 1.0, QCfg::FP32, 0);
+        assert_eq!(g.conv_nodes().count(), 53);
+        let shapes = g.infer_shapes().unwrap();
+        assert_eq!(shapes["layer4.2.relu.out"], vec![1, 7, 7, 2048]);
+        let macs = g.conv_macs().unwrap() as f64;
+        assert!((3.5e9..4.3e9).contains(&macs), "got {macs}"); // ~3.8 GMACs
+    }
+
+    #[test]
+    fn width_mult_scales_channels() {
+        let g = build_resnet(18, 2, 64, 0.25, QCfg::new(2, 2), 0);
+        let shapes = g.infer_shapes().unwrap();
+        assert_eq!(shapes["layer4.1.relu.out"].last(), Some(&128));
+    }
+}

@@ -1,0 +1,100 @@
+//! VGG16-SSD300 native builder (mirror of python/compile/models/vgg_ssd.py).
+
+use crate::dlrt::graph::{Graph, Op, QCfg};
+
+use super::GraphBuilder;
+
+fn ch(c: usize, wm: f32) -> usize {
+    ((c as f32 * wm).round() as usize).max(8)
+}
+
+/// (feature tag, anchors per cell) — canonical SSD300 head spec → 8732 boxes.
+pub const HEAD_SPEC: [(&str, usize); 6] = [
+    ("conv4_3", 4),
+    ("fc7", 6),
+    ("conv8_2", 6),
+    ("conv9_2", 6),
+    ("conv10_2", 4),
+    ("conv11_2", 4),
+];
+
+pub fn build_vgg16_ssd(num_classes: usize, resolution: usize, width_mult: f32,
+                       qcfg: QCfg, seed: u64) -> Graph {
+    let mut b = GraphBuilder::new("vgg16_ssd", [1, resolution, resolution, 3], seed);
+    let mut feats: std::collections::BTreeMap<&str, String> = Default::default();
+
+    let mut x = "input".to_string();
+    let stages: [(usize, usize); 5] = [(2, 64), (2, 128), (3, 256), (3, 512), (3, 512)];
+    for (si, (cnt, c)) in stages.iter().enumerate() {
+        for ci in 0..*cnt {
+            // first conv stays FP32 (conservative mixed precision)
+            let q = if si == 0 && ci == 0 { QCfg::FP32 } else { qcfg };
+            x = b.conv_named(&format!("conv{}_{}", si + 1, ci + 1), &x,
+                             ch(*c, width_mult), 3, 1, 1, q, Some(Op::Relu));
+            if si == 3 && ci == cnt - 1 {
+                feats.insert("conv4_3", x.clone());
+            }
+        }
+        if si < 4 {
+            let pad = if si == 2 { 1 } else { 0 }; // ceil-mode pool3: 75 -> 38
+            x = b.maxpool(&x, 2, 2, pad);
+        } else {
+            x = b.maxpool(&x, 3, 1, 1);
+        }
+    }
+    x = b.conv_named("fc6", &x, ch(1024, width_mult), 3, 1, 1, qcfg, Some(Op::Relu));
+    x = b.conv_named("fc7", &x, ch(1024, width_mult), 1, 1, 0, qcfg, Some(Op::Relu));
+    feats.insert("fc7", x.clone());
+    x = b.conv_named("conv8_1", &x, ch(256, width_mult), 1, 1, 0, qcfg, Some(Op::Relu));
+    x = b.conv_named("conv8_2", &x, ch(512, width_mult), 3, 2, 1, qcfg, Some(Op::Relu));
+    feats.insert("conv8_2", x.clone());
+    x = b.conv_named("conv9_1", &x, ch(128, width_mult), 1, 1, 0, qcfg, Some(Op::Relu));
+    x = b.conv_named("conv9_2", &x, ch(256, width_mult), 3, 2, 1, qcfg, Some(Op::Relu));
+    feats.insert("conv9_2", x.clone());
+    x = b.conv_named("conv10_1", &x, ch(128, width_mult), 1, 1, 0, qcfg, Some(Op::Relu));
+    x = b.conv_named("conv10_2", &x, ch(256, width_mult), 3, 1, 0, qcfg, Some(Op::Relu));
+    feats.insert("conv10_2", x.clone());
+    x = b.conv_named("conv11_1", &x, ch(128, width_mult), 1, 1, 0, qcfg, Some(Op::Relu));
+    x = b.conv_named("conv11_2", &x, ch(256, width_mult), 3, 1, 0, qcfg, Some(Op::Relu));
+    feats.insert("conv11_2", x.clone());
+
+    let mut outputs = Vec::new();
+    for (tag, anchors) in HEAD_SPEC {
+        let f = feats[tag].clone();
+        // heads stay FP32 (detection-sensitive, cf. paper mixed precision)
+        outputs.push(b.conv_named(&format!("{tag}.loc"), &f, anchors * 4, 3, 1, 1,
+                                  QCfg::FP32, None));
+        outputs.push(b.conv_named(&format!("{tag}.conf"), &f, anchors * num_classes,
+                                  3, 1, 1, QCfg::FP32, None));
+    }
+    b.finish(outputs)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ssd300_box_count() {
+        let g = build_vgg16_ssd(21, 300, 0.25, QCfg::new(2, 2), 0);
+        let shapes = g.infer_shapes().unwrap();
+        let grids = [38usize, 19, 10, 5, 3, 1];
+        let mut boxes = 0;
+        for ((tag, anchors), grid) in HEAD_SPEC.iter().zip(grids) {
+            let s = &shapes[&format!("{tag}.loc.out")];
+            assert_eq!(s[1], grid, "{tag}");
+            assert_eq!(s[3], anchors * 4);
+            boxes += grid * grid * anchors;
+        }
+        assert_eq!(boxes, 8732);
+    }
+
+    #[test]
+    fn full_width_macs_sane() {
+        // ~31 GMACs for VGG16-SSD300 (paper-standard); allow slack for our
+        // non-dilated fc6
+        let g = build_vgg16_ssd(21, 300, 1.0, QCfg::FP32, 0);
+        let macs = g.conv_macs().unwrap() as f64;
+        assert!((2.5e10..4.0e10).contains(&macs), "got {macs}");
+    }
+}

@@ -1,0 +1,144 @@
+//! YOLOv5 n/s/m native builders (mirror of python/compile/models/yolov5.py).
+
+use crate::dlrt::graph::{Graph, Op, QCfg};
+
+use super::GraphBuilder;
+
+pub const NUM_ANCHORS: usize = 3;
+
+fn variant_params(variant: &str) -> (f32, f32) {
+    match variant {
+        "n" => (0.33, 0.25),
+        "s" => (0.33, 0.50),
+        "m" => (0.67, 0.75),
+        _ => panic!("unknown yolov5 variant {variant}"),
+    }
+}
+
+fn depth(n: usize, dm: f32) -> usize {
+    ((n as f32 * dm).round() as usize).max(1)
+}
+
+fn width(c: usize, wm: f32) -> usize {
+    (((c as f32 * wm) / 8.0).ceil() as usize * 8).max(8)
+}
+
+fn cbs(b: &mut GraphBuilder, x: &str, c: usize, k: usize, s: usize, name: &str,
+       q: QCfg) -> String {
+    b.conv_named(name, x, c, k, s, k / 2, q, Some(Op::Silu))
+}
+
+fn bottleneck(b: &mut GraphBuilder, x: &str, c: usize, shortcut: bool, name: &str,
+              q: QCfg) -> String {
+    let y = cbs(b, x, c, 1, 1, &format!("{name}.cv1"), q);
+    let y = cbs(b, &y, c, 3, 1, &format!("{name}.cv2"), q);
+    if shortcut && b.channels(x) == c {
+        b.add(&y, x)
+    } else {
+        y
+    }
+}
+
+fn c3(b: &mut GraphBuilder, x: &str, cout: usize, n: usize, shortcut: bool,
+      name: &str, q: QCfg) -> String {
+    let ch = cout / 2;
+    let mut y1 = cbs(b, x, ch, 1, 1, &format!("{name}.cv1"), q);
+    for i in 0..n {
+        y1 = bottleneck(b, &y1, ch, shortcut, &format!("{name}.m{i}"), q);
+    }
+    let y2 = cbs(b, x, ch, 1, 1, &format!("{name}.cv2"), q);
+    let y = b.concat(&[&y1, &y2]);
+    cbs(b, &y, cout, 1, 1, &format!("{name}.cv3"), q)
+}
+
+fn sppf(b: &mut GraphBuilder, x: &str, cout: usize, name: &str, q: QCfg) -> String {
+    let ch = b.channels(x) / 2;
+    let y = cbs(b, x, ch, 1, 1, &format!("{name}.cv1"), q);
+    let p1 = b.maxpool(&y, 5, 1, 2);
+    let p2 = b.maxpool(&p1, 5, 1, 2);
+    let p3 = b.maxpool(&p2, 5, 1, 2);
+    let cat = b.concat(&[&y, &p1, &p2, &p3]);
+    cbs(b, &cat, cout, 1, 1, &format!("{name}.cv2"), q)
+}
+
+pub fn build_yolov5(variant: &str, num_classes: usize, resolution: usize,
+                    width_mult: f32, qcfg: QCfg, seed: u64) -> Graph {
+    let (dm, wm) = variant_params(variant);
+    let wm = wm * width_mult;
+    let cw = |c: usize| width(c, wm);
+    let mut b = GraphBuilder::new(&format!("yolov5{variant}"),
+                                  [1, resolution, resolution, 3], seed);
+
+    // backbone (stem FP32: conservative mixed precision)
+    let x = b.conv_named("b0", "input", cw(64), 6, 2, 2, QCfg::FP32, Some(Op::Silu));
+    let x = cbs(&mut b, &x, cw(128), 3, 2, "b1", qcfg);
+    let x = c3(&mut b, &x, cw(128), depth(3, dm), true, "b2", qcfg);
+    let x = cbs(&mut b, &x, cw(256), 3, 2, "b3", qcfg);
+    let p3 = c3(&mut b, &x, cw(256), depth(6, dm), true, "b4", qcfg);
+    let x = cbs(&mut b, &p3, cw(512), 3, 2, "b5", qcfg);
+    let p4 = c3(&mut b, &x, cw(512), depth(9, dm), true, "b6", qcfg);
+    let x = cbs(&mut b, &p4, cw(1024), 3, 2, "b7", qcfg);
+    let x = c3(&mut b, &x, cw(1024), depth(3, dm), true, "b8", qcfg);
+    let p5 = sppf(&mut b, &x, cw(1024), "b9", qcfg);
+
+    // PANet neck
+    let h10 = cbs(&mut b, &p5, cw(512), 1, 1, "n10", qcfg);
+    let up = b.upsample2x(&h10);
+    let x = b.concat(&[&up, &p4]);
+    let h13 = c3(&mut b, &x, cw(512), depth(3, dm), false, "n13", qcfg);
+    let h14 = cbs(&mut b, &h13, cw(256), 1, 1, "n14", qcfg);
+    let up = b.upsample2x(&h14);
+    let x = b.concat(&[&up, &p3]);
+    let d17 = c3(&mut b, &x, cw(256), depth(3, dm), false, "n17", qcfg);
+    let x = cbs(&mut b, &d17, cw(256), 3, 2, "n18", qcfg);
+    let x = b.concat(&[&x, &h14]);
+    let d20 = c3(&mut b, &x, cw(512), depth(3, dm), false, "n20", qcfg);
+    let x = cbs(&mut b, &d20, cw(512), 3, 2, "n21", qcfg);
+    let x = b.concat(&[&x, &h10]);
+    let d23 = c3(&mut b, &x, cw(1024), depth(3, dm), false, "n23", qcfg);
+
+    // Detect heads: raw maps, FP32 (detection-sensitive)
+    let no = NUM_ANCHORS * (5 + num_classes);
+    let o1 = b.conv_named("detect.p3", &d17, no, 1, 1, 0, QCfg::FP32, None);
+    let o2 = b.conv_named("detect.p4", &d20, no, 1, 1, 0, QCfg::FP32, None);
+    let o3 = b.conv_named("detect.p5", &d23, no, 1, 1, 0, QCfg::FP32, None);
+    b.finish(vec![o1, o2, o3])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn detect_shapes_and_scaling() {
+        let g = build_yolov5("n", 80, 320, 1.0, QCfg::new(2, 2), 0);
+        let shapes = g.infer_shapes().unwrap();
+        let no = 3 * 85;
+        assert_eq!(shapes["detect.p3.out"], vec![1, 40, 40, no]);
+        assert_eq!(shapes["detect.p4.out"], vec![1, 20, 20, no]);
+        assert_eq!(shapes["detect.p5.out"], vec![1, 10, 10, no]);
+    }
+
+    #[test]
+    fn variant_macs_ordering() {
+        let macs = |v: &str| {
+            build_yolov5(v, 80, 320, 1.0, QCfg::FP32, 0).conv_macs().unwrap()
+        };
+        let (n, s, m) = (macs("n"), macs("s"), macs("m"));
+        assert!(n < s && s < m, "{n} {s} {m}");
+        // yolov5n at 640 is ~4.5 GFLOPs → ~2.2 GMACs/4 at 320 ≈ 0.5-0.6 GMAC
+        assert!((3.0e8..8.0e8).contains(&(n as f64)), "n = {n}");
+    }
+
+    #[test]
+    fn quantized_fraction_dominates() {
+        // >80% of convs are quantized under the default policy
+        let g = build_yolov5("s", 8, 128, 1.0, QCfg::new(2, 2), 0);
+        let total = g.conv_nodes().count();
+        let quant = g
+            .conv_nodes()
+            .filter(|n| matches!(n.op, Op::Conv2d { qcfg, .. } if qcfg.enabled))
+            .count();
+        assert!(quant * 5 >= total * 4, "{quant}/{total}");
+    }
+}

@@ -1,0 +1,184 @@
+//! Deployment-side quantization: scale fitting, integer codes, packing.
+//!
+//! The training-side quantizer (LSQ) lives in the JAX build path; this
+//! module is the runtime half — it turns f32 weights + scales into the
+//! integer codes / packed bitplanes the engines execute, and provides PTQ
+//! calibration for models arriving without QAT scales (paper §IV:
+//! post-training static quantization).
+
+use crate::dlrt::graph::qp_qn;
+use crate::dlrt::tensor::Packed;
+use crate::kernels::bitserial::pack_weights_offset;
+
+/// Min/max PTQ scale for a signed `bits`-bit code: maps max|t| onto Q_N.
+pub fn calibrate_minmax_signed(t: &[f32], bits: u8) -> f32 {
+    let (_, qn) = qp_qn(bits, true);
+    let amax = t.iter().fold(0.0f32, |m, v| m.max(v.abs()));
+    (amax / qn as f32).max(1e-8)
+}
+
+/// Min/max PTQ scale for unsigned activations: maps max(t, 0) onto Q_P.
+pub fn calibrate_minmax_unsigned(t: &[f32], bits: u8) -> f32 {
+    let (qp, _) = qp_qn(bits, false);
+    let tmax = t.iter().fold(0.0f32, |m, v| m.max(*v));
+    (tmax / qp as f32).max(1e-8)
+}
+
+/// MSE-grid PTQ (paper's static calibration, cf. python quant.calibrate_mse).
+pub fn calibrate_mse_signed(t: &[f32], bits: u8, n_grid: usize) -> f32 {
+    let base = calibrate_minmax_signed(t, bits);
+    let (qp, qn) = qp_qn(bits, true);
+    let mut best = (f32::INFINITY, base);
+    for g in 0..n_grid {
+        let s = base * (0.3 + 0.9 * g as f32 / (n_grid - 1).max(1) as f32);
+        let mut mse = 0.0f64;
+        for &v in t {
+            let q = (v / s).round().clamp(-(qn as f32), qp as f32);
+            let d = v - q * s;
+            mse += (d * d) as f64;
+        }
+        if (mse as f32) < best.0 {
+            best = (mse as f32, s);
+        }
+    }
+    best.1
+}
+
+/// Quantize to signed integer codes in [-Q_N, Q_P].
+pub fn quantize_signed(t: &[f32], s: f32, bits: u8) -> Vec<i32> {
+    let (qp, qn) = qp_qn(bits, true);
+    t.iter()
+        .map(|&v| (v / s).round().clamp(-(qn as f32), qp as f32) as i32)
+        .collect()
+}
+
+/// Quantize to unsigned codes in [0, Q_P].
+pub fn quantize_unsigned(t: &[f32], s: f32, bits: u8) -> Vec<u8> {
+    let (qp, _) = qp_qn(bits, false);
+    t.iter().map(|&v| (v / s).round().clamp(0.0, qp as f32) as u8).collect()
+}
+
+/// Quantize + pack conv weights for the bitserial engine.
+///
+/// `w` is HWIO (kh×kw×cin×cout); the engine wants rows = cout over the
+/// (kh, kw, cin) patch — i.e. the transpose the im2col GEMM consumes.
+pub fn pack_conv_weights(
+    w: &[f32],
+    kh: usize,
+    kw: usize,
+    cin: usize,
+    cout: usize,
+    s_w: f32,
+    bits: u8,
+) -> Packed {
+    let k = kh * kw * cin;
+    debug_assert_eq!(w.len(), k * cout);
+    let codes = quantize_signed(w, s_w, bits);
+    // transpose HWIO -> (cout, patch)
+    let mut byrow = vec![0i32; cout * k];
+    for p in 0..k {
+        for co in 0..cout {
+            byrow[co * k + p] = codes[p * cout + co];
+        }
+    }
+    pack_weights_offset(&byrow, cout, k, bits as usize)
+}
+
+/// Transpose HWIO conv weights to (cout, patch) row-major f32 (FP32 engine).
+pub fn transpose_conv_weights(w: &[f32], k: usize, cout: usize) -> Vec<f32> {
+    debug_assert_eq!(w.len(), k * cout);
+    let mut out = vec![0.0f32; cout * k];
+    for p in 0..k {
+        for co in 0..cout {
+            out[co * k + p] = w[p * cout + co];
+        }
+    }
+    out
+}
+
+/// Model-size accounting (paper §VII.A: 15.58x compression).
+/// Returns (fp32_bytes, packed_bytes) for a conv layer.
+pub fn conv_storage_bytes(k: usize, cout: usize, qcfg_bits: Option<u8>) -> (usize, usize) {
+    let fp32 = k * cout * 4;
+    match qcfg_bits {
+        Some(bits) => {
+            let words = Packed::words_for(k);
+            (fp32, cout * bits as usize * words * 8)
+        }
+        None => (fp32, fp32),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+
+    #[test]
+    fn minmax_covers_extremes() {
+        let t = vec![-0.9, 0.3, 0.45, -0.2];
+        let s = calibrate_minmax_signed(&t, 2);
+        let codes = quantize_signed(&t, s, 2);
+        assert_eq!(*codes.iter().min().unwrap(), -2);
+        assert!(codes.iter().all(|&c| (-2..=1).contains(&c)));
+    }
+
+    #[test]
+    fn mse_beats_or_ties_minmax() {
+        prop::check(30, |rng, _| {
+            // heavy-tailed samples
+            let t: Vec<f32> = (0..256).map(|_| rng.normal().powi(3)).collect();
+            let mse = |s: f32| -> f64 {
+                t.iter()
+                    .map(|&v| {
+                        let q = (v / s).round().clamp(-2.0, 1.0);
+                        ((v - q * s) * (v - q * s)) as f64
+                    })
+                    .sum()
+            };
+            let s_mm = calibrate_minmax_signed(&t, 2);
+            let s_mse = calibrate_mse_signed(&t, 2, 40);
+            prop::ensure(mse(s_mse) <= mse(s_mm) + 1e-9, "mse calibration regressed")
+        });
+    }
+
+    #[test]
+    fn quantize_error_bounded() {
+        prop::check(40, |rng, _| {
+            let bits = rng.usize(3) as u8 + 1;
+            let (qp, qn) = qp_qn(bits, true);
+            let s = 0.2f32;
+            let t: Vec<f32> =
+                (0..64).map(|_| rng.range_f32(-(qn as f32) * s, qp as f32 * s)).collect();
+            let codes = quantize_signed(&t, s, bits);
+            for (v, c) in t.iter().zip(&codes) {
+                if (v - *c as f32 * s).abs() > s / 2.0 + 1e-5 {
+                    return Err(format!("err too big: v={v} c={c}"));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn pack_conv_weights_transposes() {
+        // 1x1 conv, cin=2, cout=2: HWIO = [[w00,w01],[w10,w11]] rows=cin
+        let w = vec![0.1, -0.2, 0.1, 0.1]; // (p0,c0) (p0,c1) (p1,c0) (p1,c1)
+        let p = pack_conv_weights(&w, 1, 1, 2, 2, 0.1, 2);
+        assert_eq!(p.rows, 2);
+        assert_eq!(p.k, 2);
+        // unpack: codes with offset 2: row0 = [1+2, 1+2], row1 = [-2+2, 1+2]
+        assert_eq!(p.unpack(), vec![3, 3, 0, 3]);
+    }
+
+    #[test]
+    fn storage_accounting() {
+        // 3x3x64->64 conv: k=576, fp32 = 147456 B; 2-bit: 64*2*9 words * 8
+        let (f, q) = conv_storage_bytes(576, 64, Some(2));
+        assert_eq!(f, 147_456);
+        assert_eq!(q, 64 * 2 * 9 * 8);
+        assert!(f as f32 / q as f32 > 15.0); // the paper's ~16x claim
+        let (f2, q2) = conv_storage_bytes(576, 64, None);
+        assert_eq!(f2, q2);
+    }
+}

@@ -1,0 +1,182 @@
+//! PJRT runtime: load + execute JAX-AOT HLO artifacts from the hot path.
+//!
+//! This is the "framework baseline" engine: the same model graphs the JAX
+//! build path lowers (`make artifacts`) are compiled once by XLA's CPU
+//! backend and then executed from Rust with zero Python involvement —
+//! playing the role ONNX Runtime / TFLite play in the paper's comparisons,
+//! and hosting the Pallas bitserial kernel graph for cross-layer parity.
+//!
+//! Wiring (see /opt/xla-example/load_hlo): HLO **text** is the interchange —
+//! jax ≥ 0.5 emits protos with 64-bit instruction ids that xla_extension
+//! 0.5.1 rejects; the text parser reassigns ids.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::dlrt::tensor::Tensor;
+use crate::util::json::Json;
+
+/// A compiled PJRT executable + its manifest (parameter order/shapes).
+pub struct PjrtModel {
+    pub name: String,
+    exe: xla::PjRtLoadedExecutable,
+    pub manifest: Manifest,
+}
+
+#[derive(Clone, Debug, Default)]
+pub struct Manifest {
+    pub input_shape: Vec<usize>,
+    /// (name, shape) for params then state, in HLO parameter order.
+    pub params: Vec<(String, Vec<usize>)>,
+    pub outputs: Vec<String>,
+}
+
+/// Thin wrapper around the PJRT CPU client with an executable cache.
+pub struct PjrtRuntime {
+    client: xla::PjRtClient,
+}
+
+impl PjrtRuntime {
+    pub fn cpu() -> Result<PjrtRuntime> {
+        Ok(PjrtRuntime { client: xla::PjRtClient::cpu()? })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load `<stem>.hlo.txt` (+ optional `<stem>.manifest.json`) and compile.
+    pub fn load_hlo(&self, stem: &Path) -> Result<PjrtModel> {
+        let hlo_path = with_suffix(stem, ".hlo.txt");
+        let proto = xla::HloModuleProto::from_text_file(
+            hlo_path.to_str().ok_or_else(|| anyhow!("bad path"))?,
+        )
+        .with_context(|| format!("parsing {}", hlo_path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp)?;
+        let manifest = read_manifest(&with_suffix(stem, ".manifest.json")).unwrap_or_default();
+        Ok(PjrtModel {
+            name: stem.file_name().map(|s| s.to_string_lossy().into_owned())
+                .unwrap_or_default(),
+            exe,
+            manifest,
+        })
+    }
+}
+
+fn with_suffix(stem: &Path, suffix: &str) -> PathBuf {
+    let mut s = stem.as_os_str().to_os_string();
+    s.push(suffix);
+    PathBuf::from(s)
+}
+
+fn read_manifest(path: &Path) -> Result<Manifest> {
+    let v = Json::parse(&std::fs::read_to_string(path)?)?;
+    let mut params = Vec::new();
+    for section in ["params", "state"] {
+        if let Some(arr) = v.opt(section) {
+            for p in arr.arr()? {
+                params.push((p.get("name")?.str()?.to_string(), p.get("shape")?.usize_vec()?));
+            }
+        }
+    }
+    Ok(Manifest {
+        input_shape: v.opt("input_shape").map(|s| s.usize_vec()).transpose()?
+            .unwrap_or_default(),
+        params,
+        outputs: v.opt("outputs")
+            .map(|o| o.arr().map(|a| {
+                a.iter().filter_map(|x| x.str().ok().map(String::from)).collect()
+            }))
+            .transpose()?
+            .unwrap_or_default(),
+    })
+}
+
+impl PjrtModel {
+    /// Execute with f32 inputs; returns all tuple outputs as [`Tensor`]s.
+    pub fn run_f32(&self, inputs: &[Tensor]) -> Result<Vec<Tensor>> {
+        let literals: Vec<xla::Literal> = inputs
+            .iter()
+            .map(|t| {
+                let dims: Vec<i64> = t.shape.iter().map(|&d| d as i64).collect();
+                Ok(xla::Literal::vec1(&t.data).reshape(&dims)?)
+            })
+            .collect::<Result<Vec<_>>>()?;
+        let result = self.exe.execute::<xla::Literal>(&literals)?[0][0].to_literal_sync()?;
+        decompose_tuple(result)
+    }
+
+    /// Execute with i32 inputs (the bitserial kernel artifact signature).
+    pub fn run_i32(&self, inputs: &[(Vec<i32>, Vec<usize>)]) -> Result<Vec<Tensor>> {
+        let literals: Vec<xla::Literal> = inputs
+            .iter()
+            .map(|(data, shape)| {
+                let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+                Ok(xla::Literal::vec1(data).reshape(&dims)?)
+            })
+            .collect::<Result<Vec<_>>>()?;
+        let result = self.exe.execute::<xla::Literal>(&literals)?[0][0].to_literal_sync()?;
+        decompose_tuple(result)
+    }
+}
+
+fn decompose_tuple(mut result: xla::Literal) -> Result<Vec<Tensor>> {
+    let parts = result.decompose_tuple()?;
+    let parts = if parts.is_empty() { vec![result] } else { parts };
+    parts
+        .into_iter()
+        .map(|lit| {
+            let shape = lit.array_shape()?;
+            let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+            let data: Vec<f32> = match shape.ty() {
+                xla::ElementType::F32 => lit.to_vec::<f32>()?,
+                xla::ElementType::S32 => {
+                    lit.to_vec::<i32>()?.into_iter().map(|v| v as f32).collect()
+                }
+                other => bail!("unsupported output element type {other:?}"),
+            };
+            Tensor::new(dims, data)
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    //! Needs `make artifacts`; tests skip (with a notice) when absent.
+    use super::*;
+
+    fn artifacts() -> Option<PathBuf> {
+        let dir = PathBuf::from(concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts"));
+        if dir.join("bitserial_gemm_m64k64n32_1a2w.hlo.txt").exists() {
+            Some(dir)
+        } else {
+            eprintln!("skipping PJRT test: run `make artifacts` first");
+            None
+        }
+    }
+
+    #[test]
+    fn pallas_bitserial_kernel_matches_native_engine() {
+        let Some(dir) = artifacts() else { return };
+        let rt = PjrtRuntime::cpu().unwrap();
+        let model = rt.load_hlo(&dir.join("bitserial_gemm_m64k64n32_1a2w")).unwrap();
+        let (m, k, n) = (64usize, 64usize, 32usize);
+        let mut rng = crate::util::rng::Rng::new(99);
+        let a: Vec<i32> = (0..m * k).map(|_| rng.range(0, 2) as i32).collect();
+        let w: Vec<i32> = (0..n * k).map(|_| rng.range(-2, 2) as i32).collect();
+        let outs = model
+            .run_i32(&[(a.clone(), vec![m, k]), (w.clone(), vec![n, k])])
+            .unwrap();
+        assert_eq!(outs[0].shape, vec![m, n]);
+        // native bitserial on the same codes
+        let a8: Vec<u8> = a.iter().map(|&v| v as u8).collect();
+        let ap = crate::kernels::bitserial::pack_rows_u8(&a8, m, k, 1);
+        let wp = crate::kernels::bitserial::pack_weights_offset(&w, n, k, 2);
+        let mut want = vec![0i32; m * n];
+        crate::kernels::bitserial::gemm_bitserial(&ap, &wp, 2, &mut want, 1);
+        let got: Vec<i32> = outs[0].data.iter().map(|&v| v as i32).collect();
+        assert_eq!(got, want, "Pallas (via PJRT) != native bitserial");
+    }
+}

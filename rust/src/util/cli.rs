@@ -1,0 +1,96 @@
+//! Tiny CLI argument helper (clap stand-in): `--key value` / `--flag` pairs.
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Result};
+
+#[derive(Debug, Default)]
+pub struct Args {
+    pub positional: Vec<String>,
+    pub options: BTreeMap<String, String>,
+    pub flags: Vec<String>,
+}
+
+impl Args {
+    /// Parse raw argv (excluding program name and subcommand).
+    pub fn parse<I: IntoIterator<Item = String>>(argv: I) -> Result<Args> {
+        let mut out = Args::default();
+        let mut it = argv.into_iter().peekable();
+        while let Some(a) = it.next() {
+            if let Some(key) = a.strip_prefix("--") {
+                match it.peek() {
+                    Some(v) if !v.starts_with("--") => {
+                        out.options.insert(key.to_string(), it.next().unwrap());
+                    }
+                    _ => out.flags.push(key.to_string()),
+                }
+            } else if a.starts_with('-') && a.len() > 1 {
+                bail!("short options not supported: {a}");
+            } else {
+                out.positional.push(a);
+            }
+        }
+        Ok(out)
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.options.get(key).map(|s| s.as_str())
+    }
+
+    pub fn get_or<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
+        self.get(key).unwrap_or(default)
+    }
+
+    pub fn usize_or(&self, key: &str, default: usize) -> Result<usize> {
+        match self.get(key) {
+            Some(v) => Ok(v.parse()?),
+            None => Ok(default),
+        }
+    }
+
+    pub fn f64_or(&self, key: &str, default: f64) -> Result<f64> {
+        match self.get(key) {
+            Some(v) => Ok(v.parse()?),
+            None => Ok(default),
+        }
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn require(&self, key: &str) -> Result<&str> {
+        self.get(key).ok_or_else(|| anyhow::anyhow!("missing required --{key}"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from)).unwrap()
+    }
+
+    #[test]
+    fn mixed_args() {
+        let a = parse("model.dlrt --threads 4 --verbose --scale 0.5 extra");
+        assert_eq!(a.positional, vec!["model.dlrt", "extra"]);
+        assert_eq!(a.usize_or("threads", 1).unwrap(), 4);
+        assert!(a.flag("verbose"));
+        assert_eq!(a.f64_or("scale", 1.0).unwrap(), 0.5);
+        assert_eq!(a.get_or("missing", "d"), "d");
+    }
+
+    #[test]
+    fn flag_followed_by_flag() {
+        let a = parse("--a --b v --c");
+        assert!(a.flag("a") && a.flag("c"));
+        assert_eq!(a.get("b"), Some("v"));
+    }
+
+    #[test]
+    fn require_errors() {
+        assert!(parse("--x 1").require("y").is_err());
+    }
+}

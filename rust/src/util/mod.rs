@@ -1,0 +1,11 @@
+//! Hand-rolled substrates: JSON codec, RNG, property testing, CLI, threads.
+//!
+//! The build environment is offline with a fixed vendored crate set (no
+//! serde / rayon / clap / proptest / criterion), so the small pieces those
+//! crates would provide are implemented here, each with its own tests.
+
+pub mod cli;
+pub mod json;
+pub mod prop;
+pub mod rng;
+pub mod threads;

@@ -1,0 +1,101 @@
+//! Mini property-test driver (proptest stand-in).
+//!
+//! Runs a closure over many seeded random cases; on failure it reports the
+//! failing case number and seed so the case can be replayed exactly:
+//!
+//! ```ignore
+//! prop::check(200, |rng, case| {
+//!     let k = rng.usize(100) + 1;
+//!     ...
+//!     prop::ensure(cond, format!("k={k}"))
+//! });
+//! ```
+
+use super::rng::Rng;
+
+pub type CaseResult = Result<(), String>;
+
+/// Run `cases` random cases. Panics with seed + message on first failure.
+pub fn check<F: FnMut(&mut Rng, u64) -> CaseResult>(cases: u64, mut f: F) {
+    // fixed master seed: reproducible CI; per-case seeds are derived so a
+    // failing case can be replayed in isolation with `replay`.
+    for case in 0..cases {
+        let seed = dl_seed(case);
+        let mut rng = Rng::new(seed);
+        if let Err(msg) = f(&mut rng, case) {
+            panic!("property failed at case {case} (seed {seed:#x}): {msg}");
+        }
+    }
+}
+
+/// Re-run a single failing case by its number.
+pub fn replay<F: FnMut(&mut Rng, u64) -> CaseResult>(case: u64, mut f: F) -> CaseResult {
+    let mut rng = Rng::new(dl_seed(case));
+    f(&mut rng, case)
+}
+
+fn dl_seed(case: u64) -> u64 {
+    0xd117_0000_0000_0000 ^ case.wrapping_mul(0x2545f4914f6cdd1d)
+}
+
+/// Assertion helper producing a `CaseResult`.
+pub fn ensure(cond: bool, msg: impl Into<String>) -> CaseResult {
+    if cond {
+        Ok(())
+    } else {
+        Err(msg.into())
+    }
+}
+
+/// Compare two f32 slices with absolute + relative tolerance.
+pub fn close(a: &[f32], b: &[f32], rtol: f32, atol: f32) -> CaseResult {
+    ensure(a.len() == b.len(), format!("len {} vs {}", a.len(), b.len()))?;
+    for (i, (x, y)) in a.iter().zip(b).enumerate() {
+        let tol = atol + rtol * y.abs().max(x.abs());
+        if (x - y).abs() > tol {
+            return Err(format!("elem {i}: {x} vs {y} (tol {tol})"));
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn check_passes_trivially() {
+        check(50, |rng, _| {
+            let v = rng.f32();
+            ensure((0.0..1.0).contains(&v), "rng out of range")
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn check_reports_failure() {
+        check(50, |rng, _| ensure(rng.f32() < 0.5, "flaky"));
+    }
+
+    #[test]
+    fn replay_is_deterministic() {
+        let mut seen = Vec::new();
+        check(5, |rng, case| {
+            seen.push((case, rng.next_u64()));
+            Ok(())
+        });
+        for (case, val) in seen {
+            replay(case, |rng, _| {
+                ensure(rng.next_u64() == val, "replay mismatch")
+            })
+            .unwrap();
+        }
+    }
+
+    #[test]
+    fn close_tolerances() {
+        assert!(close(&[1.0, 2.0], &[1.0, 2.0 + 1e-7], 1e-5, 1e-6).is_ok());
+        assert!(close(&[1.0], &[1.1], 1e-5, 1e-6).is_err());
+        assert!(close(&[1.0], &[1.0, 2.0], 0.1, 0.1).is_err());
+    }
+}

@@ -1,0 +1,107 @@
+//! Scoped data-parallel helpers (rayon stand-in).
+//!
+//! The kernels parallelize over output rows the way the paper's Arm kernels
+//! parallelize over output tiles: disjoint chunks, no shared mutable state.
+//! Built on `std::thread::scope`, so borrows of the surrounding stack work.
+
+/// Number of worker threads to use by default (overridable per call).
+pub fn default_threads() -> usize {
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+}
+
+/// Split `out` into `nthreads` contiguous chunks of whole `row_len` rows and
+/// run `f(first_row_index, chunk)` on each in parallel.
+pub fn par_chunks_rows<F>(out: &mut [f32], row_len: usize, nthreads: usize, f: F)
+where
+    F: Fn(usize, &mut [f32]) + Sync,
+{
+    let rows = out.len() / row_len;
+    let nthreads = nthreads.max(1).min(rows.max(1));
+    if nthreads <= 1 || rows == 0 {
+        f(0, out);
+        return;
+    }
+    let rows_per = rows.div_ceil(nthreads);
+    std::thread::scope(|scope| {
+        let mut rest = out;
+        let mut row0 = 0;
+        while !rest.is_empty() {
+            let take = (rows_per * row_len).min(rest.len());
+            let (chunk, tail) = rest.split_at_mut(take);
+            let fref = &f;
+            let start = row0;
+            scope.spawn(move || fref(start, chunk));
+            row0 += take / row_len;
+            rest = tail;
+        }
+    });
+}
+
+/// Parallel-for over a range, chunked contiguously: `f(lo, hi)` per worker.
+pub fn par_ranges<F>(n: usize, nthreads: usize, f: F)
+where
+    F: Fn(usize, usize) + Sync,
+{
+    if n == 0 {
+        return;
+    }
+    let nthreads = nthreads.max(1).min(n);
+    if nthreads <= 1 {
+        f(0, n);
+        return;
+    }
+    let per = n.div_ceil(nthreads);
+    std::thread::scope(|scope| {
+        for t in 0..nthreads {
+            let lo = t * per;
+            let hi = ((t + 1) * per).min(n);
+            if lo >= hi {
+                break;
+            }
+            let fref = &f;
+            scope.spawn(move || fref(lo, hi));
+        }
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn par_chunks_covers_all_rows() {
+        let mut data = vec![0.0f32; 7 * 5];
+        par_chunks_rows(&mut data, 5, 3, |row0, chunk| {
+            for (i, row) in chunk.chunks_mut(5).enumerate() {
+                for v in row.iter_mut() {
+                    *v = (row0 + i) as f32;
+                }
+            }
+        });
+        for r in 0..7 {
+            for c in 0..5 {
+                assert_eq!(data[r * 5 + c], r as f32);
+            }
+        }
+    }
+
+    #[test]
+    fn par_ranges_partitions_exactly() {
+        let count = AtomicUsize::new(0);
+        par_ranges(103, 4, |lo, hi| {
+            count.fetch_add(hi - lo, Ordering::SeqCst);
+        });
+        assert_eq!(count.load(Ordering::SeqCst), 103);
+    }
+
+    #[test]
+    fn single_thread_fallback() {
+        let mut data = vec![0.0f32; 4];
+        par_chunks_rows(&mut data, 2, 1, |row0, chunk| {
+            assert_eq!(row0, 0);
+            assert_eq!(chunk.len(), 4);
+        });
+        par_ranges(0, 4, |_, _| panic!("no work expected"));
+    }
+}

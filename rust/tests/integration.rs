@@ -1,0 +1,174 @@
+//! Cross-layer integration tests: JAX build path ↔ Rust runtime parity.
+//!
+//! These consume artifacts produced by `make artifacts`; when artifacts are
+//! missing the tests skip with a notice (so `cargo test` works standalone)
+//! — CI runs `make test` which builds artifacts first.
+
+use std::path::{Path, PathBuf};
+
+use dlrt::compiler::{compile_graph, load_arch, EngineChoice};
+use dlrt::exec::Executor;
+use dlrt::util::json::Json;
+use dlrt::Tensor;
+
+fn artifacts_dir() -> Option<PathBuf> {
+    let dir = PathBuf::from(concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts"));
+    if dir.join("golden").exists() {
+        Some(dir)
+    } else {
+        eprintln!("SKIP: artifacts missing — run `make artifacts`");
+        None
+    }
+}
+
+struct Golden {
+    input: Tensor,
+    outputs: Vec<Tensor>,
+    mode: String,
+}
+
+fn load_golden(path: &Path) -> Golden {
+    let v = Json::parse(&std::fs::read_to_string(path).unwrap()).unwrap();
+    let shape = v.get("input_shape").unwrap().usize_vec().unwrap();
+    let input = Tensor::new(shape, v.get("input").unwrap().f32_vec().unwrap()).unwrap();
+    let outputs = v
+        .get("outputs")
+        .unwrap()
+        .arr()
+        .unwrap()
+        .iter()
+        .map(|o| {
+            Tensor::new(
+                o.get("shape").unwrap().usize_vec().unwrap(),
+                o.get("data").unwrap().f32_vec().unwrap(),
+            )
+            .unwrap()
+        })
+        .collect();
+    Golden { input, outputs, mode: v.get("mode").unwrap().str().unwrap().to_string() }
+}
+
+/// Relative-scale max error between Rust outputs and JAX goldens.
+fn check_outputs(got: &[Tensor], want: &[Tensor], tol: f32, label: &str) {
+    assert_eq!(got.len(), want.len(), "{label}: output count");
+    for (i, (g, w)) in got.iter().zip(want).enumerate() {
+        assert_eq!(g.shape, w.shape, "{label}: output {i} shape");
+        let scale = w.data.iter().fold(0.0f32, |m, v| m.max(v.abs())).max(1.0);
+        let diff = g.max_abs_diff(w) / scale;
+        assert!(diff < tol, "{label}: output {i} relative diff {diff} > {tol}");
+    }
+}
+
+/// The decisive end-to-end parity: JAX `deploy_sim` (integer semantics) ==
+/// Rust bitserial runtime, on a real quantized ResNet with folded BN.
+#[test]
+fn resnet18_mini_quantized_parity() {
+    let Some(dir) = artifacts_dir() else { return };
+    let g = load_arch(&dir.join("models/resnet18_mini")).unwrap();
+    let model = compile_graph(&g, EngineChoice::Auto).unwrap();
+    assert_eq!(model.engine_summary().get("bitserial"), Some(&19));
+    let golden = load_golden(&dir.join("golden/resnet18_mini.json"));
+    assert_eq!(golden.mode, "deploy_sim");
+    let mut ex = Executor::new(1);
+    let got = ex.run(&model, &golden.input).unwrap();
+    check_outputs(&got, &golden.outputs, 2e-4, "resnet18_mini deploy");
+}
+
+#[test]
+fn resnet18_mini_fp32_parity() {
+    let Some(dir) = artifacts_dir() else { return };
+    let g = load_arch(&dir.join("models/resnet18_mini")).unwrap();
+    let model = compile_graph(&g, EngineChoice::ForceFp32).unwrap();
+    let golden = load_golden(&dir.join("golden/resnet18_mini_fp32.json"));
+    let mut ex = Executor::new(1);
+    let got = ex.run(&model, &golden.input).unwrap();
+    check_outputs(&got, &golden.outputs, 2e-4, "resnet18_mini fp32");
+}
+
+#[test]
+fn yolov5n_mini_quantized_parity() {
+    let Some(dir) = artifacts_dir() else { return };
+    let g = load_arch(&dir.join("models/yolov5n_mini")).unwrap();
+    let model = compile_graph(&g, EngineChoice::Auto).unwrap();
+    let golden = load_golden(&dir.join("golden/yolov5n_mini.json"));
+    let mut ex = Executor::new(1);
+    let got = ex.run(&model, &golden.input).unwrap();
+    // silu/sigmoid transcendentals differ slightly between XLA and libm
+    check_outputs(&got, &golden.outputs, 1e-3, "yolov5n_mini deploy");
+}
+
+#[test]
+fn yolov5n_mini_fp32_parity() {
+    let Some(dir) = artifacts_dir() else { return };
+    let g = load_arch(&dir.join("models/yolov5n_mini")).unwrap();
+    let model = compile_graph(&g, EngineChoice::ForceFp32).unwrap();
+    let golden = load_golden(&dir.join("golden/yolov5n_mini_fp32.json"));
+    let mut ex = Executor::new(1);
+    let got = ex.run(&model, &golden.input).unwrap();
+    check_outputs(&got, &golden.outputs, 1e-3, "yolov5n_mini fp32");
+}
+
+/// Parity must survive a .dlrt serialization round-trip.
+#[test]
+fn dlrt_file_roundtrip_preserves_parity() {
+    let Some(dir) = artifacts_dir() else { return };
+    let g = load_arch(&dir.join("models/resnet18_mini")).unwrap();
+    let model = compile_graph(&g, EngineChoice::Auto).unwrap();
+    let path = std::env::temp_dir().join(format!("itest_{}.dlrt", std::process::id()));
+    dlrt::dlrt::format::save(&model, &path).unwrap();
+    let loaded = dlrt::dlrt::format::load(&path).unwrap();
+    std::fs::remove_file(&path).ok();
+    let golden = load_golden(&dir.join("golden/resnet18_mini.json"));
+    let mut ex = Executor::new(1);
+    let got = ex.run(&loaded, &golden.input).unwrap();
+    check_outputs(&got, &golden.outputs, 2e-4, "dlrt roundtrip");
+}
+
+/// Multithreaded execution must be numerically identical to single-thread.
+#[test]
+fn threading_does_not_change_results() {
+    let Some(dir) = artifacts_dir() else { return };
+    let g = load_arch(&dir.join("models/yolov5n_mini")).unwrap();
+    let model = compile_graph(&g, EngineChoice::Auto).unwrap();
+    let golden = load_golden(&dir.join("golden/yolov5n_mini.json"));
+    let mut ex1 = Executor::new(1);
+    let mut ex4 = Executor::new(4);
+    let y1 = ex1.run(&model, &golden.input).unwrap();
+    let y4 = ex4.run(&model, &golden.input).unwrap();
+    for (a, b) in y1.iter().zip(&y4) {
+        assert_eq!(a.data, b.data);
+    }
+}
+
+/// The PJRT path runs the full FP32 ResNet18 (96px) artifact end to end.
+#[test]
+fn pjrt_runs_full_resnet_artifact() {
+    let Some(dir) = artifacts_dir() else { return };
+    let stem = dir.join("resnet18_fp32_96");
+    if !stem.with_extension("").exists() && !dir.join("resnet18_fp32_96.hlo.txt").exists() {
+        eprintln!("SKIP: resnet18_fp32_96 artifact missing");
+        return;
+    }
+    let rt = dlrt::runtime::PjrtRuntime::cpu().unwrap();
+    let model = rt.load_hlo(&stem).unwrap();
+    let mut rng = dlrt::util::rng::Rng::new(3);
+    // strictly positive values keep BN variance parameters valid
+    let mut inputs: Vec<Tensor> = model
+        .manifest
+        .params
+        .iter()
+        .map(|(_, shape)| {
+            let n: usize = shape.iter().product::<usize>().max(1);
+            Tensor::new(shape.clone(), (0..n).map(|_| rng.f32() * 0.1 + 0.05).collect())
+                .unwrap()
+        })
+        .collect();
+    let mut x = Tensor::zeros(model.manifest.input_shape.clone());
+    for v in x.data.iter_mut() {
+        *v = rng.f32();
+    }
+    inputs.push(x);
+    let outs = model.run_f32(&inputs).unwrap();
+    assert_eq!(outs[0].shape, vec![1, 1000]);
+    assert!(outs[0].data.iter().all(|v| v.is_finite()));
+}
