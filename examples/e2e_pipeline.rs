@@ -18,7 +18,7 @@ use std::path::Path;
 use std::sync::Arc;
 use std::time::Duration;
 
-use anyhow::{bail, Context, Result};
+use anyhow::{bail, Result};
 use dlrt::bench_harness::{bench_ms, ms, speedup, Table};
 use dlrt::compiler::{compile_graph, load_arch, EngineChoice};
 use dlrt::coordinator::{InferenceServer, ServerConfig};
@@ -73,19 +73,8 @@ fn main() -> Result<()> {
     let t_8 = bench_ms(2, reps, || { ex.run(&int8, &input).unwrap(); });
 
     // PJRT framework baseline: the same architecture AOT-compiled by XLA
-    println!("[4/5] PJRT (XLA CPU) framework baseline ...");
-    let rt = dlrt::runtime::PjrtRuntime::cpu()?;
-    let pjrt = rt.load_hlo(&dir.join("resnet18_mini_2a2w"))?;
-    let mut rng = dlrt::util::rng::Rng::new(5);
-    let mut pj_inputs: Vec<Tensor> = pjrt.manifest.params.iter()
-        .map(|(_, shape)| {
-            let n: usize = shape.iter().product::<usize>().max(1);
-            Tensor::new(shape.clone(), (0..n).map(|_| rng.f32() * 0.1 + 0.05).collect())
-                .unwrap()
-        })
-        .collect();
-    pj_inputs.push(input.clone());
-    let t_pj = bench_ms(1, 5, || { pjrt.run_f32(&pj_inputs).unwrap(); });
+    // (only when the crate was built with the `pjrt` feature)
+    let t_pj = pjrt_baseline(dir, &input)?;
 
     let mut table = Table::new("e2e — resnet18_mini (64px), host CPU, 1 thread",
                                &["engine", "median", "vs FP32-native"]);
@@ -94,8 +83,10 @@ fn main() -> Result<()> {
     table.row(vec!["INT8 native".into(), ms(t_8.median_ms),
                    speedup(t_f.median_ms, t_8.median_ms)]);
     table.row(vec!["FP32 native".into(), ms(t_f.median_ms), "1.00x".into()]);
-    table.row(vec!["XLA/PJRT (quantized graph)".into(), ms(t_pj.median_ms),
-                   speedup(t_f.median_ms, t_pj.median_ms)]);
+    if let Some(t_pj) = t_pj {
+        table.row(vec!["XLA/PJRT (quantized graph)".into(), ms(t_pj),
+                       speedup(t_f.median_ms, t_pj)]);
+    }
     table.print();
     table.save_json("e2e_pipeline");
 
@@ -120,4 +111,30 @@ fn main() -> Result<()> {
     std::fs::remove_file(&dlrt_path).ok();
     println!("\nE2E OK — all five stages composed.");
     Ok(())
+}
+
+/// Median latency of the XLA/PJRT framework baseline, or `None` when the
+/// crate was built without the `pjrt` feature.
+#[cfg(feature = "pjrt")]
+fn pjrt_baseline(dir: &Path, input: &Tensor) -> Result<Option<f64>> {
+    println!("[4/5] PJRT (XLA CPU) framework baseline ...");
+    let rt = dlrt::runtime::PjrtRuntime::cpu()?;
+    let pjrt = rt.load_hlo(&dir.join("resnet18_mini_2a2w"))?;
+    let mut rng = dlrt::util::rng::Rng::new(5);
+    let mut pj_inputs: Vec<Tensor> = pjrt.manifest.params.iter()
+        .map(|(_, shape)| {
+            let n: usize = shape.iter().product::<usize>().max(1);
+            Tensor::new(shape.clone(), (0..n).map(|_| rng.f32() * 0.1 + 0.05).collect())
+                .unwrap()
+        })
+        .collect();
+    pj_inputs.push(input.clone());
+    let t_pj = bench_ms(1, 5, || { pjrt.run_f32(&pj_inputs).unwrap(); });
+    Ok(Some(t_pj.median_ms))
+}
+
+#[cfg(not(feature = "pjrt"))]
+fn pjrt_baseline(_dir: &Path, _input: &Tensor) -> Result<Option<f64>> {
+    println!("[4/5] PJRT baseline skipped (build with `--features pjrt`)");
+    Ok(None)
 }

@@ -2,12 +2,16 @@
 //! bitserial engine:
 //!   (a) thread scaling of the bitserial GEMM,
 //!   (b) bit-width sweep (1..4 bits each side) at fixed shape,
-//!   (c) activation packing cost share (pack+gemm vs gemm alone).
+//!   (c) activation packing cost share (pack+gemm vs gemm alone),
+//!   (d) M×N cache-tile sweep around the kernel's `TILE_M`×`TILE_N` default.
 //!
 //! Run: `cargo bench --bench ablation_tiling`
 
 use dlrt::bench_harness::{bench_ms, ms, Table};
-use dlrt::kernels::bitserial::{gemm_bitserial, pack_rows_u8, pack_weights_offset};
+use dlrt::kernels::bitserial::{
+    gemm_bitserial, gemm_bitserial_tiled, pack_rows_u8, pack_weights_offset, MAX_TILE_M,
+    TILE_M, TILE_N,
+};
 use dlrt::util::rng::Rng;
 
 fn main() {
@@ -74,4 +78,45 @@ fn main() {
                format!("{:.0}%", 100.0 * t_gemm.median_ms / total)]);
     t.print();
     t.save_json("ablation_pack");
+
+    // ---- (d) cache-tile sweep --------------------------------------------
+    // Same 2A2W shape; the default (TILE_M, TILE_N) should be the fastest
+    // configuration or within ~5% of the best measured one.
+    let codes: Vec<u8> = (0..m * k).map(|_| rng.usize(4) as u8).collect();
+    let ap = pack_rows_u8(&codes, m, k, 2);
+    let nthreads = 4;
+    let mut t = Table::new(
+        "Ablation (d): M×N cache-tile sweep (784x1152x128, 2A2W, 4 threads)",
+        &["tile (M,N)", "median", "vs default"],
+    );
+    let t_default = bench_ms(2, 9, || {
+        gemm_bitserial_tiled(&ap, &wp, 2, &mut out, nthreads, TILE_M, TILE_N)
+    })
+    .median_ms;
+    let mut best = (t_default, TILE_M, TILE_N);
+    for (tm, tn) in [
+        (8usize, 8usize), (16, 8), (16, 16), (32, 8), (TILE_M, TILE_N), (32, 32),
+        (64, 16), (64, 32), (MAX_TILE_M, 64),
+    ] {
+        let med = if (tm, tn) == (TILE_M, TILE_N) {
+            t_default
+        } else {
+            bench_ms(2, 9, || gemm_bitserial_tiled(&ap, &wp, 2, &mut out, nthreads, tm, tn))
+                .median_ms
+        };
+        if med < best.0 {
+            best = (med, tm, tn);
+        }
+        let tag = if (tm, tn) == (TILE_M, TILE_N) { " (default)" } else { "" };
+        t.row(vec![format!("({tm},{tn}){tag}"), ms(med),
+                   format!("{:.2}x", t_default / med)]);
+    }
+    t.print();
+    t.save_json("ablation_tiles");
+    let slowdown = 100.0 * (t_default / best.0 - 1.0);
+    println!(
+        "default ({TILE_M},{TILE_N}) = {}; best ({},{}) = {} — default is {:.1}% off best{}",
+        ms(t_default), best.1, best.2, ms(best.0), slowdown,
+        if slowdown <= 5.0 { " [OK: within 5%]" } else { " [WARN: retune TILE_M/TILE_N]" },
+    );
 }

@@ -66,26 +66,36 @@ fn main() {
                format!("{:.2}x", t_f.median_ms / t_q.median_ms)]);
 
     // XLA/PJRT framework baseline (the ONNX-Runtime role), same 96px graph
-    let stem = std::path::Path::new("artifacts/resnet18_fp32_96");
-    if stem.with_extension("hlo.txt").exists()
-        || std::path::Path::new("artifacts/resnet18_fp32_96.hlo.txt").exists()
-    {
-        let rt = dlrt::runtime::PjrtRuntime::cpu().unwrap();
-        let model = rt.load_hlo(stem).unwrap();
-        let mut inputs: Vec<Tensor> = model.manifest.params.iter()
-            .map(|(_, shape)| {
-                let n: usize = shape.iter().product::<usize>().max(1);
-                Tensor::new(shape.clone(),
-                            (0..n).map(|_| rng.f32() * 0.1 + 0.05).collect()).unwrap()
-            })
-            .collect();
-        inputs.push(x.clone());
-        let t_pj = bench_ms(1, 5, || { model.run_f32(&inputs).unwrap(); });
-        m.row(vec!["XLA/PJRT FP32 (framework baseline)".into(), ms(t_pj.median_ms),
-                   format!("{:.2}x", t_f.median_ms / t_pj.median_ms)]);
-    } else {
-        println!("(PJRT row skipped: run `make artifacts`)");
-    }
+    pjrt_row(&mut m, &mut rng, &x, t_f.median_ms);
     m.print();
     m.save_json("fig7_measured");
+}
+
+#[cfg(feature = "pjrt")]
+fn pjrt_row(m: &mut Table, rng: &mut Rng, x: &Tensor, t_f_ms: f64) {
+    let stem = std::path::Path::new("artifacts/resnet18_fp32_96");
+    if !stem.with_extension("hlo.txt").exists()
+        && !std::path::Path::new("artifacts/resnet18_fp32_96.hlo.txt").exists()
+    {
+        println!("(PJRT row skipped: run `make artifacts`)");
+        return;
+    }
+    let rt = dlrt::runtime::PjrtRuntime::cpu().unwrap();
+    let model = rt.load_hlo(stem).unwrap();
+    let mut inputs: Vec<Tensor> = model.manifest.params.iter()
+        .map(|(_, shape)| {
+            let n: usize = shape.iter().product::<usize>().max(1);
+            Tensor::new(shape.clone(),
+                        (0..n).map(|_| rng.f32() * 0.1 + 0.05).collect()).unwrap()
+        })
+        .collect();
+    inputs.push(x.clone());
+    let t_pj = bench_ms(1, 5, || { model.run_f32(&inputs).unwrap(); });
+    m.row(vec!["XLA/PJRT FP32 (framework baseline)".into(), ms(t_pj.median_ms),
+               format!("{:.2}x", t_f_ms / t_pj.median_ms)]);
+}
+
+#[cfg(not(feature = "pjrt"))]
+fn pjrt_row(_m: &mut Table, _rng: &mut Rng, _x: &Tensor, _t_f_ms: f64) {
+    println!("(PJRT row skipped: build with `--features pjrt` and run `make artifacts`)");
 }

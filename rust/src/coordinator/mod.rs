@@ -64,6 +64,9 @@ pub struct InferenceServer {
 
 impl InferenceServer {
     pub fn start(model: Arc<CompiledModel>, cfg: ServerConfig) -> InferenceServer {
+        // Warm the persistent kernel pool before accepting traffic so no
+        // request — not even the first — pays thread-spawn latency.
+        crate::util::threads::global();
         let shared = Arc::new(Shared {
             queue: Mutex::new(Vec::new()),
             cv: Condvar::new(),
@@ -123,10 +126,20 @@ impl Drop for InferenceServer {
 }
 
 fn worker_loop(shared: &Shared, model: &CompiledModel) {
+    // Each coordinator worker owns its executor — and through it a long-lived
+    // handle on the persistent kernel pool — for its whole lifetime.
     let mut exec = Executor::new(shared.cfg.threads_per_worker);
     loop {
         let batch = batcher::collect_batch(shared);
         let Some(batch) = batch else { return }; // stop signal
+        // Queue latency ends at dequeue: record it per request here, before
+        // executing, so the batch's exec time is never subtracted from late
+        // joiners (which under-reported queueing as clamped negatives).
+        let dequeued = Instant::now();
+        let queue_ms: Vec<f64> = batch
+            .iter()
+            .map(|r| dequeued.saturating_duration_since(r.enqueued).as_secs_f64() * 1e3)
+            .collect();
         let n = batch.len();
         let stacked = batcher::stack_inputs(&batch.iter().map(|r| &r.input).collect::<Vec<_>>());
         let t0 = Instant::now();
@@ -137,8 +150,7 @@ fn worker_loop(shared: &Shared, model: &CompiledModel) {
                 for (bi, req) in batch.into_iter().enumerate() {
                     let per: Result<Vec<Tensor>> =
                         outputs.iter().map(|o| batcher::slice_batch(o, bi)).collect();
-                    let queue_ms = req.enqueued.elapsed().as_secs_f64() * 1e3 - exec_ms;
-                    shared.metrics.observe(queue_ms.max(0.0), exec_ms, n);
+                    shared.metrics.observe(queue_ms[bi], exec_ms, n);
                     let _ = req.tx.send(per);
                 }
             }

@@ -18,6 +18,7 @@
 pub mod params;
 
 use crate::dlrt::graph::{Graph, Op, QCfg};
+use crate::kernels::bitserial::{TILE_M, TILE_N};
 pub use params::{cpu_by_name, CpuParams, CORTEX_A53, CORTEX_A57, CORTEX_A72,
                  JETSON_NANO_GPU};
 
@@ -53,7 +54,12 @@ pub fn conv_cost_s(
             let words = k.div_ceil(64) as f64;
             let word_ops = rows as f64 * cout as f64 * words
                 * (w_bits as f64 * a_bits as f64 + 0.5 /* row-sum correction */);
-            let gemm = word_ops / (cpu.bitops_per_cycle * hz * eff_cores);
+            // The blocked kernel refetches each weight-plane word once per
+            // M-tile and each activation word once per N-tile; everything
+            // else stays cache/register resident, so the amortized reload
+            // overhead per word-op follows the kernel's tile constants.
+            let tile_reload = 1.0 + 1.0 / TILE_M as f64 + 1.0 / TILE_N as f64;
+            let gemm = word_ops * tile_reload / (cpu.bitops_per_cycle * hz * eff_cores);
             // im2col + quantize + pack: ~3 passes over rows*k bytes
             let pack = 3.0 * (rows * k) as f64
                 / (cpu.bytes_per_cycle_scalar * hz * eff_cores);

@@ -12,12 +12,13 @@ use anyhow::{anyhow, bail, Result};
 
 use crate::dlrt::graph::{qp_qn, Graph, Node, Op};
 use crate::dlrt::tensor::{Packed, Tensor};
-use crate::kernels::bitserial::{dequant_scale_bias, gemm_bitserial, pack_rows_u8};
+use crate::kernels::bitserial::{dequant_scale_bias, gemm_bitserial, pack_rows_u8_into};
 use crate::kernels::elementwise as ew;
 use crate::kernels::fp32::{gemm_rowmajor_bt, scale_bias_rows};
 use crate::kernels::im2col::{im2col_f32, im2col_quant_u8, ConvDims};
 use crate::kernels::int8::gemm_u8i8_i32;
 use crate::kernels::pool;
+use crate::util::threads;
 
 /// Which engine executes a conv layer (chosen by the compiler).
 #[derive(Clone, Debug)]
@@ -91,21 +92,37 @@ impl CompiledModel {
 }
 
 /// Executor with reusable scratch buffers (one instance per worker thread).
+///
+/// Scratch (im2col columns, packed activation planes, i32 accumulators)
+/// grows to the largest layer and is then reused: at steady state the
+/// bitserial conv path performs no heap allocation and — via the persistent
+/// kernel pool handle taken at construction — no thread spawning.
 pub struct Executor {
     pub nthreads: usize,
+    pool: &'static threads::ThreadPool,
     scratch_cols_f32: Vec<f32>,
     scratch_cols_u8: Vec<u8>,
     scratch_acc: Vec<i32>,
+    scratch_packed: Packed,
 }
 
 impl Executor {
     pub fn new(nthreads: usize) -> Executor {
         Executor {
             nthreads,
+            // grab (and, on first use, spin up) the process-wide kernel pool
+            // here so no inference pays thread-spawn latency
+            pool: threads::global(),
             scratch_cols_f32: Vec::new(),
             scratch_cols_u8: Vec::new(),
             scratch_acc: Vec::new(),
+            scratch_packed: Packed::new_zeroed(0, 0, 1),
         }
+    }
+
+    /// The persistent kernel worker pool this executor dispatches to.
+    pub fn pool(&self) -> &'static threads::ThreadPool {
+        self.pool
     }
 
     /// Run the model on `input` (NHWC; batch may differ from the nominal
@@ -221,6 +238,14 @@ impl Executor {
             }
             Op::Add => {
                 let (a, b) = (input(0)?, input(1)?);
+                if a.shape != b.shape {
+                    bail!(
+                        "{}: add shape mismatch {:?} vs {:?}",
+                        node.name,
+                        a.shape,
+                        b.shape
+                    );
+                }
                 let mut out = Tensor::zeros(a.shape.clone());
                 ew::add(&a.data, &b.data, &mut out.data);
                 out
@@ -228,7 +253,26 @@ impl Executor {
             Op::Concat => {
                 let ts: Vec<&Tensor> =
                     (0..node.inputs.len()).map(input).collect::<Result<_>>()?;
+                if ts.is_empty() {
+                    bail!("{}: concat with no inputs", node.name);
+                }
+                for t in &ts {
+                    if t.shape.len() != 4 {
+                        bail!("{}: concat expects rank-4 NHWC, got {:?}", node.name, t.shape);
+                    }
+                }
                 let (n, h, w, _) = ts[0].nhwc();
+                for t in &ts[1..] {
+                    let (n2, h2, w2, _) = t.nhwc();
+                    if (n2, h2, w2) != (n, h, w) {
+                        bail!(
+                            "{}: concat spatial mismatch {:?} vs {:?}",
+                            node.name,
+                            t.shape,
+                            ts[0].shape
+                        );
+                    }
+                }
                 let rows = n * h * w;
                 let parts: Vec<(&[f32], usize)> =
                     ts.iter().map(|t| (t.data.as_slice(), t.shape[3])).collect();
@@ -280,10 +324,10 @@ impl Executor {
                 let (qp_a, _) = qp_qn(*a_bits, false);
                 self.scratch_cols_u8.resize(rows * patch, 0);
                 im2col_quant_u8(&x.data, d, *s_a, qp_a as u8, &mut self.scratch_cols_u8);
-                let ap = pack_rows_u8(&self.scratch_cols_u8, rows, patch,
-                                      *a_bits as usize);
+                pack_rows_u8_into(&self.scratch_cols_u8, rows, patch,
+                                  *a_bits as usize, &mut self.scratch_packed);
                 self.scratch_acc.resize(rows * cout, 0);
-                gemm_bitserial(&ap, packed, *w_bits as usize,
+                gemm_bitserial(&self.scratch_packed, packed, *w_bits as usize,
                                &mut self.scratch_acc[..rows * cout], self.nthreads);
                 dequant_scale_bias(&self.scratch_acc[..rows * cout], cout,
                                    s_a * s_w, &conv.scale, &conv.bias, &mut out.data);

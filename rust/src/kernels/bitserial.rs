@@ -22,17 +22,44 @@ use crate::dlrt::graph::qp_qn;
 use crate::dlrt::tensor::Packed;
 use crate::util::threads;
 
+/// Max bitplanes per side the packing paths support (codes are `u8`).
+pub const MAX_BITS: usize = 8;
+
 /// Pack unsigned activation codes (`u8`, values < 2^bits) row-major.
 pub fn pack_rows_u8(codes: &[u8], rows: usize, k: usize, bits: usize) -> Packed {
-    debug_assert_eq!(codes.len(), rows * k);
     let mut p = Packed::new_zeroed(rows, k, bits);
+    fill_packed(codes, &mut p);
+    p
+}
+
+/// In-place variant of [`pack_rows_u8`]: reshapes `p` and repacks, reusing
+/// its plane buffer — zero heap allocation once the buffer has grown to the
+/// largest layer (the executor's steady-state path).
+pub fn pack_rows_u8_into(codes: &[u8], rows: usize, k: usize, bits: usize, p: &mut Packed) {
+    let wpr = Packed::words_for(k);
+    p.rows = rows;
+    p.k = k;
+    p.bits = bits;
+    p.words_per_row = wpr;
+    p.data.clear();
+    p.data.resize(rows * bits * wpr, 0);
+    fill_packed(codes, p);
+}
+
+fn fill_packed(codes: &[u8], p: &mut Packed) {
+    let (rows, k, bits) = (p.rows, p.k, p.bits);
+    assert!(
+        (1..=MAX_BITS).contains(&bits),
+        "bits={bits} outside supported 1..={MAX_BITS} range"
+    );
+    debug_assert_eq!(codes.len(), rows * k);
     let wpr = p.words_per_row;
     for r in 0..rows {
         let src = &codes[r * k..(r + 1) * k];
         let base = r * bits * wpr;
         for (jw, chunk) in src.chunks(64).enumerate() {
             // branchless bit-scatter: plane i collects bit i of every code
-            let mut words = [0u64; 4]; // bits <= 4 supported on this path
+            let mut words = [0u64; MAX_BITS];
             match bits {
                 1 => {
                     let mut w0 = 0u64;
@@ -63,7 +90,6 @@ pub fn pack_rows_u8(codes: &[u8], rows: usize, k: usize, bits: usize) -> Packed 
             }
         }
     }
-    p
 }
 
 /// Pack signed weight codes (`[-Q_N, Q_P]`) with the offset encoding.
@@ -92,10 +118,22 @@ pub fn row_code_sum(p: &Packed, row: usize) -> i32 {
     s as i32
 }
 
+/// Default M (activation-row) tile of the blocked bitserial GEMM. One M-tile
+/// of packed activation planes stays L1-resident while the kernel walks the
+/// weight blocks — the paper's q-register amortization, at cache scale.
+/// Read by `costmodel` and swept by `benches/ablation_tiling.rs`.
+pub const TILE_M: usize = 32;
+/// Default N (output-channel) tile: this many packed weight rows stay
+/// resident across a whole M-tile.
+pub const TILE_N: usize = 16;
+/// Upper bound on the M tile (sizes the stack-resident correction buffer).
+pub const MAX_TILE_M: usize = 128;
+
 /// Bitserial GEMM: `out[m][n] = Σ_k a[m][k] * (w[n][k] signed)` in i32.
 ///
 /// `a`: packed unsigned activations (M rows), `w`: packed offset-encoded
 /// weights (N rows), `w_bits_signed`: the signed bit width (for Q_N).
+/// Cache-tiled with the default [`TILE_M`]×[`TILE_N`] blocking.
 pub fn gemm_bitserial(
     a: &Packed,
     w: &Packed,
@@ -103,22 +141,60 @@ pub fn gemm_bitserial(
     out: &mut [i32],
     nthreads: usize,
 ) {
+    gemm_bitserial_tiled(a, w, w_bits_signed, out, nthreads, TILE_M, TILE_N)
+}
+
+/// [`gemm_bitserial`] with explicit M×N tile sizes (the ablation bench
+/// sweeps these; `tile_m` is clamped to [`MAX_TILE_M`]).
+///
+/// M rows are split into disjoint `&mut` row chunks across the worker pool
+/// (no aliased writes); within a chunk the loop nest is
+/// `m-tile → n-tile → row → channel`, so a block of `tile_n` packed weight
+/// rows is reused by every row of the M-tile while both stay cache-hot.
+/// All arithmetic is exact integer, so tiling cannot change results.
+pub fn gemm_bitserial_tiled(
+    a: &Packed,
+    w: &Packed,
+    w_bits_signed: usize,
+    out: &mut [i32],
+    nthreads: usize,
+    tile_m: usize,
+    tile_n: usize,
+) {
     assert_eq!(a.k, w.k, "reduction dim mismatch");
     assert_eq!(a.words_per_row, w.words_per_row);
     let (m, n) = (a.rows, w.rows);
     assert_eq!(out.len(), m * n);
     let (_, qn) = qp_qn(w_bits_signed as u8, true);
+    if m == 0 || n == 0 {
+        return;
+    }
+    let tile_m = tile_m.clamp(1, MAX_TILE_M);
+    let tile_n = tile_n.max(1);
 
-    threads::par_ranges(m, nthreads, |lo, hi| {
-        // rows [lo, hi) are written by exactly one worker
-        let out_ptr = out.as_ptr() as *mut i32;
-        for mi in lo..hi {
-            let a_sum = row_code_sum(a, mi);
-            let corr = qn * a_sum;
-            for ni in 0..n {
-                let acc = dot_planes(a, mi, w, ni);
-                unsafe { *out_ptr.add(mi * n + ni) = acc - corr };
+    threads::par_chunks_rows(out, n, nthreads, |row0, chunk| {
+        let rows = chunk.len() / n;
+        // per-row signed-offset corrections for the current M-tile
+        let mut corr = [0i32; MAX_TILE_M];
+        let mut mt = 0;
+        while mt < rows {
+            let mt_end = (mt + tile_m).min(rows);
+            for (c, mi) in corr.iter_mut().zip(mt..mt_end) {
+                *c = qn * row_code_sum(a, row0 + mi);
             }
+            let mut nt = 0;
+            while nt < n {
+                let nt_end = (nt + tile_n).min(n);
+                for mi in mt..mt_end {
+                    let c = corr[mi - mt];
+                    let orow = &mut chunk[mi * n + nt..mi * n + nt_end];
+                    for (j, o) in orow.iter_mut().enumerate() {
+                        *o = dot_planes(a, row0 + mi, w, nt + j) - c;
+                    }
+                }
+                nt = nt_end;
+            }
+            mt = mt_end;
         }
     });
 }
@@ -276,6 +352,89 @@ mod tests {
                 let want = naive_gemm_i32(&a, &w, m, n, k);
                 prop::ensure(out == want, format!("ab={ab} wb={wb} m={m} n={n} k={k}"))
             });
+        }
+    }
+
+    #[test]
+    fn pack_supports_up_to_8_bits() {
+        // regression: the generic path used a [0u64; 4] scratch and silently
+        // dropped planes 4.. for bits > 4, returning wrong results.
+        prop::check(30, |rng, _| {
+            let bits = rng.usize(super::MAX_BITS) + 1;
+            let rows = rng.usize(4) + 1;
+            let k = rng.usize(150) + 1;
+            let codes: Vec<u8> = (0..rows * k).map(|_| rng.usize(1 << bits) as u8).collect();
+            let p = pack_rows_u8(&codes, rows, k, bits);
+            let codes32: Vec<u32> = codes.iter().map(|&v| v as u32).collect();
+            let want = crate::dlrt::tensor::Packed::pack(&codes32, rows, k, bits);
+            prop::ensure(p == want, format!("bits={bits} rows={rows} k={k}"))
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "outside supported")]
+    fn pack_rejects_more_than_8_bits() {
+        pack_rows_u8(&[0u8; 4], 1, 4, 9);
+    }
+
+    #[test]
+    fn pack_into_reuses_buffer_and_matches() {
+        let mut rng = crate::util::rng::Rng::new(21);
+        let mut scratch = crate::dlrt::tensor::Packed::new_zeroed(0, 0, 1);
+        // biggest layer first: later repacks must not reallocate
+        for &(rows, k, bits) in &[(40usize, 200usize, 3usize), (7, 130, 2), (12, 65, 8)] {
+            let codes: Vec<u8> = (0..rows * k).map(|_| rng.usize(1 << bits) as u8).collect();
+            pack_rows_u8_into(&codes, rows, k, bits, &mut scratch);
+            assert_eq!(scratch, pack_rows_u8(&codes, rows, k, bits), "{rows}x{k}@{bits}");
+        }
+    }
+
+    #[test]
+    fn gemm_matches_naive_high_bits() {
+        for &(ab, wb) in &[(5usize, 2usize), (2, 5), (8, 3), (6, 6)] {
+            prop::check(8, |rng, _| {
+                let m = rng.usize(5) + 1;
+                let n = rng.usize(5) + 1;
+                let k = rng.usize(80) + 1;
+                let (qp, qn) = qp_qn(wb as u8, true);
+                let a: Vec<u8> = (0..m * k).map(|_| rng.usize(1 << ab) as u8).collect();
+                let w: Vec<i32> = (0..n * k)
+                    .map(|_| rng.range(-(qn as i64), qp as i64 + 1) as i32)
+                    .collect();
+                let ap = pack_rows_u8(&a, m, k, ab);
+                let wp = pack_weights_offset(&w, n, k, wb);
+                let mut out = vec![0i32; m * n];
+                gemm_bitserial(&ap, &wp, wb, &mut out, 1);
+                let want = naive_gemm_i32(&a, &w, m, n, k);
+                prop::ensure(out == want, format!("ab={ab} wb={wb} m={m} n={n} k={k}"))
+            });
+        }
+    }
+
+    #[test]
+    fn tiled_matches_naive_at_tile_boundaries() {
+        // shapes straddling the M/N tile edges, plus degenerate and oversized
+        // explicit tiles — the blocked kernel must stay bit-exact everywhere.
+        let mut rng = crate::util::rng::Rng::new(77);
+        let k = 130; // 3 words per plane, not a multiple of 64
+        for &m in &[1usize, TILE_M - 1, TILE_M, TILE_M + 1, 2 * TILE_M + 3] {
+            for &n in &[1usize, TILE_N - 1, TILE_N, TILE_N + 1, 3 * TILE_N + 5] {
+                let a: Vec<u8> = (0..m * k).map(|_| rng.usize(4) as u8).collect();
+                let w: Vec<i32> = (0..n * k).map(|_| rng.range(-2, 2) as i32).collect();
+                let ap = pack_rows_u8(&a, m, k, 2);
+                let wp = pack_weights_offset(&w, n, k, 2);
+                let want = naive_gemm_i32(&a, &w, m, n, k);
+                for threads in [1usize, 3] {
+                    let mut got = vec![0i32; m * n];
+                    gemm_bitserial(&ap, &wp, 2, &mut got, threads);
+                    assert_eq!(got, want, "m={m} n={n} threads={threads}");
+                }
+                for &(tm, tn) in &[(1usize, 1usize), (4, 4), (MAX_TILE_M, 64)] {
+                    let mut got = vec![0i32; m * n];
+                    gemm_bitserial_tiled(&ap, &wp, 2, &mut got, 2, tm, tn);
+                    assert_eq!(got, want, "m={m} n={n} tile=({tm},{tn})");
+                }
+            }
         }
     }
 

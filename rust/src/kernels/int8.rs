@@ -14,12 +14,14 @@ pub fn gemm_u8i8_i32(a: &[u8], b: &[i8], m: usize, n: usize, k: usize,
     debug_assert_eq!(a.len(), m * k);
     debug_assert_eq!(b.len(), n * k);
     debug_assert_eq!(out.len(), m * n);
-    threads::par_ranges(m, nthreads, |lo, hi| {
-        // SAFETY of the cast: rows [lo, hi) are disjoint per worker.
-        let out_ptr = out.as_ptr() as *mut i32;
-        for i in lo..hi {
-            let arow = &a[i * k..(i + 1) * k];
-            for j in 0..n {
+    if m == 0 || n == 0 {
+        return;
+    }
+    threads::par_chunks_rows(out, n, nthreads, |row0, chunk| {
+        // each worker owns a disjoint &mut block of whole output rows
+        for (i, orow) in chunk.chunks_mut(n).enumerate() {
+            let arow = &a[(row0 + i) * k..(row0 + i + 1) * k];
+            for (j, o) in orow.iter_mut().enumerate() {
                 let brow = &b[j * k..(j + 1) * k];
                 let mut s0: i32 = 0;
                 let mut s1: i32 = 0;
@@ -33,7 +35,7 @@ pub fn gemm_u8i8_i32(a: &[u8], b: &[i8], m: usize, n: usize, k: usize,
                 if kk < k {
                     s0 += arow[kk] as i32 * brow[kk] as i32;
                 }
-                unsafe { *out_ptr.add(i * n + j) = s0 + s1 };
+                *o = s0 + s1;
             }
         }
     });

@@ -28,6 +28,8 @@
 //! * [`exec`] — graph executor with arena memory planning.
 //! * [`runtime`] — PJRT client wrapper that loads JAX-AOT HLO artifacts
 //!   (the framework-baseline engine; python never runs at request time).
+//!   Gated behind the off-by-default `pjrt` cargo feature: it needs the
+//!   `xla` crate + an XLA toolchain, which plain toolchains lack.
 //! * [`coordinator`] — serving layer: request router, dynamic batcher,
 //!   worker pool, detection postprocessing.
 //! * [`costmodel`] — analytical Cortex-A53/A72/A57 latency projection.
@@ -45,6 +47,7 @@ pub mod exec;
 pub mod kernels;
 pub mod models;
 pub mod quant;
+#[cfg(feature = "pjrt")]
 pub mod runtime;
 pub mod util;
 

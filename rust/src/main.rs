@@ -279,6 +279,13 @@ fn cmd_serve(args: &Args) -> Result<()> {
     Ok(())
 }
 
+#[cfg(not(feature = "pjrt"))]
+fn cmd_pjrt(_args: &Args) -> Result<()> {
+    bail!("this binary was built without the `pjrt` feature; \
+           rebuild with `cargo build --features pjrt` (needs the xla crate)")
+}
+
+#[cfg(feature = "pjrt")]
 fn cmd_pjrt(args: &Args) -> Result<()> {
     let stem = args.positional.first().context("usage: dlrt pjrt <artifact_stem>")?;
     let rt = dlrt::runtime::PjrtRuntime::cpu()?;

@@ -9,6 +9,10 @@
 //! Wiring (see /opt/xla-example/load_hlo): HLO **text** is the interchange —
 //! jax ≥ 0.5 emits protos with 64-bit instruction ids that xla_extension
 //! 0.5.1 rejects; the text parser reassigns ids.
+//!
+//! Only compiled with the `pjrt` cargo feature: this module needs the `xla`
+//! crate (not part of the offline vendored set — see `Cargo.toml`) and an
+//! XLA toolchain on the host.
 
 use std::path::{Path, PathBuf};
 

@@ -1,39 +1,248 @@
-//! Scoped data-parallel helpers (rayon stand-in).
+//! Persistent-pool data-parallel helpers (rayon stand-in).
 //!
 //! The kernels parallelize over output rows the way the paper's Arm kernels
 //! parallelize over output tiles: disjoint chunks, no shared mutable state.
-//! Built on `std::thread::scope`, so borrows of the surrounding stack work.
+//!
+//! Earlier revisions spawned fresh OS threads per GEMM call via
+//! `std::thread::scope`; under serving load that put a thread-spawn on every
+//! inference. The pool below is created once ([`global`]) and reused by every
+//! kernel call for the lifetime of the process: callers enqueue
+//! lifetime-erased range jobs, run the first chunk themselves, help drain
+//! their own remaining jobs, and block until a stack-allocated latch reaches
+//! zero — which is also what makes the lifetime erasure sound (the borrowed
+//! closure and latch outlive every job execution).
+//!
+//! `par_ranges` / `par_chunks_rows` keep their original signatures, so all
+//! kernels migrated to the pool transparently.
+
+use std::collections::VecDeque;
+use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex, OnceLock};
+use std::thread::{Thread, ThreadId};
+use std::time::Duration;
 
 /// Number of worker threads to use by default (overridable per call).
 pub fn default_threads() -> usize {
     std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
 }
 
-/// Split `out` into `nthreads` contiguous chunks of whole `row_len` rows and
-/// run `f(first_row_index, chunk)` on each in parallel.
-pub fn par_chunks_rows<F>(out: &mut [f32], row_len: usize, nthreads: usize, f: F)
+/// One unit of work: `call(ctx, lo, hi)` then count down `latch`.
+///
+/// `ctx` points at the submitting call's closure and `latch` at its stack
+/// frame; both stay valid because `run_partitioned` blocks until the latch
+/// reaches zero before returning.
+struct Job {
+    call: unsafe fn(*const (), usize, usize),
+    ctx: *const (),
+    lo: usize,
+    hi: usize,
+    latch: *const Latch,
+}
+
+// SAFETY: the raw pointers are only dereferenced while the submitting thread
+// is blocked in `run_partitioned`, which keeps the pointees alive.
+unsafe impl Send for Job {}
+
+unsafe fn call_closure<F: Fn(usize, usize) + Sync>(ctx: *const (), lo: usize, hi: usize) {
+    unsafe { (*(ctx as *const F))(lo, hi) }
+}
+
+/// Runs one job, counting the latch down even if the closure panics; the
+/// panic is recorded on the latch and re-raised on the submitting thread
+/// (matching the old `thread::scope` propagation). Never unwinds, so pool
+/// workers survive panicking jobs and latches always reach zero.
+fn run_job(job: &Job) {
+    let result =
+        catch_unwind(AssertUnwindSafe(|| unsafe { (job.call)(job.ctx, job.lo, job.hi) }));
+    // SAFETY: the latch outlives the job (the submitter waits on it).
+    let latch = unsafe { &*job.latch };
+    if result.is_err() {
+        latch.poisoned.store(true, Ordering::Release);
+    }
+    latch.count_down(); // must be the last touch of the latch
+}
+
+/// Stack-allocated completion latch — no heap allocation per kernel call.
+struct Latch {
+    remaining: AtomicUsize,
+    poisoned: AtomicBool,
+    owner: Thread,
+}
+
+impl Latch {
+    fn new(count: usize) -> Latch {
+        Latch {
+            remaining: AtomicUsize::new(count),
+            poisoned: AtomicBool::new(false),
+            owner: std::thread::current(),
+        }
+    }
+
+    fn count_down(&self) {
+        // Clone the handle BEFORE the decrement: the instant the owner can
+        // observe zero it may return and pop this latch off its stack, so
+        // `self` must not be touched after the fetch_sub.
+        let owner = self.owner.clone();
+        if self.remaining.fetch_sub(1, Ordering::Release) == 1 {
+            owner.unpark();
+        }
+    }
+
+    fn done(&self) -> bool {
+        self.remaining.load(Ordering::Acquire) == 0
+    }
+}
+
+struct PoolShared {
+    queue: Mutex<VecDeque<Job>>,
+    cv: Condvar,
+}
+
+/// A persistent pool of kernel worker threads (plus the caller, which always
+/// executes the first chunk and helps drain its own jobs).
+pub struct ThreadPool {
+    shared: Arc<PoolShared>,
+    worker_ids: Vec<ThreadId>,
+}
+
+impl ThreadPool {
+    fn with_workers(workers: usize) -> ThreadPool {
+        let shared =
+            Arc::new(PoolShared { queue: Mutex::new(VecDeque::new()), cv: Condvar::new() });
+        let mut worker_ids = Vec::with_capacity(workers);
+        for i in 0..workers {
+            let sh = shared.clone();
+            let handle = std::thread::Builder::new()
+                .name(format!("dlrt-pool-{i}"))
+                .spawn(move || worker_loop(&sh))
+                .expect("spawning pool worker");
+            worker_ids.push(handle.thread().id());
+        }
+        ThreadPool { shared, worker_ids }
+    }
+
+    /// Number of pooled worker threads (callers add themselves per call).
+    pub fn workers(&self) -> usize {
+        self.worker_ids.len()
+    }
+
+    /// Thread ids of the pooled workers (stable for the process lifetime —
+    /// the pool-reuse test asserts kernel chunks never run anywhere else).
+    pub fn worker_ids(&self) -> &[ThreadId] {
+        &self.worker_ids
+    }
+
+    /// Run `f` over `[0, n)` split into up to `nchunks` contiguous ranges of
+    /// `per` items: chunk 0 inline on the caller, the rest on the pool.
+    fn run_partitioned<F>(&self, n: usize, nchunks: usize, per: usize, f: &F)
+    where
+        F: Fn(usize, usize) + Sync,
+    {
+        let offloaded = n.div_ceil(per).min(nchunks) - 1;
+        let latch = Latch::new(offloaded);
+        {
+            let mut q = self.shared.queue.lock().unwrap();
+            for t in 1..nchunks {
+                let lo = t * per;
+                if lo >= n {
+                    break;
+                }
+                let hi = ((t + 1) * per).min(n);
+                q.push_back(Job {
+                    call: call_closure::<F>,
+                    ctx: f as *const F as *const (),
+                    lo,
+                    hi,
+                    latch: &latch,
+                });
+            }
+        }
+        self.shared.cv.notify_all();
+        // The inline chunk runs under catch_unwind: this frame holds the
+        // closure and latch the queued jobs point at, so it must stay alive
+        // until the latch hits zero even if our own chunk panics.
+        let inline = catch_unwind(AssertUnwindSafe(|| f(0, per.min(n))));
+        // Help drain our own jobs (never other callers' — keeps chunk
+        // execution on pool workers + the submitting thread only, and makes
+        // nested submission from a worker deadlock-free), then wait.
+        while !latch.done() {
+            if let Some(job) = self.pop_job_for(&latch) {
+                run_job(&job);
+            } else {
+                std::thread::park_timeout(Duration::from_micros(100));
+            }
+        }
+        // All jobs are done; the borrowed closure/latch are no longer
+        // referenced anywhere, so panics may propagate to the caller now.
+        if let Err(payload) = inline {
+            resume_unwind(payload);
+        }
+        if latch.poisoned.load(Ordering::Acquire) {
+            panic!("a kernel chunk panicked on the worker pool");
+        }
+    }
+
+    fn pop_job_for(&self, latch: *const Latch) -> Option<Job> {
+        let mut q = self.shared.queue.lock().unwrap();
+        let idx = q.iter().position(|j| std::ptr::eq(j.latch, latch))?;
+        q.remove(idx)
+    }
+}
+
+fn worker_loop(shared: &PoolShared) {
+    loop {
+        let job = {
+            let mut q = shared.queue.lock().unwrap();
+            loop {
+                if let Some(j) = q.pop_front() {
+                    break j;
+                }
+                q = shared.cv.wait(q).unwrap();
+            }
+        };
+        run_job(&job);
+    }
+}
+
+/// The process-wide kernel pool, created on first use and reused by every
+/// subsequent kernel call. Long-lived components (executors, coordinator
+/// workers) grab this handle once so steady-state traffic never pays
+/// thread-spawn latency.
+pub fn global() -> &'static ThreadPool {
+    static POOL: OnceLock<ThreadPool> = OnceLock::new();
+    POOL.get_or_init(|| ThreadPool::with_workers((default_threads() - 1).max(1)))
+}
+
+/// Raw-pointer wrapper so chunk base addresses can be captured by a `Sync`
+/// closure; soundness comes from workers slicing disjoint row ranges.
+struct SendPtr<T>(*mut T);
+unsafe impl<T> Send for SendPtr<T> {}
+unsafe impl<T> Sync for SendPtr<T> {}
+
+/// Split `out` into up to `nthreads` contiguous chunks of whole `row_len`
+/// rows and run `f(first_row_index, chunk)` on each in parallel (pool).
+pub fn par_chunks_rows<T, F>(out: &mut [T], row_len: usize, nthreads: usize, f: F)
 where
-    F: Fn(usize, &mut [f32]) + Sync,
+    T: Send,
+    F: Fn(usize, &mut [T]) + Sync,
 {
-    let rows = out.len() / row_len;
+    let rows = if row_len == 0 { 0 } else { out.len() / row_len };
     let nthreads = nthreads.max(1).min(rows.max(1));
     if nthreads <= 1 || rows == 0 {
         f(0, out);
         return;
     }
-    let rows_per = rows.div_ceil(nthreads);
-    std::thread::scope(|scope| {
-        let mut rest = out;
-        let mut row0 = 0;
-        while !rest.is_empty() {
-            let take = (rows_per * row_len).min(rest.len());
-            let (chunk, tail) = rest.split_at_mut(take);
-            let fref = &f;
-            let start = row0;
-            scope.spawn(move || fref(start, chunk));
-            row0 += take / row_len;
-            rest = tail;
-        }
+    let total = out.len();
+    let base = SendPtr(out.as_mut_ptr());
+    par_ranges(rows, nthreads, |lo, hi| {
+        let start = lo * row_len;
+        // the final chunk absorbs any trailing partial row
+        let len = if hi == rows { total - start } else { (hi - lo) * row_len };
+        // SAFETY: row ranges [lo, hi) are disjoint across workers, so the
+        // derived &mut sub-slices never alias.
+        let chunk = unsafe { std::slice::from_raw_parts_mut(base.0.add(start), len) };
+        f(lo, chunk);
     });
 }
 
@@ -51,23 +260,15 @@ where
         return;
     }
     let per = n.div_ceil(nthreads);
-    std::thread::scope(|scope| {
-        for t in 0..nthreads {
-            let lo = t * per;
-            let hi = ((t + 1) * per).min(n);
-            if lo >= hi {
-                break;
-            }
-            let fref = &f;
-            scope.spawn(move || fref(lo, hi));
-        }
-    });
+    global().run_partitioned(n, nthreads, per, &f);
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use std::collections::BTreeSet;
     use std::sync::atomic::{AtomicUsize, Ordering};
+    use std::sync::Mutex;
 
     #[test]
     fn par_chunks_covers_all_rows() {
@@ -103,5 +304,79 @@ mod tests {
             assert_eq!(chunk.len(), 4);
         });
         par_ranges(0, 4, |_, _| panic!("no work expected"));
+    }
+
+    #[test]
+    fn par_chunks_rows_is_generic_over_element_type() {
+        let mut data = vec![0i32; 9 * 4];
+        par_chunks_rows(&mut data, 4, 4, |row0, chunk| {
+            for (i, row) in chunk.chunks_mut(4).enumerate() {
+                row.fill((row0 + i) as i32);
+            }
+        });
+        for r in 0..9 {
+            assert!(data[r * 4..(r + 1) * 4].iter().all(|&v| v == r as i32));
+        }
+    }
+
+    #[test]
+    fn pool_reuses_threads_across_calls() {
+        // every chunk of every call must land on a persistent pool worker or
+        // on the calling thread — i.e. no per-call thread spawning.
+        let seen = Mutex::new(BTreeSet::new());
+        for _ in 0..32 {
+            par_ranges(64, 4, |_, _| {
+                seen.lock().unwrap().insert(std::thread::current().id());
+            });
+        }
+        let seen = seen.into_inner().unwrap();
+        let pool = global();
+        let mut allowed: BTreeSet<ThreadId> = pool.worker_ids().iter().copied().collect();
+        allowed.insert(std::thread::current().id());
+        assert!(
+            seen.is_subset(&allowed),
+            "kernel chunks ran outside the persistent pool (per-call spawning?)"
+        );
+        assert!(seen.len() <= pool.workers() + 1);
+    }
+
+    #[test]
+    fn panicking_chunk_propagates_and_pool_survives() {
+        // a panic in any chunk must reach the submitting thread (as with
+        // thread::scope), and must not kill pool workers or leak jobs
+        let res = std::panic::catch_unwind(|| {
+            par_ranges(64, 4, |lo, _| {
+                assert!(lo == 0, "boom on a pooled chunk");
+            });
+        });
+        assert!(res.is_err(), "worker panic was swallowed");
+        let count = AtomicUsize::new(0);
+        par_ranges(50, 4, |lo, hi| {
+            count.fetch_add(hi - lo, Ordering::SeqCst);
+        });
+        assert_eq!(count.load(Ordering::SeqCst), 50, "pool unusable after a panic");
+    }
+
+    #[test]
+    fn concurrent_callers_share_the_pool() {
+        // Loom-free smoke test: many threads hammer the shared pool at once;
+        // every call must still see exactly its own partition.
+        let handles: Vec<_> = (0..8)
+            .map(|t| {
+                std::thread::spawn(move || {
+                    for rep in 0..20 {
+                        let n = 97 + t * 13 + rep;
+                        let sum = AtomicUsize::new(0);
+                        par_ranges(n, 4, |lo, hi| {
+                            sum.fetch_add((lo..hi).sum::<usize>(), Ordering::Relaxed);
+                        });
+                        assert_eq!(sum.load(Ordering::SeqCst), n * (n - 1) / 2);
+                    }
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
     }
 }

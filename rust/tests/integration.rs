@@ -140,7 +140,77 @@ fn threading_does_not_change_results() {
     }
 }
 
+/// Mismatched elementwise input shapes must surface as proper errors from
+/// the executor, not reach the kernels unchecked.
+mod elementwise_shape_validation {
+    use std::collections::BTreeMap;
+
+    use dlrt::compiler::{compile_graph, EngineChoice};
+    use dlrt::exec::Executor;
+    use dlrt::{Graph, Node, Op, Tensor};
+
+    /// input [1,8,8,3] → maxpool/2 [1,4,4,3] → <op>(input, pooled)
+    fn mismatch_graph(op: Op) -> Graph {
+        Graph {
+            name: "mismatch".into(),
+            input_name: "input".into(),
+            input_shape: [1, 8, 8, 3],
+            nodes: vec![
+                Node {
+                    op: Op::MaxPool2d {
+                        kernel: [2, 2],
+                        stride: [2, 2],
+                        padding: [0, 0],
+                    },
+                    name: "pool".into(),
+                    inputs: vec!["input".into()],
+                    output: "pool.out".into(),
+                },
+                Node {
+                    op,
+                    name: "bad".into(),
+                    inputs: vec!["input".into(), "pool.out".into()],
+                    output: "bad.out".into(),
+                },
+            ],
+            outputs: vec!["bad.out".into()],
+            weights: BTreeMap::new(),
+        }
+    }
+
+    #[test]
+    fn add_rejects_mismatched_shapes() {
+        let g = mismatch_graph(Op::Add);
+        g.validate_topology().unwrap();
+        let m = compile_graph(&g, EngineChoice::Auto).unwrap();
+        let mut ex = Executor::new(1);
+        let err = ex.run(&m, &Tensor::zeros(vec![1, 8, 8, 3])).unwrap_err();
+        assert!(format!("{err:#}").contains("add shape mismatch"), "{err:#}");
+    }
+
+    #[test]
+    fn concat_rejects_spatial_mismatch() {
+        let g = mismatch_graph(Op::Concat);
+        let m = compile_graph(&g, EngineChoice::Auto).unwrap();
+        let mut ex = Executor::new(1);
+        let err = ex.run(&m, &Tensor::zeros(vec![1, 8, 8, 3])).unwrap_err();
+        assert!(format!("{err:#}").contains("concat spatial mismatch"), "{err:#}");
+    }
+
+    #[test]
+    fn matching_shapes_still_execute() {
+        // same topology but Add(input, input): shapes agree, runs clean
+        let mut g = mismatch_graph(Op::Add);
+        g.nodes[1].inputs = vec!["input".into(), "input".into()];
+        let m = compile_graph(&g, EngineChoice::Auto).unwrap();
+        let mut ex = Executor::new(1);
+        let out = ex.run(&m, &Tensor::zeros(vec![1, 8, 8, 3])).unwrap();
+        assert_eq!(out[0].shape, vec![1, 8, 8, 3]);
+    }
+}
+
 /// The PJRT path runs the full FP32 ResNet18 (96px) artifact end to end.
+#[cfg(feature = "pjrt")]
 #[test]
 fn pjrt_runs_full_resnet_artifact() {
     let Some(dir) = artifacts_dir() else { return };

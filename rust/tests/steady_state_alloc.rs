@@ -1,0 +1,100 @@
+//! Steady-state audit of the bitserial conv path: once scratch buffers have
+//! grown to the layer's size and the kernel pool exists, a full
+//! im2col → quantize → pack → tiled GEMM → dequant pass must perform **zero
+//! heap allocations** and **zero thread spawns** (the pool-reuse test in
+//! `util::threads` covers the spawning half; this binary counts allocations
+//! through a wrapping global allocator).
+//!
+//! Kept as the only test in this binary so no concurrently running test can
+//! allocate while the counter window is open.
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+
+use dlrt::dlrt::tensor::Packed;
+use dlrt::kernels::bitserial::{
+    dequant_scale_bias, gemm_bitserial, pack_rows_u8_into, pack_weights_offset,
+};
+use dlrt::kernels::im2col::{im2col_quant_u8, ConvDims};
+use dlrt::util::rng::Rng;
+
+struct CountingAlloc;
+
+static COUNTING: AtomicBool = AtomicBool::new(false);
+static ALLOCS: AtomicUsize = AtomicUsize::new(0);
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        if COUNTING.load(Ordering::Relaxed) {
+            ALLOCS.fetch_add(1, Ordering::Relaxed);
+        }
+        unsafe { System.alloc(layout) }
+    }
+
+    unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+        if COUNTING.load(Ordering::Relaxed) {
+            ALLOCS.fetch_add(1, Ordering::Relaxed);
+        }
+        unsafe { System.alloc_zeroed(layout) }
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        if COUNTING.load(Ordering::Relaxed) {
+            ALLOCS.fetch_add(1, Ordering::Relaxed);
+        }
+        unsafe { System.realloc(ptr, layout, new_size) }
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        unsafe { System.dealloc(ptr, layout) }
+    }
+}
+
+#[global_allocator]
+static ALLOCATOR: CountingAlloc = CountingAlloc;
+
+#[test]
+fn bitserial_conv_path_allocates_nothing_at_steady_state() {
+    // a conv-shaped workload: 16x16x8 input, 3x3 kernel, 32 output channels
+    let d = ConvDims::new(1, 16, 16, 8, 3, 3, [1, 1], [1, 1]);
+    let (rows, patch, cout) = (d.rows(), d.patch(), 32usize);
+    let mut rng = Rng::new(9);
+    let x: Vec<f32> = (0..d.n * d.h * d.w * d.c).map(|_| rng.f32()).collect();
+    let wq: Vec<i32> = (0..cout * patch).map(|_| rng.range(-2, 2) as i32).collect();
+    let wp = pack_weights_offset(&wq, cout, patch, 2);
+    let scale = vec![1.0f32; cout];
+    let bias = vec![0.0f32; cout];
+
+    // pre-sized executor-style scratch
+    let mut cols = vec![0u8; rows * patch];
+    let mut packed = Packed::new_zeroed(0, 0, 1);
+    let mut acc = vec![0i32; rows * cout];
+    let mut out = vec![0.0f32; rows * cout];
+    let nthreads = 3; // exercise the pool dispatch path, not just inline
+
+    let mut run = |cols: &mut Vec<u8>, packed: &mut Packed| {
+        im2col_quant_u8(&x, &d, 0.1, 3, cols);
+        pack_rows_u8_into(cols, rows, patch, 2, packed);
+        gemm_bitserial(packed, &wp, 2, &mut acc, nthreads);
+        dequant_scale_bias(&acc, cout, 0.01, &scale, &bias, &mut out);
+    };
+
+    // warm-up: grows every scratch buffer and spins up the worker pool
+    for _ in 0..3 {
+        run(&mut cols, &mut packed);
+    }
+
+    COUNTING.store(true, Ordering::SeqCst);
+    for _ in 0..10 {
+        run(&mut cols, &mut packed);
+    }
+    COUNTING.store(false, Ordering::SeqCst);
+
+    let allocs = ALLOCS.load(Ordering::SeqCst);
+    assert_eq!(
+        allocs, 0,
+        "steady-state bitserial conv path performed {allocs} heap allocations"
+    );
+    // keep the results observable so the loop can't be optimized out
+    assert!(out.iter().all(|v| v.is_finite()));
+}
