@@ -11,6 +11,7 @@ use dlrt::bench_harness::{bench_ms, ms, Table};
 use dlrt::compiler::{compile_graph, EngineChoice};
 use dlrt::costmodel::{self, EngineKind, CORTEX_A57, JETSON_NANO_GPU};
 use dlrt::dlrt::graph::QCfg;
+use dlrt::exec::planner::{build_plan_with, PlanOpts};
 use dlrt::exec::Executor;
 use dlrt::models::build_resnet;
 use dlrt::util::rng::Rng;
@@ -55,15 +56,26 @@ fn main() {
     for v in x.data.iter_mut() {
         *v = rng.f32();
     }
+    // plan ablation: same kernels, fusion + in-place lowering disabled
+    let mut mq_nofuse = mq.clone();
+    mq_nofuse.plan =
+        build_plan_with(&g, PlanOpts { fuse_activations: false, in_place: false }).unwrap();
+
     let mut ex = Executor::new(1);
     let t_f = bench_ms(1, 5, || { ex.run(&mf, &x).unwrap(); });
     let t_8 = bench_ms(1, 5, || { ex.run(&m8, &x).unwrap(); });
     let t_q = bench_ms(1, 5, || { ex.run(&mq, &x).unwrap(); });
+    let t_qn = bench_ms(1, 5, || { ex.run(&mq_nofuse, &x).unwrap(); });
     m.row(vec!["FP32 native".into(), ms(t_f.median_ms), "1.00x".into()]);
     m.row(vec!["INT8 native".into(), ms(t_8.median_ms),
                format!("{:.2}x", t_f.median_ms / t_8.median_ms)]);
-    m.row(vec!["DLRT 2A2W (mixed)".into(), ms(t_q.median_ms),
+    m.row(vec!["DLRT 2A2W (fused plan)".into(), ms(t_q.median_ms),
                format!("{:.2}x", t_f.median_ms / t_q.median_ms)]);
+    m.row(vec!["DLRT 2A2W (unfused plan)".into(), ms(t_qn.median_ms),
+               format!("{:.2}x", t_f.median_ms / t_qn.median_ms)]);
+    println!("fusion ablation: fused {} vs unfused {} ({:.2}x per-inference)",
+             ms(t_q.median_ms), ms(t_qn.median_ms),
+             t_qn.median_ms / t_q.median_ms);
 
     // XLA/PJRT framework baseline (the ONNX-Runtime role), same 96px graph
     pjrt_row(&mut m, &mut rng, &x, t_f.median_ms);

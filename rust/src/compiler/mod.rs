@@ -159,13 +159,12 @@ pub fn parse_arch(arch_text: &str, weights: &[f32]) -> Result<Graph> {
     Ok(g)
 }
 
-/// Compile a weighted graph into an executable model.
+/// Compile a weighted graph into an executable model: per-layer kernels
+/// plus the execution plan lowered by the planner pass pipeline (see
+/// [`crate::exec::planner`]). Static shape mismatches are compile errors.
 pub fn compile_graph(g: &Graph, engine: EngineChoice) -> Result<CompiledModel> {
-    let mut model = CompiledModel {
-        graph: g.clone(),
-        convs: Default::default(),
-        denses: Default::default(),
-    };
+    let mut convs = std::collections::BTreeMap::new();
+    let mut denses = std::collections::BTreeMap::new();
     for node in &g.nodes {
         match &node.op {
             Op::Conv2d { kernel, cin, cout, qcfg, .. } => {
@@ -178,7 +177,7 @@ pub fn compile_graph(g: &Graph, engine: EngineChoice) -> Result<CompiledModel> {
                     bail!("{}: weight size {} != {}", node.name, nw.w.len(), k * cout);
                 }
                 let compiled = compile_conv(nw, k, *cout, kernel, *cin, *qcfg, engine)?;
-                model.convs.insert(node.name.clone(), compiled);
+                convs.insert(node.name.clone(), compiled);
             }
             Op::Dense { cin, cout } => {
                 let nw = g.weights.get(&node.name)
@@ -186,13 +185,13 @@ pub fn compile_graph(g: &Graph, engine: EngineChoice) -> Result<CompiledModel> {
                 if nw.w.len() != cin * cout {
                     bail!("{}: dense weight size mismatch", node.name);
                 }
-                model.denses.insert(node.name.clone(),
-                                    CompiledDense { w: nw.w.clone(), b: nw.bias.clone() });
+                denses.insert(node.name.clone(),
+                              CompiledDense { w: nw.w.clone(), b: nw.bias.clone() });
             }
             _ => {}
         }
     }
-    Ok(model)
+    CompiledModel::new(g.clone(), convs, denses)
 }
 
 fn compile_conv(
@@ -273,6 +272,16 @@ mod tests {
         assert_eq!(m8.engine_summary().get("int8"), Some(&3));
         let mf = compile_graph(&g, EngineChoice::ForceFp32).unwrap();
         assert_eq!(mf.engine_summary().get("fp32"), Some(&3));
+    }
+
+    #[test]
+    fn compiled_model_carries_a_lowered_plan() {
+        let g = tiny_test_graph(true);
+        let m = compile_graph(&g, EngineChoice::Auto).unwrap();
+        // conv+relu pairs fused, flatten-free: 6 nodes lower to 4 instrs
+        assert_eq!(m.plan.instrs.len(), 4);
+        assert_eq!(m.plan.fused_instrs(), 2);
+        assert!(m.plan.arena_elems(1) > 0);
     }
 
     #[test]

@@ -127,8 +127,12 @@ impl Drop for InferenceServer {
 
 fn worker_loop(shared: &Shared, model: &CompiledModel) {
     // Each coordinator worker owns its executor — and through it a long-lived
-    // handle on the persistent kernel pool — for its whole lifetime.
+    // handle on the persistent kernel pool — for its whole lifetime. All
+    // workers run the one execution plan compiled into the shared model;
+    // each keeps a private arena plus reusable output tensors, so at steady
+    // state a batch execution allocates nothing inside the executor.
     let mut exec = Executor::new(shared.cfg.threads_per_worker);
+    let mut outputs: Vec<Tensor> = Vec::new();
     loop {
         let batch = batcher::collect_batch(shared);
         let Some(batch) = batch else { return }; // stop signal
@@ -143,10 +147,10 @@ fn worker_loop(shared: &Shared, model: &CompiledModel) {
         let n = batch.len();
         let stacked = batcher::stack_inputs(&batch.iter().map(|r| &r.input).collect::<Vec<_>>());
         let t0 = Instant::now();
-        let result = stacked.and_then(|x| exec.run(model, &x));
+        let result = stacked.and_then(|x| exec.run_into(model, &x, &mut outputs));
         let exec_ms = t0.elapsed().as_secs_f64() * 1e3;
         match result {
-            Ok(outputs) => {
+            Ok(()) => {
                 for (bi, req) in batch.into_iter().enumerate() {
                     let per: Result<Vec<Tensor>> =
                         outputs.iter().map(|o| batcher::slice_batch(o, bi)).collect();

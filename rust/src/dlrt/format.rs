@@ -287,8 +287,8 @@ pub fn load(path: &Path) -> Result<CompiledModel> {
     let payload = &bytes[16 + hlen..];
 
     let graph = graph_from_json(header.get("graph")?)?;
-    let mut model =
-        CompiledModel { graph, convs: BTreeMap::new(), denses: BTreeMap::new() };
+    let mut model_convs: BTreeMap<String, CompiledConv> = BTreeMap::new();
+    let mut model_denses: BTreeMap<String, CompiledDense> = BTreeMap::new();
 
     if let Json::Obj(convs) = header.get("convs")? {
         for (name, c) in convs {
@@ -320,18 +320,20 @@ pub fn load(path: &Path) -> Result<CompiledModel> {
                 },
                 other => bail!("unknown engine {other:?}"),
             };
-            model.convs.insert(name.clone(), CompiledConv { kernel, scale, bias });
+            model_convs.insert(name.clone(), CompiledConv { kernel, scale, bias });
         }
     }
     if let Json::Obj(denses) = header.get("denses")? {
         for (name, d) in denses {
-            model.denses.insert(name.clone(), CompiledDense {
+            model_denses.insert(name.clone(), CompiledDense {
                 w: get_f32(payload, d.get("w")?)?,
                 b: get_f32(payload, d.get("b")?)?,
             });
         }
     }
-    Ok(model)
+    // re-lower the execution plan from the stored topology: plans are
+    // derived state, so the file format stays engine-only and version-stable
+    CompiledModel::new(graph, model_convs, model_denses)
 }
 
 #[cfg(test)]

@@ -80,6 +80,14 @@ impl Op {
             Op::Flatten => "flatten",
         }
     }
+
+    /// Elementwise activations — candidates for conv-epilogue fusion and
+    /// in-place lowering in the execution planner. Defined via
+    /// [`crate::kernels::elementwise::ActKind`] so the two sets cannot
+    /// drift apart.
+    pub fn is_activation(&self) -> bool {
+        crate::kernels::elementwise::ActKind::from_op(self).is_some()
+    }
 }
 
 #[derive(Clone, Debug)]
@@ -207,7 +215,37 @@ pub fn conv_out_hw(
     )
 }
 
+/// Checked [`conv_out_hw`]: `None` on a zero stride or a window larger than
+/// the padded input (where `conv_out_hw` would panic). The single source of
+/// window legality for shape inference *and* `ExecPlan::validate`, so
+/// compile-time and per-request checks cannot drift apart — untrusted
+/// graphs (a malformed `.dlrt` header) must error, never abort.
+pub fn conv_out_hw_checked(
+    h: usize,
+    w: usize,
+    kernel: [usize; 2],
+    stride: [usize; 2],
+    padding: [usize; 2],
+) -> Option<(usize, usize)> {
+    if stride[0] == 0
+        || stride[1] == 0
+        || h + 2 * padding[0] < kernel[0]
+        || w + 2 * padding[1] < kernel[1]
+    {
+        return None;
+    }
+    Some(conv_out_hw(h, w, kernel, stride, padding))
+}
+
 fn infer_node_shape(op: &Op, ins: &[&Vec<usize>], name: &str) -> Result<Vec<usize>> {
+    // arity guards: untrusted graphs (e.g. a malformed .dlrt header) reach
+    // shape inference via plan lowering, so bad arity must error, not panic
+    if ins.is_empty() {
+        bail!("{name}: {} node has no inputs", op.name());
+    }
+    if matches!(op, Op::Add) && ins.len() != 2 {
+        bail!("{name}: add expects 2 inputs, got {}", ins.len());
+    }
     let r4 = |s: &Vec<usize>| -> Result<[usize; 4]> {
         if s.len() != 4 {
             bail!("{name}: expected rank-4, got {s:?}");
@@ -220,7 +258,13 @@ fn infer_node_shape(op: &Op, ins: &[&Vec<usize>], name: &str) -> Result<Vec<usiz
             if c != *cin {
                 bail!("{name}: cin {cin} != input channels {c}");
             }
-            let (oh, ow) = conv_out_hw(h, w, *kernel, *stride, *padding);
+            let Some((oh, ow)) = conv_out_hw_checked(h, w, *kernel, *stride, *padding)
+            else {
+                bail!(
+                    "{name}: zero stride or window {kernel:?} larger than padded \
+                     input {h}x{w} (pad {padding:?})"
+                );
+            };
             vec![n, oh, ow, *cout]
         }
         Op::Dense { cin, cout } => {
@@ -233,7 +277,13 @@ fn infer_node_shape(op: &Op, ins: &[&Vec<usize>], name: &str) -> Result<Vec<usiz
         }
         Op::MaxPool2d { kernel, stride, padding } => {
             let [n, h, w, c] = r4(ins[0])?;
-            let (oh, ow) = conv_out_hw(h, w, *kernel, *stride, *padding);
+            let Some((oh, ow)) = conv_out_hw_checked(h, w, *kernel, *stride, *padding)
+            else {
+                bail!(
+                    "{name}: zero stride or window {kernel:?} larger than padded \
+                     input {h}x{w} (pad {padding:?})"
+                );
+            };
             vec![n, oh, ow, c]
         }
         Op::GlobalAvgPool => {

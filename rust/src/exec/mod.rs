@@ -1,24 +1,39 @@
-//! Graph executor: runs a [`CompiledModel`] with liveness-based buffer release.
+//! Graph executor: runs a [`CompiledModel`]'s [`planner::ExecPlan`] against
+//! a persistent arena.
+//!
+//! The compiler lowers the graph through the planner's pass pipeline
+//! (activation fusion → in-place/alias lowering → arena slot assignment),
+//! so at request time the executor is a flat loop over instructions reading
+//! and writing disjoint slot ranges of one reusable buffer: no per-node
+//! tensor allocation, no env-map walks, no activation clones. Once the
+//! arena and kernel scratch have grown to the model's largest layer, a run
+//! performs **zero heap allocations** (enforced by
+//! `tests/steady_state_alloc.rs`).
 //!
 //! Arithmetic matches `python/compile/jax_exec.py` mode `deploy_sim` step
-//! for step (same op order inside the dequant expression), so golden parity
-//! tests hold to float round-off of the transcendental activations.
+//! for step (fused epilogues perform the identical float ops in the same
+//! order), so golden parity holds bit-for-bit against the retained
+//! [`reference`] interpreter and to float round-off of the transcendental
+//! activations against JAX.
 
 pub mod planner;
+pub mod reference;
 
 use std::collections::BTreeMap;
 
 use anyhow::{anyhow, bail, Result};
 
-use crate::dlrt::graph::{qp_qn, Graph, Node, Op};
+use crate::dlrt::graph::{qp_qn, Graph, Op};
 use crate::dlrt::tensor::{Packed, Tensor};
-use crate::kernels::bitserial::{dequant_scale_bias, gemm_bitserial, pack_rows_u8_into};
-use crate::kernels::elementwise as ew;
-use crate::kernels::fp32::{gemm_rowmajor_bt, scale_bias_rows};
+use crate::kernels::bitserial::{dequant_scale_bias_act, gemm_bitserial, pack_rows_u8_into};
+use crate::kernels::elementwise::{self as ew, ActKind};
+use crate::kernels::fp32::{dense_rowmajor, gemm_rowmajor_bt, scale_bias_rows_act};
 use crate::kernels::im2col::{im2col_f32, im2col_quant_u8, ConvDims};
 use crate::kernels::int8::gemm_u8i8_i32;
 use crate::kernels::pool;
 use crate::util::threads;
+
+use self::planner::{ExecPlan, Instr};
 
 /// Which engine executes a conv layer (chosen by the compiler).
 #[derive(Clone, Debug)]
@@ -56,15 +71,31 @@ pub struct CompiledDense {
     pub b: Vec<f32>,
 }
 
-/// A deployable model: topology + per-layer compiled kernels.
+/// A deployable model: topology + per-layer compiled kernels + the lowered
+/// execution plan. The plan is built once here and shared read-only by
+/// every executor (the coordinator's batch workers run one plan against
+/// private arenas).
 #[derive(Clone, Debug)]
 pub struct CompiledModel {
     pub graph: Graph,
     pub convs: BTreeMap<String, CompiledConv>,
     pub denses: BTreeMap<String, CompiledDense>,
+    pub plan: ExecPlan,
 }
 
 impl CompiledModel {
+    /// Attach kernels to a graph and lower it through the planner pass
+    /// pipeline. Statically invalid graphs (shape mismatches, undefined
+    /// tensors) are rejected here, at compile time, not at request time.
+    pub fn new(
+        graph: Graph,
+        convs: BTreeMap<String, CompiledConv>,
+        denses: BTreeMap<String, CompiledDense>,
+    ) -> Result<CompiledModel> {
+        let plan = planner::build_plan(&graph)?;
+        Ok(CompiledModel { graph, convs, denses, plan })
+    }
+
     /// Total weight bytes as stored (the paper's model-size metric).
     pub fn weight_bytes(&self) -> usize {
         let mut total = 0;
@@ -91,19 +122,59 @@ impl CompiledModel {
     }
 }
 
-/// Executor with reusable scratch buffers (one instance per worker thread).
+/// Reusable kernel scratch (im2col columns, packed activation planes, i32
+/// accumulators): grows to the largest layer, then steady-state reuse.
+struct Scratch {
+    cols_f32: Vec<f32>,
+    cols_u8: Vec<u8>,
+    acc: Vec<i32>,
+    packed: Packed,
+}
+
+/// Read/write views over the arena slots of one plan execution.
 ///
-/// Scratch (im2col columns, packed activation planes, i32 accumulators)
-/// grows to the largest layer and is then reused: at steady state the
-/// bitserial conv path performs no heap allocation and — via the persistent
-/// kernel pool handle taken at construction — no thread spawning.
+/// Slots are disjoint ranges of one buffer. An instruction pairs one
+/// output slot with input slots of *different* ids (the planner guarantees
+/// it; `exec_instr` asserts it), and in-place instructions take only the
+/// mutable view — so the slices handed out never alias.
+struct ArenaViews<'a> {
+    base: *mut f32,
+    offsets: &'a [usize],
+}
+
+impl ArenaViews<'_> {
+    /// # Safety
+    /// `offsets[slot] + elems` must lie inside the arena (guaranteed when
+    /// `elems` ≤ the slot's validated size) and no live `&mut` view of this
+    /// slot may exist.
+    #[inline]
+    unsafe fn read(&self, slot: usize, elems: usize) -> &[f32] {
+        unsafe { std::slice::from_raw_parts(self.base.add(self.offsets[slot]), elems) }
+    }
+
+    /// # Safety
+    /// As [`ArenaViews::read`], plus: this must be the only view (shared or
+    /// mutable) of `slot` for the duration of the borrow.
+    #[inline]
+    #[allow(clippy::mut_from_ref)] // disjoint-slot views over one buffer
+    unsafe fn write(&self, slot: usize, elems: usize) -> &mut [f32] {
+        unsafe { std::slice::from_raw_parts_mut(self.base.add(self.offsets[slot]), elems) }
+    }
+}
+
+/// Executor with a persistent arena + reusable kernel scratch (one instance
+/// per worker thread).
+///
+/// The arena is laid out from the model plan's slot sizes rescaled to the
+/// request batch, grown once, and reused across requests; the persistent
+/// kernel pool handle taken at construction means steady-state traffic also
+/// never spawns a thread.
 pub struct Executor {
     pub nthreads: usize,
     pool: &'static threads::ThreadPool,
-    scratch_cols_f32: Vec<f32>,
-    scratch_cols_u8: Vec<u8>,
-    scratch_acc: Vec<i32>,
-    scratch_packed: Packed,
+    scratch: Scratch,
+    arena: Vec<f32>,
+    slot_offsets: Vec<usize>,
 }
 
 impl Executor {
@@ -113,10 +184,14 @@ impl Executor {
             // grab (and, on first use, spin up) the process-wide kernel pool
             // here so no inference pays thread-spawn latency
             pool: threads::global(),
-            scratch_cols_f32: Vec::new(),
-            scratch_cols_u8: Vec::new(),
-            scratch_acc: Vec::new(),
-            scratch_packed: Packed::new_zeroed(0, 0, 1),
+            scratch: Scratch {
+                cols_f32: Vec::new(),
+                cols_u8: Vec::new(),
+                acc: Vec::new(),
+                packed: Packed::new_zeroed(0, 0, 1),
+            },
+            arena: Vec::new(),
+            slot_offsets: Vec::new(),
         }
     }
 
@@ -128,6 +203,19 @@ impl Executor {
     /// Run the model on `input` (NHWC; batch may differ from the nominal
     /// graph batch). Returns the graph outputs in declaration order.
     pub fn run(&mut self, model: &CompiledModel, input: &Tensor) -> Result<Vec<Tensor>> {
+        let mut outs = Vec::new();
+        self.run_into(model, input, &mut outs)?;
+        Ok(outs)
+    }
+
+    /// [`Executor::run`] writing into caller-owned output tensors whose
+    /// buffers are reused across calls — the zero-allocation serving path.
+    pub fn run_into(
+        &mut self,
+        model: &CompiledModel,
+        input: &Tensor,
+        outs: &mut Vec<Tensor>,
+    ) -> Result<()> {
         let g = &model.graph;
         if input.shape.len() != 4 || input.shape[1..] != g.input_shape[1..] {
             bail!(
@@ -136,213 +224,202 @@ impl Executor {
                 g.input_shape
             );
         }
-        let mut env: BTreeMap<&str, Tensor> = BTreeMap::new();
-        let mut remaining = planner::use_counts(g);
-        env.insert(&g.input_name, input.clone());
-
-        for node in &g.nodes {
-            let out = self.run_node(model, node, &env)?;
-            // release inputs whose last consumer this was
-            for i in &node.inputs {
-                if let Some(c) = remaining.get_mut(i.as_str()) {
-                    *c -= 1;
-                    if *c == 0 && !g.outputs.iter().any(|o| o == i) {
-                        env.remove(i.as_str());
-                    }
-                }
-            }
-            env.insert(&node.output, out);
+        let plan = &model.plan;
+        // plan fields are public and swappable (the fig7 ablation swaps
+        // them) — re-check the bounds/aliasing invariants the unsafe slot
+        // views rely on, every run, in every build profile
+        plan.validate()?;
+        if plan.input_tail[..] != g.input_shape[1..] {
+            bail!(
+                "plan input {:?} does not match model input {:?}",
+                plan.input_tail,
+                g.input_shape
+            );
         }
-        g.outputs
-            .iter()
-            .map(|o| {
-                env.get(o.as_str())
-                    .cloned()
-                    .ok_or_else(|| anyhow!("output {o} not produced"))
-            })
-            .collect()
-    }
+        let batch = input.shape[0];
 
-    fn run_node(
-        &mut self,
-        model: &CompiledModel,
-        node: &Node,
-        env: &BTreeMap<&str, Tensor>,
-    ) -> Result<Tensor> {
-        let input = |idx: usize| -> Result<&Tensor> {
-            env.get(node.inputs[idx].as_str())
-                .ok_or_else(|| anyhow!("missing tensor {}", node.inputs[idx]))
-        };
-        Ok(match &node.op {
-            Op::Conv2d { stride, padding, kernel, cin, cout, .. } => {
-                let x = input(0)?;
-                let (n, h, w, c) = x.nhwc();
-                if c != *cin {
-                    bail!("{}: cin mismatch", node.name);
-                }
-                let d = ConvDims::new(n, h, w, c, kernel[0], kernel[1], *stride, *padding);
-                let conv = model
-                    .convs
-                    .get(&node.name)
-                    .ok_or_else(|| anyhow!("no compiled conv for {}", node.name))?;
-                self.conv(x, &d, conv, *cout)?
-            }
-            Op::Dense { cin, cout } => {
-                let x = input(0)?;
-                let dense = model
-                    .denses
-                    .get(&node.name)
-                    .ok_or_else(|| anyhow!("no compiled dense for {}", node.name))?;
-                let rows = x.numel() / cin;
-                let mut out = vec![0.0f32; rows * cout];
-                for r in 0..rows {
-                    let xr = &x.data[r * cin..(r + 1) * cin];
-                    let or = &mut out[r * cout..(r + 1) * cout];
-                    or.copy_from_slice(&dense.b);
-                    for (i, &xv) in xr.iter().enumerate() {
-                        if xv != 0.0 {
-                            let wr = &dense.w[i * cout..(i + 1) * cout];
-                            for (o, &wv) in or.iter_mut().zip(wr) {
-                                *o += xv * wv;
-                            }
-                        }
-                    }
-                }
-                let mut shape = x.shape.clone();
-                *shape.last_mut().unwrap() = *cout;
-                Tensor::new(shape, out)?
-            }
-            Op::MaxPool2d { kernel, stride, padding } => {
-                let x = input(0)?;
-                let (n, h, w, c) = x.nhwc();
-                let (oh, ow) =
-                    crate::dlrt::graph::conv_out_hw(h, w, *kernel, *stride, *padding);
-                let mut out = Tensor::zeros(vec![n, oh, ow, c]);
-                pool::maxpool2d(&x.data, n, h, w, c, *kernel, *stride, *padding,
-                                &mut out.data);
-                out
-            }
-            Op::GlobalAvgPool => {
-                let x = input(0)?;
-                let (n, h, w, c) = x.nhwc();
-                let mut out = Tensor::zeros(vec![n, c]);
-                pool::global_avg_pool(&x.data, n, h, w, c, &mut out.data);
-                out
-            }
-            Op::Upsample2x => {
-                let x = input(0)?;
-                let (n, h, w, c) = x.nhwc();
-                let mut out = Tensor::zeros(vec![n, 2 * h, 2 * w, c]);
-                pool::upsample2x(&x.data, n, h, w, c, &mut out.data);
-                out
-            }
-            Op::Add => {
-                let (a, b) = (input(0)?, input(1)?);
-                if a.shape != b.shape {
-                    bail!(
-                        "{}: add shape mismatch {:?} vs {:?}",
-                        node.name,
-                        a.shape,
-                        b.shape
-                    );
-                }
-                let mut out = Tensor::zeros(a.shape.clone());
-                ew::add(&a.data, &b.data, &mut out.data);
-                out
-            }
-            Op::Concat => {
-                let ts: Vec<&Tensor> =
-                    (0..node.inputs.len()).map(input).collect::<Result<_>>()?;
-                if ts.is_empty() {
-                    bail!("{}: concat with no inputs", node.name);
-                }
-                for t in &ts {
-                    if t.shape.len() != 4 {
-                        bail!("{}: concat expects rank-4 NHWC, got {:?}", node.name, t.shape);
-                    }
-                }
-                let (n, h, w, _) = ts[0].nhwc();
-                for t in &ts[1..] {
-                    let (n2, h2, w2, _) = t.nhwc();
-                    if (n2, h2, w2) != (n, h, w) {
-                        bail!(
-                            "{}: concat spatial mismatch {:?} vs {:?}",
-                            node.name,
-                            t.shape,
-                            ts[0].shape
-                        );
-                    }
-                }
-                let rows = n * h * w;
-                let parts: Vec<(&[f32], usize)> =
-                    ts.iter().map(|t| (t.data.as_slice(), t.shape[3])).collect();
-                let ctot: usize = parts.iter().map(|(_, c)| c).sum();
-                let mut out = Tensor::zeros(vec![n, h, w, ctot]);
-                ew::concat_channels(&parts, rows, &mut out.data);
-                out
-            }
-            Op::Flatten => {
-                let x = input(0)?;
-                let numel: usize = x.shape[1..].iter().product();
-                Tensor::new(vec![x.shape[0], numel], x.data.clone())?
-            }
-            Op::Relu | Op::Relu6 | Op::Silu | Op::LeakyRelu | Op::Sigmoid => {
-                let x = input(0)?;
-                let mut out = x.clone();
-                match node.op {
-                    Op::Relu => ew::relu(&mut out.data),
-                    Op::Relu6 => ew::relu6(&mut out.data),
-                    Op::Silu => ew::silu(&mut out.data),
-                    Op::LeakyRelu => ew::leaky_relu(&mut out.data),
-                    Op::Sigmoid => ew::sigmoid(&mut out.data),
-                    _ => unreachable!(),
-                }
-                out
-            }
-        })
-    }
+        // arena layout for this batch: slot offsets are prefix sums of the
+        // plan's per-batch slot sizes; the buffer only ever grows. Checked
+        // arithmetic: a wrapped total would leave offsets pointing past the
+        // resized arena, which the unsafe slot views must never see.
+        self.slot_offsets.clear();
+        let mut total = 0usize;
+        for &sz in &plan.slot_sizes {
+            self.slot_offsets.push(total);
+            total = sz
+                .checked_mul(batch)
+                .and_then(|b| total.checked_add(b))
+                .ok_or_else(|| anyhow!("arena size overflow at batch {batch}"))?;
+        }
+        if self.arena.len() < total {
+            self.arena.resize(total, 0.0);
+        }
 
-    fn conv(
-        &mut self,
-        x: &Tensor,
-        d: &ConvDims,
-        conv: &CompiledConv,
-        cout: usize,
-    ) -> Result<Tensor> {
-        let rows = d.rows();
-        let patch = d.patch();
-        let mut out = Tensor::zeros(vec![d.n, d.oh, d.ow, cout]);
-        match &conv.kernel {
-            ConvKernel::Fp32 { wt } => {
-                self.scratch_cols_f32.resize(rows * patch, 0.0);
-                im2col_f32(&x.data, d, &mut self.scratch_cols_f32);
-                gemm_rowmajor_bt(&self.scratch_cols_f32, wt, rows, cout, patch,
-                                 &mut out.data, self.nthreads);
-                scale_bias_rows(&mut out.data, cout, &conv.scale, &conv.bias);
-            }
-            ConvKernel::Bitserial { packed, s_w, s_a, w_bits, a_bits } => {
-                let (qp_a, _) = qp_qn(*a_bits, false);
-                self.scratch_cols_u8.resize(rows * patch, 0);
-                im2col_quant_u8(&x.data, d, *s_a, qp_a as u8, &mut self.scratch_cols_u8);
-                pack_rows_u8_into(&self.scratch_cols_u8, rows, patch,
-                                  *a_bits as usize, &mut self.scratch_packed);
-                self.scratch_acc.resize(rows * cout, 0);
-                gemm_bitserial(&self.scratch_packed, packed, *w_bits as usize,
-                               &mut self.scratch_acc[..rows * cout], self.nthreads);
-                dequant_scale_bias(&self.scratch_acc[..rows * cout], cout,
-                                   s_a * s_w, &conv.scale, &conv.bias, &mut out.data);
-            }
-            ConvKernel::Int8 { codes, s_w, s_a } => {
-                self.scratch_cols_u8.resize(rows * patch, 0);
-                im2col_quant_u8(&x.data, d, *s_a, 255, &mut self.scratch_cols_u8);
-                self.scratch_acc.resize(rows * cout, 0);
-                gemm_u8i8_i32(&self.scratch_cols_u8, codes, rows, cout, patch,
-                              &mut self.scratch_acc[..rows * cout], self.nthreads);
-                dequant_scale_bias(&self.scratch_acc[..rows * cout], cout, s_a * s_w,
-                                   &conv.scale, &conv.bias, &mut out.data);
+        // the request lands directly in its arena slot — no Tensor clone
+        let in_off = self.slot_offsets[plan.input_slot];
+        self.arena[in_off..in_off + input.numel()].copy_from_slice(&input.data);
+
+        let views = ArenaViews { base: self.arena.as_mut_ptr(), offsets: &self.slot_offsets };
+        for instr in &plan.instrs {
+            exec_instr(&mut self.scratch, self.nthreads, &views, model, instr, batch)?;
+        }
+
+        // copy outputs into reusable caller tensors
+        outs.resize_with(plan.outputs.len(), || Tensor { shape: Vec::new(), data: Vec::new() });
+        for (o, spec) in outs.iter_mut().zip(&plan.outputs) {
+            let elems = batch * spec.tail.iter().product::<usize>();
+            o.shape.clear();
+            o.shape.push(batch);
+            o.shape.extend_from_slice(&spec.tail);
+            o.data.resize(elems, 0.0);
+            let off = self.slot_offsets[spec.slot];
+            o.data.copy_from_slice(&self.arena[off..off + elems]);
+        }
+        Ok(())
+    }
+}
+
+/// Execute one lowered instruction against the arena.
+fn exec_instr(
+    scratch: &mut Scratch,
+    nthreads: usize,
+    views: &ArenaViews,
+    model: &CompiledModel,
+    instr: &Instr,
+    batch: usize,
+) -> Result<()> {
+    // SAFETY (for every `views.read`/`views.write` below): run_into runs
+    // `ExecPlan::validate()` on this plan each request, which guarantees
+    // slot ids are in range, every tail fits its slot (so offset + elems
+    // stays inside the arena), and out_slot is disjoint from all in_slots
+    // for non-in-place instructions — each instruction takes exactly one
+    // mutable view, never overlapping its shared views.
+    debug_assert!(
+        instr.in_place || instr.in_slots.iter().all(|&s| s != instr.out_slot),
+        "instruction would write a live input slot: {instr:?}"
+    );
+    let in_elems = |i: usize| batch * instr.in_tails[i].iter().product::<usize>();
+    let out_elems = batch * instr.out_tail.iter().product::<usize>();
+    match &instr.op {
+        Op::Conv2d { stride, padding, kernel, cout, .. } => {
+            let t = &instr.in_tails[0]; // [h, w, c]
+            let d = ConvDims::new(batch, t[0], t[1], t[2], kernel[0], kernel[1], *stride,
+                                  *padding);
+            let x = unsafe { views.read(instr.in_slots[0], in_elems(0)) };
+            let out = unsafe { views.write(instr.out_slot, out_elems) };
+            let conv = model
+                .convs
+                .get(&instr.name)
+                .ok_or_else(|| anyhow!("no compiled conv for {}", instr.name))?;
+            conv_into(scratch, nthreads, x, &d, conv, *cout, instr.fused, out);
+        }
+        Op::Dense { cin, cout } => {
+            let x = unsafe { views.read(instr.in_slots[0], in_elems(0)) };
+            let out = unsafe { views.write(instr.out_slot, out_elems) };
+            let dense = model
+                .denses
+                .get(&instr.name)
+                .ok_or_else(|| anyhow!("no compiled dense for {}", instr.name))?;
+            let rows = x.len() / cin;
+            dense_rowmajor(x, &dense.w, &dense.b, rows, *cin, *cout, out, nthreads);
+        }
+        Op::MaxPool2d { kernel, stride, padding } => {
+            let t = &instr.in_tails[0];
+            let x = unsafe { views.read(instr.in_slots[0], in_elems(0)) };
+            let out = unsafe { views.write(instr.out_slot, out_elems) };
+            pool::maxpool2d(x, batch, t[0], t[1], t[2], *kernel, *stride, *padding, out);
+        }
+        Op::GlobalAvgPool => {
+            let t = &instr.in_tails[0];
+            let x = unsafe { views.read(instr.in_slots[0], in_elems(0)) };
+            let out = unsafe { views.write(instr.out_slot, out_elems) };
+            pool::global_avg_pool(x, batch, t[0], t[1], t[2], out);
+        }
+        Op::Upsample2x => {
+            let t = &instr.in_tails[0];
+            let x = unsafe { views.read(instr.in_slots[0], in_elems(0)) };
+            let out = unsafe { views.write(instr.out_slot, out_elems) };
+            pool::upsample2x(x, batch, t[0], t[1], t[2], out);
+        }
+        Op::Add => {
+            let a = unsafe { views.read(instr.in_slots[0], in_elems(0)) };
+            let b = unsafe { views.read(instr.in_slots[1], in_elems(1)) };
+            let out = unsafe { views.write(instr.out_slot, out_elems) };
+            ew::add(a, b, out);
+        }
+        Op::Concat => {
+            // one striped copy per input: no per-call slice list
+            let ctot = instr.out_tail[2];
+            let rows = batch * instr.out_tail[0] * instr.out_tail[1];
+            let out = unsafe { views.write(instr.out_slot, out_elems) };
+            let mut c_off = 0;
+            for i in 0..instr.in_slots.len() {
+                let ci = instr.in_tails[i][2];
+                let x = unsafe { views.read(instr.in_slots[i], in_elems(i)) };
+                ew::copy_channels(x, ci, ctot, c_off, rows, out);
+                c_off += ci;
             }
         }
-        Ok(out)
+        Op::Flatten => {
+            bail!("flatten reached the executor (planner lowers it to an alias)")
+        }
+        Op::Relu | Op::Relu6 | Op::Silu | Op::LeakyRelu | Op::Sigmoid => {
+            let act = ActKind::from_op(&instr.op).expect("activation op");
+            let out = unsafe { views.write(instr.out_slot, out_elems) };
+            if !instr.in_place {
+                let x = unsafe { views.read(instr.in_slots[0], in_elems(0)) };
+                out.copy_from_slice(x);
+            }
+            act.apply(out);
+        }
+    }
+    Ok(())
+}
+
+/// Run one compiled conv into `out` (rows × cout), engine-dispatched, with
+/// the plan's fused activation epilogue applied in the dequant/scale pass.
+#[allow(clippy::too_many_arguments)]
+fn conv_into(
+    scratch: &mut Scratch,
+    nthreads: usize,
+    x: &[f32],
+    d: &ConvDims,
+    conv: &CompiledConv,
+    cout: usize,
+    fused: Option<ActKind>,
+    out: &mut [f32],
+) {
+    let rows = d.rows();
+    let patch = d.patch();
+    debug_assert_eq!(out.len(), rows * cout);
+    match &conv.kernel {
+        ConvKernel::Fp32 { wt } => {
+            scratch.cols_f32.resize(rows * patch, 0.0);
+            im2col_f32(x, d, &mut scratch.cols_f32);
+            gemm_rowmajor_bt(&scratch.cols_f32, wt, rows, cout, patch, out, nthreads);
+            scale_bias_rows_act(out, cout, &conv.scale, &conv.bias, fused);
+        }
+        ConvKernel::Bitserial { packed, s_w, s_a, w_bits, a_bits } => {
+            let (qp_a, _) = qp_qn(*a_bits, false);
+            scratch.cols_u8.resize(rows * patch, 0);
+            im2col_quant_u8(x, d, *s_a, qp_a as u8, &mut scratch.cols_u8);
+            pack_rows_u8_into(&scratch.cols_u8, rows, patch, *a_bits as usize,
+                              &mut scratch.packed);
+            scratch.acc.resize(rows * cout, 0);
+            gemm_bitserial(&scratch.packed, packed, *w_bits as usize,
+                           &mut scratch.acc[..rows * cout], nthreads);
+            dequant_scale_bias_act(&scratch.acc[..rows * cout], cout, s_a * s_w,
+                                   &conv.scale, &conv.bias, fused, out);
+        }
+        ConvKernel::Int8 { codes, s_w, s_a } => {
+            scratch.cols_u8.resize(rows * patch, 0);
+            im2col_quant_u8(x, d, *s_a, 255, &mut scratch.cols_u8);
+            scratch.acc.resize(rows * cout, 0);
+            gemm_u8i8_i32(&scratch.cols_u8, codes, rows, cout, patch,
+                          &mut scratch.acc[..rows * cout], nthreads);
+            dequant_scale_bias_act(&scratch.acc[..rows * cout], cout, s_a * s_w,
+                                   &conv.scale, &conv.bias, fused, out);
+        }
     }
 }
 
@@ -410,6 +487,38 @@ mod tests {
         for (a, b) in y3[0].data[..y1[0].numel()].iter().zip(&y1[0].data) {
             assert!((a - b).abs() <= 1e-5 + 1e-5 * b.abs(), "{a} vs {b}");
         }
+    }
+
+    #[test]
+    fn batch_shrink_after_growth_still_correct() {
+        // the arena only grows; a small batch after a large one must slice
+        // the oversized buffer correctly
+        let g = tiny_test_graph(false);
+        let m = compile_graph(&g, EngineChoice::Auto).unwrap();
+        let mut ex = Executor::new(1);
+        let mut x1 = Tensor::zeros(vec![1, 8, 8, 3]);
+        for (i, v) in x1.data.iter_mut().enumerate() {
+            *v = (i % 5) as f32 * 0.25;
+        }
+        let y_before = ex.run(&m, &x1).unwrap();
+        ex.run(&m, &Tensor::zeros(vec![4, 8, 8, 3])).unwrap(); // grow
+        let y_after = ex.run(&m, &x1).unwrap();
+        assert_eq!(y_before[0].data, y_after[0].data);
+    }
+
+    #[test]
+    fn run_into_reuses_output_buffers() {
+        let g = tiny_test_graph(false);
+        let m = compile_graph(&g, EngineChoice::Auto).unwrap();
+        let mut ex = Executor::new(1);
+        let x = Tensor::zeros(vec![1, 8, 8, 3]);
+        let mut outs = Vec::new();
+        ex.run_into(&m, &x, &mut outs).unwrap();
+        assert_eq!(outs.len(), 1);
+        assert_eq!(outs[0].shape, vec![1, 4]);
+        let want = outs[0].data.clone();
+        ex.run_into(&m, &x, &mut outs).unwrap();
+        assert_eq!(outs[0].data, want);
     }
 
     #[test]

@@ -1,13 +1,34 @@
-//! Liveness analysis for buffer release during execution.
+//! Compile-time execution planning: liveness analysis + the pass pipeline
+//! that lowers a [`Graph`] into an [`ExecPlan`].
 //!
-//! The executor drops an intermediate tensor as soon as its last consumer
-//! has run (unless it is a graph output). `use_counts` computes the number
-//! of consumers per tensor; `peak_live_elems` estimates the resulting peak
-//! working set, which the `model_size`/footprint reports use.
+//! The paper's runtime keeps its inner loop free of graph machinery by
+//! deciding everything ahead of time (§VI "Deeplite Runtime"); this module
+//! is that decision stage. `build_plan` runs three passes:
+//!
+//! 1. **Activation fusion** — a Conv2d whose output's sole consumer is an
+//!    elementwise activation absorbs it as a fused epilogue
+//!    ([`crate::kernels::bitserial::dequant_scale_bias_act`] /
+//!    [`crate::kernels::fp32::scale_bias_rows_act`]), so the
+//!    pre-activation tensor is never materialized.
+//! 2. **In-place lowering** — a standalone activation that is the last
+//!    consumer of its input mutates the input's slot; `Flatten` becomes a
+//!    metadata-only alias (no instruction at all).
+//! 3. **Slot assignment** — register-allocation style: every instruction
+//!    output gets an arena *slot*, and a slot returns to the free list as
+//!    soon as the last consumer of every tensor bound to it has run.
+//!    Slot sizes are per-batch-item element counts derived from
+//!    [`Graph::infer_shapes`]; the executor rescales offsets for the actual
+//!    request batch at run time.
+//!
+//! `use_counts` / `peak_live_elems` are the underlying liveness analysis,
+//! also used by the footprint reports.
 
 use std::collections::BTreeMap;
 
-use crate::dlrt::graph::Graph;
+use anyhow::{anyhow, Result};
+
+use crate::dlrt::graph::{conv_out_hw_checked, Graph, Op};
+use crate::kernels::elementwise::ActKind;
 
 /// tensor name -> number of consuming nodes (graph outputs add one use).
 pub fn use_counts(g: &Graph) -> BTreeMap<&str, usize> {
@@ -47,10 +68,450 @@ pub fn peak_live_elems(g: &Graph) -> anyhow::Result<usize> {
     Ok(peak)
 }
 
+// ---------------------------------------------------------------------------
+// ExecPlan
+// ---------------------------------------------------------------------------
+
+/// Pass-pipeline switches (defaults on; benches toggle them for ablations).
+#[derive(Clone, Copy, Debug)]
+pub struct PlanOpts {
+    /// Fold sole-consumer activations into conv epilogues.
+    pub fuse_activations: bool,
+    /// Lower last-consumer standalone activations to in-place mutation.
+    pub in_place: bool,
+}
+
+impl Default for PlanOpts {
+    fn default() -> Self {
+        PlanOpts { fuse_activations: true, in_place: true }
+    }
+}
+
+/// One lowered instruction: an op reading input slots and writing one
+/// output slot. Shape *tails* (dims after the batch dim) are frozen at plan
+/// time; the executor prepends the request batch.
+#[derive(Clone, Debug)]
+pub struct Instr {
+    /// Originating node name (key into the compiled conv/dense maps).
+    pub name: String,
+    pub op: Op,
+    /// Fused activation epilogue (convs only).
+    pub fused: Option<ActKind>,
+    pub in_slots: Vec<usize>,
+    /// Per-input shape tails, aligned with `in_slots`.
+    pub in_tails: Vec<Vec<usize>>,
+    pub out_slot: usize,
+    pub out_tail: Vec<usize>,
+    /// Activation lowered to mutate its own slot (`in_slots[0] == out_slot`).
+    pub in_place: bool,
+}
+
+/// Where a graph output lives after the plan runs.
+#[derive(Clone, Debug)]
+pub struct OutSpec {
+    pub slot: usize,
+    pub tail: Vec<usize>,
+}
+
+/// A lowered, ready-to-execute program: topologically ordered instructions
+/// over arena buffer slots. Built once per [`crate::exec::CompiledModel`]
+/// and shared read-only by every executor (the coordinator's batch workers
+/// all run the same plan against private arenas).
+#[derive(Clone, Debug)]
+pub struct ExecPlan {
+    pub instrs: Vec<Instr>,
+    /// Per-slot f32 elements for one batch item (max over tensors that
+    /// ever occupy the slot).
+    pub slot_sizes: Vec<usize>,
+    pub input_slot: usize,
+    pub input_tail: Vec<usize>,
+    pub outputs: Vec<OutSpec>,
+    /// Batch the graph was planned at (shapes rescale linearly).
+    pub nominal_batch: usize,
+}
+
+impl ExecPlan {
+    /// Total arena f32 elements needed for `batch`.
+    pub fn arena_elems(&self, batch: usize) -> usize {
+        self.slot_sizes.iter().sum::<usize>() * batch
+    }
+
+    pub fn fused_instrs(&self) -> usize {
+        self.instrs.iter().filter(|i| i.fused.is_some()).count()
+    }
+
+    pub fn in_place_instrs(&self) -> usize {
+        self.instrs.iter().filter(|i| i.in_place).count()
+    }
+
+    /// Bounds/aliasing checks the executor's unsafe slot views rely on: a
+    /// non-in-place instruction never writes a slot it reads, every slot id
+    /// is in range, and every tensor fits its slot's per-batch size.
+    ///
+    /// `build_plan_with` validates every plan it produces, and — because
+    /// the plan fields are public and swappable (the fig7 ablation does
+    /// exactly that) — the executor re-runs this per request; it is
+    /// O(instructions) and allocation-free.
+    pub fn validate(&self) -> Result<()> {
+        let n = self.slot_sizes.len();
+        // overflow-checked products: a hostile plan (or a malformed .dlrt
+        // header re-lowered by format::load) declaring astronomical dims
+        // must fail validation, not wrap into passing bounds checks that
+        // the unsafe arena views then trust
+        let numel_checked = |tail: &[usize]| -> Option<usize> {
+            tail.iter().try_fold(1usize, |a, &d| a.checked_mul(d))
+        };
+        let fits = |tail: &[usize], slot: usize| -> bool {
+            slot < n && matches!(numel_checked(tail), Some(e) if e <= self.slot_sizes[slot])
+        };
+        let numel = |tail: &[usize]| -> usize { tail.iter().product() };
+        if !fits(&self.input_tail, self.input_slot) {
+            return Err(anyhow!("plan: input tensor does not fit its slot"));
+        }
+        for ins in &self.instrs {
+            let arity_ok = ins.in_slots.len() == ins.in_tails.len()
+                && match &ins.op {
+                    Op::Add => ins.in_slots.len() == 2,
+                    Op::Concat => !ins.in_slots.is_empty(),
+                    _ => ins.in_slots.len() == 1,
+                };
+            // per-op shape legality: recompute the output shape the way
+            // exec_instr's kernels will and require the stored tail to
+            // match, so a swapped plan can neither panic in a kernel nor
+            // silently truncate its output (guarded by arity_ok)
+            let shape_ok = arity_ok
+                && match &ins.op {
+                    Op::Conv2d { stride, padding, kernel, cin, cout, .. } => {
+                        let t = &ins.in_tails[0];
+                        t.len() == 3
+                            && ins.out_tail.len() == 3
+                            && t[2] == *cin
+                            && conv_out_hw_checked(t[0], t[1], *kernel, *stride, *padding)
+                                == Some((ins.out_tail[0], ins.out_tail[1]))
+                            && ins.out_tail[2] == *cout
+                    }
+                    Op::MaxPool2d { kernel, stride, padding } => {
+                        let t = &ins.in_tails[0];
+                        t.len() == 3
+                            && ins.out_tail.len() == 3
+                            && conv_out_hw_checked(t[0], t[1], *kernel, *stride, *padding)
+                                == Some((ins.out_tail[0], ins.out_tail[1]))
+                            && ins.out_tail[2] == t[2]
+                    }
+                    Op::Upsample2x => {
+                        let t = &ins.in_tails[0];
+                        t.len() == 3
+                            && ins.out_tail.len() == 3
+                            && ins.out_tail[0] == 2 * t[0]
+                            && ins.out_tail[1] == 2 * t[1]
+                            && ins.out_tail[2] == t[2]
+                    }
+                    Op::GlobalAvgPool => {
+                        let t = &ins.in_tails[0];
+                        t.len() == 3
+                            && ins.out_tail.len() == 1
+                            && ins.out_tail[0] == t[2]
+                    }
+                    Op::Concat => {
+                        ins.out_tail.len() == 3
+                            && ins.in_tails.iter().all(|t| {
+                                t.len() == 3
+                                    && t[0] == ins.out_tail[0]
+                                    && t[1] == ins.out_tail[1]
+                            })
+                            && ins.in_tails.iter().map(|t| t[2]).sum::<usize>()
+                                == ins.out_tail[2]
+                    }
+                    Op::Add => {
+                        numel(&ins.in_tails[0]) == numel(&ins.out_tail)
+                            && numel(&ins.in_tails[1]) == numel(&ins.out_tail)
+                    }
+                    Op::Dense { cin, cout } => {
+                        *cin > 0
+                            && ins.in_tails[0].last() == Some(cin)
+                            && ins.out_tail.last() == Some(cout)
+                            && ins.out_tail.len() == ins.in_tails[0].len()
+                            && ins.out_tail[..ins.out_tail.len() - 1]
+                                == ins.in_tails[0][..ins.in_tails[0].len() - 1]
+                    }
+                    Op::Relu | Op::Relu6 | Op::Silu | Op::LeakyRelu | Op::Sigmoid => {
+                        numel(&ins.in_tails[0]) == numel(&ins.out_tail)
+                    }
+                    Op::Flatten => true, // exec_instr rejects it with an error
+                };
+            // in-place is only meaningful (and only handled by exec_instr)
+            // for activations; anything else would alias read/write views
+            let in_place_ok = !ins.in_place || ActKind::from_op(&ins.op).is_some();
+            // fused epilogues are a conv-only concept: exec_instr reads
+            // `fused` nowhere else, so it must not appear anywhere else
+            let fused_ok = ins.fused.is_none() || matches!(ins.op, Op::Conv2d { .. });
+            let aliasing_ok = if ins.in_place {
+                ins.in_slots.first() == Some(&ins.out_slot)
+            } else {
+                ins.in_slots.iter().all(|&s| s != ins.out_slot)
+            };
+            if !shape_ok
+                || !in_place_ok
+                || !fused_ok
+                || !aliasing_ok
+                || !fits(&ins.out_tail, ins.out_slot)
+                || ins.in_slots.iter().zip(&ins.in_tails).any(|(&s, t)| !fits(t, s))
+            {
+                return Err(anyhow!(
+                    "plan invariant violated at {:?} ({}): in={:?} out={} of {n} slots",
+                    ins.name,
+                    ins.op.name(),
+                    ins.in_slots,
+                    ins.out_slot
+                ));
+            }
+        }
+        for o in &self.outputs {
+            if !fits(&o.tail, o.slot) {
+                return Err(anyhow!("plan: output tensor does not fit its slot"));
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Lower `g` with the default pass pipeline.
+pub fn build_plan(g: &Graph) -> Result<ExecPlan> {
+    build_plan_with(g, PlanOpts::default())
+}
+
+/// Working node during lowering (fusion rewrites outputs / drops nodes).
+struct WNode {
+    name: String,
+    op: Op,
+    inputs: Vec<String>,
+    output: String,
+    fused: Option<ActKind>,
+}
+
+/// Slot allocator state: sizes/liveness plus the tensor-name bindings.
+/// `live[s]` counts live tensor names bound to slot `s` (aliases mean a
+/// slot can host several names at once); a slot is free only at zero.
+struct SlotState {
+    sizes: Vec<usize>,
+    live: Vec<usize>,
+    free: Vec<usize>,
+    binding: BTreeMap<String, usize>,
+    remaining: BTreeMap<String, usize>,
+}
+
+impl SlotState {
+    /// Best-fit: smallest free slot that already holds `elems`; else grow
+    /// the **largest** free slot to `elems` (cheapest growth); a brand-new
+    /// slot is opened only when the free list is empty. Best-fit keeps
+    /// small tensors from squatting in large recycled buffers.
+    fn alloc(&mut self, elems: usize) -> usize {
+        let pick = self
+            .free
+            .iter()
+            .copied()
+            .filter(|&s| self.sizes[s] >= elems)
+            .min_by_key(|&s| self.sizes[s])
+            .or_else(|| self.free.iter().copied().max_by_key(|&s| self.sizes[s]));
+        match pick {
+            Some(s) => {
+                self.free.retain(|&f| f != s);
+                if self.sizes[s] < elems {
+                    self.sizes[s] = elems;
+                }
+                s
+            }
+            None => {
+                self.sizes.push(elems);
+                self.live.push(0);
+                self.sizes.len() - 1
+            }
+        }
+    }
+
+    fn bind(&mut self, name: &str, slot: usize, elems: usize) {
+        self.binding.insert(name.to_string(), slot);
+        self.live[slot] += 1;
+        if self.sizes[slot] < elems {
+            self.sizes[slot] = elems;
+        }
+    }
+
+    fn slot_of(&self, name: &str) -> Result<usize> {
+        self.binding
+            .get(name)
+            .copied()
+            .ok_or_else(|| anyhow!("plan: tensor {name:?} is not live"))
+    }
+
+    /// Consume one use of each input; a tensor whose uses hit zero unbinds,
+    /// and a slot with no remaining bindings returns to the free list.
+    /// (Graph outputs carry a permanent extra use, so they never unbind.)
+    fn release(&mut self, inputs: &[String]) {
+        for t in inputs {
+            if let Some(c) = self.remaining.get_mut(t) {
+                *c -= 1;
+                if *c == 0 {
+                    if let Some(s) = self.binding.remove(t) {
+                        self.live[s] -= 1;
+                        if self.live[s] == 0 {
+                            self.free.push(s);
+                        }
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Lower `g` into an [`ExecPlan`] with explicit pass switches.
+pub fn build_plan_with(g: &Graph, opts: PlanOpts) -> Result<ExecPlan> {
+    let shapes = g.infer_shapes()?; // also surfaces static shape mismatches
+    let tail_of = |t: &str| -> Vec<usize> { shapes[t][1..].to_vec() };
+    let per_batch = |t: &str| -> usize { shapes[t][1..].iter().product() };
+
+    let mut nodes: Vec<WNode> = g
+        .nodes
+        .iter()
+        .map(|n| WNode {
+            name: n.name.clone(),
+            op: n.op.clone(),
+            inputs: n.inputs.clone(),
+            output: n.output.clone(),
+            fused: None,
+        })
+        .collect();
+
+    // --- pass 1: activation fusion -------------------------------------
+    if opts.fuse_activations {
+        let mut i = 0;
+        while i < nodes.len() {
+            if matches!(nodes[i].op, Op::Conv2d { .. }) {
+                let out = nodes[i].output.clone();
+                let uses = nodes
+                    .iter()
+                    .flat_map(|n| n.inputs.iter())
+                    .filter(|t| **t == out)
+                    .count()
+                    + g.outputs.iter().filter(|o| **o == out).count();
+                if uses == 1 {
+                    if let Some(j) =
+                        nodes.iter().position(|n| n.inputs.iter().any(|t| *t == out))
+                    {
+                        if let Some(a) = ActKind::from_op(&nodes[j].op) {
+                            let act_out = nodes[j].output.clone();
+                            nodes[i].fused = Some(a);
+                            nodes[i].output = act_out;
+                            nodes.remove(j);
+                        }
+                    }
+                }
+            }
+            i += 1;
+        }
+    }
+
+    // remaining-use counts over the post-fusion node list (+1 per graph
+    // output keeps output tensors bound for the plan's whole lifetime)
+    let mut remaining: BTreeMap<String, usize> = BTreeMap::new();
+    for n in &nodes {
+        for t in &n.inputs {
+            *remaining.entry(t.clone()).or_insert(0) += 1;
+        }
+    }
+    for o in &g.outputs {
+        *remaining.entry(o.clone()).or_insert(0) += 1;
+    }
+
+    // --- passes 2+3: in-place / alias lowering + slot assignment --------
+    let mut st = SlotState {
+        sizes: Vec::new(),
+        live: Vec::new(),
+        free: Vec::new(),
+        binding: BTreeMap::new(),
+        remaining,
+    };
+    let mut instrs: Vec<Instr> = Vec::new();
+
+    let input_slot = st.alloc(per_batch(&g.input_name));
+    st.bind(&g.input_name, input_slot, per_batch(&g.input_name));
+
+    for n in &nodes {
+        if matches!(n.op, Op::Flatten) {
+            // metadata-only alias: same slot, new shape tail, no instruction
+            let s = st.slot_of(&n.inputs[0])?;
+            st.bind(&n.output, s, per_batch(&n.output));
+            st.release(&n.inputs);
+            continue;
+        }
+        let mut in_slots = Vec::with_capacity(n.inputs.len());
+        for t in &n.inputs {
+            in_slots.push(st.slot_of(t)?);
+        }
+        let in_tails: Vec<Vec<usize>> = n.inputs.iter().map(|t| tail_of(t)).collect();
+
+        let sole_last_use = st.remaining.get(&n.inputs[0]).copied() == Some(1)
+            && st.live[in_slots[0]] == 1;
+        // gate on ActKind::from_op — the same mapping the executor
+        // dispatches through — so the two can never drift apart
+        if opts.in_place && ActKind::from_op(&n.op).is_some() && sole_last_use {
+            let s = in_slots[0];
+            st.bind(&n.output, s, per_batch(&n.output));
+            instrs.push(Instr {
+                name: n.name.clone(),
+                op: n.op.clone(),
+                fused: None,
+                in_slots,
+                in_tails,
+                out_slot: s,
+                out_tail: tail_of(&n.output),
+                in_place: true,
+            });
+            st.release(&n.inputs);
+            continue;
+        }
+
+        // general case: fresh (recycled) output slot, inputs still bound
+        // during allocation so an instruction never writes over a live input
+        let out = st.alloc(per_batch(&n.output));
+        st.bind(&n.output, out, per_batch(&n.output));
+        instrs.push(Instr {
+            name: n.name.clone(),
+            op: n.op.clone(),
+            fused: n.fused,
+            in_slots,
+            in_tails,
+            out_slot: out,
+            out_tail: tail_of(&n.output),
+            in_place: false,
+        });
+        st.release(&n.inputs);
+    }
+
+    let mut outputs = Vec::with_capacity(g.outputs.len());
+    for o in &g.outputs {
+        outputs.push(OutSpec { slot: st.slot_of(o)?, tail: tail_of(o) });
+    }
+
+    let plan = ExecPlan {
+        instrs,
+        slot_sizes: st.sizes,
+        input_slot,
+        input_tail: tail_of(&g.input_name),
+        outputs,
+        nominal_batch: g.input_shape[0],
+    };
+    // every produced plan passes the same invariant check the executor
+    // re-runs per request (see ExecPlan::validate)
+    plan.validate()?;
+    Ok(plan)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::models::tiny_test_graph;
+    use crate::dlrt::graph::QCfg;
+    use crate::models::{tiny_test_graph, GraphBuilder};
 
     #[test]
     fn counts_match_consumers() {
@@ -75,5 +536,123 @@ mod tests {
         let peak = peak_live_elems(&g).unwrap();
         assert!(peak <= total);
         assert!(peak > 0);
+    }
+
+    #[test]
+    fn fuses_sole_consumer_activations() {
+        // tiny graph: conv+relu, conv+relu, conv, gap → 6 nodes, 4 instrs
+        let g = tiny_test_graph(false);
+        let plan = build_plan(&g).unwrap();
+        assert_eq!(plan.instrs.len(), 4);
+        assert_eq!(plan.fused_instrs(), 2);
+        assert!(plan.instrs.iter().all(|i| !i.op.is_activation()));
+    }
+
+    #[test]
+    fn fusion_opt_out_keeps_standalone_activations() {
+        let g = tiny_test_graph(false);
+        let opts = PlanOpts { fuse_activations: false, in_place: false };
+        let plan = build_plan_with(&g, opts).unwrap();
+        assert_eq!(plan.instrs.len(), g.nodes.len());
+        assert_eq!(plan.fused_instrs(), 0);
+        assert_eq!(plan.in_place_instrs(), 0);
+    }
+
+    #[test]
+    fn shared_conv_output_is_not_fused() {
+        // conv out feeds both the activation and a residual add: folding the
+        // relu into the conv would corrupt the add's operand
+        let mut b = GraphBuilder::new("res", [1, 8, 8, 3], 5);
+        let c1 = b.conv_named("c1", "input", 8, 3, 1, 1, QCfg::FP32, None);
+        let r = b.act_named("r", &c1, Op::Relu);
+        let s = b.add(&r, &c1);
+        let g = b.finish(vec![s]);
+        let plan = build_plan(&g).unwrap();
+        assert_eq!(plan.fused_instrs(), 0);
+        assert_eq!(plan.instrs.len(), 3); // conv, relu, add
+        // relu also can't run in place (c1.out still needed by the add)
+        assert_eq!(plan.in_place_instrs(), 0);
+    }
+
+    #[test]
+    fn flatten_is_alias_and_last_use_activation_runs_in_place() {
+        let mut b = GraphBuilder::new("t", [1, 8, 8, 3], 5);
+        let p = b.maxpool("input", 2, 2, 0);
+        let r = b.act_named("r", &p, Op::Relu); // pool.out's last use
+        let f = b.flatten(&r);
+        let d = b.dense(&f, 4 * 4 * 3, 10);
+        let g = b.finish(vec![d]);
+        let plan = build_plan(&g).unwrap();
+        // maxpool, relu (in place), dense — flatten vanished
+        assert_eq!(plan.instrs.len(), 3);
+        assert!(plan.instrs.iter().all(|i| !matches!(i.op, Op::Flatten)));
+        let relu = &plan.instrs[1];
+        assert!(relu.in_place);
+        assert_eq!(relu.in_slots[0], relu.out_slot);
+        // the dense input aliases the relu output's slot
+        assert_eq!(plan.instrs[2].in_slots[0], relu.out_slot);
+    }
+
+    #[test]
+    fn slots_are_recycled_and_arena_within_interpreter_peak() {
+        for g in [tiny_test_graph(false), tiny_test_graph(true)] {
+            let plan = build_plan(&g).unwrap();
+            // far fewer slots than tensors
+            assert!(plan.slot_sizes.len() <= 3, "slots: {:?}", plan.slot_sizes);
+            let peak = peak_live_elems(&g).unwrap();
+            assert!(
+                plan.arena_elems(1) <= peak,
+                "arena {} > interpreter peak {peak}",
+                plan.arena_elems(1)
+            );
+        }
+    }
+
+    #[test]
+    fn instructions_never_write_live_inputs() {
+        let g = tiny_test_graph(false);
+        let plan = build_plan(&g).unwrap();
+        for i in &plan.instrs {
+            if !i.in_place {
+                assert!(i.in_slots.iter().all(|&s| s != i.out_slot), "{:?}", i);
+            }
+        }
+    }
+
+    #[test]
+    fn arena_scales_linearly_with_batch() {
+        let g = tiny_test_graph(false);
+        let plan = build_plan(&g).unwrap();
+        assert_eq!(plan.arena_elems(3), 3 * plan.arena_elems(1));
+        assert_eq!(plan.nominal_batch, 1);
+    }
+
+    #[test]
+    fn rejects_statically_mismatched_graphs() {
+        // Add with unequal shapes must fail at plan (= compile) time
+        use crate::dlrt::graph::{Graph, Node};
+        let g = Graph {
+            name: "bad".into(),
+            input_name: "input".into(),
+            input_shape: [1, 8, 8, 3],
+            nodes: vec![
+                Node {
+                    op: Op::MaxPool2d { kernel: [2, 2], stride: [2, 2], padding: [0, 0] },
+                    name: "pool".into(),
+                    inputs: vec!["input".into()],
+                    output: "pool.out".into(),
+                },
+                Node {
+                    op: Op::Add,
+                    name: "bad".into(),
+                    inputs: vec!["input".into(), "pool.out".into()],
+                    output: "bad.out".into(),
+                },
+            ],
+            outputs: vec!["bad.out".into()],
+            weights: Default::default(),
+        };
+        let err = build_plan(&g).unwrap_err();
+        assert!(format!("{err:#}").contains("add shape mismatch"), "{err:#}");
     }
 }

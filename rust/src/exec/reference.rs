@@ -1,0 +1,221 @@
+//! Reference interpreter — the pre-plan executor, retained as the semantic
+//! oracle.
+//!
+//! Walks the graph node by node with an env map, allocating a fresh tensor
+//! per node and fusing nothing. It is deliberately the *slow, obvious*
+//! implementation: parity tests assert the planned executor matches it
+//! bit-for-bit (same kernels, same float-op order), so any plan lowering
+//! bug surfaces as a golden mismatch rather than a silent numeric drift.
+
+use std::collections::BTreeMap;
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::dlrt::graph::{qp_qn, Node, Op};
+use crate::dlrt::tensor::Tensor;
+use crate::kernels::bitserial::{dequant_scale_bias, gemm_bitserial, pack_rows_u8};
+use crate::kernels::elementwise as ew;
+use crate::kernels::fp32::{dense_rowmajor, gemm_rowmajor_bt, scale_bias_rows};
+use crate::kernels::im2col::{im2col_f32, im2col_quant_u8, ConvDims};
+use crate::kernels::int8::gemm_u8i8_i32;
+use crate::kernels::pool;
+
+use super::{CompiledConv, CompiledModel, ConvKernel};
+
+/// Run `model` on `input` with the unfused env-map interpreter.
+pub fn run_unfused(
+    model: &CompiledModel,
+    input: &Tensor,
+    nthreads: usize,
+) -> Result<Vec<Tensor>> {
+    let g = &model.graph;
+    if input.shape.len() != 4 || input.shape[1..] != g.input_shape[1..] {
+        bail!(
+            "input shape {:?} incompatible with model input {:?} (batch may vary)",
+            input.shape,
+            g.input_shape
+        );
+    }
+    let mut env: BTreeMap<&str, Tensor> = BTreeMap::new();
+    let mut remaining = super::planner::use_counts(g);
+    env.insert(&g.input_name, input.clone());
+
+    for node in &g.nodes {
+        let out = run_node(model, node, &env, nthreads)?;
+        // release inputs whose last consumer this was
+        for i in &node.inputs {
+            if let Some(c) = remaining.get_mut(i.as_str()) {
+                *c -= 1;
+                if *c == 0 && !g.outputs.iter().any(|o| o == i) {
+                    env.remove(i.as_str());
+                }
+            }
+        }
+        env.insert(&node.output, out);
+    }
+    g.outputs
+        .iter()
+        .map(|o| {
+            env.get(o.as_str())
+                .cloned()
+                .ok_or_else(|| anyhow!("output {o} not produced"))
+        })
+        .collect()
+}
+
+fn run_node(
+    model: &CompiledModel,
+    node: &Node,
+    env: &BTreeMap<&str, Tensor>,
+    nthreads: usize,
+) -> Result<Tensor> {
+    let input = |idx: usize| -> Result<&Tensor> {
+        env.get(node.inputs[idx].as_str())
+            .ok_or_else(|| anyhow!("missing tensor {}", node.inputs[idx]))
+    };
+    Ok(match &node.op {
+        Op::Conv2d { stride, padding, kernel, cin, cout, .. } => {
+            let x = input(0)?;
+            let (n, h, w, c) = x.nhwc();
+            if c != *cin {
+                bail!("{}: cin mismatch", node.name);
+            }
+            let d = ConvDims::new(n, h, w, c, kernel[0], kernel[1], *stride, *padding);
+            let conv = model
+                .convs
+                .get(&node.name)
+                .ok_or_else(|| anyhow!("no compiled conv for {}", node.name))?;
+            conv_node(x, &d, conv, *cout, nthreads)
+        }
+        Op::Dense { cin, cout } => {
+            let x = input(0)?;
+            let dense = model
+                .denses
+                .get(&node.name)
+                .ok_or_else(|| anyhow!("no compiled dense for {}", node.name))?;
+            let rows = x.numel() / cin;
+            let mut out = vec![0.0f32; rows * cout];
+            dense_rowmajor(&x.data, &dense.w, &dense.b, rows, *cin, *cout, &mut out,
+                           nthreads);
+            let mut shape = x.shape.clone();
+            *shape.last_mut().unwrap() = *cout;
+            Tensor::new(shape, out)?
+        }
+        Op::MaxPool2d { kernel, stride, padding } => {
+            let x = input(0)?;
+            let (n, h, w, c) = x.nhwc();
+            let (oh, ow) = crate::dlrt::graph::conv_out_hw(h, w, *kernel, *stride, *padding);
+            let mut out = Tensor::zeros(vec![n, oh, ow, c]);
+            pool::maxpool2d(&x.data, n, h, w, c, *kernel, *stride, *padding, &mut out.data);
+            out
+        }
+        Op::GlobalAvgPool => {
+            let x = input(0)?;
+            let (n, h, w, c) = x.nhwc();
+            let mut out = Tensor::zeros(vec![n, c]);
+            pool::global_avg_pool(&x.data, n, h, w, c, &mut out.data);
+            out
+        }
+        Op::Upsample2x => {
+            let x = input(0)?;
+            let (n, h, w, c) = x.nhwc();
+            let mut out = Tensor::zeros(vec![n, 2 * h, 2 * w, c]);
+            pool::upsample2x(&x.data, n, h, w, c, &mut out.data);
+            out
+        }
+        Op::Add => {
+            let (a, b) = (input(0)?, input(1)?);
+            if a.shape != b.shape {
+                bail!("{}: add shape mismatch {:?} vs {:?}", node.name, a.shape, b.shape);
+            }
+            let mut out = Tensor::zeros(a.shape.clone());
+            ew::add(&a.data, &b.data, &mut out.data);
+            out
+        }
+        Op::Concat => {
+            let ts: Vec<&Tensor> = (0..node.inputs.len()).map(input).collect::<Result<_>>()?;
+            if ts.is_empty() {
+                bail!("{}: concat with no inputs", node.name);
+            }
+            for t in &ts {
+                if t.shape.len() != 4 {
+                    bail!("{}: concat expects rank-4 NHWC, got {:?}", node.name, t.shape);
+                }
+            }
+            let (n, h, w, _) = ts[0].nhwc();
+            for t in &ts[1..] {
+                let (n2, h2, w2, _) = t.nhwc();
+                if (n2, h2, w2) != (n, h, w) {
+                    bail!(
+                        "{}: concat spatial mismatch {:?} vs {:?}",
+                        node.name,
+                        t.shape,
+                        ts[0].shape
+                    );
+                }
+            }
+            let rows = n * h * w;
+            let parts: Vec<(&[f32], usize)> =
+                ts.iter().map(|t| (t.data.as_slice(), t.shape[3])).collect();
+            let ctot: usize = parts.iter().map(|(_, c)| c).sum();
+            let mut out = Tensor::zeros(vec![n, h, w, ctot]);
+            ew::concat_channels(&parts, rows, &mut out.data);
+            out
+        }
+        Op::Flatten => {
+            let x = input(0)?;
+            let numel: usize = x.shape[1..].iter().product();
+            Tensor::new(vec![x.shape[0], numel], x.data.clone())?
+        }
+        Op::Relu | Op::Relu6 | Op::Silu | Op::LeakyRelu | Op::Sigmoid => {
+            let x = input(0)?;
+            let mut out = x.clone();
+            match node.op {
+                Op::Relu => ew::relu(&mut out.data),
+                Op::Relu6 => ew::relu6(&mut out.data),
+                Op::Silu => ew::silu(&mut out.data),
+                Op::LeakyRelu => ew::leaky_relu(&mut out.data),
+                Op::Sigmoid => ew::sigmoid(&mut out.data),
+                _ => unreachable!(),
+            }
+            out
+        }
+    })
+}
+
+fn conv_node(
+    x: &Tensor,
+    d: &ConvDims,
+    conv: &CompiledConv,
+    cout: usize,
+    nthreads: usize,
+) -> Tensor {
+    let rows = d.rows();
+    let patch = d.patch();
+    let mut out = Tensor::zeros(vec![d.n, d.oh, d.ow, cout]);
+    match &conv.kernel {
+        ConvKernel::Fp32 { wt } => {
+            let mut cols = vec![0.0f32; rows * patch];
+            im2col_f32(&x.data, d, &mut cols);
+            gemm_rowmajor_bt(&cols, wt, rows, cout, patch, &mut out.data, nthreads);
+            scale_bias_rows(&mut out.data, cout, &conv.scale, &conv.bias);
+        }
+        ConvKernel::Bitserial { packed, s_w, s_a, w_bits, a_bits } => {
+            let (qp_a, _) = qp_qn(*a_bits, false);
+            let mut cols = vec![0u8; rows * patch];
+            im2col_quant_u8(&x.data, d, *s_a, qp_a as u8, &mut cols);
+            let ap = pack_rows_u8(&cols, rows, patch, *a_bits as usize);
+            let mut acc = vec![0i32; rows * cout];
+            gemm_bitserial(&ap, packed, *w_bits as usize, &mut acc, nthreads);
+            dequant_scale_bias(&acc, cout, s_a * s_w, &conv.scale, &conv.bias, &mut out.data);
+        }
+        ConvKernel::Int8 { codes, s_w, s_a } => {
+            let mut cols = vec![0u8; rows * patch];
+            im2col_quant_u8(&x.data, d, *s_a, 255, &mut cols);
+            let mut acc = vec![0i32; rows * cout];
+            gemm_u8i8_i32(&cols, codes, rows, cout, patch, &mut acc, nthreads);
+            dequant_scale_bias(&acc, cout, s_a * s_w, &conv.scale, &conv.bias, &mut out.data);
+        }
+    }
+    out
+}

@@ -292,10 +292,38 @@ pub fn dequant_scale_bias(
     bias: &[f32],
     out: &mut [f32],
 ) {
+    dequant_scale_bias_act(acc, cout, s_aw, scale, bias, None, out);
+}
+
+/// [`dequant_scale_bias`] with an optional fused activation epilogue: the
+/// activation is applied to each dequantized value in the same pass over
+/// the accumulator, so a fused Conv2d+activation never materializes the
+/// pre-activation tensor. The scalar activation performs the identical
+/// float ops as the standalone elementwise pass, keeping fusion bit-exact.
+pub fn dequant_scale_bias_act(
+    acc: &[i32],
+    cout: usize,
+    s_aw: f32,
+    scale: &[f32],
+    bias: &[f32],
+    act: Option<crate::kernels::elementwise::ActKind>,
+    out: &mut [f32],
+) {
     debug_assert_eq!(acc.len(), out.len());
-    for (row_a, row_o) in acc.chunks(cout).zip(out.chunks_mut(cout)) {
-        for c in 0..cout {
-            row_o[c] = (row_a[c] as f32 * s_aw) * scale[c] + bias[c];
+    match act {
+        None => {
+            for (row_a, row_o) in acc.chunks(cout).zip(out.chunks_mut(cout)) {
+                for c in 0..cout {
+                    row_o[c] = (row_a[c] as f32 * s_aw) * scale[c] + bias[c];
+                }
+            }
+        }
+        Some(a) => {
+            for (row_a, row_o) in acc.chunks(cout).zip(out.chunks_mut(cout)) {
+                for c in 0..cout {
+                    row_o[c] = a.apply_scalar((row_a[c] as f32 * s_aw) * scale[c] + bias[c]);
+                }
+            }
         }
     }
 }
@@ -467,6 +495,30 @@ mod tests {
         let mut out = vec![0.0; 2];
         dequant_scale_bias(&acc, 2, 0.5, &[2.0, 1.0], &[0.5, -0.5], &mut out);
         assert_eq!(out, vec![10.0 * 0.5 * 2.0 + 0.5, -4.0 * 0.5 * 1.0 - 0.5]);
+    }
+
+    #[test]
+    fn fused_epilogue_matches_unfused_bit_for_bit() {
+        use crate::kernels::elementwise::ActKind;
+        let mut rng = crate::util::rng::Rng::new(33);
+        let (rows, cout) = (17, 9);
+        let acc: Vec<i32> = (0..rows * cout).map(|_| rng.range(-500, 500) as i32).collect();
+        let scale: Vec<f32> = (0..cout).map(|_| rng.normal()).collect();
+        let bias: Vec<f32> = (0..cout).map(|_| rng.normal()).collect();
+        for act in [
+            ActKind::Relu,
+            ActKind::Relu6,
+            ActKind::LeakyRelu,
+            ActKind::Silu,
+            ActKind::Sigmoid,
+        ] {
+            let mut unfused = vec![0.0f32; rows * cout];
+            dequant_scale_bias(&acc, cout, 0.031, &scale, &bias, &mut unfused);
+            act.apply(&mut unfused);
+            let mut fused = vec![0.0f32; rows * cout];
+            dequant_scale_bias_act(&acc, cout, 0.031, &scale, &bias, Some(act), &mut fused);
+            assert_eq!(fused, unfused, "fused {} epilogue diverged", act.name());
+        }
     }
 
     #[test]

@@ -1,4 +1,82 @@
 //! Elementwise activations + binary ops (match jax_exec semantics).
+//!
+//! [`ActKind`] is the value-level activation descriptor the execution
+//! planner carries: fused conv epilogues and in-place activation
+//! instructions both dispatch through it, and its scalar path performs the
+//! exact same float operations as the slice functions below, so fused and
+//! unfused execution stay bit-identical.
+
+use crate::dlrt::graph::Op;
+
+/// Scalar activation kinds the planner can fuse into a conv epilogue or
+/// lower to an in-place slot mutation.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ActKind {
+    Relu,
+    Relu6,
+    LeakyRelu,
+    Silu,
+    Sigmoid,
+}
+
+impl ActKind {
+    pub fn from_op(op: &Op) -> Option<ActKind> {
+        Some(match op {
+            Op::Relu => ActKind::Relu,
+            Op::Relu6 => ActKind::Relu6,
+            Op::LeakyRelu => ActKind::LeakyRelu,
+            Op::Silu => ActKind::Silu,
+            Op::Sigmoid => ActKind::Sigmoid,
+            _ => return None,
+        })
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            ActKind::Relu => "relu",
+            ActKind::Relu6 => "relu6",
+            ActKind::LeakyRelu => "leaky_relu",
+            ActKind::Silu => "silu",
+            ActKind::Sigmoid => "sigmoid",
+        }
+    }
+
+    /// Same operations (and operation order) as the slice functions below —
+    /// epilogue fusion must not change results.
+    #[inline]
+    pub fn apply_scalar(self, v: f32) -> f32 {
+        match self {
+            ActKind::Relu => {
+                if v < 0.0 {
+                    0.0
+                } else {
+                    v
+                }
+            }
+            ActKind::Relu6 => v.clamp(0.0, 6.0),
+            ActKind::LeakyRelu => {
+                if v < 0.0 {
+                    v * 0.1
+                } else {
+                    v
+                }
+            }
+            ActKind::Silu => v * sigmoid_scalar(v),
+            ActKind::Sigmoid => sigmoid_scalar(v),
+        }
+    }
+
+    /// In-place slice application (delegates to the specialized loops).
+    pub fn apply(self, x: &mut [f32]) {
+        match self {
+            ActKind::Relu => relu(x),
+            ActKind::Relu6 => relu6(x),
+            ActKind::LeakyRelu => leaky_relu(x),
+            ActKind::Silu => silu(x),
+            ActKind::Sigmoid => sigmoid(x),
+        }
+    }
+}
 
 pub fn relu(x: &mut [f32]) {
     for v in x.iter_mut() {
@@ -59,6 +137,27 @@ pub fn concat_channels(inputs: &[(&[f32], usize)], rows: usize, out: &mut [f32])
     }
 }
 
+/// Copy one concat input into its channel stripe of the output: `rows` rows
+/// of `c_in` channels from `src` land in columns `[c_off, c_off + c_in)` of
+/// the `rows × c_out` output. The planned executor calls this once per
+/// concat input so no per-call slice list is built on the hot path.
+pub fn copy_channels(
+    src: &[f32],
+    c_in: usize,
+    c_out: usize,
+    c_off: usize,
+    rows: usize,
+    out: &mut [f32],
+) {
+    debug_assert!(c_off + c_in <= c_out);
+    debug_assert_eq!(src.len(), rows * c_in);
+    debug_assert_eq!(out.len(), rows * c_out);
+    for r in 0..rows {
+        let o = r * c_out + c_off;
+        out[o..o + c_in].copy_from_slice(&src[r * c_in..(r + 1) * c_in]);
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -92,5 +191,43 @@ mod tests {
         let mut out = vec![0.0; 6];
         concat_channels(&[(&a, 2), (&b, 1)], 2, &mut out);
         assert_eq!(out, vec![1.0, 2.0, 9.0, 3.0, 4.0, 8.0]);
+
+        // striped copy (planned path) reproduces the same layout
+        let mut out2 = vec![0.0; 6];
+        copy_channels(&a, 2, 3, 0, 2, &mut out2);
+        copy_channels(&b, 1, 3, 2, 2, &mut out2);
+        assert_eq!(out2, out);
+    }
+
+    #[test]
+    fn act_kind_matches_slice_functions() {
+        let vals = [-7.5f32, -1.0, -0.25, 0.0, 0.5, 3.0, 6.5, 42.0];
+        for kind in [
+            ActKind::Relu,
+            ActKind::Relu6,
+            ActKind::LeakyRelu,
+            ActKind::Silu,
+            ActKind::Sigmoid,
+        ] {
+            let mut slice = vals.to_vec();
+            kind.apply(&mut slice);
+            for (&v, &got) in vals.iter().zip(&slice) {
+                let want = kind.apply_scalar(v);
+                assert!(
+                    want == got || (want.is_nan() && got.is_nan()),
+                    "{}: scalar {want} vs slice {got} at input {v}",
+                    kind.name()
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn act_kind_op_mapping() {
+        use crate::dlrt::graph::Op;
+        assert_eq!(ActKind::from_op(&Op::Relu), Some(ActKind::Relu));
+        assert_eq!(ActKind::from_op(&Op::Silu), Some(ActKind::Silu));
+        assert_eq!(ActKind::from_op(&Op::Add), None);
+        assert_eq!(ActKind::from_op(&Op::Flatten), None);
     }
 }

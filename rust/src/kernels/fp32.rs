@@ -133,13 +133,74 @@ pub fn gemm_naive(a: &[f32], b: &[f32], m: usize, n: usize, k: usize, out: &mut 
 
 /// Apply per-channel scale/bias to a rows×cout GEMM result (BN folding).
 pub fn scale_bias_rows(out: &mut [f32], cout: usize, scale: &[f32], bias: &[f32]) {
+    scale_bias_rows_act(out, cout, scale, bias, None);
+}
+
+/// [`scale_bias_rows`] with an optional fused activation epilogue — the
+/// FP32 engine's half of Conv2d+activation fusion: scale, bias, and
+/// activation are applied in one pass over the GEMM result, with the exact
+/// float ops of the standalone elementwise pass (fusion is bit-exact).
+pub fn scale_bias_rows_act(
+    out: &mut [f32],
+    cout: usize,
+    scale: &[f32],
+    bias: &[f32],
+    act: Option<crate::kernels::elementwise::ActKind>,
+) {
     debug_assert_eq!(scale.len(), cout);
     debug_assert_eq!(bias.len(), cout);
-    for row in out.chunks_mut(cout) {
-        for (c, v) in row.iter_mut().enumerate() {
-            *v = *v * scale[c] + bias[c];
+    match act {
+        None => {
+            for row in out.chunks_mut(cout) {
+                for (c, v) in row.iter_mut().enumerate() {
+                    *v = *v * scale[c] + bias[c];
+                }
+            }
+        }
+        Some(a) => {
+            for row in out.chunks_mut(cout) {
+                for (c, v) in row.iter_mut().enumerate() {
+                    *v = a.apply_scalar(*v * scale[c] + bias[c]);
+                }
+            }
         }
     }
+}
+
+/// Dense layer forward: `x` is rows×cin, `w` is cin×cout row-major (the
+/// export layout), `b` has cout entries. Output rows are split across the
+/// persistent worker pool exactly like the conv GEMMs (each worker owns a
+/// disjoint `&mut` block of whole rows); zero activations skip their whole
+/// weight row, which matters after ReLU-heavy backbones.
+#[allow(clippy::too_many_arguments)]
+pub fn dense_rowmajor(
+    x: &[f32],
+    w: &[f32],
+    b: &[f32],
+    rows: usize,
+    cin: usize,
+    cout: usize,
+    out: &mut [f32],
+    nthreads: usize,
+) {
+    debug_assert_eq!(x.len(), rows * cin);
+    debug_assert_eq!(w.len(), cin * cout);
+    debug_assert_eq!(b.len(), cout);
+    debug_assert_eq!(out.len(), rows * cout);
+    threads::par_chunks_rows(out, cout, nthreads, |row0, chunk| {
+        for (i, or) in chunk.chunks_mut(cout).enumerate() {
+            let xr = &x[(row0 + i) * cin..(row0 + i + 1) * cin];
+            or.copy_from_slice(b);
+            for (j, &xv) in xr.iter().enumerate() {
+                if xv != 0.0 {
+                    let wr = &w[j * cout..(j + 1) * cout];
+                    for (o, &wv) in or.iter_mut().zip(wr) {
+                        *o += xv * wv;
+                    }
+                }
+            }
+        }
+    });
 }
 
 #[cfg(test)]
@@ -183,5 +244,67 @@ mod tests {
         let mut out = vec![1.0, 2.0, 3.0, 4.0];
         scale_bias_rows(&mut out, 2, &[2.0, 0.5], &[1.0, -1.0]);
         assert_eq!(out, vec![3.0, 0.0, 7.0, 1.0]);
+    }
+
+    #[test]
+    fn scale_bias_fused_act_matches_unfused() {
+        use crate::kernels::elementwise::ActKind;
+        let mut rng = Rng::new(11);
+        let (rows, cout) = (13, 5);
+        let base: Vec<f32> = (0..rows * cout).map(|_| rng.normal()).collect();
+        let scale: Vec<f32> = (0..cout).map(|_| rng.normal()).collect();
+        let bias: Vec<f32> = (0..cout).map(|_| rng.normal()).collect();
+        for act in [ActKind::Relu, ActKind::Silu, ActKind::Relu6] {
+            let mut unfused = base.clone();
+            scale_bias_rows(&mut unfused, cout, &scale, &bias);
+            act.apply(&mut unfused);
+            let mut fused = base.clone();
+            scale_bias_rows_act(&mut fused, cout, &scale, &bias, Some(act));
+            assert_eq!(fused, unfused, "fused {} diverged", act.name());
+        }
+    }
+
+    #[test]
+    fn dense_matches_scalar_reference() {
+        let mut rng = Rng::new(19);
+        let (rows, cin, cout) = (7, 11, 6);
+        let mut x: Vec<f32> = (0..rows * cin).map(|_| rng.normal()).collect();
+        // sprinkle zeros so the sparsity skip is exercised
+        for v in x.iter_mut().step_by(3) {
+            *v = 0.0;
+        }
+        let w: Vec<f32> = (0..cin * cout).map(|_| rng.normal()).collect();
+        let b: Vec<f32> = (0..cout).map(|_| rng.normal()).collect();
+        let mut want = vec![0.0f32; rows * cout];
+        for r in 0..rows {
+            for c in 0..cout {
+                let mut s = b[c];
+                for j in 0..cin {
+                    s += x[r * cin + j] * w[j * cout + c];
+                }
+                want[r * cout + c] = s;
+            }
+        }
+        for nthreads in [1usize, 3] {
+            let mut got = vec![0.0f32; rows * cout];
+            dense_rowmajor(&x, &w, &b, rows, cin, cout, &mut got, nthreads);
+            prop::close(&got, &want, 1e-5, 1e-5).unwrap();
+        }
+    }
+
+    #[test]
+    fn dense_threaded_matches_single_exactly() {
+        // per-row accumulation order is thread-count independent, so the
+        // parallel dense must be bit-identical, not just close
+        let mut rng = Rng::new(23);
+        let (rows, cin, cout) = (16, 9, 4);
+        let x: Vec<f32> = (0..rows * cin).map(|_| rng.normal()).collect();
+        let w: Vec<f32> = (0..cin * cout).map(|_| rng.normal()).collect();
+        let b: Vec<f32> = (0..cout).map(|_| rng.normal()).collect();
+        let mut g1 = vec![0.0f32; rows * cout];
+        let mut g4 = vec![0.0f32; rows * cout];
+        dense_rowmajor(&x, &w, &b, rows, cin, cout, &mut g1, 1);
+        dense_rowmajor(&x, &w, &b, rows, cin, cout, &mut g4, 4);
+        assert_eq!(g1, g4);
     }
 }

@@ -25,7 +25,9 @@
 //! * [`dlrt`] — graph IR + the `.dlrt` deployable model format.
 //! * [`compiler`] — `arch.json` + `weights.bin` (exported by the JAX build
 //!   path) → quantize → pack → `.dlrt` (the paper's "Deeplite Compiler").
-//! * [`exec`] — graph executor with arena memory planning.
+//! * [`exec`] — execution planner (pass pipeline: activation fusion,
+//!   in-place/alias lowering, arena slot assignment) + the arena executor
+//!   that runs the lowered plan with zero steady-state allocation.
 //! * [`runtime`] — PJRT client wrapper that loads JAX-AOT HLO artifacts
 //!   (the framework-baseline engine; python never runs at request time).
 //!   Gated behind the off-by-default `pjrt` cargo feature: it needs the

@@ -3,7 +3,8 @@
 //! ```text
 //! dlrt compile <model_dir> --out <file.dlrt> [--engine auto|fp32|int8]
 //! dlrt run     <file.dlrt | model_dir> [--threads N] [--reps N] [--batch B]
-//! dlrt inspect <file.dlrt> [--layers]
+//! dlrt inspect [<file.dlrt | model_dir>] [--model NAME --res N] [--layers]
+//!              [--plan]                  # dump the lowered execution plan
 //! dlrt bench   [--model resnet18|resnet50|vgg16_ssd|yolov5n|s|m]
 //!              [--res N] [--engine auto|fp32|int8] [--threads N] [--reps N]
 //! dlrt cost    [--model ...] [--res N] [--cpu a53|a72|a57] [--threads N]
@@ -170,21 +171,58 @@ fn cmd_run(args: &Args) -> Result<()> {
 }
 
 fn cmd_inspect(args: &Args) -> Result<()> {
-    let path = args.positional.first().context("usage: dlrt inspect <file.dlrt>")?;
-    let model = format::load(Path::new(path))?;
+    // accepts a .dlrt file / model dir positionally, or a native builder
+    // via --model NAME --res N (so CI can exercise plan lowering without
+    // exported artifacts)
+    let engine = EngineChoice::parse(args.get_or("engine", "auto"))?;
+    let (_source, model) = load_model(args, engine)?;
     let g = &model.graph;
+    let peak = dlrt::exec::planner::peak_live_elems(g)?;
     println!("model   : {}", g.name);
     println!("input   : {} {:?}", g.input_name, g.input_shape);
     println!("nodes   : {} ({} convs)", g.nodes.len(), g.conv_nodes().count());
     println!("outputs : {:?}", g.outputs);
     println!("engines : {:?}", model.engine_summary());
     println!("weights : {} bytes", model.weight_bytes());
-    println!("peak act: {} f32 elems", dlrt::exec::planner::peak_live_elems(g)?);
+    println!("peak act: {peak} f32 elems");
     if args.flag("layers") {
         for n in g.conv_nodes() {
             let c = &model.convs[&n.name];
             println!("  {:<24} {:<9} scale[{}]", n.name, c.kernel.engine_name(),
                      c.scale.len());
+        }
+    }
+    if args.flag("plan") {
+        let p = &model.plan;
+        println!(
+            "plan    : {} instrs ({} fused epilogues, {} in-place), {} slots",
+            p.instrs.len(),
+            p.fused_instrs(),
+            p.in_place_instrs(),
+            p.slot_sizes.len()
+        );
+        println!(
+            "arena   : {} f32 elems ({} bytes) @ batch {} — interpreter peak {} ({} bytes)",
+            p.arena_elems(p.nominal_batch),
+            4 * p.arena_elems(p.nominal_batch),
+            p.nominal_batch,
+            peak,
+            4 * peak
+        );
+        for (i, ins) in p.instrs.iter().enumerate() {
+            let fused = match ins.fused {
+                Some(a) => format!(" +{}", a.name()),
+                None => String::new(),
+            };
+            let mode = if ins.in_place { " (in-place)" } else { "" };
+            println!(
+                "  {i:>3}: {:<12} {:<24} in={:?} out={} {:?}{fused}{mode}",
+                ins.op.name(),
+                ins.name,
+                ins.in_slots,
+                ins.out_slot,
+                ins.out_tail
+            );
         }
     }
     Ok(())

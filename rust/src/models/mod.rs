@@ -119,7 +119,11 @@ impl GraphBuilder {
             inputs: vec![x.to_string()],
             output: out.clone(),
         });
-        self.channels.insert(out.clone(), self.channels[x]);
+        // propagate channel metadata when known (tensors past a flatten
+        // have no tracked channel count — activations there still work)
+        if let Some(c) = self.channels.get(x).copied() {
+            self.channels.insert(out.clone(), c);
+        }
         out
     }
 
@@ -192,6 +196,21 @@ impl GraphBuilder {
         out
     }
 
+    /// Flatten to rank-2. Channel metadata is not tracked past this point
+    /// (the flattened width depends on spatial dims the builder doesn't
+    /// know); follow with `dense` (explicit `cin`) or activations.
+    pub fn flatten(&mut self, x: &str) -> String {
+        let name = self.fresh("flatten");
+        let out = format!("{name}.out");
+        self.g.nodes.push(Node {
+            op: Op::Flatten,
+            name,
+            inputs: vec![x.to_string()],
+            output: out.clone(),
+        });
+        out
+    }
+
     pub fn dense(&mut self, x: &str, cin: usize, cout: usize) -> String {
         let name = self.fresh("dense");
         let out = format!("{name}.out");
@@ -206,6 +225,7 @@ impl GraphBuilder {
             inputs: vec![x.to_string()],
             output: out.clone(),
         });
+        self.channels.insert(out.clone(), cout);
         out
     }
 

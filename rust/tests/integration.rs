@@ -140,8 +140,10 @@ fn threading_does_not_change_results() {
     }
 }
 
-/// Mismatched elementwise input shapes must surface as proper errors from
-/// the executor, not reach the kernels unchecked.
+/// Mismatched elementwise input shapes must surface as proper errors, not
+/// reach the kernels unchecked. Since plan lowering moved into
+/// `compile_graph`, static shape mismatches are caught at compile time —
+/// before a model can ever be deployed — rather than at the first request.
 mod elementwise_shape_validation {
     use std::collections::BTreeMap;
 
@@ -179,21 +181,17 @@ mod elementwise_shape_validation {
     }
 
     #[test]
-    fn add_rejects_mismatched_shapes() {
+    fn add_rejects_mismatched_shapes_at_compile_time() {
         let g = mismatch_graph(Op::Add);
         g.validate_topology().unwrap();
-        let m = compile_graph(&g, EngineChoice::Auto).unwrap();
-        let mut ex = Executor::new(1);
-        let err = ex.run(&m, &Tensor::zeros(vec![1, 8, 8, 3])).unwrap_err();
+        let err = compile_graph(&g, EngineChoice::Auto).unwrap_err();
         assert!(format!("{err:#}").contains("add shape mismatch"), "{err:#}");
     }
 
     #[test]
-    fn concat_rejects_spatial_mismatch() {
+    fn concat_rejects_spatial_mismatch_at_compile_time() {
         let g = mismatch_graph(Op::Concat);
-        let m = compile_graph(&g, EngineChoice::Auto).unwrap();
-        let mut ex = Executor::new(1);
-        let err = ex.run(&m, &Tensor::zeros(vec![1, 8, 8, 3])).unwrap_err();
+        let err = compile_graph(&g, EngineChoice::Auto).unwrap_err();
         assert!(format!("{err:#}").contains("concat spatial mismatch"), "{err:#}");
     }
 

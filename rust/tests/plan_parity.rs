@@ -1,0 +1,169 @@
+//! Golden parity for the compile-time execution plans: the planned/fused
+//! arena executor must match the retained env-map reference interpreter
+//! **bit for bit** on every engine, plus structural plan invariants
+//! (arena within the interpreter's peak working set, slot disjointness).
+
+use dlrt::compiler::{compile_graph, EngineChoice};
+use dlrt::dlrt::graph::{Graph, Op, QCfg};
+use dlrt::exec::planner::{build_plan_with, peak_live_elems, PlanOpts};
+use dlrt::exec::{reference, Executor};
+use dlrt::models::{single_conv_graph, tiny_test_graph, GraphBuilder};
+use dlrt::Tensor;
+
+fn smooth_input(shape: Vec<usize>) -> Tensor {
+    let mut x = Tensor::zeros(shape);
+    for (i, v) in x.data.iter_mut().enumerate() {
+        *v = ((i % 7) as f32) * 0.125 - 0.25; // mix of exact codes + negatives
+    }
+    x
+}
+
+/// A graph touching every op the planner lowers: fused conv epilogues
+/// (silu/relu), residual add, standalone in-place leaky-relu, upsample,
+/// concat with a skip connection, maxpool, flatten alias, dense, sigmoid.
+fn multi_op_graph() -> Graph {
+    let q = QCfg::new(2, 2);
+    let mut b = GraphBuilder::new("multi", [1, 8, 8, 3], 13);
+    let c1 = b.conv_named("c1", "input", 8, 3, 1, 1, q, Some(Op::Silu));
+    let c2 = b.conv_named("c2", &c1, 8, 3, 2, 1, QCfg::FP32, Some(Op::Relu));
+    let c3 = b.conv_named("c3", &c2, 8, 1, 1, 0, q, None);
+    let s = b.add(&c3, &c2);
+    let r = b.act_named("post", &s, Op::LeakyRelu);
+    let u = b.upsample2x(&r);
+    let cat = b.concat(&[&u, &c1]);
+    let p = b.maxpool(&cat, 2, 2, 0);
+    let f = b.flatten(&p);
+    let d = b.dense(&f, 4 * 4 * 16, 10);
+    let sg = b.act_named("probs", &d, Op::Sigmoid);
+    b.finish(vec![sg])
+}
+
+fn assert_bit_identical(got: &[Tensor], want: &[Tensor], label: &str) {
+    assert_eq!(got.len(), want.len(), "{label}: output count");
+    for (i, (g, w)) in got.iter().zip(want).enumerate() {
+        assert_eq!(g.shape, w.shape, "{label}: output {i} shape");
+        assert_eq!(g.data, w.data, "{label}: output {i} diverged from interpreter");
+    }
+}
+
+#[test]
+fn planned_executor_matches_interpreter_bit_for_bit() {
+    let graphs: Vec<(&str, Graph)> = vec![
+        ("single_conv", single_conv_graph(2, 2, 0.5, 0.25)),
+        ("tiny_exact", tiny_test_graph(true)),
+        ("tiny", tiny_test_graph(false)),
+        ("multi_op", multi_op_graph()),
+    ];
+    for (gname, g) in &graphs {
+        for engine in [EngineChoice::Auto, EngineChoice::ForceFp32, EngineChoice::ForceInt8] {
+            let model = compile_graph(g, engine).unwrap();
+            let x = smooth_input(vec![1, 8, 8, 3]);
+            for nthreads in [1usize, 3] {
+                let mut ex = Executor::new(nthreads);
+                let got = ex.run(&model, &x).unwrap();
+                let want = reference::run_unfused(&model, &x, nthreads).unwrap();
+                assert_bit_identical(&got, &want,
+                                     &format!("{gname}/{engine:?}/t{nthreads}"));
+            }
+        }
+    }
+}
+
+#[test]
+fn planned_executor_matches_interpreter_on_batches() {
+    let g = multi_op_graph();
+    let model = compile_graph(&g, EngineChoice::Auto).unwrap();
+    let x = smooth_input(vec![3, 8, 8, 3]);
+    let mut ex = Executor::new(2);
+    let got = ex.run(&model, &x).unwrap();
+    let want = reference::run_unfused(&model, &x, 2).unwrap();
+    assert_bit_identical(&got, &want, "multi_op batch=3");
+}
+
+#[test]
+fn unfused_plan_matches_fused_plan() {
+    // toggling the fusion/in-place passes must not change results, only
+    // the instruction stream (this is what the fig7 ablation bench relies on)
+    let g = multi_op_graph();
+    let fused = compile_graph(&g, EngineChoice::Auto).unwrap();
+    let mut unfused = fused.clone();
+    unfused.plan =
+        build_plan_with(&g, PlanOpts { fuse_activations: false, in_place: false }).unwrap();
+    assert!(fused.plan.fused_instrs() > 0);
+    assert_eq!(unfused.plan.fused_instrs(), 0);
+    assert!(unfused.plan.instrs.len() > fused.plan.instrs.len());
+    let x = smooth_input(vec![1, 8, 8, 3]);
+    let mut ex = Executor::new(1);
+    let y_fused = ex.run(&fused, &x).unwrap();
+    let y_unfused = ex.run(&unfused, &x).unwrap();
+    assert_bit_identical(&y_fused, &y_unfused, "fused vs unfused plan");
+}
+
+#[test]
+fn arena_stays_within_interpreter_peak() {
+    // On chain-style graphs, slot recycling must never need more memory
+    // than the interpreter's liveness-based peak (what `inspect` reports).
+    // (Wide graphs with skip connections can exceed the peak by a stranded
+    // free slot — the contiguous-slot abstraction's price — so they get
+    // the looser total-footprint bound below.)
+    for (gname, g) in [
+        ("single_conv", single_conv_graph(2, 2, 0.5, 0.25)),
+        ("tiny", tiny_test_graph(false)),
+        ("tiny_exact", tiny_test_graph(true)),
+    ] {
+        let model = compile_graph(&g, EngineChoice::Auto).unwrap();
+        let peak = peak_live_elems(&g).unwrap();
+        let arena = model.plan.arena_elems(model.plan.nominal_batch);
+        assert!(arena <= peak, "{gname}: arena {arena} f32 > interpreter peak {peak}");
+    }
+}
+
+#[test]
+fn arena_reuse_beats_no_reuse_on_wide_graphs() {
+    // even with skip connections, slot recycling must stay well under the
+    // allocate-every-tensor footprint
+    let g = multi_op_graph();
+    let model = compile_graph(&g, EngineChoice::Auto).unwrap();
+    let shapes = g.infer_shapes().unwrap();
+    let total: usize = shapes.values().map(|s| s.iter().product::<usize>()).sum();
+    let arena = model.plan.arena_elems(model.plan.nominal_batch);
+    assert!(arena < total, "arena {arena} f32 >= total tensor footprint {total}");
+    // and slots are genuinely shared: fewer slots than tensors
+    assert!(model.plan.slot_sizes.len() < shapes.len());
+}
+
+#[test]
+fn plan_slots_are_disjoint_per_instruction() {
+    for g in [tiny_test_graph(false), multi_op_graph()] {
+        let model = compile_graph(&g, EngineChoice::Auto).unwrap();
+        for i in &model.plan.instrs {
+            if i.in_place {
+                assert_eq!(i.in_slots[0], i.out_slot);
+            } else {
+                assert!(
+                    i.in_slots.iter().all(|&s| s != i.out_slot),
+                    "instr {} writes one of its live inputs",
+                    i.name
+                );
+            }
+            let nslots = model.plan.slot_sizes.len();
+            assert!(i.out_slot < nslots);
+            assert!(i.in_slots.iter().all(|&s| s < nslots));
+        }
+    }
+}
+
+#[test]
+fn multi_op_plan_uses_every_lowering() {
+    let g = multi_op_graph();
+    let model = compile_graph(&g, EngineChoice::Auto).unwrap();
+    let p = &model.plan;
+    assert!(p.fused_instrs() >= 2, "expected conv+act fusions, got {}", p.fused_instrs());
+    assert!(p.in_place_instrs() >= 1, "expected an in-place activation");
+    assert!(
+        p.instrs.iter().all(|i| !matches!(i.op, Op::Flatten)),
+        "flatten must lower to an alias"
+    );
+    // fewer instructions than graph nodes: fusion + alias removal worked
+    assert!(p.instrs.len() < g.nodes.len());
+}

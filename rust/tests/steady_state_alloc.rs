@@ -1,21 +1,30 @@
-//! Steady-state audit of the bitserial conv path: once scratch buffers have
-//! grown to the layer's size and the kernel pool exists, a full
-//! im2col → quantize → pack → tiled GEMM → dequant pass must perform **zero
-//! heap allocations** and **zero thread spawns** (the pool-reuse test in
-//! `util::threads` covers the spawning half; this binary counts allocations
-//! through a wrapping global allocator).
+//! Steady-state allocation audit, in two phases sharing one counting
+//! window (kept as the only test in this binary so no concurrently running
+//! test can allocate while the counter is armed):
 //!
-//! Kept as the only test in this binary so no concurrently running test can
-//! allocate while the counter window is open.
+//! 1. **Kernel path** — a bare im2col → quantize → pack → tiled GEMM →
+//!    dequant bitserial conv pass over pre-grown scratch.
+//! 2. **Whole network** — a full multi-op model (conv + residual add +
+//!    pool + activation + flatten + dense) executed end-to-end through the
+//!    planned arena executor via `Executor::run_into`.
+//!
+//! Both must perform **zero heap allocations** and **zero thread spawns**
+//! once buffers have grown and the kernel pool exists (the pool-reuse test
+//! in `util::threads` covers the spawning half; this binary counts
+//! allocations through a wrapping global allocator).
 
 use std::alloc::{GlobalAlloc, Layout, System};
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 
-use dlrt::dlrt::tensor::Packed;
+use dlrt::compiler::{compile_graph, EngineChoice};
+use dlrt::dlrt::graph::{Graph, Op, QCfg};
+use dlrt::dlrt::tensor::{Packed, Tensor};
+use dlrt::exec::Executor;
 use dlrt::kernels::bitserial::{
     dequant_scale_bias, gemm_bitserial, pack_rows_u8_into, pack_weights_offset,
 };
 use dlrt::kernels::im2col::{im2col_quant_u8, ConvDims};
+use dlrt::models::GraphBuilder;
 use dlrt::util::rng::Rng;
 
 struct CountingAlloc;
@@ -53,8 +62,38 @@ unsafe impl GlobalAlloc for CountingAlloc {
 #[global_allocator]
 static ALLOCATOR: CountingAlloc = CountingAlloc;
 
+/// Count allocations across `reps` runs of `f` after `warmup` runs.
+fn count_steady_state<F: FnMut()>(warmup: usize, reps: usize, mut f: F) -> usize {
+    for _ in 0..warmup {
+        f();
+    }
+    ALLOCS.store(0, Ordering::SeqCst);
+    COUNTING.store(true, Ordering::SeqCst);
+    for _ in 0..reps {
+        f();
+    }
+    COUNTING.store(false, Ordering::SeqCst);
+    ALLOCS.load(Ordering::SeqCst)
+}
+
+/// conv + residual add + in-place activation + pool + flatten alias + dense:
+/// every lowering the planner performs, in one servable network.
+fn serving_graph() -> Graph {
+    let q = QCfg::new(2, 2);
+    let mut b = GraphBuilder::new("net", [1, 8, 8, 3], 17);
+    let c1 = b.conv_named("c1", "input", 8, 3, 1, 1, q, Some(Op::Relu)); // fused epilogue
+    let c2 = b.conv_named("c2", &c1, 8, 3, 1, 1, q, None);
+    let s = b.add(&c2, &c1);
+    let r = b.act_named("r", &s, Op::Relu); // in-place
+    let p = b.maxpool(&r, 2, 2, 0);
+    let f = b.flatten(&p); // metadata-only alias
+    let d = b.dense(&f, 4 * 4 * 8, 10);
+    b.finish(vec![d])
+}
+
 #[test]
-fn bitserial_conv_path_allocates_nothing_at_steady_state() {
+fn steady_state_paths_allocate_nothing() {
+    // ---- phase 1: bare bitserial conv kernel path ----------------------
     // a conv-shaped workload: 16x16x8 input, 3x3 kernel, 32 output channels
     let d = ConvDims::new(1, 16, 16, 8, 3, 3, [1, 1], [1, 1]);
     let (rows, patch, cout) = (d.rows(), d.patch(), 32usize);
@@ -72,29 +111,39 @@ fn bitserial_conv_path_allocates_nothing_at_steady_state() {
     let mut out = vec![0.0f32; rows * cout];
     let nthreads = 3; // exercise the pool dispatch path, not just inline
 
-    let mut run = |cols: &mut Vec<u8>, packed: &mut Packed| {
-        im2col_quant_u8(&x, &d, 0.1, 3, cols);
-        pack_rows_u8_into(cols, rows, patch, 2, packed);
-        gemm_bitserial(packed, &wp, 2, &mut acc, nthreads);
+    let allocs = count_steady_state(3, 10, || {
+        im2col_quant_u8(&x, &d, 0.1, 3, &mut cols);
+        pack_rows_u8_into(&cols, rows, patch, 2, &mut packed);
+        gemm_bitserial(&packed, &wp, 2, &mut acc, nthreads);
         dequant_scale_bias(&acc, cout, 0.01, &scale, &bias, &mut out);
-    };
-
-    // warm-up: grows every scratch buffer and spins up the worker pool
-    for _ in 0..3 {
-        run(&mut cols, &mut packed);
-    }
-
-    COUNTING.store(true, Ordering::SeqCst);
-    for _ in 0..10 {
-        run(&mut cols, &mut packed);
-    }
-    COUNTING.store(false, Ordering::SeqCst);
-
-    let allocs = ALLOCS.load(Ordering::SeqCst);
+    });
     assert_eq!(
         allocs, 0,
         "steady-state bitserial conv path performed {allocs} heap allocations"
     );
     // keep the results observable so the loop can't be optimized out
     assert!(out.iter().all(|v| v.is_finite()));
+
+    // ---- phase 2: full multi-op network through the planned executor ---
+    let g = serving_graph();
+    let model = compile_graph(&g, EngineChoice::Auto).unwrap();
+    assert!(model.plan.fused_instrs() >= 1, "expected a fused conv epilogue");
+    assert!(model.plan.in_place_instrs() >= 1, "expected an in-place activation");
+
+    let mut ex = Executor::new(nthreads);
+    let mut input = Tensor::zeros(vec![1, 8, 8, 3]);
+    for (i, v) in input.data.iter_mut().enumerate() {
+        *v = ((i % 4) as f32) * 0.25;
+    }
+    let mut outs: Vec<Tensor> = Vec::new();
+
+    let allocs = count_steady_state(3, 10, || {
+        ex.run_into(&model, &input, &mut outs).unwrap();
+    });
+    assert_eq!(
+        allocs, 0,
+        "steady-state end-to-end run performed {allocs} heap allocations"
+    );
+    assert_eq!(outs[0].shape, vec![1, 10]);
+    assert!(outs[0].data.iter().all(|v| v.is_finite()));
 }
