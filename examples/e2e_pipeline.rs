@@ -96,7 +96,7 @@ fn main() -> Result<()> {
         workers: 1,
         max_batch: 8,
         max_wait: Duration::from_millis(2),
-        threads_per_worker: 1,
+        ..ServerConfig::default()
     });
     let t0 = std::time::Instant::now();
     let rxs: Vec<_> = (0..64).map(|_| server.submit(input.clone())).collect();

@@ -54,7 +54,7 @@ fn main() -> Result<()> {
         workers: 1,
         max_batch: 4,
         max_wait: Duration::from_millis(3),
-        threads_per_worker: 1,
+        ..ServerConfig::default()
     });
 
     let mut rng = Rng::new(1);

@@ -14,36 +14,60 @@ use anyhow::{bail, Result};
 use super::{Request, Shared};
 use crate::dlrt::tensor::Tensor;
 
-/// Block until a batch is available; `None` means the server is stopping.
+/// Block until a batch is available; `None` means the worker should exit.
+///
+/// Shutdown contract: on **drain** (graceful) the queue is run to empty —
+/// the batching window is skipped so queued requests don't wait out
+/// `max_wait` — and `None` is returned only once the queue is empty. On
+/// **stop** (hard) every pending request is answered with an explicit
+/// "server stopping" error before `None`, so no client `recv` ever hangs.
 pub(super) fn collect_batch(shared: &Shared) -> Option<Vec<Request>> {
     let mut q = shared.queue.lock().unwrap();
     loop {
         if shared.stop.load(Ordering::SeqCst) {
+            fail_pending(&mut q);
             return None;
         }
         if !q.is_empty() {
             break;
         }
+        if shared.draining.load(Ordering::SeqCst) {
+            return None; // drained: queue empty, no new submissions
+        }
         q = shared.cv.wait(q).unwrap();
     }
-    // window: oldest request anchors the deadline
-    let deadline = q[0].enqueued + shared.cfg.max_wait;
-    while q.len() < shared.cfg.max_batch {
-        let now = Instant::now();
-        if now >= deadline {
-            break;
+    // window: oldest request anchors the deadline (skipped while draining —
+    // latency no longer matters, only finishing the queue does)
+    if !shared.draining.load(Ordering::SeqCst) {
+        let deadline = q[0].enqueued + shared.cfg.max_wait;
+        while q.len() < shared.cfg.max_batch {
+            if shared.stop.load(Ordering::SeqCst) || shared.draining.load(Ordering::SeqCst) {
+                break;
+            }
+            let now = Instant::now();
+            if now >= deadline {
+                break;
+            }
+            let (nq, timeout) = shared.cv.wait_timeout(q, deadline - now).unwrap();
+            q = nq;
+            if timeout.timed_out() {
+                break;
+            }
         }
-        let (nq, timeout) = shared.cv.wait_timeout(q, deadline - now).unwrap();
-        q = nq;
-        if shared.stop.load(Ordering::SeqCst) {
-            return None;
-        }
-        if timeout.timed_out() {
-            break;
-        }
+    }
+    if shared.stop.load(Ordering::SeqCst) {
+        fail_pending(&mut q);
+        return None;
     }
     let take = q.len().min(shared.cfg.max_batch);
     Some(q.drain(..take).collect())
+}
+
+/// Hard stop: answer every queued request with an explicit typed error.
+fn fail_pending(q: &mut Vec<Request>) {
+    for r in q.drain(..) {
+        let _ = r.tx.send(Err(anyhow::Error::new(super::ServerStopping)));
+    }
 }
 
 /// Stack [1,H,W,C] inputs into one [B,H,W,C] tensor.

@@ -1,56 +1,134 @@
 //! Serving metrics: queue/exec latency quantiles, batch sizes, throughput.
+//!
+//! Long-running servers must not grow without bound, so observations are
+//! split into **monotonic counters** (completed, errors, batch-size sums —
+//! exact over the server's whole life) and a **fixed-capacity ring** of the
+//! most recent latency samples that the quantiles are computed over. A
+//! server handling millions of requests holds the same few KB of metric
+//! state as one handling a hundred.
 
 use std::sync::Mutex;
 use std::time::Instant;
 
-#[derive(Default)]
+/// Latency samples kept per series for quantile estimation.
+pub const WINDOW_CAP: usize = 1024;
+
+/// Fixed-capacity ring buffer of the most recent observations.
+#[derive(Debug)]
+struct Reservoir {
+    buf: Vec<f64>,
+    next: usize,
+    cap: usize,
+}
+
+impl Reservoir {
+    fn new(cap: usize) -> Reservoir {
+        Reservoir { buf: Vec::new(), next: 0, cap: cap.max(1) }
+    }
+
+    fn push(&mut self, v: f64) {
+        if self.buf.len() < self.cap {
+            self.buf.push(v);
+        } else {
+            self.buf[self.next] = v;
+        }
+        self.next = (self.next + 1) % self.cap;
+    }
+
+    fn values(&self) -> &[f64] {
+        &self.buf
+    }
+}
+
 pub struct Metrics {
     inner: Mutex<Inner>,
 }
 
-#[derive(Default)]
+impl Default for Metrics {
+    fn default() -> Self {
+        Metrics::with_window(WINDOW_CAP)
+    }
+}
+
 struct Inner {
-    queue_ms: Vec<f64>,
-    exec_ms: Vec<f64>,
-    batch_sizes: Vec<usize>,
+    queue_ms: Reservoir,
+    exec_ms: Reservoir,
+    completed: u64,
+    errors: u64,
+    batch_size_sum: u64,
     started: Option<Instant>,
 }
 
 #[derive(Clone, Debug, Default)]
 pub struct MetricsSnapshot {
+    /// Requests answered successfully (monotonic).
     pub completed: usize,
+    /// Requests answered with an execution error (monotonic).
+    pub errors: usize,
     pub p50_exec_ms: f64,
     pub p95_exec_ms: f64,
+    pub p99_exec_ms: f64,
     pub p50_queue_ms: f64,
     pub p95_queue_ms: f64,
+    pub p99_queue_ms: f64,
     pub mean_batch: f64,
     pub throughput_rps: f64,
+    /// Samples currently in the quantile window (≤ [`WINDOW_CAP`]).
+    pub window: usize,
 }
 
 impl Metrics {
+    pub fn with_window(cap: usize) -> Metrics {
+        Metrics {
+            inner: Mutex::new(Inner {
+                queue_ms: Reservoir::new(cap),
+                exec_ms: Reservoir::new(cap),
+                completed: 0,
+                errors: 0,
+                batch_size_sum: 0,
+                started: None,
+            }),
+        }
+    }
+
     pub fn observe(&self, queue_ms: f64, exec_ms: f64, batch: usize) {
         let mut m = self.inner.lock().unwrap();
         m.started.get_or_insert_with(Instant::now);
         m.queue_ms.push(queue_ms);
         m.exec_ms.push(exec_ms);
-        m.batch_sizes.push(batch);
+        m.completed += 1;
+        m.batch_size_sum += batch as u64;
+    }
+
+    /// Record `n` requests answered with an execution error.
+    pub fn observe_errors(&self, n: usize) {
+        let mut m = self.inner.lock().unwrap();
+        m.started.get_or_insert_with(Instant::now);
+        m.errors += n as u64;
     }
 
     pub fn snapshot(&self) -> MetricsSnapshot {
         let m = self.inner.lock().unwrap();
-        let completed = m.exec_ms.len();
-        if completed == 0 {
+        if m.completed == 0 && m.errors == 0 {
             return MetricsSnapshot::default();
         }
         let elapsed = m.started.map(|t| t.elapsed().as_secs_f64()).unwrap_or(0.0);
         MetricsSnapshot {
-            completed,
-            p50_exec_ms: percentile(&m.exec_ms, 0.50),
-            p95_exec_ms: percentile(&m.exec_ms, 0.95),
-            p50_queue_ms: percentile(&m.queue_ms, 0.50),
-            p95_queue_ms: percentile(&m.queue_ms, 0.95),
-            mean_batch: m.batch_sizes.iter().sum::<usize>() as f64 / completed as f64,
-            throughput_rps: if elapsed > 0.0 { completed as f64 / elapsed } else { 0.0 },
+            completed: m.completed as usize,
+            errors: m.errors as usize,
+            p50_exec_ms: percentile(m.exec_ms.values(), 0.50),
+            p95_exec_ms: percentile(m.exec_ms.values(), 0.95),
+            p99_exec_ms: percentile(m.exec_ms.values(), 0.99),
+            p50_queue_ms: percentile(m.queue_ms.values(), 0.50),
+            p95_queue_ms: percentile(m.queue_ms.values(), 0.95),
+            p99_queue_ms: percentile(m.queue_ms.values(), 0.99),
+            mean_batch: if m.completed > 0 {
+                m.batch_size_sum as f64 / m.completed as f64
+            } else {
+                0.0
+            },
+            throughput_rps: if elapsed > 0.0 { m.completed as f64 / elapsed } else { 0.0 },
+            window: m.exec_ms.values().len(),
         }
     }
 }
@@ -85,7 +163,41 @@ mod tests {
         }
         let s = m.snapshot();
         assert_eq!(s.completed, 10);
+        assert_eq!(s.errors, 0);
         assert_eq!(s.mean_batch, 2.0);
         assert!(s.p95_exec_ms >= s.p50_exec_ms);
+        assert!(s.p99_exec_ms >= s.p95_exec_ms);
+    }
+
+    #[test]
+    fn long_run_memory_is_bounded_but_counters_exact() {
+        let m = Metrics::with_window(64);
+        for i in 0..10_000 {
+            m.observe(0.5, i as f64, 1);
+        }
+        m.observe_errors(3);
+        let s = m.snapshot();
+        assert_eq!(s.completed, 10_000);
+        assert_eq!(s.errors, 3);
+        assert_eq!(s.window, 64);
+        // quantiles reflect the recent window, not ancient history
+        assert!(s.p50_exec_ms >= (10_000 - 64) as f64);
+        assert!(s.p99_exec_ms >= s.p50_exec_ms);
+        {
+            let inner = m.inner.lock().unwrap();
+            assert!(inner.exec_ms.values().len() <= 64);
+            assert!(inner.queue_ms.values().len() <= 64);
+        }
+    }
+
+    #[test]
+    fn reservoir_overwrites_oldest() {
+        let mut r = Reservoir::new(4);
+        for i in 0..6 {
+            r.push(i as f64);
+        }
+        let mut vals = r.values().to_vec();
+        vals.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        assert_eq!(vals, vec![2.0, 3.0, 4.0, 5.0]);
     }
 }

@@ -6,6 +6,18 @@
 //! one NHWC batch (up to `max_batch`, waiting at most `max_wait`), a worker
 //! pool runs the compiled model, and per-request outputs are split back
 //! out. Metrics track queueing + execution latency.
+//!
+//! Admission control: with [`ServerConfig::queue_cap`] set (the `dlrt
+//! serve` gateway always sets it; `0` means unbounded for direct library
+//! use), [`InferenceServer::try_submit`] refuses work instead of queueing
+//! unboundedly — the HTTP gateway maps refusals to 429/503. When a memory
+//! budget is set, the effective `max_batch` and queue bound are derived
+//! from the plan's arena footprint ([`crate::exec::planner::ExecPlan`])
+//! rather than trusting the configured values blindly.
+//!
+//! Shutdown has two modes: [`InferenceServer::drain`] (graceful — refuse
+//! new work, finish everything queued) and drop (hard — pending requests
+//! get an explicit "server stopping" error so no client `recv` ever hangs).
 
 pub mod batcher;
 pub mod metrics;
@@ -29,6 +41,13 @@ pub struct ServerConfig {
     pub max_wait: Duration,
     /// kernel-level threads per worker (keep workers*threads <= cores)
     pub threads_per_worker: usize,
+    /// max requests waiting in the queue; 0 = derive from the memory
+    /// budget when one is set, else unbounded
+    pub queue_cap: usize,
+    /// arena memory budget in bytes across all workers; 0 = no budget.
+    /// Clamps the effective `max_batch` (each worker owns one arena of
+    /// `arena_bytes(max_batch)`) and sizes the queue bound.
+    pub mem_budget_bytes: usize,
 }
 
 impl Default for ServerConfig {
@@ -38,9 +57,45 @@ impl Default for ServerConfig {
             max_batch: 4,
             max_wait: Duration::from_millis(2),
             threads_per_worker: 1,
+            queue_cap: 0,
+            mem_budget_bytes: 0,
         }
     }
 }
+
+/// Why [`InferenceServer::try_submit`] refused a request.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SubmitError {
+    /// The bounded queue is full — shed load (HTTP 429).
+    QueueFull { cap: usize },
+    /// The server is draining or stopped (HTTP 503).
+    Stopping,
+}
+
+impl std::fmt::Display for SubmitError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            SubmitError::QueueFull { cap } => write!(f, "queue full (cap {cap})"),
+            SubmitError::Stopping => write!(f, "server stopping"),
+        }
+    }
+}
+
+impl std::error::Error for SubmitError {}
+
+/// Typed marker delivered through a request's result channel when a hard
+/// stop discards it mid-queue — callers map it to 503 by downcast
+/// (`err.is::<ServerStopping>()`) instead of string-matching messages.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ServerStopping;
+
+impl std::fmt::Display for ServerStopping {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "server stopping")
+    }
+}
+
+impl std::error::Error for ServerStopping {}
 
 struct Request {
     input: Tensor, // [1, H, W, C]
@@ -51,6 +106,9 @@ struct Request {
 struct Shared {
     queue: Mutex<Vec<Request>>,
     cv: Condvar,
+    /// graceful: refuse new work, finish the queue, then workers exit
+    draining: AtomicBool,
+    /// hard: error out pending requests and exit now
     stop: AtomicBool,
     metrics: metrics::Metrics,
     cfg: ServerConfig,
@@ -59,7 +117,7 @@ struct Shared {
 /// Handle for a running inference server.
 pub struct InferenceServer {
     shared: Arc<Shared>,
-    handles: Vec<std::thread::JoinHandle<()>>,
+    handles: Mutex<Vec<std::thread::JoinHandle<()>>>,
 }
 
 impl InferenceServer {
@@ -67,32 +125,104 @@ impl InferenceServer {
         // Warm the persistent kernel pool before accepting traffic so no
         // request — not even the first — pays thread-spawn latency.
         crate::util::threads::global();
+        let mut cfg = cfg;
+        cfg.workers = cfg.workers.max(1);
+        cfg.max_batch = cfg.max_batch.max(1);
+        if cfg.mem_budget_bytes > 0 {
+            // plan-aware batching: each worker owns an arena that scales
+            // linearly with batch, so the largest batch the budget admits
+            // is budget / workers / arena-bytes-per-item
+            let per_worker = cfg.mem_budget_bytes / cfg.workers;
+            let fit = model.plan.max_batch_for_budget(per_worker);
+            if fit < cfg.max_batch {
+                eprintln!(
+                    "[coordinator] {}: max_batch clamped {} -> {} \
+                     (arena {} B/item x {} workers vs {} B budget)",
+                    model.graph.name,
+                    cfg.max_batch,
+                    fit,
+                    model.plan.arena_bytes(1),
+                    cfg.workers,
+                    cfg.mem_budget_bytes
+                );
+                cfg.max_batch = fit;
+            }
+            if cfg.queue_cap == 0 {
+                // queued requests hold their input tensors: bound the queue
+                // so waiting work also respects the budget (floor of one
+                // full round of batches so batching stays effective)
+                let per_req = model.plan.input_bytes().max(1);
+                cfg.queue_cap = (cfg.mem_budget_bytes / per_req)
+                    .max(cfg.workers * cfg.max_batch)
+                    .min(65_536);
+            }
+        }
         let shared = Arc::new(Shared {
             queue: Mutex::new(Vec::new()),
             cv: Condvar::new(),
+            draining: AtomicBool::new(false),
             stop: AtomicBool::new(false),
             metrics: metrics::Metrics::default(),
             cfg,
         });
-        let handles = (0..cfg.workers.max(1))
+        let handles = (0..cfg.workers)
             .map(|_| {
                 let shared = shared.clone();
                 let model = model.clone();
                 std::thread::spawn(move || worker_loop(&shared, &model))
             })
             .collect();
-        InferenceServer { shared, handles }
+        InferenceServer { shared, handles: Mutex::new(handles) }
     }
 
-    /// Submit one input; returns a receiver for its outputs.
-    pub fn submit(&self, input: Tensor) -> mpsc::Receiver<Result<Vec<Tensor>>> {
+    /// The effective configuration (after plan-aware clamping).
+    pub fn config(&self) -> ServerConfig {
+        self.shared.cfg
+    }
+
+    /// Requests currently waiting to be batched.
+    pub fn queue_depth(&self) -> usize {
+        self.shared.queue.lock().unwrap().len()
+    }
+
+    /// Submit one input if the server is accepting work and the queue has
+    /// room; returns a receiver for its outputs.
+    pub fn try_submit(
+        &self,
+        input: Tensor,
+    ) -> std::result::Result<mpsc::Receiver<Result<Vec<Tensor>>>, SubmitError> {
         let (tx, rx) = mpsc::channel();
         {
             let mut q = self.shared.queue.lock().unwrap();
+            // checked under the queue lock so a drain started after this
+            // point still sees (and finishes) the request
+            if self.shared.draining.load(Ordering::SeqCst)
+                || self.shared.stop.load(Ordering::SeqCst)
+            {
+                return Err(SubmitError::Stopping);
+            }
+            let cap = self.shared.cfg.queue_cap;
+            if cap > 0 && q.len() >= cap {
+                return Err(SubmitError::QueueFull { cap });
+            }
             q.push(Request { input, enqueued: Instant::now(), tx });
         }
         self.shared.cv.notify_one();
-        rx
+        Ok(rx)
+    }
+
+    /// Submit one input; returns a receiver for its outputs. Admission
+    /// refusals are delivered through the channel as errors, so existing
+    /// callers never block on a request that was not accepted.
+    pub fn submit(&self, input: Tensor) -> mpsc::Receiver<Result<Vec<Tensor>>> {
+        match self.try_submit(input) {
+            Ok(rx) => rx,
+            Err(e) => {
+                let (tx, rx) = mpsc::channel();
+                let _ = tx.send(Err(anyhow!("request refused: {e}")));
+                rx
+            }
+        }
     }
 
     /// Convenience: submit + wait.
@@ -106,20 +236,44 @@ impl InferenceServer {
         self.shared.metrics.snapshot()
     }
 
-    pub fn shutdown(mut self) {
-        self.shared.stop.store(true, Ordering::SeqCst);
+    /// Graceful shutdown: refuse new submissions, run everything already
+    /// queued, then stop the workers. Safe to call from multiple handles
+    /// (e.g. through an `Arc`) — later calls are no-ops.
+    pub fn drain(&self) {
+        {
+            // set the flag under the queue lock: a worker that just saw
+            // draining=false cannot reach cv.wait() until we release it,
+            // so the notify below can never be lost
+            let _q = self.shared.queue.lock().unwrap();
+            self.shared.draining.store(true, Ordering::SeqCst);
+        }
         self.shared.cv.notify_all();
-        for h in self.handles.drain(..) {
+        let handles: Vec<_> = self.handles.lock().unwrap().drain(..).collect();
+        for h in handles {
             let _ = h.join();
         }
+    }
+
+    /// Graceful shutdown by value (see [`InferenceServer::drain`]).
+    pub fn shutdown(self) {
+        self.drain();
     }
 }
 
 impl Drop for InferenceServer {
     fn drop(&mut self) {
-        self.shared.stop.store(true, Ordering::SeqCst);
+        // hard stop: pending requests get an explicit "server stopping"
+        // error (from the workers' final queue sweep) instead of hanging
+        {
+            // under the queue lock so the notify below cannot be lost (see
+            // `drain`)
+            let _q = self.shared.queue.lock().unwrap();
+            self.shared.stop.store(true, Ordering::SeqCst);
+            self.shared.draining.store(true, Ordering::SeqCst);
+        }
         self.shared.cv.notify_all();
-        for h in self.handles.drain(..) {
+        let handles: Vec<_> = self.handles.lock().unwrap().drain(..).collect();
+        for h in handles {
             let _ = h.join();
         }
     }
@@ -145,12 +299,17 @@ fn worker_loop(shared: &Shared, model: &CompiledModel) {
             .map(|r| dequeued.saturating_duration_since(r.enqueued).as_secs_f64() * 1e3)
             .collect();
         let n = batch.len();
-        let stacked = batcher::stack_inputs(&batch.iter().map(|r| &r.input).collect::<Vec<_>>());
         let t0 = Instant::now();
-        let result = stacked.and_then(|x| exec.run_into(model, &x, &mut outputs));
+        // catch panics so one poisoned batch cannot kill the (possibly
+        // only) worker and leave queued callers blocked in recv() forever
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            let stacked =
+                batcher::stack_inputs(&batch.iter().map(|r| &r.input).collect::<Vec<_>>())?;
+            exec.run_into(model, &stacked, &mut outputs)
+        }));
         let exec_ms = t0.elapsed().as_secs_f64() * 1e3;
         match result {
-            Ok(()) => {
+            Ok(Ok(())) => {
                 for (bi, req) in batch.into_iter().enumerate() {
                     let per: Result<Vec<Tensor>> =
                         outputs.iter().map(|o| batcher::slice_batch(o, bi)).collect();
@@ -158,10 +317,21 @@ fn worker_loop(shared: &Shared, model: &CompiledModel) {
                     let _ = req.tx.send(per);
                 }
             }
-            Err(e) => {
+            Ok(Err(e)) => {
                 let msg = format!("{e:#}");
+                shared.metrics.observe_errors(n);
                 for req in batch {
                     let _ = req.tx.send(Err(anyhow!("{msg}")));
+                }
+            }
+            Err(_panic) => {
+                // executor/scratch state is suspect after an unwind:
+                // rebuild them, answer the batch, keep serving
+                exec = Executor::new(shared.cfg.threads_per_worker);
+                outputs = Vec::new();
+                shared.metrics.observe_errors(n);
+                for req in batch {
+                    let _ = req.tx.send(Err(anyhow!("worker panicked during batch execution")));
                 }
             }
         }
@@ -174,10 +344,13 @@ mod tests {
     use crate::compiler::{compile_graph, EngineChoice};
     use crate::models::tiny_test_graph;
 
-    fn server(cfg: ServerConfig) -> InferenceServer {
+    fn tiny_model() -> Arc<CompiledModel> {
         let g = tiny_test_graph(false);
-        let m = Arc::new(compile_graph(&g, EngineChoice::Auto).unwrap());
-        InferenceServer::start(m, cfg)
+        Arc::new(compile_graph(&g, EngineChoice::Auto).unwrap())
+    }
+
+    fn server(cfg: ServerConfig) -> InferenceServer {
+        InferenceServer::start(tiny_model(), cfg)
     }
 
     #[test]
@@ -197,7 +370,7 @@ mod tests {
             workers: 2,
             max_batch: 4,
             max_wait: Duration::from_millis(1),
-            threads_per_worker: 1,
+            ..ServerConfig::default()
         });
         let rxs: Vec<_> = (0..16)
             .map(|i| {
@@ -218,8 +391,7 @@ mod tests {
 
     #[test]
     fn batched_equals_unbatched() {
-        let g = tiny_test_graph(false);
-        let model = Arc::new(compile_graph(&g, EngineChoice::Auto).unwrap());
+        let model = tiny_model();
         let mut exec = Executor::new(1);
         let mut x = Tensor::zeros(vec![1, 8, 8, 3]);
         for (i, v) in x.data.iter_mut().enumerate() {
@@ -231,7 +403,7 @@ mod tests {
             workers: 1,
             max_batch: 8,
             max_wait: Duration::from_millis(5),
-            threads_per_worker: 1,
+            ..ServerConfig::default()
         });
         // submit several identical requests so they batch together
         let rxs: Vec<_> = (0..6).map(|_| srv.submit(x.clone())).collect();
@@ -246,5 +418,100 @@ mod tests {
     fn shutdown_drains_cleanly() {
         let srv = server(ServerConfig::default());
         srv.shutdown(); // no panic, no hang
+    }
+
+    #[test]
+    fn queue_cap_rejects_overflow() {
+        // one worker holding a wide batching window: the first request sits
+        // in the (cap-1) queue, so the second is refused at admission
+        let srv = server(ServerConfig {
+            workers: 1,
+            max_batch: 8,
+            max_wait: Duration::from_millis(500),
+            queue_cap: 1,
+            ..ServerConfig::default()
+        });
+        let rx1 = srv.try_submit(Tensor::zeros(vec![1, 8, 8, 3])).unwrap();
+        // give the worker time to open the batching window (request stays
+        // queued until max_batch or the deadline)
+        std::thread::sleep(Duration::from_millis(50));
+        match srv.try_submit(Tensor::zeros(vec![1, 8, 8, 3])) {
+            Err(SubmitError::QueueFull { cap: 1 }) => {}
+            other => panic!("expected QueueFull, got {other:?}"),
+        }
+        // the accepted request still completes
+        assert!(rx1.recv().unwrap().is_ok());
+        srv.shutdown();
+    }
+
+    #[test]
+    fn drain_finishes_queued_requests() {
+        let srv = server(ServerConfig {
+            workers: 1,
+            max_batch: 64,
+            max_wait: Duration::from_millis(500),
+            ..ServerConfig::default()
+        });
+        let rxs: Vec<_> =
+            (0..5).map(|_| srv.try_submit(Tensor::zeros(vec![1, 8, 8, 3])).unwrap()).collect();
+        // drain long before the 500ms window closes: queued requests must
+        // run, not wait out the window or get dropped
+        let t0 = Instant::now();
+        srv.shutdown();
+        assert!(t0.elapsed() < Duration::from_millis(400), "drain waited out the window");
+        for rx in rxs {
+            assert!(rx.recv().unwrap().is_ok());
+        }
+    }
+
+    #[test]
+    fn submit_after_drain_is_refused() {
+        let srv = server(ServerConfig::default());
+        srv.drain();
+        match srv.try_submit(Tensor::zeros(vec![1, 8, 8, 3])) {
+            Err(SubmitError::Stopping) => {}
+            other => panic!("expected Stopping, got {other:?}"),
+        }
+        let res = srv.infer(Tensor::zeros(vec![1, 8, 8, 3]));
+        assert!(res.is_err());
+    }
+
+    #[test]
+    fn drop_errors_queued_requests_explicitly() {
+        let srv = server(ServerConfig {
+            workers: 1,
+            max_batch: 64,
+            max_wait: Duration::from_millis(500),
+            ..ServerConfig::default()
+        });
+        let rxs: Vec<_> =
+            (0..3).map(|_| srv.try_submit(Tensor::zeros(vec![1, 8, 8, 3])).unwrap()).collect();
+        drop(srv); // hard stop
+        for rx in rxs {
+            match rx.recv().unwrap() {
+                Err(e) => assert!(e.is::<ServerStopping>(), "got {e:#}"),
+                Ok(_) => {} // a batch already in flight may legitimately finish
+            }
+        }
+    }
+
+    #[test]
+    fn mem_budget_clamps_batch_and_bounds_queue() {
+        let model = tiny_model();
+        let budget = 2 * model.plan.arena_bytes(1);
+        let srv = InferenceServer::start(model, ServerConfig {
+            workers: 1,
+            max_batch: 16,
+            max_wait: Duration::from_millis(1),
+            mem_budget_bytes: budget,
+            ..ServerConfig::default()
+        });
+        let eff = srv.config();
+        assert_eq!(eff.max_batch, 2, "budget for two arena items admits batch 2");
+        assert!(eff.queue_cap > 0, "budget must bound the queue");
+        // still serves correctly at the clamped batch
+        let outs = srv.infer(Tensor::zeros(vec![1, 8, 8, 3])).unwrap();
+        assert_eq!(outs[0].shape, vec![1, 4]);
+        srv.shutdown();
     }
 }

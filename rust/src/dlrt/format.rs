@@ -336,6 +336,19 @@ pub fn load(path: &Path) -> Result<CompiledModel> {
     CompiledModel::new(graph, model_convs, model_denses)
 }
 
+/// Load a deployable model from either a `.dlrt` file or an exported
+/// `arch.json` + `weights.bin` directory (compiled on the spot): the model
+/// registry's load-by-path entry point, so operators can point `--models`
+/// or the admin load endpoint at whatever artifact they have.
+pub fn load_auto(path: &Path) -> Result<CompiledModel> {
+    if path.is_dir() {
+        let g = crate::compiler::load_arch(path)?;
+        crate::compiler::compile_graph(&g, crate::compiler::EngineChoice::Auto)
+    } else {
+        load(path)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

@@ -136,6 +136,30 @@ impl ExecPlan {
         self.slot_sizes.iter().sum::<usize>() * batch
     }
 
+    /// Arena bytes needed for `batch` (4 bytes per f32 element). This is
+    /// the number the serving layer sizes batches and queues against.
+    pub fn arena_bytes(&self, batch: usize) -> usize {
+        4 * self.arena_elems(batch)
+    }
+
+    /// f32 elements of a single request input (batch 1).
+    pub fn input_elems(&self) -> usize {
+        self.input_tail.iter().product()
+    }
+
+    /// Bytes held by one queued request input (batch 1, f32).
+    pub fn input_bytes(&self) -> usize {
+        4 * self.input_elems()
+    }
+
+    /// Largest batch whose arena fits in `budget_bytes`. Never returns 0:
+    /// a budget smaller than one batch item degrades to unbatched serving
+    /// rather than refusing to serve at all.
+    pub fn max_batch_for_budget(&self, budget_bytes: usize) -> usize {
+        let per_item = self.arena_bytes(1).max(1);
+        (budget_bytes / per_item).max(1)
+    }
+
     pub fn fused_instrs(&self) -> usize {
         self.instrs.iter().filter(|i| i.fused.is_some()).count()
     }
@@ -536,6 +560,21 @@ mod tests {
         let peak = peak_live_elems(&g).unwrap();
         assert!(peak <= total);
         assert!(peak > 0);
+    }
+
+    #[test]
+    fn memory_accounting_helpers() {
+        let g = tiny_test_graph(false);
+        let plan = build_plan(&g).unwrap();
+        assert_eq!(plan.arena_bytes(1), 4 * plan.arena_elems(1));
+        assert_eq!(plan.arena_bytes(2), 2 * plan.arena_bytes(1));
+        assert_eq!(plan.input_elems(), 8 * 8 * 3);
+        assert_eq!(plan.input_bytes(), 4 * 8 * 8 * 3);
+        // budget for exactly k items admits batch k; a starvation budget
+        // still admits one
+        assert_eq!(plan.max_batch_for_budget(plan.arena_bytes(3)), 3);
+        assert_eq!(plan.max_batch_for_budget(plan.arena_bytes(1) - 1), 1);
+        assert_eq!(plan.max_batch_for_budget(0), 1);
     }
 
     #[test]

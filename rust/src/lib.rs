@@ -34,6 +34,10 @@
 //!   `xla` crate + an XLA toolchain, which plain toolchains lack.
 //! * [`coordinator`] — serving layer: request router, dynamic batcher,
 //!   worker pool, detection postprocessing.
+//! * [`serve`] — network gateway: std-only threaded HTTP/1.1 server,
+//!   multi-model registry, admission control (bounded queues sized from
+//!   the plan's memory footprint), Prometheus `/metrics`, and the
+//!   `dlrt client` load generator.
 //! * [`costmodel`] — analytical Cortex-A53/A72/A57 latency projection.
 //! * [`models`] — native graph builders for the paper's evaluation models.
 //! * [`bench_harness`] — timing + paper-table reporting used by `cargo bench`.
@@ -51,6 +55,7 @@ pub mod models;
 pub mod quant;
 #[cfg(feature = "pjrt")]
 pub mod runtime;
+pub mod serve;
 pub mod util;
 
 pub use dlrt::graph::{Graph, Node, Op, QCfg};

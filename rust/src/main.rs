@@ -8,7 +8,15 @@
 //! dlrt bench   [--model resnet18|resnet50|vgg16_ssd|yolov5n|s|m]
 //!              [--res N] [--engine auto|fp32|int8] [--threads N] [--reps N]
 //! dlrt cost    [--model ...] [--res N] [--cpu a53|a72|a57] [--threads N]
-//! dlrt serve   [--model ...] [--requests N] [--max-batch B] [--workers W]
+//! dlrt serve   --models spec[,spec...] [--listen ADDR] [--workers W]
+//!              [--max-batch B] [--max-wait-ms MS] [--threads N]
+//!              [--queue-cap Q] [--mem-budget-mb MB]
+//!              # spec: [name=]file.dlrt | [name=]model_dir | [name=]builder[@res]
+//!              # HTTP: GET /healthz /metrics /v1/models
+//!              #       POST /v1/models/{name}/infer|load|unload
+//!              #       POST /v1/admin/shutdown (graceful drain)
+//! dlrt client  [--addr HOST:PORT] [--model NAME] [--requests N]
+//!              [--concurrency C] [--rate RPS] [--json]   # loadgen
 //! dlrt pjrt    <artifact_stem>        # run a JAX-AOT HLO artifact
 //! ```
 
@@ -19,12 +27,13 @@ use anyhow::{bail, Context, Result};
 
 use dlrt::bench_harness::{bench_ms, ms, reps_for, Table};
 use dlrt::compiler::{compile_graph, load_arch, EngineChoice};
-use dlrt::coordinator::{InferenceServer, ServerConfig};
+use dlrt::coordinator::ServerConfig;
 use dlrt::costmodel::{self, cpu_by_name, EngineKind};
 use dlrt::dlrt::format;
-use dlrt::dlrt::graph::QCfg;
 use dlrt::exec::Executor;
 use dlrt::models;
+use dlrt::serve::registry::{ModelRegistry, ModelSpec};
+use dlrt::serve::{loadgen, Gateway, GatewayConfig};
 use dlrt::util::cli::Args;
 use dlrt::util::rng::Rng;
 use dlrt::Tensor;
@@ -50,6 +59,7 @@ fn main() {
         "bench" => cmd_bench(&args),
         "cost" => cmd_cost(&args),
         "serve" => cmd_serve(&args),
+        "client" => cmd_client(&args),
         "pjrt" => cmd_pjrt(&args),
         "help" | "--help" => {
             print_usage();
@@ -69,7 +79,7 @@ fn main() {
 
 fn print_usage() {
     eprintln!("dlrt — ultra-low-bit bitserial inference runtime (DeepliteRT repro)");
-    eprintln!("commands: compile | run | inspect | bench | cost | serve | pjrt");
+    eprintln!("commands: compile | run | inspect | bench | cost | serve | client | pjrt");
     eprintln!("see rust/src/main.rs docs or README.md for flags");
 }
 
@@ -90,27 +100,14 @@ fn load_model(args: &Args, engine: EngineChoice) -> Result<(String, dlrt::exec::
 }
 
 fn default_res(model: &str) -> usize {
-    match model {
-        "vgg16_ssd" => 300,
-        m if m.starts_with("yolov5") => 320,
-        _ => 224,
-    }
+    models::default_res(model)
 }
 
 fn build_named(name: &str, res: usize, args: &Args) -> Result<dlrt::Graph> {
     let wb = args.usize_or("w-bits", 2)? as u8;
     let ab = args.usize_or("a-bits", 2)? as u8;
-    let q = QCfg::new(ab, wb);
     let wm = args.f64_or("width-mult", 1.0)? as f32;
-    Ok(match name {
-        "resnet18" => models::build_resnet(18, 1000, res, wm, q, 0),
-        "resnet50" => models::build_resnet(50, 1000, res, wm, q, 0),
-        "vgg16_ssd" => models::build_vgg16_ssd(21, res, wm, q, 0),
-        "yolov5n" => models::build_yolov5("n", 80, res, wm, q, 0),
-        "yolov5s" => models::build_yolov5("s", 80, res, wm, q, 0),
-        "yolov5m" => models::build_yolov5("m", 80, res, wm, q, 0),
-        other => bail!("unknown model {other:?}"),
-    })
+    models::build_named(name, res, wb, ab, wm)
 }
 
 fn random_input(model: &dlrt::exec::CompiledModel, batch: usize, seed: u64) -> Tensor {
@@ -286,34 +283,116 @@ fn cmd_cost(args: &Args) -> Result<()> {
 }
 
 fn cmd_serve(args: &Args) -> Result<()> {
-    let engine = EngineChoice::parse(args.get_or("engine", "auto"))?;
-    let (name, model) = load_model(args, engine)?;
-    let requests = args.usize_or("requests", 32)?;
-    let cfg = ServerConfig {
+    let listen = args.get_or("listen", "127.0.0.1:8080");
+    let specs = args
+        .require("models")
+        .context("usage: dlrt serve --listen ADDR --models spec[,spec...]")?;
+    let mem_budget_bytes = args.usize_or("mem-budget-mb", 0)? * 1024 * 1024;
+    // Queue bound precedence: explicit --queue-cap wins; otherwise a
+    // memory budget derives the bound per model from the plan's footprint
+    // (queue_cap 0 + budget triggers the derivation in the coordinator);
+    // with neither, the gateway still bounds queues at 256.
+    let queue_cap = match args.get("queue-cap") {
+        Some(v) => v.parse().context("bad --queue-cap")?,
+        None if mem_budget_bytes > 0 => 0,
+        None => 256,
+    };
+    let base = ServerConfig {
         workers: args.usize_or("workers", 1)?,
         max_batch: args.usize_or("max-batch", 4)?,
         max_wait: std::time::Duration::from_millis(args.usize_or("max-wait-ms", 2)? as u64),
         threads_per_worker: args.usize_or("threads", 1)?,
+        queue_cap,
+        mem_budget_bytes,
     };
-    let model = Arc::new(model);
-    println!("serving {name} with {cfg:?}; {requests} synthetic requests");
-    let server = InferenceServer::start(model.clone(), cfg);
-    let t0 = std::time::Instant::now();
-    let rxs: Vec<_> = (0..requests)
-        .map(|i| server.submit(random_input(&model, 1, i as u64)))
-        .collect();
-    for rx in rxs {
-        rx.recv().expect("server alive")?;
+    let registry = Arc::new(ModelRegistry::new(base));
+    for item in specs.split(',').filter(|s| !s.trim().is_empty()) {
+        let spec = ModelSpec::parse(item)?;
+        registry.load_spec(&spec)?;
+        let entry = registry.get(&spec.name).expect("just loaded");
+        let eff = entry.server.config();
+        println!(
+            "loaded {:<20} <- {} | workers {} max_batch {} queue_cap {} arena {} B/item",
+            spec.name,
+            entry.source,
+            eff.workers,
+            eff.max_batch,
+            eff.queue_cap,
+            entry.model.plan.arena_bytes(1),
+        );
     }
-    let wall = t0.elapsed().as_secs_f64();
-    let m = server.metrics();
-    println!("completed : {}", m.completed);
-    println!("throughput: {:.2} req/s (wall {:.2}s)", requests as f64 / wall, wall);
-    println!("exec p50  : {}", ms(m.p50_exec_ms));
-    println!("exec p95  : {}", ms(m.p95_exec_ms));
-    println!("queue p50 : {}", ms(m.p50_queue_ms));
-    println!("mean batch: {:.2}", m.mean_batch);
-    server.shutdown();
+    let gw_cfg = GatewayConfig {
+        max_body_bytes: args.usize_or("max-body-mb", 64)? << 20,
+        max_connections: args.usize_or("max-connections", 256)?,
+        ..GatewayConfig::default()
+    };
+    let gateway = Gateway::bind(listen, registry, gw_cfg)?;
+    println!("listening on http://{}", gateway.local_addr());
+    println!(
+        "endpoints: GET /healthz | GET /metrics | GET /v1/models | \
+         POST /v1/models/{{name}}/infer|load|unload | POST /v1/admin/shutdown"
+    );
+    // Serve until a client POSTs /v1/admin/shutdown (graceful drain); a
+    // signal kills the process without draining, so orchestrators should
+    // hit the endpoint first.
+    while !gateway.shutdown_requested() {
+        std::thread::sleep(std::time::Duration::from_millis(200));
+    }
+    println!("shutdown requested; draining in-flight connections and model queues ...");
+    gateway.shutdown();
+    println!("drained cleanly");
+    Ok(())
+}
+
+fn cmd_client(args: &Args) -> Result<()> {
+    let cfg = loadgen::LoadgenConfig {
+        addr: args.get_or("addr", "127.0.0.1:8080").to_string(),
+        model: args.get_or("model", "").to_string(),
+        requests: args.usize_or("requests", 64)?,
+        concurrency: args.usize_or("concurrency", 4)?,
+        rate: args.f64_or("rate", 0.0)?,
+        json: args.flag("json"),
+        timeout: std::time::Duration::from_millis(args.usize_or("timeout-ms", 30_000)? as u64),
+    };
+    let mode = if cfg.rate > 0.0 {
+        format!("open loop @ {:.1} req/s", cfg.rate)
+    } else {
+        "closed loop".to_string()
+    };
+    println!(
+        "loadgen -> http://{} model {:?} ({} requests, {} senders, {mode})",
+        cfg.addr,
+        if cfg.model.is_empty() { "<first>" } else { cfg.model.as_str() },
+        cfg.requests,
+        cfg.concurrency
+    );
+    let rep = loadgen::run(&cfg)?;
+    let mut table = Table::new(
+        &format!("dlrt client — {}", rep.model),
+        &["sent", "ok", "errors", "p50", "p95", "p99", "mean", "req/s"],
+    );
+    let errors: usize =
+        rep.status_counts.values().sum::<usize>() + rep.transport_errors;
+    table.row(vec![
+        rep.sent.to_string(),
+        rep.ok.to_string(),
+        errors.to_string(),
+        ms(rep.p50_ms),
+        ms(rep.p95_ms),
+        ms(rep.p99_ms),
+        ms(rep.mean_ms),
+        format!("{:.1}", rep.achieved_rps),
+    ]);
+    table.print();
+    for (status, n) in &rep.status_counts {
+        println!("  HTTP {status}: {n}");
+    }
+    if rep.transport_errors > 0 {
+        println!("  transport errors: {}", rep.transport_errors);
+    }
+    if rep.ok < rep.sent {
+        std::process::exit(1);
+    }
     Ok(())
 }
 

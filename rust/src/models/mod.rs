@@ -17,6 +17,36 @@ pub use resnet::build_resnet;
 pub use vgg_ssd::build_vgg16_ssd;
 pub use yolov5::build_yolov5;
 
+/// Default input resolution for a named builder.
+pub fn default_res(model: &str) -> usize {
+    match model {
+        "vgg16_ssd" => 300,
+        m if m.starts_with("yolov5") => 320,
+        _ => 224,
+    }
+}
+
+/// Build a named evaluation model — the single lookup shared by the CLI
+/// and the serving registry (`resnet18|resnet50|vgg16_ssd|yolov5n|s|m`).
+pub fn build_named(
+    name: &str,
+    res: usize,
+    w_bits: u8,
+    a_bits: u8,
+    width_mult: f32,
+) -> anyhow::Result<Graph> {
+    let q = QCfg::new(a_bits, w_bits);
+    Ok(match name {
+        "resnet18" => build_resnet(18, 1000, res, width_mult, q, 0),
+        "resnet50" => build_resnet(50, 1000, res, width_mult, q, 0),
+        "vgg16_ssd" => build_vgg16_ssd(21, res, width_mult, q, 0),
+        "yolov5n" => build_yolov5("n", 80, res, width_mult, q, 0),
+        "yolov5s" => build_yolov5("s", 80, res, width_mult, q, 0),
+        "yolov5m" => build_yolov5("m", 80, res, width_mult, q, 0),
+        other => anyhow::bail!("unknown model {other:?}"),
+    })
+}
+
 /// Shared builder DSL (mirror of python GraphBuilder).
 pub struct GraphBuilder {
     pub g: Graph,

@@ -1,0 +1,113 @@
+//! Gateway-side admission control: connection limiting and the HTTP
+//! mapping of coordinator admission decisions.
+//!
+//! The policy split: the **coordinator** owns queue bounds and plan-aware
+//! batch sizing (it knows the `ExecPlan` arena footprint); this module owns
+//! what the network edge does when the coordinator says no — shed with 429
+//! (queue full, retryable) or 503 (draining, come back after a re-load),
+//! plus a hard cap on concurrent connections so a misbehaving client herd
+//! can't exhaust gateway threads.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+use crate::coordinator::{MetricsSnapshot, SubmitError};
+use crate::serve::http::Response;
+use crate::util::json::{num, obj, s, Json};
+
+/// Counting guard for concurrent connections.
+pub struct ConnLimiter {
+    active: AtomicUsize,
+    max: usize,
+}
+
+impl ConnLimiter {
+    pub fn new(max: usize) -> ConnLimiter {
+        ConnLimiter { active: AtomicUsize::new(0), max: max.max(1) }
+    }
+
+    /// Try to take a slot; `false` means the caller must shed the
+    /// connection. Pair every `true` with exactly one [`ConnLimiter::release`].
+    pub fn try_acquire(&self) -> bool {
+        let mut cur = self.active.load(Ordering::Relaxed);
+        loop {
+            if cur >= self.max {
+                return false;
+            }
+            match self.active.compare_exchange_weak(
+                cur,
+                cur + 1,
+                Ordering::AcqRel,
+                Ordering::Relaxed,
+            ) {
+                Ok(_) => return true,
+                Err(now) => cur = now,
+            }
+        }
+    }
+
+    pub fn release(&self) {
+        self.active.fetch_sub(1, Ordering::AcqRel);
+    }
+
+    pub fn active(&self) -> usize {
+        self.active.load(Ordering::Relaxed)
+    }
+}
+
+/// Seconds a 429'd client should back off before retrying: roughly the
+/// time for one queue's worth of work to clear, floored at 1s.
+fn retry_after_secs(snap: &MetricsSnapshot) -> u64 {
+    let clear_ms = snap.p50_exec_ms.max(1.0) * 2.0;
+    (clear_ms / 1000.0).ceil().max(1.0) as u64
+}
+
+/// Map a coordinator admission refusal to its HTTP response.
+pub fn reject_response(err: &SubmitError, snap: &MetricsSnapshot) -> Response {
+    match err {
+        SubmitError::QueueFull { cap } => {
+            let body = obj(vec![
+                ("error", s("queue full")),
+                ("queue_cap", num(*cap as f64)),
+            ]);
+            Response::json(429, &body)
+                .header("Retry-After", &retry_after_secs(snap).to_string())
+        }
+        SubmitError::Stopping => {
+            let body: Json = obj(vec![("error", s("model draining"))]);
+            Response::json(503, &body)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn limiter_caps_and_releases() {
+        let l = ConnLimiter::new(2);
+        assert!(l.try_acquire());
+        assert!(l.try_acquire());
+        assert!(!l.try_acquire());
+        l.release();
+        assert_eq!(l.active(), 1);
+        assert!(l.try_acquire());
+    }
+
+    #[test]
+    fn queue_full_maps_to_429_with_retry_after() {
+        let snap = MetricsSnapshot { p50_exec_ms: 40.0, ..MetricsSnapshot::default() };
+        let resp = reject_response(&SubmitError::QueueFull { cap: 8 }, &snap);
+        assert_eq!(resp.status, 429);
+        assert!(resp.headers.iter().any(|(k, _)| k == "Retry-After"));
+        let body = String::from_utf8(resp.body).unwrap();
+        assert!(body.contains("queue full"));
+        assert!(body.contains("8"));
+    }
+
+    #[test]
+    fn stopping_maps_to_503() {
+        let resp = reject_response(&SubmitError::Stopping, &MetricsSnapshot::default());
+        assert_eq!(resp.status, 503);
+    }
+}

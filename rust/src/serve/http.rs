@@ -1,0 +1,598 @@
+//! Minimal HTTP/1.1 message layer (std-only, no TLS): request parsing and
+//! response serialization for the gateway's server side, plus a blocking
+//! keep-alive client used by the loadgen, the CI smoke, and the tests.
+//!
+//! Deliberately small: `Content-Length` bodies only (no chunked encoding),
+//! keep-alive by default, `Connection: close` honored. That subset is what
+//! `curl`, Prometheus scrapers, and our own loadgen speak.
+
+use std::io::{BufRead, BufReader, ErrorKind, Read, Write};
+use std::net::TcpStream;
+use std::time::Duration;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+/// Cap on request-line + header bytes (defense against garbage peers).
+pub const MAX_HEADER_BYTES: usize = 16 * 1024;
+
+/// How many consecutive socket-timeout reads to tolerate *mid-message*
+/// (headers/body) before giving up on a stalled peer. With the gateway's
+/// 500ms read timeout this allows ~60s of stall, so slow links finish
+/// instead of getting a spurious 400. (Between requests the caller handles
+/// timeouts itself via [`ReadOutcome::IdleTimeout`].)
+const MAX_MID_MESSAGE_STALLS: u32 = 120;
+
+/// The raw wire format for tensor data: f32 little-endian. Defined once
+/// here, next to the framing code, and shared by the gateway handlers,
+/// the loadgen, and the integration tests.
+pub fn f32s_to_le_bytes(data: &[f32]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(4 * data.len());
+    for v in data {
+        out.extend_from_slice(&v.to_le_bytes());
+    }
+    out
+}
+
+/// Inverse of [`f32s_to_le_bytes`]; trailing bytes that don't fill an f32
+/// are ignored (callers validate lengths beforehand).
+pub fn le_bytes_to_f32s(bytes: &[u8]) -> Vec<f32> {
+    bytes.chunks_exact(4).map(|b| f32::from_le_bytes([b[0], b[1], b[2], b[3]])).collect()
+}
+
+/// Marker error: a reused connection failed before the server can have
+/// received the full request (send error, or clean EOF before any response
+/// byte) — the request was provably not executed, so a retry is safe even
+/// for non-idempotent POSTs.
+#[derive(Debug)]
+pub struct StaleConnection;
+
+impl std::fmt::Display for StaleConnection {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "stale connection: request was not delivered")
+    }
+}
+
+impl std::error::Error for StaleConnection {}
+
+// ---------------------------------------------------------------------------
+// messages
+// ---------------------------------------------------------------------------
+
+/// One parsed HTTP request.
+#[derive(Debug, Default)]
+pub struct Request {
+    pub method: String,
+    pub path: String,
+    pub headers: Vec<(String, String)>,
+    pub body: Vec<u8>,
+    /// peer asked to close after this exchange (`Connection: close` or 1.0)
+    pub close: bool,
+}
+
+impl Request {
+    pub fn new(method: &str, path: &str) -> Request {
+        Request { method: method.to_string(), path: path.to_string(), ..Request::default() }
+    }
+
+    pub fn with_body(method: &str, path: &str, content_type: &str, body: Vec<u8>) -> Request {
+        let mut r = Request::new(method, path);
+        r.headers.push(("Content-Type".to_string(), content_type.to_string()));
+        r.body = body;
+        r
+    }
+
+    /// Case-insensitive header lookup.
+    pub fn header(&self, name: &str) -> Option<&str> {
+        self.headers
+            .iter()
+            .find(|(k, _)| k.eq_ignore_ascii_case(name))
+            .map(|(_, v)| v.as_str())
+    }
+}
+
+/// One outgoing HTTP response.
+#[derive(Debug)]
+pub struct Response {
+    pub status: u16,
+    pub content_type: String,
+    pub headers: Vec<(String, String)>,
+    pub body: Vec<u8>,
+}
+
+impl Response {
+    pub fn new(status: u16, content_type: &str, body: Vec<u8>) -> Response {
+        Response { status, content_type: content_type.to_string(), headers: Vec::new(), body }
+    }
+
+    pub fn text(status: u16, body: &str) -> Response {
+        Response::new(status, "text/plain; charset=utf-8", body.as_bytes().to_vec())
+    }
+
+    pub fn json(status: u16, v: &crate::util::json::Json) -> Response {
+        Response::new(status, "application/json", v.to_string().into_bytes())
+    }
+
+    pub fn bytes(status: u16, body: Vec<u8>) -> Response {
+        Response::new(status, "application/octet-stream", body)
+    }
+
+    /// Builder-style extra header.
+    pub fn header(mut self, k: &str, v: &str) -> Response {
+        self.headers.push((k.to_string(), v.to_string()));
+        self
+    }
+
+    pub fn write_to(&self, w: &mut impl Write, close: bool) -> std::io::Result<()> {
+        let mut head = format!(
+            "HTTP/1.1 {} {}\r\nContent-Type: {}\r\nContent-Length: {}\r\nConnection: {}\r\n",
+            self.status,
+            reason(self.status),
+            self.content_type,
+            self.body.len(),
+            if close { "close" } else { "keep-alive" },
+        );
+        for (k, v) in &self.headers {
+            head.push_str(k);
+            head.push_str(": ");
+            head.push_str(v);
+            head.push_str("\r\n");
+        }
+        head.push_str("\r\n");
+        w.write_all(head.as_bytes())?;
+        w.write_all(&self.body)?;
+        w.flush()
+    }
+}
+
+pub fn reason(status: u16) -> &'static str {
+    match status {
+        200 => "OK",
+        202 => "Accepted",
+        400 => "Bad Request",
+        404 => "Not Found",
+        405 => "Method Not Allowed",
+        408 => "Request Timeout",
+        413 => "Payload Too Large",
+        429 => "Too Many Requests",
+        500 => "Internal Server Error",
+        501 => "Not Implemented",
+        503 => "Service Unavailable",
+        _ => "",
+    }
+}
+
+// ---------------------------------------------------------------------------
+// server-side parsing
+// ---------------------------------------------------------------------------
+
+/// Outcome of trying to read one request off a connection.
+#[derive(Debug)]
+pub enum ReadOutcome {
+    Request(Request),
+    /// peer closed cleanly between requests
+    Eof,
+    /// read timed out before the request line completed — the caller
+    /// decides whether to keep waiting (idle keep-alive) or close;
+    /// partially-read bytes stay in `line` and survive the retry
+    IdleTimeout,
+    /// declared body exceeds the limit; respond 413 and close
+    TooLarge(usize),
+    /// request uses a feature this server does not implement (e.g.
+    /// `Transfer-Encoding: chunked`); respond 501 and close
+    Unsupported(&'static str),
+}
+
+/// Read one line tolerating mid-line socket timeouts (the peer is slow,
+/// not gone). Returns the bytes appended; 0 means EOF.
+fn read_line_stalls<R: BufRead>(r: &mut R, line: &mut String) -> std::io::Result<usize> {
+    let start = line.len();
+    let mut stalls = 0u32;
+    let mut last_len = line.len();
+    loop {
+        match r.read_line(line) {
+            Ok(0) => return Ok(line.len() - start), // EOF (possibly mid-line)
+            Ok(_) => {
+                if line.ends_with('\n') {
+                    return Ok(line.len() - start);
+                }
+                // partial without newline: keep reading
+            }
+            Err(e) if e.kind() == ErrorKind::Interrupted => {}
+            Err(e)
+                if (e.kind() == ErrorKind::WouldBlock || e.kind() == ErrorKind::TimedOut)
+                    && stalls < MAX_MID_MESSAGE_STALLS =>
+            {
+                stalls += 1;
+            }
+            Err(e) => return Err(e),
+        }
+        // slow-but-alive peers reset the stall budget on any progress
+        // (mirrors read_full_stalls)
+        if line.len() > last_len {
+            last_len = line.len();
+            stalls = 0;
+        }
+    }
+}
+
+/// `read_exact` tolerating mid-body socket timeouts.
+fn read_full_stalls<R: Read>(r: &mut R, buf: &mut [u8]) -> std::io::Result<()> {
+    let mut filled = 0usize;
+    let mut stalls = 0u32;
+    while filled < buf.len() {
+        match r.read(&mut buf[filled..]) {
+            Ok(0) => return Err(std::io::Error::from(ErrorKind::UnexpectedEof)),
+            Ok(n) => {
+                filled += n;
+                stalls = 0;
+            }
+            Err(e) if e.kind() == ErrorKind::Interrupted => {}
+            Err(e)
+                if (e.kind() == ErrorKind::WouldBlock || e.kind() == ErrorKind::TimedOut)
+                    && stalls < MAX_MID_MESSAGE_STALLS =>
+            {
+                stalls += 1;
+            }
+            Err(e) => return Err(e),
+        }
+    }
+    Ok(())
+}
+
+/// Read one request. `line` is caller-owned so a timeout mid-request-line
+/// keeps the partial bytes for the next attempt (it is cleared only after
+/// the request line parses).
+pub fn read_request<R: BufRead>(
+    r: &mut R,
+    line: &mut String,
+    max_body: usize,
+) -> Result<ReadOutcome> {
+    match r.read_line(line) {
+        Ok(0) => return Ok(ReadOutcome::Eof),
+        Ok(_) => {}
+        Err(e) if e.kind() == ErrorKind::WouldBlock || e.kind() == ErrorKind::TimedOut => {
+            return Ok(ReadOutcome::IdleTimeout)
+        }
+        Err(e) => return Err(e.into()),
+    }
+    if !line.ends_with('\n') {
+        // timed out (or EOF'd) mid-line: report idle, keep partial bytes
+        return Ok(ReadOutcome::IdleTimeout);
+    }
+    let mut parts = line.split_whitespace();
+    let (method, path, version) = match (parts.next(), parts.next(), parts.next()) {
+        (Some(m), Some(p), Some(v)) => (m.to_string(), p.to_string(), v.to_string()),
+        _ => bail!("malformed request line {line:?}"),
+    };
+    line.clear();
+    let mut req = Request::new(&method, &path);
+    req.close = version == "HTTP/1.0";
+
+    // headers until the blank line (stall-tolerant: we are mid-message)
+    let mut header_bytes = 0usize;
+    loop {
+        let mut h = String::new();
+        let n = read_line_stalls(r, &mut h).context("reading header")?;
+        if n == 0 {
+            bail!("connection closed mid-headers");
+        }
+        header_bytes += n;
+        if header_bytes > MAX_HEADER_BYTES {
+            bail!("headers exceed {MAX_HEADER_BYTES} bytes");
+        }
+        let h = h.trim_end_matches(&['\r', '\n'][..]);
+        if h.is_empty() {
+            break;
+        }
+        let (k, v) = h.split_once(':').ok_or_else(|| anyhow!("malformed header {h:?}"))?;
+        req.headers.push((k.trim().to_string(), v.trim().to_string()));
+    }
+    if let Some(c) = req.header("connection") {
+        if c.eq_ignore_ascii_case("close") {
+            req.close = true;
+        }
+    }
+    if req.header("transfer-encoding").is_some() {
+        // chunked (or any transfer coding) is not implemented; RFC 9112
+        // says a server may respond 501 — and must not guess at framing
+        return Ok(ReadOutcome::Unsupported("Transfer-Encoding is not supported"));
+    }
+
+    let len = match req.header("content-length") {
+        Some(v) => v.trim().parse::<usize>().context("bad content-length")?,
+        None => 0,
+    };
+    if len > max_body {
+        return Ok(ReadOutcome::TooLarge(len));
+    }
+    if len > 0 {
+        let mut body = vec![0u8; len];
+        read_full_stalls(r, &mut body).context("reading body")?;
+        req.body = body;
+    }
+    Ok(ReadOutcome::Request(req))
+}
+
+// ---------------------------------------------------------------------------
+// client side
+// ---------------------------------------------------------------------------
+
+/// A client-side response.
+#[derive(Debug)]
+pub struct ClientResponse {
+    pub status: u16,
+    pub headers: Vec<(String, String)>,
+    pub body: Vec<u8>,
+}
+
+impl ClientResponse {
+    pub fn header(&self, name: &str) -> Option<&str> {
+        self.headers
+            .iter()
+            .find(|(k, _)| k.eq_ignore_ascii_case(name))
+            .map(|(_, v)| v.as_str())
+    }
+
+    pub fn body_str(&self) -> Result<&str> {
+        std::str::from_utf8(&self.body).map_err(|e| anyhow!("non-utf8 body: {e}"))
+    }
+}
+
+/// Blocking HTTP/1.1 client with connection reuse (keep-alive). One
+/// instance per sender thread; reconnects transparently when the server
+/// closed the previous exchange.
+pub struct HttpClient {
+    addr: String,
+    timeout: Duration,
+    conn: Option<BufReader<TcpStream>>,
+}
+
+impl HttpClient {
+    pub fn new(addr: &str, timeout: Duration) -> HttpClient {
+        HttpClient { addr: addr.to_string(), timeout, conn: None }
+    }
+
+    fn connect(&self) -> Result<BufReader<TcpStream>> {
+        let stream =
+            TcpStream::connect(&self.addr).with_context(|| format!("connect {}", self.addr))?;
+        stream.set_nodelay(true).ok();
+        stream.set_read_timeout(Some(self.timeout)).ok();
+        stream.set_write_timeout(Some(self.timeout)).ok();
+        Ok(BufReader::new(stream))
+    }
+
+    /// Send one request and read the response. A reused keep-alive
+    /// connection is retried once on a fresh connection **only** when the
+    /// failure proves the request never reached the server
+    /// ([`StaleConnection`]: send error, or clean EOF before any response
+    /// byte) — a timeout after a delivered request is NOT retried, so a
+    /// non-idempotent `/infer` is never silently executed twice.
+    pub fn send(&mut self, req: &Request) -> Result<ClientResponse> {
+        let had_conn = self.conn.is_some();
+        if self.conn.is_none() {
+            self.conn = Some(self.connect()?);
+        }
+        match self.exchange(req) {
+            Ok(resp) => Ok(resp),
+            Err(e) if had_conn && e.is::<StaleConnection>() => {
+                self.conn = Some(self.connect()?);
+                self.exchange(req)
+            }
+            Err(e) => Err(e),
+        }
+    }
+
+    fn exchange(&mut self, req: &Request) -> Result<ClientResponse> {
+        // take the connection out: any error path below drops it
+        let mut conn = self.conn.take().ok_or_else(|| anyhow!("not connected"))?;
+        let mut head = format!(
+            "{} {} HTTP/1.1\r\nHost: {}\r\nContent-Length: {}\r\n",
+            req.method,
+            req.path,
+            self.addr,
+            req.body.len()
+        );
+        for (k, v) in &req.headers {
+            head.push_str(k);
+            head.push_str(": ");
+            head.push_str(v);
+            head.push_str("\r\n");
+        }
+        head.push_str("\r\n");
+        let write_result: std::io::Result<()> = (|| {
+            let stream = conn.get_mut();
+            stream.write_all(head.as_bytes())?;
+            stream.write_all(&req.body)?;
+            stream.flush()
+        })();
+        if let Err(e) = write_result {
+            // the server cannot have executed a request it never fully
+            // received — mark as retry-safe
+            return Err(anyhow::Error::new(StaleConnection).context(format!("send failed: {e}")));
+        }
+        match read_client_response(&mut conn) {
+            Ok((resp, close)) => {
+                if !close {
+                    self.conn = Some(conn);
+                }
+                Ok(resp)
+            }
+            Err(e) => Err(e),
+        }
+    }
+}
+
+/// Parse a response: status line, headers, `Content-Length` body (or read
+/// to EOF when absent). Returns the response and whether the server asked
+/// to close the connection.
+fn read_client_response<R: BufRead>(r: &mut R) -> Result<(ClientResponse, bool)> {
+    let mut line = String::new();
+    if r.read_line(&mut line)? == 0 {
+        // clean EOF before any response byte: the server closed the idle
+        // keep-alive without processing the request — safe to retry
+        return Err(anyhow::Error::new(StaleConnection)
+            .context("connection closed before response"));
+    }
+    let mut parts = line.split_whitespace();
+    let _version = parts.next().ok_or_else(|| anyhow!("empty status line"))?;
+    let status: u16 =
+        parts.next().ok_or_else(|| anyhow!("no status code"))?.parse().context("status code")?;
+    let mut headers = Vec::new();
+    let mut header_bytes = 0usize;
+    loop {
+        let mut h = String::new();
+        let n = r.read_line(&mut h)?;
+        if n == 0 {
+            bail!("connection closed mid-headers");
+        }
+        header_bytes += n;
+        if header_bytes > MAX_HEADER_BYTES {
+            bail!("headers exceed {MAX_HEADER_BYTES} bytes");
+        }
+        let h = h.trim_end_matches(&['\r', '\n'][..]);
+        if h.is_empty() {
+            break;
+        }
+        if let Some((k, v)) = h.split_once(':') {
+            headers.push((k.trim().to_string(), v.trim().to_string()));
+        }
+    }
+    let close = headers
+        .iter()
+        .any(|(k, v)| k.eq_ignore_ascii_case("connection") && v.eq_ignore_ascii_case("close"));
+    let len = headers
+        .iter()
+        .find(|(k, _)| k.eq_ignore_ascii_case("content-length"))
+        .map(|(_, v)| v.trim().parse::<usize>())
+        .transpose()
+        .context("bad content-length")?;
+    let mut body = Vec::new();
+    match len {
+        Some(n) => {
+            body.resize(n, 0);
+            r.read_exact(&mut body).context("reading response body")?;
+        }
+        None => {
+            r.read_to_end(&mut body)?;
+        }
+    }
+    Ok((ClientResponse { status, headers, body }, close))
+}
+
+/// One-shot convenience for tests and simple probes: open a connection,
+/// send, read the response, close.
+pub fn http_once(
+    addr: &str,
+    method: &str,
+    path: &str,
+    content_type: &str,
+    body: Vec<u8>,
+) -> Result<ClientResponse> {
+    let mut client = HttpClient::new(addr, Duration::from_secs(30));
+    let mut req = Request::with_body(method, path, content_type, body);
+    req.headers.push(("Connection".to_string(), "close".to_string()));
+    client.send(&req)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Cursor;
+
+    fn parse(raw: &[u8]) -> Result<ReadOutcome> {
+        let mut r = Cursor::new(raw.to_vec());
+        let mut line = String::new();
+        read_request(&mut r, &mut line, 1024)
+    }
+
+    #[test]
+    fn parses_request_with_body() {
+        let raw = b"POST /v1/models/m/infer HTTP/1.1\r\nHost: x\r\nContent-Type: application/json\r\nContent-Length: 4\r\n\r\nabcd";
+        match parse(raw).unwrap() {
+            ReadOutcome::Request(req) => {
+                assert_eq!(req.method, "POST");
+                assert_eq!(req.path, "/v1/models/m/infer");
+                assert_eq!(req.header("content-type"), Some("application/json"));
+                assert_eq!(req.body, b"abcd");
+                assert!(!req.close);
+            }
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn keep_alive_parses_back_to_back_requests() {
+        let raw = b"GET /healthz HTTP/1.1\r\n\r\nGET /metrics HTTP/1.1\r\nConnection: close\r\n\r\n";
+        let mut r = Cursor::new(raw.to_vec());
+        let mut line = String::new();
+        let first = match read_request(&mut r, &mut line, 1024).unwrap() {
+            ReadOutcome::Request(req) => req,
+            other => panic!("{other:?}"),
+        };
+        assert_eq!(first.path, "/healthz");
+        assert!(!first.close);
+        let second = match read_request(&mut r, &mut line, 1024).unwrap() {
+            ReadOutcome::Request(req) => req,
+            other => panic!("{other:?}"),
+        };
+        assert_eq!(second.path, "/metrics");
+        assert!(second.close);
+        assert!(matches!(read_request(&mut r, &mut line, 1024).unwrap(), ReadOutcome::Eof));
+    }
+
+    #[test]
+    fn rejects_malformed_and_limits_body() {
+        assert!(parse(b"NOT-HTTP\r\n\r\n").is_err());
+        let big = b"POST /x HTTP/1.1\r\nContent-Length: 9999\r\n\r\n";
+        assert!(matches!(parse(big).unwrap(), ReadOutcome::TooLarge(9999)));
+        assert!(parse(b"POST /x HTTP/1.1\r\nContent-Length: nope\r\n\r\n").is_err());
+    }
+
+    #[test]
+    fn f32_wire_roundtrip() {
+        let xs = vec![0.0f32, -1.5, 3.25, f32::MIN_POSITIVE, f32::MAX];
+        assert_eq!(le_bytes_to_f32s(&f32s_to_le_bytes(&xs)), xs);
+        assert_eq!(f32s_to_le_bytes(&xs).len(), 4 * xs.len());
+    }
+
+    #[test]
+    fn rejects_transfer_encoding_as_unsupported() {
+        let raw = b"POST /x HTTP/1.1\r\nTransfer-Encoding: chunked\r\n\r\n5\r\nhello\r\n0\r\n\r\n";
+        match parse(raw).unwrap() {
+            ReadOutcome::Unsupported(_) => {}
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn http10_and_connection_close_set_close() {
+        match parse(b"GET / HTTP/1.0\r\n\r\n").unwrap() {
+            ReadOutcome::Request(req) => assert!(req.close),
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn response_serializes_with_extra_headers() {
+        let resp = Response::bytes(200, vec![1, 2, 3]).header("X-DLRT-Shapes", "[[1,3]]");
+        let mut out = Vec::new();
+        resp.write_to(&mut out, true).unwrap();
+        let text = String::from_utf8_lossy(&out);
+        assert!(text.starts_with("HTTP/1.1 200 OK\r\n"));
+        assert!(text.contains("Content-Length: 3\r\n"));
+        assert!(text.contains("Connection: close\r\n"));
+        assert!(text.contains("X-DLRT-Shapes: [[1,3]]\r\n"));
+        assert!(out.ends_with(&[1, 2, 3]));
+    }
+
+    #[test]
+    fn client_parses_response() {
+        let raw = b"HTTP/1.1 429 Too Many Requests\r\nContent-Length: 5\r\nRetry-After: 1\r\n\r\nwait\n";
+        let mut r = Cursor::new(raw.to_vec());
+        let (resp, close) = read_client_response(&mut r).unwrap();
+        assert_eq!(resp.status, 429);
+        assert_eq!(resp.header("retry-after"), Some("1"));
+        assert_eq!(resp.body, b"wait\n");
+        assert!(!close);
+    }
+}

@@ -1,0 +1,213 @@
+//! `dlrt client` — HTTP load generator for the gateway.
+//!
+//! Two modes:
+//!
+//! * **closed loop** (`rate == 0`): `concurrency` senders each keep one
+//!   request outstanding — measures capacity.
+//! * **open loop** (`rate > 0`): requests are scheduled on a fixed global
+//!   cadence regardless of completions; latency is measured from each
+//!   request's *scheduled* time, so queueing delay the server causes is
+//!   charged to the server (no coordinated omission).
+//!
+//! The generator discovers the target model's input shape from
+//! `GET /v1/models`, sends one deterministic random input repeatedly, and
+//! reports p50/p95/p99 latency plus per-status error counts.
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::coordinator::metrics::percentile;
+use crate::util::json::{arr, num, obj, Json};
+use crate::util::rng::Rng;
+
+use super::http::{HttpClient, Request};
+
+#[derive(Clone, Debug)]
+pub struct LoadgenConfig {
+    pub addr: String,
+    /// empty = first model the gateway lists
+    pub model: String,
+    pub requests: usize,
+    pub concurrency: usize,
+    /// offered load in req/s (across all senders); 0 = closed loop
+    pub rate: f64,
+    /// send JSON bodies instead of raw f32 bytes
+    pub json: bool,
+    pub timeout: Duration,
+}
+
+impl Default for LoadgenConfig {
+    fn default() -> Self {
+        LoadgenConfig {
+            addr: "127.0.0.1:8080".to_string(),
+            model: String::new(),
+            requests: 64,
+            concurrency: 4,
+            rate: 0.0,
+            json: false,
+            timeout: Duration::from_secs(30),
+        }
+    }
+}
+
+#[derive(Clone, Debug, Default)]
+pub struct LoadgenReport {
+    pub model: String,
+    pub sent: usize,
+    pub ok: usize,
+    /// non-2xx responses by status code
+    pub status_counts: BTreeMap<u16, usize>,
+    /// connect/read/write failures
+    pub transport_errors: usize,
+    pub p50_ms: f64,
+    pub p95_ms: f64,
+    pub p99_ms: f64,
+    pub mean_ms: f64,
+    pub wall_s: f64,
+    pub achieved_rps: f64,
+}
+
+/// Build the request body for `shape` (without the batch dim the element
+/// count is the product of all dims; batch is always 1 per request).
+fn build_body(shape: &[usize], json: bool) -> (String, Vec<u8>) {
+    let elems: usize = shape.iter().product();
+    let mut rng = Rng::new(42);
+    if json {
+        let data = arr((0..elems).map(|_| num(rng.f32() as f64)).collect());
+        let v = obj(vec![("data", data)]);
+        ("application/json".to_string(), v.to_string().into_bytes())
+    } else {
+        let data: Vec<f32> = (0..elems).map(|_| rng.f32()).collect();
+        ("application/octet-stream".to_string(), super::http::f32s_to_le_bytes(&data))
+    }
+}
+
+/// Resolve the target model name + input shape from `GET /v1/models`.
+fn discover(cfg: &LoadgenConfig) -> Result<(String, Vec<usize>)> {
+    let mut probe = HttpClient::new(&cfg.addr, cfg.timeout);
+    let resp = probe.send(&Request::new("GET", "/v1/models"))?;
+    if resp.status != 200 {
+        bail!("GET /v1/models returned {}", resp.status);
+    }
+    let v = Json::parse(resp.body_str()?)?;
+    let models = v.get("models")?.arr()?;
+    let entry = if cfg.model.is_empty() {
+        models.first().ok_or_else(|| anyhow!("gateway has no models registered"))?
+    } else {
+        models
+            .iter()
+            .find(|m| m.get("name").and_then(|n| n.str().map(String::from)).ok().as_deref()
+                == Some(cfg.model.as_str()))
+            .ok_or_else(|| anyhow!("model {:?} not registered on {}", cfg.model, cfg.addr))?
+    };
+    let name = entry.get("name")?.str()?.to_string();
+    let shape = entry.get("input_shape")?.usize_vec()?;
+    Ok((name, shape))
+}
+
+pub fn run(cfg: &LoadgenConfig) -> Result<LoadgenReport> {
+    let (model, shape) = discover(cfg).context("discovering target model")?;
+    let (content_type, body) = build_body(&shape, cfg.json);
+    let path = format!("/v1/models/{model}/infer");
+    let total = cfg.requests;
+    let senders = cfg.concurrency.max(1);
+    let interval = if cfg.rate > 0.0 {
+        Some(Duration::from_secs_f64(1.0 / cfg.rate))
+    } else {
+        None
+    };
+
+    let next = AtomicUsize::new(0);
+    // (status or 0 for transport error, latency ms)
+    let results: Mutex<Vec<(u16, f64)>> = Mutex::new(Vec::with_capacity(total));
+    let t_start = Instant::now();
+
+    std::thread::scope(|scope| {
+        for _ in 0..senders {
+            scope.spawn(|| {
+                let mut client = HttpClient::new(&cfg.addr, cfg.timeout);
+                let mut local: Vec<(u16, f64)> = Vec::new();
+                loop {
+                    let i = next.fetch_add(1, Ordering::Relaxed);
+                    if i >= total {
+                        break;
+                    }
+                    let t0 = match interval {
+                        Some(dt) => {
+                            // open loop: fire at the scheduled instant and
+                            // measure from it
+                            let due = t_start + dt.mul_f64(i as f64);
+                            let now = Instant::now();
+                            if due > now {
+                                std::thread::sleep(due - now);
+                            }
+                            due
+                        }
+                        None => Instant::now(),
+                    };
+                    let req = Request::with_body("POST", &path, &content_type, body.clone());
+                    let status = match client.send(&req) {
+                        Ok(resp) => resp.status,
+                        Err(_) => 0,
+                    };
+                    local.push((status, t0.elapsed().as_secs_f64() * 1e3));
+                }
+                results.lock().unwrap().extend(local);
+            });
+        }
+    });
+
+    let wall_s = t_start.elapsed().as_secs_f64();
+    let results = results.into_inner().unwrap();
+    let ok_lat: Vec<f64> =
+        results.iter().filter(|(st, _)| (200..300).contains(st)).map(|&(_, l)| l).collect();
+    let mut status_counts: BTreeMap<u16, usize> = BTreeMap::new();
+    let mut transport_errors = 0usize;
+    for &(st, _) in &results {
+        if st == 0 {
+            transport_errors += 1;
+        } else if !(200..300).contains(&st) {
+            *status_counts.entry(st).or_insert(0) += 1;
+        }
+    }
+    Ok(LoadgenReport {
+        model,
+        sent: results.len(),
+        ok: ok_lat.len(),
+        status_counts,
+        transport_errors,
+        p50_ms: percentile(&ok_lat, 0.50),
+        p95_ms: percentile(&ok_lat, 0.95),
+        p99_ms: percentile(&ok_lat, 0.99),
+        mean_ms: if ok_lat.is_empty() {
+            0.0
+        } else {
+            ok_lat.iter().sum::<f64>() / ok_lat.len() as f64
+        },
+        wall_s,
+        achieved_rps: if wall_s > 0.0 { ok_lat.len() as f64 / wall_s } else { 0.0 },
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn body_matches_shape_and_is_deterministic() {
+        let (ct, raw) = build_body(&[1, 4, 4, 3], false);
+        assert_eq!(ct, "application/octet-stream");
+        assert_eq!(raw.len(), 4 * 4 * 4 * 3);
+        let (_, raw2) = build_body(&[1, 4, 4, 3], false);
+        assert_eq!(raw, raw2);
+
+        let (ct, js) = build_body(&[1, 2, 2, 1], true);
+        assert_eq!(ct, "application/json");
+        let v = Json::parse(std::str::from_utf8(&js).unwrap()).unwrap();
+        assert_eq!(v.get("data").unwrap().arr().unwrap().len(), 4);
+    }
+}

@@ -1,0 +1,312 @@
+//! Gateway counters and the Prometheus text exposition (`GET /metrics`).
+//!
+//! Rendering follows the Prometheus text format 0.0.4: `# HELP` / `# TYPE`
+//! comment pairs, then `name{label="value"} number` samples. Per-model
+//! series come from each model's [`MetricsSnapshot`] (monotonic counters +
+//! windowed latency quantiles); gateway-level series are plain atomics
+//! bumped on the request path.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use crate::coordinator::MetricsSnapshot;
+
+/// HTTP-level counters, one instance per gateway.
+#[derive(Default)]
+pub struct GatewayStats {
+    /// 2xx responses
+    pub ok: AtomicU64,
+    /// 4xx responses other than 429
+    pub bad_request: AtomicU64,
+    /// 429 admission rejections
+    pub rejected: AtomicU64,
+    /// 503 shed/draining responses
+    pub unavailable: AtomicU64,
+    /// other 5xx responses
+    pub internal: AtomicU64,
+    /// connections accepted over the gateway's lifetime
+    pub connections: AtomicU64,
+    /// inference requests currently blocked on a model worker
+    pub in_flight: AtomicU64,
+}
+
+impl GatewayStats {
+    /// Classify one response status into its counter.
+    pub fn record(&self, status: u16) {
+        let c = match status {
+            200..=299 => &self.ok,
+            429 => &self.rejected,
+            503 => &self.unavailable,
+            500..=599 => &self.internal,
+            _ => &self.bad_request,
+        };
+        c.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn responses_total(&self) -> u64 {
+        self.ok.load(Ordering::Relaxed)
+            + self.bad_request.load(Ordering::Relaxed)
+            + self.rejected.load(Ordering::Relaxed)
+            + self.unavailable.load(Ordering::Relaxed)
+            + self.internal.load(Ordering::Relaxed)
+    }
+}
+
+/// Everything `/metrics` needs to know about one registered model.
+pub struct ModelStats {
+    pub name: String,
+    pub queue_depth: usize,
+    pub queue_cap: usize,
+    pub max_batch: usize,
+    pub workers: usize,
+    pub arena_bytes_per_item: usize,
+    pub snap: MetricsSnapshot,
+}
+
+/// Escape a label value per the exposition format.
+fn escape_label(v: &str) -> String {
+    let mut out = String::with_capacity(v.len());
+    for c in v.chars() {
+        match c {
+            '\\' => out.push_str("\\\\"),
+            '"' => out.push_str("\\\""),
+            '\n' => out.push_str("\\n"),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+fn sample(out: &mut String, name: &str, labels: &[(&str, &str)], value: f64) {
+    out.push_str(name);
+    if !labels.is_empty() {
+        out.push('{');
+        for (i, (k, v)) in labels.iter().enumerate() {
+            if i > 0 {
+                out.push(',');
+            }
+            out.push_str(k);
+            out.push_str("=\"");
+            out.push_str(&escape_label(v));
+            out.push('"');
+        }
+        out.push('}');
+    }
+    out.push(' ');
+    if value.fract() == 0.0 && value.abs() < 1e15 {
+        out.push_str(&format!("{}", value as i64));
+    } else {
+        out.push_str(&format!("{value}"));
+    }
+    out.push('\n');
+}
+
+fn header(out: &mut String, name: &str, help: &str, kind: &str) {
+    out.push_str(&format!("# HELP {name} {help}\n# TYPE {name} {kind}\n"));
+}
+
+/// Render the full exposition for the gateway + all registered models.
+pub fn render_prometheus(stats: &GatewayStats, models: &[ModelStats]) -> String {
+    let mut out = String::new();
+
+    header(&mut out, "dlrt_http_responses_total", "HTTP responses by class", "counter");
+    for (class, v) in [
+        ("2xx", &stats.ok),
+        ("4xx", &stats.bad_request),
+        ("429", &stats.rejected),
+        ("503", &stats.unavailable),
+        ("5xx", &stats.internal),
+    ] {
+        sample(
+            &mut out,
+            "dlrt_http_responses_total",
+            &[("class", class)],
+            v.load(Ordering::Relaxed) as f64,
+        );
+    }
+    header(&mut out, "dlrt_http_connections_total", "TCP connections accepted", "counter");
+    sample(
+        &mut out,
+        "dlrt_http_connections_total",
+        &[],
+        stats.connections.load(Ordering::Relaxed) as f64,
+    );
+    header(&mut out, "dlrt_http_in_flight", "inference requests awaiting a worker", "gauge");
+    sample(&mut out, "dlrt_http_in_flight", &[], stats.in_flight.load(Ordering::Relaxed) as f64);
+
+    header(&mut out, "dlrt_model_completed_total", "requests answered per model", "counter");
+    for m in models {
+        sample(
+            &mut out,
+            "dlrt_model_completed_total",
+            &[("model", &m.name)],
+            m.snap.completed as f64,
+        );
+    }
+    header(&mut out, "dlrt_model_errors_total", "execution errors per model", "counter");
+    for m in models {
+        sample(&mut out, "dlrt_model_errors_total", &[("model", &m.name)], m.snap.errors as f64);
+    }
+    header(&mut out, "dlrt_model_queue_depth", "requests waiting to batch", "gauge");
+    for m in models {
+        sample(&mut out, "dlrt_model_queue_depth", &[("model", &m.name)], m.queue_depth as f64);
+    }
+    header(&mut out, "dlrt_model_queue_cap", "admission queue bound (0 = unbounded)", "gauge");
+    for m in models {
+        sample(&mut out, "dlrt_model_queue_cap", &[("model", &m.name)], m.queue_cap as f64);
+    }
+    header(&mut out, "dlrt_model_max_batch", "effective (plan-clamped) batch limit", "gauge");
+    for m in models {
+        sample(&mut out, "dlrt_model_max_batch", &[("model", &m.name)], m.max_batch as f64);
+    }
+    header(&mut out, "dlrt_model_workers", "coordinator workers per model", "gauge");
+    for m in models {
+        sample(&mut out, "dlrt_model_workers", &[("model", &m.name)], m.workers as f64);
+    }
+    header(
+        &mut out,
+        "dlrt_model_arena_bytes_per_item",
+        "execution-plan arena bytes per batch item",
+        "gauge",
+    );
+    for m in models {
+        sample(
+            &mut out,
+            "dlrt_model_arena_bytes_per_item",
+            &[("model", &m.name)],
+            m.arena_bytes_per_item as f64,
+        );
+    }
+    header(&mut out, "dlrt_model_mean_batch", "mean executed batch size", "gauge");
+    for m in models {
+        sample(&mut out, "dlrt_model_mean_batch", &[("model", &m.name)], m.snap.mean_batch);
+    }
+    header(&mut out, "dlrt_model_throughput_rps", "completed requests per second", "gauge");
+    for m in models {
+        sample(
+            &mut out,
+            "dlrt_model_throughput_rps",
+            &[("model", &m.name)],
+            m.snap.throughput_rps,
+        );
+    }
+    header(
+        &mut out,
+        "dlrt_model_exec_latency_ms",
+        "execution latency quantiles (windowed)",
+        "gauge",
+    );
+    for m in models {
+        for (q, v) in [
+            ("0.5", m.snap.p50_exec_ms),
+            ("0.95", m.snap.p95_exec_ms),
+            ("0.99", m.snap.p99_exec_ms),
+        ] {
+            sample(
+                &mut out,
+                "dlrt_model_exec_latency_ms",
+                &[("model", &m.name), ("quantile", q)],
+                v,
+            );
+        }
+    }
+    header(
+        &mut out,
+        "dlrt_model_queue_latency_ms",
+        "queueing latency quantiles (windowed)",
+        "gauge",
+    );
+    for m in models {
+        for (q, v) in [
+            ("0.5", m.snap.p50_queue_ms),
+            ("0.95", m.snap.p95_queue_ms),
+            ("0.99", m.snap.p99_queue_ms),
+        ] {
+            sample(
+                &mut out,
+                "dlrt_model_queue_latency_ms",
+                &[("model", &m.name), ("quantile", q)],
+                v,
+            );
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fake_models() -> Vec<ModelStats> {
+        vec![ModelStats {
+            name: "tiny".to_string(),
+            queue_depth: 1,
+            queue_cap: 8,
+            max_batch: 4,
+            workers: 2,
+            arena_bytes_per_item: 4096,
+            snap: MetricsSnapshot {
+                completed: 10,
+                errors: 1,
+                p50_exec_ms: 1.25,
+                p95_exec_ms: 2.0,
+                p99_exec_ms: 2.5,
+                p50_queue_ms: 0.1,
+                p95_queue_ms: 0.2,
+                p99_queue_ms: 0.3,
+                mean_batch: 2.0,
+                throughput_rps: 100.0,
+                window: 10,
+            },
+        }]
+    }
+
+    #[test]
+    fn exposition_is_parseable() {
+        let stats = GatewayStats::default();
+        stats.record(200);
+        stats.record(429);
+        let text = render_prometheus(&stats, &fake_models());
+        let mut samples = 0;
+        for line in text.lines() {
+            if line.starts_with('#') || line.is_empty() {
+                continue;
+            }
+            let (series, value) = line.rsplit_once(' ').expect("sample has a value");
+            assert!(value.parse::<f64>().is_ok(), "unparseable value in {line:?}");
+            let name = series.split('{').next().unwrap();
+            assert!(
+                name.chars().all(|c| c.is_ascii_alphanumeric() || c == '_'),
+                "bad metric name in {line:?}"
+            );
+            if let Some(rest) = series.strip_prefix(name) {
+                if !rest.is_empty() {
+                    assert!(rest.starts_with('{') && rest.ends_with('}'), "bad labels {line:?}");
+                }
+            }
+            samples += 1;
+        }
+        assert!(samples > 10);
+        assert!(text.contains("dlrt_model_completed_total{model=\"tiny\"} 10"));
+        assert!(text.contains("dlrt_http_responses_total{class=\"429\"} 1"));
+        assert!(text.contains("quantile=\"0.99\""));
+    }
+
+    #[test]
+    fn label_escaping() {
+        assert_eq!(escape_label("a\"b\\c\nd"), "a\\\"b\\\\c\\nd");
+    }
+
+    #[test]
+    fn status_classes() {
+        let s = GatewayStats::default();
+        for code in [200, 204, 400, 404, 429, 500, 503] {
+            s.record(code);
+        }
+        assert_eq!(s.ok.load(Ordering::Relaxed), 2);
+        assert_eq!(s.bad_request.load(Ordering::Relaxed), 2);
+        assert_eq!(s.rejected.load(Ordering::Relaxed), 1);
+        assert_eq!(s.internal.load(Ordering::Relaxed), 1);
+        assert_eq!(s.unavailable.load(Ordering::Relaxed), 1);
+        assert_eq!(s.responses_total(), 7);
+    }
+}

@@ -1,0 +1,457 @@
+//! Network inference gateway: the `dlrt serve` HTTP surface.
+//!
+//! A std-only threaded HTTP/1.1 server (accept loop + one thread per
+//! connection, keep-alive) in front of the [`registry::ModelRegistry`].
+//! The request path is socket → registry lookup → bounded coordinator
+//! queue → batcher → planned executor → response; admission refusals are
+//! shed at the edge as 429/503 instead of queueing unboundedly.
+//!
+//! Endpoints:
+//!
+//! ```text
+//!   GET  /healthz                     liveness
+//!   GET  /metrics                     Prometheus text format 0.0.4
+//!   GET  /v1/models                   registry listing + sizing + stats
+//!   POST /v1/models/{name}/infer      raw f32 LE bytes or JSON {"data":[..]}
+//!   POST /v1/models/{name}/load       {"path": ..} | {"builder": .., "res": ..}
+//!   POST /v1/models/{name}/unload     stop serving (drains in-flight work)
+//!   POST /v1/admin/shutdown           request graceful gateway drain
+//! ```
+//!
+//! Wire format for `/infer`: request body is one `[1, H, W, C]` NHWC input
+//! — either `Content-Type: application/octet-stream` with `H*W*C` f32
+//! little-endian values, or `application/json` with `{"data": [floats],
+//! "shape": [1,H,W,C]?}`. Raw responses concatenate every model output's
+//! f32 data and carry an `X-DLRT-Shapes` JSON header; JSON responses are
+//! `{"outputs": [{"shape": [...], "data": [...]}]}`. Both round-trip f32
+//! exactly, so gateway outputs are bit-identical to a direct
+//! `Executor::run` (the integration test asserts it).
+
+pub mod admission;
+pub mod http;
+pub mod loadgen;
+pub mod metrics;
+pub mod registry;
+
+use std::io::{BufReader, ErrorKind};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, Context, Result};
+
+use crate::dlrt::tensor::Tensor;
+use crate::exec::CompiledModel;
+use crate::util::json::{arr, num, obj, s, Json};
+
+use self::http::{ReadOutcome, Request, Response};
+use self::metrics::{GatewayStats, ModelStats};
+use self::registry::{ModelRegistry, ModelSpec};
+
+#[derive(Clone, Copy, Debug)]
+pub struct GatewayConfig {
+    /// request body limit (413 above this)
+    pub max_body_bytes: usize,
+    /// concurrent connections (503 above this)
+    pub max_connections: usize,
+    /// how long shutdown waits for in-flight connections to finish
+    pub drain_timeout: Duration,
+    /// per-read socket timeout; bounds shutdown latency of idle keep-alives
+    pub read_timeout: Duration,
+}
+
+impl Default for GatewayConfig {
+    fn default() -> Self {
+        GatewayConfig {
+            max_body_bytes: 64 << 20,
+            max_connections: 256,
+            drain_timeout: Duration::from_secs(10),
+            read_timeout: Duration::from_millis(500),
+        }
+    }
+}
+
+struct GwShared {
+    registry: Arc<ModelRegistry>,
+    stats: GatewayStats,
+    conns: admission::ConnLimiter,
+    /// stop accepting; close keep-alive connections after their response
+    stop: AtomicBool,
+    /// set by `POST /v1/admin/shutdown`; the CLI polls it and drains
+    shutdown_requested: AtomicBool,
+    cfg: GatewayConfig,
+}
+
+/// A bound, serving gateway. Dropping it (or calling
+/// [`Gateway::shutdown`]) stops the accept loop, waits for in-flight
+/// connections, then drains every registered model server.
+pub struct Gateway {
+    addr: SocketAddr,
+    shared: Arc<GwShared>,
+    accept: Option<JoinHandle<()>>,
+}
+
+impl Gateway {
+    /// Bind `listen` (e.g. `127.0.0.1:8080`, port 0 for ephemeral) and
+    /// start serving `registry`.
+    pub fn bind(
+        listen: &str,
+        registry: Arc<ModelRegistry>,
+        cfg: GatewayConfig,
+    ) -> Result<Gateway> {
+        let listener =
+            TcpListener::bind(listen).with_context(|| format!("binding {listen}"))?;
+        // non-blocking accept so the loop can observe the stop flag
+        listener.set_nonblocking(true).context("set_nonblocking")?;
+        let addr = listener.local_addr()?;
+        let shared = Arc::new(GwShared {
+            registry,
+            stats: GatewayStats::default(),
+            conns: admission::ConnLimiter::new(cfg.max_connections),
+            stop: AtomicBool::new(false),
+            shutdown_requested: AtomicBool::new(false),
+            cfg,
+        });
+        let accept = {
+            let shared = shared.clone();
+            std::thread::spawn(move || accept_loop(&listener, &shared))
+        };
+        Ok(Gateway { addr, shared, accept: Some(accept) })
+    }
+
+    pub fn local_addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// True once a client POSTed `/v1/admin/shutdown`.
+    pub fn shutdown_requested(&self) -> bool {
+        self.shared.shutdown_requested.load(Ordering::SeqCst)
+    }
+
+    /// Graceful drain: stop accepting, let in-flight connections finish
+    /// (bounded by `drain_timeout`), then drain every model server so
+    /// queued inference completes before the process exits.
+    pub fn shutdown(mut self) {
+        self.stop_internal();
+    }
+
+    fn stop_internal(&mut self) {
+        self.shared.stop.store(true, Ordering::SeqCst);
+        if let Some(h) = self.accept.take() {
+            let _ = h.join();
+        }
+        // Drain the model servers first: queued requests execute
+        // immediately (the batcher skips its window while draining), which
+        // unblocks the connection threads waiting on them; requests that
+        // arrive on live keep-alive connections after this point are shed
+        // with 503.
+        self.shared.registry.drain_all();
+        let deadline = Instant::now() + self.shared.cfg.drain_timeout;
+        while self.shared.conns.active() > 0 && Instant::now() < deadline {
+            std::thread::sleep(Duration::from_millis(10));
+        }
+    }
+}
+
+impl Drop for Gateway {
+    fn drop(&mut self) {
+        if self.accept.is_some() {
+            self.stop_internal();
+        }
+    }
+}
+
+fn accept_loop(listener: &TcpListener, shared: &Arc<GwShared>) {
+    loop {
+        if shared.stop.load(Ordering::SeqCst) {
+            return; // listener drops here: port closes, backlog is reset
+        }
+        match listener.accept() {
+            Ok((stream, _peer)) => {
+                shared.stats.connections.fetch_add(1, Ordering::Relaxed);
+                if !shared.conns.try_acquire() {
+                    // over the connection cap: shed before spawning
+                    let mut stream = stream;
+                    let _ = stream.set_nonblocking(false);
+                    let _ = Response::text(503, "too many connections\n")
+                        .write_to(&mut stream, true);
+                    shared.stats.record(503);
+                    continue;
+                }
+                let shared = shared.clone();
+                std::thread::spawn(move || {
+                    handle_connection(stream, &shared);
+                    shared.conns.release();
+                });
+            }
+            Err(e) if e.kind() == ErrorKind::WouldBlock => {
+                std::thread::sleep(Duration::from_millis(5));
+            }
+            Err(_) => std::thread::sleep(Duration::from_millis(5)),
+        }
+    }
+}
+
+fn handle_connection(stream: TcpStream, shared: &GwShared) {
+    // accepted sockets may inherit the listener's non-blocking mode on
+    // some platforms — force blocking + a finite read timeout
+    if stream.set_nonblocking(false).is_err() {
+        return;
+    }
+    let _ = stream.set_nodelay(true);
+    let _ = stream.set_read_timeout(Some(shared.cfg.read_timeout));
+    // a peer that stops reading its response must not block this thread
+    // (and its ConnLimiter slot) forever once the TCP send buffer fills
+    let _ = stream.set_write_timeout(Some(Duration::from_secs(10)));
+    let mut writer = match stream.try_clone() {
+        Ok(w) => w,
+        Err(_) => return,
+    };
+    let mut reader = BufReader::new(stream);
+    let mut line = String::new();
+    // an idle keep-alive may wait this many read timeouts for its next
+    // request before we close it — without a cap, silent peers would hold
+    // their ConnLimiter slots forever and lock out new connections
+    let max_idle = 60u32;
+    let mut idle = 0u32;
+    loop {
+        match http::read_request(&mut reader, &mut line, shared.cfg.max_body_bytes) {
+            Ok(ReadOutcome::Eof) => return,
+            Ok(ReadOutcome::IdleTimeout) => {
+                idle += 1;
+                if shared.stop.load(Ordering::SeqCst) || idle >= max_idle {
+                    return; // draining, or idle too long: close the slot
+                }
+            }
+            Ok(ReadOutcome::TooLarge(n)) => {
+                let resp = Response::text(413, &format!("body of {n} bytes over limit\n"));
+                shared.stats.record(resp.status);
+                let _ = resp.write_to(&mut writer, true);
+                return;
+            }
+            Ok(ReadOutcome::Unsupported(what)) => {
+                let resp = Response::text(501, &format!("{what}\n"));
+                shared.stats.record(resp.status);
+                let _ = resp.write_to(&mut writer, true);
+                return;
+            }
+            Ok(ReadOutcome::Request(req)) => {
+                idle = 0;
+                let close = req.close || shared.stop.load(Ordering::SeqCst);
+                let resp = route(shared, &req);
+                shared.stats.record(resp.status);
+                if resp.write_to(&mut writer, close).is_err() || close {
+                    return;
+                }
+            }
+            Err(_) => {
+                let resp = Response::text(400, "malformed request\n");
+                shared.stats.record(resp.status);
+                let _ = resp.write_to(&mut writer, true);
+                return;
+            }
+        }
+    }
+}
+
+fn route(shared: &GwShared, req: &Request) -> Response {
+    let path = req.path.split('?').next().unwrap_or("");
+    let parts: Vec<&str> = path.split('/').filter(|p| !p.is_empty()).collect();
+    match (req.method.as_str(), parts.as_slice()) {
+        ("GET", ["healthz"]) => Response::text(200, "ok\n"),
+        ("GET", ["metrics"]) => {
+            Response::new(200, "text/plain; version=0.0.4", render_metrics(shared).into_bytes())
+        }
+        ("GET", ["v1", "models"]) => models_json(shared),
+        // slice-pattern bindings on `&[&str]` are `&&str`: deref at use
+        ("POST", ["v1", "models", name, "infer"]) => infer(shared, *name, req),
+        ("POST", ["v1", "models", name, "load"]) => load_model(shared, *name, req),
+        ("POST", ["v1", "models", name, "unload"]) => unload_model(shared, *name),
+        ("POST", ["v1", "admin", "shutdown"]) => {
+            shared.shutdown_requested.store(true, Ordering::SeqCst);
+            Response::text(200, "draining\n")
+        }
+        // 405 only for known paths hit with the wrong method; unknown
+        // paths (typos included) fall through to 404
+        (_, ["healthz" | "metrics"])
+        | (_, ["v1", "models"])
+        | (_, ["v1", "models", _, "infer" | "load" | "unload"])
+        | (_, ["v1", "admin", "shutdown"]) => Response::text(405, "method not allowed\n"),
+        _ => Response::text(404, "not found\n"),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// handlers
+// ---------------------------------------------------------------------------
+
+fn infer(shared: &GwShared, name: &str, req: &Request) -> Response {
+    let Some(entry) = shared.registry.get(name) else {
+        return Response::text(404, &format!("no such model {name:?}\n"));
+    };
+    let json_io = req
+        .header("content-type")
+        .map(|c| c.starts_with("application/json"))
+        .unwrap_or(false);
+    let input = match parse_input(req, json_io, &entry.model) {
+        Ok(t) => t,
+        Err(e) => return Response::text(400, &format!("bad input: {e:#}\n")),
+    };
+    match entry.server.try_submit(input) {
+        Err(e) => admission::reject_response(&e, &entry.server.metrics()),
+        Ok(rx) => {
+            shared.stats.in_flight.fetch_add(1, Ordering::Relaxed);
+            let got = rx.recv();
+            shared.stats.in_flight.fetch_sub(1, Ordering::Relaxed);
+            match got {
+                Ok(Ok(outs)) => render_outputs(&outs, json_io),
+                Ok(Err(e)) => {
+                    if e.is::<crate::coordinator::ServerStopping>() {
+                        Response::text(503, "server stopping\n")
+                    } else {
+                        Response::text(500, &format!("inference failed: {e:#}\n"))
+                    }
+                }
+                Err(_) => Response::text(503, "model worker gone\n"),
+            }
+        }
+    }
+}
+
+/// Decode one `[1, H, W, C]` request input in either wire format.
+fn parse_input(req: &Request, json_io: bool, model: &CompiledModel) -> Result<Tensor> {
+    let mut shape = vec![1usize];
+    shape.extend_from_slice(&model.plan.input_tail);
+    let elems: usize = shape.iter().product();
+    if json_io {
+        let text = std::str::from_utf8(&req.body).context("body is not UTF-8")?;
+        let v = Json::parse(text)?;
+        if let Some(sh) = v.opt("shape") {
+            let sh = sh.usize_vec()?;
+            if sh != shape {
+                bail!("shape {sh:?} does not match model input {shape:?}");
+            }
+        }
+        let data = v.get("data")?.f32_vec()?;
+        if data.len() != elems {
+            bail!("data has {} values, model input {shape:?} wants {elems}", data.len());
+        }
+        Tensor::new(shape, data)
+    } else {
+        if req.body.len() != 4 * elems {
+            bail!(
+                "raw body is {} bytes, model input {shape:?} wants {} ({} f32 LE values)",
+                req.body.len(),
+                4 * elems,
+                elems
+            );
+        }
+        Tensor::new(shape, http::le_bytes_to_f32s(&req.body))
+    }
+}
+
+fn shape_json(shape: &[usize]) -> Json {
+    arr(shape.iter().map(|&d| num(d as f64)).collect())
+}
+
+fn render_outputs(outs: &[Tensor], json_io: bool) -> Response {
+    if json_io {
+        let outputs = arr(outs
+            .iter()
+            .map(|o| {
+                obj(vec![
+                    ("shape", shape_json(&o.shape)),
+                    ("data", arr(o.data.iter().map(|&v| num(v as f64)).collect())),
+                ])
+            })
+            .collect());
+        Response::json(200, &obj(vec![("outputs", outputs)]))
+    } else {
+        let total: usize = outs.iter().map(|o| 4 * o.numel()).sum();
+        let mut body = Vec::with_capacity(total);
+        for o in outs {
+            body.extend_from_slice(&http::f32s_to_le_bytes(&o.data));
+        }
+        let shapes = arr(outs.iter().map(|o| shape_json(&o.shape)).collect());
+        Response::bytes(200, body).header("X-DLRT-Shapes", &shapes.to_string())
+    }
+}
+
+fn models_json(shared: &GwShared) -> Response {
+    let models = arr(shared
+        .registry
+        .list()
+        .iter()
+        .map(|e| {
+            let cfg = e.server.config();
+            let snap = e.server.metrics();
+            let mut ishape = vec![1usize];
+            ishape.extend_from_slice(&e.model.plan.input_tail);
+            let engines = obj(e
+                .model
+                .engine_summary()
+                .into_iter()
+                .map(|(k, v)| (k, num(v as f64)))
+                .collect());
+            obj(vec![
+                ("name", s(&e.name)),
+                ("source", s(&e.source)),
+                ("input_shape", shape_json(&ishape)),
+                ("engines", engines),
+                ("workers", num(cfg.workers as f64)),
+                ("max_batch", num(cfg.max_batch as f64)),
+                ("queue_cap", num(cfg.queue_cap as f64)),
+                ("queue_depth", num(e.server.queue_depth() as f64)),
+                ("arena_bytes_per_item", num(e.model.plan.arena_bytes(1) as f64)),
+                ("completed", num(snap.completed as f64)),
+                ("errors", num(snap.errors as f64)),
+            ])
+        })
+        .collect());
+    Response::json(200, &obj(vec![("models", models)]))
+}
+
+fn load_model(shared: &GwShared, name: &str, req: &Request) -> Response {
+    let spec = match std::str::from_utf8(&req.body)
+        .map_err(anyhow::Error::from)
+        .and_then(Json::parse)
+        .and_then(|v| ModelSpec::from_json(name, &v))
+    {
+        Ok(spec) => spec,
+        Err(e) => return Response::text(400, &format!("bad load request: {e:#}\n")),
+    };
+    match shared.registry.load_spec(&spec) {
+        Ok(()) => Response::json(200, &obj(vec![("loaded", s(name))])),
+        Err(e) => Response::text(400, &format!("load failed: {e:#}\n")),
+    }
+}
+
+fn unload_model(shared: &GwShared, name: &str) -> Response {
+    match shared.registry.unload(name) {
+        Ok(()) => Response::json(200, &obj(vec![("unloaded", s(name))])),
+        Err(e) => Response::text(404, &format!("{e:#}\n")),
+    }
+}
+
+fn render_metrics(shared: &GwShared) -> String {
+    let models: Vec<ModelStats> = shared
+        .registry
+        .list()
+        .iter()
+        .map(|e| {
+            let cfg = e.server.config();
+            ModelStats {
+                name: e.name.clone(),
+                queue_depth: e.server.queue_depth(),
+                queue_cap: cfg.queue_cap,
+                max_batch: cfg.max_batch,
+                workers: cfg.workers,
+                arena_bytes_per_item: e.model.plan.arena_bytes(1),
+                snap: e.server.metrics(),
+            }
+        })
+        .collect();
+    metrics::render_prometheus(&shared.stats, &models)
+}

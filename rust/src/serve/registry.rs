@@ -1,0 +1,314 @@
+//! Multi-model registry: name → compiled model + its serving coordinator.
+//!
+//! Each registered model owns a full [`InferenceServer`] (bounded queue,
+//! batcher, workers), so models are isolated: one model's overload sheds
+//! its own traffic without stalling the others. The registry map is
+//! `RwLock`'d — the request path takes a read lock for a single `Arc`
+//! clone; loads/unloads take the write lock only to swap map entries, and
+//! drain replaced servers *outside* the lock.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+use std::sync::{Arc, RwLock};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::compiler::{compile_graph, EngineChoice};
+use crate::coordinator::{InferenceServer, ServerConfig};
+use crate::dlrt::format;
+use crate::exec::CompiledModel;
+use crate::models;
+use crate::util::json::Json;
+
+/// Where a model comes from.
+#[derive(Clone, Debug)]
+pub enum ModelSource {
+    /// `.dlrt` file or exported `arch.json` + `weights.bin` directory.
+    Path(String),
+    /// Native builder (`resnet18`, `yolov5n`, ...) at a resolution.
+    Builder { model: String, res: usize, w_bits: u8, a_bits: u8 },
+}
+
+impl ModelSource {
+    pub fn describe(&self) -> String {
+        match self {
+            ModelSource::Path(p) => p.clone(),
+            ModelSource::Builder { model, res, w_bits, a_bits } => {
+                format!("{model}@{res} ({a_bits}A{w_bits}W)")
+            }
+        }
+    }
+}
+
+/// One `--models` item / admin-load request, resolved to a name + source.
+#[derive(Clone, Debug)]
+pub struct ModelSpec {
+    pub name: String,
+    pub source: ModelSource,
+}
+
+impl ModelSpec {
+    /// Parse one `--models` item: `[name=]source` where `source` is a path
+    /// (contains a separator, ends in `.dlrt`, or exists on disk) or a
+    /// builder spec `model[@res]`. Without `name=`, paths are named by
+    /// file stem and builders by their spec string (`resnet18@64`).
+    pub fn parse(item: &str) -> Result<ModelSpec> {
+        let item = item.trim();
+        if item.is_empty() {
+            bail!("empty model spec");
+        }
+        let (name, src) = match item.split_once('=') {
+            Some((n, s)) => (Some(n.trim().to_string()), s.trim().to_string()),
+            None => (None, item.to_string()),
+        };
+        let looks_like_path =
+            src.contains('/') || src.ends_with(".dlrt") || Path::new(&src).exists();
+        let source = if looks_like_path {
+            ModelSource::Path(src.clone())
+        } else {
+            let (model, res) = match src.split_once('@') {
+                Some((m, r)) => {
+                    (m.to_string(), r.parse::<usize>().context("bad @res in model spec")?)
+                }
+                None => (src.clone(), models::default_res(&src)),
+            };
+            ModelSource::Builder { model, res, w_bits: 2, a_bits: 2 }
+        };
+        let name = name.unwrap_or_else(|| match &source {
+            ModelSource::Path(p) => Path::new(p)
+                .file_stem()
+                .map(|s| s.to_string_lossy().into_owned())
+                .unwrap_or_else(|| p.clone()),
+            ModelSource::Builder { .. } => src.clone(),
+        });
+        Ok(ModelSpec { name, source })
+    }
+
+    /// Admin-endpoint body → spec: `{"path": "m.dlrt"}` or
+    /// `{"builder": "resnet18", "res": 64, "w_bits": 2, "a_bits": 2}`.
+    pub fn from_json(name: &str, v: &Json) -> Result<ModelSpec> {
+        let source = if let Some(p) = v.opt("path") {
+            ModelSource::Path(p.str()?.to_string())
+        } else if let Some(b) = v.opt("builder") {
+            let model = b.str()?.to_string();
+            let res = match v.opt("res") {
+                Some(r) => r.usize()?,
+                None => models::default_res(&model),
+            };
+            let w_bits = match v.opt("w_bits") {
+                Some(x) => x.usize()? as u8,
+                None => 2,
+            };
+            let a_bits = match v.opt("a_bits") {
+                Some(x) => x.usize()? as u8,
+                None => 2,
+            };
+            ModelSource::Builder { model, res, w_bits, a_bits }
+        } else {
+            bail!("load body needs \"path\" or \"builder\"");
+        };
+        Ok(ModelSpec { name: name.to_string(), source })
+    }
+
+    /// Compile/load the model this spec names.
+    pub fn build(&self) -> Result<CompiledModel> {
+        match &self.source {
+            ModelSource::Path(p) => format::load_auto(Path::new(p))
+                .with_context(|| format!("loading model {:?} from {p}", self.name)),
+            ModelSource::Builder { model, res, w_bits, a_bits } => {
+                let g = models::build_named(model, *res, *w_bits, *a_bits, 1.0)
+                    .with_context(|| format!("building model {:?}", self.name))?;
+                compile_graph(&g, EngineChoice::Auto)
+            }
+        }
+    }
+}
+
+/// One registered, serving model.
+pub struct ModelEntry {
+    pub name: String,
+    /// human-readable provenance for `/v1/models`
+    pub source: String,
+    pub model: Arc<CompiledModel>,
+    pub server: InferenceServer,
+}
+
+/// Name → serving model map shared by the gateway's connection threads.
+pub struct ModelRegistry {
+    default_cfg: ServerConfig,
+    inner: RwLock<BTreeMap<String, Arc<ModelEntry>>>,
+}
+
+impl ModelRegistry {
+    pub fn new(default_cfg: ServerConfig) -> ModelRegistry {
+        ModelRegistry { default_cfg, inner: RwLock::new(BTreeMap::new()) }
+    }
+
+    /// The base per-model coordinator config (before plan-aware clamping).
+    pub fn default_config(&self) -> ServerConfig {
+        self.default_cfg
+    }
+
+    /// Compile/load `spec` and start serving it. Replacing an existing
+    /// name is a hot swap: the new server takes traffic as soon as the map
+    /// entry flips; the old one drains outside the lock (in-flight
+    /// requests finish, late holders of the old entry get 503s).
+    pub fn load_spec(&self, spec: &ModelSpec) -> Result<()> {
+        let compiled = spec.build()?;
+        self.install(&spec.name, &spec.source.describe(), compiled)
+    }
+
+    /// Register an already-compiled model under `name` (also the test
+    /// seam — no filesystem needed).
+    pub fn install(&self, name: &str, source: &str, compiled: CompiledModel) -> Result<()> {
+        if name.is_empty() || name.contains('/') {
+            bail!("model name {name:?} must be non-empty and slash-free");
+        }
+        let model = Arc::new(compiled);
+        let server = InferenceServer::start(model.clone(), self.default_cfg);
+        let entry = Arc::new(ModelEntry {
+            name: name.to_string(),
+            source: source.to_string(),
+            model,
+            server,
+        });
+        let old = self.inner.write().unwrap().insert(name.to_string(), entry);
+        if let Some(old) = old {
+            old.server.drain();
+        }
+        Ok(())
+    }
+
+    /// Stop serving `name`: removed from the map immediately, then drained
+    /// (queued requests finish; new submissions are refused with 503).
+    pub fn unload(&self, name: &str) -> Result<()> {
+        let old = self
+            .inner
+            .write()
+            .unwrap()
+            .remove(name)
+            .ok_or_else(|| anyhow!("no such model {name:?}"))?;
+        old.server.drain();
+        Ok(())
+    }
+
+    pub fn get(&self, name: &str) -> Option<Arc<ModelEntry>> {
+        self.inner.read().unwrap().get(name).cloned()
+    }
+
+    /// All entries, name-ordered.
+    pub fn list(&self) -> Vec<Arc<ModelEntry>> {
+        self.inner.read().unwrap().values().cloned().collect()
+    }
+
+    /// Graceful shutdown of every registered server (gateway drain).
+    pub fn drain_all(&self) {
+        for e in self.list() {
+            e.server.drain();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dlrt::tensor::Tensor;
+    use crate::models::tiny_test_graph;
+
+    fn tiny() -> CompiledModel {
+        compile_graph(&tiny_test_graph(false), EngineChoice::Auto).unwrap()
+    }
+
+    #[test]
+    fn spec_parsing() {
+        let s = ModelSpec::parse("resnet18@64").unwrap();
+        assert_eq!(s.name, "resnet18@64");
+        match s.source {
+            ModelSource::Builder { ref model, res, .. } => {
+                assert_eq!(model, "resnet18");
+                assert_eq!(res, 64);
+            }
+            ref other => panic!("{other:?}"),
+        }
+
+        let s = ModelSpec::parse("det=yolov5n").unwrap();
+        assert_eq!(s.name, "det");
+        match s.source {
+            ModelSource::Builder { ref model, res, .. } => {
+                assert_eq!(model, "yolov5n");
+                assert_eq!(res, 320); // builder default
+            }
+            ref other => panic!("{other:?}"),
+        }
+
+        let s = ModelSpec::parse("/tmp/exported/model.dlrt").unwrap();
+        assert_eq!(s.name, "model");
+        assert!(matches!(s.source, ModelSource::Path(_)));
+
+        let s = ModelSpec::parse("prod=checkpoints/best.dlrt").unwrap();
+        assert_eq!(s.name, "prod");
+
+        assert!(ModelSpec::parse("").is_err());
+        assert!(ModelSpec::parse("resnet18@notanumber").is_err());
+    }
+
+    #[test]
+    fn spec_from_json() {
+        let v = Json::parse(r#"{"path": "/tmp/m.dlrt"}"#).unwrap();
+        let s = ModelSpec::from_json("m", &v).unwrap();
+        assert_eq!(s.name, "m");
+        assert!(matches!(s.source, ModelSource::Path(_)));
+
+        let v = Json::parse(r#"{"builder": "resnet18", "res": 64, "w_bits": 3}"#).unwrap();
+        let s = ModelSpec::from_json("r", &v).unwrap();
+        match s.source {
+            ModelSource::Builder { res, w_bits, a_bits, .. } => {
+                assert_eq!((res, w_bits, a_bits), (64, 3, 2));
+            }
+            ref other => panic!("{other:?}"),
+        }
+
+        let v = Json::parse(r#"{"nope": 1}"#).unwrap();
+        assert!(ModelSpec::from_json("x", &v).is_err());
+    }
+
+    #[test]
+    fn install_get_unload_roundtrip() {
+        let reg = ModelRegistry::new(ServerConfig::default());
+        reg.install("tiny", "builder:tiny", tiny()).unwrap();
+        assert!(reg.get("tiny").is_some());
+        assert_eq!(reg.list().len(), 1);
+
+        let entry = reg.get("tiny").unwrap();
+        let outs = entry.server.infer(Tensor::zeros(vec![1, 8, 8, 3])).unwrap();
+        assert_eq!(outs[0].shape, vec![1, 4]);
+
+        reg.unload("tiny").unwrap();
+        assert!(reg.get("tiny").is_none());
+        assert!(reg.unload("tiny").is_err());
+        // a stale handle refuses new work after unload
+        assert!(entry.server.try_submit(Tensor::zeros(vec![1, 8, 8, 3])).is_err());
+    }
+
+    #[test]
+    fn hot_swap_drains_old_server() {
+        let reg = ModelRegistry::new(ServerConfig::default());
+        reg.install("m", "v1", tiny()).unwrap();
+        let old = reg.get("m").unwrap();
+        reg.install("m", "v2", tiny()).unwrap();
+        let new = reg.get("m").unwrap();
+        assert_eq!(new.source, "v2");
+        // the replaced server was drained: refuses new work
+        assert!(old.server.try_submit(Tensor::zeros(vec![1, 8, 8, 3])).is_err());
+        // the new one serves
+        assert!(new.server.infer(Tensor::zeros(vec![1, 8, 8, 3])).is_ok());
+        reg.drain_all();
+    }
+
+    #[test]
+    fn rejects_bad_names() {
+        let reg = ModelRegistry::new(ServerConfig::default());
+        assert!(reg.install("", "x", tiny()).is_err());
+        assert!(reg.install("a/b", "x", tiny()).is_err());
+    }
+}

@@ -1,0 +1,415 @@
+//! End-to-end tests for the HTTP inference gateway: boot on an ephemeral
+//! port, drive it over real sockets, and assert the full request path
+//! (socket → registry → bounded queue → batcher → planned executor →
+//! response) returns bit-identical outputs to a direct `Executor::run`,
+//! sheds load with 429s under a tiny queue bound, exposes consistent
+//! Prometheus metrics, and drains queued work on graceful shutdown.
+
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use dlrt::compiler::{compile_graph, EngineChoice};
+use dlrt::coordinator::ServerConfig;
+use dlrt::dlrt::format;
+use dlrt::exec::Executor;
+use dlrt::models::{single_conv_graph, tiny_test_graph};
+use dlrt::serve::http::{http_once, HttpClient, Request};
+use dlrt::serve::registry::ModelRegistry;
+use dlrt::serve::{Gateway, GatewayConfig};
+use dlrt::util::json::Json;
+use dlrt::Tensor;
+
+fn test_input(seed: u64) -> Tensor {
+    let mut x = Tensor::zeros(vec![1, 8, 8, 3]);
+    for (i, v) in x.data.iter_mut().enumerate() {
+        *v = ((i as u64 * 31 + seed * 7) % 17) as f32 * 0.125;
+    }
+    x
+}
+
+fn raw_bytes(t: &Tensor) -> Vec<u8> {
+    dlrt::serve::http::f32s_to_le_bytes(&t.data)
+}
+
+fn f32s(bytes: &[u8]) -> Vec<f32> {
+    dlrt::serve::http::le_bytes_to_f32s(bytes)
+}
+
+/// Boot a gateway serving the tiny builder graph under "tiny".
+fn boot(cfg: ServerConfig) -> (Gateway, Arc<ModelRegistry>, String) {
+    let registry = Arc::new(ModelRegistry::new(cfg));
+    let tiny = compile_graph(&tiny_test_graph(false), EngineChoice::Auto).unwrap();
+    registry.install("tiny", "builder:tiny", tiny).unwrap();
+    let gw = Gateway::bind("127.0.0.1:0", registry.clone(), GatewayConfig::default()).unwrap();
+    let addr = gw.local_addr().to_string();
+    (gw, registry, addr)
+}
+
+fn default_cfg() -> ServerConfig {
+    ServerConfig { max_wait: Duration::from_millis(1), ..ServerConfig::default() }
+}
+
+#[test]
+fn healthz_and_model_listing() {
+    let (gw, _reg, addr) = boot(default_cfg());
+    let resp = http_once(&addr, "GET", "/healthz", "text/plain", Vec::new()).unwrap();
+    assert_eq!(resp.status, 200);
+    assert_eq!(resp.body, b"ok\n");
+
+    let resp = http_once(&addr, "GET", "/v1/models", "text/plain", Vec::new()).unwrap();
+    assert_eq!(resp.status, 200);
+    let v = Json::parse(resp.body_str().unwrap()).unwrap();
+    let models = v.get("models").unwrap().arr().unwrap();
+    assert_eq!(models.len(), 1);
+    assert_eq!(models[0].get("name").unwrap().str().unwrap(), "tiny");
+    assert_eq!(
+        models[0].get("input_shape").unwrap().usize_vec().unwrap(),
+        vec![1, 8, 8, 3]
+    );
+    assert!(models[0].get("arena_bytes_per_item").unwrap().usize().unwrap() > 0);
+
+    // unknown path and wrong method: 404 for typos (even under /v1/),
+    // 405 only for known paths with the wrong verb
+    assert_eq!(http_once(&addr, "GET", "/nope", "x", Vec::new()).unwrap().status, 404);
+    assert_eq!(http_once(&addr, "GET", "/v1/model", "x", Vec::new()).unwrap().status, 404);
+    assert_eq!(http_once(&addr, "POST", "/healthz", "x", Vec::new()).unwrap().status, 405);
+    assert_eq!(http_once(&addr, "DELETE", "/v1/models", "x", Vec::new()).unwrap().status, 405);
+    gw.shutdown();
+}
+
+#[test]
+fn raw_and_json_infer_are_bit_identical_to_direct_run() {
+    let (gw, reg, addr) = boot(default_cfg());
+    let x = test_input(1);
+    let direct = {
+        let entry = reg.get("tiny").unwrap();
+        let mut ex = Executor::new(1);
+        ex.run(&entry.model, &x).unwrap()
+    };
+
+    // raw f32 LE round trip
+    let resp = http_once(
+        &addr,
+        "POST",
+        "/v1/models/tiny/infer",
+        "application/octet-stream",
+        raw_bytes(&x),
+    )
+    .unwrap();
+    assert_eq!(resp.status, 200, "{}", String::from_utf8_lossy(&resp.body));
+    assert_eq!(f32s(&resp.body), direct[0].data, "raw output differs from direct run");
+    let shapes = resp.header("x-dlrt-shapes").expect("shapes header").to_string();
+    let shapes = Json::parse(&shapes).unwrap();
+    assert_eq!(shapes.arr().unwrap()[0].usize_vec().unwrap(), direct[0].shape);
+
+    // JSON round trip (f64 shortest-repr printing is exact for f32)
+    let body = {
+        let mut s = String::from("{\"shape\":[1,8,8,3],\"data\":[");
+        for (i, v) in x.data.iter().enumerate() {
+            if i > 0 {
+                s.push(',');
+            }
+            s.push_str(&format!("{}", *v as f64));
+        }
+        s.push_str("]}");
+        s.into_bytes()
+    };
+    let resp =
+        http_once(&addr, "POST", "/v1/models/tiny/infer", "application/json", body).unwrap();
+    assert_eq!(resp.status, 200, "{}", String::from_utf8_lossy(&resp.body));
+    let v = Json::parse(resp.body_str().unwrap()).unwrap();
+    let outs = v.get("outputs").unwrap().arr().unwrap();
+    assert_eq!(outs[0].get("shape").unwrap().usize_vec().unwrap(), direct[0].shape);
+    assert_eq!(outs[0].get("data").unwrap().f32_vec().unwrap(), direct[0].data);
+
+    // malformed inputs are 400s, unknown model 404
+    let resp = http_once(
+        &addr,
+        "POST",
+        "/v1/models/tiny/infer",
+        "application/octet-stream",
+        vec![0u8; 12],
+    )
+    .unwrap();
+    assert_eq!(resp.status, 400);
+    let resp = http_once(
+        &addr,
+        "POST",
+        "/v1/models/ghost/infer",
+        "application/octet-stream",
+        raw_bytes(&x),
+    )
+    .unwrap();
+    assert_eq!(resp.status, 404);
+    gw.shutdown();
+}
+
+#[test]
+fn second_model_hot_loaded_from_dlrt_file_and_unloaded() {
+    let (gw, _reg, addr) = boot(default_cfg());
+
+    // save a second model to disk and hot-load it through the admin API
+    let oneconv = compile_graph(&single_conv_graph(2, 2, 0.5, 0.25), EngineChoice::Auto).unwrap();
+    let path = std::env::temp_dir()
+        .join(format!("dlrt_gateway_test_{}.dlrt", std::process::id()));
+    format::save(&oneconv, &path).unwrap();
+
+    let body = format!("{{\"path\": {:?}}}", path.to_string_lossy());
+    let resp = http_once(
+        &addr,
+        "POST",
+        "/v1/models/oneconv/load",
+        "application/json",
+        body.into_bytes(),
+    )
+    .unwrap();
+    assert_eq!(resp.status, 200, "{}", String::from_utf8_lossy(&resp.body));
+
+    let resp = http_once(&addr, "GET", "/v1/models", "x", Vec::new()).unwrap();
+    let v = Json::parse(resp.body_str().unwrap()).unwrap();
+    assert_eq!(v.get("models").unwrap().arr().unwrap().len(), 2);
+
+    // outputs match a direct run of the reloaded artifact
+    let x = test_input(2);
+    let direct = {
+        let m = format::load(&path).unwrap();
+        let mut ex = Executor::new(1);
+        ex.run(&m, &x).unwrap()
+    };
+    let resp = http_once(
+        &addr,
+        "POST",
+        "/v1/models/oneconv/infer",
+        "application/octet-stream",
+        raw_bytes(&x),
+    )
+    .unwrap();
+    assert_eq!(resp.status, 200, "{}", String::from_utf8_lossy(&resp.body));
+    assert_eq!(f32s(&resp.body), direct[0].data);
+
+    // unload: model disappears, infer turns 404
+    let resp = http_once(&addr, "POST", "/v1/models/oneconv/unload", "x", Vec::new()).unwrap();
+    assert_eq!(resp.status, 200);
+    let resp = http_once(
+        &addr,
+        "POST",
+        "/v1/models/oneconv/infer",
+        "application/octet-stream",
+        raw_bytes(&x),
+    )
+    .unwrap();
+    assert_eq!(resp.status, 404);
+
+    std::fs::remove_file(&path).ok();
+    gw.shutdown();
+}
+
+#[test]
+fn concurrent_mixed_model_load_is_correct_and_metered() {
+    let (gw, reg, addr) = boot(ServerConfig {
+        workers: 2,
+        max_batch: 4,
+        max_wait: Duration::from_millis(1),
+        ..ServerConfig::default()
+    });
+    let oneconv = compile_graph(&single_conv_graph(2, 2, 0.5, 0.25), EngineChoice::Auto).unwrap();
+    reg.install("oneconv", "builder:oneconv", oneconv).unwrap();
+
+    let x = test_input(3);
+    let expect_tiny = {
+        let mut ex = Executor::new(1);
+        ex.run(&reg.get("tiny").unwrap().model, &x).unwrap()
+    };
+    let expect_oneconv = {
+        let mut ex = Executor::new(1);
+        ex.run(&reg.get("oneconv").unwrap().model, &x).unwrap()
+    };
+
+    const THREADS: usize = 6;
+    const PER: usize = 8;
+    std::thread::scope(|scope| {
+        for t in 0..THREADS {
+            let addr = addr.clone();
+            let x = x.clone();
+            let expect_tiny = &expect_tiny;
+            let expect_oneconv = &expect_oneconv;
+            scope.spawn(move || {
+                let mut client = HttpClient::new(&addr, Duration::from_secs(30));
+                for i in 0..PER {
+                    let use_tiny = (t + i) % 2 == 0;
+                    let model = if use_tiny { "tiny" } else { "oneconv" };
+                    let req = Request::with_body(
+                        "POST",
+                        &format!("/v1/models/{model}/infer"),
+                        "application/octet-stream",
+                        raw_bytes(&x),
+                    );
+                    let resp = client.send(&req).unwrap();
+                    assert_eq!(resp.status, 200, "{}", String::from_utf8_lossy(&resp.body));
+                    let want = if use_tiny { &expect_tiny[0] } else { &expect_oneconv[0] };
+                    assert_eq!(f32s(&resp.body), want.data, "thread {t} req {i} ({model})");
+                }
+            });
+        }
+    });
+
+    // per-model completion counters match the traffic we sent
+    let total = THREADS * PER;
+    let tiny_done = reg.get("tiny").unwrap().server.metrics().completed;
+    let oneconv_done = reg.get("oneconv").unwrap().server.metrics().completed;
+    assert_eq!(tiny_done + oneconv_done, total);
+    assert_eq!(tiny_done, total / 2);
+
+    // metrics endpoint agrees and is exposition-format parseable
+    let resp = http_once(&addr, "GET", "/metrics", "x", Vec::new()).unwrap();
+    assert_eq!(resp.status, 200);
+    let text = resp.body_str().unwrap().to_string();
+    let mut found_tiny = false;
+    for line in text.lines() {
+        if line.starts_with('#') || line.is_empty() {
+            continue;
+        }
+        let (series, value) = line.rsplit_once(' ').expect("sample line");
+        assert!(value.parse::<f64>().is_ok(), "bad value: {line:?}");
+        if series == "dlrt_model_completed_total{model=\"tiny\"}" {
+            assert_eq!(value.parse::<usize>().unwrap(), tiny_done);
+            found_tiny = true;
+        }
+    }
+    assert!(found_tiny, "missing per-model counter in:\n{text}");
+    gw.shutdown();
+}
+
+#[test]
+fn tiny_queue_bound_sheds_with_429() {
+    // one worker, wide batch window, queue capped at 2: a burst of 12
+    // concurrent requests must see some 429s (and the accepted ones
+    // finish correctly)
+    let (gw, _reg, addr) = boot(ServerConfig {
+        workers: 1,
+        max_batch: 64,
+        max_wait: Duration::from_millis(300),
+        queue_cap: 2,
+        ..ServerConfig::default()
+    });
+    let x = test_input(4);
+    let barrier = std::sync::Barrier::new(12);
+    let statuses: Vec<u16> = std::thread::scope(|scope| {
+        let handles: Vec<_> = (0..12)
+            .map(|_| {
+                let addr = addr.clone();
+                let x = x.clone();
+                let barrier = &barrier;
+                scope.spawn(move || {
+                    // connect first so the burst is simultaneous
+                    let mut client = HttpClient::new(&addr, Duration::from_secs(30));
+                    let probe = Request::new("GET", "/healthz");
+                    client.send(&probe).unwrap();
+                    barrier.wait();
+                    let req = Request::with_body(
+                        "POST",
+                        "/v1/models/tiny/infer",
+                        "application/octet-stream",
+                        raw_bytes(&x),
+                    );
+                    match client.send(&req) {
+                        Ok(resp) => resp.status,
+                        Err(_) => 0,
+                    }
+                })
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().unwrap()).collect()
+    });
+    let ok = statuses.iter().filter(|&&st| st == 200).count();
+    let shed = statuses.iter().filter(|&&st| st == 429).count();
+    assert_eq!(ok + shed, 12, "unexpected statuses: {statuses:?}");
+    assert!(ok >= 1, "no request got through: {statuses:?}");
+    assert!(shed >= 1, "queue bound never shed: {statuses:?}");
+
+    // 429s carry Retry-After and count in the gateway metrics
+    let resp = http_once(&addr, "GET", "/metrics", "x", Vec::new()).unwrap();
+    let text = resp.body_str().unwrap().to_string();
+    let line = text
+        .lines()
+        .find(|l| l.starts_with("dlrt_http_responses_total{class=\"429\"}"))
+        .expect("429 counter");
+    let counted: usize = line.rsplit_once(' ').unwrap().1.parse().unwrap();
+    assert_eq!(counted, shed);
+    gw.shutdown();
+}
+
+#[test]
+fn graceful_shutdown_drains_queued_requests() {
+    // wide batching window so requests sit in the queue when the drain
+    // starts; they must complete (not error, not hang) without waiting
+    // out the window
+    let (gw, reg, addr) = boot(ServerConfig {
+        workers: 1,
+        max_batch: 64,
+        max_wait: Duration::from_millis(2000),
+        ..ServerConfig::default()
+    });
+    let x = test_input(5);
+    let expect = {
+        let mut ex = Executor::new(1);
+        ex.run(&reg.get("tiny").unwrap().model, &x).unwrap()
+    };
+
+    std::thread::scope(|scope| {
+        let handles: Vec<_> = (0..4)
+            .map(|_| {
+                let addr = addr.clone();
+                let x = x.clone();
+                let expect = &expect;
+                scope.spawn(move || {
+                    let resp = http_once(
+                        &addr,
+                        "POST",
+                        "/v1/models/tiny/infer",
+                        "application/octet-stream",
+                        raw_bytes(&x),
+                    )
+                    .unwrap();
+                    assert_eq!(resp.status, 200, "{}", String::from_utf8_lossy(&resp.body));
+                    assert_eq!(f32s(&resp.body), expect[0].data);
+                })
+            })
+            .collect();
+
+        // wait until every request is queued behind the window, then shut
+        // down mid-window: drain must execute them now, not at the
+        // window's 2s deadline
+        let entry = reg.get("tiny").unwrap();
+        let deadline = Instant::now() + Duration::from_secs(10);
+        while entry.server.queue_depth() < 4 && Instant::now() < deadline {
+            std::thread::sleep(Duration::from_millis(5));
+        }
+        assert_eq!(entry.server.queue_depth(), 4, "requests never queued");
+        let t0 = Instant::now();
+        gw.shutdown();
+        assert!(
+            t0.elapsed() < Duration::from_millis(1500),
+            "shutdown waited out the batching window instead of draining"
+        );
+        for h in handles {
+            h.join().unwrap();
+        }
+    });
+
+    // the port is closed afterwards
+    assert!(
+        http_once(&addr, "GET", "/healthz", "x", Vec::new()).is_err(),
+        "listener still accepting after shutdown"
+    );
+}
+
+#[test]
+fn admin_shutdown_endpoint_requests_drain() {
+    let (gw, _reg, addr) = boot(default_cfg());
+    assert!(!gw.shutdown_requested());
+    let resp = http_once(&addr, "POST", "/v1/admin/shutdown", "x", Vec::new()).unwrap();
+    assert_eq!(resp.status, 200);
+    assert!(gw.shutdown_requested());
+    gw.shutdown();
+}
