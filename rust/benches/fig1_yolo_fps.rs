@@ -11,6 +11,7 @@ use dlrt::bench_harness::{bench_ms, ms, Table};
 use dlrt::compiler::{compile_graph, EngineChoice};
 use dlrt::costmodel::{self, EngineKind, CORTEX_A72};
 use dlrt::dlrt::graph::QCfg;
+use dlrt::exec::planner::{build_plan_with, PlanOpts};
 use dlrt::exec::Executor;
 use dlrt::models::build_yolov5;
 use dlrt::util::rng::Rng;
@@ -43,9 +44,12 @@ fn main() {
     println!("tiniest (n, <=256px) configurations are usable without DLRT.");
 
     // ---- measured (host CPU, width 0.25, fp32 vs int8 vs bitserial) ------
+    // "no fusion" reruns the same kernels with residual-add fusion and
+    // concat-in-place disabled: the delta is the whole-tensor add passes
+    // and concat copies the planner removed (YOLOv5 heads are concat-heavy)
     let mut t = Table::new(
         "Fig.1 measured — yolov5n width=0.25 on host CPU (1 thread)",
-        &["res", "FP32", "INT8", "DLRT 2A2W", "DLRT FPS"],
+        &["res", "FP32", "INT8", "DLRT 2A2W", "DLRT no add/cat fusion", "DLRT FPS"],
     );
     let mut rng = Rng::new(2);
     for res in [128usize, 192] {
@@ -53,6 +57,13 @@ fn main() {
         let mq = compile_graph(&g, EngineChoice::Auto).unwrap();
         let mf = compile_graph(&g, EngineChoice::ForceFp32).unwrap();
         let m8 = compile_graph(&g, EngineChoice::ForceInt8).unwrap();
+        let mut mq_nofuse = mq.clone();
+        mq_nofuse.plan = build_plan_with(
+            &g,
+            PlanOpts { fuse_residual_add: false, concat_in_place: false,
+                       ..PlanOpts::default() },
+        )
+        .unwrap();
         let mut x = Tensor::zeros(vec![1, res, res, 3]);
         for v in x.data.iter_mut() {
             *v = rng.f32();
@@ -61,13 +72,25 @@ fn main() {
         let t_f = bench_ms(1, 5, || { ex.run(&mf, &x).unwrap(); });
         let t_8 = bench_ms(1, 5, || { ex.run(&m8, &x).unwrap(); });
         let t_q = bench_ms(1, 5, || { ex.run(&mq, &x).unwrap(); });
+        let t_qn = bench_ms(1, 5, || { ex.run(&mq_nofuse, &x).unwrap(); });
         t.row(vec![
             format!("{res}"),
             ms(t_f.median_ms),
             ms(t_8.median_ms),
             ms(t_q.median_ms),
+            ms(t_qn.median_ms),
             format!("{:.1}", 1000.0 / t_q.median_ms),
         ]);
+        println!(
+            "res {res}: {} fused adds, {} in-place concats ({} fallbacks) — \
+             add/concat fusion saves {:.2}% per-inference, arena {} -> {} B",
+            mq.plan.fused_add_instrs(),
+            mq.plan.in_place_concats,
+            mq.plan.concat_fallbacks.len(),
+            100.0 * (t_qn.median_ms - t_q.median_ms) / t_qn.median_ms,
+            mq_nofuse.plan.arena_bytes(1),
+            mq.plan.arena_bytes(1),
+        );
     }
     t.print();
     t.save_json("fig1_measured");

@@ -56,26 +56,45 @@ fn main() {
     for v in x.data.iter_mut() {
         *v = rng.f32();
     }
-    // plan ablation: same kernels, fusion + in-place lowering disabled
+    // plan ablations: same kernels throughout — (a) everything disabled,
+    // (b) only the residual-add fusion disabled (isolates the new pass)
     let mut mq_nofuse = mq.clone();
-    mq_nofuse.plan =
-        build_plan_with(&g, PlanOpts { fuse_activations: false, in_place: false }).unwrap();
+    mq_nofuse.plan = build_plan_with(&g, PlanOpts::none()).unwrap();
+    let mut mq_nores = mq.clone();
+    mq_nores.plan = build_plan_with(
+        &g,
+        PlanOpts { fuse_residual_add: false, ..PlanOpts::default() },
+    )
+    .unwrap();
 
     let mut ex = Executor::new(1);
     let t_f = bench_ms(1, 5, || { ex.run(&mf, &x).unwrap(); });
     let t_8 = bench_ms(1, 5, || { ex.run(&m8, &x).unwrap(); });
     let t_q = bench_ms(1, 5, || { ex.run(&mq, &x).unwrap(); });
     let t_qn = bench_ms(1, 5, || { ex.run(&mq_nofuse, &x).unwrap(); });
+    let t_qr = bench_ms(1, 5, || { ex.run(&mq_nores, &x).unwrap(); });
     m.row(vec!["FP32 native".into(), ms(t_f.median_ms), "1.00x".into()]);
     m.row(vec!["INT8 native".into(), ms(t_8.median_ms),
                format!("{:.2}x", t_f.median_ms / t_8.median_ms)]);
     m.row(vec!["DLRT 2A2W (fused plan)".into(), ms(t_q.median_ms),
                format!("{:.2}x", t_f.median_ms / t_q.median_ms)]);
+    m.row(vec!["DLRT 2A2W (no residual fusion)".into(), ms(t_qr.median_ms),
+               format!("{:.2}x", t_f.median_ms / t_qr.median_ms)]);
     m.row(vec!["DLRT 2A2W (unfused plan)".into(), ms(t_qn.median_ms),
                format!("{:.2}x", t_f.median_ms / t_qn.median_ms)]);
     println!("fusion ablation: fused {} vs unfused {} ({:.2}x per-inference)",
              ms(t_q.median_ms), ms(t_qn.median_ms),
              t_qn.median_ms / t_q.median_ms);
+    println!(
+        "residual-add fusion: {} fused adds save {:.2}% per-inference \
+         ({} vs {}), arena {} -> {} B",
+        mq.plan.fused_add_instrs(),
+        100.0 * (t_qr.median_ms - t_q.median_ms) / t_qr.median_ms,
+        ms(t_qr.median_ms),
+        ms(t_q.median_ms),
+        mq_nores.plan.arena_bytes(1),
+        mq.plan.arena_bytes(1),
+    );
 
     // XLA/PJRT framework baseline (the ONNX-Runtime role), same 96px graph
     pjrt_row(&mut m, &mut rng, &x, t_f.median_ms);

@@ -2,13 +2,14 @@
 //! a persistent arena.
 //!
 //! The compiler lowers the graph through the planner's pass pipeline
-//! (activation fusion → in-place/alias lowering → arena slot assignment),
-//! so at request time the executor is a flat loop over instructions reading
-//! and writing disjoint slot ranges of one reusable buffer: no per-node
-//! tensor allocation, no env-map walks, no activation clones. Once the
-//! arena and kernel scratch have grown to the model's largest layer, a run
-//! performs **zero heap allocations** (enforced by
-//! `tests/steady_state_alloc.rs`).
+//! (activation fusion → Add/residual fusion → post-add activation fusion →
+//! in-place/alias/concat-stripe lowering → arena slot assignment), so at
+//! request time the executor is a flat loop over instructions reading and
+//! writing disjoint slot ranges of one reusable buffer: no per-node tensor
+//! allocation, no env-map walks, no activation clones, no residual-add or
+//! concat-copy passes where the plan fused them away. Once the arena and
+//! kernel scratch have grown to the model's largest layer, a run performs
+//! **zero heap allocations** (enforced by `tests/steady_state_alloc.rs`).
 //!
 //! Arithmetic matches `python/compile/jax_exec.py` mode `deploy_sim` step
 //! for step (fused epilogues perform the identical float ops in the same
@@ -25,15 +26,19 @@ use anyhow::{anyhow, bail, Result};
 
 use crate::dlrt::graph::{qp_qn, Graph, Op};
 use crate::dlrt::tensor::{Packed, Tensor};
-use crate::kernels::bitserial::{dequant_scale_bias_act, gemm_bitserial, pack_rows_u8_into};
+use crate::kernels::bitserial::{
+    dequant_scale_bias_act, dequant_scale_bias_add_act, gemm_bitserial, pack_rows_u8_into,
+};
 use crate::kernels::elementwise::{self as ew, ActKind};
-use crate::kernels::fp32::{dense_rowmajor, gemm_rowmajor_bt, scale_bias_rows_act};
+use crate::kernels::fp32::{
+    dense_rowmajor, gemm_rowmajor_bt, scale_bias_rows_act, scale_bias_rows_add_act,
+};
 use crate::kernels::im2col::{im2col_f32, im2col_quant_u8, ConvDims};
 use crate::kernels::int8::gemm_u8i8_i32;
 use crate::kernels::pool;
 use crate::util::threads;
 
-use self::planner::{ExecPlan, Instr};
+use self::planner::{ChanView, ExecPlan, Instr};
 
 /// Which engine executes a conv layer (chosen by the compiler).
 #[derive(Clone, Debug)]
@@ -123,11 +128,16 @@ impl CompiledModel {
 }
 
 /// Reusable kernel scratch (im2col columns, packed activation planes, i32
-/// accumulators): grows to the largest layer, then steady-state reuse.
+/// accumulators, fp32 GEMM staging for strided/fused epilogues): grows to
+/// the largest layer, then steady-state reuse.
 struct Scratch {
     cols_f32: Vec<f32>,
     cols_u8: Vec<u8>,
     acc: Vec<i32>,
+    /// fp32 GEMM result when the epilogue can't run in place (residual add
+    /// or channel-stripe output): the epilogue reads from here and writes
+    /// the final values straight to their destination.
+    gemm_f32: Vec<f32>,
     packed: Packed,
 }
 
@@ -188,6 +198,7 @@ impl Executor {
                 cols_f32: Vec::new(),
                 cols_u8: Vec::new(),
                 acc: Vec::new(),
+                gemm_f32: Vec::new(),
                 packed: Packed::new_zeroed(0, 0, 1),
             },
             arena: Vec::new(),
@@ -300,18 +311,36 @@ fn exec_instr(
     );
     let in_elems = |i: usize| batch * instr.in_tails[i].iter().product::<usize>();
     let out_elems = batch * instr.out_tail.iter().product::<usize>();
+    // A channel-stripe view occupies rows × view.stride elements of its
+    // slot (rows = every dim but the channel one, times batch).
+    let out_len = match &instr.out_view {
+        Some(v) => {
+            batch
+                * instr.out_tail[..instr.out_tail.len() - 1].iter().product::<usize>()
+                * v.stride
+        }
+        None => out_elems,
+    };
     match &instr.op {
         Op::Conv2d { stride, padding, kernel, cout, .. } => {
             let t = &instr.in_tails[0]; // [h, w, c]
             let d = ConvDims::new(batch, t[0], t[1], t[2], kernel[0], kernel[1], *stride,
                                   *padding);
             let x = unsafe { views.read(instr.in_slots[0], in_elems(0)) };
-            let out = unsafe { views.write(instr.out_slot, out_elems) };
+            // the fused residual add's second accumulator (may share the
+            // conv input's slot — two shared reads alias safely)
+            let res = if instr.fused_add {
+                Some(unsafe { views.read(instr.in_slots[1], in_elems(1)) })
+            } else {
+                None
+            };
+            let out = unsafe { views.write(instr.out_slot, out_len) };
             let conv = model
                 .convs
                 .get(&instr.name)
                 .ok_or_else(|| anyhow!("no compiled conv for {}", instr.name))?;
-            conv_into(scratch, nthreads, x, &d, conv, *cout, instr.fused, out);
+            conv_into(scratch, nthreads, x, &d, conv, *cout, instr.fused, res,
+                      instr.fused_post, instr.out_view, out);
         }
         Op::Dense { cin, cout } => {
             let x = unsafe { views.read(instr.in_slots[0], in_elems(0)) };
@@ -326,8 +355,13 @@ fn exec_instr(
         Op::MaxPool2d { kernel, stride, padding } => {
             let t = &instr.in_tails[0];
             let x = unsafe { views.read(instr.in_slots[0], in_elems(0)) };
-            let out = unsafe { views.write(instr.out_slot, out_elems) };
-            pool::maxpool2d(x, batch, t[0], t[1], t[2], *kernel, *stride, *padding, out);
+            let out = unsafe { views.write(instr.out_slot, out_len) };
+            let (os, oo) = match &instr.out_view {
+                Some(v) => (v.stride, v.off),
+                None => (t[2], 0),
+            };
+            pool::maxpool2d_strided(x, batch, t[0], t[1], t[2], *kernel, *stride, *padding,
+                                    out, os, oo);
         }
         Op::GlobalAvgPool => {
             let t = &instr.in_tails[0];
@@ -338,8 +372,12 @@ fn exec_instr(
         Op::Upsample2x => {
             let t = &instr.in_tails[0];
             let x = unsafe { views.read(instr.in_slots[0], in_elems(0)) };
-            let out = unsafe { views.write(instr.out_slot, out_elems) };
-            pool::upsample2x(x, batch, t[0], t[1], t[2], out);
+            let out = unsafe { views.write(instr.out_slot, out_len) };
+            let (os, oo) = match &instr.out_view {
+                Some(v) => (v.stride, v.off),
+                None => (t[2], 0),
+            };
+            pool::upsample2x_strided(x, batch, t[0], t[1], t[2], out, os, oo);
         }
         Op::Add => {
             let a = unsafe { views.read(instr.in_slots[0], in_elems(0)) };
@@ -348,15 +386,21 @@ fn exec_instr(
             ew::add(a, b, out);
         }
         Op::Concat => {
-            // one striped copy per input: no per-call slice list
+            // one striped copy per input: no per-call slice list. With an
+            // out_view this concat is itself a stripe of a wider root
+            // (nested concat fallback): offsets shift by view.off.
             let ctot = instr.out_tail[2];
             let rows = batch * instr.out_tail[0] * instr.out_tail[1];
-            let out = unsafe { views.write(instr.out_slot, out_elems) };
-            let mut c_off = 0;
+            let (os, base) = match &instr.out_view {
+                Some(v) => (v.stride, v.off),
+                None => (ctot, 0),
+            };
+            let out = unsafe { views.write(instr.out_slot, out_len) };
+            let mut c_off = base;
             for i in 0..instr.in_slots.len() {
                 let ci = instr.in_tails[i][2];
                 let x = unsafe { views.read(instr.in_slots[i], in_elems(i)) };
-                ew::copy_channels(x, ci, ctot, c_off, rows, out);
+                ew::copy_channels(x, ci, os, c_off, rows, out);
                 c_off += ci;
             }
         }
@@ -365,19 +409,38 @@ fn exec_instr(
         }
         Op::Relu | Op::Relu6 | Op::Silu | Op::LeakyRelu | Op::Sigmoid => {
             let act = ActKind::from_op(&instr.op).expect("activation op");
-            let out = unsafe { views.write(instr.out_slot, out_elems) };
-            if !instr.in_place {
-                let x = unsafe { views.read(instr.in_slots[0], in_elems(0)) };
-                out.copy_from_slice(x);
+            match &instr.out_view {
+                Some(v) => {
+                    // strided activation: read the dense input, write the
+                    // activated rows into the concat stripe
+                    let c = *instr.out_tail.last().expect("non-empty tail");
+                    let rows = out_len / v.stride;
+                    let x = unsafe { views.read(instr.in_slots[0], in_elems(0)) };
+                    let out = unsafe { views.write(instr.out_slot, out_len) };
+                    ew::act_channels(act, x, c, v.stride, v.off, rows, out);
+                }
+                None => {
+                    let out = unsafe { views.write(instr.out_slot, out_elems) };
+                    if !instr.in_place {
+                        let x = unsafe { views.read(instr.in_slots[0], in_elems(0)) };
+                        out.copy_from_slice(x);
+                    }
+                    act.apply(out);
+                }
             }
-            act.apply(out);
         }
     }
     Ok(())
 }
 
-/// Run one compiled conv into `out` (rows × cout), engine-dispatched, with
-/// the plan's fused activation epilogue applied in the dequant/scale pass.
+/// Run one compiled conv into `out`, engine-dispatched, with the plan's
+/// fused epilogue (activation, residual add, post-add activation) applied
+/// in the dequant/scale pass — and, when `view` is set, written into the
+/// conv's channel stripe of a concat output slot instead of densely.
+///
+/// The common dense/no-residual case keeps the original specialized
+/// epilogues; every fused path performs the identical float ops in the
+/// same order, so results stay bit-identical to the unfused reference.
 #[allow(clippy::too_many_arguments)]
 fn conv_into(
     scratch: &mut Scratch,
@@ -387,17 +450,36 @@ fn conv_into(
     conv: &CompiledConv,
     cout: usize,
     fused: Option<ActKind>,
+    res: Option<&[f32]>,
+    fused_post: Option<ActKind>,
+    view: Option<ChanView>,
     out: &mut [f32],
 ) {
     let rows = d.rows();
     let patch = d.patch();
-    debug_assert_eq!(out.len(), rows * cout);
+    let (ostride, ooff) = match view {
+        Some(v) => (v.stride, v.off),
+        None => (cout, 0),
+    };
+    debug_assert_eq!(out.len(), rows * ostride);
+    debug_assert!(res.map(|r| r.len() == rows * cout).unwrap_or(true));
+    let plain = res.is_none() && view.is_none();
     match &conv.kernel {
         ConvKernel::Fp32 { wt } => {
             scratch.cols_f32.resize(rows * patch, 0.0);
             im2col_f32(x, d, &mut scratch.cols_f32);
-            gemm_rowmajor_bt(&scratch.cols_f32, wt, rows, cout, patch, out, nthreads);
-            scale_bias_rows_act(out, cout, &conv.scale, &conv.bias, fused);
+            if plain {
+                gemm_rowmajor_bt(&scratch.cols_f32, wt, rows, cout, patch, out, nthreads);
+                scale_bias_rows_act(out, cout, &conv.scale, &conv.bias, fused);
+            } else {
+                // the epilogue can't mutate in place (it adds a residual
+                // and/or writes strided): stage the GEMM in scratch
+                scratch.gemm_f32.resize(rows * cout, 0.0);
+                gemm_rowmajor_bt(&scratch.cols_f32, wt, rows, cout, patch,
+                                 &mut scratch.gemm_f32, nthreads);
+                scale_bias_rows_add_act(&scratch.gemm_f32, cout, &conv.scale, &conv.bias,
+                                        fused, res, fused_post, out, ostride, ooff);
+            }
         }
         ConvKernel::Bitserial { packed, s_w, s_a, w_bits, a_bits } => {
             let (qp_a, _) = qp_qn(*a_bits, false);
@@ -408,8 +490,14 @@ fn conv_into(
             scratch.acc.resize(rows * cout, 0);
             gemm_bitserial(&scratch.packed, packed, *w_bits as usize,
                            &mut scratch.acc[..rows * cout], nthreads);
-            dequant_scale_bias_act(&scratch.acc[..rows * cout], cout, s_a * s_w,
-                                   &conv.scale, &conv.bias, fused, out);
+            if plain {
+                dequant_scale_bias_act(&scratch.acc[..rows * cout], cout, s_a * s_w,
+                                       &conv.scale, &conv.bias, fused, out);
+            } else {
+                dequant_scale_bias_add_act(&scratch.acc[..rows * cout], cout, s_a * s_w,
+                                           &conv.scale, &conv.bias, fused, res, fused_post,
+                                           out, ostride, ooff);
+            }
         }
         ConvKernel::Int8 { codes, s_w, s_a } => {
             scratch.cols_u8.resize(rows * patch, 0);
@@ -417,8 +505,14 @@ fn conv_into(
             scratch.acc.resize(rows * cout, 0);
             gemm_u8i8_i32(&scratch.cols_u8, codes, rows, cout, patch,
                           &mut scratch.acc[..rows * cout], nthreads);
-            dequant_scale_bias_act(&scratch.acc[..rows * cout], cout, s_a * s_w,
-                                   &conv.scale, &conv.bias, fused, out);
+            if plain {
+                dequant_scale_bias_act(&scratch.acc[..rows * cout], cout, s_a * s_w,
+                                       &conv.scale, &conv.bias, fused, out);
+            } else {
+                dequant_scale_bias_add_act(&scratch.acc[..rows * cout], cout, s_a * s_w,
+                                           &conv.scale, &conv.bias, fused, res, fused_post,
+                                           out, ostride, ooff);
+            }
         }
     }
 }

@@ -3,22 +3,44 @@
 //!
 //! The paper's runtime keeps its inner loop free of graph machinery by
 //! deciding everything ahead of time (§VI "Deeplite Runtime"); this module
-//! is that decision stage. `build_plan` runs three passes:
+//! is that decision stage. `build_plan` runs five passes:
 //!
 //! 1. **Activation fusion** — a Conv2d whose output's sole consumer is an
 //!    elementwise activation absorbs it as a fused epilogue
 //!    ([`crate::kernels::bitserial::dequant_scale_bias_act`] /
 //!    [`crate::kernels::fp32::scale_bias_rows_act`]), so the
 //!    pre-activation tensor is never materialized.
-//! 2. **In-place lowering** — a standalone activation that is the last
-//!    consumer of its input mutates the input's slot; `Flatten` becomes a
-//!    metadata-only alias (no instruction at all).
-//! 3. **Slot assignment** — register-allocation style: every instruction
+//! 2. **Add/residual fusion** — a Conv2d whose output's sole consumer is
+//!    an `Add` whose other operand is already live when the conv runs
+//!    (produced earlier, or the graph input) absorbs the add into its
+//!    epilogue: the two-accumulator variants
+//!    ([`crate::kernels::bitserial::dequant_scale_bias_add_act`] /
+//!    [`crate::kernels::fp32::scale_bias_rows_add_act`]) add the residual
+//!    row in the same pass over the GEMM accumulator, so residual blocks
+//!    skip a whole-tensor pass *and* an arena slot.
+//! 3. **Post-add activation fusion** — after a residual fuse, an
+//!    activation that is now the conv's sole consumer (the ResNet
+//!    `conv → add → relu` tail) also folds into the epilogue, applied
+//!    after the residual add.
+//! 4. **In-place / aliased lowering** — a standalone activation that is
+//!    the last consumer of its input mutates the input's slot; `Flatten`
+//!    becomes a metadata-only alias (no instruction at all); and a
+//!    `Concat` whose every producer is sole-consumed and stride-capable
+//!    (conv / pool / upsample / activation / nested concat) is **elided**:
+//!    each producer gets a [`ChanView`] — an aliased channel-stripe view
+//!    of the concat output slot — and writes its rows directly at the
+//!    stripe's column offset, eliminating the `copy_channels` pass.
+//!    Concats whose producers don't qualify (multi-use inputs, the graph
+//!    input, dense/add producers) fall back to the copy path; the reason
+//!    is recorded in [`ExecPlan::concat_fallbacks`].
+//! 5. **Slot assignment** — register-allocation style: every instruction
 //!    output gets an arena *slot*, and a slot returns to the free list as
 //!    soon as the last consumer of every tensor bound to it has run.
 //!    Slot sizes are per-batch-item element counts derived from
 //!    [`Graph::infer_shapes`]; the executor rescales offsets for the actual
-//!    request batch at run time.
+//!    request batch at run time. Striped producers share their concat
+//!    root's slot, whose liveness spans from the first producer to the
+//!    concat output's last consumer.
 //!
 //! `use_counts` / `peak_live_elems` are the underlying liveness analysis,
 //! also used by the footprint reports.
@@ -79,12 +101,46 @@ pub struct PlanOpts {
     pub fuse_activations: bool,
     /// Lower last-consumer standalone activations to in-place mutation.
     pub in_place: bool,
+    /// Fold sole-consumer residual `Add`s into conv epilogues.
+    pub fuse_residual_add: bool,
+    /// Let concat producers write channel stripes of the concat slot.
+    pub concat_in_place: bool,
 }
 
 impl Default for PlanOpts {
     fn default() -> Self {
-        PlanOpts { fuse_activations: true, in_place: true }
+        PlanOpts {
+            fuse_activations: true,
+            in_place: true,
+            fuse_residual_add: true,
+            concat_in_place: true,
+        }
     }
+}
+
+impl PlanOpts {
+    /// Every pass disabled — the ablation baseline (one instruction per
+    /// graph node, one slot per liveness interval, no aliasing).
+    pub fn none() -> Self {
+        PlanOpts {
+            fuse_activations: false,
+            in_place: false,
+            fuse_residual_add: false,
+            concat_in_place: false,
+        }
+    }
+}
+
+/// Channel-stripe view of a wider output slot: the instruction writes each
+/// of its output rows (`out_tail` minus the channel dim) at column `off` of
+/// a row `stride` channels wide — how a concat producer lands directly in
+/// its stripe of the concat output slot.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ChanView {
+    /// Total channels of a root-slot row (the concat output's channels).
+    pub stride: usize,
+    /// First channel of this instruction's stripe.
+    pub off: usize,
 }
 
 /// One lowered instruction: an op reading input slots and writing one
@@ -95,13 +151,22 @@ pub struct Instr {
     /// Originating node name (key into the compiled conv/dense maps).
     pub name: String,
     pub op: Op,
-    /// Fused activation epilogue (convs only).
+    /// Fused activation epilogue, applied before any fused add (convs only).
     pub fused: Option<ActKind>,
+    /// Residual-add epilogue: `in_slots[1]` holds the residual, added to
+    /// the conv result after `fused` and before `fused_post` (convs only).
+    pub fused_add: bool,
+    /// Activation applied after the fused residual add (the ResNet
+    /// `conv → add → relu` tail; requires `fused_add`).
+    pub fused_post: Option<ActKind>,
     pub in_slots: Vec<usize>,
     /// Per-input shape tails, aligned with `in_slots`.
     pub in_tails: Vec<Vec<usize>>,
     pub out_slot: usize,
     pub out_tail: Vec<usize>,
+    /// Channel-stripe placement of the output inside `out_slot` (concat
+    /// in-place producers); `None` writes the slot densely.
+    pub out_view: Option<ChanView>,
     /// Activation lowered to mutate its own slot (`in_slots[0] == out_slot`).
     pub in_place: bool,
 }
@@ -128,6 +193,11 @@ pub struct ExecPlan {
     pub outputs: Vec<OutSpec>,
     /// Batch the graph was planned at (shapes rescale linearly).
     pub nominal_batch: usize,
+    /// Concat nodes elided entirely (every producer writes its stripe).
+    pub in_place_concats: usize,
+    /// Why each remaining concat kept the copy path (the logged fallback;
+    /// `dlrt inspect --plan` prints these).
+    pub concat_fallbacks: Vec<String>,
 }
 
 impl ExecPlan {
@@ -164,6 +234,16 @@ impl ExecPlan {
         self.instrs.iter().filter(|i| i.fused.is_some()).count()
     }
 
+    /// Convs that absorbed a residual `Add` into their epilogue.
+    pub fn fused_add_instrs(&self) -> usize {
+        self.instrs.iter().filter(|i| i.fused_add).count()
+    }
+
+    /// Instructions writing a channel stripe of a concat output slot.
+    pub fn strided_instrs(&self) -> usize {
+        self.instrs.iter().filter(|i| i.out_view.is_some()).count()
+    }
+
     pub fn in_place_instrs(&self) -> usize {
         self.instrs.iter().filter(|i| i.in_place).count()
     }
@@ -197,6 +277,11 @@ impl ExecPlan {
                 && match &ins.op {
                     Op::Add => ins.in_slots.len() == 2,
                     Op::Concat => !ins.in_slots.is_empty(),
+                    // a fused residual add carries its second accumulator
+                    // (the residual) as a second input
+                    Op::Conv2d { .. } => {
+                        ins.in_slots.len() == if ins.fused_add { 2 } else { 1 }
+                    }
                     _ => ins.in_slots.len() == 1,
                 };
             // per-op shape legality: recompute the output shape the way
@@ -213,6 +298,10 @@ impl ExecPlan {
                             && conv_out_hw_checked(t[0], t[1], *kernel, *stride, *padding)
                                 == Some((ins.out_tail[0], ins.out_tail[1]))
                             && ins.out_tail[2] == *cout
+                            // the residual accumulator must be exactly one
+                            // output's worth of elements
+                            && (!ins.fused_add
+                                || numel(&ins.in_tails[1]) == numel(&ins.out_tail))
                     }
                     Op::MaxPool2d { kernel, stride, padding } => {
                         let t = &ins.in_tails[0];
@@ -267,18 +356,59 @@ impl ExecPlan {
             // for activations; anything else would alias read/write views
             let in_place_ok = !ins.in_place || ActKind::from_op(&ins.op).is_some();
             // fused epilogues are a conv-only concept: exec_instr reads
-            // `fused` nowhere else, so it must not appear anywhere else
-            let fused_ok = ins.fused.is_none() || matches!(ins.op, Op::Conv2d { .. });
+            // `fused`/`fused_add`/`fused_post` nowhere else, so they must
+            // not appear anywhere else — and a post-add activation without
+            // a fused add would be indistinguishable from `fused`
+            let fused_ok = ((ins.fused.is_none() && !ins.fused_add
+                && ins.fused_post.is_none())
+                || matches!(ins.op, Op::Conv2d { .. }))
+                && (ins.fused_post.is_none() || ins.fused_add);
+            // strided output views exist only for the ops exec_instr
+            // implements stride-aware writes for, never in-place, and the
+            // stripe must lie inside a row
+            let view_ok = match &ins.out_view {
+                None => true,
+                Some(v) => {
+                    let capable = matches!(
+                        ins.op,
+                        Op::Conv2d { .. } | Op::MaxPool2d { .. } | Op::Upsample2x
+                            | Op::Concat
+                    ) || ActKind::from_op(&ins.op).is_some();
+                    capable
+                        && !ins.in_place
+                        && !ins.out_tail.is_empty()
+                        && ins
+                            .out_tail
+                            .last()
+                            .and_then(|&c| v.off.checked_add(c))
+                            .is_some_and(|end| end <= v.stride)
+                }
+            };
             let aliasing_ok = if ins.in_place {
                 ins.in_slots.first() == Some(&ins.out_slot)
             } else {
                 ins.in_slots.iter().all(|&s| s != ins.out_slot)
             };
+            // a strided instruction occupies rows × view.stride elements of
+            // its slot, not numel(out_tail)
+            let out_fits = match &ins.out_view {
+                None => fits(&ins.out_tail, ins.out_slot),
+                Some(v) => {
+                    ins.out_slot < n
+                        && !ins.out_tail.is_empty()
+                        && matches!(
+                            numel_checked(&ins.out_tail[..ins.out_tail.len() - 1])
+                                .and_then(|r| r.checked_mul(v.stride)),
+                            Some(e) if e <= self.slot_sizes[ins.out_slot]
+                        )
+                }
+            };
             if !shape_ok
                 || !in_place_ok
                 || !fused_ok
+                || !view_ok
                 || !aliasing_ok
-                || !fits(&ins.out_tail, ins.out_slot)
+                || !out_fits
                 || ins.in_slots.iter().zip(&ins.in_tails).any(|(&s, t)| !fits(t, s))
             {
                 return Err(anyhow!(
@@ -311,6 +441,18 @@ struct WNode {
     inputs: Vec<String>,
     output: String,
     fused: Option<ActKind>,
+    fused_add: bool,
+    fused_post: Option<ActKind>,
+    /// Concat elided by the in-place pass: producers already wrote their
+    /// stripes, so no instruction is emitted — only a slot binding.
+    elide: bool,
+}
+
+/// Consumer count of tensor `t` over the current (post-fusion) node list;
+/// graph outputs count as one extra consumer.
+fn uses_of(nodes: &[WNode], outputs: &[String], t: &str) -> usize {
+    nodes.iter().flat_map(|n| n.inputs.iter()).filter(|i| i.as_str() == t).count()
+        + outputs.iter().filter(|o| o.as_str() == t).count()
 }
 
 /// Slot allocator state: sizes/liveness plus the tensor-name bindings.
@@ -403,6 +545,9 @@ pub fn build_plan_with(g: &Graph, opts: PlanOpts) -> Result<ExecPlan> {
             inputs: n.inputs.clone(),
             output: n.output.clone(),
             fused: None,
+            fused_add: false,
+            fused_post: None,
+            elide: false,
         })
         .collect();
 
@@ -412,13 +557,7 @@ pub fn build_plan_with(g: &Graph, opts: PlanOpts) -> Result<ExecPlan> {
         while i < nodes.len() {
             if matches!(nodes[i].op, Op::Conv2d { .. }) {
                 let out = nodes[i].output.clone();
-                let uses = nodes
-                    .iter()
-                    .flat_map(|n| n.inputs.iter())
-                    .filter(|t| **t == out)
-                    .count()
-                    + g.outputs.iter().filter(|o| **o == out).count();
-                if uses == 1 {
+                if uses_of(&nodes, &g.outputs, &out) == 1 {
                     if let Some(j) =
                         nodes.iter().position(|n| n.inputs.iter().any(|t| *t == out))
                     {
@@ -435,6 +574,143 @@ pub fn build_plan_with(g: &Graph, opts: PlanOpts) -> Result<ExecPlan> {
         }
     }
 
+    // --- pass 2: Add/residual fusion -----------------------------------
+    // A conv whose (possibly activation-fused) output is consumed only by
+    // an Add, where the add's other operand is already live when the conv
+    // runs (graph input or produced by an earlier node), absorbs the add:
+    // the residual becomes the conv's second input and the epilogue's
+    // second accumulator. One add per conv (`fused_add` guard): a chain
+    // `add → add` fuses only its first link.
+    if opts.fuse_residual_add {
+        let mut i = 0;
+        while i < nodes.len() {
+            if matches!(nodes[i].op, Op::Conv2d { .. }) && !nodes[i].fused_add {
+                let out = nodes[i].output.clone();
+                if uses_of(&nodes, &g.outputs, &out) == 1 {
+                    if let Some(j) =
+                        nodes.iter().position(|n| n.inputs.iter().any(|t| *t == out))
+                    {
+                        if matches!(nodes[j].op, Op::Add) {
+                            let other = if nodes[j].inputs[0] == out {
+                                nodes[j].inputs[1].clone()
+                            } else {
+                                nodes[j].inputs[0].clone()
+                            };
+                            let live_before_conv = other == g.input_name
+                                || nodes[..i].iter().any(|n| n.output == other);
+                            if live_before_conv {
+                                let add_out = nodes[j].output.clone();
+                                nodes[i].fused_add = true;
+                                nodes[i].inputs.push(other);
+                                nodes[i].output = add_out;
+                                nodes.remove(j);
+                            }
+                        }
+                    }
+                }
+            }
+            i += 1;
+        }
+    }
+
+    // --- pass 3: post-add activation fusion ----------------------------
+    // After a residual fuse the conv's new sole consumer may be the block's
+    // trailing activation (ResNet's `add → relu`); fold it in after the
+    // residual add.
+    if opts.fuse_activations {
+        let mut i = 0;
+        while i < nodes.len() {
+            if nodes[i].fused_add && nodes[i].fused_post.is_none() {
+                let out = nodes[i].output.clone();
+                if uses_of(&nodes, &g.outputs, &out) == 1 {
+                    if let Some(j) =
+                        nodes.iter().position(|n| n.inputs.iter().any(|t| *t == out))
+                    {
+                        if let Some(a) = ActKind::from_op(&nodes[j].op) {
+                            let act_out = nodes[j].output.clone();
+                            nodes[i].fused_post = Some(a);
+                            nodes[i].output = act_out;
+                            nodes.remove(j);
+                        }
+                    }
+                }
+            }
+            i += 1;
+        }
+    }
+
+    // --- pass 4a: concat-in-place placement ----------------------------
+    // Walk concats in reverse topological order so an outer concat claims
+    // its stripes before an inner one composes into them (concat-of-concat
+    // becomes stripes-of-stripes on the outermost root slot). All-or-
+    // nothing per concat: every producer must be sole-consumed, stride-
+    // capable, and not the graph input; otherwise the concat keeps the
+    // copy path and the reason lands in `concat_fallbacks`.
+    let mut placement: BTreeMap<String, (String, usize)> = BTreeMap::new();
+    let mut in_place_concats = 0usize;
+    let mut concat_fallbacks: Vec<String> = Vec::new();
+    if opts.concat_in_place {
+        for ci in (0..nodes.len()).rev() {
+            if !matches!(nodes[ci].op, Op::Concat) {
+                continue;
+            }
+            let (root, base) = match placement.get(&nodes[ci].output) {
+                Some((r, b)) => (r.clone(), *b),
+                None => (nodes[ci].output.clone(), 0),
+            };
+            let mut stripes: Vec<(String, usize)> = Vec::new();
+            let mut fallback: Option<String> = None;
+            let mut off = base;
+            for t in &nodes[ci].inputs {
+                let c = *shapes[t].last().expect("concat input has channels");
+                let uses = uses_of(&nodes, &g.outputs, t);
+                let producer = nodes[..ci].iter().find(|n| n.output == *t);
+                let why = if uses != 1 {
+                    Some(format!("{t:?} has {uses} consumers"))
+                } else if *t == g.input_name || producer.is_none() {
+                    Some(format!("{t:?} is the graph input"))
+                } else {
+                    let p = producer.expect("checked above");
+                    let capable = matches!(
+                        p.op,
+                        Op::Conv2d { .. } | Op::MaxPool2d { .. } | Op::Upsample2x
+                            | Op::Concat
+                    ) || ActKind::from_op(&p.op).is_some();
+                    if capable {
+                        None
+                    } else {
+                        Some(format!(
+                            "{t:?} produced by {} ({}, no strided write path)",
+                            p.name,
+                            p.op.name()
+                        ))
+                    }
+                };
+                match why {
+                    Some(w) => {
+                        fallback = Some(w);
+                        break;
+                    }
+                    None => stripes.push((t.clone(), off)),
+                }
+                off += c;
+            }
+            match fallback {
+                Some(w) => {
+                    concat_fallbacks.push(format!("{}: copy fallback — {w}", nodes[ci].name))
+                }
+                None => {
+                    for (t, o) in stripes {
+                        placement.insert(t, (root.clone(), o));
+                    }
+                    nodes[ci].elide = true;
+                    in_place_concats += 1;
+                }
+            }
+        }
+        concat_fallbacks.reverse(); // report in topological order
+    }
+
     // remaining-use counts over the post-fusion node list (+1 per graph
     // output keeps output tensors bound for the plan's whole lifetime)
     let mut remaining: BTreeMap<String, usize> = BTreeMap::new();
@@ -447,7 +723,7 @@ pub fn build_plan_with(g: &Graph, opts: PlanOpts) -> Result<ExecPlan> {
         *remaining.entry(o.clone()).or_insert(0) += 1;
     }
 
-    // --- passes 2+3: in-place / alias lowering + slot assignment --------
+    // --- passes 4b+5: in-place / alias lowering + slot assignment -------
     let mut st = SlotState {
         sizes: Vec::new(),
         live: Vec::new(),
@@ -456,6 +732,10 @@ pub fn build_plan_with(g: &Graph, opts: PlanOpts) -> Result<ExecPlan> {
         remaining,
     };
     let mut instrs: Vec<Instr> = Vec::new();
+    // concat root tensor name → its (shared) arena slot, allocated by the
+    // first striped producer and kept live by the bindings of every stripe
+    // tensor plus, eventually, the concat output itself
+    let mut root_slots: BTreeMap<String, usize> = BTreeMap::new();
 
     let input_slot = st.alloc(per_batch(&g.input_name));
     st.bind(&g.input_name, input_slot, per_batch(&g.input_name));
@@ -468,6 +748,20 @@ pub fn build_plan_with(g: &Graph, opts: PlanOpts) -> Result<ExecPlan> {
             st.release(&n.inputs);
             continue;
         }
+        if n.elide {
+            // in-place concat: every producer already wrote its channel
+            // stripe of the root slot — bind the output, emit nothing
+            let root = match placement.get(&n.output) {
+                Some((r, _)) => r.clone(),
+                None => n.output.clone(),
+            };
+            let s = *root_slots
+                .get(&root)
+                .ok_or_else(|| anyhow!("plan: concat root {root:?} has no slot"))?;
+            st.bind(&n.output, s, per_batch(&root));
+            st.release(&n.inputs);
+            continue;
+        }
         let mut in_slots = Vec::with_capacity(n.inputs.len());
         for t in &n.inputs {
             in_slots.push(st.slot_of(t)?);
@@ -477,36 +771,66 @@ pub fn build_plan_with(g: &Graph, opts: PlanOpts) -> Result<ExecPlan> {
         let sole_last_use = st.remaining.get(&n.inputs[0]).copied() == Some(1)
             && st.live[in_slots[0]] == 1;
         // gate on ActKind::from_op — the same mapping the executor
-        // dispatches through — so the two can never drift apart
-        if opts.in_place && ActKind::from_op(&n.op).is_some() && sole_last_use {
+        // dispatches through — so the two can never drift apart. Striped
+        // outputs never lower in place: they must land in the concat slot.
+        if opts.in_place
+            && ActKind::from_op(&n.op).is_some()
+            && sole_last_use
+            && !placement.contains_key(&n.output)
+        {
             let s = in_slots[0];
             st.bind(&n.output, s, per_batch(&n.output));
             instrs.push(Instr {
                 name: n.name.clone(),
                 op: n.op.clone(),
                 fused: None,
+                fused_add: false,
+                fused_post: None,
                 in_slots,
                 in_tails,
                 out_slot: s,
                 out_tail: tail_of(&n.output),
+                out_view: None,
                 in_place: true,
             });
             st.release(&n.inputs);
             continue;
         }
 
-        // general case: fresh (recycled) output slot, inputs still bound
-        // during allocation so an instruction never writes over a live input
-        let out = st.alloc(per_batch(&n.output));
-        st.bind(&n.output, out, per_batch(&n.output));
+        // output placement: a channel stripe of a concat root slot, or a
+        // fresh (recycled) slot. Inputs stay bound during allocation so an
+        // instruction never writes over a live input.
+        let (out_slot, out_view) = match placement.get(&n.output) {
+            Some((root, off)) => {
+                let s = match root_slots.get(root) {
+                    Some(&s) => s,
+                    None => {
+                        let s = st.alloc(per_batch(root));
+                        root_slots.insert(root.clone(), s);
+                        s
+                    }
+                };
+                st.bind(&n.output, s, per_batch(root));
+                let stride = *shapes[root].last().expect("concat root has channels");
+                (s, Some(ChanView { stride, off: *off }))
+            }
+            None => {
+                let s = st.alloc(per_batch(&n.output));
+                st.bind(&n.output, s, per_batch(&n.output));
+                (s, None)
+            }
+        };
         instrs.push(Instr {
             name: n.name.clone(),
             op: n.op.clone(),
             fused: n.fused,
+            fused_add: n.fused_add,
+            fused_post: n.fused_post,
             in_slots,
             in_tails,
-            out_slot: out,
+            out_slot,
             out_tail: tail_of(&n.output),
+            out_view,
             in_place: false,
         });
         st.release(&n.inputs);
@@ -524,6 +848,8 @@ pub fn build_plan_with(g: &Graph, opts: PlanOpts) -> Result<ExecPlan> {
         input_tail: tail_of(&g.input_name),
         outputs,
         nominal_batch: g.input_shape[0],
+        in_place_concats,
+        concat_fallbacks,
     };
     // every produced plan passes the same invariant check the executor
     // re-runs per request (see ExecPlan::validate)
@@ -590,11 +916,161 @@ mod tests {
     #[test]
     fn fusion_opt_out_keeps_standalone_activations() {
         let g = tiny_test_graph(false);
-        let opts = PlanOpts { fuse_activations: false, in_place: false };
-        let plan = build_plan_with(&g, opts).unwrap();
+        let plan = build_plan_with(&g, PlanOpts::none()).unwrap();
         assert_eq!(plan.instrs.len(), g.nodes.len());
         assert_eq!(plan.fused_instrs(), 0);
         assert_eq!(plan.in_place_instrs(), 0);
+        assert_eq!(plan.fused_add_instrs(), 0);
+        assert_eq!(plan.in_place_concats, 0);
+    }
+
+    /// conv → add → relu (the ResNet block tail): the add folds into the
+    /// conv's epilogue as a second accumulator, the relu folds in after it,
+    /// and the whole block costs one instruction and one slot fewer.
+    #[test]
+    fn residual_add_and_post_activation_fuse_into_conv() {
+        let mut b = GraphBuilder::new("res", [1, 8, 8, 3], 5);
+        let c1 = b.conv_named("c1", "input", 8, 3, 1, 1, QCfg::FP32, Some(Op::Relu));
+        let c2 = b.conv_named("c2", &c1, 8, 3, 1, 1, QCfg::FP32, None);
+        let s = b.add(&c2, &c1);
+        let r = b.act_named("tail", &s, Op::Relu);
+        let g = b.finish(vec![r]);
+        let plan = build_plan(&g).unwrap();
+        // c1 (+relu), c2 (+add +relu): two instructions total
+        assert_eq!(plan.instrs.len(), 2, "{:?}", plan.instrs);
+        assert_eq!(plan.fused_add_instrs(), 1);
+        let c2i = &plan.instrs[1];
+        assert!(c2i.fused_add);
+        assert_eq!(c2i.fused_post, Some(ActKind::Relu));
+        assert_eq!(c2i.fused, None);
+        assert_eq!(c2i.in_slots.len(), 2);
+        // the residual reads c1's slot; the output is a third, distinct slot
+        assert_eq!(c2i.in_slots[1], plan.instrs[0].out_slot);
+        assert!(c2i.in_slots.iter().all(|&s| s != c2i.out_slot));
+        // and the fused plan needs strictly less arena than the unfused one
+        let unfused = build_plan_with(&g, PlanOpts::none()).unwrap();
+        assert!(
+            plan.arena_elems(1) < unfused.arena_elems(1),
+            "fused {} !< unfused {}",
+            plan.arena_elems(1),
+            unfused.arena_elems(1)
+        );
+    }
+
+    /// conv → silu → add (the YOLO bottleneck order): the activation fuses
+    /// first, then the add; the epilogue applies act *before* the residual.
+    #[test]
+    fn pre_activation_then_residual_add_fuses() {
+        let q = QCfg::new(2, 2);
+        let mut b = GraphBuilder::new("yolo", [1, 8, 8, 3], 6);
+        let c1 = b.conv_named("c1", "input", 8, 1, 1, 0, q, Some(Op::Silu));
+        let c2 = b.conv_named("c2", &c1, 8, 3, 1, 1, q, Some(Op::Silu));
+        let s = b.add(&c2, &c1);
+        let g = b.finish(vec![s]);
+        let plan = build_plan(&g).unwrap();
+        assert_eq!(plan.instrs.len(), 2);
+        let c2i = &plan.instrs[1];
+        assert_eq!(c2i.fused, Some(ActKind::Silu));
+        assert!(c2i.fused_add);
+        assert_eq!(c2i.fused_post, None);
+    }
+
+    /// An add whose conv operand comes *after* the other operand's producer
+    /// fuses into that later conv, even when the conv is the add's second
+    /// input (the ResNet downsample branch).
+    #[test]
+    fn add_fuses_into_whichever_conv_runs_last() {
+        let mut b = GraphBuilder::new("down", [1, 8, 8, 3], 7);
+        let c2 = b.conv_named("c2", "input", 8, 3, 2, 1, QCfg::FP32, None);
+        let down = b.conv_named("down", "input", 8, 1, 2, 0, QCfg::FP32, None);
+        let s = b.add(&c2, &down);
+        let g = b.finish(vec![s]);
+        let plan = build_plan(&g).unwrap();
+        assert_eq!(plan.fused_add_instrs(), 1);
+        // `down` runs after `c2`, so it absorbs the add
+        let fused = plan.instrs.iter().find(|i| i.fused_add).unwrap();
+        assert_eq!(fused.name, "down");
+    }
+
+    /// Residual fusion must not fire when the skip tensor isn't live yet
+    /// (produced after the conv) or when the conv output has other uses.
+    #[test]
+    fn residual_fusion_requires_live_skip_and_sole_use() {
+        // conv out also a graph output: two uses, no fusion
+        let mut b = GraphBuilder::new("multiuse", [1, 8, 8, 3], 8);
+        let c = b.conv_named("c", "input", 3, 3, 1, 1, QCfg::FP32, None);
+        let s = b.add(&c, "input");
+        let g = b.finish(vec![s, c.clone()]);
+        let plan = build_plan(&g).unwrap();
+        assert_eq!(plan.fused_add_instrs(), 0);
+        assert!(plan.instrs.iter().any(|i| matches!(i.op, Op::Add)));
+    }
+
+    /// Every producer of the concat is a sole-consumer conv/pool: the
+    /// concat is elided and each producer writes a channel stripe of the
+    /// shared root slot.
+    #[test]
+    fn concat_producers_write_stripes_in_place() {
+        let q = QCfg::new(2, 2);
+        let mut b = GraphBuilder::new("cat", [1, 8, 8, 3], 9);
+        let c1 = b.conv_named("c1", "input", 4, 3, 1, 1, q, Some(Op::Relu));
+        let c2 = b.conv_named("c2", "input", 6, 3, 1, 1, QCfg::FP32, None);
+        let cat = b.concat(&[&c1, &c2]);
+        let g = b.finish(vec![cat]);
+        let plan = build_plan(&g).unwrap();
+        assert_eq!(plan.in_place_concats, 1);
+        assert!(plan.concat_fallbacks.is_empty(), "{:?}", plan.concat_fallbacks);
+        assert!(plan.instrs.iter().all(|i| !matches!(i.op, Op::Concat)));
+        let v1 = plan.instrs[0].out_view.expect("c1 striped");
+        let v2 = plan.instrs[1].out_view.expect("c2 striped");
+        assert_eq!((v1.stride, v1.off), (10, 0));
+        assert_eq!((v2.stride, v2.off), (10, 4));
+        assert_eq!(plan.instrs[0].out_slot, plan.instrs[1].out_slot);
+        // no copy pass and no per-producer slots: fused arena is smaller
+        let unfused = build_plan_with(&g, PlanOpts::none()).unwrap();
+        assert!(plan.arena_elems(1) < unfused.arena_elems(1));
+    }
+
+    /// Concat-of-concat composes: the inner concat's producers stripe
+    /// straight into the outer root slot at compound offsets.
+    #[test]
+    fn nested_concats_compose_stripes_on_one_root() {
+        let mut b = GraphBuilder::new("nest", [1, 8, 8, 3], 10);
+        let a = b.conv_named("a", "input", 2, 1, 1, 0, QCfg::FP32, None);
+        let c = b.conv_named("c", "input", 3, 1, 1, 0, QCfg::FP32, None);
+        let inner = b.concat(&[&a, &c]);
+        let d = b.conv_named("d", "input", 4, 1, 1, 0, QCfg::FP32, None);
+        let outer = b.concat(&[&d, &inner]);
+        let g = b.finish(vec![outer]);
+        let plan = build_plan(&g).unwrap();
+        assert_eq!(plan.in_place_concats, 2);
+        assert!(plan.instrs.iter().all(|i| !matches!(i.op, Op::Concat)));
+        // one root slot, stripes at 0 (d), 4 (a), 6 (c), all stride 9
+        let views: Vec<ChanView> =
+            plan.instrs.iter().map(|i| i.out_view.expect("striped")).collect();
+        assert!(views.iter().all(|v| v.stride == 9));
+        let mut offs: Vec<usize> = views.iter().map(|v| v.off).collect();
+        offs.sort_unstable();
+        assert_eq!(offs, vec![0, 4, 6]);
+        let slots: Vec<usize> = plan.instrs.iter().map(|i| i.out_slot).collect();
+        assert!(slots.windows(2).all(|w| w[0] == w[1]));
+    }
+
+    /// A multi-use producer (the SPPF pattern) forces the copy fallback,
+    /// and the reason is recorded for `inspect --plan`.
+    #[test]
+    fn multi_use_concat_producer_falls_back_with_reason() {
+        let mut b = GraphBuilder::new("sppf", [1, 8, 8, 3], 11);
+        let c = b.conv_named("c", "input", 4, 1, 1, 0, QCfg::FP32, None);
+        let p = b.maxpool(&c, 3, 1, 1); // c feeds both pool and concat
+        let cat = b.concat(&[&c, &p]);
+        let g = b.finish(vec![cat]);
+        let plan = build_plan(&g).unwrap();
+        assert_eq!(plan.in_place_concats, 0);
+        assert_eq!(plan.concat_fallbacks.len(), 1);
+        assert!(plan.concat_fallbacks[0].contains("2 consumers"),
+                "{:?}", plan.concat_fallbacks);
+        assert!(plan.instrs.iter().any(|i| matches!(i.op, Op::Concat)));
     }
 
     #[test]

@@ -328,6 +328,55 @@ pub fn dequant_scale_bias_act(
     }
 }
 
+/// The general conv epilogue for the quantized engines (bitserial *and*
+/// int8 share it): one pass over the i32 accumulator performing, in order,
+/// dequant → per-channel scale/bias → optional pre-add activation →
+/// optional **two-accumulator residual add** (`+ res[i]`, the planner's
+/// Add/residual fusion) → optional post-add activation — written either
+/// densely or into a channel stripe of a wider output row
+/// (`out_stride`/`out_off`, the planner's concat-in-place lowering; pass
+/// `out_stride == cout`, `out_off == 0` for a dense output).
+///
+/// Every float op matches the unfused sequence
+/// `dequant_scale_bias → act → elementwise add → act` exactly, so fusion
+/// stays bit-identical to the reference interpreter.
+#[allow(clippy::too_many_arguments)]
+pub fn dequant_scale_bias_add_act(
+    acc: &[i32],
+    cout: usize,
+    s_aw: f32,
+    scale: &[f32],
+    bias: &[f32],
+    act: Option<crate::kernels::elementwise::ActKind>,
+    res: Option<&[f32]>,
+    post: Option<crate::kernels::elementwise::ActKind>,
+    out: &mut [f32],
+    out_stride: usize,
+    out_off: usize,
+) {
+    debug_assert!(out_off + cout <= out_stride);
+    debug_assert_eq!(acc.len() % cout, 0);
+    let rows = acc.len() / cout;
+    debug_assert!(res.map(|r| r.len() == rows * cout).unwrap_or(true));
+    debug_assert!(out.len() >= rows.saturating_sub(1) * out_stride + out_off + cout);
+    for (r, row_a) in acc.chunks(cout).enumerate() {
+        let row_o = &mut out[r * out_stride + out_off..][..cout];
+        for c in 0..cout {
+            let mut v = (row_a[c] as f32 * s_aw) * scale[c] + bias[c];
+            if let Some(a) = act {
+                v = a.apply_scalar(v);
+            }
+            if let Some(res) = res {
+                v += res[r * cout + c];
+            }
+            if let Some(p) = post {
+                v = p.apply_scalar(v);
+            }
+            row_o[c] = v;
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -518,6 +567,67 @@ mod tests {
             let mut fused = vec![0.0f32; rows * cout];
             dequant_scale_bias_act(&acc, cout, 0.031, &scale, &bias, Some(act), &mut fused);
             assert_eq!(fused, unfused, "fused {} epilogue diverged", act.name());
+        }
+    }
+
+    #[test]
+    fn two_accumulator_epilogue_matches_unfused_composition() {
+        // dequant → act → residual add → post-act, fused in one accumulator
+        // pass, must equal the four standalone passes bit for bit — and the
+        // strided write must place the same values in its channel stripe.
+        use crate::kernels::elementwise::{self as ew, ActKind};
+        let mut rng = crate::util::rng::Rng::new(41);
+        let (rows, cout) = (11, 7);
+        let acc: Vec<i32> = (0..rows * cout).map(|_| rng.range(-300, 300) as i32).collect();
+        let scale: Vec<f32> = (0..cout).map(|_| rng.normal()).collect();
+        let bias: Vec<f32> = (0..cout).map(|_| rng.normal()).collect();
+        let res: Vec<f32> = (0..rows * cout).map(|_| rng.normal()).collect();
+        for (act, post) in [
+            (None, Some(ActKind::Relu)),               // resnet order: add then act
+            (Some(ActKind::Silu), None),               // yolo order: act then add
+            (Some(ActKind::Relu), Some(ActKind::Relu6)), // both
+            (None, None),
+        ] {
+            let mut want = vec![0.0f32; rows * cout];
+            dequant_scale_bias_act(&acc, cout, 0.07, &scale, &bias, act, &mut want);
+            let mut tmp = vec![0.0f32; rows * cout];
+            ew::add(&want.clone(), &res, &mut tmp);
+            want = tmp;
+            if let Some(p) = post {
+                p.apply(&mut want);
+            }
+            let mut fused = vec![0.0f32; rows * cout];
+            dequant_scale_bias_add_act(&acc, cout, 0.07, &scale, &bias, act, Some(&res),
+                                       post, &mut fused, cout, 0);
+            assert_eq!(fused, want, "act={act:?} post={post:?}");
+
+            // strided: same values land at column 3 of 16-wide rows
+            let (stride, off) = (16usize, 3usize);
+            let mut strided = vec![0.0f32; rows * stride];
+            dequant_scale_bias_add_act(&acc, cout, 0.07, &scale, &bias, act, Some(&res),
+                                       post, &mut strided, stride, off);
+            for r in 0..rows {
+                assert_eq!(&strided[r * stride + off..][..cout], &want[r * cout..][..cout]);
+            }
+        }
+    }
+
+    #[test]
+    fn general_epilogue_no_res_matches_specialized() {
+        // with res=None and a dense view the general path must reproduce
+        // dequant_scale_bias_act exactly (the executor switches between them)
+        let mut rng = crate::util::rng::Rng::new(43);
+        let (rows, cout) = (9, 5);
+        let acc: Vec<i32> = (0..rows * cout).map(|_| rng.range(-300, 300) as i32).collect();
+        let scale: Vec<f32> = (0..cout).map(|_| rng.normal()).collect();
+        let bias: Vec<f32> = (0..cout).map(|_| rng.normal()).collect();
+        for act in [None, Some(crate::kernels::elementwise::ActKind::Silu)] {
+            let mut want = vec![0.0f32; rows * cout];
+            dequant_scale_bias_act(&acc, cout, 0.031, &scale, &bias, act, &mut want);
+            let mut got = vec![0.0f32; rows * cout];
+            dequant_scale_bias_add_act(&acc, cout, 0.031, &scale, &bias, act, None, None,
+                                       &mut got, cout, 0);
+            assert_eq!(got, want);
         }
     }
 

@@ -137,6 +137,32 @@ pub fn concat_channels(inputs: &[(&[f32], usize)], rows: usize, out: &mut [f32])
     }
 }
 
+/// Apply `kind` to `rows` rows of `c_in` channels from `src`, writing the
+/// results into the channel stripe `[c_off, c_off + c_in)` of the
+/// `rows × c_out` output — a standalone activation lowered to write
+/// directly into its consuming concat's slot. Dispatches through
+/// [`ActKind::apply`] on each stripe row, so the float ops are identical
+/// to the dense copy-then-apply path (activations are elementwise; row
+/// grouping cannot change results).
+pub fn act_channels(
+    kind: ActKind,
+    src: &[f32],
+    c_in: usize,
+    c_out: usize,
+    c_off: usize,
+    rows: usize,
+    out: &mut [f32],
+) {
+    debug_assert!(c_off + c_in <= c_out);
+    debug_assert_eq!(src.len(), rows * c_in);
+    debug_assert!(out.len() >= rows.saturating_sub(1) * c_out + c_off + c_in);
+    for r in 0..rows {
+        let dst = &mut out[r * c_out + c_off..][..c_in];
+        dst.copy_from_slice(&src[r * c_in..(r + 1) * c_in]);
+        kind.apply(dst);
+    }
+}
+
 /// Copy one concat input into its channel stripe of the output: `rows` rows
 /// of `c_in` channels from `src` land in columns `[c_off, c_off + c_in)` of
 /// the `rows × c_out` output. The planned executor calls this once per
@@ -197,6 +223,27 @@ mod tests {
         copy_channels(&a, 2, 3, 0, 2, &mut out2);
         copy_channels(&b, 1, 3, 2, 2, &mut out2);
         assert_eq!(out2, out);
+    }
+
+    #[test]
+    fn act_channels_matches_copy_then_apply() {
+        let mut rng = crate::util::rng::Rng::new(37);
+        let (rows, c) = (6usize, 4usize);
+        let src: Vec<f32> = (0..rows * c).map(|_| rng.normal()).collect();
+        for kind in [ActKind::Relu, ActKind::Silu, ActKind::LeakyRelu] {
+            let mut want = src.clone();
+            kind.apply(&mut want);
+            let (stride, off) = (9usize, 3usize);
+            let mut out = vec![0.0f32; rows * stride];
+            act_channels(kind, &src, c, stride, off, rows, &mut out);
+            for r in 0..rows {
+                assert_eq!(&out[r * stride + off..][..c], &want[r * c..][..c]);
+            }
+            // dense parameters reproduce the plain apply
+            let mut dense = vec![0.0f32; rows * c];
+            act_channels(kind, &src, c, c, 0, rows, &mut dense);
+            assert_eq!(dense, want);
+        }
     }
 
     #[test]

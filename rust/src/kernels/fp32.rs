@@ -167,6 +167,54 @@ pub fn scale_bias_rows_act(
     }
 }
 
+/// The fp32 engine's general conv epilogue — [`scale_bias_rows_act`]'s
+/// **two-accumulator** variant: reads the raw GEMM result from `src` and
+/// writes `post(act(src*scale + bias) + res)` (each stage optional) into
+/// `out`, either densely (`out_stride == cout`, `out_off == 0`) or into a
+/// channel stripe of a wider row — the planner's Add/residual fusion and
+/// concat-in-place lowering for FP32 convs. `src` may not alias `out`
+/// (the strided path runs GEMM into scratch first).
+///
+/// Float ops and their order match the unfused
+/// `scale_bias_rows → act → add → act` sequence exactly (bit-identical).
+#[allow(clippy::too_many_arguments)]
+pub fn scale_bias_rows_add_act(
+    src: &[f32],
+    cout: usize,
+    scale: &[f32],
+    bias: &[f32],
+    act: Option<crate::kernels::elementwise::ActKind>,
+    res: Option<&[f32]>,
+    post: Option<crate::kernels::elementwise::ActKind>,
+    out: &mut [f32],
+    out_stride: usize,
+    out_off: usize,
+) {
+    debug_assert_eq!(scale.len(), cout);
+    debug_assert_eq!(bias.len(), cout);
+    debug_assert!(out_off + cout <= out_stride);
+    debug_assert_eq!(src.len() % cout, 0);
+    let rows = src.len() / cout;
+    debug_assert!(res.map(|r| r.len() == rows * cout).unwrap_or(true));
+    debug_assert!(out.len() >= rows.saturating_sub(1) * out_stride + out_off + cout);
+    for (r, row_s) in src.chunks(cout).enumerate() {
+        let row_o = &mut out[r * out_stride + out_off..][..cout];
+        for c in 0..cout {
+            let mut v = row_s[c] * scale[c] + bias[c];
+            if let Some(a) = act {
+                v = a.apply_scalar(v);
+            }
+            if let Some(res) = res {
+                v += res[r * cout + c];
+            }
+            if let Some(p) = post {
+                v = p.apply_scalar(v);
+            }
+            row_o[c] = v;
+        }
+    }
+}
+
 /// Dense layer forward: `x` is rows×cin, `w` is cin×cout row-major (the
 /// export layout), `b` has cout entries. Output rows are split across the
 /// persistent worker pool exactly like the conv GEMMs (each worker owns a
@@ -262,6 +310,51 @@ mod tests {
             scale_bias_rows_act(&mut fused, cout, &scale, &bias, Some(act));
             assert_eq!(fused, unfused, "fused {} diverged", act.name());
         }
+    }
+
+    #[test]
+    fn two_accumulator_epilogue_matches_unfused_composition() {
+        use crate::kernels::elementwise::{self as ew, ActKind};
+        let mut rng = Rng::new(29);
+        let (rows, cout) = (10, 6);
+        let src: Vec<f32> = (0..rows * cout).map(|_| rng.normal()).collect();
+        let scale: Vec<f32> = (0..cout).map(|_| rng.normal()).collect();
+        let bias: Vec<f32> = (0..cout).map(|_| rng.normal()).collect();
+        let res: Vec<f32> = (0..rows * cout).map(|_| rng.normal()).collect();
+        for (act, post) in [
+            (None, Some(ActKind::Relu)),
+            (Some(ActKind::Silu), None),
+            (Some(ActKind::LeakyRelu), Some(ActKind::Sigmoid)),
+            (None, None),
+        ] {
+            let mut want = src.clone();
+            scale_bias_rows_act(&mut want, cout, &scale, &bias, act);
+            let mut tmp = vec![0.0f32; rows * cout];
+            ew::add(&want, &res, &mut tmp);
+            want = tmp;
+            if let Some(p) = post {
+                p.apply(&mut want);
+            }
+            let mut fused = vec![0.0f32; rows * cout];
+            scale_bias_rows_add_act(&src, cout, &scale, &bias, act, Some(&res), post,
+                                    &mut fused, cout, 0);
+            assert_eq!(fused, want, "act={act:?} post={post:?}");
+
+            let (stride, off) = (13usize, 4usize);
+            let mut strided = vec![0.0f32; rows * stride];
+            scale_bias_rows_add_act(&src, cout, &scale, &bias, act, Some(&res), post,
+                                    &mut strided, stride, off);
+            for r in 0..rows {
+                assert_eq!(&strided[r * stride + off..][..cout], &want[r * cout..][..cout]);
+            }
+        }
+        // res=None must reproduce the in-place specialized path exactly
+        let mut want = src.clone();
+        scale_bias_rows_act(&mut want, cout, &scale, &bias, Some(ActKind::Relu6));
+        let mut got = vec![0.0f32; rows * cout];
+        scale_bias_rows_add_act(&src, cout, &scale, &bias, Some(ActKind::Relu6), None, None,
+                                &mut got, cout, 0);
+        assert_eq!(got, want);
     }
 
     #[test]

@@ -14,8 +14,30 @@ pub fn maxpool2d(
     padding: [usize; 2],
     out: &mut [f32],
 ) {
+    maxpool2d_strided(x, n, h, w, c, kernel, stride, padding, out, c, 0);
+}
+
+/// [`maxpool2d`] writing each output pixel's `c` channels at column
+/// `out_off` of a row `out_stride` wide — the concat-in-place lowering's
+/// stride-aware write path (`out_stride == c`, `out_off == 0` is dense).
+/// Same taps, same compare order: bit-identical to the dense pool.
+#[allow(clippy::too_many_arguments)]
+pub fn maxpool2d_strided(
+    x: &[f32],
+    n: usize,
+    h: usize,
+    w: usize,
+    c: usize,
+    kernel: [usize; 2],
+    stride: [usize; 2],
+    padding: [usize; 2],
+    out: &mut [f32],
+    out_stride: usize,
+    out_off: usize,
+) {
     let (oh, ow) = conv_out_hw(h, w, kernel, stride, padding);
-    debug_assert_eq!(out.len(), n * oh * ow * c);
+    debug_assert!(out_off + c <= out_stride);
+    debug_assert!(out.len() >= (n * oh * ow).saturating_sub(1) * out_stride + out_off + c);
     let (ph, pw) = (padding[0] as isize, padding[1] as isize);
     for ni in 0..n {
         let xn = &x[ni * h * w * c..][..h * w * c];
@@ -23,7 +45,7 @@ pub fn maxpool2d(
             let iy0 = (oy * stride[0]) as isize - ph;
             for ox in 0..ow {
                 let ix0 = (ox * stride[1]) as isize - pw;
-                let obase = ((ni * oh + oy) * ow + ox) * c;
+                let obase = ((ni * oh + oy) * ow + ox) * out_stride + out_off;
                 let orow = &mut out[obase..obase + c];
                 orow.fill(f32::NEG_INFINITY);
                 for ky in 0..kernel[0] {
@@ -71,7 +93,24 @@ pub fn global_avg_pool(x: &[f32], n: usize, h: usize, w: usize, c: usize, out: &
 
 /// Nearest-neighbor 2x upsample.
 pub fn upsample2x(x: &[f32], n: usize, h: usize, w: usize, c: usize, out: &mut [f32]) {
-    debug_assert_eq!(out.len(), n * 4 * h * w * c);
+    upsample2x_strided(x, n, h, w, c, out, c, 0);
+}
+
+/// [`upsample2x`] with stride-aware writes into a channel stripe of a
+/// wider output row (see [`maxpool2d_strided`]).
+#[allow(clippy::too_many_arguments)]
+pub fn upsample2x_strided(
+    x: &[f32],
+    n: usize,
+    h: usize,
+    w: usize,
+    c: usize,
+    out: &mut [f32],
+    out_stride: usize,
+    out_off: usize,
+) {
+    debug_assert!(out_off + c <= out_stride);
+    debug_assert!(out.len() >= (n * 4 * h * w).saturating_sub(1) * out_stride + out_off + c);
     let (oh, ow) = (2 * h, 2 * w);
     for ni in 0..n {
         for oy in 0..oh {
@@ -79,7 +118,7 @@ pub fn upsample2x(x: &[f32], n: usize, h: usize, w: usize, c: usize, out: &mut [
             for ox in 0..ow {
                 let ix = ox / 2;
                 let src = ((ni * h + iy) * w + ix) * c;
-                let dst = ((ni * oh + oy) * ow + ox) * c;
+                let dst = ((ni * oh + oy) * ow + ox) * out_stride + out_off;
                 out[dst..dst + c].copy_from_slice(&x[src..src + c]);
             }
         }
@@ -114,6 +153,33 @@ mod tests {
         let mut out = vec![0.0; 2];
         global_avg_pool(&x, 1, 2, 2, 2, &mut out);
         assert_eq!(out, vec![4.0, 25.0]);
+    }
+
+    #[test]
+    fn strided_writes_match_dense() {
+        // pool/upsample stride-aware writes place bit-identical values in
+        // their channel stripe of a wider row (concat-in-place lowering)
+        let mut rng = crate::util::rng::Rng::new(31);
+        let (n, h, w, c) = (2usize, 5usize, 4usize, 3usize);
+        let x: Vec<f32> = (0..n * h * w * c).map(|_| rng.normal()).collect();
+        let (stride, off) = (8usize, 2usize);
+
+        let (oh, ow) = conv_out_hw(h, w, [2, 2], [2, 2], [1, 1]);
+        let mut dense = vec![0.0f32; n * oh * ow * c];
+        maxpool2d(&x, n, h, w, c, [2, 2], [2, 2], [1, 1], &mut dense);
+        let mut strided = vec![0.0f32; n * oh * ow * stride];
+        maxpool2d_strided(&x, n, h, w, c, [2, 2], [2, 2], [1, 1], &mut strided, stride, off);
+        for r in 0..n * oh * ow {
+            assert_eq!(&strided[r * stride + off..][..c], &dense[r * c..][..c], "pool row {r}");
+        }
+
+        let mut dense = vec![0.0f32; n * 4 * h * w * c];
+        upsample2x(&x, n, h, w, c, &mut dense);
+        let mut strided = vec![0.0f32; n * 4 * h * w * stride];
+        upsample2x_strided(&x, n, h, w, c, &mut strided, stride, off);
+        for r in 0..n * 4 * h * w {
+            assert_eq!(&strided[r * stride + off..][..c], &dense[r * c..][..c], "up row {r}");
+        }
     }
 
     #[test]

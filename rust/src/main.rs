@@ -198,6 +198,10 @@ fn cmd_inspect(args: &Args) -> Result<()> {
             p.in_place_instrs(),
             p.slot_sizes.len()
         );
+        // greppable one-per-line counters (CI asserts on these)
+        println!("fused residual adds : {}", p.fused_add_instrs());
+        println!("in-place concats    : {}", p.in_place_concats);
+        println!("striped writers     : {}", p.strided_instrs());
         println!(
             "arena   : {} f32 elems ({} bytes) @ batch {} — interpreter peak {} ({} bytes)",
             p.arena_elems(p.nominal_batch),
@@ -206,14 +210,29 @@ fn cmd_inspect(args: &Args) -> Result<()> {
             peak,
             4 * peak
         );
+        for fb in &p.concat_fallbacks {
+            println!("concat fallback: {fb}");
+        }
         for (i, ins) in p.instrs.iter().enumerate() {
-            let fused = match ins.fused {
+            let mut fused = match ins.fused {
                 Some(a) => format!(" +{}", a.name()),
                 None => String::new(),
             };
+            if ins.fused_add {
+                fused.push_str(" +add");
+            }
+            if let Some(a) = ins.fused_post {
+                fused.push_str(&format!(" +{}", a.name()));
+            }
             let mode = if ins.in_place { " (in-place)" } else { "" };
+            let stripe = match ins.out_view {
+                Some(v) => format!(" stripe[{}..{}/{}]", v.off,
+                                   v.off + ins.out_tail.last().copied().unwrap_or(0),
+                                   v.stride),
+                None => String::new(),
+            };
             println!(
-                "  {i:>3}: {:<12} {:<24} in={:?} out={} {:?}{fused}{mode}",
+                "  {i:>3}: {:<12} {:<24} in={:?} out={} {:?}{fused}{stripe}{mode}",
                 ins.op.name(),
                 ins.name,
                 ins.in_slots,

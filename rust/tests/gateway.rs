@@ -49,6 +49,37 @@ fn default_cfg() -> ServerConfig {
     ServerConfig { max_wait: Duration::from_millis(1), ..ServerConfig::default() }
 }
 
+/// Value of one Prometheus series in an exposition-format body.
+fn metric_value(text: &str, series: &str) -> Option<f64> {
+    text.lines()
+        .filter(|l| !l.starts_with('#'))
+        .find_map(|l| l.strip_prefix(series).and_then(|rest| rest.trim().parse().ok()))
+}
+
+/// Deadline-poll `GET /metrics` until `pred` accepts the body; returns the
+/// accepted body. Panics (with the last body) on deadline — no fixed
+/// sleeps anywhere, so slow CI machines only make the test take longer,
+/// never fail.
+fn poll_metrics(addr: &str, deadline: Duration, pred: impl Fn(&str) -> bool) -> String {
+    let end = Instant::now() + deadline;
+    let mut last = String::new();
+    loop {
+        if let Ok(resp) = http_once(addr, "GET", "/metrics", "x", Vec::new()) {
+            if let Ok(body) = resp.body_str() {
+                if pred(body) {
+                    return body.to_string();
+                }
+                last = body.to_string();
+            }
+        }
+        assert!(
+            Instant::now() < end,
+            "metrics never satisfied the predicate; last body:\n{last}"
+        );
+        std::thread::sleep(Duration::from_millis(2));
+    }
+}
+
 #[test]
 fn healthz_and_model_listing() {
     let (gw, _reg, addr) = boot(default_cfg());
@@ -377,15 +408,14 @@ fn graceful_shutdown_drains_queued_requests() {
             })
             .collect();
 
-        // wait until every request is queued behind the window, then shut
-        // down mid-window: drain must execute them now, not at the
+        // wait (deadline-polling the public /metrics gauge, not internal
+        // state) until every request is queued behind the window, then
+        // shut down mid-window: drain must execute them now, not at the
         // window's 2s deadline
-        let entry = reg.get("tiny").unwrap();
-        let deadline = Instant::now() + Duration::from_secs(10);
-        while entry.server.queue_depth() < 4 && Instant::now() < deadline {
-            std::thread::sleep(Duration::from_millis(5));
-        }
-        assert_eq!(entry.server.queue_depth(), 4, "requests never queued");
+        poll_metrics(&addr, Duration::from_secs(10), |body| {
+            metric_value(body, "dlrt_model_queue_depth{model=\"tiny\"}") == Some(4.0)
+        });
+        assert_eq!(reg.get("tiny").unwrap().server.queue_depth(), 4);
         let t0 = Instant::now();
         gw.shutdown();
         assert!(
@@ -401,6 +431,99 @@ fn graceful_shutdown_drains_queued_requests() {
     assert!(
         http_once(&addr, "GET", "/healthz", "x", Vec::new()).is_err(),
         "listener still accepting after shutdown"
+    );
+}
+
+#[test]
+fn graceful_drain_under_concurrent_load() {
+    // shutdown while senders are actively hammering the gateway: every
+    // accepted (200) response must carry bit-correct output, no sender may
+    // hang, and the completion counter must cover every 200 we saw
+    let (gw, reg, addr) = boot(ServerConfig {
+        workers: 2,
+        max_batch: 4,
+        max_wait: Duration::from_millis(1),
+        ..ServerConfig::default()
+    });
+    let x = test_input(6);
+    let expect = {
+        let mut ex = Executor::new(1);
+        ex.run(&reg.get("tiny").unwrap().model, &x).unwrap()
+    };
+    let stop = std::sync::atomic::AtomicBool::new(false);
+
+    const SENDERS: usize = 4;
+    let oks: Vec<usize> = std::thread::scope(|scope| {
+        let handles: Vec<_> = (0..SENDERS)
+            .map(|_| {
+                let addr = addr.clone();
+                let x = x.clone();
+                let expect = &expect;
+                let stop = &stop;
+                scope.spawn(move || {
+                    let mut client = HttpClient::new(&addr, Duration::from_secs(30));
+                    let mut ok = 0usize;
+                    // bounded iterations so a wedged gateway fails loudly
+                    // instead of hanging the suite
+                    for _ in 0..2000 {
+                        if stop.load(std::sync::atomic::Ordering::Relaxed) {
+                            break;
+                        }
+                        let req = Request::with_body(
+                            "POST",
+                            "/v1/models/tiny/infer",
+                            "application/octet-stream",
+                            raw_bytes(&x),
+                        );
+                        match client.send(&req) {
+                            Ok(resp) if resp.status == 200 => {
+                                assert_eq!(
+                                    f32s(&resp.body),
+                                    expect[0].data,
+                                    "drained response corrupted"
+                                );
+                                ok += 1;
+                            }
+                            Ok(resp) => {
+                                // only load-shedding statuses are legal
+                                assert!(
+                                    resp.status == 429 || resp.status == 503,
+                                    "unexpected status {}",
+                                    resp.status
+                                );
+                            }
+                            // listener closed mid-drain: the sender is done
+                            Err(_) => break,
+                        }
+                    }
+                    ok
+                })
+            })
+            .collect();
+
+        // wait until real traffic is flowing (public metrics, no sleeps),
+        // then drain under load
+        poll_metrics(&addr, Duration::from_secs(10), |body| {
+            metric_value(body, "dlrt_model_completed_total{model=\"tiny\"}")
+                .is_some_and(|v| v >= 8.0)
+        });
+        gw.shutdown();
+        stop.store(true, std::sync::atomic::Ordering::Relaxed);
+        handles.into_iter().map(|h| h.join().unwrap()).collect()
+    });
+
+    let ok_total: usize = oks.iter().sum();
+    assert!(ok_total >= 8, "hardly any request completed: {oks:?}");
+    // every 200 the clients saw corresponds to completed server work
+    let completed = reg.get("tiny").unwrap().server.metrics().completed;
+    assert!(
+        completed >= ok_total,
+        "completed counter {completed} below client-observed successes {ok_total}"
+    );
+    // the port is closed afterwards
+    assert!(
+        http_once(&addr, "GET", "/healthz", "x", Vec::new()).is_err(),
+        "listener still accepting after drain"
     );
 }
 

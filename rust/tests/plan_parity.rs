@@ -87,16 +87,101 @@ fn unfused_plan_matches_fused_plan() {
     let g = multi_op_graph();
     let fused = compile_graph(&g, EngineChoice::Auto).unwrap();
     let mut unfused = fused.clone();
-    unfused.plan =
-        build_plan_with(&g, PlanOpts { fuse_activations: false, in_place: false }).unwrap();
+    unfused.plan = build_plan_with(&g, PlanOpts::none()).unwrap();
     assert!(fused.plan.fused_instrs() > 0);
+    assert!(fused.plan.fused_add_instrs() > 0);
     assert_eq!(unfused.plan.fused_instrs(), 0);
+    assert_eq!(unfused.plan.fused_add_instrs(), 0);
+    assert_eq!(unfused.plan.in_place_concats, 0);
     assert!(unfused.plan.instrs.len() > fused.plan.instrs.len());
     let x = smooth_input(vec![1, 8, 8, 3]);
     let mut ex = Executor::new(1);
     let y_fused = ex.run(&fused, &x).unwrap();
     let y_unfused = ex.run(&unfused, &x).unwrap();
     assert_bit_identical(&y_fused, &y_unfused, "fused vs unfused plan");
+    // every single-pass combination agrees too (passes compose freely)
+    for opts in [
+        PlanOpts { fuse_residual_add: false, ..PlanOpts::default() },
+        PlanOpts { concat_in_place: false, ..PlanOpts::default() },
+        PlanOpts { fuse_activations: false, in_place: false, ..PlanOpts::default() },
+    ] {
+        let mut m = fused.clone();
+        m.plan = build_plan_with(&g, opts).unwrap();
+        let y = ex.run(&m, &x).unwrap();
+        assert_bit_identical(&y, &y_fused, &format!("{opts:?}"));
+    }
+}
+
+/// Directed: a residual chain whose skip operand is the network input
+/// itself — the residual slot is the input slot, which outlives the conv.
+#[test]
+fn residual_skip_from_network_input_fuses_and_matches() {
+    let q = QCfg::new(2, 2);
+    let mut b = GraphBuilder::new("skipin", [1, 8, 8, 3], 21);
+    let c = b.conv_named("c", "input", 3, 3, 1, 1, q, None);
+    let s = b.add(&c, "input");
+    let r = b.act_named("r", &s, Op::Relu);
+    let g = b.finish(vec![r]);
+    for engine in [EngineChoice::Auto, EngineChoice::ForceFp32, EngineChoice::ForceInt8] {
+        let model = compile_graph(&g, engine).unwrap();
+        assert_eq!(model.plan.fused_add_instrs(), 1, "{engine:?}");
+        assert_eq!(model.plan.instrs.len(), 1, "{engine:?}: conv absorbs add+relu");
+        let x = smooth_input(vec![1, 8, 8, 3]);
+        for nthreads in [1usize, 3] {
+            let mut ex = Executor::new(nthreads);
+            let got = ex.run(&model, &x).unwrap();
+            let want = reference::run_unfused(&model, &x, nthreads).unwrap();
+            assert_bit_identical(&got, &want, &format!("skipin/{engine:?}/t{nthreads}"));
+        }
+    }
+}
+
+/// Directed: concat whose producers run different engines / bit-widths —
+/// stripes interleave a 1A1W bitserial conv, an FP32 conv, and an int8-able
+/// 3A3W conv into one slot.
+#[test]
+fn mixed_bit_width_concat_producers_stripe_in_place() {
+    let mut b = GraphBuilder::new("mixcat", [1, 8, 8, 3], 22);
+    let a = b.conv_named("a", "input", 4, 3, 1, 1, QCfg::new(1, 1), Some(Op::Relu));
+    let c = b.conv_named("c", "input", 5, 1, 1, 0, QCfg::FP32, None);
+    let d = b.conv_named("d", "input", 3, 3, 1, 1, QCfg::new(3, 3), Some(Op::Silu));
+    let cat = b.concat(&[&a, &c, &d]);
+    let g = b.finish(vec![cat]);
+    for engine in [EngineChoice::Auto, EngineChoice::ForceFp32, EngineChoice::ForceInt8] {
+        let model = compile_graph(&g, engine).unwrap();
+        assert_eq!(model.plan.in_place_concats, 1, "{engine:?}");
+        assert_eq!(model.plan.strided_instrs(), 3, "{engine:?}");
+        assert!(model.plan.instrs.iter().all(|i| !matches!(i.op, Op::Concat)));
+        let x = smooth_input(vec![1, 8, 8, 3]);
+        for nthreads in [1usize, 3] {
+            let mut ex = Executor::new(nthreads);
+            let got = ex.run(&model, &x).unwrap();
+            let want = reference::run_unfused(&model, &x, nthreads).unwrap();
+            assert_bit_identical(&got, &want, &format!("mixcat/{engine:?}/t{nthreads}"));
+        }
+    }
+}
+
+/// Directed: an Add feeding another Add — the conv absorbs only the first
+/// add; the second stays a standalone instruction (fusion must not fire
+/// twice into one epilogue).
+#[test]
+fn chained_adds_fuse_exactly_once() {
+    let mut b = GraphBuilder::new("addchain", [1, 8, 8, 3], 23);
+    let p = b.maxpool("input", 3, 1, 1); // same-shape non-conv operand
+    let c = b.conv_named("c", "input", 3, 3, 1, 1, QCfg::new(2, 2), None);
+    let s1 = b.add(&c, "input");
+    let s2 = b.add(&s1, &p);
+    let g = b.finish(vec![s2]);
+    let model = compile_graph(&g, EngineChoice::Auto).unwrap();
+    assert_eq!(model.plan.fused_add_instrs(), 1);
+    let adds = model.plan.instrs.iter().filter(|i| matches!(i.op, Op::Add)).count();
+    assert_eq!(adds, 1, "second add must stay standalone");
+    let x = smooth_input(vec![1, 8, 8, 3]);
+    let mut ex = Executor::new(1);
+    let got = ex.run(&model, &x).unwrap();
+    let want = reference::run_unfused(&model, &x, 1).unwrap();
+    assert_bit_identical(&got, &want, "addchain");
 }
 
 #[test]

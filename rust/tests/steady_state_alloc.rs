@@ -76,19 +76,24 @@ fn count_steady_state<F: FnMut()>(warmup: usize, reps: usize, mut f: F) -> usize
     ALLOCS.load(Ordering::SeqCst)
 }
 
-/// conv + residual add + in-place activation + pool + flatten alias + dense:
-/// every lowering the planner performs, in one servable network.
+/// conv + fused residual add (+ post-add relu) + in-place concat with a
+/// striped FP32 producer + standalone in-place activation + pool + flatten
+/// alias + dense: every lowering the planner performs, in one servable
+/// network.
 fn serving_graph() -> Graph {
     let q = QCfg::new(2, 2);
     let mut b = GraphBuilder::new("net", [1, 8, 8, 3], 17);
     let c1 = b.conv_named("c1", "input", 8, 3, 1, 1, q, Some(Op::Relu)); // fused epilogue
     let c2 = b.conv_named("c2", &c1, 8, 3, 1, 1, q, None);
-    let s = b.add(&c2, &c1);
-    let r = b.act_named("r", &s, Op::Relu); // in-place
-    let p = b.maxpool(&r, 2, 2, 0);
+    let s = b.add(&c2, &c1); // fused into c2's epilogue (two-accumulator)
+    let r = b.act_named("r", &s, Op::Relu); // fused post-add activation
+    let d = b.conv_named("d", &c1, 4, 1, 1, 0, QCfg::FP32, None); // striped fp32 conv
+    let cat = b.concat(&[&r, &d]); // elided: both producers write stripes
+    let a = b.act_named("a", &cat, Op::LeakyRelu); // standalone, in place
+    let p = b.maxpool(&a, 2, 2, 0);
     let f = b.flatten(&p); // metadata-only alias
-    let d = b.dense(&f, 4 * 4 * 8, 10);
-    b.finish(vec![d])
+    let dn = b.dense(&f, 4 * 4 * 12, 10);
+    b.finish(vec![dn])
 }
 
 #[test]
@@ -128,7 +133,24 @@ fn steady_state_paths_allocate_nothing() {
     let g = serving_graph();
     let model = compile_graph(&g, EngineChoice::Auto).unwrap();
     assert!(model.plan.fused_instrs() >= 1, "expected a fused conv epilogue");
+    assert!(model.plan.fused_add_instrs() >= 1, "expected a fused residual add");
+    assert_eq!(model.plan.in_place_concats, 1, "expected the concat elided");
+    assert!(model.plan.strided_instrs() >= 2, "expected striped concat producers");
     assert!(model.plan.in_place_instrs() >= 1, "expected an in-place activation");
+
+    // regression-guard the slot savings: the fully fused plan must use
+    // strictly less arena than the pass-disabled plan of the same graph
+    let unfused = dlrt::exec::planner::build_plan_with(
+        &g,
+        dlrt::exec::planner::PlanOpts::none(),
+    )
+    .unwrap();
+    assert!(
+        model.plan.arena_bytes(1) < unfused.arena_bytes(1),
+        "fused arena {} B not below unfused {} B",
+        model.plan.arena_bytes(1),
+        unfused.arena_bytes(1)
+    );
 
     let mut ex = Executor::new(nthreads);
     let mut input = Tensor::zeros(vec![1, 8, 8, 3]);
