@@ -46,10 +46,14 @@ fn main() {
     // ---- measured (host CPU, width 0.25, fp32 vs int8 vs bitserial) ------
     // "no fusion" reruns the same kernels with residual-add fusion and
     // concat-in-place disabled: the delta is the whole-tensor add passes
-    // and concat copies the planner removed (YOLOv5 heads are concat-heavy)
+    // and concat copies the planner removed (YOLOv5 heads are concat-heavy).
+    // "copy cats" disables only the stride-aware *reads*: multi-use concat
+    // inputs (SPPF pyramid, PANet skips) fall back to copy_channels, so the
+    // delta isolates the strided-vs-copy win of partial striping.
     let mut t = Table::new(
         "Fig.1 measured — yolov5n width=0.25 on host CPU (1 thread)",
-        &["res", "FP32", "INT8", "DLRT 2A2W", "DLRT no add/cat fusion", "DLRT FPS"],
+        &["res", "FP32", "INT8", "DLRT 2A2W", "DLRT copy cats", "DLRT no add/cat fusion",
+          "DLRT FPS"],
     );
     let mut rng = Rng::new(2);
     for res in [128usize, 192] {
@@ -64,6 +68,12 @@ fn main() {
                        ..PlanOpts::default() },
         )
         .unwrap();
+        let mut mq_copycat = mq.clone();
+        mq_copycat.plan = build_plan_with(
+            &g,
+            PlanOpts { strided_reads: false, ..PlanOpts::default() },
+        )
+        .unwrap();
         let mut x = Tensor::zeros(vec![1, res, res, 3]);
         for v in x.data.iter_mut() {
             *v = rng.f32();
@@ -72,22 +82,28 @@ fn main() {
         let t_f = bench_ms(1, 5, || { ex.run(&mf, &x).unwrap(); });
         let t_8 = bench_ms(1, 5, || { ex.run(&m8, &x).unwrap(); });
         let t_q = bench_ms(1, 5, || { ex.run(&mq, &x).unwrap(); });
+        let t_qc = bench_ms(1, 5, || { ex.run(&mq_copycat, &x).unwrap(); });
         let t_qn = bench_ms(1, 5, || { ex.run(&mq_nofuse, &x).unwrap(); });
         t.row(vec![
             format!("{res}"),
             ms(t_f.median_ms),
             ms(t_8.median_ms),
             ms(t_q.median_ms),
+            ms(t_qc.median_ms),
             ms(t_qn.median_ms),
             format!("{:.1}", 1000.0 / t_q.median_ms),
         ]);
         println!(
-            "res {res}: {} fused adds, {} in-place concats ({} fallbacks) — \
-             add/concat fusion saves {:.2}% per-inference, arena {} -> {} B",
+            "res {res}: {} fused adds, {} in-place concats ({} partial, {} fallbacks), \
+             {} stripe readers — add/concat fusion saves {:.2}% per-inference \
+             (strided reads alone {:.2}%), arena {} -> {} B",
             mq.plan.fused_add_instrs(),
             mq.plan.in_place_concats,
+            mq.plan.partial_concats,
             mq.plan.concat_fallbacks.len(),
+            mq.plan.read_view_instrs(),
             100.0 * (t_qn.median_ms - t_q.median_ms) / t_qn.median_ms,
+            100.0 * (t_qc.median_ms - t_q.median_ms) / t_qc.median_ms,
             mq_nofuse.plan.arena_bytes(1),
             mq.plan.arena_bytes(1),
         );

@@ -12,6 +12,7 @@ use dlrt::bench_harness::{bench_ms, ms, Table};
 use dlrt::compiler::{compile_graph, EngineChoice};
 use dlrt::costmodel::{self, EngineKind, CORTEX_A72};
 use dlrt::dlrt::graph::QCfg;
+use dlrt::exec::planner::{build_plan_with, PlanOpts};
 use dlrt::exec::Executor;
 use dlrt::models::build_yolov5;
 use dlrt::util::rng::Rng;
@@ -53,6 +54,12 @@ fn main() {
     let g = build_yolov5("s", 5, 160, 0.5, QCfg::new(2, 2), 0);
     let mq = compile_graph(&g, EngineChoice::Auto).unwrap();
     let mf = compile_graph(&g, EngineChoice::ForceFp32).unwrap();
+    // strided-vs-copy ablation: same kernels, but multi-use concat inputs
+    // (SPPF pyramid, PANet skips) densify through copy_channels again
+    let mut mq_copy = mq.clone();
+    mq_copy.plan =
+        build_plan_with(&g, PlanOpts { strided_reads: false, ..PlanOpts::default() })
+            .unwrap();
     let mut rng = Rng::new(6);
     let mut x = Tensor::zeros(vec![1, 160, 160, 3]);
     for v in x.data.iter_mut() {
@@ -61,9 +68,21 @@ fn main() {
     let mut ex = Executor::new(1);
     let t_f = bench_ms(1, 4, || { ex.run(&mf, &x).unwrap(); });
     let t_q = bench_ms(1, 4, || { ex.run(&mq, &x).unwrap(); });
+    let t_qc = bench_ms(1, 4, || { ex.run(&mq_copy, &x).unwrap(); });
     m.row(vec!["FP32 native".into(), ms(t_f.median_ms), "1.00x".into()]);
     m.row(vec!["DLRT 2A2W (mixed)".into(), ms(t_q.median_ms),
                format!("{:.2}x", t_f.median_ms / t_q.median_ms)]);
+    m.row(vec!["DLRT 2A2W (copy concats)".into(), ms(t_qc.median_ms),
+               format!("{:.2}x", t_f.median_ms / t_qc.median_ms)]);
+    println!(
+        "strided reads: {} stripe readers, {} copy instrs (vs {} with copies), \
+         arena {} -> {} B",
+        mq.plan.read_view_instrs(),
+        mq.plan.concat_copy_instrs(),
+        mq_copy.plan.concat_copy_instrs(),
+        mq_copy.plan.arena_bytes(1),
+        mq.plan.arena_bytes(1),
+    );
     m.print();
     m.save_json("fig8_measured");
 }

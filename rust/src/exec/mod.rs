@@ -7,7 +7,10 @@
 //! request time the executor is a flat loop over instructions reading and
 //! writing disjoint slot ranges of one reusable buffer: no per-node tensor
 //! allocation, no env-map walks, no activation clones, no residual-add or
-//! concat-copy passes where the plan fused them away. Once the arena and
+//! concat-copy passes where the plan fused them away — and concat-resident
+//! tensors are both written *and read* as channel stripes of the concat
+//! root slot (strided im2col / pool / activation reads), so multi-use
+//! concat inputs like YOLOv5's SPPF pyramid never densify either. Once the arena and
 //! kernel scratch have grown to the model's largest layer, a run performs
 //! **zero heap allocations** (enforced by `tests/steady_state_alloc.rs`).
 //!
@@ -33,7 +36,7 @@ use crate::kernels::elementwise::{self as ew, ActKind};
 use crate::kernels::fp32::{
     dense_rowmajor, gemm_rowmajor_bt, scale_bias_rows_act, scale_bias_rows_add_act,
 };
-use crate::kernels::im2col::{im2col_f32, im2col_quant_u8, ConvDims};
+use crate::kernels::im2col::{im2col_f32_view, im2col_quant_u8_view, ConvDims};
 use crate::kernels::int8::gemm_u8i8_i32;
 use crate::kernels::pool;
 use crate::util::threads;
@@ -146,7 +149,11 @@ struct Scratch {
 /// Slots are disjoint ranges of one buffer. An instruction pairs one
 /// output slot with input slots of *different* ids (the planner guarantees
 /// it; `exec_instr` asserts it), and in-place instructions take only the
-/// mutable view — so the slices handed out never alias.
+/// mutable view — so the slices handed out never alias. The one sanctioned
+/// same-slot case — disjoint channel-stripe views of a concat root
+/// (validated by `ExecPlan::validate`) — never takes `read` and `write`
+/// together: `exec_instr` routes it through a single `write` view plus a
+/// same-buffer kernel, or finishes the read into scratch first (convs).
 struct ArenaViews<'a> {
     base: *mut f32,
     offsets: &'a [usize],
@@ -290,6 +297,17 @@ impl Executor {
     }
 }
 
+/// Resolve an optional channel-stripe view to `(row_stride, col_off)`,
+/// with `(c, 0)` — the dense layout of a `c`-channel tensor — as the
+/// default. Every strided kernel call site shares this one convention.
+#[inline]
+fn view_or(v: &Option<ChanView>, c: usize) -> (usize, usize) {
+    match v {
+        Some(v) => (v.stride, v.off),
+        None => (c, 0),
+    }
+}
+
 /// Execute one lowered instruction against the arena.
 fn exec_instr(
     scratch: &mut Scratch,
@@ -301,24 +319,38 @@ fn exec_instr(
 ) -> Result<()> {
     // SAFETY (for every `views.read`/`views.write` below): run_into runs
     // `ExecPlan::validate()` on this plan each request, which guarantees
-    // slot ids are in range, every tail fits its slot (so offset + elems
-    // stays inside the arena), and out_slot is disjoint from all in_slots
-    // for non-in-place instructions — each instruction takes exactly one
-    // mutable view, never overlapping its shared views.
+    // slot ids are in range, every tail (or rows × view.stride footprint)
+    // fits its slot (so offset + elems stays inside the arena), and
+    // out_slot is disjoint from all in_slots for non-in-place instructions
+    // — except inputs sharing the output slot through *disjoint*
+    // channel-stripe views, which this function never materializes as a
+    // separate shared view: those paths take a single mutable view of the
+    // slot and hand it to a same-buffer kernel (or, for convs, finish the
+    // read into scratch before the output view is created). Each
+    // instruction therefore holds exactly one mutable view at a time,
+    // never overlapping a live shared view.
     debug_assert!(
-        instr.in_place || instr.in_slots.iter().all(|&s| s != instr.out_slot),
+        instr.in_place
+            || instr
+                .in_slots
+                .iter()
+                .enumerate()
+                .all(|(i, &s)| s != instr.out_slot || instr.in_views[i].is_some()),
         "instruction would write a live input slot: {instr:?}"
     );
-    let in_elems = |i: usize| batch * instr.in_tails[i].iter().product::<usize>();
-    let out_elems = batch * instr.out_tail.iter().product::<usize>();
     // A channel-stripe view occupies rows × view.stride elements of its
     // slot (rows = every dim but the channel one, times batch).
-    let out_len = match &instr.out_view {
-        Some(v) => {
-            batch
-                * instr.out_tail[..instr.out_tail.len() - 1].iter().product::<usize>()
-                * v.stride
+    let rows_of =
+        |tail: &[usize]| -> usize { batch * tail[..tail.len() - 1].iter().product::<usize>() };
+    let in_elems = |i: usize| -> usize {
+        match &instr.in_views[i] {
+            Some(v) => rows_of(&instr.in_tails[i]) * v.stride,
+            None => batch * instr.in_tails[i].iter().product::<usize>(),
         }
+    };
+    let out_elems = batch * instr.out_tail.iter().product::<usize>();
+    let out_len = match &instr.out_view {
+        Some(v) => rows_of(&instr.out_tail) * v.stride,
         None => out_elems,
     };
     match &instr.op {
@@ -326,21 +358,30 @@ fn exec_instr(
             let t = &instr.in_tails[0]; // [h, w, c]
             let d = ConvDims::new(batch, t[0], t[1], t[2], kernel[0], kernel[1], *stride,
                                   *padding);
-            let x = unsafe { views.read(instr.in_slots[0], in_elems(0)) };
+            let conv = model
+                .convs
+                .get(&instr.name)
+                .ok_or_else(|| anyhow!("no compiled conv for {}", instr.name))?;
+            // stage the (possibly strided-read) im2col first and drop the
+            // input view before the output view exists: the conv may read
+            // one stripe of its own output slot (concat-resident input),
+            // and the two views must never be live at once
+            {
+                let (is_, io) = view_or(&instr.in_views[0], t[2]);
+                let x = unsafe { views.read(instr.in_slots[0], in_elems(0)) };
+                conv_stage_cols(scratch, x, &d, conv, is_, io);
+            }
             // the fused residual add's second accumulator (may share the
-            // conv input's slot — two shared reads alias safely)
+            // conv input's slot — two shared reads alias safely; never the
+            // output slot, which validate() forbids for view-less inputs)
             let res = if instr.fused_add {
                 Some(unsafe { views.read(instr.in_slots[1], in_elems(1)) })
             } else {
                 None
             };
             let out = unsafe { views.write(instr.out_slot, out_len) };
-            let conv = model
-                .convs
-                .get(&instr.name)
-                .ok_or_else(|| anyhow!("no compiled conv for {}", instr.name))?;
-            conv_into(scratch, nthreads, x, &d, conv, *cout, instr.fused, res,
-                      instr.fused_post, instr.out_view, out);
+            conv_finish(scratch, nthreads, &d, conv, *cout, instr.fused, res,
+                        instr.fused_post, instr.out_view, out);
         }
         Op::Dense { cin, cout } => {
             let x = unsafe { views.read(instr.in_slots[0], in_elems(0)) };
@@ -354,30 +395,42 @@ fn exec_instr(
         }
         Op::MaxPool2d { kernel, stride, padding } => {
             let t = &instr.in_tails[0];
-            let x = unsafe { views.read(instr.in_slots[0], in_elems(0)) };
-            let out = unsafe { views.write(instr.out_slot, out_len) };
-            let (os, oo) = match &instr.out_view {
-                Some(v) => (v.stride, v.off),
-                None => (t[2], 0),
-            };
-            pool::maxpool2d_strided(x, batch, t[0], t[1], t[2], *kernel, *stride, *padding,
-                                    out, os, oo);
+            let (is_, io) = view_or(&instr.in_views[0], t[2]);
+            let (os, oo) = view_or(&instr.out_view, t[2]);
+            if instr.in_slots[0] == instr.out_slot {
+                // disjoint stripes of one slot (validated, equal strides):
+                // a single mutable view serves both sides
+                let buf =
+                    unsafe { views.write(instr.out_slot, in_elems(0).max(out_len)) };
+                pool::maxpool2d_same(buf, batch, t[0], t[1], t[2], *kernel, *stride,
+                                     *padding, os, io, oo);
+            } else {
+                let x = unsafe { views.read(instr.in_slots[0], in_elems(0)) };
+                let out = unsafe { views.write(instr.out_slot, out_len) };
+                pool::maxpool2d_view(x, batch, t[0], t[1], t[2], *kernel, *stride,
+                                     *padding, is_, io, out, os, oo);
+            }
         }
         Op::GlobalAvgPool => {
             let t = &instr.in_tails[0];
+            let (is_, io) = view_or(&instr.in_views[0], t[2]);
             let x = unsafe { views.read(instr.in_slots[0], in_elems(0)) };
             let out = unsafe { views.write(instr.out_slot, out_elems) };
-            pool::global_avg_pool(x, batch, t[0], t[1], t[2], out);
+            pool::global_avg_pool_view(x, batch, t[0], t[1], t[2], is_, io, out);
         }
         Op::Upsample2x => {
             let t = &instr.in_tails[0];
-            let x = unsafe { views.read(instr.in_slots[0], in_elems(0)) };
-            let out = unsafe { views.write(instr.out_slot, out_len) };
-            let (os, oo) = match &instr.out_view {
-                Some(v) => (v.stride, v.off),
-                None => (t[2], 0),
-            };
-            pool::upsample2x_strided(x, batch, t[0], t[1], t[2], out, os, oo);
+            let (is_, io) = view_or(&instr.in_views[0], t[2]);
+            let (os, oo) = view_or(&instr.out_view, t[2]);
+            if instr.in_slots[0] == instr.out_slot {
+                let buf =
+                    unsafe { views.write(instr.out_slot, in_elems(0).max(out_len)) };
+                pool::upsample2x_same(buf, batch, t[0], t[1], t[2], os, io, oo);
+            } else {
+                let x = unsafe { views.read(instr.in_slots[0], in_elems(0)) };
+                let out = unsafe { views.write(instr.out_slot, out_len) };
+                pool::upsample2x_view(x, batch, t[0], t[1], t[2], is_, io, out, os, oo);
+            }
         }
         Op::Add => {
             let a = unsafe { views.read(instr.in_slots[0], in_elems(0)) };
@@ -386,9 +439,12 @@ fn exec_instr(
             ew::add(a, b, out);
         }
         Op::Concat => {
-            // one striped copy per input: no per-call slice list. With an
-            // out_view this concat is itself a stripe of a wider root
-            // (nested concat fallback): offsets shift by view.off.
+            // one striped copy per listed input (a partial concat lists
+            // only its copy-fallback inputs — the striped producers wrote
+            // their stripes already). With an out_view this concat is
+            // itself a stripe of a wider root (nested): destinations
+            // shift by the view base. Inputs may themselves be read
+            // through views, including out of this very slot.
             let ctot = instr.out_tail[2];
             let rows = batch * instr.out_tail[0] * instr.out_tail[1];
             let (os, base) = match &instr.out_view {
@@ -396,12 +452,18 @@ fn exec_instr(
                 None => (ctot, 0),
             };
             let out = unsafe { views.write(instr.out_slot, out_len) };
-            let mut c_off = base;
             for i in 0..instr.in_slots.len() {
                 let ci = instr.in_tails[i][2];
-                let x = unsafe { views.read(instr.in_slots[i], in_elems(i)) };
-                ew::copy_channels(x, ci, os, c_off, rows, out);
-                c_off += ci;
+                let dst = base + instr.cat_offs[i];
+                let (is_, io) = view_or(&instr.in_views[i], ci);
+                if instr.in_slots[i] == instr.out_slot {
+                    // same root, disjoint stripes (validated): reuse the
+                    // mutable view instead of aliasing a shared one
+                    ew::copy_channels_same(out, ci, os, io, dst, rows);
+                } else {
+                    let x = unsafe { views.read(instr.in_slots[i], in_elems(i)) };
+                    ew::copy_channels_view(x, ci, is_, io, rows, out, os, dst);
+                }
             }
         }
         Op::Flatten => {
@@ -409,15 +471,27 @@ fn exec_instr(
         }
         Op::Relu | Op::Relu6 | Op::Silu | Op::LeakyRelu | Op::Sigmoid => {
             let act = ActKind::from_op(&instr.op).expect("activation op");
+            let c = *instr.out_tail.last().expect("non-empty tail");
+            let rows = out_elems / c;
+            let (is_, io) = view_or(&instr.in_views[0], c);
             match &instr.out_view {
+                Some(v) if instr.in_slots[0] == instr.out_slot => {
+                    // stripe-to-stripe within one root slot
+                    let buf =
+                        unsafe { views.write(instr.out_slot, in_elems(0).max(out_len)) };
+                    ew::act_same(act, buf, c, v.stride, io, v.off, rows);
+                }
                 Some(v) => {
-                    // strided activation: read the dense input, write the
-                    // activated rows into the concat stripe
-                    let c = *instr.out_tail.last().expect("non-empty tail");
-                    let rows = out_len / v.stride;
+                    // (possibly strided) read, activated into the stripe
                     let x = unsafe { views.read(instr.in_slots[0], in_elems(0)) };
                     let out = unsafe { views.write(instr.out_slot, out_len) };
-                    ew::act_channels(act, x, c, v.stride, v.off, rows, out);
+                    ew::act_view(act, x, c, is_, io, rows, out, v.stride, v.off);
+                }
+                None if instr.in_views[0].is_some() => {
+                    // strided read, dense write
+                    let x = unsafe { views.read(instr.in_slots[0], in_elems(0)) };
+                    let out = unsafe { views.write(instr.out_slot, out_elems) };
+                    ew::act_view(act, x, c, is_, io, rows, out, c, 0);
                 }
                 None => {
                     let out = unsafe { views.write(instr.out_slot, out_elems) };
@@ -433,19 +507,54 @@ fn exec_instr(
     Ok(())
 }
 
-/// Run one compiled conv into `out`, engine-dispatched, with the plan's
-/// fused epilogue (activation, residual add, post-add activation) applied
-/// in the dequant/scale pass — and, when `view` is set, written into the
-/// conv's channel stripe of a concat output slot instead of densely.
+/// Stage a conv's im2col columns into scratch, engine-dispatched, reading
+/// the input through a channel-stripe view (`src_stride`/`src_off`;
+/// `src_stride == d.c`, `src_off == 0` is dense). This is the *only* part
+/// of a conv that touches the input slot — `exec_instr` drops the input
+/// view right after, so a conv may legally consume one stripe of the slot
+/// its own output stripe lands in.
+fn conv_stage_cols(
+    scratch: &mut Scratch,
+    x: &[f32],
+    d: &ConvDims,
+    conv: &CompiledConv,
+    src_stride: usize,
+    src_off: usize,
+) {
+    let rows = d.rows();
+    let patch = d.patch();
+    match &conv.kernel {
+        ConvKernel::Fp32 { .. } => {
+            scratch.cols_f32.resize(rows * patch, 0.0);
+            im2col_f32_view(x, d, src_stride, src_off, &mut scratch.cols_f32);
+        }
+        ConvKernel::Bitserial { s_a, a_bits, .. } => {
+            let (qp_a, _) = qp_qn(*a_bits, false);
+            scratch.cols_u8.resize(rows * patch, 0);
+            im2col_quant_u8_view(x, d, *s_a, qp_a as u8, src_stride, src_off,
+                                 &mut scratch.cols_u8);
+        }
+        ConvKernel::Int8 { s_a, .. } => {
+            scratch.cols_u8.resize(rows * patch, 0);
+            im2col_quant_u8_view(x, d, *s_a, 255, src_stride, src_off,
+                                 &mut scratch.cols_u8);
+        }
+    }
+}
+
+/// Finish a compiled conv from the staged columns into `out`,
+/// engine-dispatched, with the plan's fused epilogue (activation, residual
+/// add, post-add activation) applied in the dequant/scale pass — and, when
+/// `view` is set, written into the conv's channel stripe of a concat
+/// output slot instead of densely.
 ///
 /// The common dense/no-residual case keeps the original specialized
 /// epilogues; every fused path performs the identical float ops in the
 /// same order, so results stay bit-identical to the unfused reference.
 #[allow(clippy::too_many_arguments)]
-fn conv_into(
+fn conv_finish(
     scratch: &mut Scratch,
     nthreads: usize,
-    x: &[f32],
     d: &ConvDims,
     conv: &CompiledConv,
     cout: usize,
@@ -466,8 +575,6 @@ fn conv_into(
     let plain = res.is_none() && view.is_none();
     match &conv.kernel {
         ConvKernel::Fp32 { wt } => {
-            scratch.cols_f32.resize(rows * patch, 0.0);
-            im2col_f32(x, d, &mut scratch.cols_f32);
             if plain {
                 gemm_rowmajor_bt(&scratch.cols_f32, wt, rows, cout, patch, out, nthreads);
                 scale_bias_rows_act(out, cout, &conv.scale, &conv.bias, fused);
@@ -482,9 +589,6 @@ fn conv_into(
             }
         }
         ConvKernel::Bitserial { packed, s_w, s_a, w_bits, a_bits } => {
-            let (qp_a, _) = qp_qn(*a_bits, false);
-            scratch.cols_u8.resize(rows * patch, 0);
-            im2col_quant_u8(x, d, *s_a, qp_a as u8, &mut scratch.cols_u8);
             pack_rows_u8_into(&scratch.cols_u8, rows, patch, *a_bits as usize,
                               &mut scratch.packed);
             scratch.acc.resize(rows * cout, 0);
@@ -500,8 +604,6 @@ fn conv_into(
             }
         }
         ConvKernel::Int8 { codes, s_w, s_a } => {
-            scratch.cols_u8.resize(rows * patch, 0);
-            im2col_quant_u8(x, d, *s_a, 255, &mut scratch.cols_u8);
             scratch.acc.resize(rows * cout, 0);
             gemm_u8i8_i32(&scratch.cols_u8, codes, rows, cout, patch,
                           &mut scratch.acc[..rows * cout], nthreads);

@@ -24,15 +24,22 @@
 //!    after the residual add.
 //! 4. **In-place / aliased lowering** — a standalone activation that is
 //!    the last consumer of its input mutates the input's slot; `Flatten`
-//!    becomes a metadata-only alias (no instruction at all); and a
-//!    `Concat` whose every producer is sole-consumed and stride-capable
-//!    (conv / pool / upsample / activation / nested concat) is **elided**:
-//!    each producer gets a [`ChanView`] — an aliased channel-stripe view
-//!    of the concat output slot — and writes its rows directly at the
-//!    stripe's column offset, eliminating the `copy_channels` pass.
-//!    Concats whose producers don't qualify (multi-use inputs, the graph
-//!    input, dense/add producers) fall back to the copy path; the reason
-//!    is recorded in [`ExecPlan::concat_fallbacks`].
+//!    becomes a metadata-only alias (no instruction at all); and `Concat`
+//!    producers that qualify write their channel stripe of the concat
+//!    output slot directly through a [`ChanView`]. Striping is decided
+//!    **per producer**: a producer qualifies when its op has a strided
+//!    write path (conv / pool / upsample / activation / nested concat)
+//!    and every *other* consumer of its tensor can read a channel stripe
+//!    through an input view (conv im2col, pool, upsample, global-avg-pool,
+//!    activations, concat copies) — multi-use tensors like YOLOv5's SPPF
+//!    pyramid and PANet skip tensors therefore stripe too, with their
+//!    consumers reading `(off, stride)` views out of the concat root slot.
+//!    A concat whose producers all qualify is **elided** outright; a
+//!    *partially* eligible concat keeps a copy instruction for just the
+//!    ineligible inputs (the rest stripe in place); per-producer fallback
+//!    reasons land in [`ExecPlan::concat_fallbacks`]. With
+//!    [`PlanOpts::strided_reads`] off the pass degrades to the older
+//!    all-or-nothing, sole-consumer-only behavior (the ablation baseline).
 //! 5. **Slot assignment** — register-allocation style: every instruction
 //!    output gets an arena *slot*, and a slot returns to the free list as
 //!    soon as the last consumer of every tensor bound to it has run.
@@ -105,6 +112,10 @@ pub struct PlanOpts {
     pub fuse_residual_add: bool,
     /// Let concat producers write channel stripes of the concat slot.
     pub concat_in_place: bool,
+    /// Let consumers *read* channel stripes out of a concat root slot
+    /// (multi-use producers stripe; concats stripe partially). Off =
+    /// PR 4 behavior: sole-consumer producers only, all-or-nothing.
+    pub strided_reads: bool,
 }
 
 impl Default for PlanOpts {
@@ -114,6 +125,7 @@ impl Default for PlanOpts {
             in_place: true,
             fuse_residual_add: true,
             concat_in_place: true,
+            strided_reads: true,
         }
     }
 }
@@ -127,20 +139,36 @@ impl PlanOpts {
             in_place: false,
             fuse_residual_add: false,
             concat_in_place: false,
+            strided_reads: false,
         }
     }
 }
 
-/// Channel-stripe view of a wider output slot: the instruction writes each
-/// of its output rows (`out_tail` minus the channel dim) at column `off` of
-/// a row `stride` channels wide — how a concat producer lands directly in
-/// its stripe of the concat output slot.
+/// Channel-stripe view of a wider slot: each logical row of the tensor
+/// lives at column `off` of a row `stride` channels wide. As an *output*
+/// view (`Instr::out_view`) a concat producer writes its rows directly
+/// into its stripe of the concat root slot; as an *input* view
+/// (`Instr::in_views`) a consumer reads a concat-resident tensor out of
+/// the root slot without densifying it first.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct ChanView {
     /// Total channels of a root-slot row (the concat output's channels).
     pub stride: usize,
     /// First channel of this instruction's stripe.
     pub off: usize,
+}
+
+impl ChanView {
+    /// Channel range `[off, off + c)` of a `c`-channel tensor under this
+    /// view (what the instruction actually touches in each root row).
+    fn range(&self, c: usize) -> (usize, usize) {
+        (self.off, self.off + c)
+    }
+}
+
+/// Do two channel ranges overlap?
+fn ranges_overlap(a: (usize, usize), b: (usize, usize)) -> bool {
+    a.0 < b.1 && b.0 < a.1
 }
 
 /// One lowered instruction: an op reading input slots and writing one
@@ -162,6 +190,22 @@ pub struct Instr {
     pub in_slots: Vec<usize>,
     /// Per-input shape tails, aligned with `in_slots`.
     pub in_tails: Vec<Vec<usize>>,
+    /// Channel-stripe placement of each input inside its slot (the input
+    /// is concat-resident); `None` reads the slot densely. Aligned with
+    /// `in_slots`.
+    pub in_views: Vec<Option<ChanView>>,
+    /// Destination channel offsets per input within the concat output —
+    /// `Op::Concat` only, aligned with `in_slots`. A *partial* concat
+    /// carries only its copy-fallback inputs here (the striped producers
+    /// already wrote their stripes), so the offsets are explicit rather
+    /// than running sums.
+    pub cat_offs: Vec<usize>,
+    /// `Op::Concat` only: some inputs were striped by producers, so the
+    /// copies legitimately cover only part of the output's channels.
+    /// `validate` requires a non-partial concat's copies to cover every
+    /// channel — a full-copy plan with a missing input must be a plan
+    /// error, not stale arena bytes.
+    pub cat_partial: bool,
     pub out_slot: usize,
     pub out_tail: Vec<usize>,
     /// Channel-stripe placement of the output inside `out_slot` (concat
@@ -195,8 +239,10 @@ pub struct ExecPlan {
     pub nominal_batch: usize,
     /// Concat nodes elided entirely (every producer writes its stripe).
     pub in_place_concats: usize,
-    /// Why each remaining concat kept the copy path (the logged fallback;
-    /// `dlrt inspect --plan` prints these).
+    /// Concat nodes that striped some producers and copy only the rest.
+    pub partial_concats: usize,
+    /// Why each copy-fallback concat input kept the copy path, one entry
+    /// per ineligible producer (`dlrt inspect --plan` prints these).
     pub concat_fallbacks: Vec<String>,
 }
 
@@ -244,6 +290,28 @@ impl ExecPlan {
         self.instrs.iter().filter(|i| i.out_view.is_some()).count()
     }
 
+    /// Instructions reading at least one input through a channel-stripe
+    /// view (a concat-resident tensor consumed without densification).
+    pub fn read_view_instrs(&self) -> usize {
+        self.instrs.iter().filter(|i| i.in_views.iter().any(|v| v.is_some())).count()
+    }
+
+    /// Instructions that read and write *disjoint stripes of one slot*
+    /// (the SPPF pattern: a pool consuming one pyramid level and producing
+    /// the next, both resident in the same concat root).
+    pub fn same_slot_stripe_instrs(&self) -> usize {
+        self.instrs
+            .iter()
+            .filter(|i| !i.in_place && i.in_slots.iter().any(|&s| s == i.out_slot))
+            .count()
+    }
+
+    /// Remaining `copy_channels` passes: Concat instructions left in the
+    /// plan (each copies its listed inputs; striped inputs don't appear).
+    pub fn concat_copy_instrs(&self) -> usize {
+        self.instrs.iter().filter(|i| matches!(i.op, Op::Concat)).count()
+    }
+
     pub fn in_place_instrs(&self) -> usize {
         self.instrs.iter().filter(|i| i.in_place).count()
     }
@@ -274,6 +342,13 @@ impl ExecPlan {
         }
         for ins in &self.instrs {
             let arity_ok = ins.in_slots.len() == ins.in_tails.len()
+                && ins.in_views.len() == ins.in_slots.len()
+                // destination offsets exist exactly for concat copies
+                && (if matches!(ins.op, Op::Concat) {
+                    ins.cat_offs.len() == ins.in_slots.len()
+                } else {
+                    ins.cat_offs.is_empty() && !ins.cat_partial
+                })
                 && match &ins.op {
                     Op::Add => ins.in_slots.len() == 2,
                     Op::Concat => !ins.in_slots.is_empty(),
@@ -326,14 +401,32 @@ impl ExecPlan {
                             && ins.out_tail[0] == t[2]
                     }
                     Op::Concat => {
+                        // a partial concat's copies may cover only a
+                        // subset of the output's channels (striped
+                        // producers wrote the rest): offsets must be
+                        // ascending, disjoint, and inside the output row.
+                        // A full-copy concat must cover *every* channel —
+                        // gap-free offsets summing to the output width.
                         ins.out_tail.len() == 3
                             && ins.in_tails.iter().all(|t| {
                                 t.len() == 3
                                     && t[0] == ins.out_tail[0]
                                     && t[1] == ins.out_tail[1]
                             })
-                            && ins.in_tails.iter().map(|t| t[2]).sum::<usize>()
-                                == ins.out_tail[2]
+                            && ins
+                                .in_tails
+                                .iter()
+                                .zip(&ins.cat_offs)
+                                .try_fold(0usize, |prev, (t, &off)| {
+                                    let end = off.checked_add(t[2])?;
+                                    (off >= prev
+                                        && end <= ins.out_tail[2]
+                                        && (ins.cat_partial || off == prev))
+                                        .then_some(end)
+                                })
+                                .is_some_and(|covered| {
+                                    ins.cat_partial || covered == ins.out_tail[2]
+                                })
                     }
                     Op::Add => {
                         numel(&ins.in_tails[0]) == numel(&ins.out_tail)
@@ -384,10 +477,88 @@ impl ExecPlan {
                             .is_some_and(|end| end <= v.stride)
                 }
             };
+            // input views exist only on the inputs exec_instr routes
+            // through a strided read path, and the stripe must lie inside
+            // a root row and its rows×stride footprint inside the slot
+            let read_capable = |op: &Op, idx: usize| -> bool {
+                match op {
+                    Op::Conv2d { .. } => idx == 0, // residual reads are dense
+                    Op::MaxPool2d { .. } | Op::Upsample2x | Op::GlobalAvgPool => {
+                        idx == 0
+                    }
+                    Op::Concat => true,
+                    op => ActKind::from_op(op).is_some() && idx == 0,
+                }
+            };
+            let in_ok = ins.in_slots.iter().enumerate().all(|(i, &s)| {
+                let t = &ins.in_tails[i];
+                match &ins.in_views[i] {
+                    None => fits(t, s),
+                    Some(v) => {
+                        read_capable(&ins.op, i)
+                            && !ins.in_place
+                            && !t.is_empty()
+                            && t.last()
+                                .and_then(|&c| v.off.checked_add(c))
+                                .is_some_and(|end| end <= v.stride)
+                            && s < n
+                            && matches!(
+                                numel_checked(&t[..t.len() - 1])
+                                    .and_then(|r| r.checked_mul(v.stride)),
+                                Some(e) if e <= self.slot_sizes[s]
+                            )
+                    }
+                }
+            });
             let aliasing_ok = if ins.in_place {
                 ins.in_slots.first() == Some(&ins.out_slot)
+                    && ins.in_views.iter().all(|v| v.is_none())
             } else {
-                ins.in_slots.iter().all(|&s| s != ins.out_slot)
+                // an input may share the output slot only when it is read
+                // through a channel-stripe view of the same root row
+                // (equal stride) whose range clears everything the
+                // instruction writes — the SPPF pattern of a pool reading
+                // one pyramid level and writing the next, or a concat
+                // copying an input resident in its own root. A dense
+                // concat output counts as a full-width view at offset 0
+                // (only its cat_offs destination stripes are written).
+                ins.in_slots.iter().enumerate().all(|(i, &s)| {
+                    if s != ins.out_slot {
+                        return true;
+                    }
+                    let iv = match &ins.in_views[i] {
+                        Some(iv) => iv,
+                        None => return false,
+                    };
+                    let ov = match &ins.out_view {
+                        Some(ov) => *ov,
+                        None => match (&ins.op, ins.out_tail.last()) {
+                            // dense concat out: writes only its dest
+                            // stripes of the ctot-wide root row
+                            (Op::Concat, Some(&ctot)) => {
+                                ChanView { stride: ctot, off: 0 }
+                            }
+                            _ => return false,
+                        },
+                    };
+                    if iv.stride != ov.stride {
+                        return false;
+                    }
+                    let cin = ins.in_tails[i].last().copied().unwrap_or(0);
+                    let r = iv.range(cin);
+                    if matches!(ins.op, Op::Concat) {
+                        // copies land at ov.off + cat_offs[j]; the read
+                        // stripe must clear every destination stripe
+                        ins.in_tails.iter().zip(&ins.cat_offs).all(|(t, &o)| {
+                            let c = t.last().copied().unwrap_or(0);
+                            let d0 = ov.off.saturating_add(o);
+                            !ranges_overlap(r, (d0, d0.saturating_add(c)))
+                        })
+                    } else {
+                        let cout = ins.out_tail.last().copied().unwrap_or(0);
+                        !ranges_overlap(r, ov.range(cout))
+                    }
+                })
             };
             // a strided instruction occupies rows × view.stride elements of
             // its slot, not numel(out_tail)
@@ -407,9 +578,9 @@ impl ExecPlan {
                 || !in_place_ok
                 || !fused_ok
                 || !view_ok
+                || !in_ok
                 || !aliasing_ok
                 || !out_fits
-                || ins.in_slots.iter().zip(&ins.in_tails).any(|(&s, t)| !fits(t, s))
             {
                 return Err(anyhow!(
                     "plan invariant violated at {:?} ({}): in={:?} out={} of {n} slots",
@@ -446,6 +617,10 @@ struct WNode {
     /// Concat elided by the in-place pass: producers already wrote their
     /// stripes, so no instruction is emitted — only a slot binding.
     elide: bool,
+    /// Concat only: which inputs stripe in place (aligned with `inputs`).
+    /// Non-striped inputs stay on this concat's copy instruction. Empty
+    /// means no input stripes (pre-pass default).
+    striped: Vec<bool>,
 }
 
 /// Consumer count of tensor `t` over the current (post-fusion) node list;
@@ -453,6 +628,85 @@ struct WNode {
 fn uses_of(nodes: &[WNode], outputs: &[String], t: &str) -> usize {
     nodes.iter().flat_map(|n| n.inputs.iter()).filter(|i| i.as_str() == t).count()
         + outputs.iter().filter(|o| o.as_str() == t).count()
+}
+
+/// Why concat input `t` of concat node `ci` cannot write its channel
+/// stripe of the concat root directly — `None` means eligible. With
+/// `strided_reads` every *other* consumer of `t` is checked for a strided
+/// read path (im2col / pool / upsample / gap / activation / concat copy);
+/// without it any multi-use tensor is ineligible (the PR 4 rule).
+fn stripe_ineligibility(
+    nodes: &[WNode],
+    g: &Graph,
+    ci: usize,
+    t: &str,
+    placement: &BTreeMap<String, (String, usize)>,
+    strided_reads: bool,
+) -> Option<String> {
+    if nodes[ci].inputs.iter().filter(|x| x.as_str() == t).count() > 1 {
+        return Some(format!("{t:?} appears more than once in this concat"));
+    }
+    let producer = nodes[..ci].iter().find(|n| n.output == t);
+    if t == g.input_name || producer.is_none() {
+        return Some(format!("{t:?} is the graph input"));
+    }
+    if g.outputs.iter().any(|o| o == t) {
+        return Some(format!("{t:?} is a graph output (extracted densely)"));
+    }
+    if placement.contains_key(t) {
+        return Some(format!("{t:?} is already striped into another concat"));
+    }
+    let p = producer.expect("checked above");
+    let write_capable = matches!(
+        p.op,
+        Op::Conv2d { .. } | Op::MaxPool2d { .. } | Op::Upsample2x | Op::Concat
+    ) || ActKind::from_op(&p.op).is_some();
+    if !write_capable {
+        return Some(format!(
+            "{t:?} produced by {} ({}, no strided write path)",
+            p.name,
+            p.op.name()
+        ));
+    }
+    if !strided_reads {
+        let uses = uses_of(nodes, &g.outputs, t);
+        if uses != 1 {
+            return Some(format!("{t:?} has {uses} consumers"));
+        }
+        return None;
+    }
+    // every consumer besides this concat must read through a view
+    for (k, n) in nodes.iter().enumerate() {
+        if k == ci {
+            continue;
+        }
+        for (idx, inp) in n.inputs.iter().enumerate() {
+            if inp != t {
+                continue;
+            }
+            let ok = match &n.op {
+                // a residual-fused conv reads its second input densely in
+                // the epilogue; the im2col'd main input reads strided
+                Op::Conv2d { .. } => idx == 0,
+                Op::MaxPool2d { .. } | Op::Upsample2x | Op::GlobalAvgPool
+                | Op::Concat => true,
+                op => ActKind::from_op(op).is_some(),
+            };
+            if !ok {
+                let what = if matches!(n.op, Op::Conv2d { .. }) {
+                    "consumed as a residual by"
+                } else {
+                    "consumed by"
+                };
+                return Some(format!(
+                    "{t:?} {what} {} ({}, no strided read path)",
+                    n.name,
+                    n.op.name()
+                ));
+            }
+        }
+    }
+    None
 }
 
 /// Slot allocator state: sizes/liveness plus the tensor-name bindings.
@@ -548,6 +802,7 @@ pub fn build_plan_with(g: &Graph, opts: PlanOpts) -> Result<ExecPlan> {
             fused_add: false,
             fused_post: None,
             elide: false,
+            striped: Vec::new(),
         })
         .collect();
 
@@ -642,13 +897,17 @@ pub fn build_plan_with(g: &Graph, opts: PlanOpts) -> Result<ExecPlan> {
     // --- pass 4a: concat-in-place placement ----------------------------
     // Walk concats in reverse topological order so an outer concat claims
     // its stripes before an inner one composes into them (concat-of-concat
-    // becomes stripes-of-stripes on the outermost root slot). All-or-
-    // nothing per concat: every producer must be sole-consumed, stride-
-    // capable, and not the graph input; otherwise the concat keeps the
-    // copy path and the reason lands in `concat_fallbacks`.
+    // becomes stripes-of-stripes on the outermost root slot). Eligibility
+    // is decided *per producer* (see `stripe_ineligibility`): eligible
+    // inputs stripe in place even when their tensor has other consumers
+    // (those read the stripe through input views), ineligible inputs stay
+    // on the concat's copy instruction with their reason recorded. With
+    // `strided_reads` off this degrades to PR 4's all-or-nothing,
+    // sole-consumer-only rule (the ablation baseline).
     let mut placement: BTreeMap<String, (String, usize)> = BTreeMap::new();
     let mut in_place_concats = 0usize;
-    let mut concat_fallbacks: Vec<String> = Vec::new();
+    let mut partial_concats = 0usize;
+    let mut per_cat_fallbacks: Vec<Vec<String>> = Vec::new();
     if opts.concat_in_place {
         for ci in (0..nodes.len()).rev() {
             if !matches!(nodes[ci].op, Op::Concat) {
@@ -658,57 +917,47 @@ pub fn build_plan_with(g: &Graph, opts: PlanOpts) -> Result<ExecPlan> {
                 Some((r, b)) => (r.clone(), *b),
                 None => (nodes[ci].output.clone(), 0),
             };
-            let mut stripes: Vec<(String, usize)> = Vec::new();
-            let mut fallback: Option<String> = None;
+            let inputs = nodes[ci].inputs.clone();
+            let mut stripes: Vec<(usize, String, usize)> = Vec::new();
+            let mut fallbacks: Vec<String> = Vec::new();
             let mut off = base;
-            for t in &nodes[ci].inputs {
+            for (j, t) in inputs.iter().enumerate() {
                 let c = *shapes[t].last().expect("concat input has channels");
-                let uses = uses_of(&nodes, &g.outputs, t);
-                let producer = nodes[..ci].iter().find(|n| n.output == *t);
-                let why = if uses != 1 {
-                    Some(format!("{t:?} has {uses} consumers"))
-                } else if *t == g.input_name || producer.is_none() {
-                    Some(format!("{t:?} is the graph input"))
-                } else {
-                    let p = producer.expect("checked above");
-                    let capable = matches!(
-                        p.op,
-                        Op::Conv2d { .. } | Op::MaxPool2d { .. } | Op::Upsample2x
-                            | Op::Concat
-                    ) || ActKind::from_op(&p.op).is_some();
-                    if capable {
-                        None
-                    } else {
-                        Some(format!(
-                            "{t:?} produced by {} ({}, no strided write path)",
-                            p.name,
-                            p.op.name()
-                        ))
-                    }
-                };
-                match why {
-                    Some(w) => {
-                        fallback = Some(w);
-                        break;
-                    }
-                    None => stripes.push((t.clone(), off)),
+                match stripe_ineligibility(&nodes, g, ci, t, &placement,
+                                           opts.strided_reads) {
+                    Some(w) => fallbacks.push(format!(
+                        "{}: {t:?} copy fallback — {w}",
+                        nodes[ci].name
+                    )),
+                    None => stripes.push((j, t.clone(), off)),
                 }
                 off += c;
             }
-            match fallback {
-                Some(w) => {
-                    concat_fallbacks.push(format!("{}: copy fallback — {w}", nodes[ci].name))
-                }
-                None => {
-                    for (t, o) in stripes {
-                        placement.insert(t, (root.clone(), o));
-                    }
-                    nodes[ci].elide = true;
-                    in_place_concats += 1;
-                }
+            if !fallbacks.is_empty() && !opts.strided_reads {
+                // all-or-nothing without read views: the copy instruction
+                // rebuilds the whole output, so nothing may stripe
+                stripes.clear();
+                fallbacks.truncate(1);
             }
+            if fallbacks.is_empty() {
+                nodes[ci].elide = true;
+                in_place_concats += 1;
+            } else if !stripes.is_empty() {
+                partial_concats += 1;
+            }
+            let mut striped = vec![false; inputs.len()];
+            for (j, t, o) in stripes {
+                striped[j] = true;
+                placement.insert(t, (root.clone(), o));
+            }
+            nodes[ci].striped = striped;
+            per_cat_fallbacks.push(fallbacks);
         }
-        concat_fallbacks.reverse(); // report in topological order
+    }
+    // report in topological order (we walked concats in reverse)
+    let mut concat_fallbacks: Vec<String> = Vec::new();
+    for v in per_cat_fallbacks.into_iter().rev() {
+        concat_fallbacks.extend(v);
     }
 
     // remaining-use counts over the post-fusion node list (+1 per graph
@@ -740,9 +989,20 @@ pub fn build_plan_with(g: &Graph, opts: PlanOpts) -> Result<ExecPlan> {
     let input_slot = st.alloc(per_batch(&g.input_name));
     st.bind(&g.input_name, input_slot, per_batch(&g.input_name));
 
+    // read-side placement: a concat-resident input is consumed through a
+    // channel-stripe view of its root slot instead of being densified
+    let view_of = |t: &str| -> Option<ChanView> {
+        placement.get(t).map(|(root, off)| ChanView {
+            stride: *shapes[root].last().expect("concat root has channels"),
+            off: *off,
+        })
+    };
+
     for n in &nodes {
         if matches!(n.op, Op::Flatten) {
             // metadata-only alias: same slot, new shape tail, no instruction
+            // (an aliased tensor is never concat-resident — a flatten
+            // consumer makes its input stripe-ineligible)
             let s = st.slot_of(&n.inputs[0])?;
             st.bind(&n.output, s, per_batch(&n.output));
             st.release(&n.inputs);
@@ -762,21 +1022,83 @@ pub fn build_plan_with(g: &Graph, opts: PlanOpts) -> Result<ExecPlan> {
             st.release(&n.inputs);
             continue;
         }
+        if matches!(n.op, Op::Concat) {
+            // full or partial copy concat: emit copies for the non-striped
+            // inputs only, at explicit destination offsets (the striped
+            // producers already wrote their stripes of the root slot)
+            let (root, base) = match placement.get(&n.output) {
+                Some((r, b)) => (r.clone(), *b),
+                None => (n.output.clone(), 0),
+            };
+            let s = match root_slots.get(&root) {
+                Some(&s) => s,
+                None => {
+                    let s = st.alloc(per_batch(&root));
+                    root_slots.insert(root.clone(), s);
+                    s
+                }
+            };
+            st.bind(&n.output, s, per_batch(&root));
+            let mut in_slots = Vec::new();
+            let mut in_tails = Vec::new();
+            let mut in_views = Vec::new();
+            let mut cat_offs = Vec::new();
+            let mut off = 0usize;
+            for (j, t) in n.inputs.iter().enumerate() {
+                let c = *shapes[t].last().expect("concat input has channels");
+                if !n.striped.get(j).copied().unwrap_or(false) {
+                    in_slots.push(st.slot_of(t)?);
+                    in_tails.push(tail_of(t));
+                    in_views.push(view_of(t));
+                    cat_offs.push(off);
+                }
+                off += c;
+            }
+            let out_view = if root == n.output {
+                None
+            } else {
+                let stride = *shapes[&root].last().expect("concat root has channels");
+                Some(ChanView { stride, off: base })
+            };
+            instrs.push(Instr {
+                name: n.name.clone(),
+                op: n.op.clone(),
+                fused: None,
+                fused_add: false,
+                fused_post: None,
+                in_slots,
+                in_tails,
+                in_views,
+                cat_offs,
+                cat_partial: n.striped.iter().any(|&b| b),
+                out_slot: s,
+                out_tail: tail_of(&n.output),
+                out_view,
+                in_place: false,
+            });
+            st.release(&n.inputs);
+            continue;
+        }
         let mut in_slots = Vec::with_capacity(n.inputs.len());
         for t in &n.inputs {
             in_slots.push(st.slot_of(t)?);
         }
         let in_tails: Vec<Vec<usize>> = n.inputs.iter().map(|t| tail_of(t)).collect();
+        let in_views: Vec<Option<ChanView>> =
+            n.inputs.iter().map(|t| view_of(t)).collect();
 
         let sole_last_use = st.remaining.get(&n.inputs[0]).copied() == Some(1)
             && st.live[in_slots[0]] == 1;
         // gate on ActKind::from_op — the same mapping the executor
         // dispatches through — so the two can never drift apart. Striped
-        // outputs never lower in place: they must land in the concat slot.
+        // outputs never lower in place (they must land in the concat slot),
+        // and neither do concat-resident *inputs*: mutating the stripe
+        // in place would corrupt the concat output's channel range.
         if opts.in_place
             && ActKind::from_op(&n.op).is_some()
             && sole_last_use
             && !placement.contains_key(&n.output)
+            && in_views[0].is_none()
         {
             let s = in_slots[0];
             st.bind(&n.output, s, per_batch(&n.output));
@@ -788,6 +1110,9 @@ pub fn build_plan_with(g: &Graph, opts: PlanOpts) -> Result<ExecPlan> {
                 fused_post: None,
                 in_slots,
                 in_tails,
+                in_views,
+                cat_offs: Vec::new(),
+                cat_partial: false,
                 out_slot: s,
                 out_tail: tail_of(&n.output),
                 out_view: None,
@@ -799,7 +1124,8 @@ pub fn build_plan_with(g: &Graph, opts: PlanOpts) -> Result<ExecPlan> {
 
         // output placement: a channel stripe of a concat root slot, or a
         // fresh (recycled) slot. Inputs stay bound during allocation so an
-        // instruction never writes over a live input.
+        // instruction never writes over a live input — except its own
+        // stripe-disjoint concat root, which validate() checks.
         let (out_slot, out_view) = match placement.get(&n.output) {
             Some((root, off)) => {
                 let s = match root_slots.get(root) {
@@ -828,6 +1154,9 @@ pub fn build_plan_with(g: &Graph, opts: PlanOpts) -> Result<ExecPlan> {
             fused_post: n.fused_post,
             in_slots,
             in_tails,
+            in_views,
+            cat_offs: Vec::new(),
+            cat_partial: false,
             out_slot,
             out_tail: tail_of(&n.output),
             out_view,
@@ -849,6 +1178,7 @@ pub fn build_plan_with(g: &Graph, opts: PlanOpts) -> Result<ExecPlan> {
         outputs,
         nominal_batch: g.input_shape[0],
         in_place_concats,
+        partial_concats,
         concat_fallbacks,
     };
     // every produced plan passes the same invariant check the executor
@@ -1056,21 +1386,103 @@ mod tests {
         assert!(slots.windows(2).all(|w| w[0] == w[1]));
     }
 
-    /// A multi-use producer (the SPPF pattern) forces the copy fallback,
-    /// and the reason is recorded for `inspect --plan`.
+    /// A multi-use producer (the SPPF pattern) stripes anyway under the
+    /// default pipeline: its pool consumer reads the stripe through an
+    /// input view of the concat root — including the stripe-to-stripe
+    /// same-slot case. With `strided_reads` off the PR 4 all-or-nothing
+    /// copy fallback returns, reason recorded for `inspect --plan`.
     #[test]
-    fn multi_use_concat_producer_falls_back_with_reason() {
+    fn multi_use_concat_producer_stripes_with_read_views() {
         let mut b = GraphBuilder::new("sppf", [1, 8, 8, 3], 11);
         let c = b.conv_named("c", "input", 4, 1, 1, 0, QCfg::FP32, None);
         let p = b.maxpool(&c, 3, 1, 1); // c feeds both pool and concat
         let cat = b.concat(&[&c, &p]);
         let g = b.finish(vec![cat]);
+
+        let plan = build_plan(&g).unwrap();
+        assert_eq!(plan.in_place_concats, 1);
+        assert!(plan.concat_fallbacks.is_empty(), "{:?}", plan.concat_fallbacks);
+        assert!(plan.instrs.iter().all(|i| !matches!(i.op, Op::Concat)));
+        assert_eq!(plan.concat_copy_instrs(), 0);
+        // the pool reads c's stripe and writes its own stripe of the same
+        // root slot (disjoint channel ranges)
+        let pool = &plan.instrs[1];
+        assert_eq!(pool.in_views[0], Some(ChanView { stride: 8, off: 0 }));
+        assert_eq!(pool.out_view, Some(ChanView { stride: 8, off: 4 }));
+        assert_eq!(pool.in_slots[0], pool.out_slot);
+        assert_eq!(plan.read_view_instrs(), 1);
+        assert_eq!(plan.same_slot_stripe_instrs(), 1);
+
+        // ablation baseline: no read views → the old copy fallback
+        let old = build_plan_with(
+            &g,
+            PlanOpts { strided_reads: false, ..PlanOpts::default() },
+        )
+        .unwrap();
+        assert_eq!(old.in_place_concats, 0);
+        assert_eq!(old.concat_fallbacks.len(), 1);
+        assert!(old.concat_fallbacks[0].contains("2 consumers"),
+                "{:?}", old.concat_fallbacks);
+        assert!(old.instrs.iter().any(|i| matches!(i.op, Op::Concat)));
+    }
+
+    /// Mixed eligibility: the conv producer stripes in place while the
+    /// graph-input operand keeps a (partial) copy instruction carrying
+    /// only that input, at its explicit destination offset.
+    #[test]
+    fn partial_concat_stripes_eligible_and_copies_the_rest() {
+        let mut b = GraphBuilder::new("partial", [1, 8, 8, 3], 12);
+        let c = b.conv_named("c", "input", 4, 3, 1, 1, QCfg::FP32, Some(Op::Relu));
+        let cat = b.concat(&[&c, "input"]);
+        let g = b.finish(vec![cat]);
         let plan = build_plan(&g).unwrap();
         assert_eq!(plan.in_place_concats, 0);
+        assert_eq!(plan.partial_concats, 1);
         assert_eq!(plan.concat_fallbacks.len(), 1);
-        assert!(plan.concat_fallbacks[0].contains("2 consumers"),
+        assert!(plan.concat_fallbacks[0].contains("graph input"),
                 "{:?}", plan.concat_fallbacks);
-        assert!(plan.instrs.iter().any(|i| matches!(i.op, Op::Concat)));
+        // conv writes its stripe; the copy instruction carries only the
+        // ineligible input, destined at channel 4 of the 7-wide root
+        assert_eq!(plan.instrs[0].out_view, Some(ChanView { stride: 7, off: 0 }));
+        let cat_i = plan.instrs.iter().find(|i| matches!(i.op, Op::Concat)).unwrap();
+        assert_eq!(cat_i.in_slots.len(), 1);
+        assert_eq!(cat_i.cat_offs, vec![4]);
+        assert_eq!(cat_i.in_tails[0], vec![8, 8, 3]);
+        assert_eq!(cat_i.out_slot, plan.instrs[0].out_slot);
+        // without read views the whole concat falls back to a full copy
+        let old = build_plan_with(
+            &g,
+            PlanOpts { strided_reads: false, ..PlanOpts::default() },
+        )
+        .unwrap();
+        assert_eq!(old.partial_concats, 0);
+        let full = old.instrs.iter().find(|i| matches!(i.op, Op::Concat)).unwrap();
+        assert_eq!(full.in_slots.len(), 2);
+        assert_eq!(full.cat_offs, vec![0, 4]);
+    }
+
+    /// A consumer of a concat-resident tensor that cannot read a stripe
+    /// (a Dense behind a Flatten alias) makes that producer ineligible;
+    /// the sibling still stripes.
+    #[test]
+    fn dense_consumer_blocks_striping_of_its_input_only() {
+        let mut b = GraphBuilder::new("blocked", [1, 8, 8, 3], 14);
+        let a = b.conv_named("a", "input", 4, 1, 1, 0, QCfg::FP32, None);
+        let c = b.conv_named("c", "input", 2, 1, 1, 0, QCfg::FP32, None);
+        let cat = b.concat(&[&a, &c]);
+        let f = b.flatten(&c); // second consumer of c without a view path
+        let d = b.dense(&f, 8 * 8 * 2, 5);
+        let g = b.finish(vec![cat, d]);
+        let plan = build_plan(&g).unwrap();
+        assert_eq!(plan.partial_concats, 1);
+        assert_eq!(plan.concat_fallbacks.len(), 1);
+        assert!(plan.concat_fallbacks[0].contains("no strided read path"),
+                "{:?}", plan.concat_fallbacks);
+        // a striped at 0; c copied at 4
+        assert_eq!(plan.instrs[0].out_view, Some(ChanView { stride: 6, off: 0 }));
+        let cat_i = plan.instrs.iter().find(|i| matches!(i.op, Op::Concat)).unwrap();
+        assert_eq!(cat_i.cat_offs, vec![4]);
+        assert_eq!(cat_i.in_views[0], None);
     }
 
     #[test]

@@ -153,13 +153,59 @@ pub fn act_channels(
     rows: usize,
     out: &mut [f32],
 ) {
-    debug_assert!(c_off + c_in <= c_out);
-    debug_assert_eq!(src.len(), rows * c_in);
-    debug_assert!(out.len() >= rows.saturating_sub(1) * c_out + c_off + c_in);
+    act_view(kind, src, c_in, c_in, 0, rows, out, c_out, c_off);
+}
+
+/// The general strided activation: read `rows` rows of `c` channels at
+/// column `in_off` of `in_stride`-wide source rows, apply `kind`, and
+/// write them at column `out_off` of `out_stride`-wide output rows —
+/// both sides of the planner's channel-stripe views. Dense on either
+/// side when the stride equals `c` and the offset is 0; float ops match
+/// [`act_channels`] / copy-then-[`ActKind::apply`] exactly.
+#[allow(clippy::too_many_arguments)]
+pub fn act_view(
+    kind: ActKind,
+    src: &[f32],
+    c: usize,
+    in_stride: usize,
+    in_off: usize,
+    rows: usize,
+    out: &mut [f32],
+    out_stride: usize,
+    out_off: usize,
+) {
+    debug_assert!(in_off + c <= in_stride);
+    debug_assert!(out_off + c <= out_stride);
+    debug_assert!(src.len() >= rows.saturating_sub(1) * in_stride + in_off + c);
+    debug_assert!(out.len() >= rows.saturating_sub(1) * out_stride + out_off + c);
     for r in 0..rows {
-        let dst = &mut out[r * c_out + c_off..][..c_in];
-        dst.copy_from_slice(&src[r * c_in..(r + 1) * c_in]);
+        let dst = &mut out[r * out_stride + out_off..][..c];
+        dst.copy_from_slice(&src[r * in_stride + in_off..][..c]);
         kind.apply(dst);
+    }
+}
+
+/// [`act_view`] over disjoint channel stripes of one buffer (an
+/// activation consuming one concat-resident tensor and producing
+/// another stripe of the same root). The caller guarantees the ranges
+/// don't overlap, so every read sees the untouched input stripe.
+pub fn act_same(
+    kind: ActKind,
+    buf: &mut [f32],
+    c: usize,
+    row_stride: usize,
+    in_off: usize,
+    out_off: usize,
+    rows: usize,
+) {
+    debug_assert!(in_off + c <= row_stride && out_off + c <= row_stride);
+    debug_assert!(in_off + c <= out_off || out_off + c <= in_off, "stripes overlap");
+    debug_assert!(buf.len() >= rows.saturating_sub(1) * row_stride + out_off + c);
+    for r in 0..rows {
+        let base = r * row_stride;
+        for ci in 0..c {
+            buf[base + out_off + ci] = kind.apply_scalar(buf[base + in_off + ci]);
+        }
     }
 }
 
@@ -175,12 +221,50 @@ pub fn copy_channels(
     rows: usize,
     out: &mut [f32],
 ) {
-    debug_assert!(c_off + c_in <= c_out);
-    debug_assert_eq!(src.len(), rows * c_in);
-    debug_assert_eq!(out.len(), rows * c_out);
+    copy_channels_view(src, c_in, c_in, 0, rows, out, c_out, c_off);
+}
+
+/// [`copy_channels`] reading the source rows through a channel-stripe
+/// view of a wider buffer (`in_stride`/`in_off`) — a concat copying an
+/// input that is itself resident in another concat's root slot.
+#[allow(clippy::too_many_arguments)]
+pub fn copy_channels_view(
+    src: &[f32],
+    c: usize,
+    in_stride: usize,
+    in_off: usize,
+    rows: usize,
+    out: &mut [f32],
+    out_stride: usize,
+    out_off: usize,
+) {
+    debug_assert!(in_off + c <= in_stride);
+    debug_assert!(out_off + c <= out_stride);
+    debug_assert!(src.len() >= rows.saturating_sub(1) * in_stride + in_off + c);
+    debug_assert!(out.len() >= rows.saturating_sub(1) * out_stride + out_off + c);
     for r in 0..rows {
-        let o = r * c_out + c_off;
-        out[o..o + c_in].copy_from_slice(&src[r * c_in..(r + 1) * c_in]);
+        let o = r * out_stride + out_off;
+        out[o..o + c].copy_from_slice(&src[r * in_stride + in_off..][..c]);
+    }
+}
+
+/// [`copy_channels_view`] over disjoint channel stripes of one buffer (a
+/// concat copying an input that lives in *this* concat's root — the
+/// shared-root double-membership case).
+pub fn copy_channels_same(
+    buf: &mut [f32],
+    c: usize,
+    row_stride: usize,
+    in_off: usize,
+    out_off: usize,
+    rows: usize,
+) {
+    debug_assert!(in_off + c <= row_stride && out_off + c <= row_stride);
+    debug_assert!(in_off + c <= out_off || out_off + c <= in_off, "stripes overlap");
+    debug_assert!(buf.len() >= rows.saturating_sub(1) * row_stride + out_off + c);
+    for r in 0..rows {
+        let base = r * row_stride;
+        buf.copy_within(base + in_off..base + in_off + c, base + out_off);
     }
 }
 
@@ -243,6 +327,53 @@ mod tests {
             let mut dense = vec![0.0f32; rows * c];
             act_channels(kind, &src, c, c, 0, rows, &mut dense);
             assert_eq!(dense, want);
+        }
+    }
+
+    /// act_view/copy_channels_view strided reads and the same-buffer
+    /// stripe-to-stripe variants all reproduce densify-then-run exactly.
+    #[test]
+    fn view_and_same_buffer_variants_match_dense() {
+        let mut rng = crate::util::rng::Rng::new(53);
+        let (rows, c, stride) = (5usize, 3usize, 8usize);
+        let mut wide = vec![0.0f32; rows * stride];
+        for v in wide.iter_mut() {
+            *v = rng.normal();
+        }
+        for (in_off, out_off) in [(0usize, 4usize), (5, 0), (2, 5)] {
+            // dense oracle: extract the stripe, then act / copy
+            let dense: Vec<f32> = (0..rows)
+                .flat_map(|r| wide[r * stride + in_off..][..c].to_vec())
+                .collect();
+            for kind in [ActKind::Relu, ActKind::Silu, ActKind::Sigmoid] {
+                let mut want = dense.clone();
+                kind.apply(&mut want);
+                // strided-in, dense-out
+                let mut got = vec![0.0f32; rows * c];
+                act_view(kind, &wide, c, stride, in_off, rows, &mut got, c, 0);
+                assert_eq!(got, want, "{} in_off {in_off}", kind.name());
+                // same-buffer stripe-to-stripe
+                let mut buf = wide.clone();
+                act_same(kind, &mut buf, c, stride, in_off, out_off, rows);
+                for r in 0..rows {
+                    assert_eq!(&buf[r * stride + out_off..][..c], &want[r * c..][..c]);
+                    assert_eq!(&buf[r * stride + in_off..][..c],
+                               &wide[r * stride + in_off..][..c],
+                               "act_same clobbered its input stripe");
+                }
+            }
+            // strided-in strided-out copy
+            let mut got = vec![0.0f32; rows * stride];
+            copy_channels_view(&wide, c, stride, in_off, rows, &mut got, stride, out_off);
+            for r in 0..rows {
+                assert_eq!(&got[r * stride + out_off..][..c], &dense[r * c..][..c]);
+            }
+            // same-buffer copy
+            let mut buf = wide.clone();
+            copy_channels_same(&mut buf, c, stride, in_off, out_off, rows);
+            for r in 0..rows {
+                assert_eq!(&buf[r * stride + out_off..][..c], &dense[r * c..][..c]);
+            }
         }
     }
 

@@ -48,12 +48,29 @@ impl ConvDims {
 
 /// Fill `out` (rows × patch, pre-sized) with patches of `x` (NHWC).
 pub fn im2col_f32(x: &[f32], d: &ConvDims, out: &mut [f32]) {
+    im2col_f32_view(x, d, d.c, 0, out);
+}
+
+/// [`im2col_f32`] reading each input pixel's `d.c` channels from column
+/// `src_off` of a row `src_stride` channels wide — the stride-aware *read*
+/// path that lets a conv consume a channel stripe of a concat root slot
+/// without densifying it first (`src_stride == d.c`, `src_off == 0` is the
+/// dense layout). Out-of-image taps stay zero; patch layout is unchanged,
+/// so the GEMM and epilogue never know the input was strided.
+pub fn im2col_f32_view(
+    x: &[f32],
+    d: &ConvDims,
+    src_stride: usize,
+    src_off: usize,
+    out: &mut [f32],
+) {
     let patch = d.patch();
     debug_assert_eq!(out.len(), d.rows() * patch);
-    debug_assert_eq!(x.len(), d.n * d.h * d.w * d.c);
+    debug_assert!(src_off + d.c <= src_stride);
+    debug_assert!(x.len() >= d.n * d.h * d.w * src_stride);
     let (ph, pw) = (d.padding[0] as isize, d.padding[1] as isize);
     for n in 0..d.n {
-        let xn = &x[n * d.h * d.w * d.c..][..d.h * d.w * d.c];
+        let xn = &x[n * d.h * d.w * src_stride..][..d.h * d.w * src_stride];
         for oy in 0..d.oh {
             let iy0 = (oy * d.stride[0]) as isize - ph;
             for ox in 0..d.ow {
@@ -68,13 +85,13 @@ pub fn im2col_f32(x: &[f32], d: &ConvDims, out: &mut [f32]) {
                         o += d.kw * d.c;
                         continue;
                     }
-                    let rowbase = iy as usize * d.w * d.c;
+                    let rowbase = iy as usize * d.w * src_stride;
                     for kx in 0..d.kw {
                         let ix = ix0 + kx as isize;
                         if ix < 0 || ix >= d.w as isize {
                             out_row[o..o + d.c].fill(0.0);
                         } else {
-                            let src = rowbase + ix as usize * d.c;
+                            let src = rowbase + ix as usize * src_stride + src_off;
                             out_row[o..o + d.c].copy_from_slice(&xn[src..src + d.c]);
                         }
                         o += d.c;
@@ -90,8 +107,26 @@ pub fn im2col_f32(x: &[f32], d: &ConvDims, out: &mut [f32]) {
 /// Quantizing before patch extraction would also work, but fusing here keeps
 /// a single pass over memory (this is on the hot path).
 pub fn im2col_quant_u8(x: &[f32], d: &ConvDims, s_a: f32, qp: u8, out: &mut [u8]) {
+    im2col_quant_u8_view(x, d, s_a, qp, d.c, 0, out);
+}
+
+/// [`im2col_quant_u8`] with the stride-aware read path of
+/// [`im2col_f32_view`]: input pixels' channels live at column `src_off`
+/// of a `src_stride`-wide row. Quantization is per element, so reading
+/// through the view is bit-identical to densify-then-quantize.
+pub fn im2col_quant_u8_view(
+    x: &[f32],
+    d: &ConvDims,
+    s_a: f32,
+    qp: u8,
+    src_stride: usize,
+    src_off: usize,
+    out: &mut [u8],
+) {
     let patch = d.patch();
     debug_assert_eq!(out.len(), d.rows() * patch);
+    debug_assert!(src_off + d.c <= src_stride);
+    debug_assert!(x.len() >= d.n * d.h * d.w * src_stride);
     let inv = 1.0 / s_a;
     let (ph, pw) = (d.padding[0] as isize, d.padding[1] as isize);
     // cast-based saturating quantizer: for v >= -0.5*s_a this equals
@@ -100,7 +135,7 @@ pub fn im2col_quant_u8(x: &[f32], d: &ConvDims, s_a: f32, qp: u8, out: &mut [u8]
     let qpf = qp as u32;
     let q = |v: f32| -> u8 { ((v * inv + 0.5) as u32).min(qpf) as u8 };
     for n in 0..d.n {
-        let xn = &x[n * d.h * d.w * d.c..][..d.h * d.w * d.c];
+        let xn = &x[n * d.h * d.w * src_stride..][..d.h * d.w * src_stride];
         for oy in 0..d.oh {
             let iy0 = (oy * d.stride[0]) as isize - ph;
             for ox in 0..d.ow {
@@ -115,13 +150,13 @@ pub fn im2col_quant_u8(x: &[f32], d: &ConvDims, s_a: f32, qp: u8, out: &mut [u8]
                         o += d.kw * d.c;
                         continue;
                     }
-                    let rowbase = iy as usize * d.w * d.c;
+                    let rowbase = iy as usize * d.w * src_stride;
                     for kx in 0..d.kw {
                         let ix = ix0 + kx as isize;
                         if ix < 0 || ix >= d.w as isize {
                             out_row[o..o + d.c].fill(0);
                         } else {
-                            let src = rowbase + ix as usize * d.c;
+                            let src = rowbase + ix as usize * src_stride + src_off;
                             for (dst, &v) in
                                 out_row[o..o + d.c].iter_mut().zip(&xn[src..src + d.c])
                             {
@@ -169,6 +204,39 @@ mod tests {
         let mut out = vec![0.0; d.rows()];
         im2col_f32(&x, &d, &mut out);
         assert_eq!(out, vec![0.0, 2.0, 8.0, 10.0]);
+    }
+
+    /// Embed a dense NHWC tensor as a channel stripe of a wider buffer and
+    /// im2col it through the view: every patch (padding rows included) must
+    /// be bit-identical to densify-then-im2col, across off/stride sweeps.
+    #[test]
+    fn strided_reads_match_densify_then_run() {
+        // padded 3x3 stride-1 and downsampling stride-2 cases
+        for (k, s, p) in [(3usize, 1usize, 1usize), (3, 2, 1), (1, 1, 0)] {
+            let d = ConvDims::new(2, 5, 4, 3, k, k, [s, s], [p, p]);
+            let dense: Vec<f32> = (0..d.n * d.h * d.w * d.c)
+                .map(|v| (v as f32 * 0.73).sin())
+                .collect();
+            let mut want = vec![0.0f32; d.rows() * d.patch()];
+            im2col_f32(&dense, &d, &mut want);
+            let mut want_q = vec![0u8; d.rows() * d.patch()];
+            im2col_quant_u8(&dense, &d, 0.13, 3, &mut want_q);
+            for (stride, off) in [(3usize, 0usize), (5, 0), (5, 2), (9, 4), (9, 6)] {
+                // scatter the dense pixels into their stripe; poison the
+                // other columns so any stray read shows up
+                let mut wide = vec![f32::NAN; d.n * d.h * d.w * stride];
+                for px in 0..d.n * d.h * d.w {
+                    wide[px * stride + off..px * stride + off + d.c]
+                        .copy_from_slice(&dense[px * d.c..(px + 1) * d.c]);
+                }
+                let mut got = vec![0.0f32; d.rows() * d.patch()];
+                im2col_f32_view(&wide, &d, stride, off, &mut got);
+                assert_eq!(got, want, "f32 k{k} s{s} stride {stride} off {off}");
+                let mut got_q = vec![0u8; d.rows() * d.patch()];
+                im2col_quant_u8_view(&wide, &d, 0.13, 3, stride, off, &mut got_q);
+                assert_eq!(got_q, want_q, "u8 k{k} s{s} stride {stride} off {off}");
+            }
+        }
     }
 
     #[test]

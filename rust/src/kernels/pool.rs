@@ -35,12 +35,40 @@ pub fn maxpool2d_strided(
     out_stride: usize,
     out_off: usize,
 ) {
+    maxpool2d_view(x, n, h, w, c, kernel, stride, padding, c, 0, out, out_stride, out_off);
+}
+
+/// The general max pool: reads each input pixel's `c` channels at column
+/// `in_off` of a row `in_stride` wide *and* writes each output pixel at
+/// column `out_off` of a row `out_stride` wide — both sides of the
+/// planner's channel-stripe views (a pool consuming one concat-resident
+/// tensor and producing another). Dense on either side when the stride
+/// equals `c` and the offset is 0. Same taps, same compare order as
+/// [`maxpool2d`]: bit-identical.
+#[allow(clippy::too_many_arguments)]
+pub fn maxpool2d_view(
+    x: &[f32],
+    n: usize,
+    h: usize,
+    w: usize,
+    c: usize,
+    kernel: [usize; 2],
+    stride: [usize; 2],
+    padding: [usize; 2],
+    in_stride: usize,
+    in_off: usize,
+    out: &mut [f32],
+    out_stride: usize,
+    out_off: usize,
+) {
     let (oh, ow) = conv_out_hw(h, w, kernel, stride, padding);
+    debug_assert!(in_off + c <= in_stride);
     debug_assert!(out_off + c <= out_stride);
+    debug_assert!(x.len() >= n * h * w * in_stride);
     debug_assert!(out.len() >= (n * oh * ow).saturating_sub(1) * out_stride + out_off + c);
     let (ph, pw) = (padding[0] as isize, padding[1] as isize);
     for ni in 0..n {
-        let xn = &x[ni * h * w * c..][..h * w * c];
+        let xn = &x[ni * h * w * in_stride..][..h * w * in_stride];
         for oy in 0..oh {
             let iy0 = (oy * stride[0]) as isize - ph;
             for ox in 0..ow {
@@ -58,7 +86,7 @@ pub fn maxpool2d_strided(
                         if ix < 0 || ix >= w as isize {
                             continue;
                         }
-                        let src = (iy as usize * w + ix as usize) * c;
+                        let src = (iy as usize * w + ix as usize) * in_stride + in_off;
                         for ci in 0..c {
                             let v = xn[src + ci];
                             if v > orow[ci] {
@@ -72,16 +100,100 @@ pub fn maxpool2d_strided(
     }
 }
 
+/// [`maxpool2d_view`] where input and output are *disjoint channel
+/// stripes of the same buffer* — the SPPF serial-pool pyramid, where each
+/// pool reads the previous level's stripe of the concat root slot and
+/// writes the next level's stripe of the same slot. One row stride serves
+/// both sides (same root ⇒ same row width); the caller (and
+/// `ExecPlan::validate`) guarantees `in_off`/`out_off` ranges don't
+/// overlap, so every read sees the untouched input stripe. Same taps and
+/// compare order as [`maxpool2d`]: bit-identical.
+#[allow(clippy::too_many_arguments)]
+pub fn maxpool2d_same(
+    buf: &mut [f32],
+    n: usize,
+    h: usize,
+    w: usize,
+    c: usize,
+    kernel: [usize; 2],
+    stride: [usize; 2],
+    padding: [usize; 2],
+    row_stride: usize,
+    in_off: usize,
+    out_off: usize,
+) {
+    let (oh, ow) = conv_out_hw(h, w, kernel, stride, padding);
+    debug_assert!(in_off + c <= row_stride && out_off + c <= row_stride);
+    debug_assert!(in_off + c <= out_off || out_off + c <= in_off, "stripes overlap");
+    debug_assert!(buf.len() >= n * h * w * row_stride);
+    debug_assert!(
+        buf.len() >= (n * oh * ow).saturating_sub(1) * row_stride + out_off + c
+    );
+    let (ph, pw) = (padding[0] as isize, padding[1] as isize);
+    for ni in 0..n {
+        let ibase = ni * h * w * row_stride;
+        for oy in 0..oh {
+            let iy0 = (oy * stride[0]) as isize - ph;
+            for ox in 0..ow {
+                let ix0 = (ox * stride[1]) as isize - pw;
+                let obase = ((ni * oh + oy) * ow + ox) * row_stride + out_off;
+                for ci in 0..c {
+                    buf[obase + ci] = f32::NEG_INFINITY;
+                }
+                for ky in 0..kernel[0] {
+                    let iy = iy0 + ky as isize;
+                    if iy < 0 || iy >= h as isize {
+                        continue;
+                    }
+                    for kx in 0..kernel[1] {
+                        let ix = ix0 + kx as isize;
+                        if ix < 0 || ix >= w as isize {
+                            continue;
+                        }
+                        let src =
+                            ibase + (iy as usize * w + ix as usize) * row_stride + in_off;
+                        for ci in 0..c {
+                            let v = buf[src + ci];
+                            if v > buf[obase + ci] {
+                                buf[obase + ci] = v;
+                            }
+                        }
+                    }
+                }
+            }
+        }
+    }
+}
+
 /// Global average pool: NHWC → (N, C).
 pub fn global_avg_pool(x: &[f32], n: usize, h: usize, w: usize, c: usize, out: &mut [f32]) {
+    global_avg_pool_view(x, n, h, w, c, c, 0, out);
+}
+
+/// [`global_avg_pool`] reading each pixel's `c` channels at column
+/// `in_off` of a row `in_stride` wide (a concat-resident input). Same
+/// accumulation order: bit-identical to densify-then-pool.
+#[allow(clippy::too_many_arguments)]
+pub fn global_avg_pool_view(
+    x: &[f32],
+    n: usize,
+    h: usize,
+    w: usize,
+    c: usize,
+    in_stride: usize,
+    in_off: usize,
+    out: &mut [f32],
+) {
     debug_assert_eq!(out.len(), n * c);
+    debug_assert!(in_off + c <= in_stride);
+    debug_assert!(x.len() >= n * h * w * in_stride);
     let inv = 1.0 / (h * w) as f32;
     for ni in 0..n {
         let acc = &mut out[ni * c..(ni + 1) * c];
         acc.fill(0.0);
-        let xn = &x[ni * h * w * c..][..h * w * c];
-        for px in xn.chunks(c) {
-            for (a, v) in acc.iter_mut().zip(px) {
+        let xn = &x[ni * h * w * in_stride..][..h * w * in_stride];
+        for px in xn.chunks(in_stride) {
+            for (a, v) in acc.iter_mut().zip(&px[in_off..in_off + c]) {
                 *a += v;
             }
         }
@@ -109,7 +221,28 @@ pub fn upsample2x_strided(
     out_stride: usize,
     out_off: usize,
 ) {
+    upsample2x_view(x, n, h, w, c, c, 0, out, out_stride, out_off);
+}
+
+/// The general nearest-neighbor 2x upsample: strided reads *and* strided
+/// writes (see [`maxpool2d_view`]) — a PANet skip tensor resident in one
+/// concat root upsampled straight into its stripe of another.
+#[allow(clippy::too_many_arguments)]
+pub fn upsample2x_view(
+    x: &[f32],
+    n: usize,
+    h: usize,
+    w: usize,
+    c: usize,
+    in_stride: usize,
+    in_off: usize,
+    out: &mut [f32],
+    out_stride: usize,
+    out_off: usize,
+) {
+    debug_assert!(in_off + c <= in_stride);
     debug_assert!(out_off + c <= out_stride);
+    debug_assert!(x.len() >= n * h * w * in_stride);
     debug_assert!(out.len() >= (n * 4 * h * w).saturating_sub(1) * out_stride + out_off + c);
     let (oh, ow) = (2 * h, 2 * w);
     for ni in 0..n {
@@ -117,9 +250,44 @@ pub fn upsample2x_strided(
             let iy = oy / 2;
             for ox in 0..ow {
                 let ix = ox / 2;
-                let src = ((ni * h + iy) * w + ix) * c;
+                let src = ((ni * h + iy) * w + ix) * in_stride + in_off;
                 let dst = ((ni * oh + oy) * ow + ox) * out_stride + out_off;
                 out[dst..dst + c].copy_from_slice(&x[src..src + c]);
+            }
+        }
+    }
+}
+
+/// [`upsample2x_view`] over disjoint channel stripes of one buffer (see
+/// [`maxpool2d_same`]). Spatial dims double, so a planner-produced plan
+/// never hits this (same root ⇒ same spatial), but the executor supports
+/// every validated plan shape.
+#[allow(clippy::too_many_arguments)]
+pub fn upsample2x_same(
+    buf: &mut [f32],
+    n: usize,
+    h: usize,
+    w: usize,
+    c: usize,
+    row_stride: usize,
+    in_off: usize,
+    out_off: usize,
+) {
+    debug_assert!(in_off + c <= row_stride && out_off + c <= row_stride);
+    debug_assert!(in_off + c <= out_off || out_off + c <= in_off, "stripes overlap");
+    debug_assert!(buf.len() >= n * h * w * row_stride);
+    debug_assert!(
+        buf.len() >= (n * 4 * h * w).saturating_sub(1) * row_stride + out_off + c
+    );
+    let (oh, ow) = (2 * h, 2 * w);
+    for ni in 0..n {
+        for oy in 0..oh {
+            let iy = oy / 2;
+            for ox in 0..ow {
+                let ix = ox / 2;
+                let src = ((ni * h + iy) * w + ix) * row_stride + in_off;
+                let dst = ((ni * oh + oy) * ow + ox) * row_stride + out_off;
+                buf.copy_within(src..src + c, dst);
             }
         }
     }
@@ -179,6 +347,84 @@ mod tests {
         upsample2x_strided(&x, n, h, w, c, &mut strided, stride, off);
         for r in 0..n * 4 * h * w {
             assert_eq!(&strided[r * stride + off..][..c], &dense[r * c..][..c], "up row {r}");
+        }
+    }
+
+    /// Strided *reads*: embed the input as a channel stripe of a wider
+    /// buffer (poisoned elsewhere) and pool/upsample/gap through the view
+    /// — bit-exact vs densify-then-run, across off/stride sweeps and a
+    /// padded pool whose windows cross the image border.
+    #[test]
+    fn strided_reads_match_densify_then_run() {
+        let mut rng = crate::util::rng::Rng::new(41);
+        let (n, h, w, c) = (2usize, 5usize, 4usize, 3usize);
+        let x: Vec<f32> = (0..n * h * w * c).map(|_| rng.normal()).collect();
+        for (stride, off) in [(3usize, 0usize), (7, 0), (7, 2), (7, 4), (10, 5)] {
+            let mut wide = vec![f32::NAN; n * h * w * stride];
+            for px in 0..n * h * w {
+                wide[px * stride + off..px * stride + off + c]
+                    .copy_from_slice(&x[px * c..(px + 1) * c]);
+            }
+            for (k, s, p) in [(2usize, 2usize, 1usize), (3, 1, 1), (2, 2, 0)] {
+                let (oh, ow) = conv_out_hw(h, w, [k, k], [s, s], [p, p]);
+                let mut want = vec![0.0f32; n * oh * ow * c];
+                maxpool2d(&x, n, h, w, c, [k, k], [s, s], [p, p], &mut want);
+                let mut got = vec![0.0f32; n * oh * ow * c];
+                maxpool2d_view(&wide, n, h, w, c, [k, k], [s, s], [p, p], stride, off,
+                               &mut got, c, 0);
+                assert_eq!(got, want, "pool k{k}s{s}p{p} stride {stride} off {off}");
+            }
+            let mut want = vec![0.0f32; n * 4 * h * w * c];
+            upsample2x(&x, n, h, w, c, &mut want);
+            let mut got = vec![0.0f32; n * 4 * h * w * c];
+            upsample2x_view(&wide, n, h, w, c, stride, off, &mut got, c, 0);
+            assert_eq!(got, want, "upsample stride {stride} off {off}");
+
+            let mut want = vec![0.0f32; n * c];
+            global_avg_pool(&x, n, h, w, c, &mut want);
+            let mut got = vec![0.0f32; n * c];
+            global_avg_pool_view(&wide, n, h, w, c, stride, off, &mut got);
+            assert_eq!(got, want, "gap stride {stride} off {off}");
+        }
+    }
+
+    /// Same-buffer stripe-to-stripe (the SPPF pattern): pooling stripe A
+    /// into stripe B of one buffer matches the two-buffer strided pool,
+    /// and leaves stripe A untouched.
+    #[test]
+    fn same_buffer_stripe_to_stripe_matches_two_buffer() {
+        let mut rng = crate::util::rng::Rng::new(43);
+        let (n, h, w, c, stride) = (2usize, 4usize, 4usize, 3usize, 9usize);
+        for (in_off, out_off) in [(0usize, 3usize), (0, 6), (6, 0), (3, 6)] {
+            let mut buf = vec![0.0f32; n * h * w * stride];
+            for v in buf.iter_mut() {
+                *v = rng.normal();
+            }
+            let orig = buf.clone();
+            // two-buffer oracle: same strided read, separate output
+            let mut want = vec![0.0f32; n * h * w * c];
+            maxpool2d_view(&orig, n, h, w, c, [3, 3], [1, 1], [1, 1], stride, in_off,
+                           &mut want, c, 0);
+            maxpool2d_same(&mut buf, n, h, w, c, [3, 3], [1, 1], [1, 1], stride, in_off,
+                           out_off);
+            for px in 0..n * h * w {
+                assert_eq!(&buf[px * stride + out_off..][..c], &want[px * c..][..c],
+                           "pool out px {px} in_off {in_off} out_off {out_off}");
+                assert_eq!(&buf[px * stride + in_off..][..c],
+                           &orig[px * stride + in_off..][..c],
+                           "pool clobbered its input stripe at px {px}");
+            }
+
+            // upsample same-buffer (h halved so 2x fits the same rows)
+            let (uh, uw) = (h / 2, w / 2);
+            let mut buf = orig.clone();
+            let mut want = vec![0.0f32; n * 4 * uh * uw * c];
+            upsample2x_view(&orig, n, uh, uw, c, stride, in_off, &mut want, c, 0);
+            upsample2x_same(&mut buf, n, uh, uw, c, stride, in_off, out_off);
+            for px in 0..n * 4 * uh * uw {
+                assert_eq!(&buf[px * stride + out_off..][..c], &want[px * c..][..c],
+                           "upsample out px {px}");
+            }
         }
     }
 

@@ -201,7 +201,11 @@ fn cmd_inspect(args: &Args) -> Result<()> {
         // greppable one-per-line counters (CI asserts on these)
         println!("fused residual adds : {}", p.fused_add_instrs());
         println!("in-place concats    : {}", p.in_place_concats);
+        println!("partial concats     : {}", p.partial_concats);
         println!("striped writers     : {}", p.strided_instrs());
+        println!("stripe readers      : {}", p.read_view_instrs());
+        println!("same-slot stripes   : {}", p.same_slot_stripe_instrs());
+        println!("concat copy instrs  : {}", p.concat_copy_instrs());
         println!(
             "arena   : {} f32 elems ({} bytes) @ batch {} — interpreter peak {} ({} bytes)",
             p.arena_elems(p.nominal_batch),
@@ -225,12 +229,22 @@ fn cmd_inspect(args: &Args) -> Result<()> {
                 fused.push_str(&format!(" +{}", a.name()));
             }
             let mode = if ins.in_place { " (in-place)" } else { "" };
-            let stripe = match ins.out_view {
+            let mut stripe = match ins.out_view {
                 Some(v) => format!(" stripe[{}..{}/{}]", v.off,
                                    v.off + ins.out_tail.last().copied().unwrap_or(0),
                                    v.stride),
                 None => String::new(),
             };
+            for (k, iv) in ins.in_views.iter().enumerate() {
+                if let Some(v) = iv {
+                    stripe.push_str(&format!(
+                        " read{k}[{}..{}/{}]",
+                        v.off,
+                        v.off + ins.in_tails[k].last().copied().unwrap_or(0),
+                        v.stride
+                    ));
+                }
+            }
             println!(
                 "  {i:>3}: {:<12} {:<24} in={:?} out={} {:?}{fused}{stripe}{mode}",
                 ins.op.name(),

@@ -1,11 +1,12 @@
 //! Randomized differential testing of the execution planner: seeded random
 //! graphs (conv / residual add / concat / pool / upsample / activations /
-//! flatten / dense, with branching, nested residuals, and concat-of-concat)
-//! must produce **bit-identical** outputs between the planned arena
-//! executor — activation fusion, residual-add fusion, in-place lowering,
-//! concat-in-place striping and all — and the unfused env-map reference
-//! interpreter, across {bitserial, fp32, int8} × {1, 3} threads ×
-//! batch {1, 3}.
+//! flatten / dense, with branching, fan-out ≥ 2 multi-use tensors, nested
+//! residuals, concat-of-concat, and SPPF-style serial-pool pyramids) must
+//! produce **bit-identical** outputs between the planned arena executor —
+//! activation fusion, residual-add fusion, in-place lowering, concat
+//! striping with stride-aware reads and partial (mixed eligible/copy)
+//! concats and all — and the unfused env-map reference interpreter,
+//! across {bitserial, fp32, int8} × {1, 3} threads × batch {1, 3}.
 //!
 //! A failure prints the reproducing seed and a full graph dump; re-run a
 //! single seed with `DLRT_FUZZ_SEED=<seed> cargo test --test plan_fuzz`.
@@ -95,10 +96,11 @@ fn random_graph(seed: u64) -> Graph {
                 sum
             };
             Some(T { name: sum, ..t.clone() })
-        } else if pick < 56 {
+        } else if pick < 52 {
             // concat of 2-3 same-spatial tensors (concat outputs included,
-            // so concat-of-concat arises; duplicated inputs are legal and
-            // force the copy fallback)
+            // so concat-of-concat arises; multi-use inputs stripe via read
+            // views; duplicated inputs and the graph input force per-
+            // producer copy fallbacks — i.e. partial stripes)
             let mates: Vec<T> =
                 pool.iter().filter(|x| x.h == t.h && x.w == t.w).cloned().collect();
             let take = 2 + rng.usize(2);
@@ -109,6 +111,22 @@ fn random_graph(seed: u64) -> Graph {
                 let names: Vec<&str> = chosen.iter().map(|x| x.name.as_str()).collect();
                 let name = b.concat(&names);
                 Some(T { name, h: t.h, w: t.w, c: ctot })
+            } else {
+                None
+            }
+        } else if pick < 60 {
+            // SPPF-style serial-pool pyramid: conv → pool → pool, all
+            // levels concat'd. Every producer is multi-use (the next pool
+            // + the concat), so striping them exercises stride-aware reads
+            // including the same-slot stripe-to-stripe pool path.
+            if t.h >= 2 && t.w >= 2 && t.c <= 8 {
+                let ch = 1 + rng.usize(4);
+                let y = b.conv(&t.name, ch, 1, 1, random_qcfg(&mut rng),
+                               random_act_opt(&mut rng));
+                let p1 = b.maxpool(&y, 3, 1, 1);
+                let p2 = b.maxpool(&p1, 3, 1, 1);
+                let name = b.concat(&[&y, &p1, &p2]);
+                Some(T { name, h: t.h, w: t.w, c: 3 * ch })
             } else {
                 None
             }
@@ -220,8 +238,11 @@ fn fuzz_input(g: &Graph, batch: usize, seed: u64) -> Tensor {
 struct Coverage {
     fused_adds: usize,
     in_place_concats: usize,
+    partial_concats: usize,
     concat_fallbacks: usize,
     strided: usize,
+    stripe_reads: usize,
+    same_slot: usize,
     fused_acts: usize,
     in_place: usize,
 }
@@ -243,8 +264,11 @@ fn check_seed(seed: u64, cov: &mut Coverage) {
         };
         cov.fused_adds += model.plan.fused_add_instrs();
         cov.in_place_concats += model.plan.in_place_concats;
+        cov.partial_concats += model.plan.partial_concats;
         cov.concat_fallbacks += model.plan.concat_fallbacks.len();
         cov.strided += model.plan.strided_instrs();
+        cov.stripe_reads += model.plan.read_view_instrs();
+        cov.same_slot += model.plan.same_slot_stripe_instrs();
         cov.fused_acts += model.plan.fused_instrs();
         cov.in_place += model.plan.in_place_instrs();
         for threads in [1usize, 3] {
@@ -311,14 +335,19 @@ fn randomized_graphs_match_reference_bit_for_bit() {
     // to zero the fuzzer has gone vacuous, which is itself a failure
     assert!(cov.fused_adds > 0, "no residual adds fused across {SEEDS} seeds");
     assert!(cov.in_place_concats > 0, "no concats elided across {SEEDS} seeds");
+    assert!(cov.partial_concats > 0, "no partial concat stripes across {SEEDS} seeds");
     assert!(cov.concat_fallbacks > 0, "no concat fallbacks across {SEEDS} seeds");
     assert!(cov.strided > 0, "no strided writers across {SEEDS} seeds");
+    assert!(cov.stripe_reads > 0, "no strided readers across {SEEDS} seeds");
+    assert!(cov.same_slot > 0, "no same-slot stripe hops across {SEEDS} seeds");
     assert!(cov.fused_acts > 0, "no fused activations across {SEEDS} seeds");
     assert!(cov.in_place > 0, "no in-place activations across {SEEDS} seeds");
     println!(
         "plan_fuzz: {SEEDS} seeds × 3 engines — {} fused adds, {} in-place concats \
-         ({} fallbacks), {} striped writers, {} fused acts, {} in-place acts",
-        cov.fused_adds, cov.in_place_concats, cov.concat_fallbacks, cov.strided,
+         ({} partial concats, {} fallbacks), {} striped writers, {} stripe readers \
+         ({} same-slot), {} fused acts, {} in-place acts",
+        cov.fused_adds, cov.in_place_concats, cov.partial_concats,
+        cov.concat_fallbacks, cov.strided, cov.stripe_reads, cov.same_slot,
         cov.fused_acts, cov.in_place
     );
 }

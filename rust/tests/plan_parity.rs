@@ -184,6 +184,122 @@ fn chained_adds_fuse_exactly_once() {
     assert_bit_identical(&got, &want, "addchain");
 }
 
+/// Directed: the yolov5n SPPF block — cv1 conv, three serial k5 maxpools,
+/// concat of all four pyramid levels, cv2 conv. Stride-aware reads make
+/// every producer eligible (each pool reads the previous level's stripe
+/// out of the concat root and writes its own stripe of the same slot), so
+/// zero copy instructions remain — bit-exact on every engine and thread
+/// count.
+#[test]
+fn sppf_block_stripes_fully_and_matches() {
+    let q = QCfg::new(2, 2);
+    let mut b = GraphBuilder::new("sppf", [1, 8, 8, 4], 31);
+    let y = b.conv_named("cv1", "input", 4, 1, 1, 0, q, Some(Op::Silu));
+    let p1 = b.maxpool(&y, 5, 1, 2);
+    let p2 = b.maxpool(&p1, 5, 1, 2);
+    let p3 = b.maxpool(&p2, 5, 1, 2);
+    let cat = b.concat(&[&y, &p1, &p2, &p3]);
+    let out = b.conv_named("cv2", &cat, 8, 1, 1, 0, q, Some(Op::Silu));
+    let g = b.finish(vec![out]);
+    for engine in [EngineChoice::Auto, EngineChoice::ForceFp32, EngineChoice::ForceInt8] {
+        let model = compile_graph(&g, engine).unwrap();
+        let p = &model.plan;
+        assert_eq!(p.in_place_concats, 1, "{engine:?}");
+        assert!(p.concat_fallbacks.is_empty(), "{engine:?}: {:?}", p.concat_fallbacks);
+        assert_eq!(p.concat_copy_instrs(), 0, "{engine:?}");
+        assert_eq!(p.strided_instrs(), 4, "{engine:?}: all four levels stripe");
+        assert_eq!(p.read_view_instrs(), 3, "{engine:?}: each pool reads a stripe");
+        assert_eq!(p.same_slot_stripe_instrs(), 3, "{engine:?}");
+        let x = smooth_input(vec![1, 8, 8, 4]);
+        for nthreads in [1usize, 3] {
+            let mut ex = Executor::new(nthreads);
+            let got = ex.run(&model, &x).unwrap();
+            let want = reference::run_unfused(&model, &x, nthreads).unwrap();
+            assert_bit_identical(&got, &want, &format!("sppf/{engine:?}/t{nthreads}"));
+        }
+    }
+}
+
+/// Directed: a partial stripe — the eligible conv producer writes its
+/// stripe while the other input (also consumed by a Dense through a
+/// Flatten alias, which has no strided read path) keeps a copy
+/// instruction carrying exactly itself at its destination offset.
+#[test]
+fn partial_stripe_copies_exactly_one_producer() {
+    let q = QCfg::new(2, 2);
+    let mut b = GraphBuilder::new("partial", [1, 8, 8, 3], 32);
+    let a = b.conv_named("a", "input", 4, 3, 1, 1, q, Some(Op::Relu));
+    let c = b.conv_named("c", "input", 2, 1, 1, 0, QCfg::FP32, None);
+    let cat = b.concat(&[&a, &c]);
+    let f = b.flatten(&c);
+    let d = b.dense(&f, 8 * 8 * 2, 4);
+    let g = b.finish(vec![cat, d]);
+    for engine in [EngineChoice::Auto, EngineChoice::ForceFp32, EngineChoice::ForceInt8] {
+        let model = compile_graph(&g, engine).unwrap();
+        let p = &model.plan;
+        assert_eq!(p.partial_concats, 1, "{engine:?}");
+        assert_eq!(p.in_place_concats, 0, "{engine:?}");
+        assert_eq!(p.concat_copy_instrs(), 1, "{engine:?}");
+        assert_eq!(p.concat_fallbacks.len(), 1, "{engine:?}");
+        assert!(p.concat_fallbacks[0].contains("no strided read path"),
+                "{engine:?}: {:?}", p.concat_fallbacks);
+        let cat_i = p.instrs.iter().find(|i| matches!(i.op, Op::Concat)).unwrap();
+        assert_eq!(cat_i.in_slots.len(), 1, "{engine:?}: only the ineligible input");
+        assert_eq!(cat_i.cat_offs, vec![4], "{engine:?}");
+        let x = smooth_input(vec![1, 8, 8, 3]);
+        for nthreads in [1usize, 3] {
+            let mut ex = Executor::new(nthreads);
+            let got = ex.run(&model, &x).unwrap();
+            let want = reference::run_unfused(&model, &x, nthreads).unwrap();
+            assert_bit_identical(&got, &want,
+                                 &format!("partial/{engine:?}/t{nthreads}"));
+        }
+    }
+}
+
+/// Directed: consumers reading a concat-resident tensor through strided
+/// views (a conv whose own stripe lands in the same slot, and a
+/// global-avg-pool head) must be bit-identical both to the interpreter
+/// and to the same model re-planned with `strided_reads` off, where the
+/// tensor densifies through the copy fallback instead.
+#[test]
+fn strided_view_consumers_match_dense_clone_plan() {
+    let q = QCfg::new(2, 2);
+    let mut b = GraphBuilder::new("views", [1, 8, 8, 3], 33);
+    let s = b.conv_named("s", "input", 4, 3, 1, 1, q, Some(Op::Silu));
+    let c2 = b.conv_named("c2", &s, 3, 3, 1, 1, q, None);
+    let cat = b.concat(&[&s, &c2]);
+    let gp = b.global_avg_pool(&s);
+    let d = b.dense(&gp, 4, 5);
+    let g = b.finish(vec![cat, d]);
+    for engine in [EngineChoice::Auto, EngineChoice::ForceFp32, EngineChoice::ForceInt8] {
+        let model = compile_graph(&g, engine).unwrap();
+        assert_eq!(model.plan.concat_copy_instrs(), 0, "{engine:?}");
+        assert!(model.plan.read_view_instrs() >= 2, "{engine:?}: c2 + gap read views");
+        // c2 reads s's stripe of the very slot its own stripe lands in
+        assert!(model.plan.same_slot_stripe_instrs() >= 1, "{engine:?}");
+        let mut dense_clone = model.clone();
+        dense_clone.plan = build_plan_with(
+            &g,
+            PlanOpts { strided_reads: false, ..PlanOpts::default() },
+        )
+        .unwrap();
+        assert!(dense_clone.plan.concat_copy_instrs() >= 1, "{engine:?}");
+        assert_eq!(dense_clone.plan.read_view_instrs(), 0, "{engine:?}");
+        let x = smooth_input(vec![1, 8, 8, 3]);
+        for nthreads in [1usize, 3] {
+            let mut ex = Executor::new(nthreads);
+            let got = ex.run(&model, &x).unwrap();
+            let densified = ex.run(&dense_clone, &x).unwrap();
+            let want = reference::run_unfused(&model, &x, nthreads).unwrap();
+            assert_bit_identical(&got, &want,
+                                 &format!("views/{engine:?}/t{nthreads}"));
+            assert_bit_identical(&densified, &want,
+                                 &format!("views-dense/{engine:?}/t{nthreads}"));
+        }
+    }
+}
+
 #[test]
 fn arena_stays_within_interpreter_peak() {
     // On chain-style graphs, slot recycling must never need more memory
@@ -225,11 +341,24 @@ fn plan_slots_are_disjoint_per_instruction() {
             if i.in_place {
                 assert_eq!(i.in_slots[0], i.out_slot);
             } else {
-                assert!(
-                    i.in_slots.iter().all(|&s| s != i.out_slot),
-                    "instr {} writes one of its live inputs",
-                    i.name
-                );
+                // same-slot is legal only through disjoint channel-stripe
+                // views of one concat root (validated by the planner)
+                for (k, &s) in i.in_slots.iter().enumerate() {
+                    if s != i.out_slot {
+                        continue;
+                    }
+                    let iv = i.in_views[k]
+                        .unwrap_or_else(|| panic!("instr {} writes a live input", i.name));
+                    let ov = i.out_view.expect("same-slot output must be a stripe");
+                    assert_eq!(iv.stride, ov.stride, "instr {}", i.name);
+                    let cin = *i.in_tails[k].last().unwrap();
+                    let cout = *i.out_tail.last().unwrap();
+                    assert!(
+                        iv.off + cin <= ov.off || ov.off + cout <= iv.off,
+                        "instr {} overlapping stripes",
+                        i.name
+                    );
+                }
             }
             let nslots = model.plan.slot_sizes.len();
             assert!(i.out_slot < nslots);

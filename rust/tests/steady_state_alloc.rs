@@ -7,8 +7,12 @@
 //! 2. **Whole network** — a full multi-op model (conv + residual add +
 //!    pool + activation + flatten + dense) executed end-to-end through the
 //!    planned arena executor via `Executor::run_into`.
+//! 3. **SPPF strided-read pyramid** — multi-use pool levels striped into
+//!    one concat root, consumed through stride-aware reads (same-slot
+//!    pool hops, strided im2col, strided gap), with the strided plan's
+//!    arena strictly below the copy-fallback plan's.
 //!
-//! Both must perform **zero heap allocations** and **zero thread spawns**
+//! All must perform **zero heap allocations** and **zero thread spawns**
 //! once buffers have grown and the kernel pool exists (the pool-reuse test
 //! in `util::threads` covers the spawning half; this binary counts
 //! allocations through a wrapping global allocator).
@@ -74,6 +78,24 @@ fn count_steady_state<F: FnMut()>(warmup: usize, reps: usize, mut f: F) -> usize
     }
     COUNTING.store(false, Ordering::SeqCst);
     ALLOCS.load(Ordering::SeqCst)
+}
+
+/// SPPF-style pyramid over multi-use levels (conv → pool → pool, all
+/// concat'd) + conv + gap + dense head: every stride-aware *read* path —
+/// same-slot pool stripe hops, strided im2col, strided global-avg-pool —
+/// in one servable network.
+fn sppf_graph() -> Graph {
+    let q = QCfg::new(2, 2);
+    let mut b = GraphBuilder::new("sppf", [1, 8, 8, 4], 19);
+    let y = b.conv_named("cv1", "input", 4, 1, 1, 0, q, Some(Op::Relu));
+    let p1 = b.maxpool(&y, 5, 1, 2);
+    let p2 = b.maxpool(&p1, 5, 1, 2);
+    let cat = b.concat(&[&y, &p1, &p2]);
+    let z = b.conv_named("cv2", &cat, 8, 1, 1, 0, q, Some(Op::Relu));
+    let gp = b.global_avg_pool(&y); // strided gap: reads y's stripe
+    let g2 = b.global_avg_pool(&z);
+    let d = b.dense(&g2, 8, 10);
+    b.finish(vec![d, gp])
 }
 
 /// conv + fused residual add (+ post-add relu) + in-place concat with a
@@ -165,6 +187,46 @@ fn steady_state_paths_allocate_nothing() {
     assert_eq!(
         allocs, 0,
         "steady-state end-to-end run performed {allocs} heap allocations"
+    );
+    assert_eq!(outs[0].shape, vec![1, 10]);
+    assert!(outs[0].data.iter().all(|v| v.is_finite()));
+
+    // ---- phase 3: SPPF pyramid through the strided read path -----------
+    let g = sppf_graph();
+    let model = compile_graph(&g, EngineChoice::Auto).unwrap();
+    assert_eq!(model.plan.in_place_concats, 1, "expected the SPPF concat elided");
+    assert_eq!(model.plan.concat_copy_instrs(), 0, "expected zero copy_channels");
+    assert!(model.plan.read_view_instrs() >= 3, "expected stripe readers");
+    assert!(model.plan.same_slot_stripe_instrs() >= 2,
+            "expected stripe-to-stripe pool hops");
+    // the strided plan folds every pyramid level into the root slot: its
+    // arena must be strictly below the copy-fallback plan's
+    let copy_plan = dlrt::exec::planner::build_plan_with(
+        &g,
+        dlrt::exec::planner::PlanOpts {
+            strided_reads: false,
+            ..Default::default()
+        },
+    )
+    .unwrap();
+    assert!(copy_plan.concat_copy_instrs() >= 1);
+    assert!(
+        model.plan.arena_bytes(1) < copy_plan.arena_bytes(1),
+        "strided arena {} B not below copy-fallback {} B",
+        model.plan.arena_bytes(1),
+        copy_plan.arena_bytes(1)
+    );
+
+    let mut input = Tensor::zeros(vec![1, 8, 8, 4]);
+    for (i, v) in input.data.iter_mut().enumerate() {
+        *v = ((i % 5) as f32) * 0.25;
+    }
+    let allocs = count_steady_state(3, 10, || {
+        ex.run_into(&model, &input, &mut outs).unwrap();
+    });
+    assert_eq!(
+        allocs, 0,
+        "steady-state SPPF strided-read run performed {allocs} heap allocations"
     );
     assert_eq!(outs[0].shape, vec![1, 10]);
     assert!(outs[0].data.iter().all(|v| v.is_finite()));
