@@ -70,17 +70,28 @@ impl Payload {
     }
 }
 
-fn get_f32(payload: &[u8], r: &Json) -> Result<Vec<f32>> {
+/// Resolve a `{offset, len}` payload reference to a byte slice, with all
+/// arithmetic checked: a hostile header can claim arbitrary offsets/lengths,
+/// and `off + elem * len` must not wrap in release builds.
+fn get_blob<'a>(payload: &'a [u8], r: &Json, elem: usize, what: &str) -> Result<&'a [u8]> {
     let off = r.get("offset")?.usize()?;
     let len = r.get("len")?.usize()?;
-    let bytes = payload.get(off..off + 4 * len).ok_or_else(|| anyhow!("f32 blob oob"))?;
+    let end = len
+        .checked_mul(elem)
+        .and_then(|n| off.checked_add(n))
+        .ok_or_else(|| anyhow!("{what} blob range overflows: offset {off} len {len}"))?;
+    payload.get(off..end).ok_or_else(|| {
+        anyhow!("{what} blob out of bounds: {off}..{end} of {} payload bytes", payload.len())
+    })
+}
+
+fn get_f32(payload: &[u8], r: &Json) -> Result<Vec<f32>> {
+    let bytes = get_blob(payload, r, 4, "f32")?;
     Ok(bytes.chunks_exact(4).map(|b| f32::from_le_bytes([b[0], b[1], b[2], b[3]])).collect())
 }
 
 fn get_u64(payload: &[u8], r: &Json) -> Result<Vec<u64>> {
-    let off = r.get("offset")?.usize()?;
-    let len = r.get("len")?.usize()?;
-    let bytes = payload.get(off..off + 8 * len).ok_or_else(|| anyhow!("u64 blob oob"))?;
+    let bytes = get_blob(payload, r, 8, "u64")?;
     Ok(bytes
         .chunks_exact(8)
         .map(|b| u64::from_le_bytes([b[0], b[1], b[2], b[3], b[4], b[5], b[6], b[7]]))
@@ -88,9 +99,7 @@ fn get_u64(payload: &[u8], r: &Json) -> Result<Vec<u64>> {
 }
 
 fn get_i8(payload: &[u8], r: &Json) -> Result<Vec<i8>> {
-    let off = r.get("offset")?.usize()?;
-    let len = r.get("len")?.usize()?;
-    let bytes = payload.get(off..off + len).ok_or_else(|| anyhow!("i8 blob oob"))?;
+    let bytes = get_blob(payload, r, 1, "i8")?;
     Ok(bytes.iter().map(|&b| b as i8).collect())
 }
 
@@ -139,6 +148,9 @@ fn node_to_json(n: &Node) -> Json {
 fn node_from_json(v: &Json) -> Result<Node> {
     let pair = |key: &str| -> Result<[usize; 2]> {
         let p = v.get(key)?.usize_vec()?;
+        if p.len() != 2 {
+            bail!("field {key:?} must have exactly 2 entries, got {}", p.len());
+        }
         Ok([p[0], p[1]])
     };
     let op = match v.get("op")?.str()? {
@@ -200,6 +212,9 @@ pub fn graph_to_json(g: &Graph) -> Json {
 pub fn graph_from_json(v: &Json) -> Result<Graph> {
     let input = v.get("input")?;
     let shape = input.get("shape")?.usize_vec()?;
+    if shape.len() != 4 {
+        bail!("input shape must be rank 4 (NHWC), got rank {}", shape.len());
+    }
     let g = Graph {
         name: v.get("name")?.str()?.to_string(),
         input_name: input.get("name")?.str()?.to_string(),
@@ -279,12 +294,19 @@ pub fn load(path: &Path) -> Result<CompiledModel> {
     if version != VERSION {
         bail!("unsupported .dlrt version {version}");
     }
-    let hlen = u64::from_le_bytes(bytes[8..16].try_into().unwrap()) as usize;
-    let header_bytes = bytes.get(16..16 + hlen).ok_or_else(|| anyhow!("truncated header"))?;
+    let hlen: usize = u64::from_le_bytes(bytes[8..16].try_into().unwrap())
+        .try_into()
+        .map_err(|_| anyhow!("{}: header length does not fit in usize", path.display()))?;
+    let body = hlen
+        .checked_add(16)
+        .ok_or_else(|| anyhow!("{}: header length overflows", path.display()))?;
+    let header_bytes = bytes.get(16..body).ok_or_else(|| {
+        anyhow!("{}: truncated header ({} bytes, header claims {hlen})", path.display(), bytes.len())
+    })?;
     let header = Json::parse(std::str::from_utf8(header_bytes)?)?;
     // payload starts at the first 8-byte boundary the writer aligned to,
     // relative to payload start (offsets are payload-relative)
-    let payload = &bytes[16 + hlen..];
+    let payload = &bytes[body..];
 
     let graph = graph_from_json(header.get("graph")?)?;
     let mut model_convs: BTreeMap<String, CompiledConv> = BTreeMap::new();
@@ -301,8 +323,15 @@ pub fn load(path: &Path) -> Result<CompiledModel> {
                     let bits = c.get("bits")?.usize()?;
                     let data = get_u64(payload, c.get("planes")?)?;
                     let wpr = Packed::words_for(k);
-                    if data.len() != rows * bits * wpr {
-                        bail!("{name}: packed plane size mismatch");
+                    let want = rows
+                        .checked_mul(bits)
+                        .and_then(|n| n.checked_mul(wpr))
+                        .ok_or_else(|| anyhow!("{name}: packed plane size overflows"))?;
+                    if data.len() != want {
+                        bail!(
+                            "{name}: packed plane size mismatch: {} words, expected {want}",
+                            data.len()
+                        );
                     }
                     ConvKernel::Bitserial {
                         packed: Packed { rows, k, bits, words_per_row: wpr, data },
@@ -333,7 +362,14 @@ pub fn load(path: &Path) -> Result<CompiledModel> {
     }
     // re-lower the execution plan from the stored topology: plans are
     // derived state, so the file format stays engine-only and version-stable
-    CompiledModel::new(graph, model_convs, model_denses)
+    let model = CompiledModel::new(graph, model_convs, model_denses)?;
+    // The planner already verified the plan it built, but load() is the trust
+    // boundary for foreign files: run the static checker here so a model whose
+    // stored topology lowers to an unsound plan is refused with a diagnostic
+    // instead of executing (or panicking) later.
+    crate::exec::verify::verify(&model.plan)
+        .map_err(|d| anyhow!("{}: rejected by plan verifier — {d}", path.display()))?;
+    Ok(model)
 }
 
 /// Load a deployable model from either a `.dlrt` file or an exported
@@ -390,6 +426,61 @@ mod tests {
         std::fs::write(&path, b"DLRT\x02\x00\x00\x00\x00\x00\x00\x00\x00\x00\x00\x00").unwrap();
         assert!(load(&path).is_err()); // bad version
         std::fs::remove_file(&path).ok();
+    }
+
+    /// A file whose payload is cut short must come back as a diagnostic
+    /// error, never an out-of-bounds panic: every blob read is range-checked.
+    #[test]
+    fn truncated_payload_is_a_diagnostic_error_not_a_panic() {
+        let g = tiny_test_graph(false);
+        let m = compile_graph(&g, EngineChoice::Auto).unwrap();
+        let path = tmp("truncated.dlrt");
+        save(&m, &path).unwrap();
+        let full = std::fs::read(&path).unwrap();
+        // cut the payload in half, leaving the header intact: the JSON still
+        // parses, so the failure must land in checked blob resolution
+        let hlen = u64::from_le_bytes(full[8..16].try_into().unwrap()) as usize;
+        let payload_len = full.len() - 16 - hlen;
+        std::fs::write(&path, &full[..16 + hlen + payload_len / 2]).unwrap();
+        let err = load(&path).unwrap_err().to_string();
+        std::fs::remove_file(&path).ok();
+        assert!(err.contains("blob out of bounds"), "unexpected error: {err}");
+    }
+
+    /// A hostile header length (here u64::MAX) must not wrap the `16 + hlen`
+    /// arithmetic in release builds and read from a bogus offset.
+    #[test]
+    fn absurd_header_length_is_rejected() {
+        let path = tmp("hugehdr.dlrt");
+        let mut bytes = Vec::new();
+        bytes.extend_from_slice(MAGIC);
+        bytes.extend_from_slice(&VERSION.to_le_bytes());
+        bytes.extend_from_slice(&u64::MAX.to_le_bytes());
+        bytes.extend_from_slice(b"{}");
+        std::fs::write(&path, &bytes).unwrap();
+        let err = load(&path).unwrap_err().to_string();
+        std::fs::remove_file(&path).ok();
+        assert!(
+            err.contains("overflow") || err.contains("truncated header") || err.contains("usize"),
+            "unexpected error: {err}"
+        );
+    }
+
+    /// A header whose graph declares a non-rank-4 input shape must be refused
+    /// in `graph_from_json`, not panic on the `[shape[0], .., shape[3]]` index.
+    #[test]
+    fn non_rank4_input_shape_is_rejected() {
+        let path = tmp("rank2.dlrt");
+        let header = r#"{"graph":{"name":"x","input":{"name":"i","shape":[1,8]},"outputs":["i"],"nodes":[]},"convs":{},"denses":{}}"#;
+        let mut bytes = Vec::new();
+        bytes.extend_from_slice(MAGIC);
+        bytes.extend_from_slice(&VERSION.to_le_bytes());
+        bytes.extend_from_slice(&(header.len() as u64).to_le_bytes());
+        bytes.extend_from_slice(header.as_bytes());
+        std::fs::write(&path, &bytes).unwrap();
+        let err = load(&path).unwrap_err().to_string();
+        std::fs::remove_file(&path).ok();
+        assert!(err.contains("rank 4"), "unexpected error: {err}");
     }
 
     #[test]

@@ -22,6 +22,7 @@
 
 pub mod planner;
 pub mod reference;
+pub mod verify;
 
 use std::collections::BTreeMap;
 
@@ -166,6 +167,7 @@ impl ArenaViews<'_> {
     /// slot may exist.
     #[inline]
     unsafe fn read(&self, slot: usize, elems: usize) -> &[f32] {
+        // SAFETY: the caller upholds the bounds/no-aliasing contract above.
         unsafe { std::slice::from_raw_parts(self.base.add(self.offsets[slot]), elems) }
     }
 
@@ -175,6 +177,8 @@ impl ArenaViews<'_> {
     #[inline]
     #[allow(clippy::mut_from_ref)] // disjoint-slot views over one buffer
     unsafe fn write(&self, slot: usize, elems: usize) -> &mut [f32] {
+        // SAFETY: the caller upholds the bounds/exclusive-view contract
+        // documented above.
         unsafe { std::slice::from_raw_parts_mut(self.base.add(self.offsets[slot]), elems) }
     }
 }
@@ -368,6 +372,8 @@ fn exec_instr(
             // and the two views must never be live at once
             {
                 let (is_, io) = view_or(&instr.in_views[0], t[2]);
+                // SAFETY: validated footprint; dropped before any view of
+                // the output slot exists (see the block comment above).
                 let x = unsafe { views.read(instr.in_slots[0], in_elems(0)) };
                 conv_stage_cols(scratch, x, &d, conv, is_, io);
             }
@@ -375,16 +381,23 @@ fn exec_instr(
             // conv input's slot — two shared reads alias safely; never the
             // output slot, which validate() forbids for view-less inputs)
             let res = if instr.fused_add {
+                // SAFETY: validated footprint; shared reads may alias each
+                // other but never the (not-yet-created) output view.
                 Some(unsafe { views.read(instr.in_slots[1], in_elems(1)) })
             } else {
                 None
             };
+            // SAFETY: validated footprint; the input view was dropped above,
+            // so this is the only live view of the slot.
             let out = unsafe { views.write(instr.out_slot, out_len) };
             conv_finish(scratch, nthreads, &d, conv, *cout, instr.fused, res,
                         instr.fused_post, instr.out_view, out);
         }
         Op::Dense { cin, cout } => {
+            // SAFETY: validated footprints over distinct slots (block
+            // comment above): one shared view, one disjoint mutable view.
             let x = unsafe { views.read(instr.in_slots[0], in_elems(0)) };
+            // SAFETY: as above — out_slot is distinct from the input slot.
             let out = unsafe { views.write(instr.out_slot, out_elems) };
             let dense = model
                 .denses
@@ -398,14 +411,16 @@ fn exec_instr(
             let (is_, io) = view_or(&instr.in_views[0], t[2]);
             let (os, oo) = view_or(&instr.out_view, t[2]);
             if instr.in_slots[0] == instr.out_slot {
-                // disjoint stripes of one slot (validated, equal strides):
-                // a single mutable view serves both sides
+                // SAFETY: disjoint stripes of one slot (validated, equal
+                // strides): a single mutable view serves both sides.
                 let buf =
                     unsafe { views.write(instr.out_slot, in_elems(0).max(out_len)) };
                 pool::maxpool2d_same(buf, batch, t[0], t[1], t[2], *kernel, *stride,
                                      *padding, os, io, oo);
             } else {
+                // SAFETY: validated footprints over distinct slots.
                 let x = unsafe { views.read(instr.in_slots[0], in_elems(0)) };
+                // SAFETY: as above — the sole mutable view, disjoint slot.
                 let out = unsafe { views.write(instr.out_slot, out_len) };
                 pool::maxpool2d_view(x, batch, t[0], t[1], t[2], *kernel, *stride,
                                      *padding, is_, io, out, os, oo);
@@ -414,7 +429,9 @@ fn exec_instr(
         Op::GlobalAvgPool => {
             let t = &instr.in_tails[0];
             let (is_, io) = view_or(&instr.in_views[0], t[2]);
+            // SAFETY: validated footprints over distinct slots.
             let x = unsafe { views.read(instr.in_slots[0], in_elems(0)) };
+            // SAFETY: as above — the sole mutable view, disjoint slot.
             let out = unsafe { views.write(instr.out_slot, out_elems) };
             pool::global_avg_pool_view(x, batch, t[0], t[1], t[2], is_, io, out);
         }
@@ -423,18 +440,26 @@ fn exec_instr(
             let (is_, io) = view_or(&instr.in_views[0], t[2]);
             let (os, oo) = view_or(&instr.out_view, t[2]);
             if instr.in_slots[0] == instr.out_slot {
+                // SAFETY: disjoint stripes of one slot (validated): one
+                // mutable view serves both sides.
                 let buf =
                     unsafe { views.write(instr.out_slot, in_elems(0).max(out_len)) };
                 pool::upsample2x_same(buf, batch, t[0], t[1], t[2], os, io, oo);
             } else {
+                // SAFETY: validated footprints over distinct slots.
                 let x = unsafe { views.read(instr.in_slots[0], in_elems(0)) };
+                // SAFETY: as above — the sole mutable view, disjoint slot.
                 let out = unsafe { views.write(instr.out_slot, out_len) };
                 pool::upsample2x_view(x, batch, t[0], t[1], t[2], is_, io, out, os, oo);
             }
         }
         Op::Add => {
+            // SAFETY: validated footprints; the two shared reads may alias
+            // each other (x + x) but never the distinct output slot.
             let a = unsafe { views.read(instr.in_slots[0], in_elems(0)) };
+            // SAFETY: as above.
             let b = unsafe { views.read(instr.in_slots[1], in_elems(1)) };
+            // SAFETY: as above — the sole mutable view, disjoint slot.
             let out = unsafe { views.write(instr.out_slot, out_elems) };
             ew::add(a, b, out);
         }
@@ -451,6 +476,8 @@ fn exec_instr(
                 Some(v) => (v.stride, v.off),
                 None => (ctot, 0),
             };
+            // SAFETY: validated footprint; the one mutable view — same-slot
+            // inputs are copied through it rather than a shared alias.
             let out = unsafe { views.write(instr.out_slot, out_len) };
             for i in 0..instr.in_slots.len() {
                 let ci = instr.in_tails[i][2];
@@ -461,6 +488,8 @@ fn exec_instr(
                     // mutable view instead of aliasing a shared one
                     ew::copy_channels_same(out, ci, os, io, dst, rows);
                 } else {
+                    // SAFETY: validated footprint of a slot distinct from
+                    // the output's, so it cannot alias `out`.
                     let x = unsafe { views.read(instr.in_slots[i], in_elems(i)) };
                     ew::copy_channels_view(x, ci, is_, io, rows, out, os, dst);
                 }
@@ -476,26 +505,35 @@ fn exec_instr(
             let (is_, io) = view_or(&instr.in_views[0], c);
             match &instr.out_view {
                 Some(v) if instr.in_slots[0] == instr.out_slot => {
-                    // stripe-to-stripe within one root slot
+                    // SAFETY: stripe-to-stripe within one root slot
+                    // (validated disjoint): one mutable view serves both.
                     let buf =
                         unsafe { views.write(instr.out_slot, in_elems(0).max(out_len)) };
                     ew::act_same(act, buf, c, v.stride, io, v.off, rows);
                 }
                 Some(v) => {
-                    // (possibly strided) read, activated into the stripe
+                    // SAFETY: validated footprints over distinct slots —
+                    // a (possibly strided) read, activated into the stripe.
                     let x = unsafe { views.read(instr.in_slots[0], in_elems(0)) };
+                    // SAFETY: as above — the sole mutable view.
                     let out = unsafe { views.write(instr.out_slot, out_len) };
                     ew::act_view(act, x, c, is_, io, rows, out, v.stride, v.off);
                 }
                 None if instr.in_views[0].is_some() => {
-                    // strided read, dense write
+                    // SAFETY: strided read and dense write of distinct
+                    // slots, both footprints validated.
                     let x = unsafe { views.read(instr.in_slots[0], in_elems(0)) };
+                    // SAFETY: as above — the sole mutable view.
                     let out = unsafe { views.write(instr.out_slot, out_elems) };
                     ew::act_view(act, x, c, is_, io, rows, out, c, 0);
                 }
                 None => {
+                    // SAFETY: in-place this IS the input slot (the only
+                    // view); otherwise the slots are validated distinct.
                     let out = unsafe { views.write(instr.out_slot, out_elems) };
                     if !instr.in_place {
+                        // SAFETY: distinct slot (in_place is false), so the
+                        // shared read cannot alias `out`.
                         let x = unsafe { views.read(instr.in_slots[0], in_elems(0)) };
                         out.copy_from_slice(x);
                     }

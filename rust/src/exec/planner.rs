@@ -116,6 +116,11 @@ pub struct PlanOpts {
     /// (multi-use producers stripe; concats stripe partially). Off =
     /// PR 4 behavior: sole-consumer producers only, all-or-nothing.
     pub strided_reads: bool,
+    /// Run the static plan verifier ([`crate::exec::verify`]) on the
+    /// produced plan and fail the build on any diagnostic. A checker, not
+    /// a lowering pass, so it stays on even in [`PlanOpts::none`]; with it
+    /// off, debug builds still verify behind a debug assertion.
+    pub verify: bool,
 }
 
 impl Default for PlanOpts {
@@ -126,13 +131,15 @@ impl Default for PlanOpts {
             fuse_residual_add: true,
             concat_in_place: true,
             strided_reads: true,
+            verify: true,
         }
     }
 }
 
 impl PlanOpts {
     /// Every pass disabled — the ablation baseline (one instruction per
-    /// graph node, one slot per liveness interval, no aliasing).
+    /// graph node, one slot per liveness interval, no aliasing). The
+    /// verifier is not a pass and stays on.
     pub fn none() -> Self {
         PlanOpts {
             fuse_activations: false,
@@ -140,6 +147,7 @@ impl PlanOpts {
             fuse_residual_add: false,
             concat_in_place: false,
             strided_reads: false,
+            verify: true,
         }
     }
 }
@@ -1184,6 +1192,18 @@ pub fn build_plan_with(g: &Graph, opts: PlanOpts) -> Result<ExecPlan> {
     // every produced plan passes the same invariant check the executor
     // re-runs per request (see ExecPlan::validate)
     plan.validate()?;
+    // ... and the deeper abstract-interpretation pass: alias, race, and
+    // coverage analysis over the full instruction stream (exec/verify.rs).
+    // Opting out still leaves a debug assertion — a planner bug must never
+    // ship a plan the verifier would reject.
+    if opts.verify {
+        crate::exec::verify::verify(&plan)
+            .map_err(|d| anyhow!("planner produced an invalid plan — {d}"))?;
+    } else if cfg!(debug_assertions) {
+        if let Err(d) = crate::exec::verify::verify(&plan) {
+            panic!("planner produced an invalid plan — {d}");
+        }
+    }
     Ok(plan)
 }
 

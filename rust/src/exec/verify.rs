@@ -1,0 +1,863 @@
+//! Static plan verification: abstract interpretation over the [`ExecPlan`]
+//! instruction stream.
+//!
+//! [`ExecPlan::validate`] spot-checks per-instruction invariants (arity,
+//! shapes, bounds, view capability). This module goes further: it *runs* the
+//! plan abstractly, tracking which byte ranges of every arena slot hold a
+//! live value at each program point, and rejects plans whose aggressive
+//! aliasing tricks — fused epilogues, channel-stripe writes, same-slot SPPF
+//! hops, slot reuse — would read stale or never-written bytes, overlap
+//! concurrent writes, or race across the worker pool's row partition.
+//!
+//! The abstract domain is a set of **regions** per slot. A region is the
+//! byte footprint of one write (dense, or a channel stripe through a
+//! [`ChanView`]) plus its provenance: which instruction wrote it and which
+//! later write — legal slot reuse — killed it. Everything is measured in
+//! f32 elements of a single batch item; batches scale every row count
+//! linearly, so a plan proven safe at batch 1 is safe at any batch.
+//!
+//! Per instruction, in order:
+//!
+//! 1. **structure** — aligned input arrays, concat-only `cat_offs`, no
+//!    unlowered `Flatten`, in-place really in place (`arity`,
+//!    `unlowered-op`, `in-place-alias`).
+//! 2. **bounds** — every slot id in range, every footprint inside its
+//!    slot's per-batch size, overflow-checked (`slot-oob`,
+//!    `footprint-oob`).
+//! 3. **race proof** — a strided write must stay inside its row
+//!    (`hi ≤ stride`, the lemma that makes row partitions byte-disjoint),
+//!    and the [`chunk_ranges`] partition is re-derived for several worker
+//!    counts to prove consecutive chunks' byte extents disjoint
+//!    (`thread-race`).
+//! 4. **aliasing** — the instruction's own write stripes must be pairwise
+//!    disjoint (`write-overlap`), and reads from the output slot must not
+//!    overlap what it writes unless lowered in-place
+//!    (`same-slot-overlap`).
+//! 5. **coverage** — every byte read must be covered by live regions:
+//!    never-written bytes are `uninit-read`; bytes whose writer was
+//!    overwritten by a later slot tenant are `clobbered-read` (the
+//!    diagnostic names both the writer and the killer). Graph outputs are
+//!    checked as reads at the end of the program, which is also what proves
+//!    every concat root an output or consumer observes is fully covered by
+//!    its stripes.
+//! 6. **apply** — the write kills every overlapping live region (slot
+//!    reuse is legal; only *observing* dead bytes is an error) and becomes
+//!    a live region itself.
+//!
+//! Wiring: `build_plan_with` runs this on every plan it produces (the
+//! [`PlanOpts::verify`] toggle), `format::load` refuses untrusted `.dlrt`
+//! files that fail it, and `dlrt verify <model>` / `dlrt inspect --plan`
+//! expose it on the CLI. `tests/verify_fuzz.rs` proves it has teeth by
+//! mutating valid fuzz plans one corruption at a time.
+//!
+//! [`PlanOpts::verify`]: crate::exec::planner::PlanOpts::verify
+
+use std::fmt;
+
+use crate::dlrt::graph::Op;
+use crate::exec::planner::{ChanView, ExecPlan, Instr};
+use crate::util::threads::chunk_ranges;
+
+// ---------------------------------------------------------------------------
+// diagnostics
+// ---------------------------------------------------------------------------
+
+/// Rule names, stable for tests and CI greps.
+pub const RULE_ARITY: &str = "arity";
+pub const RULE_UNLOWERED_OP: &str = "unlowered-op";
+pub const RULE_IN_PLACE_ALIAS: &str = "in-place-alias";
+pub const RULE_SLOT_OOB: &str = "slot-oob";
+pub const RULE_FOOTPRINT_OOB: &str = "footprint-oob";
+pub const RULE_THREAD_RACE: &str = "thread-race";
+pub const RULE_WRITE_OVERLAP: &str = "write-overlap";
+pub const RULE_SAME_SLOT_OVERLAP: &str = "same-slot-overlap";
+pub const RULE_UNINIT_READ: &str = "uninit-read";
+pub const RULE_CLOBBERED_READ: &str = "clobbered-read";
+
+/// A structured verification failure: which rule, where, and why.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Diagnostic {
+    /// One of the `RULE_*` constants.
+    pub rule: &'static str,
+    /// Offending instruction index, or `None` for the plan-level input
+    /// spec / output specs.
+    pub instr: Option<usize>,
+    /// Instruction name (or `"input"` / `"output[k]"` for plan-level
+    /// checks) — ties the diagnostic back to the graph node.
+    pub name: String,
+    /// Slot the violation concerns, when one is identifiable.
+    pub slot: Option<usize>,
+    /// Human-readable explanation with the concrete byte ranges.
+    pub detail: String,
+}
+
+impl fmt::Display for Diagnostic {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "rule {}", self.rule)?;
+        match self.instr {
+            Some(i) => write!(f, " at instr {i} ({})", self.name)?,
+            None => write!(f, " at {}", self.name)?,
+        }
+        if let Some(s) = self.slot {
+            write!(f, " slot {s}")?;
+        }
+        write!(f, ": {}", self.detail)
+    }
+}
+
+impl std::error::Error for Diagnostic {}
+
+/// Statistics from a successful verification, for `dlrt verify` output.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct VerifyReport {
+    pub instrs: usize,
+    pub slots: usize,
+    /// Write regions tracked across the program.
+    pub regions: usize,
+    /// Live regions overwritten by slot reuse (legal kills).
+    pub kills: usize,
+    /// Read footprints (instruction inputs + graph outputs) proven covered
+    /// by live bytes.
+    pub reads: usize,
+    /// `(strided write, worker count)` row partitions re-derived and proven
+    /// byte-disjoint.
+    pub race_checks: usize,
+}
+
+// ---------------------------------------------------------------------------
+// footprints
+// ---------------------------------------------------------------------------
+
+/// Byte footprint of one access inside a slot, in f32 elements at batch 1.
+///
+/// `Strided` is a channel stripe: rows `0..rows`, each touching elements
+/// `[r*stride + lo, r*stride + hi)`. A full-width stripe (`lo == 0 &&
+/// hi == stride`) is normalized to `Contig` — the bytes are identical to a
+/// dense tensor's, which is exactly how `Flatten` aliases and dense readers
+/// of elided concat roots see them.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum Foot {
+    Contig { len: usize },
+    Strided { rows: usize, stride: usize, lo: usize, hi: usize },
+}
+
+impl Foot {
+    fn strided(rows: usize, stride: usize, lo: usize, hi: usize) -> Foot {
+        if rows == 0 || lo >= hi {
+            Foot::Contig { len: 0 }
+        } else if lo == 0 && hi == stride {
+            match rows.checked_mul(stride) {
+                Some(len) => Foot::Contig { len },
+                // overflow: keep the raw form; occupancy() will reject it
+                None => Foot::Strided { rows, stride, lo, hi },
+            }
+        } else {
+            Foot::Strided { rows, stride, lo, hi }
+        }
+    }
+
+    fn is_empty(&self) -> bool {
+        match *self {
+            Foot::Contig { len } => len == 0,
+            Foot::Strided { rows, lo, hi, .. } => rows == 0 || lo >= hi,
+        }
+    }
+
+    /// Slot elements the access occupies (what must fit in the slot): the
+    /// executor slices `rows × stride` for a strided access. Checked — a
+    /// hostile plan declaring astronomical dims must fail, not wrap.
+    fn occupancy(&self) -> Option<usize> {
+        match *self {
+            Foot::Contig { len } => Some(len),
+            Foot::Strided { rows, stride, .. } => rows.checked_mul(stride),
+        }
+    }
+
+    /// One-past-the-last element touched. Only called on footprints that
+    /// already passed `occupancy` bounds checks, so the arithmetic fits.
+    fn end(&self) -> usize {
+        match *self {
+            Foot::Contig { len } => len,
+            Foot::Strided { rows, stride, hi, .. } => {
+                if rows == 0 {
+                    0
+                } else {
+                    (rows - 1) * stride + hi
+                }
+            }
+        }
+    }
+
+    /// Do the two footprints touch any common element? Exact for
+    /// contig/contig, contig/stripe, and equal-stride stripe pairs (the
+    /// only aliasing the planner emits); conservative (byte extents) for
+    /// mixed strides.
+    fn overlaps(&self, other: &Foot) -> bool {
+        if self.is_empty() || other.is_empty() {
+            return false;
+        }
+        match (*self, *other) {
+            (Foot::Contig { len: a }, Foot::Contig { len: b }) => a > 0 && b > 0,
+            (Foot::Contig { len }, Foot::Strided { lo, .. })
+            | (Foot::Strided { lo, .. }, Foot::Contig { len }) => lo < len,
+            (
+                Foot::Strided { stride: s1, lo: l1, hi: h1, .. },
+                Foot::Strided { stride: s2, lo: l2, hi: h2, .. },
+            ) => {
+                if s1 == s2 {
+                    // same row geometry: overlap iff channel ranges overlap
+                    l1 < h2 && l2 < h1
+                } else {
+                    l1 < other.end() && l2 < self.end()
+                }
+            }
+        }
+    }
+}
+
+impl fmt::Display for Foot {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match *self {
+            Foot::Contig { len } => write!(f, "[0, {len})"),
+            Foot::Strided { rows, stride, lo, hi } => {
+                write!(f, "{rows} rows × channels [{lo}, {hi}) of {stride}")
+            }
+        }
+    }
+}
+
+fn numel_checked(tail: &[usize]) -> Option<usize> {
+    tail.iter().try_fold(1usize, |a, &d| a.checked_mul(d))
+}
+
+/// Footprint of a tensor access: dense, or a channel stripe under `view`.
+fn foot_of(tail: &[usize], view: Option<&ChanView>) -> Result<Foot, String> {
+    match view {
+        None => match numel_checked(tail) {
+            Some(len) => Ok(Foot::Contig { len }),
+            None => Err(format!("element count of shape {tail:?} overflows")),
+        },
+        Some(v) => {
+            let Some((&c, rows_tail)) = tail.split_last() else {
+                return Err("a strided view needs a channel dimension".into());
+            };
+            let rows = numel_checked(rows_tail)
+                .ok_or_else(|| format!("row count of shape {tail:?} overflows"))?;
+            let hi = v
+                .off
+                .checked_add(c)
+                .ok_or_else(|| format!("stripe end {} + {c} overflows", v.off))?;
+            Ok(Foot::strided(rows, v.stride, v.off, hi))
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// abstract state
+// ---------------------------------------------------------------------------
+
+/// One write's footprint plus provenance. `writer == None` is the request
+/// input; `killer` is the instruction whose write overwrote these bytes.
+#[derive(Debug, Clone, Copy)]
+struct Region {
+    foot: Foot,
+    writer: Option<usize>,
+    killer: Option<usize>,
+}
+
+/// Why a read footprint is not covered by live bytes.
+enum Gap {
+    Uninit,
+    Clobbered { writer: Option<usize>, killer: usize },
+}
+
+/// Merge-and-sweep: do the (unsorted, possibly overlapping) intervals cover
+/// `[lo, hi)` completely?
+fn intervals_cover(iv: &mut Vec<(usize, usize)>, lo: usize, hi: usize) -> bool {
+    iv.sort_unstable();
+    let mut covered_to = lo;
+    for &(a, b) in iv.iter() {
+        if a > covered_to {
+            break;
+        }
+        covered_to = covered_to.max(b);
+        if covered_to >= hi {
+            return true;
+        }
+    }
+    covered_to >= hi
+}
+
+/// Is a strided read of `rows` rows × channels `[lo, hi)` at `stride` fully
+/// covered by the live regions? Coverage comes from one dense region
+/// spanning the whole extent, or from merged equal-stride stripes with at
+/// least as many rows (plus whatever channel prefix a shorter dense region
+/// still provides at this row depth).
+fn covered_strided(live: &[&Region], rows: usize, stride: usize, lo: usize, hi: usize) -> bool {
+    let extent = (rows - 1) * stride + hi;
+    let mut iv: Vec<(usize, usize)> = Vec::new();
+    for r in live {
+        match r.foot {
+            Foot::Contig { len } => {
+                if len >= extent {
+                    return true;
+                }
+                // a shorter dense region still covers the channel prefix
+                // present in all `rows` rows
+                let avail = len.saturating_sub((rows - 1) * stride).min(stride);
+                if avail > 0 {
+                    iv.push((0, avail));
+                }
+            }
+            Foot::Strided { rows: r2, stride: s2, lo: l2, hi: h2 } => {
+                if s2 == stride && r2 >= rows {
+                    iv.push((l2, h2));
+                }
+            }
+        }
+    }
+    intervals_cover(&mut iv, lo, hi)
+}
+
+/// Is `foot` fully covered by live bytes of `regions`? On failure, blame a
+/// dead overlapping region (clobbered) if one exists, else uninit.
+fn covered(regions: &[Region], foot: &Foot) -> Result<(), Gap> {
+    if foot.is_empty() {
+        return Ok(());
+    }
+    let live: Vec<&Region> = regions.iter().filter(|r| r.killer.is_none()).collect();
+    let ok = match *foot {
+        Foot::Contig { len } => {
+            // a dense read is a full-width strided read for any candidate
+            // row geometry that tiles it exactly — this is how dense
+            // consumers of elided concat roots are proven covered by the
+            // root's stripes
+            let mut strides: Vec<usize> = live
+                .iter()
+                .filter_map(|r| match r.foot {
+                    Foot::Strided { stride, .. } => Some(stride),
+                    Foot::Contig { .. } => None,
+                })
+                .collect();
+            strides.sort_unstable();
+            strides.dedup();
+            live.iter()
+                .any(|r| matches!(r.foot, Foot::Contig { len: l } if l >= len))
+                || strides
+                    .iter()
+                    .any(|&s| s > 0 && len % s == 0 && covered_strided(&live, len / s, s, 0, s))
+        }
+        Foot::Strided { rows, stride, lo, hi } => covered_strided(&live, rows, stride, lo, hi),
+    };
+    if ok {
+        return Ok(());
+    }
+    for r in regions {
+        if let Some(k) = r.killer {
+            if r.foot.overlaps(foot) {
+                return Err(Gap::Clobbered { writer: r.writer, killer: k });
+            }
+        }
+    }
+    Err(Gap::Uninit)
+}
+
+// ---------------------------------------------------------------------------
+// the interpreter
+// ---------------------------------------------------------------------------
+
+/// Worker counts the race proof re-derives the row partition for. The
+/// partition arithmetic ([`chunk_ranges`]) is monotone in the thread count,
+/// so a handful of representative counts (including the odd one the fuzzer
+/// runs with) proves the pattern.
+const RACE_THREADS: [usize; 4] = [2, 3, 4, 8];
+
+struct Vm<'p> {
+    plan: &'p ExecPlan,
+    regions: Vec<Vec<Region>>,
+    report: VerifyReport,
+}
+
+/// Verify `plan` by abstract interpretation. `Ok` carries statistics for
+/// human output; `Err` carries a structured [`Diagnostic`] naming the rule,
+/// instruction, slot, and byte ranges involved.
+pub fn verify(plan: &ExecPlan) -> Result<VerifyReport, Diagnostic> {
+    let nslots = plan.slot_sizes.len();
+    let mut vm = Vm {
+        plan,
+        regions: vec![Vec::new(); nslots],
+        report: VerifyReport {
+            instrs: plan.instrs.len(),
+            slots: nslots,
+            ..VerifyReport::default()
+        },
+    };
+
+    // seed the request input as a live dense region
+    let plan_diag = |rule, name: &str, slot, detail| Diagnostic {
+        rule,
+        instr: None,
+        name: name.into(),
+        slot,
+        detail,
+    };
+    if plan.input_slot >= nslots {
+        return Err(plan_diag(
+            RULE_SLOT_OOB,
+            "input",
+            Some(plan.input_slot),
+            format!("input slot {} out of range ({nslots} slots)", plan.input_slot),
+        ));
+    }
+    let input_foot = foot_of(&plan.input_tail, None)
+        .map_err(|e| plan_diag(RULE_FOOTPRINT_OOB, "input", Some(plan.input_slot), e))?;
+    let occ = input_foot.occupancy().unwrap_or(usize::MAX);
+    if occ > plan.slot_sizes[plan.input_slot] {
+        return Err(plan_diag(
+            RULE_FOOTPRINT_OOB,
+            "input",
+            Some(plan.input_slot),
+            format!(
+                "input needs {occ} elems but slot {} holds {}",
+                plan.input_slot, plan.slot_sizes[plan.input_slot]
+            ),
+        ));
+    }
+    vm.regions[plan.input_slot].push(Region { foot: input_foot, writer: None, killer: None });
+    vm.report.regions += 1;
+
+    for (i, ins) in plan.instrs.iter().enumerate() {
+        vm.step(i, ins)?;
+    }
+
+    // graph outputs are reads at the end of the program: every byte the
+    // caller receives must be live — this is the concat-root coverage proof
+    for (k, o) in plan.outputs.iter().enumerate() {
+        let name = format!("output[{k}]");
+        if o.slot >= nslots {
+            return Err(plan_diag(
+                RULE_SLOT_OOB,
+                &name,
+                Some(o.slot),
+                format!("output slot {} out of range ({nslots} slots)", o.slot),
+            ));
+        }
+        let foot = foot_of(&o.tail, None)
+            .map_err(|e| plan_diag(RULE_FOOTPRINT_OOB, &name, Some(o.slot), e))?;
+        let occ = foot.occupancy().unwrap_or(usize::MAX);
+        if occ > plan.slot_sizes[o.slot] {
+            return Err(plan_diag(
+                RULE_FOOTPRINT_OOB,
+                &name,
+                Some(o.slot),
+                format!("output needs {occ} elems but slot {} holds {}", o.slot,
+                        plan.slot_sizes[o.slot]),
+            ));
+        }
+        vm.check_covered(&foot, o.slot, None, &name, "output tensor")?;
+    }
+
+    Ok(vm.report)
+}
+
+impl Vm<'_> {
+    fn diag(
+        &self,
+        rule: &'static str,
+        i: usize,
+        ins: &Instr,
+        slot: Option<usize>,
+        detail: String,
+    ) -> Diagnostic {
+        Diagnostic { rule, instr: Some(i), name: ins.name.clone(), slot, detail }
+    }
+
+    /// Structural bounds check of one footprint. Strided *writes* whose
+    /// stripe escapes its row break the row-disjointness lemma the worker
+    /// partition relies on — that is a race, not just an overflow.
+    fn check_foot(
+        &self,
+        i: usize,
+        ins: &Instr,
+        foot: &Foot,
+        slot: usize,
+        what: &str,
+        is_write: bool,
+    ) -> Result<(), Diagnostic> {
+        if let Foot::Strided { stride, lo, hi, .. } = *foot {
+            if hi > stride {
+                let (rule, why) = if is_write {
+                    (
+                        RULE_THREAD_RACE,
+                        "rows are no longer byte-disjoint across worker chunks",
+                    )
+                } else {
+                    (RULE_FOOTPRINT_OOB, "the read bleeds into the next row")
+                };
+                return Err(self.diag(
+                    rule,
+                    i,
+                    ins,
+                    Some(slot),
+                    format!("{what}: stripe [{lo}, {hi}) exceeds its {stride}-channel row — {why}"),
+                ));
+            }
+        }
+        let occ = foot.occupancy().ok_or_else(|| {
+            self.diag(
+                RULE_FOOTPRINT_OOB,
+                i,
+                ins,
+                Some(slot),
+                format!("{what}: footprint size overflows"),
+            )
+        })?;
+        if occ > self.plan.slot_sizes[slot] {
+            return Err(self.diag(
+                RULE_FOOTPRINT_OOB,
+                i,
+                ins,
+                Some(slot),
+                format!(
+                    "{what}: needs {occ} elems but slot {slot} holds {}",
+                    self.plan.slot_sizes[slot]
+                ),
+            ));
+        }
+        Ok(())
+    }
+
+    /// Coverage check of one read footprint against the slot's regions.
+    fn check_covered(
+        &mut self,
+        foot: &Foot,
+        slot: usize,
+        instr: Option<usize>,
+        name: &str,
+        what: &str,
+    ) -> Result<(), Diagnostic> {
+        match covered(&self.regions[slot], foot) {
+            Ok(()) => {
+                self.report.reads += 1;
+                Ok(())
+            }
+            Err(Gap::Uninit) => Err(Diagnostic {
+                rule: RULE_UNINIT_READ,
+                instr,
+                name: name.into(),
+                slot: Some(slot),
+                detail: format!("{what} reads {foot} of slot {slot}, which was never written"),
+            }),
+            Err(Gap::Clobbered { writer, killer }) => Err(Diagnostic {
+                rule: RULE_CLOBBERED_READ,
+                instr,
+                name: name.into(),
+                slot: Some(slot),
+                detail: format!(
+                    "{what} reads {foot} of slot {slot}, but the value written by {} was \
+                     overwritten by instr {killer} (slot reuse)",
+                    match writer {
+                        Some(w) => format!("instr {w}"),
+                        None => "the request input".into(),
+                    }
+                ),
+            }),
+        }
+    }
+
+    fn step(&mut self, i: usize, ins: &Instr) -> Result<(), Diagnostic> {
+        let nslots = self.plan.slot_sizes.len();
+        let is_concat = matches!(ins.op, Op::Concat);
+
+        // ---- structure ----------------------------------------------------
+        if ins.in_tails.len() != ins.in_slots.len() || ins.in_views.len() != ins.in_slots.len() {
+            return Err(self.diag(
+                RULE_ARITY,
+                i,
+                ins,
+                None,
+                format!(
+                    "{} input slots but {} tails and {} views",
+                    ins.in_slots.len(),
+                    ins.in_tails.len(),
+                    ins.in_views.len()
+                ),
+            ));
+        }
+        if is_concat {
+            if ins.cat_offs.len() != ins.in_slots.len() {
+                return Err(self.diag(
+                    RULE_ARITY,
+                    i,
+                    ins,
+                    None,
+                    format!(
+                        "concat with {} inputs but {} destination offsets",
+                        ins.in_slots.len(),
+                        ins.cat_offs.len()
+                    ),
+                ));
+            }
+            if ins.out_tail.is_empty() || ins.in_tails.iter().any(|t| t.is_empty()) {
+                return Err(self.diag(
+                    RULE_ARITY,
+                    i,
+                    ins,
+                    None,
+                    "concat tensors need a channel dimension".into(),
+                ));
+            }
+        } else if !ins.cat_offs.is_empty() || ins.cat_partial {
+            return Err(self.diag(
+                RULE_ARITY,
+                i,
+                ins,
+                None,
+                "cat_offs/cat_partial on a non-concat instruction".into(),
+            ));
+        }
+        if matches!(ins.op, Op::Flatten) {
+            return Err(self.diag(
+                RULE_UNLOWERED_OP,
+                i,
+                ins,
+                None,
+                "Flatten must be lowered to a metadata-only alias, not an instruction".into(),
+            ));
+        }
+        if ins.in_place
+            && (ins.in_slots.first() != Some(&ins.out_slot)
+                || ins.in_views.iter().any(|v| v.is_some())
+                || ins.out_view.is_some())
+        {
+            return Err(self.diag(
+                RULE_IN_PLACE_ALIAS,
+                i,
+                ins,
+                Some(ins.out_slot),
+                format!(
+                    "in-place instruction must read and write the same slot densely \
+                     (reads {:?}, writes {})",
+                    ins.in_slots, ins.out_slot
+                ),
+            ));
+        }
+
+        // ---- slot ids -----------------------------------------------------
+        for &s in ins.in_slots.iter().chain(std::iter::once(&ins.out_slot)) {
+            if s >= nslots {
+                return Err(self.diag(
+                    RULE_SLOT_OOB,
+                    i,
+                    ins,
+                    Some(s),
+                    format!("slot {s} out of range ({nslots} slots)"),
+                ));
+            }
+        }
+
+        // ---- footprints ---------------------------------------------------
+        let mut read_foots: Vec<(usize, Foot)> = Vec::with_capacity(ins.in_slots.len());
+        for (k, &s) in ins.in_slots.iter().enumerate() {
+            let f = foot_of(&ins.in_tails[k], ins.in_views[k].as_ref())
+                .map_err(|e| self.diag(RULE_FOOTPRINT_OOB, i, ins, Some(s), format!("input {k}: {e}")))?;
+            self.check_foot(i, ins, &f, s, &format!("input {k}"), false)?;
+            read_foots.push((s, f));
+        }
+        let write_foots: Vec<Foot> = if is_concat {
+            // each copied input lands as a channel stripe of the output row
+            // at `base + cat_offs[k]`; nested concats compound through the
+            // output view's base offset
+            let rows = numel_checked(&ins.out_tail[..ins.out_tail.len() - 1]).ok_or_else(|| {
+                self.diag(RULE_FOOTPRINT_OOB, i, ins, Some(ins.out_slot),
+                          "concat row count overflows".into())
+            })?;
+            let (base, stride) = match ins.out_view {
+                Some(v) => (v.off, v.stride),
+                None => (0, *ins.out_tail.last().expect("checked non-empty")),
+            };
+            let mut feet = Vec::with_capacity(ins.in_tails.len());
+            for (k, t) in ins.in_tails.iter().enumerate() {
+                let c = *t.last().expect("checked non-empty");
+                let lo = base.checked_add(ins.cat_offs[k]).ok_or_else(|| {
+                    self.diag(RULE_FOOTPRINT_OOB, i, ins, Some(ins.out_slot),
+                              format!("destination offset of input {k} overflows"))
+                })?;
+                let hi = lo.checked_add(c).ok_or_else(|| {
+                    self.diag(RULE_FOOTPRINT_OOB, i, ins, Some(ins.out_slot),
+                              format!("destination stripe of input {k} overflows"))
+                })?;
+                feet.push(Foot::strided(rows, stride, lo, hi));
+            }
+            feet
+        } else {
+            vec![foot_of(&ins.out_tail, ins.out_view.as_ref()).map_err(|e| {
+                self.diag(RULE_FOOTPRINT_OOB, i, ins, Some(ins.out_slot), format!("output: {e}"))
+            })?]
+        };
+        for (k, f) in write_foots.iter().enumerate() {
+            let what =
+                if is_concat { format!("destination stripe {k}") } else { "output".to_string() };
+            self.check_foot(i, ins, f, ins.out_slot, &what, true)?;
+        }
+
+        // ---- race proof: re-derive the worker row partition --------------
+        // Every strided footprint now satisfies hi ≤ stride, so row byte
+        // extents are disjoint by construction; re-derive the actual chunk
+        // partition for several worker counts and prove consecutive chunks'
+        // byte extents never overlap — against the same chunk_ranges math
+        // the pool dispatches.
+        for f in &write_foots {
+            if let Foot::Strided { rows, stride, lo, hi } = *f {
+                for nt in RACE_THREADS {
+                    let mut prev_end: Option<usize> = None;
+                    for (clo, chi) in chunk_ranges(rows, nt) {
+                        let start = clo * stride + lo;
+                        let end = (chi - 1) * stride + hi;
+                        if let Some(pe) = prev_end {
+                            if start < pe {
+                                return Err(self.diag(
+                                    RULE_THREAD_RACE,
+                                    i,
+                                    ins,
+                                    Some(ins.out_slot),
+                                    format!(
+                                        "{nt}-thread row partition of write {f}: chunk starting \
+                                         at elem {start} begins before the previous chunk ends \
+                                         at {pe}"
+                                    ),
+                                ));
+                            }
+                        }
+                        prev_end = Some(end);
+                    }
+                    self.report.race_checks += 1;
+                }
+            }
+        }
+
+        // ---- the instruction's own writes must not overlap ---------------
+        for (a, fa) in write_foots.iter().enumerate() {
+            for (b, fb) in write_foots.iter().enumerate().skip(a + 1) {
+                if fa.overlaps(fb) {
+                    return Err(self.diag(
+                        RULE_WRITE_OVERLAP,
+                        i,
+                        ins,
+                        Some(ins.out_slot),
+                        format!("destination stripes {a} ({fa}) and {b} ({fb}) overlap"),
+                    ));
+                }
+            }
+        }
+
+        // ---- same-slot reads must clear the writes (unless in-place) ------
+        if !ins.in_place {
+            for (k, (s, rf)) in read_foots.iter().enumerate() {
+                if *s != ins.out_slot {
+                    continue;
+                }
+                for wf in &write_foots {
+                    if rf.overlaps(wf) {
+                        return Err(self.diag(
+                            RULE_SAME_SLOT_OVERLAP,
+                            i,
+                            ins,
+                            Some(ins.out_slot),
+                            format!("input {k} reads {rf} while the instruction writes {wf}"),
+                        ));
+                    }
+                }
+            }
+        }
+
+        // ---- every byte read must be live ---------------------------------
+        let name = ins.name.clone();
+        for (k, (s, rf)) in read_foots.iter().enumerate() {
+            self.check_covered(rf, *s, Some(i), &name, &format!("input {k}"))?;
+        }
+
+        // ---- apply: kill overwritten regions, record the new value --------
+        for f in write_foots {
+            if f.is_empty() {
+                continue;
+            }
+            for r in self.regions[ins.out_slot].iter_mut() {
+                if r.killer.is_none() && r.foot.overlaps(&f) {
+                    r.killer = Some(i);
+                    self.report.kills += 1;
+                }
+            }
+            self.regions[ins.out_slot].push(Region { foot: f, writer: Some(i), killer: None });
+            self.report.regions += 1;
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::exec::planner::{build_plan, build_plan_with, PlanOpts};
+    use crate::models::tiny_test_graph;
+
+    #[test]
+    fn tiny_graph_plans_verify_clean() {
+        for fused in [false, true] {
+            let g = tiny_test_graph(fused);
+            for opts in [PlanOpts::default(), PlanOpts::none()] {
+                let plan = build_plan_with(&g, opts).unwrap();
+                let report = verify(&plan).unwrap_or_else(|d| panic!("rejected: {d}"));
+                assert_eq!(report.instrs, plan.instrs.len());
+                assert!(report.reads > 0);
+                assert!(report.regions > 0);
+            }
+        }
+    }
+
+    #[test]
+    fn shrunk_slot_is_rejected_with_footprint_rule() {
+        let g = tiny_test_graph(true);
+        let mut plan = build_plan(&g).unwrap();
+        let victim = plan.instrs[0].out_slot;
+        plan.slot_sizes[victim] = 0;
+        let d = verify(&plan).unwrap_err();
+        assert_eq!(d.rule, RULE_FOOTPRINT_OOB, "{d}");
+        assert_eq!(d.slot, Some(victim), "{d}");
+    }
+
+    #[test]
+    fn reading_an_unwritten_slot_is_rejected() {
+        let g = tiny_test_graph(false);
+        let mut plan = build_plan(&g).unwrap();
+        // grow a fresh slot nothing ever writes and point an input at it
+        plan.slot_sizes.push(1 << 20);
+        let fresh = plan.slot_sizes.len() - 1;
+        let victim = plan
+            .instrs
+            .iter()
+            .position(|i| !i.in_place && i.in_views.iter().all(|v| v.is_none()))
+            .expect("a dense reader exists");
+        plan.instrs[victim].in_slots[0] = fresh;
+        let d = verify(&plan).unwrap_err();
+        assert_eq!(d.rule, RULE_UNINIT_READ, "{d}");
+        assert_eq!(d.instr, Some(victim), "{d}");
+        assert_eq!(d.slot, Some(fresh), "{d}");
+    }
+
+    #[test]
+    fn diagnostic_display_names_rule_instr_and_slot() {
+        let d = Diagnostic {
+            rule: RULE_CLOBBERED_READ,
+            instr: Some(7),
+            name: "cv3".into(),
+            slot: Some(2),
+            detail: "stale bytes".into(),
+        };
+        let s = format!("{d}");
+        assert!(s.contains("rule clobbered-read"), "{s}");
+        assert!(s.contains("instr 7"), "{s}");
+        assert!(s.contains("cv3"), "{s}");
+        assert!(s.contains("slot 2"), "{s}");
+    }
+}

@@ -44,6 +44,13 @@
 //! * [`util`] — hand-rolled substrates for this offline environment: JSON
 //!   codec, xorshift RNG, mini property-test driver, CLI parsing.
 
+// The unsafe surface (arena slot views, the lifetime-erased worker-pool
+// jobs) is small and audited: every unsafe operation must sit in an explicit
+// `unsafe` block carrying a `// SAFETY:` comment. CI compiles with
+// `-D warnings`, which turns both lints into hard errors there.
+#![deny(unsafe_op_in_unsafe_fn)]
+#![warn(clippy::undocumented_unsafe_blocks)]
+
 pub mod bench_harness;
 pub mod compiler;
 pub mod coordinator;

@@ -5,6 +5,8 @@
 //! dlrt run     <file.dlrt | model_dir> [--threads N] [--reps N] [--batch B]
 //! dlrt inspect [<file.dlrt | model_dir>] [--model NAME --res N] [--layers]
 //!              [--plan]                  # dump the lowered execution plan
+//! dlrt verify  [<file.dlrt | model_dir>] [--model NAME --res N]
+//!              # run the static plan verifier and print its evidence counters
 //! dlrt bench   [--model resnet18|resnet50|vgg16_ssd|yolov5n|s|m]
 //!              [--res N] [--engine auto|fp32|int8] [--threads N] [--reps N]
 //! dlrt cost    [--model ...] [--res N] [--cpu a53|a72|a57] [--threads N]
@@ -56,6 +58,7 @@ fn main() {
         "compile" => cmd_compile(&args),
         "run" => cmd_run(&args),
         "inspect" => cmd_inspect(&args),
+        "verify" => cmd_verify(&args),
         "bench" => cmd_bench(&args),
         "cost" => cmd_cost(&args),
         "serve" => cmd_serve(&args),
@@ -79,7 +82,7 @@ fn main() {
 
 fn print_usage() {
     eprintln!("dlrt — ultra-low-bit bitserial inference runtime (DeepliteRT repro)");
-    eprintln!("commands: compile | run | inspect | bench | cost | serve | client | pjrt");
+    eprintln!("commands: compile | run | inspect | verify | bench | cost | serve | client | pjrt");
     eprintln!("see rust/src/main.rs docs or README.md for flags");
 }
 
@@ -121,22 +124,47 @@ fn random_input(model: &dlrt::exec::CompiledModel, batch: usize, seed: u64) -> T
 }
 
 fn cmd_compile(args: &Args) -> Result<()> {
-    let dir = args.positional.first().context("usage: dlrt compile <model_dir> --out f.dlrt")?;
+    // accepts an exported model dir positionally, or a native builder via
+    // --model NAME --res N (so CI can roundtrip a .dlrt without artifacts)
     let engine = EngineChoice::parse(args.get_or("engine", "auto"))?;
-    let g = load_arch(Path::new(dir))?;
-    let model = compile_graph(&g, engine)?;
+    let (name, model) = load_model(args, engine)?;
     let out = PathBuf::from(args.get_or("out", "model.dlrt"));
     format::save(&model, &out)?;
-    let fp32_bytes: usize = g.weights.values().map(|w| w.w.len() * 4).sum();
-    println!("compiled {} -> {}", g.name, out.display());
+    let fp32_bytes: usize = model.graph.weights.values().map(|w| w.w.len() * 4).sum();
+    println!("compiled {name} -> {}", out.display());
     println!("engines: {:?}", model.engine_summary());
-    println!(
-        "weights: {} B packed vs {} B fp32 ({:.2}x compression)",
-        model.weight_bytes(),
-        fp32_bytes,
-        fp32_bytes as f64 / model.weight_bytes() as f64
-    );
+    if fp32_bytes > 0 {
+        println!(
+            "weights: {} B packed vs {} B fp32 ({:.2}x compression)",
+            model.weight_bytes(),
+            fp32_bytes,
+            fp32_bytes as f64 / model.weight_bytes() as f64
+        );
+    } else {
+        println!("weights: {} B packed", model.weight_bytes());
+    }
     Ok(())
+}
+
+fn cmd_verify(args: &Args) -> Result<()> {
+    let engine = EngineChoice::parse(args.get_or("engine", "auto"))?;
+    let (name, model) = load_model(args, engine)?;
+    match dlrt::exec::verify::verify(&model.plan) {
+        Ok(rep) => {
+            println!("{name}: plan OK");
+            println!(
+                "verified {} instrs over {} slots: {} regions, {} kills, {} reads checked, \
+                 {} race partitions proven disjoint",
+                rep.instrs, rep.slots, rep.regions, rep.kills, rep.reads, rep.race_checks
+            );
+            Ok(())
+        }
+        Err(d) => {
+            println!("{name}: plan REJECTED");
+            println!("{d}");
+            bail!("plan verification failed for {name}")
+        }
+    }
 }
 
 fn cmd_run(args: &Args) -> Result<()> {
@@ -206,6 +234,13 @@ fn cmd_inspect(args: &Args) -> Result<()> {
         println!("stripe readers      : {}", p.read_view_instrs());
         println!("same-slot stripes   : {}", p.same_slot_stripe_instrs());
         println!("concat copy instrs  : {}", p.concat_copy_instrs());
+        match dlrt::exec::verify::verify(p) {
+            Ok(rep) => println!(
+                "verifier: OK — {} regions, {} kills, {} reads, {} race partitions",
+                rep.regions, rep.kills, rep.reads, rep.race_checks
+            ),
+            Err(d) => println!("verifier: REJECTED — {d}"),
+        }
         println!(
             "arena   : {} f32 elems ({} bytes) @ batch {} — interpreter peak {} ({} bytes)",
             p.arena_elems(p.nominal_batch),

@@ -1,0 +1,224 @@
+//! Shared test substrate: the seeded random-graph generator and helpers
+//! used by both the differential plan fuzzer (`plan_fuzz.rs`) and the
+//! verifier mutation fuzzer (`verify_fuzz.rs`). Keeping one generator means
+//! the verifier is proven against exactly the plan population the executor
+//! is proven on.
+
+// Each test binary compiles this module separately and uses a different
+// subset of it; unused-item warnings here would be noise under -D warnings.
+#![allow(dead_code)]
+
+use dlrt::dlrt::graph::{Graph, Op, QCfg};
+use dlrt::models::GraphBuilder;
+use dlrt::util::rng::Rng;
+use dlrt::Tensor;
+
+#[derive(Clone)]
+pub struct T {
+    pub name: String,
+    pub h: usize,
+    pub w: usize,
+    pub c: usize,
+}
+
+pub fn random_act(rng: &mut Rng) -> Op {
+    match rng.usize(5) {
+        0 => Op::Relu,
+        1 => Op::Relu6,
+        2 => Op::LeakyRelu,
+        3 => Op::Silu,
+        _ => Op::Sigmoid,
+    }
+}
+
+pub fn random_act_opt(rng: &mut Rng) -> Option<Op> {
+    if rng.usize(2) == 0 {
+        Some(random_act(rng))
+    } else {
+        None
+    }
+}
+
+pub fn random_qcfg(rng: &mut Rng) -> QCfg {
+    if rng.usize(4) == 0 {
+        QCfg::FP32
+    } else {
+        QCfg::new(1 + rng.usize(3) as u8, 1 + rng.usize(3) as u8)
+    }
+}
+
+/// Build a random valid graph. Structure decisions come from a generator
+/// RNG derived from (but distinct from) the seed the builder uses for
+/// weights, so weights and topology vary independently.
+pub fn random_graph(seed: u64) -> Graph {
+    let mut rng = Rng::new(seed.wrapping_mul(0x9e37_79b9_7f4a_7c15).wrapping_add(1));
+    let h = [4usize, 6, 8][rng.usize(3)];
+    let c = 1 + rng.usize(4);
+    let mut b = GraphBuilder::new(&format!("fuzz{seed}"), [1, h, h, c], seed);
+    let mut pool: Vec<T> = vec![T { name: "input".into(), h, w: h, c }];
+    let mut last = pool[0].clone();
+    let mut uid = 0usize;
+    let n_ops = 4 + rng.usize(8);
+    for _ in 0..n_ops {
+        let pick = rng.usize(100);
+        let t = pool[rng.usize(pool.len())].clone();
+        let new = if pick < 20 {
+            // conv: random kernel/stride/bits, optional fused-able act
+            let k = [1usize, 3][rng.usize(2)];
+            let s = if t.h >= 2 && t.w >= 2 && rng.usize(4) == 0 { 2 } else { 1 };
+            let p = k / 2;
+            let cout = 1 + rng.usize(6);
+            let name = b.conv(&t.name, cout, k, s, random_qcfg(&mut rng),
+                              random_act_opt(&mut rng));
+            let oh = (t.h + 2 * p - k) / s + 1;
+            let ow = (t.w + 2 * p - k) / s + 1;
+            Some(T { name, h: oh, w: ow, c: cout })
+        } else if pick < 40 {
+            // residual block: shape-preserving conv (+ optional act) + add
+            // with the skip tensor — the Add/residual fusion's home turf
+            // (nests when `t` is itself a residual output)
+            let y = b.conv(&t.name, t.c, 3, 1, random_qcfg(&mut rng),
+                           random_act_opt(&mut rng));
+            let sum = b.add(&y, &t.name);
+            let sum = if rng.usize(2) == 0 {
+                uid += 1;
+                b.act_named(&format!("post{uid}"), &sum, random_act(&mut rng))
+            } else {
+                sum
+            };
+            Some(T { name: sum, ..t.clone() })
+        } else if pick < 52 {
+            // concat of 2-3 same-spatial tensors (concat outputs included,
+            // so concat-of-concat arises; multi-use inputs stripe via read
+            // views; duplicated inputs and the graph input force per-
+            // producer copy fallbacks — i.e. partial stripes)
+            let mates: Vec<T> =
+                pool.iter().filter(|x| x.h == t.h && x.w == t.w).cloned().collect();
+            let take = 2 + rng.usize(2);
+            let chosen: Vec<T> =
+                (0..take).map(|_| mates[rng.usize(mates.len())].clone()).collect();
+            let ctot: usize = chosen.iter().map(|x| x.c).sum();
+            if ctot <= 32 {
+                let names: Vec<&str> = chosen.iter().map(|x| x.name.as_str()).collect();
+                let name = b.concat(&names);
+                Some(T { name, h: t.h, w: t.w, c: ctot })
+            } else {
+                None
+            }
+        } else if pick < 60 {
+            // SPPF-style serial-pool pyramid: conv → pool → pool, all
+            // levels concat'd. Every producer is multi-use (the next pool
+            // + the concat), so striping them exercises stride-aware reads
+            // including the same-slot stripe-to-stripe pool path.
+            if t.h >= 2 && t.w >= 2 && t.c <= 8 {
+                let ch = 1 + rng.usize(4);
+                let y = b.conv(&t.name, ch, 1, 1, random_qcfg(&mut rng),
+                               random_act_opt(&mut rng));
+                let p1 = b.maxpool(&y, 3, 1, 1);
+                let p2 = b.maxpool(&p1, 3, 1, 1);
+                let name = b.concat(&[&y, &p1, &p2]);
+                Some(T { name, h: t.h, w: t.w, c: 3 * ch })
+            } else {
+                None
+            }
+        } else if pick < 68 {
+            // maxpool (downsampling or padded same-size)
+            if t.h >= 2 && t.w >= 2 {
+                if rng.usize(2) == 0 {
+                    let name = b.maxpool(&t.name, 2, 2, 0);
+                    Some(T { name, h: (t.h - 2) / 2 + 1, w: (t.w - 2) / 2 + 1, c: t.c })
+                } else {
+                    let name = b.maxpool(&t.name, 3, 1, 1);
+                    Some(T { name, ..t.clone() })
+                }
+            } else {
+                None
+            }
+        } else if pick < 78 {
+            // upsample (bounded so tensors stay small)
+            if t.h <= 8 && t.w <= 8 {
+                let name = b.upsample2x(&t.name);
+                Some(T { name, h: 2 * t.h, w: 2 * t.w, c: t.c })
+            } else {
+                None
+            }
+        } else if pick < 90 {
+            // standalone activation (in-place / stripe-capable)
+            uid += 1;
+            let name = b.act_named(&format!("act{uid}"), &t.name, random_act(&mut rng));
+            Some(T { name, ..t.clone() })
+        } else {
+            // add of two same-shape tensors (incl. x + x)
+            let mates: Vec<T> = pool
+                .iter()
+                .filter(|x| x.h == t.h && x.w == t.w && x.c == t.c)
+                .cloned()
+                .collect();
+            let other = mates[rng.usize(mates.len())].clone();
+            let name = b.add(&t.name, &other.name);
+            Some(T { name, ..t.clone() })
+        };
+        if let Some(nt) = new {
+            pool.push(nt.clone());
+            last = nt;
+        }
+    }
+
+    let mut outputs: Vec<String> = Vec::new();
+    match rng.usize(4) {
+        0 => {
+            // classifier tail: flatten alias + dense (+ optional act)
+            let f = b.flatten(&last.name);
+            let mut d = b.dense(&f, last.h * last.w * last.c, 1 + rng.usize(5));
+            if rng.usize(2) == 0 {
+                d = b.act_named("head", &d, Op::Sigmoid);
+            }
+            outputs.push(d);
+        }
+        1 => {
+            let gap = b.global_avg_pool(&last.name);
+            let d = b.dense(&gap, last.c, 1 + rng.usize(5));
+            outputs.push(d);
+        }
+        _ => outputs.push(last.name.clone()),
+    }
+    // sometimes expose a mid-graph tensor too (outputs pin their slots)
+    if rng.usize(3) == 0 {
+        let extra = pool[rng.usize(pool.len())].name.clone();
+        if !outputs.contains(&extra) {
+            outputs.push(extra);
+        }
+    }
+    b.finish(outputs)
+}
+
+pub fn dump(g: &Graph) -> String {
+    use std::fmt::Write;
+    let mut s = String::new();
+    writeln!(s, "  input {:?} {:?}", g.input_name, g.input_shape).unwrap();
+    for n in &g.nodes {
+        let extra = match &n.op {
+            Op::Conv2d { kernel, stride, padding, qcfg, .. } => {
+                format!(" k{kernel:?} s{stride:?} p{padding:?} {}", qcfg.tag())
+            }
+            _ => String::new(),
+        };
+        writeln!(s, "  {:<12} {:<16} {:?} -> {}{extra}", n.op.name(), n.name, n.inputs,
+                 n.output)
+            .unwrap();
+    }
+    writeln!(s, "  outputs {:?}", g.outputs).unwrap();
+    s
+}
+
+/// Deterministic input mixing exact low-bit codes with negatives and
+/// non-representable values.
+pub fn fuzz_input(g: &Graph, batch: usize, seed: u64) -> Tensor {
+    let s = g.input_shape;
+    let mut rng = Rng::new(seed ^ 0xf00d);
+    let mut x = Tensor::zeros(vec![batch, s[1], s[2], s[3]]);
+    for v in x.data.iter_mut() {
+        *v = (rng.usize(9) as f32) * 0.125 - 0.5;
+    }
+    x
+}

@@ -1,0 +1,37 @@
+//! A deliberately tiny plan-parity case for Miri: one quantized conv with a
+//! fused activation, a pool, and a concat, run through the arena executor on
+//! a 2-thread pool against the unfused reference interpreter. Small enough
+//! to interpret in seconds, yet it exercises the crate's entire unsafe
+//! surface — lifetime-erased jobs, the latch, and aliased arena slot views —
+//! under Miri's borrow and data-race checking. The CI miri job runs this
+//! alongside the kernel unit tests.
+
+use dlrt::compiler::{compile_graph, EngineChoice};
+use dlrt::dlrt::graph::{Op, QCfg};
+use dlrt::exec::{reference, Executor};
+use dlrt::models::GraphBuilder;
+use dlrt::Tensor;
+
+#[test]
+fn tiny_plan_parity_under_two_threads() {
+    let mut b = GraphBuilder::new("miri", [1, 4, 4, 2], 7);
+    let c1 = b.conv("input", 2, 1, 1, QCfg::new(2, 2), Some(Op::Relu));
+    let p1 = b.maxpool(&c1, 3, 1, 1);
+    let cat = b.concat(&[&c1, &p1]);
+    let g = b.finish(vec![cat]);
+    let model = compile_graph(&g, EngineChoice::Auto).unwrap();
+
+    let mut x = Tensor::zeros(vec![1, 4, 4, 2]);
+    for (i, v) in x.data.iter_mut().enumerate() {
+        *v = ((i % 7) as f32) * 0.25 - 0.75;
+    }
+
+    let mut ex = Executor::new(2);
+    let got = ex.run(&model, &x).unwrap();
+    let want = reference::run_unfused(&model, &x, 2).unwrap();
+    assert_eq!(got.len(), want.len());
+    for (a, w) in got.iter().zip(&want) {
+        assert_eq!(a.shape, w.shape);
+        assert_eq!(a.data, w.data);
+    }
+}

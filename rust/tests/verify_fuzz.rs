@@ -1,0 +1,354 @@
+//! Mutation fuzzing of the plan verifier: proves it has teeth.
+//!
+//! Every seeded random graph from the shared generator is lowered three ways
+//! (full optimizations, none, and no strided reads) and all resulting plans
+//! must verify **clean** — zero false positives, or `build_plan_with` /
+//! `format::load` would start refusing valid models. Then each plan gets one
+//! targeted corruption per mutation class — shrink a slot, widen a stripe
+//! past its row, collapse two producer stripes onto the same channels,
+//! retarget a read at a not-yet-written slot, resurrect a value that slot
+//! reuse overwrote, skew a concat destination offset — and the verifier must
+//! reject every single mutant. Per-class applied/caught counters are printed
+//! in greppable form and asserted non-vacuous, so a generator drift that
+//! stops producing some pattern fails loudly instead of silently shrinking
+//! coverage.
+
+mod common;
+
+use std::collections::{BTreeMap, BTreeSet};
+
+use common::random_graph;
+use dlrt::dlrt::graph::Op;
+use dlrt::exec::planner::{build_plan_with, ExecPlan, Instr, PlanOpts};
+use dlrt::exec::verify::verify;
+
+/// Seeds per run: the CI release smoke sweeps the full 500; debug builds
+/// (plain `cargo test`) run a subset to keep tier-1 fast.
+const SEEDS: u64 = if cfg!(debug_assertions) { 150 } else { 500 };
+
+fn numel(tail: &[usize]) -> usize {
+    tail.iter().product()
+}
+
+/// Slot elements a strided access occupies (`rows × stride`, mirroring how
+/// the executor slices the arena).
+fn occ_view(tail: &[usize], stride: usize) -> usize {
+    let rows: usize = tail[..tail.len() - 1].iter().product();
+    rows * stride
+}
+
+fn read_occ(ins: &Instr, k: usize) -> usize {
+    match &ins.in_views[k] {
+        Some(v) => occ_view(&ins.in_tails[k], v.stride),
+        None => numel(&ins.in_tails[k]),
+    }
+}
+
+fn write_occ(ins: &Instr) -> usize {
+    let stride = match (&ins.out_view, matches!(ins.op, Op::Concat)) {
+        (Some(v), _) => v.stride,
+        (None, true) => *ins.out_tail.last().unwrap(),
+        (None, false) => return numel(&ins.out_tail),
+    };
+    occ_view(&ins.out_tail, stride)
+}
+
+// ---------------------------------------------------------------------------
+// mutation classes — each finds an applicable site and returns the corrupted
+// plan plus a human description, or None when the plan has no such site
+// ---------------------------------------------------------------------------
+
+/// Shrink the slot that some access fills exactly, by one element: that
+/// access no longer fits.
+fn mutate_shrink_slot(p: &ExecPlan) -> Option<(ExecPlan, String)> {
+    let mut max_occ = vec![0usize; p.slot_sizes.len()];
+    let bump = |s: usize, occ: usize, m: &mut Vec<usize>| m[s] = m[s].max(occ);
+    bump(p.input_slot, numel(&p.input_tail), &mut max_occ);
+    for ins in &p.instrs {
+        for k in 0..ins.in_slots.len() {
+            bump(ins.in_slots[k], read_occ(ins, k), &mut max_occ);
+        }
+        bump(ins.out_slot, write_occ(ins), &mut max_occ);
+    }
+    for o in &p.outputs {
+        bump(o.slot, numel(&o.tail), &mut max_occ);
+    }
+    let (s, &occ) = max_occ.iter().enumerate().max_by_key(|&(_, &o)| o)?;
+    if occ == 0 {
+        return None;
+    }
+    let mut m = p.clone();
+    m.slot_sizes[s] = occ - 1;
+    Some((m, format!("slot {s} shrunk from {} to {}", p.slot_sizes[s], occ - 1)))
+}
+
+/// Shift a strided writer so its stripe ends one element past its row: rows
+/// are no longer byte-disjoint and the worker partition would race.
+fn mutate_widen_stripe(p: &ExecPlan) -> Option<(ExecPlan, String)> {
+    let (i, off) = p.instrs.iter().enumerate().find_map(|(i, ins)| {
+        if matches!(ins.op, Op::Concat) {
+            return None;
+        }
+        let v = ins.out_view.as_ref()?;
+        let c = *ins.out_tail.last()?;
+        if c == 0 || c > v.stride {
+            return None;
+        }
+        Some((i, v.stride + 1 - c))
+    })?;
+    let mut m = p.clone();
+    m.instrs[i].out_view.as_mut().unwrap().off = off;
+    Some((m, format!("instr {i}: stripe shifted to end at stride+1")))
+}
+
+/// Collapse two producers striping disjoint channel ranges of an output
+/// root onto the same offset: the later stripe silently overwrites the
+/// earlier one, and the root's reader sees dead bytes.
+fn mutate_overlap_stripes(p: &ExecPlan) -> Option<(ExecPlan, String)> {
+    let out_slots: BTreeSet<usize> = p.outputs.iter().map(|o| o.slot).collect();
+    let n = p.instrs.len();
+    for i1 in 0..n {
+        let a = &p.instrs[i1];
+        if matches!(a.op, Op::Concat) {
+            continue;
+        }
+        let Some(v1) = a.out_view else { continue };
+        let s = a.out_slot;
+        // the root must actually be observed: an output spec reads its full
+        // extent at the end of the program
+        if !out_slots.contains(&s) {
+            continue;
+        }
+        for i2 in i1 + 1..n {
+            let b = &p.instrs[i2];
+            if b.out_slot != s || matches!(b.op, Op::Concat) {
+                continue;
+            }
+            let Some(v2) = b.out_view else { continue };
+            if v2.stride != v1.stride || v2.off == v1.off {
+                continue;
+            }
+            let c2 = *b.out_tail.last().unwrap_or(&0);
+            // the relocated stripe must stay inside its row, so the failure
+            // is the aliasing itself, not an eager geometry error
+            if c2 == 0 || v1.off + c2 > v1.stride {
+                continue;
+            }
+            // nothing after i2 may rewrite the root and re-cover the
+            // channels i2 vacated
+            if p.instrs[i2 + 1..]
+                .iter()
+                .any(|w| w.out_slot == s && (w.out_view.is_none() || matches!(w.op, Op::Concat)))
+            {
+                continue;
+            }
+            let mut m = p.clone();
+            m.instrs[i2].out_view.as_mut().unwrap().off = v1.off;
+            return Some((
+                m,
+                format!("instrs {i1}/{i2}: root stripes collapsed onto channel offset {}", v1.off),
+            ));
+        }
+    }
+    None
+}
+
+/// Retarget a read at a slot that holds nothing yet at that program point.
+fn mutate_retarget_read(p: &ExecPlan) -> Option<(ExecPlan, String)> {
+    let nslots = p.slot_sizes.len();
+    let mut first_write = vec![usize::MAX; nslots];
+    for (i, ins) in p.instrs.iter().enumerate() {
+        if first_write[ins.out_slot] == usize::MAX {
+            first_write[ins.out_slot] = i;
+        }
+    }
+    for (i, ins) in p.instrs.iter().enumerate() {
+        for k in 0..ins.in_slots.len() {
+            if ins.in_place && k == 0 {
+                // keep the in-place invariant intact so the *uninit read* is
+                // the violation, not the alias structure
+                continue;
+            }
+            let fits = read_occ(ins, k);
+            if let Some(b) = (0..nslots)
+                .find(|&b| b != p.input_slot && first_write[b] > i && fits <= p.slot_sizes[b])
+            {
+                let mut m = p.clone();
+                m.instrs[i].in_slots[k] = b;
+                return Some((m, format!("instr {i} input {k} retargeted at unwritten slot {b}")));
+            }
+        }
+    }
+    None
+}
+
+/// Point a later instruction at a value that legal slot reuse overwrote:
+/// instr i2 reuses slot s over a bigger dense value, and a downstream reader
+/// is retargeted at the dead value's full footprint.
+fn mutate_resurrect_dead(p: &ExecPlan) -> Option<(ExecPlan, String)> {
+    let n = p.instrs.len();
+    let dense_occ = |ins: &Instr| -> Option<usize> {
+        if matches!(ins.op, Op::Concat) || ins.out_view.is_some() {
+            None
+        } else {
+            Some(numel(&ins.out_tail))
+        }
+    };
+    for i2 in 0..n {
+        let Some(occ2) = dense_occ(&p.instrs[i2]) else { continue };
+        let s = p.instrs[i2].out_slot;
+        // the biggest dense value alive in s just before i2: the request
+        // input (if untouched so far) or the previous writer
+        let tail1: Vec<usize> = if s == p.input_slot
+            && p.instrs[..i2].iter().all(|w| w.out_slot != s)
+            && numel(&p.input_tail) > occ2
+        {
+            p.input_tail.clone()
+        } else {
+            match p.instrs[..i2].iter().rev().find(|w| w.out_slot == s) {
+                Some(a) => match dense_occ(a) {
+                    Some(occ1) if occ1 > occ2 => a.out_tail.clone(),
+                    _ => continue,
+                },
+                None => continue,
+            }
+        };
+        // first retargetable reader after i2, before anyone rewrites s
+        for j in i2 + 1..n {
+            if p.instrs[j].out_slot == s {
+                break;
+            }
+            let c = &p.instrs[j];
+            if c.in_slots.is_empty() || c.in_place || matches!(c.op, Op::Concat) {
+                continue;
+            }
+            let mut m = p.clone();
+            let ins = &mut m.instrs[j];
+            ins.in_slots[0] = s;
+            ins.in_tails[0] = tail1.clone();
+            ins.in_views[0] = None;
+            return Some((
+                m,
+                format!("instr {j} reads the slot-{s} value instr {i2} overwrote"),
+            ));
+        }
+    }
+    None
+}
+
+/// Skew a full concat's destination offset by one channel: the bumped
+/// stripe collides with its neighbor inside the same instruction.
+fn mutate_skew_cat_off(p: &ExecPlan) -> Option<(ExecPlan, String)> {
+    for (i, ins) in p.instrs.iter().enumerate() {
+        if !matches!(ins.op, Op::Concat) || ins.cat_partial || ins.in_slots.len() < 2 {
+            continue;
+        }
+        let k = (0..ins.cat_offs.len()).min_by_key(|&k| ins.cat_offs[k])?;
+        let mut m = p.clone();
+        m.instrs[i].cat_offs[k] += 1;
+        return Some((m, format!("instr {i}: destination offset of input {k} skewed by one")));
+    }
+    None
+}
+
+// ---------------------------------------------------------------------------
+// driver
+// ---------------------------------------------------------------------------
+
+type Mutator = fn(&ExecPlan) -> Option<(ExecPlan, String)>;
+
+const CLASSES: [(&str, Mutator); 6] = [
+    ("shrink-slot", mutate_shrink_slot),
+    ("widen-stripe", mutate_widen_stripe),
+    ("overlap-stripes", mutate_overlap_stripes),
+    ("retarget-read", mutate_retarget_read),
+    ("resurrect-dead", mutate_resurrect_dead),
+    ("skew-cat-off", mutate_skew_cat_off),
+];
+
+struct ClassStat {
+    name: &'static str,
+    applied: usize,
+    caught: usize,
+    rules: BTreeMap<&'static str, usize>,
+}
+
+#[test]
+fn verifier_accepts_all_valid_plans_and_rejects_every_mutation() {
+    let mut stats: Vec<ClassStat> = CLASSES
+        .iter()
+        .map(|&(name, _)| ClassStat { name, applied: 0, caught: 0, rules: BTreeMap::new() })
+        .collect();
+    let mut plans_ok = 0usize;
+    let mut failures: Vec<String> = Vec::new();
+    for seed in 0..SEEDS {
+        let g = random_graph(seed);
+        let variants = [
+            ("default", PlanOpts::default()),
+            ("none", PlanOpts::none()),
+            ("no-strided-reads", PlanOpts { strided_reads: false, ..PlanOpts::default() }),
+        ];
+        for (vname, opts) in variants {
+            // build_plan_with already runs the verifier (opts.verify), so a
+            // false positive surfaces here as a build error
+            let plan = match build_plan_with(&g, opts) {
+                Ok(p) => p,
+                Err(e) => {
+                    failures.push(format!("seed {seed} [{vname}]: build rejected: {e:#}"));
+                    continue;
+                }
+            };
+            match verify(&plan) {
+                Ok(_) => plans_ok += 1,
+                Err(d) => failures.push(format!("seed {seed} [{vname}]: false positive: {d}")),
+            }
+            for (ci, (cname, mutate)) in CLASSES.iter().enumerate() {
+                let Some((mutated, what)) = mutate(&plan) else { continue };
+                stats[ci].applied += 1;
+                match verify(&mutated) {
+                    Err(d) => {
+                        stats[ci].caught += 1;
+                        *stats[ci].rules.entry(d.rule).or_insert(0) += 1;
+                    }
+                    Ok(_) => panic!(
+                        "verify_fuzz seed {seed} [{vname}]: {cname} mutation slipped \
+                         through the verifier ({what})"
+                    ),
+                }
+            }
+        }
+    }
+    assert!(
+        failures.is_empty(),
+        "verifier rejected {} valid plans:\n{}",
+        failures.len(),
+        failures.join("\n")
+    );
+    for st in &stats {
+        assert_eq!(
+            st.caught, st.applied,
+            "{}: {} mutations applied but only {} caught",
+            st.name, st.applied, st.caught
+        );
+        assert!(
+            st.applied > 0,
+            "{} mutation never applicable across {SEEDS} seeds — fuzzer gone vacuous",
+            st.name
+        );
+    }
+    // greppable summary (CI asserts on these lines)
+    println!(
+        "verify_fuzz: {SEEDS} seeds x 3 plan variants — {plans_ok} plans accepted, \
+         0 false positives"
+    );
+    for st in &stats {
+        let rules: Vec<String> = st.rules.iter().map(|(r, n)| format!("{r}x{n}")).collect();
+        println!(
+            "verify_fuzz mutation {:<16} {}/{} caught via {}",
+            st.name,
+            st.caught,
+            st.applied,
+            rules.join(", ")
+        );
+    }
+}

@@ -1,0 +1,227 @@
+//! Golden tests for the plan verifier: one minimal hand-written plan per
+//! diagnostic kind, asserting the exact rule name and instruction index.
+//! These pin the diagnostic surface — `tests/verify_fuzz.rs` proves breadth
+//! over generated plans, this file proves each rule fires for the textbook
+//! shape of its violation and nothing else.
+
+use dlrt::dlrt::graph::Op;
+use dlrt::exec::planner::{ChanView, ExecPlan, Instr, OutSpec};
+use dlrt::exec::verify::{
+    verify, RULE_ARITY, RULE_CLOBBERED_READ, RULE_FOOTPRINT_OOB, RULE_IN_PLACE_ALIAS,
+    RULE_SAME_SLOT_OVERLAP, RULE_SLOT_OOB, RULE_THREAD_RACE, RULE_UNINIT_READ,
+    RULE_UNLOWERED_OP, RULE_WRITE_OVERLAP,
+};
+
+/// A bare instruction with no fusion, views, or concat metadata.
+fn instr(
+    name: &str,
+    op: Op,
+    in_slots: Vec<usize>,
+    in_tails: Vec<Vec<usize>>,
+    out_slot: usize,
+    out_tail: Vec<usize>,
+) -> Instr {
+    Instr {
+        name: name.into(),
+        op,
+        fused: None,
+        fused_add: false,
+        fused_post: None,
+        in_views: vec![None; in_slots.len()],
+        in_slots,
+        in_tails,
+        cat_offs: Vec::new(),
+        cat_partial: false,
+        out_slot,
+        out_tail,
+        out_view: None,
+        in_place: false,
+    }
+}
+
+/// Two 32-element slots; the request input is a dense 4×4×2 in slot 0.
+fn plan(instrs: Vec<Instr>, outputs: Vec<OutSpec>) -> ExecPlan {
+    ExecPlan {
+        instrs,
+        slot_sizes: vec![32, 32],
+        input_slot: 0,
+        input_tail: vec![4, 4, 2],
+        outputs,
+        nominal_batch: 1,
+        in_place_concats: 0,
+        partial_concats: 0,
+        concat_fallbacks: Vec::new(),
+    }
+}
+
+fn out1() -> Vec<OutSpec> {
+    vec![OutSpec { slot: 1, tail: vec![4, 4, 2] }]
+}
+
+fn expect(p: &ExecPlan, rule: &str, instr_idx: Option<usize>) {
+    let d = verify(p).expect_err(&format!("plan should be rejected by rule {rule}"));
+    assert_eq!(d.rule, rule, "wrong rule: {d}");
+    assert_eq!(d.instr, instr_idx, "wrong instruction: {d}");
+}
+
+#[test]
+fn control_plan_passes_with_counted_evidence() {
+    let p = plan(
+        vec![instr("act", Op::Relu, vec![0], vec![vec![4, 4, 2]], 1, vec![4, 4, 2])],
+        out1(),
+    );
+    let rep = verify(&p).unwrap_or_else(|d| panic!("control plan rejected: {d}"));
+    assert_eq!(rep.instrs, 1);
+    assert_eq!(rep.slots, 2);
+    assert_eq!(rep.regions, 2, "input region + one write");
+    assert_eq!(rep.kills, 0);
+    assert_eq!(rep.reads, 2, "one instruction input + one graph output");
+}
+
+#[test]
+fn golden_arity_misaligned_input_views() {
+    let mut i = instr("act", Op::Relu, vec![0], vec![vec![4, 4, 2]], 1, vec![4, 4, 2]);
+    i.in_views.clear();
+    expect(&plan(vec![i], out1()), RULE_ARITY, Some(0));
+}
+
+#[test]
+fn golden_arity_cat_offs_on_non_concat() {
+    let mut i = instr("act", Op::Relu, vec![0], vec![vec![4, 4, 2]], 1, vec![4, 4, 2]);
+    i.cat_offs = vec![0];
+    expect(&plan(vec![i], out1()), RULE_ARITY, Some(0));
+}
+
+#[test]
+fn golden_unlowered_flatten() {
+    let i = instr("flat", Op::Flatten, vec![0], vec![vec![4, 4, 2]], 1, vec![32]);
+    expect(&plan(vec![i], out1()), RULE_UNLOWERED_OP, Some(0));
+}
+
+#[test]
+fn golden_in_place_alias_must_be_same_slot() {
+    let mut i = instr("act", Op::Relu, vec![0], vec![vec![4, 4, 2]], 1, vec![4, 4, 2]);
+    i.in_place = true; // claims in-place but reads slot 0, writes slot 1
+    expect(&plan(vec![i], out1()), RULE_IN_PLACE_ALIAS, Some(0));
+}
+
+#[test]
+fn golden_slot_out_of_range() {
+    let i = instr("act", Op::Relu, vec![5], vec![vec![4, 4, 2]], 1, vec![4, 4, 2]);
+    let p = plan(vec![i], out1());
+    let d = verify(&p).unwrap_err();
+    assert_eq!(d.rule, RULE_SLOT_OOB, "{d}");
+    assert_eq!(d.instr, Some(0), "{d}");
+    assert_eq!(d.slot, Some(5), "{d}");
+}
+
+#[test]
+fn golden_footprint_exceeds_slot() {
+    let i = instr("act", Op::Relu, vec![0], vec![vec![4, 4, 2]], 1, vec![100, 100, 100]);
+    let p = plan(vec![i], out1());
+    let d = verify(&p).unwrap_err();
+    assert_eq!(d.rule, RULE_FOOTPRINT_OOB, "{d}");
+    assert_eq!(d.instr, Some(0), "{d}");
+    assert_eq!(d.slot, Some(1), "{d}");
+}
+
+#[test]
+fn golden_thread_race_stripe_escapes_its_row() {
+    let mut i = instr("act", Op::Relu, vec![0], vec![vec![4, 4, 2]], 1, vec![4, 4, 2]);
+    // 2 channels written at offset 1 of a 2-channel row: [1, 3) exceeds the
+    // row, so worker chunks writing "their" rows would collide
+    i.out_view = Some(ChanView { stride: 2, off: 1 });
+    expect(&plan(vec![i], out1()), RULE_THREAD_RACE, Some(0));
+}
+
+#[test]
+fn golden_write_overlap_concat_stripes_collide() {
+    let mut i = instr(
+        "cat",
+        Op::Concat,
+        vec![0, 0],
+        vec![vec![4, 4, 1], vec![4, 4, 1]],
+        1,
+        vec![4, 4, 2],
+    );
+    i.cat_offs = vec![0, 0]; // both inputs land on channel 0
+    expect(&plan(vec![i], out1()), RULE_WRITE_OVERLAP, Some(0));
+}
+
+#[test]
+fn golden_same_slot_read_write_overlap() {
+    // reads slot 0 densely while writing slot 0 densely, without the
+    // in-place lowering that makes that legal
+    let i = instr("act", Op::Relu, vec![0], vec![vec![4, 4, 2]], 0, vec![4, 4, 2]);
+    let p = plan(vec![i], vec![OutSpec { slot: 0, tail: vec![4, 4, 2] }]);
+    expect(&p, RULE_SAME_SLOT_OVERLAP, Some(0));
+}
+
+#[test]
+fn golden_uninit_read() {
+    // slot 1 is never written before this read
+    let i = instr("act", Op::Relu, vec![1], vec![vec![4, 4, 2]], 0, vec![4, 4, 2]);
+    let p = plan(vec![i], vec![OutSpec { slot: 0, tail: vec![4, 4, 2] }]);
+    let d = verify(&p).unwrap_err();
+    assert_eq!(d.rule, RULE_UNINIT_READ, "{d}");
+    assert_eq!(d.instr, Some(0), "{d}");
+    assert_eq!(d.slot, Some(1), "{d}");
+}
+
+#[test]
+fn golden_clobbered_read_names_writer_and_killer() {
+    // instr 0 fills slot 1; instr 1 reuses the slot with a smaller value,
+    // killing it; instr 2 reads the full original footprint
+    let p = plan(
+        vec![
+            instr("a", Op::Relu, vec![0], vec![vec![4, 4, 2]], 1, vec![4, 4, 2]),
+            instr("b", Op::Relu, vec![0], vec![vec![2, 2, 2]], 1, vec![2, 2, 2]),
+            instr("c", Op::Relu, vec![1], vec![vec![4, 4, 2]], 0, vec![4, 4, 2]),
+        ],
+        vec![OutSpec { slot: 0, tail: vec![4, 4, 2] }],
+    );
+    let d = verify(&p).unwrap_err();
+    assert_eq!(d.rule, RULE_CLOBBERED_READ, "{d}");
+    assert_eq!(d.instr, Some(2), "{d}");
+    assert_eq!(d.slot, Some(1), "{d}");
+    assert!(d.detail.contains("instr 0"), "should name the writer: {d}");
+    assert!(d.detail.contains("instr 1"), "should name the killer: {d}");
+}
+
+#[test]
+fn golden_output_of_unwritten_slot_is_plan_level() {
+    let p = plan(Vec::new(), out1()); // no instruction ever writes slot 1
+    let d = verify(&p).unwrap_err();
+    assert_eq!(d.rule, RULE_UNINIT_READ, "{d}");
+    assert_eq!(d.instr, None, "{d}");
+    assert_eq!(d.name, "output[0]", "{d}");
+}
+
+#[test]
+fn golden_input_slot_out_of_range_is_plan_level() {
+    let mut p = plan(Vec::new(), Vec::new());
+    p.input_slot = 7;
+    let d = verify(&p).unwrap_err();
+    assert_eq!(d.rule, RULE_SLOT_OOB, "{d}");
+    assert_eq!(d.instr, None, "{d}");
+    assert_eq!(d.name, "input", "{d}");
+    assert_eq!(d.slot, Some(7), "{d}");
+}
+
+#[test]
+fn golden_concat_stripes_that_tile_the_row_pass() {
+    // the legal version of the write-overlap case: offsets [0, 1] tile the
+    // 2-channel row exactly, and the output read proves full coverage
+    let mut i = instr(
+        "cat",
+        Op::Concat,
+        vec![0, 0],
+        vec![vec![4, 4, 1], vec![4, 4, 1]],
+        1,
+        vec![4, 4, 2],
+    );
+    i.cat_offs = vec![0, 1];
+    let p = plan(vec![i], out1());
+    let rep = verify(&p).unwrap_or_else(|d| panic!("legal concat rejected: {d}"));
+    assert!(rep.race_checks > 0, "stripe writes must be race-proven");
+}
