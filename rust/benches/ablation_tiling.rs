@@ -3,7 +3,9 @@
 //!   (a) thread scaling of the bitserial GEMM,
 //!   (b) bit-width sweep (1..4 bits each side) at fixed shape,
 //!   (c) activation packing cost share (pack+gemm vs gemm alone),
-//!   (d) M×N cache-tile sweep around the kernel's `TILE_M`×`TILE_N` default.
+//!   (d) M×N cache-tile sweep around the kernel's `TILE_M`×`TILE_N` default,
+//!   (e) micro-kernel ISA sweep: the same GEMM through every registered
+//!       inner kernel the host can run (scalar vs host SIMD).
 //!
 //! Run: `cargo bench --bench ablation_tiling`
 
@@ -119,4 +121,32 @@ fn main() {
         ms(t_default), best.1, best.2, ms(best.0), slowdown,
         if slowdown <= 5.0 { " [OK: within 5%]" } else { " [WARN: retune TILE_M/TILE_N]" },
     );
+
+    // ---- (e) micro-kernel ISA sweep ---------------------------------------
+    // Same 2A2W shape through every registered inner kernel this host can
+    // run, each with weights prepacked to its own tile layout.
+    use dlrt::kernels::ukernel::{available_isas, kernel_for, PackedW};
+    let mut t = Table::new(
+        "Ablation (e): micro-kernel ISA sweep (784x1152x128, 2A2W, 1 thread)",
+        &["isa", "tile (M,N)", "median", "vs scalar"],
+    );
+    let isas = available_isas();
+    let mut rows: Vec<(String, String, f64)> = Vec::new();
+    for &isa in &isas {
+        let uk = kernel_for(isa).expect("listed ISA has a kernel");
+        let pw = PackedW::from_packed(&wp, uk.weight_layout());
+        let tt = bench_ms(1, 9, || (uk.gemm_bit)(&ap, &pw, 2, &mut out, 1));
+        rows.push((
+            isa.name().to_string(),
+            format!("({},{})", uk.desc.tile_m, uk.desc.tile_n),
+            tt.median_ms,
+        ));
+    }
+    // available_isas() keeps scalar last, so the baseline is the final row
+    let scalar_ms = rows.last().map(|r| r.2).unwrap_or(1.0);
+    for (name, tile, med) in rows {
+        t.row(vec![name, tile, ms(med), format!("{:.2}x", scalar_ms / med)]);
+    }
+    t.print();
+    t.save_json("ablation_isa");
 }

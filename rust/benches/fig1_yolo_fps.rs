@@ -59,6 +59,17 @@ fn main() {
     for res in [128usize, 192] {
         let g = build_yolov5("n", 80, res, 0.25, QCfg::new(2, 2), 0);
         let mq = compile_graph(&g, EngineChoice::Auto).unwrap();
+        let vec_convs = if mq.isa == dlrt::kernels::ukernel::Isa::Scalar {
+            0
+        } else {
+            mq.plan.conv_kernels
+        };
+        println!(
+            "res {res} dispatch: isa={}, {}/{} convs vectorized",
+            mq.isa.name(),
+            vec_convs,
+            mq.plan.conv_kernels
+        );
         let mf = compile_graph(&g, EngineChoice::ForceFp32).unwrap();
         let m8 = compile_graph(&g, EngineChoice::ForceInt8).unwrap();
         let mut mq_nofuse = mq.clone();

@@ -49,6 +49,17 @@ fn main() {
     );
     let g = build_resnet(18, 1000, 96, 1.0, QCfg::new(2, 2), 0);
     let mq = compile_graph(&g, EngineChoice::Auto).unwrap();
+    let vec_convs = if mq.isa == dlrt::kernels::ukernel::Isa::Scalar {
+        0
+    } else {
+        mq.plan.conv_kernels
+    };
+    println!(
+        "dispatch: isa={}, {}/{} convs vectorized",
+        mq.isa.name(),
+        vec_convs,
+        mq.plan.conv_kernels
+    );
     let mf = compile_graph(&g, EngineChoice::ForceFp32).unwrap();
     let m8 = compile_graph(&g, EngineChoice::ForceInt8).unwrap();
     let mut rng = Rng::new(5);

@@ -10,6 +10,7 @@ use dlrt::dlrt::graph::QCfg;
 use dlrt::kernels::bitserial::{gemm_bitserial, pack_rows_u8, pack_weights_offset};
 use dlrt::kernels::fp32::gemm_rowmajor_bt;
 use dlrt::kernels::int8::gemm_u8i8_i32;
+use dlrt::kernels::ukernel::{available_isas, kernel_for, PackedW};
 use dlrt::models::build_resnet;
 use dlrt::util::rng::Rng;
 
@@ -65,6 +66,45 @@ fn main() {
     }
     table.print();
     table.save_json("kernel_speedup");
+
+    // ---- per-ISA micro-kernel comparison --------------------------------
+    // Same bitserial GEMM through every registered inner kernel the host
+    // can run (weights prepacked to each kernel's tile layout); the last
+    // column is the dispatch win: best SIMD kernel vs the scalar fallback.
+    let isas = available_isas();
+    let cols: Vec<String> = std::iter::once("shape (rows,k,n)".to_string())
+        .chain(isas.iter().map(|i| i.name().to_string()))
+        .chain(std::iter::once("SIMD vs scalar".to_string()))
+        .collect();
+    let col_refs: Vec<&str> = cols.iter().map(|s| s.as_str()).collect();
+    let mut t_isa = Table::new(
+        "Bitserial 2A2W GEMM per micro-kernel ISA (1 thread) — runtime dispatch",
+        &col_refs,
+    );
+    for (m, k, n) in SHAPES {
+        let codes_a: Vec<u8> = (0..m * k).map(|_| rng.usize(4) as u8).collect();
+        let wq: Vec<i32> = (0..n * k).map(|_| rng.range(-2, 2) as i32).collect();
+        let wp = pack_weights_offset(&wq, n, k, 2);
+        let ap = pack_rows_u8(&codes_a, m, k, 2);
+        let mut out_b = vec![0i32; m * n];
+        let mut row = vec![format!("({m},{k},{n})")];
+        let mut medians = Vec::new();
+        for &isa in &isas {
+            let uk = kernel_for(isa).expect("listed ISA has a kernel");
+            let pw = PackedW::from_packed(&wp, uk.weight_layout());
+            let first = bench_ms(0, 1, || (uk.gemm_bit)(&ap, &pw, 2, &mut out_b, 1));
+            let reps = reps_for(first.median_ms, 800.0);
+            let tt = bench_ms(1, reps, || (uk.gemm_bit)(&ap, &pw, 2, &mut out_b, 1));
+            medians.push(tt.median_ms);
+            row.push(ms(tt.median_ms));
+        }
+        // available_isas() is best-first with scalar always last
+        let scalar_ms = *medians.last().unwrap();
+        row.push(format!("{:.2}x", scalar_ms / medians[0]));
+        t_isa.row(row);
+    }
+    t_isa.print();
+    t_isa.save_json("kernel_speedup_isa");
 
     // ---- paper §V end-to-end projection ---------------------------------
     let mut proj = Table::new(

@@ -15,6 +15,7 @@ use anyhow::{anyhow, bail, Context, Result};
 
 use crate::dlrt::graph::{Graph, Node, NodeWeights, Op, QCfg};
 use crate::exec::{CompiledConv, CompiledDense, CompiledModel, ConvKernel};
+use crate::kernels::ukernel::{self, Isa, PackedW, WLayout};
 use crate::quant;
 use crate::util::json::Json;
 
@@ -159,12 +160,26 @@ pub fn parse_arch(arch_text: &str, weights: &[f32]) -> Result<Graph> {
     Ok(g)
 }
 
-/// Compile a weighted graph into an executable model: per-layer kernels
-/// plus the execution plan lowered by the planner pass pipeline (see
-/// [`crate::exec::planner`]). Static shape mismatches are compile errors.
+/// Compile a weighted graph into an executable model for the process's
+/// selected micro-kernel ISA (`DLRT_FORCE_ISA` or the best the host
+/// supports). Per-layer kernels plus the execution plan lowered by the
+/// planner pass pipeline (see [`crate::exec::planner`]). Static shape
+/// mismatches are compile errors.
 pub fn compile_graph(g: &Graph, engine: EngineChoice) -> Result<CompiledModel> {
-    let mut convs = std::collections::BTreeMap::new();
-    let mut denses = std::collections::BTreeMap::new();
+    let isa = ukernel::selected_isa().map_err(anyhow::Error::msg)?;
+    compile_graph_for_isa(g, engine, isa)
+}
+
+/// [`compile_graph`] pinned to an explicit micro-kernel ISA: bitserial
+/// weights are prepacked into that kernel's tile-walk layout and the choice
+/// is recorded on the model. Errors when this host cannot run `isa` (tests
+/// sweep [`ukernel::available_isas`]).
+pub fn compile_graph_for_isa(g: &Graph, engine: EngineChoice, isa: Isa) -> Result<CompiledModel> {
+    let uk = ukernel::kernel_for(isa)
+        .ok_or_else(|| anyhow!("ISA '{}' is not available on this host", isa.name()))?;
+    let layout = uk.weight_layout();
+    let mut convs = Vec::new();
+    let mut denses = Vec::new();
     for node in &g.nodes {
         match &node.op {
             Op::Conv2d { kernel, cin, cout, qcfg, .. } => {
@@ -176,8 +191,9 @@ pub fn compile_graph(g: &Graph, engine: EngineChoice) -> Result<CompiledModel> {
                 if nw.w.len() != k * cout {
                     bail!("{}: weight size {} != {}", node.name, nw.w.len(), k * cout);
                 }
-                let compiled = compile_conv(nw, k, *cout, kernel, *cin, *qcfg, engine)?;
-                convs.insert(node.name.clone(), compiled);
+                let compiled =
+                    compile_conv(&node.name, nw, k, *cout, kernel, *cin, *qcfg, engine, layout)?;
+                convs.push(compiled);
             }
             Op::Dense { cin, cout } => {
                 let nw = g.weights.get(&node.name)
@@ -185,16 +201,21 @@ pub fn compile_graph(g: &Graph, engine: EngineChoice) -> Result<CompiledModel> {
                 if nw.w.len() != cin * cout {
                     bail!("{}: dense weight size mismatch", node.name);
                 }
-                denses.insert(node.name.clone(),
-                              CompiledDense { w: nw.w.clone(), b: nw.bias.clone() });
+                denses.push(CompiledDense {
+                    name: node.name.clone(),
+                    w: nw.w.clone(),
+                    b: nw.bias.clone(),
+                });
             }
             _ => {}
         }
     }
-    CompiledModel::new(g.clone(), convs, denses)
+    CompiledModel::new(g.clone(), convs, denses, isa)
 }
 
+#[allow(clippy::too_many_arguments)]
 fn compile_conv(
+    name: &str,
     nw: &NodeWeights,
     k: usize,
     cout: usize,
@@ -202,6 +223,7 @@ fn compile_conv(
     cin: usize,
     qcfg: QCfg,
     engine: EngineChoice,
+    layout: WLayout,
 ) -> Result<CompiledConv> {
     let kernel = match (engine, qcfg.enabled) {
         (EngineChoice::Auto, true) => {
@@ -215,8 +237,10 @@ fn compile_conv(
             let packed =
                 quant::pack_conv_weights(&nw.w, kernel[0], kernel[1], cin, cout, s_w,
                                          qcfg.w_bits);
+            // prepack the bit-planes into the selected kernel's tile-walk
+            // order once, at compile time — never on the serving path
             ConvKernel::Bitserial {
-                packed,
+                packed: PackedW::from_packed(&packed, layout),
                 s_w,
                 s_a,
                 w_bits: qcfg.w_bits,
@@ -240,7 +264,12 @@ fn compile_conv(
             ConvKernel::Int8 { codes, s_w, s_a: a_max / 255.0 }
         }
     };
-    Ok(CompiledConv { kernel, scale: nw.scale.clone(), bias: nw.bias.clone() })
+    Ok(CompiledConv {
+        name: name.to_string(),
+        kernel,
+        scale: nw.scale.clone(),
+        bias: nw.bias.clone(),
+    })
 }
 
 #[cfg(test)]
@@ -282,6 +311,21 @@ mod tests {
         assert_eq!(m.plan.instrs.len(), 4);
         assert_eq!(m.plan.fused_instrs(), 2);
         assert!(m.plan.arena_elems(1) > 0);
+    }
+
+    #[test]
+    fn per_isa_compilation_prepacks_to_the_kernel_layout() {
+        let g = tiny_test_graph(true);
+        for isa in ukernel::available_isas() {
+            let m = compile_graph_for_isa(&g, EngineChoice::Auto, isa).unwrap();
+            assert_eq!(m.isa, isa);
+            let layout = ukernel::kernel_for(isa).unwrap().weight_layout();
+            for c in &m.convs {
+                if let ConvKernel::Bitserial { packed, .. } = &c.kernel {
+                    assert_eq!(packed.layout, layout, "{} on {}", c.name, isa.name());
+                }
+            }
+        }
     }
 
     #[test]

@@ -18,7 +18,7 @@
 pub mod params;
 
 use crate::dlrt::graph::{Graph, Op, QCfg};
-use crate::kernels::bitserial::{TILE_M, TILE_N};
+use crate::kernels::ukernel::{self, UKernelDesc};
 pub use params::{cpu_by_name, CpuParams, CORTEX_A53, CORTEX_A57, CORTEX_A72,
                  JETSON_NANO_GPU};
 
@@ -57,8 +57,10 @@ pub fn conv_cost_s(
             // The blocked kernel refetches each weight-plane word once per
             // M-tile and each activation word once per N-tile; everything
             // else stays cache/register resident, so the amortized reload
-            // overhead per word-op follows the kernel's tile constants.
-            let tile_reload = 1.0 + 1.0 / TILE_M as f64 + 1.0 / TILE_N as f64;
+            // overhead per word-op follows the tile geometry of whichever
+            // micro-kernel the host would dispatch to.
+            let d = host_kernel_desc();
+            let tile_reload = 1.0 + 1.0 / d.tile_m as f64 + 1.0 / d.tile_n as f64;
             let gemm = word_ops * tile_reload / (cpu.bitops_per_cycle * hz * eff_cores);
             // im2col + quantize + pack: ~3 passes over rows*k bytes
             let pack = 3.0 * (rows * k) as f64
@@ -76,6 +78,18 @@ pub fn conv_cost_s(
     };
     let mem = (weight_bytes + (rows * cout * 4) as f64) / (cpu.mem_gbps * 1e9);
     compute.max(mem)
+}
+
+/// Tile geometry of the micro-kernel the host's ISA dispatch selects;
+/// falls back to the scalar kernel when the override env var is invalid
+/// (projections must never hard-fail on a bad `DLRT_FORCE_ISA`).
+fn host_kernel_desc() -> UKernelDesc {
+    ukernel::selected_isa()
+        .ok()
+        .and_then(ukernel::kernel_for)
+        .or_else(|| ukernel::kernel_for(ukernel::Isa::Scalar))
+        .map(|u| u.desc)
+        .expect("scalar kernel is always registered")
 }
 
 fn effective_cores(cpu: &CpuParams, threads: usize) -> f64 {

@@ -4,7 +4,7 @@
 //!
 //! ```text
 //!   bytes 0..4    magic  b"DLRT"
-//!   bytes 4..8    version u32 (currently 1)
+//!   bytes 4..8    version u32 (currently 2)
 //!   bytes 8..16   header length u64
 //!   header        JSON: graph topology + per-layer engine records whose
 //!                 blob fields are {offset, len} references into the payload
@@ -14,6 +14,14 @@
 //!
 //! The header is JSON (not a packed struct) so `dlrt inspect` can dump it
 //! and version skew stays debuggable; all bulk data lives in the payload.
+//!
+//! **Version 2** saves bitserial weight planes *prepacked* in the writing
+//! host's selected micro-kernel layout: each bitserial record carries
+//! `layout` (`"row_major"` or `"tile_n"`), `plane_stride`, and — for
+//! `tile_n` — the `tile_n`/`chunk` geometry; the header records the writer's
+//! `isa` for provenance. A loader whose own selected kernel wants a
+//! different layout repacks once at load time, so the serving path always
+//! runs the layout its kernel streams best.
 
 use std::collections::BTreeMap;
 use std::path::Path;
@@ -23,10 +31,11 @@ use anyhow::{anyhow, bail, Context, Result};
 use crate::dlrt::graph::{Graph, Node, Op, QCfg};
 use crate::dlrt::tensor::Packed;
 use crate::exec::{CompiledConv, CompiledDense, CompiledModel, ConvKernel};
+use crate::kernels::ukernel::{self, PackedW, WLayout};
 use crate::util::json::{arr, num, obj, s, Json};
 
 pub const MAGIC: &[u8; 4] = b"DLRT";
-pub const VERSION: u32 = 1;
+pub const VERSION: u32 = 2;
 
 // ---------------------------------------------------------------------------
 // payload writer / reader
@@ -235,7 +244,7 @@ pub fn graph_from_json(v: &Json) -> Result<Graph> {
 pub fn save(model: &CompiledModel, path: &Path) -> Result<()> {
     let mut payload = Payload::default();
     let mut convs = BTreeMap::new();
-    for (name, c) in &model.convs {
+    for c in &model.convs {
         let mut fields = vec![
             ("engine", s(c.kernel.engine_name())),
             ("scale", payload.put_f32(&c.scale)),
@@ -246,6 +255,17 @@ pub fn save(model: &CompiledModel, path: &Path) -> Result<()> {
                 fields.push(("rows", num(packed.rows as f64)));
                 fields.push(("k", num(packed.k as f64)));
                 fields.push(("bits", num(packed.bits as f64)));
+                // prepacked layout, exactly as held in memory: the loader
+                // repacks only when its own kernel wants a different one
+                match packed.layout {
+                    WLayout::RowMajor => fields.push(("layout", s("row_major"))),
+                    WLayout::TileN { tile_n, chunk } => {
+                        fields.push(("layout", s("tile_n")));
+                        fields.push(("tile_n", num(tile_n as f64)));
+                        fields.push(("chunk", num(chunk as f64)));
+                    }
+                }
+                fields.push(("plane_stride", num(packed.plane_stride as f64)));
                 fields.push(("planes", payload.put_u64(&packed.data)));
                 fields.push(("s_w", num(*s_w as f64)));
                 fields.push(("s_a", num(*s_a as f64)));
@@ -261,15 +281,17 @@ pub fn save(model: &CompiledModel, path: &Path) -> Result<()> {
                 fields.push(("s_a", num(*s_a as f64)));
             }
         }
-        convs.insert(name.clone(), obj(fields));
+        convs.insert(c.name.clone(), obj(fields));
     }
     let mut denses = BTreeMap::new();
-    for (name, d) in &model.denses {
-        denses.insert(name.clone(),
+    for d in &model.denses {
+        denses.insert(d.name.clone(),
                       obj(vec![("w", payload.put_f32(&d.w)), ("b", payload.put_f32(&d.b))]));
     }
     let header = obj(vec![
         ("graph", graph_to_json(&model.graph)),
+        // writer provenance: which ISA the planes were prepacked for
+        ("isa", s(model.isa.name())),
         ("convs", Json::Obj(convs)),
         ("denses", Json::Obj(denses)),
     ])
@@ -309,60 +331,138 @@ pub fn load(path: &Path) -> Result<CompiledModel> {
     let payload = &bytes[body..];
 
     let graph = graph_from_json(header.get("graph")?)?;
-    let mut model_convs: BTreeMap<String, CompiledConv> = BTreeMap::new();
-    let mut model_denses: BTreeMap<String, CompiledDense> = BTreeMap::new();
 
+    // the loading host's own selected kernel decides the layout weights
+    // must end up in; the file's recorded `isa` is provenance only
+    let isa = ukernel::selected_isa().map_err(anyhow::Error::msg)?;
+    let want_layout = ukernel::kernel_for(isa)
+        .ok_or_else(|| anyhow!("selected ISA '{}' has no kernel entry", isa.name()))?
+        .weight_layout();
+
+    let mut conv_recs: BTreeMap<&str, &Json> = BTreeMap::new();
     if let Json::Obj(convs) = header.get("convs")? {
         for (name, c) in convs {
-            let scale = get_f32(payload, c.get("scale")?)?;
-            let bias = get_f32(payload, c.get("bias")?)?;
-            let kernel = match c.get("engine")?.str()? {
-                "bitserial" => {
-                    let rows = c.get("rows")?.usize()?;
-                    let k = c.get("k")?.usize()?;
-                    let bits = c.get("bits")?.usize()?;
-                    let data = get_u64(payload, c.get("planes")?)?;
-                    let wpr = Packed::words_for(k);
-                    let want = rows
-                        .checked_mul(bits)
-                        .and_then(|n| n.checked_mul(wpr))
-                        .ok_or_else(|| anyhow!("{name}: packed plane size overflows"))?;
-                    if data.len() != want {
-                        bail!(
-                            "{name}: packed plane size mismatch: {} words, expected {want}",
-                            data.len()
-                        );
-                    }
-                    ConvKernel::Bitserial {
-                        packed: Packed { rows, k, bits, words_per_row: wpr, data },
-                        s_w: c.get("s_w")?.f32()?,
-                        s_a: c.get("s_a")?.f32()?,
-                        w_bits: c.get("w_bits")?.usize()? as u8,
-                        a_bits: c.get("a_bits")?.usize()? as u8,
-                    }
-                }
-                "fp32" => ConvKernel::Fp32 { wt: get_f32(payload, c.get("wt")?)? },
-                "int8" => ConvKernel::Int8 {
-                    codes: get_i8(payload, c.get("codes")?)?,
-                    s_w: c.get("s_w")?.f32()?,
-                    s_a: c.get("s_a")?.f32()?,
-                },
-                other => bail!("unknown engine {other:?}"),
-            };
-            model_convs.insert(name.clone(), CompiledConv { kernel, scale, bias });
+            conv_recs.insert(name.as_str(), c);
         }
     }
+    let mut dense_recs: BTreeMap<&str, &Json> = BTreeMap::new();
     if let Json::Obj(denses) = header.get("denses")? {
         for (name, d) in denses {
-            model_denses.insert(name.clone(), CompiledDense {
-                w: get_f32(payload, d.get("w")?)?,
-                b: get_f32(payload, d.get("b")?)?,
-            });
+            dense_recs.insert(name.as_str(), d);
+        }
+    }
+
+    // kernel vectors are built by walking the stored topology in node
+    // order — the same order the planner assigns `kernel_idx` by, so the
+    // re-lowered plan's indices land on the right kernels
+    let mut model_convs: Vec<CompiledConv> = Vec::new();
+    let mut model_denses: Vec<CompiledDense> = Vec::new();
+    for node in &graph.nodes {
+        match &node.op {
+            Op::Conv2d { .. } => {
+                let name = node.name.as_str();
+                let c = *conv_recs
+                    .get(name)
+                    .ok_or_else(|| anyhow!("{name}: conv node has no kernel record"))?;
+                let scale = get_f32(payload, c.get("scale")?)?;
+                let bias = get_f32(payload, c.get("bias")?)?;
+                let kernel = match c.get("engine")?.str()? {
+                    "bitserial" => {
+                        let rows = c.get("rows")?.usize()?;
+                        let k = c.get("k")?.usize()?;
+                        let bits = c.get("bits")?.usize()?;
+                        let wpr = Packed::words_for(k);
+                        let layout = match c.get("layout")?.str()? {
+                            "row_major" => WLayout::RowMajor,
+                            "tile_n" => {
+                                let tile_n = c.get("tile_n")?.usize()?;
+                                let chunk = c.get("chunk")?.usize()?;
+                                if tile_n == 0 || chunk == 0 {
+                                    bail!("{name}: tile_n layout with zero geometry");
+                                }
+                                WLayout::TileN { tile_n, chunk }
+                            }
+                            other => bail!("{name}: unknown weight layout {other:?}"),
+                        };
+                        let plane_stride = c.get("plane_stride")?.usize()?;
+                        let stride_ok = match layout {
+                            WLayout::RowMajor => plane_stride == wpr,
+                            WLayout::TileN { chunk, .. } => {
+                                wpr.div_ceil(chunk).checked_mul(chunk)
+                                    == Some(plane_stride)
+                            }
+                        };
+                        if !stride_ok {
+                            bail!(
+                                "{name}: plane stride {plane_stride} inconsistent with \
+                                 layout (k={k}, {wpr} words/row)"
+                            );
+                        }
+                        let data = get_u64(payload, c.get("planes")?)?;
+                        let want = rows
+                            .checked_mul(bits)
+                            .and_then(|n| n.checked_mul(plane_stride))
+                            .ok_or_else(|| anyhow!("{name}: packed plane size overflows"))?;
+                        if data.len() != want {
+                            bail!(
+                                "{name}: packed plane size mismatch: {} words, expected {want}",
+                                data.len()
+                            );
+                        }
+                        let mut packed = PackedW {
+                            rows,
+                            k,
+                            bits,
+                            words_per_row: wpr,
+                            plane_stride,
+                            layout,
+                            data,
+                        };
+                        // cross-ISA repack: serialized layout doesn't match
+                        // what this host's kernel streams — rebuild once here
+                        if packed.layout != want_layout {
+                            packed = PackedW::from_packed(&packed.to_row_major(), want_layout);
+                        }
+                        ConvKernel::Bitserial {
+                            packed,
+                            s_w: c.get("s_w")?.f32()?,
+                            s_a: c.get("s_a")?.f32()?,
+                            w_bits: c.get("w_bits")?.usize()? as u8,
+                            a_bits: c.get("a_bits")?.usize()? as u8,
+                        }
+                    }
+                    "fp32" => ConvKernel::Fp32 { wt: get_f32(payload, c.get("wt")?)? },
+                    "int8" => ConvKernel::Int8 {
+                        codes: get_i8(payload, c.get("codes")?)?,
+                        s_w: c.get("s_w")?.f32()?,
+                        s_a: c.get("s_a")?.f32()?,
+                    },
+                    other => bail!("unknown engine {other:?}"),
+                };
+                model_convs.push(CompiledConv {
+                    name: node.name.clone(),
+                    kernel,
+                    scale,
+                    bias,
+                });
+            }
+            Op::Dense { .. } => {
+                let name = node.name.as_str();
+                let d = *dense_recs
+                    .get(name)
+                    .ok_or_else(|| anyhow!("{name}: dense node has no kernel record"))?;
+                model_denses.push(CompiledDense {
+                    name: node.name.clone(),
+                    w: get_f32(payload, d.get("w")?)?,
+                    b: get_f32(payload, d.get("b")?)?,
+                });
+            }
+            _ => {}
         }
     }
     // re-lower the execution plan from the stored topology: plans are
     // derived state, so the file format stays engine-only and version-stable
-    let model = CompiledModel::new(graph, model_convs, model_denses)?;
+    let model = CompiledModel::new(graph, model_convs, model_denses, isa)?;
     // The planner already verified the plan it built, but load() is the trust
     // boundary for foreign files: run the static checker here so a model whose
     // stored topology lowers to an unsound plan is refused with a diagnostic
@@ -418,12 +518,37 @@ mod tests {
         }
     }
 
+    /// A model prepacked for one ISA's tile layout must reload cleanly on a
+    /// host that selects another: `load` repacks to the host layout, and the
+    /// integer bitserial/int8 kernels keep outputs bit-exact across layouts.
+    #[test]
+    fn cross_isa_reload_repacks_and_stays_bit_exact() {
+        use crate::compiler::compile_graph_for_isa;
+        use crate::kernels::ukernel::available_isas;
+        let g = tiny_test_graph(false);
+        let mut x = Tensor::zeros(vec![1, 8, 8, 3]);
+        for (i, v) in x.data.iter_mut().enumerate() {
+            *v = (i % 7) as f32 * 0.09;
+        }
+        for isa in available_isas() {
+            let m = compile_graph_for_isa(&g, EngineChoice::Auto, isa).unwrap();
+            let path = tmp(&format!("xisa_{}.dlrt", isa.name()));
+            save(&m, &path).unwrap();
+            let m2 = load(&path).unwrap();
+            std::fs::remove_file(&path).ok();
+            let mut ex = Executor::new(1);
+            let y1 = ex.run(&m, &x).unwrap();
+            let y2 = ex.run(&m2, &x).unwrap();
+            assert_eq!(y1[0].data, y2[0].data, "saved under {}", isa.name());
+        }
+    }
+
     #[test]
     fn rejects_corrupt_files() {
         let path = tmp("corrupt.dlrt");
         std::fs::write(&path, b"NOPE").unwrap();
         assert!(load(&path).is_err());
-        std::fs::write(&path, b"DLRT\x02\x00\x00\x00\x00\x00\x00\x00\x00\x00\x00\x00").unwrap();
+        std::fs::write(&path, b"DLRT\x63\x00\x00\x00\x00\x00\x00\x00\x00\x00\x00\x00").unwrap();
         assert!(load(&path).is_err()); // bad version
         std::fs::remove_file(&path).ok();
     }

@@ -31,15 +31,13 @@ use anyhow::{anyhow, bail, Result};
 use crate::dlrt::graph::{qp_qn, Graph, Op};
 use crate::dlrt::tensor::{Packed, Tensor};
 use crate::kernels::bitserial::{
-    dequant_scale_bias_act, dequant_scale_bias_add_act, gemm_bitserial, pack_rows_u8_into,
+    dequant_scale_bias_act, dequant_scale_bias_add_act, pack_rows_u8_into,
 };
 use crate::kernels::elementwise::{self as ew, ActKind};
-use crate::kernels::fp32::{
-    dense_rowmajor, gemm_rowmajor_bt, scale_bias_rows_act, scale_bias_rows_add_act,
-};
+use crate::kernels::fp32::{dense_rowmajor, scale_bias_rows_act, scale_bias_rows_add_act};
 use crate::kernels::im2col::{im2col_f32_view, im2col_quant_u8_view, ConvDims};
-use crate::kernels::int8::gemm_u8i8_i32;
 use crate::kernels::pool;
+use crate::kernels::ukernel::{self, Isa, PackedW, UKernel};
 use crate::util::threads;
 
 use self::planner::{ChanView, ExecPlan, Instr};
@@ -47,8 +45,9 @@ use self::planner::{ChanView, ExecPlan, Instr};
 /// Which engine executes a conv layer (chosen by the compiler).
 #[derive(Clone, Debug)]
 pub enum ConvKernel {
-    /// The paper's bitserial engine: packed offset-encoded weight planes.
-    Bitserial { packed: Packed, s_w: f32, s_a: f32, w_bits: u8, a_bits: u8 },
+    /// The paper's bitserial engine: offset-encoded weight planes prepacked
+    /// at compile time into the selected micro-kernel's tile-walk layout.
+    Bitserial { packed: PackedW, s_w: f32, s_a: f32, w_bits: u8, a_bits: u8 },
     /// FP32 baseline: transposed (cout × patch) weights.
     Fp32 { wt: Vec<f32> },
     /// INT8 baseline: (cout × patch) i8 codes + scales.
@@ -68,6 +67,8 @@ impl ConvKernel {
 /// A conv layer ready to execute.
 #[derive(Clone, Debug)]
 pub struct CompiledConv {
+    /// Graph node this kernel belongs to (diagnostics, save/load keying).
+    pub name: String,
     pub kernel: ConvKernel,
     /// per-channel folded-BN scale and bias
     pub scale: Vec<f32>,
@@ -76,6 +77,8 @@ pub struct CompiledConv {
 
 #[derive(Clone, Debug)]
 pub struct CompiledDense {
+    /// Graph node this kernel belongs to (diagnostics, save/load keying).
+    pub name: String,
     pub w: Vec<f32>, // (cin × cout) row-major, as exported
     pub b: Vec<f32>,
 }
@@ -84,11 +87,20 @@ pub struct CompiledDense {
 /// execution plan. The plan is built once here and shared read-only by
 /// every executor (the coordinator's batch workers run one plan against
 /// private arenas).
+///
+/// Kernels live in **dense vectors in graph node order**; plan instructions
+/// carry the matching index (`Instr::kernel_idx`, assigned at compile time),
+/// so the request path never walks a name-keyed map. The ISA the kernels
+/// were selected (and weights prepacked) for is recorded in `isa`.
 #[derive(Clone, Debug)]
 pub struct CompiledModel {
     pub graph: Graph,
-    pub convs: BTreeMap<String, CompiledConv>,
-    pub denses: BTreeMap<String, CompiledDense>,
+    /// Conv kernels, one per `Op::Conv2d` node, in graph node order.
+    pub convs: Vec<CompiledConv>,
+    /// Dense kernels, one per `Op::Dense` node, in graph node order.
+    pub denses: Vec<CompiledDense>,
+    /// The micro-kernel ISA this model was compiled (and prepacked) for.
+    pub isa: Isa,
     pub plan: ExecPlan,
 }
 
@@ -96,27 +108,51 @@ impl CompiledModel {
     /// Attach kernels to a graph and lower it through the planner pass
     /// pipeline. Statically invalid graphs (shape mismatches, undefined
     /// tensors) are rejected here, at compile time, not at request time.
+    /// `convs`/`denses` must be in graph node order — the plan's kernel
+    /// indices are assigned by that order, and `run_into` cross-checks the
+    /// counts before every run.
     pub fn new(
         graph: Graph,
-        convs: BTreeMap<String, CompiledConv>,
-        denses: BTreeMap<String, CompiledDense>,
+        convs: Vec<CompiledConv>,
+        denses: Vec<CompiledDense>,
+        isa: Isa,
     ) -> Result<CompiledModel> {
         let plan = planner::build_plan(&graph)?;
-        Ok(CompiledModel { graph, convs, denses, plan })
+        if plan.conv_kernels != convs.len() || plan.dense_kernels != denses.len() {
+            bail!(
+                "kernel table ({} convs, {} denses) does not match graph ({}, {})",
+                convs.len(),
+                denses.len(),
+                plan.conv_kernels,
+                plan.dense_kernels
+            );
+        }
+        Ok(CompiledModel { graph, convs, denses, isa, plan })
+    }
+
+    /// The compiled conv for graph node `name` (linear scan — diagnostics
+    /// and the reference interpreter only, never the serving path).
+    pub fn conv_named(&self, name: &str) -> Option<&CompiledConv> {
+        self.convs.iter().find(|c| c.name == name)
+    }
+
+    /// As [`CompiledModel::conv_named`], for dense layers.
+    pub fn dense_named(&self, name: &str) -> Option<&CompiledDense> {
+        self.denses.iter().find(|d| d.name == name)
     }
 
     /// Total weight bytes as stored (the paper's model-size metric).
     pub fn weight_bytes(&self) -> usize {
         let mut total = 0;
-        for c in self.convs.values() {
+        for c in &self.convs {
             total += match &c.kernel {
-                ConvKernel::Bitserial { packed, .. } => packed.data.len() * 8,
+                ConvKernel::Bitserial { packed, .. } => packed.storage_bytes(),
                 ConvKernel::Fp32 { wt } => wt.len() * 4,
                 ConvKernel::Int8 { codes, .. } => codes.len(),
             };
             total += (c.scale.len() + c.bias.len()) * 4;
         }
-        for d in self.denses.values() {
+        for d in &self.denses {
             total += (d.w.len() + d.b.len()) * 4;
         }
         total
@@ -124,7 +160,7 @@ impl CompiledModel {
 
     pub fn engine_summary(&self) -> BTreeMap<&'static str, usize> {
         let mut m = BTreeMap::new();
-        for c in self.convs.values() {
+        for c in &self.convs {
             *m.entry(c.kernel.engine_name()).or_insert(0) += 1;
         }
         m
@@ -258,6 +294,21 @@ impl Executor {
                 g.input_shape
             );
         }
+        // the plan's kernel indices must address exactly this model's
+        // kernel vectors (a swapped plan with a different table is invalid)
+        if plan.conv_kernels != model.convs.len() || plan.dense_kernels != model.denses.len() {
+            bail!(
+                "plan kernel table ({} convs, {} denses) does not match model ({}, {})",
+                plan.conv_kernels,
+                plan.dense_kernels,
+                model.convs.len(),
+                model.denses.len()
+            );
+        }
+        // resolve the micro-kernel entry once per run, not per instruction
+        let uk = ukernel::kernel_for(model.isa).ok_or_else(|| {
+            anyhow!("model compiled for ISA '{}' which this host cannot run", model.isa.name())
+        })?;
         let batch = input.shape[0];
 
         // arena layout for this batch: slot offsets are prefix sums of the
@@ -283,7 +334,7 @@ impl Executor {
 
         let views = ArenaViews { base: self.arena.as_mut_ptr(), offsets: &self.slot_offsets };
         for instr in &plan.instrs {
-            exec_instr(&mut self.scratch, self.nthreads, &views, model, instr, batch)?;
+            exec_instr(&mut self.scratch, self.nthreads, &views, model, uk, instr, batch)?;
         }
 
         // copy outputs into reusable caller tensors
@@ -312,12 +363,16 @@ fn view_or(v: &Option<ChanView>, c: usize) -> (usize, usize) {
     }
 }
 
-/// Execute one lowered instruction against the arena.
+/// Execute one lowered instruction against the arena. Conv/dense kernels
+/// are fetched by the instruction's resolved index (`kernel_idx`, assigned
+/// at compile time and range-checked by `ExecPlan::validate`) — no name
+/// lookup on the request path.
 fn exec_instr(
     scratch: &mut Scratch,
     nthreads: usize,
     views: &ArenaViews,
     model: &CompiledModel,
+    uk: &'static UKernel,
     instr: &Instr,
     batch: usize,
 ) -> Result<()> {
@@ -362,10 +417,10 @@ fn exec_instr(
             let t = &instr.in_tails[0]; // [h, w, c]
             let d = ConvDims::new(batch, t[0], t[1], t[2], kernel[0], kernel[1], *stride,
                                   *padding);
-            let conv = model
-                .convs
-                .get(&instr.name)
-                .ok_or_else(|| anyhow!("no compiled conv for {}", instr.name))?;
+            let conv = instr
+                .kernel_idx
+                .and_then(|i| model.convs.get(i))
+                .ok_or_else(|| anyhow!("no resolved conv kernel for {}", instr.name))?;
             // stage the (possibly strided-read) im2col first and drop the
             // input view before the output view exists: the conv may read
             // one stripe of its own output slot (concat-resident input),
@@ -390,7 +445,7 @@ fn exec_instr(
             // SAFETY: validated footprint; the input view was dropped above,
             // so this is the only live view of the slot.
             let out = unsafe { views.write(instr.out_slot, out_len) };
-            conv_finish(scratch, nthreads, &d, conv, *cout, instr.fused, res,
+            conv_finish(scratch, nthreads, uk, &d, conv, *cout, instr.fused, res,
                         instr.fused_post, instr.out_view, out);
         }
         Op::Dense { cin, cout } => {
@@ -399,10 +454,10 @@ fn exec_instr(
             let x = unsafe { views.read(instr.in_slots[0], in_elems(0)) };
             // SAFETY: as above — out_slot is distinct from the input slot.
             let out = unsafe { views.write(instr.out_slot, out_elems) };
-            let dense = model
-                .denses
-                .get(&instr.name)
-                .ok_or_else(|| anyhow!("no compiled dense for {}", instr.name))?;
+            let dense = instr
+                .kernel_idx
+                .and_then(|i| model.denses.get(i))
+                .ok_or_else(|| anyhow!("no resolved dense kernel for {}", instr.name))?;
             let rows = x.len() / cin;
             dense_rowmajor(x, &dense.w, &dense.b, rows, *cin, *cout, out, nthreads);
         }
@@ -581,8 +636,9 @@ fn conv_stage_cols(
 }
 
 /// Finish a compiled conv from the staged columns into `out`,
-/// engine-dispatched, with the plan's fused epilogue (activation, residual
-/// add, post-add activation) applied in the dequant/scale pass — and, when
+/// engine-dispatched through the selected micro-kernel's resolved GEMM fn
+/// pointers, with the plan's fused epilogue (activation, residual add,
+/// post-add activation) applied in the dequant/scale pass — and, when
 /// `view` is set, written into the conv's channel stripe of a concat
 /// output slot instead of densely.
 ///
@@ -593,6 +649,7 @@ fn conv_stage_cols(
 fn conv_finish(
     scratch: &mut Scratch,
     nthreads: usize,
+    uk: &UKernel,
     d: &ConvDims,
     conv: &CompiledConv,
     cout: usize,
@@ -614,14 +671,14 @@ fn conv_finish(
     match &conv.kernel {
         ConvKernel::Fp32 { wt } => {
             if plain {
-                gemm_rowmajor_bt(&scratch.cols_f32, wt, rows, cout, patch, out, nthreads);
+                (uk.gemm_f32)(&scratch.cols_f32, wt, rows, cout, patch, out, nthreads);
                 scale_bias_rows_act(out, cout, &conv.scale, &conv.bias, fused);
             } else {
                 // the epilogue can't mutate in place (it adds a residual
                 // and/or writes strided): stage the GEMM in scratch
                 scratch.gemm_f32.resize(rows * cout, 0.0);
-                gemm_rowmajor_bt(&scratch.cols_f32, wt, rows, cout, patch,
-                                 &mut scratch.gemm_f32, nthreads);
+                (uk.gemm_f32)(&scratch.cols_f32, wt, rows, cout, patch,
+                              &mut scratch.gemm_f32, nthreads);
                 scale_bias_rows_add_act(&scratch.gemm_f32, cout, &conv.scale, &conv.bias,
                                         fused, res, fused_post, out, ostride, ooff);
             }
@@ -630,8 +687,8 @@ fn conv_finish(
             pack_rows_u8_into(&scratch.cols_u8, rows, patch, *a_bits as usize,
                               &mut scratch.packed);
             scratch.acc.resize(rows * cout, 0);
-            gemm_bitserial(&scratch.packed, packed, *w_bits as usize,
-                           &mut scratch.acc[..rows * cout], nthreads);
+            (uk.gemm_bit)(&scratch.packed, packed, *w_bits as usize,
+                          &mut scratch.acc[..rows * cout], nthreads);
             if plain {
                 dequant_scale_bias_act(&scratch.acc[..rows * cout], cout, s_a * s_w,
                                        &conv.scale, &conv.bias, fused, out);
@@ -643,8 +700,8 @@ fn conv_finish(
         }
         ConvKernel::Int8 { codes, s_w, s_a } => {
             scratch.acc.resize(rows * cout, 0);
-            gemm_u8i8_i32(&scratch.cols_u8, codes, rows, cout, patch,
-                          &mut scratch.acc[..rows * cout], nthreads);
+            (uk.gemm_u8i8)(&scratch.cols_u8, codes, rows, cout, patch,
+                           &mut scratch.acc[..rows * cout], nthreads);
             if plain {
                 dequant_scale_bias_act(&scratch.acc[..rows * cout], cout, s_a * s_w,
                                        &conv.scale, &conv.bias, fused, out);

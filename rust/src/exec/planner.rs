@@ -184,8 +184,15 @@ fn ranges_overlap(a: (usize, usize), b: (usize, usize)) -> bool {
 /// time; the executor prepends the request batch.
 #[derive(Clone, Debug)]
 pub struct Instr {
-    /// Originating node name (key into the compiled conv/dense maps).
+    /// Originating node name (diagnostics; the executor fetches kernels by
+    /// `kernel_idx`, not by name).
     pub name: String,
+    /// Resolved index into the model's conv or dense kernel vector
+    /// (`CompiledModel::convs` / `::denses`, graph node order), assigned at
+    /// plan time so the request path never does a name lookup. `Some` for
+    /// exactly `Op::Conv2d` / `Op::Dense`, `None` otherwise — enforced by
+    /// [`ExecPlan::validate`] and the static verifier.
+    pub kernel_idx: Option<usize>,
     pub op: Op,
     /// Fused activation epilogue, applied before any fused add (convs only).
     pub fused: Option<ActKind>,
@@ -245,6 +252,12 @@ pub struct ExecPlan {
     pub outputs: Vec<OutSpec>,
     /// Batch the graph was planned at (shapes rescale linearly).
     pub nominal_batch: usize,
+    /// Size of the conv kernel table the plan's `kernel_idx` values index
+    /// (= number of `Op::Conv2d` nodes; the executor cross-checks it
+    /// against `CompiledModel::convs.len()` before every run).
+    pub conv_kernels: usize,
+    /// As `conv_kernels`, for `Op::Dense` / `CompiledModel::denses`.
+    pub dense_kernels: usize,
     /// Concat nodes elided entirely (every producer writes its stripe).
     pub in_place_concats: usize,
     /// Concat nodes that striped some producers and copy only the rest.
@@ -453,6 +466,18 @@ impl ExecPlan {
                     }
                     Op::Flatten => true, // exec_instr rejects it with an error
                 };
+            // conv/dense instructions must carry an in-range resolved
+            // kernel index (the executor indexes the kernel vectors with it
+            // unchecked beyond this); no other op may carry one
+            let kernel_idx_ok = match &ins.op {
+                Op::Conv2d { .. } => {
+                    matches!(ins.kernel_idx, Some(i) if i < self.conv_kernels)
+                }
+                Op::Dense { .. } => {
+                    matches!(ins.kernel_idx, Some(i) if i < self.dense_kernels)
+                }
+                _ => ins.kernel_idx.is_none(),
+            };
             // in-place is only meaningful (and only handled by exec_instr)
             // for activations; anything else would alias read/write views
             let in_place_ok = !ins.in_place || ActKind::from_op(&ins.op).is_some();
@@ -583,6 +608,7 @@ impl ExecPlan {
                 }
             };
             if !shape_ok
+                || !kernel_idx_ok
                 || !in_place_ok
                 || !fused_ok
                 || !view_ok
@@ -797,6 +823,26 @@ pub fn build_plan_with(g: &Graph, opts: PlanOpts) -> Result<ExecPlan> {
     let shapes = g.infer_shapes()?; // also surfaces static shape mismatches
     let tail_of = |t: &str| -> Vec<usize> { shapes[t][1..].to_vec() };
     let per_batch = |t: &str| -> usize { shapes[t][1..].iter().product() };
+
+    // kernel-index resolution: conv/dense node name → ordinal in graph node
+    // order, matching the layout the compiler builds CompiledModel::convs /
+    // ::denses in. Fusion rewrites a node's *output*, never its name, so
+    // these survive every pass below.
+    let mut conv_ord: BTreeMap<&str, usize> = BTreeMap::new();
+    let mut dense_ord: BTreeMap<&str, usize> = BTreeMap::new();
+    for n in &g.nodes {
+        match n.op {
+            Op::Conv2d { .. } => {
+                let i = conv_ord.len();
+                conv_ord.insert(n.name.as_str(), i);
+            }
+            Op::Dense { .. } => {
+                let i = dense_ord.len();
+                dense_ord.insert(n.name.as_str(), i);
+            }
+            _ => {}
+        }
+    }
 
     let mut nodes: Vec<WNode> = g
         .nodes
@@ -1070,6 +1116,7 @@ pub fn build_plan_with(g: &Graph, opts: PlanOpts) -> Result<ExecPlan> {
             };
             instrs.push(Instr {
                 name: n.name.clone(),
+                kernel_idx: None,
                 op: n.op.clone(),
                 fused: None,
                 fused_add: false,
@@ -1112,6 +1159,7 @@ pub fn build_plan_with(g: &Graph, opts: PlanOpts) -> Result<ExecPlan> {
             st.bind(&n.output, s, per_batch(&n.output));
             instrs.push(Instr {
                 name: n.name.clone(),
+                kernel_idx: None,
                 op: n.op.clone(),
                 fused: None,
                 fused_add: false,
@@ -1154,8 +1202,22 @@ pub fn build_plan_with(g: &Graph, opts: PlanOpts) -> Result<ExecPlan> {
                 (s, None)
             }
         };
+        let kernel_idx = match &n.op {
+            Op::Conv2d { .. } => Some(
+                *conv_ord
+                    .get(n.name.as_str())
+                    .ok_or_else(|| anyhow!("plan: conv {:?} missing from graph", n.name))?,
+            ),
+            Op::Dense { .. } => Some(
+                *dense_ord
+                    .get(n.name.as_str())
+                    .ok_or_else(|| anyhow!("plan: dense {:?} missing from graph", n.name))?,
+            ),
+            _ => None,
+        };
         instrs.push(Instr {
             name: n.name.clone(),
+            kernel_idx,
             op: n.op.clone(),
             fused: n.fused,
             fused_add: n.fused_add,
@@ -1185,6 +1247,8 @@ pub fn build_plan_with(g: &Graph, opts: PlanOpts) -> Result<ExecPlan> {
         input_tail: tail_of(&g.input_name),
         outputs,
         nominal_batch: g.input_shape[0],
+        conv_kernels: conv_ord.len(),
+        dense_kernels: dense_ord.len(),
         in_place_concats,
         partial_concats,
         concat_fallbacks,

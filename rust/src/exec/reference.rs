@@ -82,16 +82,14 @@ fn run_node(
             }
             let d = ConvDims::new(n, h, w, c, kernel[0], kernel[1], *stride, *padding);
             let conv = model
-                .convs
-                .get(&node.name)
+                .conv_named(&node.name)
                 .ok_or_else(|| anyhow!("no compiled conv for {}", node.name))?;
             conv_node(x, &d, conv, *cout, nthreads)
         }
         Op::Dense { cin, cout } => {
             let x = input(0)?;
             let dense = model
-                .denses
-                .get(&node.name)
+                .dense_named(&node.name)
                 .ok_or_else(|| anyhow!("no compiled dense for {}", node.name))?;
             let rows = x.numel() / cin;
             let mut out = vec![0.0f32; rows * cout];
@@ -206,7 +204,11 @@ fn conv_node(
             im2col_quant_u8(&x.data, d, *s_a, qp_a as u8, &mut cols);
             let ap = pack_rows_u8(&cols, rows, patch, *a_bits as usize);
             let mut acc = vec![0i32; rows * cout];
-            gemm_bitserial(&ap, packed, *w_bits as usize, &mut acc, nthreads);
+            // unpack the prepacked tile layout back to row-major and use the
+            // plain scalar GEMM: the oracle must stay independent of the
+            // micro-kernel registry it is the reference for
+            let rm = packed.to_row_major();
+            gemm_bitserial(&ap, &rm, *w_bits as usize, &mut acc, nthreads);
             dequant_scale_bias(&acc, cout, s_a * s_w, &conv.scale, &conv.bias, &mut out.data);
         }
         ConvKernel::Int8 { codes, s_w, s_a } => {

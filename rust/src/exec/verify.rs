@@ -19,8 +19,9 @@
 //! Per instruction, in order:
 //!
 //! 1. **structure** — aligned input arrays, concat-only `cat_offs`, no
-//!    unlowered `Flatten`, in-place really in place (`arity`,
-//!    `unlowered-op`, `in-place-alias`).
+//!    unlowered `Flatten`, in-place really in place, conv/dense kernel
+//!    indices resolved and in range of the plan's kernel tables (`arity`,
+//!    `unlowered-op`, `in-place-alias`, `kernel-idx`).
 //! 2. **bounds** — every slot id in range, every footprint inside its
 //!    slot's per-batch size, overflow-checked (`slot-oob`,
 //!    `footprint-oob`).
@@ -66,6 +67,7 @@ use crate::util::threads::chunk_ranges;
 pub const RULE_ARITY: &str = "arity";
 pub const RULE_UNLOWERED_OP: &str = "unlowered-op";
 pub const RULE_IN_PLACE_ALIAS: &str = "in-place-alias";
+pub const RULE_KERNEL_IDX: &str = "kernel-idx";
 pub const RULE_SLOT_OOB: &str = "slot-oob";
 pub const RULE_FOOTPRINT_OOB: &str = "footprint-oob";
 pub const RULE_THREAD_RACE: &str = "thread-race";
@@ -643,6 +645,34 @@ impl Vm<'_> {
             ));
         }
 
+        // conv/dense must carry a resolved kernel index addressing the
+        // plan's kernel tables (the executor indexes its kernel vectors
+        // with it); any other op carrying one is a corrupted plan
+        let kernel_idx_ok = match &ins.op {
+            Op::Conv2d { .. } => {
+                matches!(ins.kernel_idx, Some(k) if k < self.plan.conv_kernels)
+            }
+            Op::Dense { .. } => {
+                matches!(ins.kernel_idx, Some(k) if k < self.plan.dense_kernels)
+            }
+            _ => ins.kernel_idx.is_none(),
+        };
+        if !kernel_idx_ok {
+            return Err(self.diag(
+                RULE_KERNEL_IDX,
+                i,
+                ins,
+                None,
+                format!(
+                    "{} carries kernel_idx {:?} against tables of {} convs / {} denses",
+                    ins.op.name(),
+                    ins.kernel_idx,
+                    self.plan.conv_kernels,
+                    self.plan.dense_kernels
+                ),
+            ));
+        }
+
         // ---- slot ids -----------------------------------------------------
         for &s in ins.in_slots.iter().chain(std::iter::once(&ins.out_slot)) {
             if s >= nslots {
@@ -843,6 +873,21 @@ mod tests {
         assert_eq!(d.rule, RULE_UNINIT_READ, "{d}");
         assert_eq!(d.instr, Some(victim), "{d}");
         assert_eq!(d.slot, Some(fresh), "{d}");
+    }
+
+    #[test]
+    fn skewed_kernel_index_is_rejected() {
+        let g = tiny_test_graph(false);
+        let mut plan = build_plan(&g).unwrap();
+        let victim = plan
+            .instrs
+            .iter()
+            .position(|i| i.kernel_idx.is_some())
+            .expect("a conv or dense instruction exists");
+        plan.instrs[victim].kernel_idx = Some(plan.conv_kernels + plan.dense_kernels + 7);
+        let d = verify(&plan).unwrap_err();
+        assert_eq!(d.rule, RULE_KERNEL_IDX, "{d}");
+        assert_eq!(d.instr, Some(victim), "{d}");
     }
 
     #[test]

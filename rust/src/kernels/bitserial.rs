@@ -213,16 +213,35 @@ fn dot_planes(a: &Packed, mi: usize, w: &Packed, ni: usize) -> i32 {
     let wbase = ni * w.bits * nwords;
     let adata = &a.data[abase..abase + a.bits * nwords];
     let wdata = &w.data[wbase..wbase + w.bits * nwords];
-    match (a.bits, w.bits) {
+    dot_planes_raw(adata, a.bits, wdata, w.bits, nwords, nwords)
+}
+
+/// The same dot product over raw plane slices: `adata` holds `a_bits` planes
+/// of `nwords` words each, `wdata` holds `w_bits` planes spaced
+/// `w_plane_stride` words apart (`>= nwords`; padding words beyond `nwords`
+/// are ignored). This is the portable micro-kernel shared by the row-major
+/// [`Packed`] path above and the `ukernel` registry's prepacked layouts.
+#[inline]
+pub(crate) fn dot_planes_raw(
+    adata: &[u64],
+    a_bits: usize,
+    wdata: &[u64],
+    w_bits: usize,
+    nwords: usize,
+    w_plane_stride: usize,
+) -> i32 {
+    debug_assert!(w_plane_stride >= nwords);
+    match (a_bits, w_bits) {
         (1, 1) => {
             let mut pc: u32 = 0;
-            for (x, y) in adata.iter().zip(wdata) {
+            for (x, y) in adata[..nwords].iter().zip(&wdata[..nwords]) {
                 pc += (x & y).count_ones();
             }
             pc as i32
         }
         (1, 2) => {
-            let (a0, (w0, w1)) = (adata, wdata.split_at(nwords));
+            let a0 = &adata[..nwords];
+            let (w0, w1) = (&wdata[..nwords], &wdata[w_plane_stride..][..nwords]);
             let (mut p0, mut p1) = (0u32, 0u32);
             for i in 0..nwords {
                 let x = a0[i];
@@ -232,8 +251,8 @@ fn dot_planes(a: &Packed, mi: usize, w: &Packed, ni: usize) -> i32 {
             (p0 + (p1 << 1)) as i32
         }
         (2, 2) => {
-            let (a0, a1) = adata.split_at(nwords);
-            let (w0, w1) = wdata.split_at(nwords);
+            let (a0, a1) = (&adata[..nwords], &adata[nwords..][..nwords]);
+            let (w0, w1) = (&wdata[..nwords], &wdata[w_plane_stride..][..nwords]);
             // shift-bucket accumulators (out = s0 + 2*s1 + 4*s2), two
             // independent chains per bucket so the popcnt unit pipelines
             let mut s = [0u32; 8];
@@ -264,9 +283,9 @@ fn dot_planes(a: &Packed, mi: usize, w: &Packed, ni: usize) -> i32 {
         _ => {
             // generic multi-bit path
             let mut acc: u32 = 0;
-            for i in 0..w.bits {
-                let wp = &wdata[i * nwords..(i + 1) * nwords];
-                for j in 0..a.bits {
+            for i in 0..w_bits {
+                let wp = &wdata[i * w_plane_stride..][..nwords];
+                for j in 0..a_bits {
                     let ap = &adata[j * nwords..(j + 1) * nwords];
                     let mut pc: u32 = 0;
                     for (x, y) in ap.iter().zip(wp) {

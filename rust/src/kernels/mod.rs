@@ -8,6 +8,9 @@
 //!   (the paper's contribution; Neon `VCNT` ≙ `u64::count_ones`).
 //! * [`fp32`] — blocked float GEMM (the "optimized FP32 baseline").
 //! * [`int8`] — i8×i8→i32 GEMM (the TFLite/ONNX-Runtime INT8 analog).
+//! * [`ukernel`] — the SIMD micro-kernel registry: per-ISA GEMM inner
+//!   kernels (NEON / AVX2 / portable scalar) selected once at plan time by
+//!   runtime CPU feature detection, with tile-order weight prepacking.
 
 pub mod bitserial;
 pub mod elementwise;
@@ -15,3 +18,4 @@ pub mod fp32;
 pub mod im2col;
 pub mod int8;
 pub mod pool;
+pub mod ukernel;

@@ -1,0 +1,236 @@
+//! AVX2 micro-kernels (x86-64): a nibble-LUT popcount bitserial GEMM and a
+//! widening `pmaddwd` int8 GEMM.
+//!
+//! The bitserial inner loop is the paper's VAND+VCNT+VPADAL structure on
+//! 256-bit registers: AND packed planes, per-byte popcount via
+//! `_mm256_shuffle_epi8` against a 16-entry nibble table, accumulate bytes
+//! (each ≤ 8, so 31 chunks stay < 256), and flush to four u64 lanes with
+//! `_mm256_sad_epu8`. Weight planes arrive chunk-padded (`WLayout::TileN`),
+//! so every weight load is a whole in-bounds vector; the activation tail is
+//! staged once per (row, plane) into a zero-padded stack chunk — zero words
+//! AND to zero and contribute no popcount, keeping padding value-neutral.
+//!
+//! The int8 path widens u8/i8 to i16 (`cvtepu8`/`cvtepi8`) before
+//! `_mm256_madd_epi16`: products reach 255·127 and pair-sums 64770, which
+//! overflow the i16 saturation of `maddubs` but are exact in i32 — and i32
+//! wrapping addition is associative, so lane order cannot change results
+//! and the kernel stays bit-identical to the scalar reference.
+
+use std::arch::x86_64::*;
+
+use super::{Isa, PackedW, UKernel, UKernelDesc};
+use crate::dlrt::graph::qp_qn;
+use crate::dlrt::tensor::Packed;
+use crate::kernels::bitserial::{row_code_sum, MAX_BITS};
+use crate::util::threads;
+
+/// `u64` words per 256-bit chunk.
+const CHUNK: usize = 4;
+/// Chunks between byte-accumulator flushes (per-byte counts ≤ 8·31 < 256).
+const FLUSH: usize = 31;
+/// M (activation-row) tile: corrections + staged plane tails per block.
+const TILE_M: usize = 32;
+/// N (output-channel) tile: weight planes kept L1-hot across an M-tile.
+const TILE_N: usize = 16;
+
+pub static KERNEL: UKernel = UKernel {
+    desc: UKernelDesc { isa: Isa::Avx2, tile_m: TILE_M, tile_n: TILE_N, k_unroll: CHUNK },
+    gemm_bit,
+    gemm_u8i8,
+    gemm_f32: crate::kernels::fp32::gemm_rowmajor_bt,
+};
+
+fn gemm_bit(a: &Packed, w: &PackedW, w_bits_signed: usize, out: &mut [i32], nthreads: usize) {
+    assert_eq!(a.k, w.k, "reduction dim mismatch");
+    assert_eq!(a.words_per_row, w.words_per_row);
+    assert_eq!(w.plane_stride % CHUNK, 0, "AVX2 kernel needs chunk-padded weight planes");
+    assert!(a.bits <= MAX_BITS && w.bits <= MAX_BITS);
+    let (m, n) = (a.rows, w.rows);
+    assert_eq!(out.len(), m * n);
+    if m == 0 || n == 0 {
+        return;
+    }
+    let (_, qn) = qp_qn(w_bits_signed as u8, true);
+    threads::par_chunks_rows(out, n, nthreads, |row0, chunk| {
+        // SAFETY: this entry is only reachable through the registry, which
+        // hands out the AVX2 kernel after `is_x86_feature_detected!("avx2")`
+        // succeeded (`host_supports`), satisfying the target_feature
+        // contract of `bit_rows_block`.
+        unsafe { bit_rows_block(a, w, qn, row0, chunk, n) }
+    });
+}
+
+/// One worker's block of whole output rows, tiled `TILE_M`×`TILE_N` like the
+/// scalar kernel (exact integer arithmetic — tiling cannot change results).
+#[target_feature(enable = "avx2")]
+unsafe fn bit_rows_block(
+    a: &Packed,
+    w: &PackedW,
+    qn: i32,
+    row0: usize,
+    chunk: &mut [i32],
+    n: usize,
+) {
+    let rows = chunk.len() / n;
+    let nwords = a.words_per_row;
+    let full = nwords / CHUNK * CHUNK;
+    let tail = nwords - full;
+    // per-row signed-offset corrections and zero-padded activation tail
+    // chunks for the current M-tile (weight planes are pre-padded)
+    let mut corr = [0i32; TILE_M];
+    let mut tails = [[0u64; CHUNK]; TILE_M * MAX_BITS];
+    let mut mt = 0;
+    while mt < rows {
+        let mt_end = (mt + TILE_M).min(rows);
+        for mi in mt..mt_end {
+            corr[mi - mt] = qn * row_code_sum(a, row0 + mi);
+            for ab in 0..a.bits {
+                let plane = a.row_plane(row0 + mi, ab);
+                let t = &mut tails[(mi - mt) * MAX_BITS + ab];
+                *t = [0u64; CHUNK];
+                t[..tail].copy_from_slice(&plane[full..]);
+            }
+        }
+        let mut nt = 0;
+        while nt < n {
+            let nt_end = (nt + TILE_N).min(n);
+            for mi in mt..mt_end {
+                let c = corr[mi - mt];
+                for col in nt..nt_end {
+                    let mut total = 0u64;
+                    for wb in 0..w.bits {
+                        let wplane = w.plane(col, wb);
+                        for ab in 0..a.bits {
+                            let aplane = a.row_plane(row0 + mi, ab);
+                            let t = &tails[(mi - mt) * MAX_BITS + ab];
+                            // SAFETY: `aplane` holds `full` (+tail) readable
+                            // words, `t` is a CHUNK-word buffer, and
+                            // `wplane` holds `plane_stride >= full + CHUNK·
+                            // (tail > 0)` words — all in-bounds slices; AVX2
+                            // is guaranteed by this fn's target_feature.
+                            let cnt = unsafe {
+                                dot_plane_pair(
+                                    aplane.as_ptr(),
+                                    wplane.as_ptr(),
+                                    full,
+                                    t.as_ptr(),
+                                    tail > 0,
+                                )
+                            };
+                            total += cnt << (wb + ab);
+                        }
+                    }
+                    chunk[mi * n + col] = (total as u32 as i32) - c;
+                }
+            }
+            nt = nt_end;
+        }
+        mt = mt_end;
+    }
+}
+
+/// Popcount-AND dot of one activation plane against one chunk-padded weight
+/// plane: `full` words as whole 256-bit chunks plus an optional zero-padded
+/// tail chunk (`a_tail` vs the weight plane's own padding chunk).
+#[target_feature(enable = "avx2")]
+unsafe fn dot_plane_pair(
+    a: *const u64,
+    w: *const u64,
+    full: usize,
+    a_tail: *const u64,
+    has_tail: bool,
+) -> u64 {
+    // SAFETY (whole body): the caller passes `a` with at least `full`
+    // readable words, `a_tail` as a CHUNK-word buffer, and `w` with
+    // `full` (+CHUNK when `has_tail`) readable words; all loads below stay
+    // inside those bounds, and the AVX2 intrinsics are covered by this
+    // fn's target_feature contract.
+    unsafe {
+        #[rustfmt::skip]
+        let lut = _mm256_setr_epi8(
+            0, 1, 1, 2, 1, 2, 2, 3, 1, 2, 2, 3, 2, 3, 3, 4,
+            0, 1, 1, 2, 1, 2, 2, 3, 1, 2, 2, 3, 2, 3, 3, 4,
+        );
+        let low = _mm256_set1_epi8(0x0f);
+        let zero = _mm256_setzero_si256();
+        let mut acc = zero; // four u64 lanes
+        let mut bytes = zero; // per-byte counts, flushed every FLUSH chunks
+        let mut pending = 0usize;
+        for j in 0..(full / CHUNK) {
+            let av = _mm256_loadu_si256(a.add(j * CHUNK) as *const __m256i);
+            let wv = _mm256_loadu_si256(w.add(j * CHUNK) as *const __m256i);
+            let x = _mm256_and_si256(av, wv);
+            let lo = _mm256_shuffle_epi8(lut, _mm256_and_si256(x, low));
+            let hi = _mm256_shuffle_epi8(lut, _mm256_and_si256(_mm256_srli_epi16::<4>(x), low));
+            bytes = _mm256_add_epi8(bytes, _mm256_add_epi8(lo, hi));
+            pending += 1;
+            if pending == FLUSH {
+                acc = _mm256_add_epi64(acc, _mm256_sad_epu8(bytes, zero));
+                bytes = zero;
+                pending = 0;
+            }
+        }
+        if has_tail {
+            let av = _mm256_loadu_si256(a_tail as *const __m256i);
+            let wv = _mm256_loadu_si256(w.add(full) as *const __m256i);
+            let x = _mm256_and_si256(av, wv);
+            let lo = _mm256_shuffle_epi8(lut, _mm256_and_si256(x, low));
+            let hi = _mm256_shuffle_epi8(lut, _mm256_and_si256(_mm256_srli_epi16::<4>(x), low));
+            bytes = _mm256_add_epi8(bytes, _mm256_add_epi8(lo, hi));
+            pending += 1;
+        }
+        if pending > 0 {
+            acc = _mm256_add_epi64(acc, _mm256_sad_epu8(bytes, zero));
+        }
+        let mut lanes = [0u64; CHUNK];
+        _mm256_storeu_si256(lanes.as_mut_ptr() as *mut __m256i, acc);
+        lanes[0] + lanes[1] + lanes[2] + lanes[3]
+    }
+}
+
+fn gemm_u8i8(a: &[u8], b: &[i8], m: usize, n: usize, k: usize, out: &mut [i32], nthreads: usize) {
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(b.len(), n * k);
+    debug_assert_eq!(out.len(), m * n);
+    if m == 0 || n == 0 {
+        return;
+    }
+    threads::par_chunks_rows(out, n, nthreads, |row0, chunk| {
+        // SAFETY: registry-gated AVX2 (see `gemm_bit`).
+        unsafe { i8_rows_block(a, b, k, n, row0, chunk) }
+    });
+}
+
+#[target_feature(enable = "avx2")]
+unsafe fn i8_rows_block(a: &[u8], b: &[i8], k: usize, n: usize, row0: usize, chunk: &mut [i32]) {
+    let kv = k / 16 * 16;
+    for (i, orow) in chunk.chunks_mut(n).enumerate() {
+        let arow = &a[(row0 + i) * k..(row0 + i + 1) * k];
+        for (j, o) in orow.iter_mut().enumerate() {
+            let brow = &b[j * k..(j + 1) * k];
+            // SAFETY: every 16-byte load stays inside `arow`/`brow`
+            // (`kk + 16 <= kv <= k`); AVX2 is guaranteed by this fn's
+            // target_feature contract (upheld at the registry boundary).
+            unsafe {
+                let mut accv = _mm256_setzero_si256();
+                let mut kk = 0;
+                while kk < kv {
+                    let av = _mm_loadu_si128(arow.as_ptr().add(kk) as *const __m128i);
+                    let bv = _mm_loadu_si128(brow.as_ptr().add(kk) as *const __m128i);
+                    let aw = _mm256_cvtepu8_epi16(av);
+                    let bw = _mm256_cvtepi8_epi16(bv);
+                    accv = _mm256_add_epi32(accv, _mm256_madd_epi16(aw, bw));
+                    kk += 16;
+                }
+                let mut lanes = [0i32; 8];
+                _mm256_storeu_si256(lanes.as_mut_ptr() as *mut __m256i, accv);
+                let mut s = lanes[0] + lanes[1] + lanes[2] + lanes[3];
+                s += lanes[4] + lanes[5] + lanes[6] + lanes[7];
+                for kk in kv..k {
+                    s += arow[kk] as i32 * brow[kk] as i32;
+                }
+                *o = s;
+            }
+        }
+    }
+}

@@ -1,0 +1,412 @@
+//! SIMD micro-kernel registry with runtime ISA dispatch.
+//!
+//! The paper's 2–5× speedups come from hand-vectorized popcount kernels;
+//! this module is the dispatch layer that gets us there portably. Each
+//! entry bundles the three GEMM inner kernels (bitserial popcount, int8,
+//! fp32) for one instruction set, described by a [`UKernelDesc`] the
+//! planner and cost model consume instead of global tile constants:
+//!
+//! * **scalar** — the tiled portable fallback (always available; the
+//!   `u64::count_ones` bit-op machine of `kernels::bitserial`).
+//! * **avx2** — x86-64 AVX2 nibble-LUT popcount bitserial GEMM and a
+//!   widening `pmaddwd` int8 GEMM (compiled on x86-64, selected only when
+//!   `avx2` is detected at runtime).
+//! * **neon** — aarch64 `vcnt`-based popcount path (compiled on aarch64).
+//!
+//! Selection happens **once at compile time** (`select`/`selected_isa`):
+//! the planner records the chosen ISA in the model, weights are prepacked
+//! into the kernel's preferred [`WLayout`], and the executor calls straight
+//! through a resolved fn pointer — no per-request detection or lookup.
+//! `DLRT_FORCE_ISA={scalar,neon,avx2}` pins the choice (error if the host
+//! can't run it); tests use [`available_isas`] to sweep every host path.
+
+use crate::dlrt::tensor::Packed;
+
+mod scalar;
+
+#[cfg(target_arch = "x86_64")]
+mod avx2;
+
+#[cfg(target_arch = "aarch64")]
+mod neon;
+
+/// Instruction sets the registry knows about. `Scalar` is always available;
+/// the SIMD entries exist only on their architecture and are handed out
+/// only when runtime feature detection succeeds.
+#[derive(Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Debug)]
+pub enum Isa {
+    Scalar,
+    Neon,
+    Avx2,
+}
+
+impl Isa {
+    /// Stable lowercase name (CLI/env/format tag).
+    pub fn name(self) -> &'static str {
+        match self {
+            Isa::Scalar => "scalar",
+            Isa::Neon => "neon",
+            Isa::Avx2 => "avx2",
+        }
+    }
+
+    /// Parse a `DLRT_FORCE_ISA` / CLI value.
+    pub fn parse(s: &str) -> Result<Isa, String> {
+        match s.trim().to_ascii_lowercase().as_str() {
+            "scalar" => Ok(Isa::Scalar),
+            "neon" => Ok(Isa::Neon),
+            "avx2" => Ok(Isa::Avx2),
+            other => Err(format!("unknown ISA '{other}' (expected scalar, neon, or avx2)")),
+        }
+    }
+}
+
+/// Static description of one micro-kernel: the tile blocking the GEMM uses
+/// (consumed by the planner's cost model in place of the old global
+/// `TILE_M`/`TILE_N` constants) and how far its inner loop unrolls the
+/// packed-word reduction.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct UKernelDesc {
+    pub isa: Isa,
+    /// Activation-row (M) tile kept cache-resident per block.
+    pub tile_m: usize,
+    /// Output-channel (N) tile walked per M-tile; also the prepack group.
+    pub tile_n: usize,
+    /// Packed `u64` words consumed per inner-loop iteration.
+    pub k_unroll: usize,
+}
+
+/// Weight bit-plane storage layout, recorded per conv in the `.dlrt` format
+/// and matched against the loading host's selected kernel (mismatches are
+/// repacked on load).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum WLayout {
+    /// `Packed`-compatible: plane `(row, bit)` at `(row*bits + bit) * wpr`.
+    RowMajor,
+    /// N-tile walk order for a vector kernel: rows grouped `tile_n` at a
+    /// time, every plane zero-padded to a multiple of `chunk` words so the
+    /// inner loop streams whole vectors without tail branches.
+    TileN { tile_n: usize, chunk: usize },
+}
+
+/// Prepacked weight bit-planes in a kernel-chosen [`WLayout`].
+///
+/// Plane `(row, bit)` lives at `(row*bits + bit) * plane_stride`; for
+/// `RowMajor` the stride equals `words_per_row` (identical to [`Packed`]),
+/// for `TileN` it is rounded up to the kernel's vector chunk with zero
+/// padding (AND-with-zero contributes no popcount, so padded reads are
+/// value-neutral by construction).
+#[derive(Clone, Debug, PartialEq)]
+pub struct PackedW {
+    pub rows: usize,
+    pub k: usize,
+    pub bits: usize,
+    /// Meaningful words per plane (`ceil(k / 64)`).
+    pub words_per_row: usize,
+    /// Stored words per plane (`>= words_per_row`).
+    pub plane_stride: usize,
+    pub layout: WLayout,
+    pub data: Vec<u64>,
+}
+
+impl PackedW {
+    /// Repack a row-major [`Packed`] into `layout`.
+    pub fn from_packed(p: &Packed, layout: WLayout) -> PackedW {
+        let wpr = p.words_per_row;
+        let plane_stride = match layout {
+            WLayout::RowMajor => wpr,
+            WLayout::TileN { chunk, .. } => wpr.div_ceil(chunk.max(1)) * chunk.max(1),
+        };
+        let mut data = vec![0u64; p.rows * p.bits * plane_stride];
+        for r in 0..p.rows {
+            for b in 0..p.bits {
+                let dst = (r * p.bits + b) * plane_stride;
+                data[dst..dst + wpr].copy_from_slice(p.row_plane(r, b));
+            }
+        }
+        PackedW {
+            rows: p.rows,
+            k: p.k,
+            bits: p.bits,
+            words_per_row: wpr,
+            plane_stride,
+            layout,
+            data,
+        }
+    }
+
+    /// Recover the canonical row-major [`Packed`] (reference interpreter,
+    /// `.dlrt` cross-ISA repacking). Allocates; never on the serving path.
+    pub fn to_row_major(&self) -> Packed {
+        let wpr = self.words_per_row;
+        let mut p = Packed::new_zeroed(self.rows, self.k, self.bits);
+        for r in 0..self.rows {
+            for b in 0..self.bits {
+                let src = (r * self.bits + b) * self.plane_stride;
+                let dst = (r * self.bits + b) * wpr;
+                p.data[dst..dst + wpr].copy_from_slice(&self.data[src..src + wpr]);
+            }
+        }
+        p
+    }
+
+    /// One stored plane (`plane_stride` words, padding included).
+    #[inline]
+    pub fn plane(&self, row: usize, bit: usize) -> &[u64] {
+        let base = (row * self.bits + bit) * self.plane_stride;
+        &self.data[base..base + self.plane_stride]
+    }
+
+    /// Bytes of packed weight storage (model-size accounting).
+    pub fn storage_bytes(&self) -> usize {
+        self.data.len() * 8
+    }
+}
+
+/// Bitserial GEMM: packed unsigned activations × prepacked offset-encoded
+/// weights → i32 (same contract as `bitserial::gemm_bitserial`).
+pub type BitGemmFn = fn(a: &Packed, w: &PackedW, w_bits_signed: usize, out: &mut [i32], nthreads: usize);
+/// int8 GEMM: `a` m×k u8 codes, `b` n×k i8 codes, i32 accumulate.
+pub type I8GemmFn = fn(a: &[u8], b: &[i8], m: usize, n: usize, k: usize, out: &mut [i32], nthreads: usize);
+/// fp32 GEMM: `a` m×k, `b` n×k (transposed B), f32 accumulate.
+pub type F32GemmFn = fn(a: &[f32], b: &[f32], m: usize, n: usize, k: usize, out: &mut [f32], nthreads: usize);
+
+/// One registry entry: the three GEMM inner kernels for one ISA.
+pub struct UKernel {
+    pub desc: UKernelDesc,
+    pub gemm_bit: BitGemmFn,
+    pub gemm_u8i8: I8GemmFn,
+    pub gemm_f32: F32GemmFn,
+}
+
+impl UKernel {
+    /// The weight bit-plane layout this kernel's bitserial GEMM consumes.
+    pub fn weight_layout(&self) -> WLayout {
+        match self.desc.isa {
+            Isa::Scalar => WLayout::RowMajor,
+            Isa::Neon | Isa::Avx2 => {
+                WLayout::TileN { tile_n: self.desc.tile_n, chunk: self.desc.k_unroll }
+            }
+        }
+    }
+}
+
+/// Host support for `isa`, checked at runtime (not compile time): the AVX2
+/// entry is compiled into every x86-64 binary but only offered when the CPU
+/// reports the feature.
+pub fn host_supports(isa: Isa) -> bool {
+    // Miri interprets MIR and cannot execute vendor intrinsics: only the
+    // scalar kernel exists under the interpreter, regardless of what the
+    // compile-time target features claim.
+    if cfg!(miri) {
+        return isa == Isa::Scalar;
+    }
+    match isa {
+        Isa::Scalar => true,
+        #[cfg(target_arch = "x86_64")]
+        Isa::Avx2 => std::arch::is_x86_feature_detected!("avx2"),
+        #[cfg(target_arch = "aarch64")]
+        Isa::Neon => std::arch::is_aarch64_feature_detected!("neon"),
+        #[allow(unreachable_patterns)]
+        _ => false,
+    }
+}
+
+/// Every ISA this host can actually run, best first (ends with `Scalar`).
+pub fn available_isas() -> Vec<Isa> {
+    [Isa::Avx2, Isa::Neon, Isa::Scalar].into_iter().filter(|&i| host_supports(i)).collect()
+}
+
+/// The registry entry for `isa`, or `None` if this host can't run it.
+pub fn kernel_for(isa: Isa) -> Option<&'static UKernel> {
+    if !host_supports(isa) {
+        return None;
+    }
+    match isa {
+        Isa::Scalar => Some(&scalar::KERNEL),
+        #[cfg(target_arch = "x86_64")]
+        Isa::Avx2 => Some(&avx2::KERNEL),
+        #[cfg(target_arch = "aarch64")]
+        Isa::Neon => Some(&neon::KERNEL),
+        #[allow(unreachable_patterns)]
+        _ => None,
+    }
+}
+
+/// Pick an ISA: `force` pins it (error when the host can't run it);
+/// otherwise the best host-supported entry wins.
+pub fn select(force: Option<Isa>) -> Result<Isa, String> {
+    match force {
+        Some(isa) => {
+            if host_supports(isa) {
+                Ok(isa)
+            } else {
+                Err(format!(
+                    "DLRT_FORCE_ISA={} is not supported on this host (available: {})",
+                    isa.name(),
+                    available_isas().iter().map(|i| i.name()).collect::<Vec<_>>().join(", ")
+                ))
+            }
+        }
+        None => Ok(available_isas()[0]),
+    }
+}
+
+/// The process-default ISA: `DLRT_FORCE_ISA` if set (rejecting values the
+/// host can't run), else the best detected entry. Read once and cached —
+/// compile-time selection must not shift between layers of one model.
+pub fn selected_isa() -> Result<Isa, String> {
+    static SEL: std::sync::OnceLock<Result<Isa, String>> = std::sync::OnceLock::new();
+    SEL.get_or_init(|| {
+        let force = match std::env::var("DLRT_FORCE_ISA") {
+            Ok(v) if !v.trim().is_empty() => Some(Isa::parse(&v)?),
+            _ => None,
+        };
+        select(force)
+    })
+    .clone()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dlrt::graph::qp_qn;
+    use crate::kernels::bitserial::{gemm_bitserial, pack_rows_u8, pack_weights_offset};
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn scalar_is_always_available_and_last() {
+        let isas = available_isas();
+        assert_eq!(*isas.last().unwrap(), Isa::Scalar);
+        assert!(kernel_for(Isa::Scalar).is_some());
+        for &isa in &isas {
+            let k = kernel_for(isa).expect("available ISA must have a kernel");
+            assert_eq!(k.desc.isa, isa);
+            assert!(k.desc.tile_m > 0 && k.desc.tile_n > 0 && k.desc.k_unroll > 0);
+        }
+    }
+
+    #[test]
+    fn parse_round_trips_and_rejects_junk() {
+        for isa in [Isa::Scalar, Isa::Neon, Isa::Avx2] {
+            assert_eq!(Isa::parse(isa.name()).unwrap(), isa);
+        }
+        assert_eq!(Isa::parse("AVX2").unwrap(), Isa::Avx2);
+        assert!(Isa::parse("sse9").is_err());
+    }
+
+    #[test]
+    fn select_rejects_unsupported_force() {
+        // at most one of neon/avx2 exists on any host, so the other errors
+        let bogus = if cfg!(target_arch = "x86_64") { Isa::Neon } else { Isa::Avx2 };
+        assert!(select(Some(bogus)).is_err());
+        assert_eq!(select(Some(Isa::Scalar)).unwrap(), Isa::Scalar);
+        assert_eq!(select(None).unwrap(), available_isas()[0]);
+    }
+
+    #[test]
+    fn packedw_round_trips_every_layout() {
+        let mut rng = Rng::new(91);
+        for &(rows, k, bits) in &[(1usize, 1usize, 1usize), (5, 64, 2), (17, 130, 3), (3, 257, 8)] {
+            let codes: Vec<u8> = (0..rows * k).map(|_| rng.usize(1 << bits) as u8).collect();
+            let p = pack_rows_u8(&codes, rows, k, bits);
+            for layout in [
+                WLayout::RowMajor,
+                WLayout::TileN { tile_n: 8, chunk: 4 },
+                WLayout::TileN { tile_n: 4, chunk: 2 },
+            ] {
+                let pw = PackedW::from_packed(&p, layout);
+                assert_eq!(pw.layout, layout);
+                if let WLayout::TileN { chunk, .. } = layout {
+                    assert_eq!(pw.plane_stride % chunk, 0);
+                }
+                assert_eq!(pw.to_row_major(), p, "{rows}x{k}@{bits} {layout:?}");
+            }
+        }
+    }
+
+    /// Boundary-shape sweep for every host-compiled ISA against the scalar
+    /// row-major reference: K/N off vector-width multiples, single-row M,
+    /// bits ∈ 1..=8, padded plane tails.
+    #[test]
+    fn every_host_isa_matches_scalar_reference_on_boundary_shapes() {
+        let mut rng = Rng::new(417);
+        let shapes = [
+            (1usize, 1usize, 1usize),    // minimal everything
+            (1, 3, 63),                  // single row, K just under a word
+            (2, 5, 64),                  // exact word
+            (3, 4, 65),                  // word + 1
+            (5, 17, 130),                // N off tile, K off chunk
+            (2, 16, 256),                // exact chunk multiples
+            (4, 7, 300),                 // ragged both ways
+        ];
+        for isa in available_isas() {
+            let uk = kernel_for(isa).unwrap();
+            let layout = uk.weight_layout();
+            for &(m, n, k) in &shapes {
+                for wb in 1..=8usize {
+                    // pair every weight width with a low and a high act width
+                    for ab in [1usize, if wb < 5 { 2 } else { 7 }] {
+                        let (qp, qn) = qp_qn(wb as u8, true);
+                        let a: Vec<u8> =
+                            (0..m * k).map(|_| rng.usize(1 << ab) as u8).collect();
+                        let w: Vec<i32> = (0..n * k)
+                            .map(|_| rng.range(-(qn as i64), qp as i64 + 1) as i32)
+                            .collect();
+                        let ap = pack_rows_u8(&a, m, k, ab);
+                        let wp = pack_weights_offset(&w, n, k, wb);
+                        let pw = PackedW::from_packed(&wp, layout);
+                        let mut want = vec![0i32; m * n];
+                        gemm_bitserial(&ap, &wp, wb, &mut want, 1);
+                        for threads in [1usize, 3] {
+                            let mut got = vec![0i32; m * n];
+                            (uk.gemm_bit)(&ap, &pw, wb, &mut got, threads);
+                            assert_eq!(
+                                got, want,
+                                "{} m={m} n={n} k={k} {ab}A{wb}W t={threads}",
+                                isa.name()
+                            );
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn every_host_isa_int8_matches_scalar() {
+        let mut rng = Rng::new(91_011);
+        for isa in available_isas() {
+            let uk = kernel_for(isa).unwrap();
+            for &(m, n, k) in
+                &[(1usize, 1usize, 1usize), (1, 3, 15), (2, 5, 16), (3, 4, 17), (5, 9, 130)]
+            {
+                let a: Vec<u8> = (0..m * k).map(|_| rng.usize(256) as u8).collect();
+                let b: Vec<i8> = (0..n * k).map(|_| rng.range(-128, 128) as i8).collect();
+                let mut want = vec![0i32; m * n];
+                crate::kernels::int8::gemm_u8i8_i32(&a, &b, m, n, k, &mut want, 1);
+                for threads in [1usize, 3] {
+                    let mut got = vec![0i32; m * n];
+                    (uk.gemm_u8i8)(&a, &b, m, n, k, &mut got, threads);
+                    assert_eq!(got, want, "{} m={m} n={n} k={k} t={threads}", isa.name());
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn every_host_isa_f32_matches_portable() {
+        let mut rng = Rng::new(77_000);
+        for isa in available_isas() {
+            let uk = kernel_for(isa).unwrap();
+            let (m, n, k) = (7usize, 5usize, 33usize);
+            let a: Vec<f32> = (0..m * k).map(|_| rng.normal()).collect();
+            let b: Vec<f32> = (0..n * k).map(|_| rng.normal()).collect();
+            let mut want = vec![0.0f32; m * n];
+            crate::kernels::fp32::gemm_rowmajor_bt(&a, &b, m, n, k, &mut want, 1);
+            let mut got = vec![0.0f32; m * n];
+            (uk.gemm_f32)(&a, &b, m, n, k, &mut got, 1);
+            assert_eq!(got, want, "{}: fp32 path must stay the portable kernel", isa.name());
+        }
+    }
+}

@@ -1,0 +1,166 @@
+//! NEON micro-kernels (aarch64): the paper's VAND + VCNT + accumulate
+//! bitserial inner loop on 128-bit q-registers.
+//!
+//! Structure mirrors the AVX2 entry: AND two packed plane chunks, per-byte
+//! popcount with `vcntq_u8` (each byte ≤ 8, so 31 chunks stay < 256 before
+//! the `vaddlvq_u8` horizontal flush), weight planes chunk-padded by the
+//! `TileN` prepack so every weight load is a whole in-bounds vector, and a
+//! zero-padded stack chunk for the activation tail. The int8 path stays on
+//! the portable scalar GEMM for now — the SDOT specialization is seeded as
+//! a ROADMAP follow-up.
+
+use std::arch::aarch64::*;
+
+use super::{Isa, PackedW, UKernel, UKernelDesc};
+use crate::dlrt::graph::qp_qn;
+use crate::dlrt::tensor::Packed;
+use crate::kernels::bitserial::{row_code_sum, MAX_BITS};
+use crate::util::threads;
+
+/// `u64` words per 128-bit chunk.
+const CHUNK: usize = 2;
+/// Chunks between byte-accumulator flushes (per-byte counts ≤ 8·31 < 256).
+const FLUSH: usize = 31;
+/// M (activation-row) tile.
+const TILE_M: usize = 32;
+/// N (output-channel) tile.
+const TILE_N: usize = 16;
+
+pub static KERNEL: UKernel = UKernel {
+    desc: UKernelDesc { isa: Isa::Neon, tile_m: TILE_M, tile_n: TILE_N, k_unroll: CHUNK },
+    gemm_bit,
+    gemm_u8i8: crate::kernels::int8::gemm_u8i8_i32,
+    gemm_f32: crate::kernels::fp32::gemm_rowmajor_bt,
+};
+
+fn gemm_bit(a: &Packed, w: &PackedW, w_bits_signed: usize, out: &mut [i32], nthreads: usize) {
+    assert_eq!(a.k, w.k, "reduction dim mismatch");
+    assert_eq!(a.words_per_row, w.words_per_row);
+    assert_eq!(w.plane_stride % CHUNK, 0, "NEON kernel needs chunk-padded weight planes");
+    assert!(a.bits <= MAX_BITS && w.bits <= MAX_BITS);
+    let (m, n) = (a.rows, w.rows);
+    assert_eq!(out.len(), m * n);
+    if m == 0 || n == 0 {
+        return;
+    }
+    let (_, qn) = qp_qn(w_bits_signed as u8, true);
+    threads::par_chunks_rows(out, n, nthreads, |row0, chunk| {
+        // SAFETY: this entry is only reachable through the registry, which
+        // hands out the NEON kernel after runtime feature detection
+        // (`host_supports`), satisfying `bit_rows_block`'s target_feature
+        // contract.
+        unsafe { bit_rows_block(a, w, qn, row0, chunk, n) }
+    });
+}
+
+/// One worker's block of whole output rows, tiled `TILE_M`×`TILE_N` like the
+/// scalar kernel (exact integer arithmetic — tiling cannot change results).
+#[target_feature(enable = "neon")]
+unsafe fn bit_rows_block(
+    a: &Packed,
+    w: &PackedW,
+    qn: i32,
+    row0: usize,
+    chunk: &mut [i32],
+    n: usize,
+) {
+    let rows = chunk.len() / n;
+    let nwords = a.words_per_row;
+    let full = nwords / CHUNK * CHUNK;
+    let tail = nwords - full;
+    let mut corr = [0i32; TILE_M];
+    let mut tails = [[0u64; CHUNK]; TILE_M * MAX_BITS];
+    let mut mt = 0;
+    while mt < rows {
+        let mt_end = (mt + TILE_M).min(rows);
+        for mi in mt..mt_end {
+            corr[mi - mt] = qn * row_code_sum(a, row0 + mi);
+            for ab in 0..a.bits {
+                let plane = a.row_plane(row0 + mi, ab);
+                let t = &mut tails[(mi - mt) * MAX_BITS + ab];
+                *t = [0u64; CHUNK];
+                t[..tail].copy_from_slice(&plane[full..]);
+            }
+        }
+        let mut nt = 0;
+        while nt < n {
+            let nt_end = (nt + TILE_N).min(n);
+            for mi in mt..mt_end {
+                let c = corr[mi - mt];
+                for col in nt..nt_end {
+                    let mut total = 0u64;
+                    for wb in 0..w.bits {
+                        let wplane = w.plane(col, wb);
+                        for ab in 0..a.bits {
+                            let aplane = a.row_plane(row0 + mi, ab);
+                            let t = &tails[(mi - mt) * MAX_BITS + ab];
+                            // SAFETY: `aplane` holds `full` (+tail) readable
+                            // words, `t` is a CHUNK-word buffer, and
+                            // `wplane` holds `plane_stride >= full + CHUNK·
+                            // (tail > 0)` words — all in-bounds slices; NEON
+                            // is guaranteed by this fn's target_feature.
+                            let cnt = unsafe {
+                                dot_plane_pair(
+                                    aplane.as_ptr(),
+                                    wplane.as_ptr(),
+                                    full,
+                                    t.as_ptr(),
+                                    tail > 0,
+                                )
+                            };
+                            total += cnt << (wb + ab);
+                        }
+                    }
+                    chunk[mi * n + col] = (total as u32 as i32) - c;
+                }
+            }
+            nt = nt_end;
+        }
+        mt = mt_end;
+    }
+}
+
+/// Popcount-AND dot of one activation plane against one chunk-padded weight
+/// plane (see the AVX2 twin for the accumulation-bound argument).
+#[target_feature(enable = "neon")]
+unsafe fn dot_plane_pair(
+    a: *const u64,
+    w: *const u64,
+    full: usize,
+    a_tail: *const u64,
+    has_tail: bool,
+) -> u64 {
+    // SAFETY (whole body): the caller passes `a` with at least `full`
+    // readable words, `a_tail` as a CHUNK-word buffer, and `w` with
+    // `full` (+CHUNK when `has_tail`) readable words; all loads below stay
+    // inside those bounds, and the NEON intrinsics are covered by this
+    // fn's target_feature contract.
+    unsafe {
+        let mut total = 0u64;
+        let mut bytes = vdupq_n_u8(0);
+        let mut pending = 0usize;
+        for j in 0..(full / CHUNK) {
+            let av = vld1q_u64(a.add(j * CHUNK));
+            let wv = vld1q_u64(w.add(j * CHUNK));
+            let x = vreinterpretq_u8_u64(vandq_u64(av, wv));
+            bytes = vaddq_u8(bytes, vcntq_u8(x));
+            pending += 1;
+            if pending == FLUSH {
+                total += vaddlvq_u8(bytes) as u64;
+                bytes = vdupq_n_u8(0);
+                pending = 0;
+            }
+        }
+        if has_tail {
+            let av = vld1q_u64(a_tail);
+            let wv = vld1q_u64(w.add(full));
+            let x = vreinterpretq_u8_u64(vandq_u64(av, wv));
+            bytes = vaddq_u8(bytes, vcntq_u8(x));
+            pending += 1;
+        }
+        if pending > 0 {
+            total += vaddlvq_u8(bytes) as u64;
+        }
+        total
+    }
+}

@@ -1,0 +1,71 @@
+//! The portable micro-kernel entry: the tiled scalar bitserial GEMM (the
+//! pre-registry `kernels::bitserial` code, reading planes through a
+//! [`PackedW`] so it also accepts padded layouts), the scalar int8 GEMM,
+//! and the blocked fp32 GEMM. Always available; the bit-exactness oracle
+//! every SIMD entry is tested against.
+
+use super::{Isa, PackedW, UKernel, UKernelDesc};
+use crate::dlrt::graph::qp_qn;
+use crate::dlrt::tensor::Packed;
+use crate::kernels::bitserial::{dot_planes_raw, row_code_sum, MAX_TILE_M, TILE_M, TILE_N};
+use crate::util::threads;
+
+pub static KERNEL: UKernel = UKernel {
+    desc: UKernelDesc { isa: Isa::Scalar, tile_m: TILE_M, tile_n: TILE_N, k_unroll: 2 },
+    gemm_bit,
+    gemm_u8i8: crate::kernels::int8::gemm_u8i8_i32,
+    gemm_f32: crate::kernels::fp32::gemm_rowmajor_bt,
+};
+
+/// Tiled scalar bitserial GEMM over a prepacked weight layout. Identical
+/// loop nest and arithmetic to `bitserial::gemm_bitserial_tiled`, but the
+/// weight planes are read at `w.plane_stride` spacing so both `RowMajor`
+/// and chunk-padded `TileN` layouts work (padding words are zero and a
+/// plane dot only reads the first `words_per_row` of each plane).
+pub(super) fn gemm_bit(
+    a: &Packed,
+    w: &PackedW,
+    w_bits_signed: usize,
+    out: &mut [i32],
+    nthreads: usize,
+) {
+    assert_eq!(a.k, w.k, "reduction dim mismatch");
+    assert_eq!(a.words_per_row, w.words_per_row);
+    let (m, n) = (a.rows, w.rows);
+    assert_eq!(out.len(), m * n);
+    let (_, qn) = qp_qn(w_bits_signed as u8, true);
+    if m == 0 || n == 0 {
+        return;
+    }
+    let (tile_m, tile_n) = (KERNEL.desc.tile_m.min(MAX_TILE_M), KERNEL.desc.tile_n);
+    let nwords = a.words_per_row;
+
+    threads::par_chunks_rows(out, n, nthreads, |row0, chunk| {
+        let rows = chunk.len() / n;
+        let mut corr = [0i32; MAX_TILE_M];
+        let mut mt = 0;
+        while mt < rows {
+            let mt_end = (mt + tile_m).min(rows);
+            for (c, mi) in corr.iter_mut().zip(mt..mt_end) {
+                *c = qn * row_code_sum(a, row0 + mi);
+            }
+            let mut nt = 0;
+            while nt < n {
+                let nt_end = (nt + tile_n).min(n);
+                for mi in mt..mt_end {
+                    let c = corr[mi - mt];
+                    let abase = (row0 + mi) * a.bits * nwords;
+                    let adata = &a.data[abase..abase + a.bits * nwords];
+                    let orow = &mut chunk[mi * n + nt..mi * n + nt_end];
+                    for (j, o) in orow.iter_mut().enumerate() {
+                        let wdata = &w.data[(nt + j) * w.bits * w.plane_stride..];
+                        *o = dot_planes_raw(adata, a.bits, wdata, w.bits, nwords, w.plane_stride)
+                            - c;
+                    }
+                }
+                nt = nt_end;
+            }
+            mt = mt_end;
+        }
+    });
+}

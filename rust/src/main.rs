@@ -211,14 +211,32 @@ fn cmd_inspect(args: &Args) -> Result<()> {
     println!("weights : {} bytes", model.weight_bytes());
     println!("peak act: {peak} f32 elems");
     if args.flag("layers") {
-        for n in g.conv_nodes() {
-            let c = &model.convs[&n.name];
-            println!("  {:<24} {:<9} scale[{}]", n.name, c.kernel.engine_name(),
+        for c in &model.convs {
+            println!("  {:<24} {:<9} scale[{}]", c.name, c.kernel.engine_name(),
                      c.scale.len());
         }
     }
     if args.flag("plan") {
         let p = &model.plan;
+        // which micro-kernel the compile-time ISA dispatch resolved to
+        let desc = dlrt::kernels::ukernel::kernel_for(model.isa).map(|u| u.desc);
+        if let Some(d) = desc {
+            println!(
+                "ukernel : isa={} tile {}x{} k-unroll {}",
+                d.isa.name(),
+                d.tile_m,
+                d.tile_n,
+                d.k_unroll
+            );
+        }
+        let vectorized =
+            if model.isa == dlrt::kernels::ukernel::Isa::Scalar { 0 } else { p.conv_kernels };
+        println!(
+            "dispatch: isa={}, {}/{} convs vectorized",
+            model.isa.name(),
+            vectorized,
+            p.conv_kernels
+        );
         println!(
             "plan    : {} instrs ({} fused epilogues, {} in-place), {} slots",
             p.instrs.len(),
@@ -264,6 +282,20 @@ fn cmd_inspect(args: &Args) -> Result<()> {
                 fused.push_str(&format!(" +{}", a.name()));
             }
             let mode = if ins.in_place { " (in-place)" } else { "" };
+            let kern = match (ins.kernel_idx, desc) {
+                (Some(ki), Some(d)) => {
+                    let eng = match &ins.op {
+                        dlrt::dlrt::graph::Op::Conv2d { .. } => model
+                            .convs
+                            .get(ki)
+                            .map(|c| c.kernel.engine_name())
+                            .unwrap_or("?"),
+                        _ => "dense",
+                    };
+                    format!(" uk#{ki}[{eng} {} {}x{}]", d.isa.name(), d.tile_m, d.tile_n)
+                }
+                _ => String::new(),
+            };
             let mut stripe = match ins.out_view {
                 Some(v) => format!(" stripe[{}..{}/{}]", v.off,
                                    v.off + ins.out_tail.last().copied().unwrap_or(0),
@@ -281,7 +313,7 @@ fn cmd_inspect(args: &Args) -> Result<()> {
                 }
             }
             println!(
-                "  {i:>3}: {:<12} {:<24} in={:?} out={} {:?}{fused}{stripe}{mode}",
+                "  {i:>3}: {:<12} {:<24} in={:?} out={} {:?}{fused}{stripe}{mode}{kern}",
                 ins.op.name(),
                 ins.name,
                 ins.in_slots,

@@ -6,7 +6,10 @@
 //! activation fusion, residual-add fusion, in-place lowering, concat
 //! striping with stride-aware reads and partial (mixed eligible/copy)
 //! concats and all — and the unfused env-map reference interpreter,
-//! across {bitserial, fp32, int8} × {1, 3} threads × batch {1, 3}.
+//! across {bitserial, fp32, int8} × {1, 3} threads × batch {1, 3}. Seeds
+//! rotate through every host-available micro-kernel ISA (forced at compile
+//! time), so the SIMD and scalar inner kernels both see the full graph zoo
+//! without multiplying the runtime by the ISA count.
 //!
 //! A failure prints the reproducing seed and a full graph dump; re-run a
 //! single seed with `DLRT_FUZZ_SEED=<seed> cargo test --test plan_fuzz`.
@@ -14,9 +17,10 @@
 mod common;
 
 use common::{dump, fuzz_input, random_graph};
-use dlrt::compiler::{compile_graph, EngineChoice};
+use dlrt::compiler::{compile_graph_for_isa, EngineChoice};
 use dlrt::dlrt::graph::Graph;
 use dlrt::exec::{reference, Executor};
+use dlrt::kernels::ukernel::{available_isas, Isa};
 
 /// Seeds per run: the CI release smoke sweeps the full 500+; debug builds
 /// (plain `cargo test`) run a subset to keep tier-1 fast.
@@ -35,6 +39,8 @@ struct Coverage {
     same_slot: usize,
     fused_acts: usize,
     in_place: usize,
+    /// seeds run per micro-kernel ISA (each must stay non-zero)
+    isa_seeds: std::collections::BTreeMap<&'static str, usize>,
 }
 
 fn fail(seed: u64, g: &Graph, what: &str, detail: String) -> ! {
@@ -45,12 +51,16 @@ fn fail(seed: u64, g: &Graph, what: &str, detail: String) -> ! {
     )
 }
 
-fn check_seed(seed: u64, cov: &mut Coverage) {
+fn check_seed(seed: u64, isa: Isa, cov: &mut Coverage) {
     let g = random_graph(seed);
+    *cov.isa_seeds.entry(isa.name()).or_insert(0) += 1;
     for engine in [EngineChoice::Auto, EngineChoice::ForceFp32, EngineChoice::ForceInt8] {
-        let model = match compile_graph(&g, engine) {
+        let model = match compile_graph_for_isa(&g, engine, isa) {
             Ok(m) => m,
-            Err(e) => fail(seed, &g, "compile failed", format!("{engine:?}: {e:#}")),
+            Err(e) => {
+                fail(seed, &g, "compile failed",
+                     format!("{engine:?} isa={}: {e:#}", isa.name()))
+            }
         };
         cov.fused_adds += model.plan.fused_add_instrs();
         cov.in_place_concats += model.plan.in_place_concats;
@@ -65,7 +75,10 @@ fn check_seed(seed: u64, cov: &mut Coverage) {
             let mut ex = Executor::new(threads);
             for batch in [1usize, 3] {
                 let x = fuzz_input(&g, batch, seed);
-                let label = format!("{engine:?} threads={threads} batch={batch}");
+                let label = format!(
+                    "{engine:?} isa={} threads={threads} batch={batch}",
+                    isa.name()
+                );
                 let got = match ex.run(&model, &x) {
                     Ok(o) => o,
                     Err(e) => fail(seed, &g, "planned run failed",
@@ -111,15 +124,19 @@ fn check_seed(seed: u64, cov: &mut Coverage) {
 #[test]
 fn randomized_graphs_match_reference_bit_for_bit() {
     // DLRT_FUZZ_SEED replays one failing seed with full output
+    let isas = available_isas();
+    // same rotation for replay and sweep, so DLRT_FUZZ_SEED reproduces the
+    // exact (graph, ISA) pairing that failed
+    let isa_of = |seed: u64| isas[(seed as usize) % isas.len()];
     if let Ok(s) = std::env::var("DLRT_FUZZ_SEED") {
         let seed: u64 = s.parse().expect("DLRT_FUZZ_SEED must be an integer");
         let mut cov = Coverage::default();
-        check_seed(seed, &mut cov);
+        check_seed(seed, isa_of(seed), &mut cov);
         return;
     }
     let mut cov = Coverage::default();
     for seed in 0..SEEDS {
-        check_seed(seed, &mut cov);
+        check_seed(seed, isa_of(seed), &mut cov);
     }
     // the generator must keep hitting every lowering; if these ever drop
     // to zero the fuzzer has gone vacuous, which is itself a failure
@@ -132,6 +149,16 @@ fn randomized_graphs_match_reference_bit_for_bit() {
     assert!(cov.same_slot > 0, "no same-slot stripe hops across {SEEDS} seeds");
     assert!(cov.fused_acts > 0, "no fused activations across {SEEDS} seeds");
     assert!(cov.in_place > 0, "no in-place activations across {SEEDS} seeds");
+    for isa in &isas {
+        assert!(
+            cov.isa_seeds.get(isa.name()).copied().unwrap_or(0) > 0,
+            "isa {} never exercised across {SEEDS} seeds",
+            isa.name()
+        );
+    }
+    let isa_cov: Vec<String> =
+        cov.isa_seeds.iter().map(|(n, c)| format!("{n}x{c}")).collect();
+    println!("plan_fuzz isa rotation: {}", isa_cov.join(", "));
     println!(
         "plan_fuzz: {SEEDS} seeds × 3 engines — {} fused adds, {} in-place concats \
          ({} partial concats, {} fallbacks), {} striped writers, {} stripe readers \

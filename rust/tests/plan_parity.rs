@@ -1,12 +1,14 @@
 //! Golden parity for the compile-time execution plans: the planned/fused
 //! arena executor must match the retained env-map reference interpreter
-//! **bit for bit** on every engine, plus structural plan invariants
-//! (arena within the interpreter's peak working set, slot disjointness).
+//! **bit for bit** on every engine and every host-available micro-kernel
+//! ISA, plus structural plan invariants (arena within the interpreter's
+//! peak working set, slot disjointness).
 
-use dlrt::compiler::{compile_graph, EngineChoice};
+use dlrt::compiler::{compile_graph, compile_graph_for_isa, EngineChoice};
 use dlrt::dlrt::graph::{Graph, Op, QCfg};
 use dlrt::exec::planner::{build_plan_with, peak_live_elems, PlanOpts};
 use dlrt::exec::{reference, Executor};
+use dlrt::kernels::ukernel::available_isas;
 use dlrt::models::{single_conv_graph, tiny_test_graph, GraphBuilder};
 use dlrt::Tensor;
 
@@ -54,16 +56,24 @@ fn planned_executor_matches_interpreter_bit_for_bit() {
         ("tiny", tiny_test_graph(false)),
         ("multi_op", multi_op_graph()),
     ];
+    // every engine × every host-available micro-kernel ISA × thread count:
+    // the planned executor must agree with the interpreter bit for bit no
+    // matter which SIMD inner kernel the dispatch resolves to
     for (gname, g) in &graphs {
         for engine in [EngineChoice::Auto, EngineChoice::ForceFp32, EngineChoice::ForceInt8] {
-            let model = compile_graph(g, engine).unwrap();
-            let x = smooth_input(vec![1, 8, 8, 3]);
-            for nthreads in [1usize, 3] {
-                let mut ex = Executor::new(nthreads);
-                let got = ex.run(&model, &x).unwrap();
-                let want = reference::run_unfused(&model, &x, nthreads).unwrap();
-                assert_bit_identical(&got, &want,
-                                     &format!("{gname}/{engine:?}/t{nthreads}"));
+            for isa in available_isas() {
+                let model = compile_graph_for_isa(g, engine, isa).unwrap();
+                let x = smooth_input(vec![1, 8, 8, 3]);
+                for nthreads in [1usize, 3] {
+                    let mut ex = Executor::new(nthreads);
+                    let got = ex.run(&model, &x).unwrap();
+                    let want = reference::run_unfused(&model, &x, nthreads).unwrap();
+                    assert_bit_identical(
+                        &got,
+                        &want,
+                        &format!("{gname}/{engine:?}/{}/t{nthreads}", isa.name()),
+                    );
+                }
             }
         }
     }

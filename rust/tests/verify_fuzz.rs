@@ -7,7 +7,8 @@
 //! targeted corruption per mutation class — shrink a slot, widen a stripe
 //! past its row, collapse two producer stripes onto the same channels,
 //! retarget a read at a not-yet-written slot, resurrect a value that slot
-//! reuse overwrote, skew a concat destination offset — and the verifier must
+//! reuse overwrote, skew a concat destination offset, point a resolved
+//! kernel index past the kernel tables — and the verifier must
 //! reject every single mutant. Per-class applied/caught counters are printed
 //! in greppable form and asserted non-vacuous, so a generator drift that
 //! stops producing some pattern fails loudly instead of silently shrinking
@@ -251,19 +252,35 @@ fn mutate_skew_cat_off(p: &ExecPlan) -> Option<(ExecPlan, String)> {
     None
 }
 
+/// Point a conv/dense instruction's resolved kernel index past the end of
+/// the plan's kernel tables: the executor would index a kernel that doesn't
+/// exist (or silently run the wrong layer's weights after a table edit).
+fn mutate_skew_kernel_idx(p: &ExecPlan) -> Option<(ExecPlan, String)> {
+    let (i, old) = p
+        .instrs
+        .iter()
+        .enumerate()
+        .find_map(|(i, ins)| ins.kernel_idx.map(|k| (i, k)))?;
+    let bogus = p.conv_kernels + p.dense_kernels + 7;
+    let mut m = p.clone();
+    m.instrs[i].kernel_idx = Some(bogus);
+    Some((m, format!("instr {i}: kernel index {old} skewed to out-of-table {bogus}")))
+}
+
 // ---------------------------------------------------------------------------
 // driver
 // ---------------------------------------------------------------------------
 
 type Mutator = fn(&ExecPlan) -> Option<(ExecPlan, String)>;
 
-const CLASSES: [(&str, Mutator); 6] = [
+const CLASSES: [(&str, Mutator); 7] = [
     ("shrink-slot", mutate_shrink_slot),
     ("widen-stripe", mutate_widen_stripe),
     ("overlap-stripes", mutate_overlap_stripes),
     ("retarget-read", mutate_retarget_read),
     ("resurrect-dead", mutate_resurrect_dead),
     ("skew-cat-off", mutate_skew_cat_off),
+    ("skew-kernel-idx", mutate_skew_kernel_idx),
 ];
 
 struct ClassStat {

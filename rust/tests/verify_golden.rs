@@ -8,8 +8,8 @@ use dlrt::dlrt::graph::Op;
 use dlrt::exec::planner::{ChanView, ExecPlan, Instr, OutSpec};
 use dlrt::exec::verify::{
     verify, RULE_ARITY, RULE_CLOBBERED_READ, RULE_FOOTPRINT_OOB, RULE_IN_PLACE_ALIAS,
-    RULE_SAME_SLOT_OVERLAP, RULE_SLOT_OOB, RULE_THREAD_RACE, RULE_UNINIT_READ,
-    RULE_UNLOWERED_OP, RULE_WRITE_OVERLAP,
+    RULE_KERNEL_IDX, RULE_SAME_SLOT_OVERLAP, RULE_SLOT_OOB, RULE_THREAD_RACE,
+    RULE_UNINIT_READ, RULE_UNLOWERED_OP, RULE_WRITE_OVERLAP,
 };
 
 /// A bare instruction with no fusion, views, or concat metadata.
@@ -23,6 +23,7 @@ fn instr(
 ) -> Instr {
     Instr {
         name: name.into(),
+        kernel_idx: None,
         op,
         fused: None,
         fused_add: false,
@@ -48,6 +49,8 @@ fn plan(instrs: Vec<Instr>, outputs: Vec<OutSpec>) -> ExecPlan {
         input_tail: vec![4, 4, 2],
         outputs,
         nominal_batch: 1,
+        conv_kernels: 0,
+        dense_kernels: 0,
         in_place_concats: 0,
         partial_concats: 0,
         concat_fallbacks: Vec::new(),
@@ -90,6 +93,15 @@ fn golden_arity_cat_offs_on_non_concat() {
     let mut i = instr("act", Op::Relu, vec![0], vec![vec![4, 4, 2]], 1, vec![4, 4, 2]);
     i.cat_offs = vec![0];
     expect(&plan(vec![i], out1()), RULE_ARITY, Some(0));
+}
+
+#[test]
+fn golden_kernel_idx_on_non_kernel_op() {
+    // a Relu has no compiled-kernel table entry, so any resolved index is a
+    // planner bug the verifier must refuse
+    let mut i = instr("act", Op::Relu, vec![0], vec![vec![4, 4, 2]], 1, vec![4, 4, 2]);
+    i.kernel_idx = Some(0);
+    expect(&plan(vec![i], out1()), RULE_KERNEL_IDX, Some(0));
 }
 
 #[test]
