@@ -1,17 +1,66 @@
-//! Serving metrics: queue/exec latency quantiles, batch sizes, throughput.
+//! Serving metrics: queue/exec latency quantiles, fixed-bucket histograms,
+//! batch sizes, throughput, per-op-class execution time.
 //!
 //! Long-running servers must not grow without bound, so observations are
-//! split into **monotonic counters** (completed, errors, batch-size sums —
-//! exact over the server's whole life) and a **fixed-capacity ring** of the
-//! most recent latency samples that the quantiles are computed over. A
-//! server handling millions of requests holds the same few KB of metric
-//! state as one handling a hundred.
+//! split into **monotonic counters** (completed, errors, batch-size sums,
+//! histogram buckets, per-class exec seconds — exact over the server's
+//! whole life) and a **fixed-capacity ring** of the most recent latency
+//! samples that the quantiles are computed over. A server handling
+//! millions of requests holds the same few KB of metric state as one
+//! handling a hundred.
 
 use std::sync::Mutex;
 use std::time::Instant;
 
+use crate::obs::N_CLASSES;
+
 /// Latency samples kept per series for quantile estimation.
 pub const WINDOW_CAP: usize = 1024;
+
+/// Fixed upper bounds (ms) of the latency histogram buckets; an implicit
+/// `+Inf` bucket completes the series. Prometheus histogram convention:
+/// exported counts are cumulative (`le=...`).
+pub const HIST_BUCKETS_MS: [f64; 12] =
+    [0.1, 0.25, 0.5, 1.0, 2.5, 5.0, 10.0, 25.0, 50.0, 100.0, 250.0, 1000.0];
+
+/// Monotonic fixed-bucket latency histogram (per-bucket counts are stored
+/// non-cumulative; [`Hist::snapshot`] renders the cumulative form).
+#[derive(Debug, Default)]
+struct Hist {
+    counts: [u64; HIST_BUCKETS_MS.len()],
+    /// Observations above the last bucket bound (the `+Inf` bucket).
+    overflow: u64,
+    sum_ms: f64,
+}
+
+impl Hist {
+    fn observe(&mut self, v_ms: f64) {
+        match HIST_BUCKETS_MS.iter().position(|&le| v_ms <= le) {
+            Some(i) => self.counts[i] += 1,
+            None => self.overflow += 1,
+        }
+        self.sum_ms += v_ms;
+    }
+
+    fn snapshot(&self) -> HistSnapshot {
+        let mut cumulative = Vec::with_capacity(HIST_BUCKETS_MS.len());
+        let mut running = 0u64;
+        for &c in &self.counts {
+            running += c;
+            cumulative.push(running);
+        }
+        HistSnapshot { cumulative, sum_ms: self.sum_ms, count: running + self.overflow }
+    }
+}
+
+/// Cumulative view of a [`Hist`], aligned with [`HIST_BUCKETS_MS`];
+/// `count` includes the `+Inf` overflow bucket.
+#[derive(Clone, Debug, Default)]
+pub struct HistSnapshot {
+    pub cumulative: Vec<u64>,
+    pub sum_ms: f64,
+    pub count: u64,
+}
 
 /// Fixed-capacity ring buffer of the most recent observations.
 #[derive(Debug)]
@@ -53,6 +102,11 @@ impl Default for Metrics {
 struct Inner {
     queue_ms: Reservoir,
     exec_ms: Reservoir,
+    queue_hist: Hist,
+    exec_hist: Hist,
+    /// Exec seconds per op class (indices follow [`crate::obs::OP_CLASSES`]),
+    /// drained from worker profiler rings after each batch.
+    class_exec_s: [f64; N_CLASSES],
     completed: u64,
     errors: u64,
     batch_size_sum: u64,
@@ -75,6 +129,12 @@ pub struct MetricsSnapshot {
     pub throughput_rps: f64,
     /// Samples currently in the quantile window (≤ [`WINDOW_CAP`]).
     pub window: usize,
+    /// Cumulative queue-wait histogram over [`HIST_BUCKETS_MS`].
+    pub queue_hist: HistSnapshot,
+    /// Cumulative exec-time histogram over [`HIST_BUCKETS_MS`].
+    pub exec_hist: HistSnapshot,
+    /// Exec seconds per op class ([`crate::obs::OP_CLASSES`] order).
+    pub class_exec_s: [f64; N_CLASSES],
 }
 
 impl Metrics {
@@ -83,6 +143,9 @@ impl Metrics {
             inner: Mutex::new(Inner {
                 queue_ms: Reservoir::new(cap),
                 exec_ms: Reservoir::new(cap),
+                queue_hist: Hist::default(),
+                exec_hist: Hist::default(),
+                class_exec_s: [0.0; N_CLASSES],
                 completed: 0,
                 errors: 0,
                 batch_size_sum: 0,
@@ -96,8 +159,19 @@ impl Metrics {
         m.started.get_or_insert_with(Instant::now);
         m.queue_ms.push(queue_ms);
         m.exec_ms.push(exec_ms);
+        m.queue_hist.observe(queue_ms);
+        m.exec_hist.observe(exec_ms);
         m.completed += 1;
         m.batch_size_sum += batch as u64;
+    }
+
+    /// Accumulate per-op-class exec seconds drained from a worker's
+    /// profiler rings ([`crate::obs::InstrProfiler::drain_class_totals`]).
+    pub fn observe_class_seconds(&self, cls: &[f64; N_CLASSES]) {
+        let mut m = self.inner.lock().unwrap();
+        for (acc, v) in m.class_exec_s.iter_mut().zip(cls) {
+            *acc += v;
+        }
     }
 
     /// Record `n` requests answered with an execution error.
@@ -129,6 +203,9 @@ impl Metrics {
             },
             throughput_rps: if elapsed > 0.0 { m.completed as f64 / elapsed } else { 0.0 },
             window: m.exec_ms.values().len(),
+            queue_hist: m.queue_hist.snapshot(),
+            exec_hist: m.exec_hist.snapshot(),
+            class_exec_s: m.class_exec_s,
         }
     }
 }
@@ -188,6 +265,40 @@ mod tests {
             assert!(inner.exec_ms.values().len() <= 64);
             assert!(inner.queue_ms.values().len() <= 64);
         }
+    }
+
+    #[test]
+    fn histogram_buckets_are_cumulative_and_count_overflow() {
+        let m = Metrics::default();
+        // 0.05 -> first bucket (le=0.1); 3.0 -> le=5; 2000.0 -> +Inf only
+        m.observe(0.05, 3.0, 1);
+        m.observe(0.05, 2000.0, 1);
+        let s = m.snapshot();
+        assert_eq!(s.queue_hist.cumulative[0], 2);
+        assert_eq!(*s.queue_hist.cumulative.last().unwrap(), 2);
+        assert_eq!(s.queue_hist.count, 2);
+        // exec: 3.0 lands at the first bound >= 3.0 (5.0, index 5) and
+        // stays in every wider bucket; 2000.0 only raises the +Inf count
+        assert_eq!(s.exec_hist.cumulative[4], 0); // le=2.5
+        assert_eq!(s.exec_hist.cumulative[5], 1); // le=5
+        assert_eq!(*s.exec_hist.cumulative.last().unwrap(), 1); // le=1000
+        assert_eq!(s.exec_hist.count, 2);
+        assert!((s.exec_hist.sum_ms - 2003.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn class_seconds_accumulate() {
+        let m = Metrics::default();
+        let mut cls = [0.0; N_CLASSES];
+        cls[0] = 0.25;
+        cls[3] = 0.5;
+        m.observe_class_seconds(&cls);
+        m.observe_class_seconds(&cls);
+        m.observe(0.1, 1.0, 1); // snapshot only renders after activity
+        let s = m.snapshot();
+        assert!((s.class_exec_s[0] - 0.5).abs() < 1e-12);
+        assert!((s.class_exec_s[3] - 1.0).abs() < 1e-12);
+        assert_eq!(s.class_exec_s[1], 0.0);
     }
 
     #[test]

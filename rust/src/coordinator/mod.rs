@@ -97,10 +97,25 @@ impl std::fmt::Display for ServerStopping {
 
 impl std::error::Error for ServerStopping {}
 
+/// Per-request result delivered through the coordinator's channel: the
+/// model outputs plus the timing/batching metadata the gateway's access
+/// log and trace spans report.
+#[derive(Debug)]
+pub struct InferReply {
+    pub outputs: Vec<Tensor>,
+    /// Position of this request inside the executed batch.
+    pub batch_index: usize,
+    pub batch_size: usize,
+    /// Time spent queued before batch assembly, microseconds.
+    pub queue_us: u64,
+    /// Wall time of the batch's plan execution, microseconds.
+    pub exec_us: u64,
+}
+
 struct Request {
     input: Tensor, // [1, H, W, C]
     enqueued: Instant,
-    tx: mpsc::Sender<Result<Vec<Tensor>>>,
+    tx: mpsc::Sender<Result<InferReply>>,
 }
 
 struct Shared {
@@ -186,11 +201,11 @@ impl InferenceServer {
     }
 
     /// Submit one input if the server is accepting work and the queue has
-    /// room; returns a receiver for its outputs.
+    /// room; returns a receiver for its outputs + timing metadata.
     pub fn try_submit(
         &self,
         input: Tensor,
-    ) -> std::result::Result<mpsc::Receiver<Result<Vec<Tensor>>>, SubmitError> {
+    ) -> std::result::Result<mpsc::Receiver<Result<InferReply>>, SubmitError> {
         let (tx, rx) = mpsc::channel();
         {
             let mut q = self.shared.queue.lock().unwrap();
@@ -214,7 +229,7 @@ impl InferenceServer {
     /// Submit one input; returns a receiver for its outputs. Admission
     /// refusals are delivered through the channel as errors, so existing
     /// callers never block on a request that was not accepted.
-    pub fn submit(&self, input: Tensor) -> mpsc::Receiver<Result<Vec<Tensor>>> {
+    pub fn submit(&self, input: Tensor) -> mpsc::Receiver<Result<InferReply>> {
         match self.try_submit(input) {
             Ok(rx) => rx,
             Err(e) => {
@@ -225,11 +240,12 @@ impl InferenceServer {
         }
     }
 
-    /// Convenience: submit + wait.
+    /// Convenience: submit + wait, discarding the timing metadata.
     pub fn infer(&self, input: Tensor) -> Result<Vec<Tensor>> {
         self.submit(input)
             .recv()
             .map_err(|_| anyhow!("server dropped request"))?
+            .map(|r| r.outputs)
     }
 
     pub fn metrics(&self) -> MetricsSnapshot {
@@ -286,6 +302,10 @@ fn worker_loop(shared: &Shared, model: &CompiledModel) {
     // each keeps a private arena plus reusable output tensors, so at steady
     // state a batch execution allocates nothing inside the executor.
     let mut exec = Executor::new(shared.cfg.threads_per_worker);
+    // per-instruction rings feed the per-op-class Prometheus counters;
+    // preallocated here (plan size is fixed) so the request path stays
+    // allocation-free
+    exec.enable_profiling(&model.plan);
     let mut outputs: Vec<Tensor> = Vec::new();
     loop {
         let batch = batcher::collect_batch(shared);
@@ -310,11 +330,26 @@ fn worker_loop(shared: &Shared, model: &CompiledModel) {
         let exec_ms = t0.elapsed().as_secs_f64() * 1e3;
         match result {
             Ok(Ok(())) => {
+                let exec_us = (exec_ms * 1e3) as u64;
                 for (bi, req) in batch.into_iter().enumerate() {
-                    let per: Result<Vec<Tensor>> =
-                        outputs.iter().map(|o| batcher::slice_batch(o, bi)).collect();
+                    let per: Result<InferReply> = outputs
+                        .iter()
+                        .map(|o| batcher::slice_batch(o, bi))
+                        .collect::<Result<Vec<Tensor>>>()
+                        .map(|outputs| InferReply {
+                            outputs,
+                            batch_index: bi,
+                            batch_size: n,
+                            queue_us: (queue_ms[bi] * 1e3) as u64,
+                            exec_us,
+                        });
                     shared.metrics.observe(queue_ms[bi], exec_ms, n);
                     let _ = req.tx.send(per);
+                }
+                // fold this batch's per-op-class instruction time into the
+                // model's metrics (rendered by /metrics)
+                if let Some(p) = exec.profiler_mut() {
+                    shared.metrics.observe_class_seconds(&p.drain_class_totals());
                 }
             }
             Ok(Err(e)) => {
@@ -328,6 +363,7 @@ fn worker_loop(shared: &Shared, model: &CompiledModel) {
                 // executor/scratch state is suspect after an unwind:
                 // rebuild them, answer the batch, keep serving
                 exec = Executor::new(shared.cfg.threads_per_worker);
+                exec.enable_profiling(&model.plan);
                 outputs = Vec::new();
                 shared.metrics.observe_errors(n);
                 for req in batch {
@@ -380,12 +416,16 @@ mod tests {
             })
             .collect();
         for rx in rxs {
-            let outs = rx.recv().unwrap().unwrap();
-            assert_eq!(outs[0].shape, vec![1, 4]);
+            let rep = rx.recv().unwrap().unwrap();
+            assert_eq!(rep.outputs[0].shape, vec![1, 4]);
+            assert!(rep.batch_index < rep.batch_size);
         }
         let m = srv.metrics();
         assert_eq!(m.completed, 16);
         assert!(m.mean_batch >= 1.0);
+        // exec-time histogram and per-op-class counters saw the traffic
+        assert_eq!(m.exec_hist.count, 16);
+        assert!(m.class_exec_s.iter().sum::<f64>() > 0.0);
         srv.shutdown();
     }
 
@@ -408,8 +448,8 @@ mod tests {
         // submit several identical requests so they batch together
         let rxs: Vec<_> = (0..6).map(|_| srv.submit(x.clone())).collect();
         for rx in rxs {
-            let outs = rx.recv().unwrap().unwrap();
-            assert_eq!(outs[0].data, direct[0].data);
+            let rep = rx.recv().unwrap().unwrap();
+            assert_eq!(rep.outputs[0].data, direct[0].data);
         }
         srv.shutdown();
     }

@@ -30,6 +30,18 @@ pub enum EngineKind {
     Bitserial { w_bits: u8, a_bits: u8 },
 }
 
+impl EngineKind {
+    /// Short stable tag for tables and JSON: `fp32`, `int8`, `w2a2`-style
+    /// bitserial precisions.
+    pub fn label(self) -> String {
+        match self {
+            EngineKind::Fp32 => "fp32".to_string(),
+            EngineKind::Int8 => "int8".to_string(),
+            EngineKind::Bitserial { w_bits, a_bits } => format!("w{w_bits}a{a_bits}"),
+        }
+    }
+}
+
 /// Cost of one conv layer on `cpu`, in seconds.
 pub fn conv_cost_s(
     cpu: &CpuParams,
@@ -152,6 +164,13 @@ mod tests {
     use super::*;
     use crate::dlrt::graph::QCfg;
     use crate::models::build_resnet;
+
+    #[test]
+    fn engine_labels_are_stable() {
+        assert_eq!(EngineKind::Fp32.label(), "fp32");
+        assert_eq!(EngineKind::Int8.label(), "int8");
+        assert_eq!(EngineKind::Bitserial { w_bits: 2, a_bits: 1 }.label(), "w2a1");
+    }
 
     #[test]
     fn bitserial_speedup_matches_paper_band_a53() {

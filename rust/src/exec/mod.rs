@@ -38,6 +38,7 @@ use crate::kernels::fp32::{dense_rowmajor, scale_bias_rows_act, scale_bias_rows_
 use crate::kernels::im2col::{im2col_f32_view, im2col_quant_u8_view, ConvDims};
 use crate::kernels::pool;
 use crate::kernels::ukernel::{self, Isa, PackedW, UKernel};
+use crate::obs;
 use crate::util::threads;
 
 use self::planner::{ChanView, ExecPlan, Instr};
@@ -232,6 +233,9 @@ pub struct Executor {
     scratch: Scratch,
     arena: Vec<f32>,
     slot_offsets: Vec<usize>,
+    /// Per-instruction wall-time rings; `None` (the default) keeps the
+    /// instruction loop free of timer calls entirely.
+    profiler: Option<obs::InstrProfiler>,
 }
 
 impl Executor {
@@ -250,12 +254,35 @@ impl Executor {
             },
             arena: Vec::new(),
             slot_offsets: Vec::new(),
+            profiler: None,
         }
     }
 
     /// The persistent kernel worker pool this executor dispatches to.
     pub fn pool(&self) -> &'static threads::ThreadPool {
         self.pool
+    }
+
+    /// Preallocate per-instruction profiling rings sized for `plan`.
+    /// Profiling stays attached across runs; a run with a plan of a
+    /// different instruction count is executed unprofiled rather than
+    /// misattributed.
+    pub fn enable_profiling(&mut self, plan: &ExecPlan) {
+        let classes: Vec<u8> =
+            plan.instrs.iter().map(|ins| obs::op_class(ins.op.name()) as u8).collect();
+        self.profiler = Some(obs::InstrProfiler::new(classes));
+    }
+
+    pub fn disable_profiling(&mut self) {
+        self.profiler = None;
+    }
+
+    pub fn profiler(&self) -> Option<&obs::InstrProfiler> {
+        self.profiler.as_ref()
+    }
+
+    pub fn profiler_mut(&mut self) -> Option<&mut obs::InstrProfiler> {
+        self.profiler.as_mut()
     }
 
     /// Run the model on `input` (NHWC; batch may differ from the nominal
@@ -333,8 +360,27 @@ impl Executor {
         self.arena[in_off..in_off + input.numel()].copy_from_slice(&input.data);
 
         let views = ArenaViews { base: self.arena.as_mut_ptr(), offsets: &self.slot_offsets };
-        for instr in &plan.instrs {
-            exec_instr(&mut self.scratch, self.nthreads, &views, model, uk, instr, batch)?;
+        match self.profiler.as_mut() {
+            // profiled loop: two monotonic-clock reads per instruction
+            // writing into preallocated rings (tests/profile.rs bounds the
+            // cost; steady_state_alloc asserts it stays alloc-free)
+            Some(prof) if prof.len() == plan.instrs.len() => {
+                let run_t0 = std::time::Instant::now();
+                for (i, instr) in plan.instrs.iter().enumerate() {
+                    let t0 = std::time::Instant::now();
+                    exec_instr(&mut self.scratch, self.nthreads, &views, model, uk, instr, batch)?;
+                    let dur = t0.elapsed().as_secs_f64();
+                    prof.record(i, (t0 - run_t0).as_secs_f64(), dur);
+                }
+                prof.end_run(run_t0.elapsed().as_secs_f64());
+            }
+            // disabled (or plan-mismatched) fast path: the exact pre-
+            // instrumentation loop, no timer calls
+            _ => {
+                for instr in &plan.instrs {
+                    exec_instr(&mut self.scratch, self.nthreads, &views, model, uk, instr, batch)?;
+                }
+            }
         }
 
         // copy outputs into reusable caller tensors

@@ -267,6 +267,30 @@ pub struct ExecPlan {
     pub concat_fallbacks: Vec<String>,
 }
 
+/// Fused-epilogue suffix in the order the epilogue applies it
+/// (`+relu +add +relu`), shared by `dlrt inspect --plan` and the
+/// profiler's instruction labels.
+pub fn fused_label(ins: &Instr) -> String {
+    let mut out = String::new();
+    let mut push = |tag: &str| {
+        if !out.is_empty() {
+            out.push(' ');
+        }
+        out.push('+');
+        out.push_str(tag);
+    };
+    if let Some(a) = ins.fused {
+        push(a.name());
+    }
+    if ins.fused_add {
+        push("add");
+    }
+    if let Some(a) = ins.fused_post {
+        push(a.name());
+    }
+    out
+}
+
 impl ExecPlan {
     /// Total arena f32 elements needed for `batch`.
     pub fn arena_elems(&self, batch: usize) -> usize {
@@ -335,6 +359,46 @@ impl ExecPlan {
 
     pub fn in_place_instrs(&self) -> usize {
         self.instrs.iter().filter(|i| i.in_place).count()
+    }
+
+    /// Static per-instruction metadata for profiler/trace labels: op class,
+    /// kernel-table index, FLOPs and activation bytes moved per batch item.
+    /// Labels only — execution never consults this, so it adds no plan
+    /// footprint for the verifier to model.
+    pub fn instr_meta(&self) -> Vec<crate::obs::InstrMeta> {
+        self.instrs
+            .iter()
+            .map(|ins| {
+                let out_elems = ins.out_tail.iter().product::<usize>() as u64;
+                let in_elems: u64 =
+                    ins.in_tails.iter().map(|t| t.iter().product::<usize>() as u64).sum();
+                let flops = match &ins.op {
+                    // 2·MACs over the output pixels (fused epilogues are
+                    // O(out_elems), negligible next to the GEMM)
+                    Op::Conv2d { kernel, cin, cout, .. } => {
+                        let pixels = ins.out_tail[..ins.out_tail.len() - 1]
+                            .iter()
+                            .product::<usize>() as u64;
+                        2 * pixels * (kernel[0] * kernel[1] * cin * cout) as u64
+                    }
+                    Op::Dense { cin, cout } => 2 * (cin * cout) as u64,
+                    _ => out_elems,
+                };
+                crate::obs::InstrMeta {
+                    name: ins.name.clone(),
+                    op: ins.op.name(),
+                    class: crate::obs::op_class(ins.op.name()),
+                    kernel_idx: ins.kernel_idx,
+                    out_slot: ins.out_slot,
+                    flops,
+                    bytes: 4 * (in_elems + out_elems),
+                    fused: fused_label(ins),
+                    strided: ins.out_view.is_some()
+                        || ins.in_views.iter().any(|v| v.is_some()),
+                    in_place: ins.in_place,
+                }
+            })
+            .collect()
     }
 
     /// Bounds/aliasing checks the executor's unsafe slot views rely on: a

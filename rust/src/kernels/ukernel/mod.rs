@@ -56,7 +56,11 @@ impl Isa {
             "scalar" => Ok(Isa::Scalar),
             "neon" => Ok(Isa::Neon),
             "avx2" => Ok(Isa::Avx2),
-            other => Err(format!("unknown ISA '{other}' (expected scalar, neon, or avx2)")),
+            other => Err(format!(
+                "unknown ISA '{other}': valid values are scalar, neon, avx2 \
+                 (detected on this host: {})",
+                detected_list()
+            )),
         }
     }
 }
@@ -217,6 +221,11 @@ pub fn available_isas() -> Vec<Isa> {
     [Isa::Avx2, Isa::Neon, Isa::Scalar].into_iter().filter(|&i| host_supports(i)).collect()
 }
 
+/// Comma-joined names of the host-detected ISAs, for error messages.
+fn detected_list() -> String {
+    available_isas().iter().map(|i| i.name()).collect::<Vec<_>>().join(", ")
+}
+
 /// The registry entry for `isa`, or `None` if this host can't run it.
 pub fn kernel_for(isa: Isa) -> Option<&'static UKernel> {
     if !host_supports(isa) {
@@ -242,9 +251,10 @@ pub fn select(force: Option<Isa>) -> Result<Isa, String> {
                 Ok(isa)
             } else {
                 Err(format!(
-                    "DLRT_FORCE_ISA={} is not supported on this host (available: {})",
+                    "DLRT_FORCE_ISA={} is not supported on this host: valid values are \
+                     scalar, neon, avx2; detected on this host: {}",
                     isa.name(),
-                    available_isas().iter().map(|i| i.name()).collect::<Vec<_>>().join(", ")
+                    detected_list()
                 ))
             }
         }
@@ -292,14 +302,20 @@ mod tests {
             assert_eq!(Isa::parse(isa.name()).unwrap(), isa);
         }
         assert_eq!(Isa::parse("AVX2").unwrap(), Isa::Avx2);
-        assert!(Isa::parse("sse9").is_err());
+        let err = Isa::parse("sse9").unwrap_err();
+        assert!(err.contains("sse9"), "bad value echoed: {err}");
+        assert!(err.contains("scalar, neon, avx2"), "valid values listed: {err}");
+        assert!(err.contains("detected on this host"), "detected ISAs listed: {err}");
     }
 
     #[test]
     fn select_rejects_unsupported_force() {
         // at most one of neon/avx2 exists on any host, so the other errors
         let bogus = if cfg!(target_arch = "x86_64") { Isa::Neon } else { Isa::Avx2 };
-        assert!(select(Some(bogus)).is_err());
+        let err = select(Some(bogus)).unwrap_err();
+        assert!(err.contains("DLRT_FORCE_ISA"), "names the env var: {err}");
+        assert!(err.contains("scalar, neon, avx2"), "valid values listed: {err}");
+        assert!(err.contains(available_isas()[0].name()), "detected ISAs listed: {err}");
         assert_eq!(select(Some(Isa::Scalar)).unwrap(), Isa::Scalar);
         assert_eq!(select(None).unwrap(), available_isas()[0]);
     }

@@ -38,6 +38,9 @@
 //!   multi-model registry, admission control (bounded queues sized from
 //!   the plan's memory footprint), Prometheus `/metrics`, and the
 //!   `dlrt client` load generator.
+//! * [`obs`] — observability: zero-steady-state-allocation per-instruction
+//!   profiler rings, request-scoped span tracing with Chrome trace-event
+//!   export, structured access logs (`dlrt profile`, `GET /v1/debug/trace`).
 //! * [`costmodel`] — analytical Cortex-A53/A72/A57 latency projection.
 //! * [`models`] — native graph builders for the paper's evaluation models.
 //! * [`bench_harness`] — timing + paper-table reporting used by `cargo bench`.
@@ -59,6 +62,7 @@ pub mod dlrt;
 pub mod exec;
 pub mod kernels;
 pub mod models;
+pub mod obs;
 pub mod quant;
 #[cfg(feature = "pjrt")]
 pub mod runtime;

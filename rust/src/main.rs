@@ -5,6 +5,11 @@
 //! dlrt run     <file.dlrt | model_dir> [--threads N] [--reps N] [--batch B]
 //! dlrt inspect [<file.dlrt | model_dir>] [--model NAME --res N] [--layers]
 //!              [--plan]                  # dump the lowered execution plan
+//!              [--json]                  # machine-readable plan + dispatch
+//! dlrt profile <builder | file.dlrt | model_dir> [--reps N] [--threads N]
+//!              [--batch B] [--res N] [--cpu a53|a72|a57] [--engine ...]
+//!              [--out profile.json] [--trace trace.json]
+//!              # per-instruction wall times + cost-model calibration
 //! dlrt verify  [<file.dlrt | model_dir>] [--model NAME --res N]
 //!              # run the static plan verifier and print its evidence counters
 //! dlrt bench   [--model resnet18|resnet50|vgg16_ssd|yolov5n|s|m]
@@ -19,6 +24,7 @@
 //!              #       POST /v1/admin/shutdown (graceful drain)
 //! dlrt client  [--addr HOST:PORT] [--model NAME] [--requests N]
 //!              [--concurrency C] [--rate RPS] [--json]   # loadgen
+//!              [--out summary.json]      # machine-readable run summary
 //! dlrt pjrt    <artifact_stem>        # run a JAX-AOT HLO artifact
 //! ```
 
@@ -37,6 +43,7 @@ use dlrt::models;
 use dlrt::serve::registry::{ModelRegistry, ModelSpec};
 use dlrt::serve::{loadgen, Gateway, GatewayConfig};
 use dlrt::util::cli::Args;
+use dlrt::util::json::{arr, num, obj, s, Json};
 use dlrt::util::rng::Rng;
 use dlrt::Tensor;
 
@@ -58,6 +65,7 @@ fn main() {
         "compile" => cmd_compile(&args),
         "run" => cmd_run(&args),
         "inspect" => cmd_inspect(&args),
+        "profile" => cmd_profile(&args),
         "verify" => cmd_verify(&args),
         "bench" => cmd_bench(&args),
         "cost" => cmd_cost(&args),
@@ -82,7 +90,10 @@ fn main() {
 
 fn print_usage() {
     eprintln!("dlrt — ultra-low-bit bitserial inference runtime (DeepliteRT repro)");
-    eprintln!("commands: compile | run | inspect | verify | bench | cost | serve | client | pjrt");
+    eprintln!(
+        "commands: compile | run | inspect | profile | verify | bench | cost | serve | \
+         client | pjrt"
+    );
     eprintln!("see rust/src/main.rs docs or README.md for flags");
 }
 
@@ -100,6 +111,23 @@ fn load_model(args: &Args, engine: EngineChoice) -> Result<(String, dlrt::exec::
     let res = args.usize_or("res", default_res(&name))?;
     let g = build_named(&name, res, args)?;
     Ok((format!("{name}@{res}"), compile_graph(&g, engine)?))
+}
+
+/// Like [`load_model`], but a positional that names nothing on disk is
+/// treated as a builder name (`dlrt profile resnet18`).
+fn load_model_flex(
+    args: &Args,
+    engine: EngineChoice,
+) -> Result<(String, dlrt::exec::CompiledModel)> {
+    if let Some(p) = args.positional.first() {
+        if !Path::new(p).exists() {
+            let name = p.clone();
+            let res = args.usize_or("res", default_res(&name))?;
+            let g = build_named(&name, res, args)?;
+            return Ok((format!("{name}@{res}"), compile_graph(&g, engine)?));
+        }
+    }
+    load_model(args, engine)
 }
 
 fn default_res(model: &str) -> usize {
@@ -203,6 +231,10 @@ fn cmd_inspect(args: &Args) -> Result<()> {
     let (_source, model) = load_model(args, engine)?;
     let g = &model.graph;
     let peak = dlrt::exec::planner::peak_live_elems(g)?;
+    if args.flag("json") {
+        println!("{}", inspect_json(&model, peak).to_string());
+        return Ok(());
+    }
     println!("model   : {}", g.name);
     println!("input   : {} {:?}", g.input_name, g.input_shape);
     println!("nodes   : {} ({} convs)", g.nodes.len(), g.conv_nodes().count());
@@ -321,6 +353,245 @@ fn cmd_inspect(args: &Args) -> Result<()> {
                 ins.out_tail
             );
         }
+    }
+    Ok(())
+}
+
+/// `dlrt inspect --json`: the plan + dispatch summary as one JSON doc.
+fn inspect_json(model: &dlrt::exec::CompiledModel, peak: usize) -> Json {
+    let g = &model.graph;
+    let p = &model.plan;
+    let desc = dlrt::kernels::ukernel::kernel_for(model.isa).map(|u| u.desc);
+    let instrs: Vec<Json> = p
+        .instr_meta()
+        .iter()
+        .enumerate()
+        .map(|(i, m)| {
+            obj(vec![
+                ("index", num(i as f64)),
+                ("name", s(&m.name)),
+                ("op", s(m.op)),
+                ("class", s(dlrt::obs::OP_CLASSES[m.class])),
+                ("kernel_idx", m.kernel_idx.map(|k| num(k as f64)).unwrap_or(Json::Null)),
+                ("out_slot", num(m.out_slot as f64)),
+                ("flops", num(m.flops as f64)),
+                ("bytes", num(m.bytes as f64)),
+                ("fused", s(m.fused.trim())),
+                ("strided", Json::Bool(m.strided)),
+                ("in_place", Json::Bool(m.in_place)),
+            ])
+        })
+        .collect();
+    let mut pairs = vec![
+        ("model", s(&g.name)),
+        ("input", arr(g.input_shape.iter().map(|&d| num(d as f64)).collect())),
+        ("nodes", num(g.nodes.len() as f64)),
+        ("convs", num(g.conv_nodes().count() as f64)),
+        ("weight_bytes", num(model.weight_bytes() as f64)),
+        ("peak_act_elems", num(peak as f64)),
+        ("isa", s(model.isa.name())),
+        (
+            "plan",
+            obj(vec![
+                ("instrs", num(p.instrs.len() as f64)),
+                ("slots", num(p.slot_sizes.len() as f64)),
+                ("conv_kernels", num(p.conv_kernels as f64)),
+                ("fused_epilogues", num(p.fused_instrs() as f64)),
+                ("fused_residual_adds", num(p.fused_add_instrs() as f64)),
+                ("in_place", num(p.in_place_instrs() as f64)),
+                ("in_place_concats", num(p.in_place_concats as f64)),
+                ("partial_concats", num(p.partial_concats as f64)),
+                ("striped_writers", num(p.strided_instrs() as f64)),
+                ("stripe_readers", num(p.read_view_instrs() as f64)),
+                ("same_slot_stripes", num(p.same_slot_stripe_instrs() as f64)),
+                ("concat_copy_instrs", num(p.concat_copy_instrs() as f64)),
+                ("arena_elems", num(p.arena_elems(p.nominal_batch) as f64)),
+                ("nominal_batch", num(p.nominal_batch as f64)),
+            ]),
+        ),
+        ("instructions", arr(instrs)),
+    ];
+    if let Some(d) = desc {
+        pairs.push((
+            "ukernel",
+            obj(vec![
+                ("isa", s(d.isa.name())),
+                ("tile_m", num(d.tile_m as f64)),
+                ("tile_n", num(d.tile_n as f64)),
+                ("k_unroll", num(d.k_unroll as f64)),
+            ]),
+        ));
+    }
+    obj(pairs)
+}
+
+/// Map a compiled conv kernel to the cost model's engine taxonomy.
+fn conv_engine_kind(kernel: &dlrt::exec::ConvKernel) -> EngineKind {
+    match kernel {
+        dlrt::exec::ConvKernel::Bitserial { w_bits, a_bits, .. } => {
+            EngineKind::Bitserial { w_bits: *w_bits, a_bits: *a_bits }
+        }
+        dlrt::exec::ConvKernel::Fp32 { .. } => EngineKind::Fp32,
+        dlrt::exec::ConvKernel::Int8 { .. } => EngineKind::Int8,
+    }
+}
+
+fn cmd_profile(args: &Args) -> Result<()> {
+    use dlrt::dlrt::graph::Op;
+
+    let engine = EngineChoice::parse(args.get_or("engine", "auto"))?;
+    let (name, model) = load_model_flex(args, engine)?;
+    let threads = args.usize_or("threads", 1)?;
+    let batch = args.usize_or("batch", 1)?;
+    let reps = args.usize_or("reps", 10)?.max(1);
+    let cpu = cpu_by_name(args.get_or("cpu", "a72"))
+        .context("unknown --cpu (a53|a72|a57)")?;
+
+    let mut ex = Executor::new(threads);
+    let x = random_input(&model, batch, 1);
+    ex.run(&model, &x)?; // warm: arena + scratch allocated before profiling
+    ex.enable_profiling(&model.plan);
+    for _ in 0..reps {
+        ex.run(&model, &x)?;
+    }
+    let meta = model.plan.instr_meta();
+    let prof = ex.profiler().expect("profiling just enabled");
+    let runs = prof.runs().max(1) as f64;
+    let sum_s = prof.sum_total_s();
+    let wall_s = prof.run_total_s();
+    let desc = dlrt::kernels::ukernel::kernel_for(model.isa).map(|u| u.desc);
+
+    let mut table = Table::new(
+        &format!("dlrt profile — {name} (batch {batch}, {threads} threads, {reps} reps, \
+                  isa {})", model.isa.name()),
+        &["#", "op", "name", "kernel", "mean", "p95", "GFLOP/s", "% total"],
+    );
+    for (i, m) in meta.iter().enumerate() {
+        let st = prof.stats(i);
+        let kern = match (m.kernel_idx, desc) {
+            (Some(ki), Some(d)) => {
+                let eng = if m.op == "conv2d" {
+                    model.convs.get(ki).map(|c| c.kernel.engine_name()).unwrap_or("?")
+                } else {
+                    "dense"
+                };
+                format!("uk#{ki}[{eng} {} {}x{}]", d.isa.name(), d.tile_m, d.tile_n)
+            }
+            _ => String::new(),
+        };
+        let gflops = if st.mean_s > 0.0 {
+            (m.flops * batch as u64) as f64 / st.mean_s / 1e9
+        } else {
+            0.0
+        };
+        let share = if sum_s > 0.0 { 100.0 * prof.instr_total_s(i) / sum_s } else { 0.0 };
+        table.row(vec![
+            i.to_string(),
+            format!("{}{}", m.op, m.fused),
+            m.name.clone(),
+            kern,
+            ms(st.mean_s * 1e3),
+            ms(st.p95_s * 1e3),
+            format!("{gflops:.2}"),
+            format!("{share:.1}%"),
+        ]);
+    }
+    table.print();
+    let covered = if wall_s > 0.0 { 100.0 * sum_s / wall_s } else { 0.0 };
+    println!(
+        "instr sum {} vs end-to-end {} over {} runs ({covered:.1}% covered)",
+        ms(sum_s * 1e3),
+        ms(wall_s * 1e3),
+        prof.runs()
+    );
+
+    // Predicted vs measured per kernel-table entry: the cost model prices
+    // each conv/dense GEMM for the target CPU; "measured" is this host's
+    // mean per-run wall time, so the ratio calibrates model vs reality.
+    println!();
+    let mut cal = Table::new(
+        &format!("cost-model calibration — target {} ({threads} threads)", cpu.name),
+        &["instr", "kernel", "engine", "predicted", "measured", "meas/pred"],
+    );
+    let mut cal_json: Vec<Json> = Vec::new();
+    for (i, ins) in model.plan.instrs.iter().enumerate() {
+        let Some(ki) = ins.kernel_idx else { continue };
+        let measured_s = prof.instr_total_s(i) / runs;
+        let (kind, pred_s) = match &ins.op {
+            Op::Conv2d { kernel, cin, cout, .. } => {
+                let Some(conv) = model.convs.get(ki) else { continue };
+                let pixels: usize = ins.out_tail[..ins.out_tail.len() - 1].iter().product();
+                let rows = batch * pixels;
+                let k = kernel[0] * kernel[1] * cin;
+                let kind = conv_engine_kind(&conv.kernel);
+                (kind, costmodel::conv_cost_s(cpu, rows, k, *cout, kind, threads))
+            }
+            Op::Dense { cin, cout } => {
+                let kind = EngineKind::Fp32;
+                (kind, costmodel::conv_cost_s(cpu, batch, *cin, *cout, kind, threads))
+            }
+            _ => continue,
+        };
+        let ratio = if pred_s > 0.0 { measured_s / pred_s } else { 0.0 };
+        cal.row(vec![
+            ins.name.clone(),
+            format!("uk#{ki}"),
+            kind.label(),
+            ms(pred_s * 1e3),
+            ms(measured_s * 1e3),
+            format!("{ratio:.2}x"),
+        ]);
+        cal_json.push(obj(vec![
+            ("instr", s(&ins.name)),
+            ("kernel_idx", num(ki as f64)),
+            ("engine", Json::Str(kind.label())),
+            ("predicted_ms", num(pred_s * 1e3)),
+            ("measured_ms", num(measured_s * 1e3)),
+            ("ratio", num(ratio)),
+        ]));
+    }
+    cal.print();
+
+    if let Some(path) = args.get("out") {
+        let instrs: Vec<Json> = meta
+            .iter()
+            .enumerate()
+            .map(|(i, m)| {
+                let st = prof.stats(i);
+                obj(vec![
+                    ("index", num(i as f64)),
+                    ("name", s(&m.name)),
+                    ("op", s(m.op)),
+                    ("class", s(dlrt::obs::OP_CLASSES[m.class])),
+                    ("fused", s(m.fused.trim())),
+                    ("kernel_idx", m.kernel_idx.map(|k| num(k as f64)).unwrap_or(Json::Null)),
+                    ("mean_ms", num(st.mean_s * 1e3)),
+                    ("p95_ms", num(st.p95_s * 1e3)),
+                    ("total_ms", num(prof.instr_total_s(i) * 1e3)),
+                    ("flops", num((m.flops * batch as u64) as f64)),
+                ])
+            })
+            .collect();
+        let doc = obj(vec![
+            ("model", s(&name)),
+            ("isa", s(model.isa.name())),
+            ("batch", num(batch as f64)),
+            ("threads", num(threads as f64)),
+            ("reps", num(reps as f64)),
+            ("wall_ms", num(wall_s * 1e3)),
+            ("instr_sum_ms", num(sum_s * 1e3)),
+            ("target_cpu", s(cpu.name)),
+            ("instructions", arr(instrs)),
+            ("calibration", arr(cal_json)),
+        ]);
+        std::fs::write(path, doc.to_string()).with_context(|| format!("writing {path}"))?;
+        println!("wrote profile JSON -> {path}");
+    }
+
+    if let Some(path) = args.get("trace") {
+        let doc = dlrt::obs::trace::profile_trace_json(&meta, prof);
+        std::fs::write(path, doc.to_string()).with_context(|| format!("writing {path}"))?;
+        println!("wrote Chrome trace -> {path} (load in ui.perfetto.dev)");
     }
     Ok(())
 }
@@ -467,6 +738,11 @@ fn cmd_client(args: &Args) -> Result<()> {
         cfg.concurrency
     );
     let rep = loadgen::run(&cfg)?;
+    if let Some(path) = args.get("out") {
+        std::fs::write(path, rep.to_json().to_string())
+            .with_context(|| format!("writing {path}"))?;
+        println!("wrote client summary -> {path}");
+    }
     let mut table = Table::new(
         &format!("dlrt client — {}", rep.model),
         &["sent", "ok", "errors", "p50", "p95", "p99", "mean", "req/s"],

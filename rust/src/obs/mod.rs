@@ -1,0 +1,327 @@
+//! Observability: per-instruction profiling, request-scoped tracing, and
+//! structured access logs.
+//!
+//! Everything here obeys the runtime's zero-steady-state-allocation rule:
+//! rings and buffers are preallocated when instrumentation is enabled (at
+//! plan/gateway build time), and the hot-path record calls
+//! ([`InstrProfiler::record`], [`trace::TraceBuffer::record`]) only write
+//! into that storage. Reporting (`stats`, trace export, Prometheus
+//! rendering) is allowed to allocate — it runs off the request path.
+//!
+//! Layout:
+//! * [`InstrProfiler`] — per-`Instr` wall-time rings owned by an
+//!   `exec::Executor`; off by default (the disabled executor loop has no
+//!   timer calls at all, asserted ≤2% overhead by `tests/profile.rs`).
+//! * [`InstrMeta`] — static per-instruction labels (op class, FLOPs,
+//!   bytes moved) computed once from the `ExecPlan`.
+//! * [`trace`] — bounded span ring + Chrome trace-event JSON export.
+//! * [`access_line`] / [`gen_request_id`] — the gateway's structured
+//!   one-line access log and request-ID fallback.
+
+pub mod trace;
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::{SystemTime, UNIX_EPOCH};
+
+/// Samples kept per instruction for percentile estimates. Older samples
+/// are overwritten ring-style; totals/counts keep the full history.
+pub const RING_CAP: usize = 64;
+
+/// Coarse op classes used for per-class exec-time counters (Prometheus
+/// `dlrt_model_op_class_exec_seconds_total{class=...}`).
+pub const OP_CLASSES: [&str; 6] = ["conv", "dense", "pool", "elementwise", "concat", "other"];
+
+/// Number of entries in [`OP_CLASSES`].
+pub const N_CLASSES: usize = OP_CLASSES.len();
+
+/// Map an `Op::name()` string to its index in [`OP_CLASSES`].
+pub fn op_class(op_name: &str) -> usize {
+    match op_name {
+        "conv2d" => 0,
+        "dense" => 1,
+        "maxpool2d" | "global_avg_pool" | "upsample2x" => 2,
+        "add" | "relu" | "relu6" | "silu" | "leaky_relu" | "sigmoid" => 3,
+        "concat" | "flatten" => 4,
+        _ => 5,
+    }
+}
+
+/// Static per-instruction metadata, computed once from the plan
+/// (`ExecPlan::instr_meta`) — labels only, never consulted by execution.
+#[derive(Clone, Debug)]
+pub struct InstrMeta {
+    pub name: String,
+    pub op: &'static str,
+    /// Index into [`OP_CLASSES`].
+    pub class: usize,
+    /// Kernel-table index (`uk#idx`) for conv/dense instructions.
+    pub kernel_idx: Option<usize>,
+    pub out_slot: usize,
+    /// FLOPs per batch item (2·MACs for GEMM-backed ops, numel otherwise).
+    pub flops: u64,
+    /// Activation bytes moved per batch item (f32 reads + writes).
+    pub bytes: u64,
+    /// Fused-epilogue suffix as the planner prints it, e.g. `+relu +add`.
+    pub fused: String,
+    /// Reads or writes a channel stripe of a concat root slot.
+    pub strided: bool,
+    pub in_place: bool,
+}
+
+/// Report-time summary of one instruction's samples.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct InstrStats {
+    pub count: u64,
+    pub total_s: f64,
+    pub mean_s: f64,
+    pub p95_s: f64,
+}
+
+/// Preallocated per-instruction wall-time recorder.
+///
+/// Sized for one specific plan (one slot per `Instr`); `record` is the
+/// only hot-path entry point and never allocates. The executor skips
+/// profiling when the plan length does not match (e.g. after a model
+/// swap), so a stale profiler can never index out of bounds.
+#[derive(Debug)]
+pub struct InstrProfiler {
+    /// Op class per instruction, for `drain_class_totals`.
+    class_of: Vec<u8>,
+    /// `n_instrs × RING_CAP` duration samples, seconds.
+    ring: Vec<f64>,
+    /// Ring cursor per instruction.
+    next: Vec<u32>,
+    /// Valid samples per instruction (saturates at `RING_CAP`).
+    filled: Vec<u32>,
+    count: Vec<u64>,
+    total_s: Vec<f64>,
+    /// Start offset within the most recent run, for trace export.
+    last_start_s: Vec<f64>,
+    last_dur_s: Vec<f64>,
+    /// Per-class seconds since the last `drain_class_totals`.
+    class_s: [f64; N_CLASSES],
+    runs: u64,
+    run_total_s: f64,
+}
+
+impl InstrProfiler {
+    /// Preallocate rings for a plan whose instructions have the given op
+    /// classes (one entry per `Instr`, values < [`N_CLASSES`]).
+    pub fn new(class_of: Vec<u8>) -> InstrProfiler {
+        let n = class_of.len();
+        InstrProfiler {
+            class_of,
+            ring: vec![0.0; n * RING_CAP],
+            next: vec![0; n],
+            filled: vec![0; n],
+            count: vec![0; n],
+            total_s: vec![0.0; n],
+            last_start_s: vec![0.0; n],
+            last_dur_s: vec![0.0; n],
+            class_s: [0.0; N_CLASSES],
+            runs: 0,
+            run_total_s: 0.0,
+        }
+    }
+
+    /// Number of instructions this profiler was sized for.
+    pub fn len(&self) -> usize {
+        self.class_of.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.class_of.is_empty()
+    }
+
+    /// Record one execution of instruction `i`: `start_off_s` is the
+    /// offset from the start of the current run, `dur_s` the wall time.
+    /// Alloc-free; called from the executor's profiled loop.
+    #[inline]
+    pub fn record(&mut self, i: usize, start_off_s: f64, dur_s: f64) {
+        let slot = i * RING_CAP + self.next[i] as usize;
+        self.ring[slot] = dur_s;
+        self.next[i] = (self.next[i] + 1) % RING_CAP as u32;
+        if (self.filled[i] as usize) < RING_CAP {
+            self.filled[i] += 1;
+        }
+        self.count[i] += 1;
+        self.total_s[i] += dur_s;
+        self.last_start_s[i] = start_off_s;
+        self.last_dur_s[i] = dur_s;
+        self.class_s[self.class_of[i] as usize] += dur_s;
+    }
+
+    /// Close out one full plan execution of `wall_s` seconds.
+    #[inline]
+    pub fn end_run(&mut self, wall_s: f64) {
+        self.runs += 1;
+        self.run_total_s += wall_s;
+    }
+
+    /// Completed plan executions recorded so far.
+    pub fn runs(&self) -> u64 {
+        self.runs
+    }
+
+    /// Total wall seconds across all recorded runs (whole-loop timing,
+    /// including any inter-instruction overhead).
+    pub fn run_total_s(&self) -> f64 {
+        self.run_total_s
+    }
+
+    /// Sum of per-instruction totals — the "covered" time the profile
+    /// table accounts for.
+    pub fn sum_total_s(&self) -> f64 {
+        self.total_s.iter().sum()
+    }
+
+    pub fn instr_total_s(&self, i: usize) -> f64 {
+        self.total_s[i]
+    }
+
+    /// Start offset / duration of instruction `i` in the last run
+    /// (seconds), for trace export.
+    pub fn last_span_s(&self, i: usize) -> (f64, f64) {
+        (self.last_start_s[i], self.last_dur_s[i])
+    }
+
+    /// Mean/p95 over the retained ring samples. Allocates (sorts a copy)
+    /// — report-time only.
+    pub fn stats(&self, i: usize) -> InstrStats {
+        let n = self.filled[i] as usize;
+        if n == 0 || self.count[i] == 0 {
+            return InstrStats::default();
+        }
+        let mut window: Vec<f64> = self.ring[i * RING_CAP..i * RING_CAP + n].to_vec();
+        window.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let p95 = window[((n - 1) as f64 * 0.95).round() as usize];
+        InstrStats {
+            count: self.count[i],
+            total_s: self.total_s[i],
+            mean_s: self.total_s[i] / self.count[i] as f64,
+            p95_s: p95,
+        }
+    }
+
+    /// Take and reset the per-op-class seconds accumulated since the last
+    /// drain — the coordinator feeds these into its metrics after each
+    /// batch.
+    pub fn drain_class_totals(&mut self) -> [f64; N_CLASSES] {
+        std::mem::take(&mut self.class_s)
+    }
+}
+
+// -- request IDs and access logs -----------------------------------------
+
+static REQ_ID_SEQ: AtomicU64 = AtomicU64::new(1);
+
+/// Generate a request ID for clients that did not supply `X-Request-Id`:
+/// process-unique, monotonic, greppable (`req-<pid>-<seq>`).
+pub fn gen_request_id() -> String {
+    let seq = REQ_ID_SEQ.fetch_add(1, Ordering::Relaxed);
+    format!("req-{:x}-{seq:x}", std::process::id())
+}
+
+/// Milliseconds since the Unix epoch, for access-log timestamps.
+pub fn unix_ms() -> u64 {
+    SystemTime::now().duration_since(UNIX_EPOCH).map(|d| d.as_millis() as u64).unwrap_or(0)
+}
+
+/// One structured access-log line (space-separated `key=value` pairs; no
+/// embedded spaces in values, so it splits cleanly).
+#[allow(clippy::too_many_arguments)]
+pub fn access_line(
+    ts_ms: u64,
+    request_id: &str,
+    model: &str,
+    batch_index: usize,
+    batch_size: usize,
+    status: u16,
+    queue_us: u64,
+    exec_us: u64,
+    total_us: u64,
+) -> String {
+    format!(
+        "ts={ts_ms} id={request_id} model={model} batch={batch_index}/{batch_size} \
+         status={status} queue_us={queue_us} exec_us={exec_us} total_us={total_us}"
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn op_classes_cover_every_op_name() {
+        for name in [
+            "conv2d",
+            "dense",
+            "maxpool2d",
+            "global_avg_pool",
+            "add",
+            "concat",
+            "upsample2x",
+            "relu",
+            "relu6",
+            "silu",
+            "leaky_relu",
+            "sigmoid",
+            "flatten",
+        ] {
+            assert!(op_class(name) < N_CLASSES, "{name}");
+        }
+        assert_eq!(op_class("something_new"), N_CLASSES - 1);
+    }
+
+    #[test]
+    fn profiler_rings_accumulate_and_wrap() {
+        let mut p = InstrProfiler::new(vec![0, 3]);
+        assert_eq!(p.len(), 2);
+        // overfill the ring: totals keep everything, window keeps RING_CAP
+        for rep in 0..(RING_CAP + 10) {
+            p.record(0, 0.0, 1e-3);
+            p.record(1, 1e-3, 2e-3 * (rep % 2) as f64);
+            p.end_run(4e-3);
+        }
+        let s0 = p.stats(0);
+        assert_eq!(s0.count, (RING_CAP + 10) as u64);
+        assert!((s0.mean_s - 1e-3).abs() < 1e-12);
+        assert!((s0.p95_s - 1e-3).abs() < 1e-12);
+        let s1 = p.stats(1);
+        assert!(s1.p95_s >= s1.mean_s);
+        assert_eq!(p.runs(), (RING_CAP + 10) as u64);
+        assert!(p.sum_total_s() <= p.run_total_s() + 1e-12);
+        // class drain: instr 0 is class 0 (conv), instr 1 class 3
+        let cls = p.drain_class_totals();
+        assert!(cls[0] > 0.0 && cls[3] > 0.0);
+        assert_eq!(cls[1], 0.0);
+        let again = p.drain_class_totals();
+        assert!(again.iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn stats_on_empty_profiler_are_zero() {
+        let p = InstrProfiler::new(vec![0]);
+        let s = p.stats(0);
+        assert_eq!(s.count, 0);
+        assert_eq!(s.mean_s, 0.0);
+    }
+
+    #[test]
+    fn request_ids_are_unique_and_access_line_is_structured() {
+        let a = gen_request_id();
+        let b = gen_request_id();
+        assert_ne!(a, b);
+        assert!(a.starts_with("req-"));
+        let line = access_line(123, "rid-1", "resnet18", 2, 4, 200, 10, 20, 35);
+        assert_eq!(
+            line,
+            "ts=123 id=rid-1 model=resnet18 batch=2/4 status=200 \
+             queue_us=10 exec_us=20 total_us=35"
+        );
+        // every field splits as key=value
+        for tok in line.split(' ') {
+            assert!(tok.contains('='), "{tok}");
+        }
+    }
+}

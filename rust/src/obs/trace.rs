@@ -1,0 +1,257 @@
+//! Request-scoped span records and Chrome trace-event JSON export.
+//!
+//! [`TraceBuffer`] is a bounded, preallocated ring of fixed-size
+//! [`SpanRec`]s shared by all gateway connections — recording takes a
+//! mutex but never allocates, so it is safe on the zero-steady-state-
+//! allocation request path. Export ([`chrome_trace_json`],
+//! [`profile_trace_json`]) renders the standard Chrome trace-event
+//! format (`{"traceEvents": [...]}`), which loads directly in Perfetto
+//! (ui.perfetto.dev) or `chrome://tracing`.
+
+use std::sync::Mutex;
+use std::time::Instant;
+
+use crate::util::json::{arr, num, obj, s, Json};
+
+use super::{InstrMeta, InstrProfiler};
+
+/// Gateway request lifecycle stages.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SpanKind {
+    /// Connection accepted (instant event, one per connection).
+    Accept,
+    /// Request body parsed into an input tensor.
+    Parse,
+    /// Time spent waiting in the coordinator queue.
+    Queue,
+    /// Batch assembly + plan execution window for the whole batch.
+    Batch,
+    /// This request's share of plan execution.
+    Exec,
+    /// Response rendering + write-back.
+    Respond,
+}
+
+impl SpanKind {
+    pub fn name(self) -> &'static str {
+        match self {
+            SpanKind::Accept => "accept",
+            SpanKind::Parse => "parse",
+            SpanKind::Queue => "queue-wait",
+            SpanKind::Batch => "batch",
+            SpanKind::Exec => "exec",
+            SpanKind::Respond => "respond",
+        }
+    }
+}
+
+/// One fixed-size span record. Numeric request sequence instead of the
+/// string request ID so recording never allocates; the access log ties
+/// sequence numbers back to IDs.
+#[derive(Clone, Copy, Debug)]
+pub struct SpanRec {
+    pub kind: SpanKind,
+    /// Gateway-local request sequence number (trace `tid`).
+    pub req: u64,
+    /// Microseconds since the buffer's epoch.
+    pub ts_us: u64,
+    pub dur_us: u64,
+    pub batch_index: u32,
+    pub batch_size: u32,
+    pub status: u16,
+}
+
+struct Ring {
+    buf: Vec<SpanRec>,
+    next: usize,
+    /// Spans recorded over the buffer's lifetime (may exceed capacity).
+    total: u64,
+}
+
+/// Bounded in-memory span ring (`GET /v1/debug/trace` serves a snapshot).
+pub struct TraceBuffer {
+    inner: Mutex<Ring>,
+    cap: usize,
+    epoch: Instant,
+}
+
+impl TraceBuffer {
+    /// Preallocate space for `cap` spans; older spans are overwritten.
+    pub fn with_capacity(cap: usize) -> TraceBuffer {
+        TraceBuffer {
+            inner: Mutex::new(Ring { buf: Vec::with_capacity(cap), next: 0, total: 0 }),
+            cap: cap.max(1),
+            epoch: Instant::now(),
+        }
+    }
+
+    /// Microseconds since this buffer was created — the timebase for
+    /// [`SpanRec::ts_us`].
+    pub fn now_us(&self) -> u64 {
+        self.epoch.elapsed().as_micros() as u64
+    }
+
+    /// Record one span. Alloc-free: writes into preallocated capacity.
+    pub fn record(&self, rec: SpanRec) {
+        let mut r = self.inner.lock().unwrap();
+        if r.buf.len() < self.cap {
+            r.buf.push(rec); // within preallocated capacity
+        } else {
+            let i = r.next;
+            r.buf[i] = rec;
+        }
+        r.next = (r.next + 1) % self.cap;
+        r.total += 1;
+    }
+
+    /// Spans recorded over the buffer's lifetime.
+    pub fn total(&self) -> u64 {
+        self.inner.lock().unwrap().total
+    }
+
+    /// Copy out the retained spans in recording order (report-time;
+    /// allocates).
+    pub fn snapshot(&self) -> Vec<SpanRec> {
+        let r = self.inner.lock().unwrap();
+        if r.buf.len() < self.cap {
+            r.buf.clone()
+        } else {
+            let mut out = Vec::with_capacity(self.cap);
+            out.extend_from_slice(&r.buf[r.next..]);
+            out.extend_from_slice(&r.buf[..r.next]);
+            out
+        }
+    }
+}
+
+/// One Chrome trace event. `ph` is `"X"` (complete) when `dur_us > 0`,
+/// `"i"` (instant) otherwise.
+pub fn chrome_event(
+    name: &str,
+    cat: &str,
+    tid: u64,
+    ts_us: f64,
+    dur_us: f64,
+    args: Vec<(&str, Json)>,
+) -> Json {
+    let mut pairs = vec![
+        ("name", s(name)),
+        ("cat", s(cat)),
+        ("ph", s(if dur_us > 0.0 { "X" } else { "i" })),
+        ("pid", num(1.0)),
+        ("tid", num(tid as f64)),
+        ("ts", num(ts_us)),
+    ];
+    if dur_us > 0.0 {
+        pairs.push(("dur", num(dur_us)));
+    }
+    pairs.push(("args", obj(args)));
+    obj(pairs)
+}
+
+/// Render gateway spans as a Chrome trace document.
+pub fn chrome_trace_json(spans: &[SpanRec]) -> Json {
+    let events = spans
+        .iter()
+        .map(|rec| {
+            chrome_event(
+                rec.kind.name(),
+                "gateway",
+                rec.req,
+                rec.ts_us as f64,
+                rec.dur_us as f64,
+                vec![
+                    ("req", num(rec.req as f64)),
+                    ("batch_index", num(rec.batch_index as f64)),
+                    ("batch_size", num(rec.batch_size as f64)),
+                    ("status", num(rec.status as f64)),
+                ],
+            )
+        })
+        .collect();
+    obj(vec![("traceEvents", arr(events))])
+}
+
+/// Render the last profiled run as a Chrome trace document: one `exec`
+/// span covering the whole plan plus one span per instruction, labelled
+/// from the plan's static metadata. Used by `dlrt profile --trace`.
+pub fn profile_trace_json(meta: &[InstrMeta], prof: &InstrProfiler) -> Json {
+    let n = meta.len().min(prof.len());
+    let mut events = Vec::with_capacity(n + 1);
+    let mut end_s = 0.0f64;
+    for i in 0..n {
+        let (start_s, dur_s) = prof.last_span_s(i);
+        end_s = end_s.max(start_s + dur_s);
+        events.push(chrome_event(
+            &meta[i].name,
+            meta[i].op,
+            0,
+            start_s * 1e6,
+            dur_s * 1e6,
+            vec![
+                ("op", s(meta[i].op)),
+                ("out_slot", num(meta[i].out_slot as f64)),
+                ("flops", num(meta[i].flops as f64)),
+                ("bytes", num(meta[i].bytes as f64)),
+            ],
+        ));
+    }
+    // whole-run envelope span, named "exec" (CI greps for it)
+    events.insert(
+        0,
+        chrome_event(
+            "exec",
+            "plan",
+            0,
+            0.0,
+            end_s * 1e6,
+            vec![("instrs", num(n as f64)), ("runs", num(prof.runs() as f64))],
+        ),
+    );
+    obj(vec![("traceEvents", arr(events))])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn span(req: u64, ts: u64) -> SpanRec {
+        SpanRec {
+            kind: SpanKind::Exec,
+            req,
+            ts_us: ts,
+            dur_us: 5,
+            batch_index: 0,
+            batch_size: 1,
+            status: 200,
+        }
+    }
+
+    #[test]
+    fn ring_overwrites_oldest_and_keeps_order() {
+        let tb = TraceBuffer::with_capacity(4);
+        for i in 0..6u64 {
+            tb.record(span(i, i * 10));
+        }
+        assert_eq!(tb.total(), 6);
+        let snap = tb.snapshot();
+        assert_eq!(snap.len(), 4);
+        let reqs: Vec<u64> = snap.iter().map(|r| r.req).collect();
+        assert_eq!(reqs, vec![2, 3, 4, 5]);
+    }
+
+    #[test]
+    fn chrome_export_round_trips_as_json() {
+        let tb = TraceBuffer::with_capacity(8);
+        tb.record(span(1, 100));
+        tb.record(SpanRec { kind: SpanKind::Accept, dur_us: 0, ..span(1, 90) });
+        let doc = chrome_trace_json(&tb.snapshot());
+        let parsed = Json::parse(&doc.to_string()).unwrap();
+        let events = parsed.get("traceEvents").unwrap().arr().unwrap();
+        assert_eq!(events.len(), 2);
+        assert_eq!(events[0].get("name").unwrap().str().unwrap(), "exec");
+        assert_eq!(events[0].get("ph").unwrap().str().unwrap(), "X");
+        // zero-duration accept span exports as an instant event
+        assert_eq!(events[1].get("ph").unwrap().str().unwrap(), "i");
+    }
+}

@@ -71,6 +71,39 @@ pub struct LoadgenReport {
     pub achieved_rps: f64,
 }
 
+impl LoadgenReport {
+    /// Fraction of sent requests the gateway shed with 429.
+    pub fn shed_rate(&self) -> f64 {
+        if self.sent == 0 {
+            return 0.0;
+        }
+        *self.status_counts.get(&429).unwrap_or(&0) as f64 / self.sent as f64
+    }
+
+    /// Machine-readable run summary (`dlrt client --out`).
+    pub fn to_json(&self) -> Json {
+        let statuses = self
+            .status_counts
+            .iter()
+            .map(|(st, n)| (st.to_string(), num(*n as f64)))
+            .collect::<BTreeMap<String, Json>>();
+        obj(vec![
+            ("model", Json::Str(self.model.clone())),
+            ("sent", num(self.sent as f64)),
+            ("ok", num(self.ok as f64)),
+            ("transport_errors", num(self.transport_errors as f64)),
+            ("status_counts", Json::Obj(statuses)),
+            ("shed_rate", num(self.shed_rate())),
+            ("p50_ms", num(self.p50_ms)),
+            ("p95_ms", num(self.p95_ms)),
+            ("p99_ms", num(self.p99_ms)),
+            ("mean_ms", num(self.mean_ms)),
+            ("wall_s", num(self.wall_s)),
+            ("achieved_rps", num(self.achieved_rps)),
+        ])
+    }
+}
+
 /// Build the request body for `shape` (without the batch dim the element
 /// count is the product of all dims; batch is always 1 per request).
 fn build_body(shape: &[usize], json: bool) -> (String, Vec<u8>) {
@@ -209,5 +242,30 @@ mod tests {
         assert_eq!(ct, "application/json");
         let v = Json::parse(std::str::from_utf8(&js).unwrap()).unwrap();
         assert_eq!(v.get("data").unwrap().arr().unwrap().len(), 4);
+    }
+
+    #[test]
+    fn report_json_summary_round_trips() {
+        let mut rep = LoadgenReport {
+            model: "tiny".into(),
+            sent: 10,
+            ok: 8,
+            p50_ms: 1.0,
+            p95_ms: 2.0,
+            p99_ms: 3.0,
+            mean_ms: 1.5,
+            wall_s: 0.5,
+            achieved_rps: 16.0,
+            ..Default::default()
+        };
+        rep.status_counts.insert(429, 2);
+        assert!((rep.shed_rate() - 0.2).abs() < 1e-12);
+        let v = Json::parse(&rep.to_json().to_string()).unwrap();
+        assert_eq!(v.get("model").unwrap().str().unwrap(), "tiny");
+        assert_eq!(v.get("sent").unwrap().usize().unwrap(), 10);
+        assert_eq!(v.get("ok").unwrap().usize().unwrap(), 8);
+        assert!((v.get("shed_rate").unwrap().num().unwrap() - 0.2).abs() < 1e-12);
+        assert_eq!(v.get("status_counts").unwrap().get("429").unwrap().usize().unwrap(), 2);
+        assert!((v.get("achieved_rps").unwrap().num().unwrap() - 16.0).abs() < 1e-12);
     }
 }

@@ -9,6 +9,8 @@
 use std::sync::atomic::{AtomicU64, Ordering};
 
 use crate::coordinator::MetricsSnapshot;
+use crate::coordinator::metrics::{HIST_BUCKETS_MS, HistSnapshot};
+use crate::obs::OP_CLASSES;
 
 /// HTTP-level counters, one instance per gateway.
 #[derive(Default)]
@@ -102,6 +104,20 @@ fn sample(out: &mut String, name: &str, labels: &[(&str, &str)], value: f64) {
 
 fn header(out: &mut String, name: &str, help: &str, kind: &str) {
     out.push_str(&format!("# HELP {name} {help}\n# TYPE {name} {kind}\n"));
+}
+
+/// Render one Prometheus histogram (`_bucket`/`_sum`/`_count`) for a model.
+/// Bucket counts are already cumulative in the snapshot; the `+Inf` bucket
+/// equals `count` by definition.
+fn hist_series(out: &mut String, name: &str, model: &str, h: &HistSnapshot) {
+    let bucket = format!("{name}_bucket");
+    for (le, &c) in HIST_BUCKETS_MS.iter().zip(&h.cumulative) {
+        let le = format!("{le}");
+        sample(out, &bucket, &[("model", model), ("le", &le)], c as f64);
+    }
+    sample(out, &bucket, &[("model", model), ("le", "+Inf")], h.count as f64);
+    sample(out, &format!("{name}_sum"), &[("model", model)], h.sum_ms);
+    sample(out, &format!("{name}_count"), &[("model", model)], h.count as f64);
 }
 
 /// Render the full exposition for the gateway + all registered models.
@@ -229,6 +245,40 @@ pub fn render_prometheus(stats: &GatewayStats, models: &[ModelStats]) -> String 
             );
         }
     }
+    header(
+        &mut out,
+        "dlrt_model_exec_time_ms",
+        "execution time per batch (fixed buckets, ms)",
+        "histogram",
+    );
+    for m in models {
+        hist_series(&mut out, "dlrt_model_exec_time_ms", &m.name, &m.snap.exec_hist);
+    }
+    header(
+        &mut out,
+        "dlrt_model_queue_time_ms",
+        "queue wait per request (fixed buckets, ms)",
+        "histogram",
+    );
+    for m in models {
+        hist_series(&mut out, "dlrt_model_queue_time_ms", &m.name, &m.snap.queue_hist);
+    }
+    header(
+        &mut out,
+        "dlrt_model_op_class_exec_seconds_total",
+        "execution seconds by operator class (from profiler rings)",
+        "counter",
+    );
+    for m in models {
+        for (class, &s) in OP_CLASSES.iter().zip(&m.snap.class_exec_s) {
+            sample(
+                &mut out,
+                "dlrt_model_op_class_exec_seconds_total",
+                &[("model", &m.name), ("class", class)],
+                s,
+            );
+        }
+    }
     out
 }
 
@@ -237,6 +287,10 @@ mod tests {
     use super::*;
 
     fn fake_models() -> Vec<ModelStats> {
+        // 3 exec samples all <= 2.5ms (bucket index 4); one conv-heavy
+        // class breakdown so the counter series is non-zero.
+        let mut class_exec_s = [0.0; crate::obs::N_CLASSES];
+        class_exec_s[0] = 1.5;
         vec![ModelStats {
             name: "tiny".to_string(),
             queue_depth: 1,
@@ -256,6 +310,13 @@ mod tests {
                 mean_batch: 2.0,
                 throughput_rps: 100.0,
                 window: 10,
+                queue_hist: HistSnapshot::default(),
+                exec_hist: HistSnapshot {
+                    cumulative: vec![0, 0, 0, 0, 3, 3, 3, 3, 3, 3, 3, 3],
+                    sum_ms: 5.75,
+                    count: 3,
+                },
+                class_exec_s,
             },
         }]
     }
@@ -289,6 +350,27 @@ mod tests {
         assert!(text.contains("dlrt_model_completed_total{model=\"tiny\"} 10"));
         assert!(text.contains("dlrt_http_responses_total{class=\"429\"} 1"));
         assert!(text.contains("quantile=\"0.99\""));
+    }
+
+    #[test]
+    fn histogram_exposition() {
+        let text = render_prometheus(&GatewayStats::default(), &fake_models());
+        // cumulative buckets, an explicit +Inf bucket equal to _count
+        assert!(text.contains("dlrt_model_exec_time_ms_bucket{model=\"tiny\",le=\"1\"} 0"));
+        assert!(text.contains("dlrt_model_exec_time_ms_bucket{model=\"tiny\",le=\"2.5\"} 3"));
+        assert!(text.contains("dlrt_model_exec_time_ms_bucket{model=\"tiny\",le=\"+Inf\"} 3"));
+        assert!(text.contains("dlrt_model_exec_time_ms_sum{model=\"tiny\"} 5.75"));
+        assert!(text.contains("dlrt_model_exec_time_ms_count{model=\"tiny\"} 3"));
+        // an empty histogram still exposes the +Inf bucket and zero count
+        assert!(text.contains("dlrt_model_queue_time_ms_bucket{model=\"tiny\",le=\"+Inf\"} 0"));
+        assert!(text.contains("dlrt_model_queue_time_ms_count{model=\"tiny\"} 0"));
+        // per-op-class counters cover every class name
+        for class in OP_CLASSES {
+            let series = format!("exec_seconds_total{{model=\"tiny\",class=\"{class}\"}}");
+            assert!(text.contains(&series), "missing class series for {class}");
+        }
+        let conv = "dlrt_model_op_class_exec_seconds_total{model=\"tiny\",class=\"conv\"} 1.5";
+        assert!(text.contains(conv));
     }
 
     #[test]

@@ -35,8 +35,8 @@ pub mod registry;
 
 use std::io::{BufReader, ErrorKind};
 use std::net::{SocketAddr, TcpListener, TcpStream};
-use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::Arc;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, RwLock};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
@@ -44,11 +44,20 @@ use anyhow::{bail, Context, Result};
 
 use crate::dlrt::tensor::Tensor;
 use crate::exec::CompiledModel;
+use crate::obs::trace::{SpanKind, SpanRec, TraceBuffer};
 use crate::util::json::{arr, num, obj, s, Json};
 
 use self::http::{ReadOutcome, Request, Response};
 use self::metrics::{GatewayStats, ModelStats};
 use self::registry::{ModelRegistry, ModelSpec};
+
+/// Spans retained by the in-memory trace ring behind `/v1/debug/trace`
+/// (~40 B each; older spans are overwritten).
+const TRACE_CAP: usize = 4096;
+
+/// Where the gateway's structured access-log lines go (stderr by default;
+/// tests capture them via [`Gateway::set_access_sink`]).
+type AccessSink = Box<dyn Fn(&str) + Send + Sync>;
 
 #[derive(Clone, Copy, Debug)]
 pub struct GatewayConfig {
@@ -81,7 +90,22 @@ struct GwShared {
     stop: AtomicBool,
     /// set by `POST /v1/admin/shutdown`; the CLI polls it and drains
     shutdown_requested: AtomicBool,
+    /// bounded request-lifecycle span ring (`GET /v1/debug/trace`)
+    trace: TraceBuffer,
+    /// request sequence numbers — the numeric `tid` tying trace spans to
+    /// access-log request IDs
+    req_seq: AtomicU64,
+    access_sink: RwLock<Option<AccessSink>>,
     cfg: GatewayConfig,
+}
+
+impl GwShared {
+    fn log_access(&self, line: &str) {
+        match &*self.access_sink.read().unwrap() {
+            Some(sink) => sink(line),
+            None => eprintln!("[access] {line}"),
+        }
+    }
 }
 
 /// A bound, serving gateway. Dropping it (or calling
@@ -112,6 +136,9 @@ impl Gateway {
             conns: admission::ConnLimiter::new(cfg.max_connections),
             stop: AtomicBool::new(false),
             shutdown_requested: AtomicBool::new(false),
+            trace: TraceBuffer::with_capacity(TRACE_CAP),
+            req_seq: AtomicU64::new(1),
+            access_sink: RwLock::new(None),
             cfg,
         });
         let accept = {
@@ -128,6 +155,12 @@ impl Gateway {
     /// True once a client POSTed `/v1/admin/shutdown`.
     pub fn shutdown_requested(&self) -> bool {
         self.shared.shutdown_requested.load(Ordering::SeqCst)
+    }
+
+    /// Redirect structured access-log lines (stderr by default). Tests
+    /// install a capturing sink to assert on the lines.
+    pub fn set_access_sink(&self, sink: AccessSink) {
+        *self.shared.access_sink.write().unwrap() = Some(sink);
     }
 
     /// Graceful drain: stop accepting, let in-flight connections finish
@@ -170,7 +203,16 @@ fn accept_loop(listener: &TcpListener, shared: &Arc<GwShared>) {
         }
         match listener.accept() {
             Ok((stream, _peer)) => {
-                shared.stats.connections.fetch_add(1, Ordering::Relaxed);
+                let conn = shared.stats.connections.fetch_add(1, Ordering::Relaxed);
+                shared.trace.record(SpanRec {
+                    kind: SpanKind::Accept,
+                    req: conn,
+                    ts_us: shared.trace.now_us(),
+                    dur_us: 0,
+                    batch_index: 0,
+                    batch_size: 0,
+                    status: 0,
+                });
                 if !shared.conns.try_acquire() {
                     // over the connection cap: shed before spawning
                     let mut stream = stream;
@@ -265,6 +307,7 @@ fn route(shared: &GwShared, req: &Request) -> Response {
             Response::new(200, "text/plain; version=0.0.4", render_metrics(shared).into_bytes())
         }
         ("GET", ["v1", "models"]) => models_json(shared),
+        ("GET", ["v1", "debug", "trace"]) => trace_json(shared),
         // slice-pattern bindings on `&[&str]` are `&&str`: deref at use
         ("POST", ["v1", "models", name, "infer"]) => infer(shared, *name, req),
         ("POST", ["v1", "models", name, "load"]) => load_model(shared, *name, req),
@@ -277,6 +320,7 @@ fn route(shared: &GwShared, req: &Request) -> Response {
         // paths (typos included) fall through to 404
         (_, ["healthz" | "metrics"])
         | (_, ["v1", "models"])
+        | (_, ["v1", "debug", "trace"])
         | (_, ["v1", "models", _, "infer" | "load" | "unload"])
         | (_, ["v1", "admin", "shutdown"]) => Response::text(405, "method not allowed\n"),
         _ => Response::text(404, "not found\n"),
@@ -287,7 +331,58 @@ fn route(shared: &GwShared, req: &Request) -> Response {
 // handlers
 // ---------------------------------------------------------------------------
 
+/// Per-request timing collected by [`infer_inner`] for the access log.
+#[derive(Default)]
+struct ReqTiming {
+    batch_index: usize,
+    batch_size: usize,
+    queue_us: u64,
+    exec_us: u64,
+}
+
 fn infer(shared: &GwShared, name: &str, req: &Request) -> Response {
+    let t_start = Instant::now();
+    // honor a client-supplied X-Request-Id; generate one otherwise
+    let rid = req
+        .header("x-request-id")
+        .map(str::trim)
+        .filter(|v| !v.is_empty())
+        .map(str::to_string)
+        .unwrap_or_else(crate::obs::gen_request_id);
+    let seq = shared.req_seq.fetch_add(1, Ordering::Relaxed);
+    let mut timing = ReqTiming::default();
+    let resp = infer_inner(shared, name, req, seq, &mut timing);
+    let total_us = t_start.elapsed().as_micros() as u64;
+    shared.log_access(&crate::obs::access_line(
+        crate::obs::unix_ms(),
+        &rid,
+        name,
+        timing.batch_index,
+        timing.batch_size,
+        resp.status,
+        timing.queue_us,
+        timing.exec_us,
+        total_us,
+    ));
+    resp.header("X-Request-Id", &rid)
+}
+
+fn infer_inner(
+    shared: &GwShared,
+    name: &str,
+    req: &Request,
+    seq: u64,
+    timing: &mut ReqTiming,
+) -> Response {
+    let span = |kind: SpanKind, ts_us: u64, dur_us: u64, timing: &ReqTiming, status: u16| SpanRec {
+        kind,
+        req: seq,
+        ts_us,
+        dur_us,
+        batch_index: timing.batch_index as u32,
+        batch_size: timing.batch_size as u32,
+        status,
+    };
     let Some(entry) = shared.registry.get(name) else {
         return Response::text(404, &format!("no such model {name:?}\n"));
     };
@@ -295,10 +390,15 @@ fn infer(shared: &GwShared, name: &str, req: &Request) -> Response {
         .header("content-type")
         .map(|c| c.starts_with("application/json"))
         .unwrap_or(false);
+    let t_parse_us = shared.trace.now_us();
+    let t_parse = Instant::now();
     let input = match parse_input(req, json_io, &entry.model) {
         Ok(t) => t,
         Err(e) => return Response::text(400, &format!("bad input: {e:#}\n")),
     };
+    let parse_us = t_parse.elapsed().as_micros() as u64;
+    shared.trace.record(span(SpanKind::Parse, t_parse_us, parse_us, timing, 0));
+    let t_submit_us = shared.trace.now_us();
     match entry.server.try_submit(input) {
         Err(e) => admission::reject_response(&e, &entry.server.metrics()),
         Ok(rx) => {
@@ -306,7 +406,44 @@ fn infer(shared: &GwShared, name: &str, req: &Request) -> Response {
             let got = rx.recv();
             shared.stats.in_flight.fetch_sub(1, Ordering::Relaxed);
             match got {
-                Ok(Ok(outs)) => render_outputs(&outs, json_io),
+                Ok(Ok(reply)) => {
+                    timing.batch_index = reply.batch_index;
+                    timing.batch_size = reply.batch_size;
+                    timing.queue_us = reply.queue_us;
+                    timing.exec_us = reply.exec_us;
+                    let t_recv_us = shared.trace.now_us();
+                    // queue-wait from submit; batch = assembly window +
+                    // execution; exec = the plan-execution tail of it
+                    let t_batch_us = t_submit_us + reply.queue_us;
+                    shared
+                        .trace
+                        .record(span(SpanKind::Queue, t_submit_us, reply.queue_us, timing, 200));
+                    shared.trace.record(span(
+                        SpanKind::Batch,
+                        t_batch_us,
+                        t_recv_us.saturating_sub(t_batch_us),
+                        timing,
+                        200,
+                    ));
+                    shared.trace.record(span(
+                        SpanKind::Exec,
+                        t_recv_us.saturating_sub(reply.exec_us),
+                        reply.exec_us,
+                        timing,
+                        200,
+                    ));
+                    let t_resp_us = shared.trace.now_us();
+                    let t_resp = Instant::now();
+                    let resp = render_outputs(&reply.outputs, json_io);
+                    shared.trace.record(span(
+                        SpanKind::Respond,
+                        t_resp_us,
+                        t_resp.elapsed().as_micros() as u64,
+                        timing,
+                        200,
+                    ));
+                    resp
+                }
                 Ok(Err(e)) => {
                     if e.is::<crate::coordinator::ServerStopping>() {
                         Response::text(503, "server stopping\n")
@@ -318,6 +455,12 @@ fn infer(shared: &GwShared, name: &str, req: &Request) -> Response {
             }
         }
     }
+}
+
+/// `GET /v1/debug/trace`: the retained span ring as a Chrome trace-event
+/// document (load in Perfetto / `chrome://tracing`).
+fn trace_json(shared: &GwShared) -> Response {
+    Response::json(200, &crate::obs::trace::chrome_trace_json(&shared.trace.snapshot()))
 }
 
 /// Decode one `[1, H, W, C]` request input in either wire format.

@@ -536,3 +536,64 @@ fn admin_shutdown_endpoint_requests_drain() {
     assert!(gw.shutdown_requested());
     gw.shutdown();
 }
+
+#[test]
+fn request_ids_reach_access_log_and_trace_endpoint() {
+    let (gw, _reg, addr) = boot(default_cfg());
+    let lines = Arc::new(std::sync::Mutex::new(Vec::<String>::new()));
+    {
+        let lines = lines.clone();
+        gw.set_access_sink(Box::new(move |line| lines.lock().unwrap().push(line.to_string())));
+    }
+
+    // a client-supplied X-Request-Id round-trips into the response header
+    let x = test_input(9);
+    let mut client = HttpClient::new(&addr, Duration::from_secs(30));
+    let mut req = Request::with_body(
+        "POST",
+        "/v1/models/tiny/infer",
+        "application/octet-stream",
+        raw_bytes(&x),
+    );
+    req.headers.push(("X-Request-Id".to_string(), "test-rid-42".to_string()));
+    let resp = client.send(&req).unwrap();
+    assert_eq!(resp.status, 200, "{}", String::from_utf8_lossy(&resp.body));
+    assert_eq!(resp.header("x-request-id"), Some("test-rid-42"));
+
+    // without the header the gateway generates one
+    let req2 = Request::with_body(
+        "POST",
+        "/v1/models/tiny/infer",
+        "application/octet-stream",
+        raw_bytes(&x),
+    );
+    let resp2 = client.send(&req2).unwrap();
+    assert_eq!(resp2.status, 200);
+    let generated = resp2.header("x-request-id").expect("generated request id").to_string();
+    assert!(generated.starts_with("req-"), "generated id {generated:?}");
+
+    // both requests produced structured access-log lines carrying their ids
+    let lines = lines.lock().unwrap();
+    assert_eq!(lines.len(), 2, "access lines: {lines:?}");
+    assert!(lines[0].contains("id=test-rid-42"), "{}", lines[0]);
+    assert!(lines[0].contains("model=tiny"), "{}", lines[0]);
+    assert!(lines[0].contains("status=200"), "{}", lines[0]);
+    assert!(lines[1].contains(&format!("id={generated}")), "{}", lines[1]);
+    for tok in lines[0].split(' ') {
+        assert!(tok.contains('='), "unstructured token {tok:?} in {:?}", lines[0]);
+    }
+    drop(lines);
+
+    // the span ring exports as a Chrome trace-event document
+    let resp = http_once(&addr, "GET", "/v1/debug/trace", "x", Vec::new()).unwrap();
+    assert_eq!(resp.status, 200);
+    let v = Json::parse(resp.body_str().unwrap()).unwrap();
+    let events = v.get("traceEvents").unwrap().arr().unwrap();
+    assert!(!events.is_empty(), "trace buffer exported no spans");
+    let names: Vec<&str> =
+        events.iter().map(|e| e.get("name").unwrap().str().unwrap()).collect();
+    for want in ["parse", "queue-wait", "exec", "respond"] {
+        assert!(names.contains(&want), "missing {want:?} span in {names:?}");
+    }
+    gw.shutdown();
+}

@@ -72,7 +72,10 @@ fn check_seed(seed: u64, isa: Isa, cov: &mut Coverage) {
         cov.fused_acts += model.plan.fused_instrs();
         cov.in_place += model.plan.in_place_instrs();
         for threads in [1usize, 3] {
+            // instrumented runs: per-instruction profiling must never
+            // change results on any generated graph
             let mut ex = Executor::new(threads);
+            ex.enable_profiling(&model.plan);
             for batch in [1usize, 3] {
                 let x = fuzz_input(&g, batch, seed);
                 let label = format!(

@@ -65,7 +65,9 @@ fn planned_executor_matches_interpreter_bit_for_bit() {
                 let model = compile_graph_for_isa(g, engine, isa).unwrap();
                 let x = smooth_input(vec![1, 8, 8, 3]);
                 for nthreads in [1usize, 3] {
+                    // run instrumented: profiling must never change results
                     let mut ex = Executor::new(nthreads);
+                    ex.enable_profiling(&model.plan);
                     let got = ex.run(&model, &x).unwrap();
                     let want = reference::run_unfused(&model, &x, nthreads).unwrap();
                     assert_bit_identical(
@@ -73,6 +75,7 @@ fn planned_executor_matches_interpreter_bit_for_bit() {
                         &want,
                         &format!("{gname}/{engine:?}/{}/t{nthreads}", isa.name()),
                     );
+                    assert_eq!(ex.profiler().unwrap().runs(), 1);
                 }
             }
         }
@@ -85,6 +88,7 @@ fn planned_executor_matches_interpreter_on_batches() {
     let model = compile_graph(&g, EngineChoice::Auto).unwrap();
     let x = smooth_input(vec![3, 8, 8, 3]);
     let mut ex = Executor::new(2);
+    ex.enable_profiling(&model.plan);
     let got = ex.run(&model, &x).unwrap();
     let want = reference::run_unfused(&model, &x, 2).unwrap();
     assert_bit_identical(&got, &want, "multi_op batch=3");
@@ -105,10 +109,14 @@ fn unfused_plan_matches_fused_plan() {
     assert_eq!(unfused.plan.in_place_concats, 0);
     assert!(unfused.plan.instrs.len() > fused.plan.instrs.len());
     let x = smooth_input(vec![1, 8, 8, 3]);
+    // profiler sized for the fused plan: the unfused run (different instr
+    // count) must take the guarded fast path, not index out of bounds
     let mut ex = Executor::new(1);
+    ex.enable_profiling(&fused.plan);
     let y_fused = ex.run(&fused, &x).unwrap();
     let y_unfused = ex.run(&unfused, &x).unwrap();
     assert_bit_identical(&y_fused, &y_unfused, "fused vs unfused plan");
+    assert_eq!(ex.profiler().unwrap().runs(), 1, "mismatched plan must skip profiling");
     // every single-pass combination agrees too (passes compose freely)
     for opts in [
         PlanOpts { fuse_residual_add: false, ..PlanOpts::default() },

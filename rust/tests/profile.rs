@@ -1,0 +1,142 @@
+//! Per-instruction profiler integration tests: profiling is off by
+//! default and costs nothing when disabled, the recorded per-instruction
+//! times account for the end-to-end wall time when enabled, and the
+//! profile exports as a valid Chrome trace-event document.
+
+use std::time::Instant;
+
+use dlrt::compiler::{compile_graph, EngineChoice};
+use dlrt::exec::{CompiledModel, Executor};
+use dlrt::models::tiny_test_graph;
+use dlrt::obs::trace::profile_trace_json;
+use dlrt::util::json::Json;
+use dlrt::Tensor;
+
+fn test_input() -> Tensor {
+    let mut x = Tensor::zeros(vec![1, 8, 8, 3]);
+    for (i, v) in x.data.iter_mut().enumerate() {
+        *v = ((i * 37) % 23) as f32 * 0.0625 - 0.5;
+    }
+    x
+}
+
+/// Wall time of `runs` back-to-back executions, minimized over `trials`
+/// measurement windows — min-of-N rejects scheduler noise, so the
+/// comparison below stays stable on loaded CI machines.
+fn min_wall_s(
+    ex: &mut Executor,
+    model: &CompiledModel,
+    x: &Tensor,
+    trials: usize,
+    runs: usize,
+) -> f64 {
+    let mut outs = Vec::new();
+    let mut best = f64::INFINITY;
+    for _ in 0..trials {
+        let t0 = Instant::now();
+        for _ in 0..runs {
+            ex.run_into(model, x, &mut outs).unwrap();
+        }
+        best = best.min(t0.elapsed().as_secs_f64());
+    }
+    best
+}
+
+#[test]
+fn profiling_off_by_default_and_disabled_overhead_within_two_percent() {
+    let model = compile_graph(&tiny_test_graph(false), EngineChoice::Auto).unwrap();
+    let x = test_input();
+
+    let mut base = Executor::new(1);
+    assert!(base.profiler().is_none(), "profiling must be off by default");
+
+    // an executor that had profiling enabled and then disabled must be
+    // back on the exact baseline path
+    let mut toggled = Executor::new(1);
+    toggled.enable_profiling(&model.plan);
+    toggled.disable_profiling();
+    assert!(toggled.profiler().is_none(), "disable_profiling must clear the profiler");
+
+    // warm both (arena growth, page faults), then interleave measurements
+    min_wall_s(&mut base, &model, &x, 1, 5);
+    min_wall_s(&mut toggled, &model, &x, 1, 5);
+    let t_base = min_wall_s(&mut base, &model, &x, 9, 20);
+    let t_off = min_wall_s(&mut toggled, &model, &x, 9, 20);
+    // 2% relative bound, plus a small absolute allowance so sub-millisecond
+    // windows don't fail on clock granularity alone
+    assert!(
+        t_off <= t_base * 1.02 + 200e-6,
+        "disabled-profiling run {:.1}us is more than 2% over baseline {:.1}us",
+        t_off * 1e6,
+        t_base * 1e6
+    );
+}
+
+#[test]
+fn instr_times_account_for_end_to_end_wall_time() {
+    let model = compile_graph(&tiny_test_graph(false), EngineChoice::Auto).unwrap();
+    let x = test_input();
+    let mut ex = Executor::new(1);
+    let mut outs = Vec::new();
+    ex.run_into(&model, &x, &mut outs).unwrap(); // warm
+
+    ex.enable_profiling(&model.plan);
+    let reps = 20;
+    for _ in 0..reps {
+        ex.run_into(&model, &x, &mut outs).unwrap();
+    }
+    let prof = ex.profiler().unwrap();
+    assert_eq!(prof.len(), model.plan.instrs.len());
+    assert_eq!(prof.runs(), reps as u64);
+
+    // the per-instruction spans must explain the measured wall time: within
+    // 10% low (clock-read gaps between instructions) and never above it by
+    // more than timer jitter
+    let covered = prof.sum_total_s() / prof.run_total_s();
+    assert!(
+        (0.90..=1.02).contains(&covered),
+        "instruction spans cover {:.1}% of end-to-end wall time",
+        covered * 100.0
+    );
+
+    // every instruction was sampled every run, with coherent statistics
+    let mut sum = 0.0;
+    for i in 0..prof.len() {
+        let st = prof.stats(i);
+        assert_eq!(st.count, reps as u64, "instr {i} sample count");
+        assert!(st.total_s >= 0.0 && st.mean_s >= 0.0 && st.p95_s >= 0.0);
+        assert!((st.mean_s - st.total_s / st.count as f64).abs() < 1e-12);
+        sum += prof.instr_total_s(i);
+    }
+    assert!((sum - prof.sum_total_s()).abs() < 1e-9);
+}
+
+#[test]
+fn profile_exports_valid_chrome_trace_json() {
+    let model = compile_graph(&tiny_test_graph(false), EngineChoice::Auto).unwrap();
+    let x = test_input();
+    let mut ex = Executor::new(1);
+    ex.enable_profiling(&model.plan);
+    let mut outs = Vec::new();
+    for _ in 0..3 {
+        ex.run_into(&model, &x, &mut outs).unwrap();
+    }
+    let meta = model.plan.instr_meta();
+    let doc = profile_trace_json(&meta, ex.profiler().unwrap());
+
+    // round-trips through the parser and carries one event per instruction
+    // plus the whole-run "exec" envelope span
+    let v = Json::parse(&doc.to_string()).unwrap();
+    let events = v.get("traceEvents").unwrap().arr().unwrap();
+    assert_eq!(events.len(), meta.len() + 1);
+    assert_eq!(events[0].get("name").unwrap().str().unwrap(), "exec");
+    for (ev, m) in events[1..].iter().zip(&meta) {
+        assert_eq!(ev.get("name").unwrap().str().unwrap(), m.name);
+        // complete span ("X", with dur) unless the duration rounded to 0,
+        // which chrome_event renders as an instant ("i")
+        match ev.get("ph").unwrap().str().unwrap() {
+            "X" => assert!(ev.get("dur").unwrap().num().unwrap() > 0.0),
+            ph => assert_eq!(ph, "i"),
+        }
+    }
+}

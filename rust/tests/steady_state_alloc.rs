@@ -29,6 +29,7 @@ use dlrt::kernels::bitserial::{
 };
 use dlrt::kernels::im2col::{im2col_quant_u8, ConvDims};
 use dlrt::models::GraphBuilder;
+use dlrt::obs::trace::{SpanKind, SpanRec, TraceBuffer};
 use dlrt::util::rng::Rng;
 
 struct CountingAlloc;
@@ -230,4 +231,33 @@ fn steady_state_paths_allocate_nothing() {
     );
     assert_eq!(outs[0].shape, vec![1, 10]);
     assert!(outs[0].data.iter().all(|v| v.is_finite()));
+
+    // ---- phase 4: profiling + tracing armed — still zero allocations ---
+    // The profiler rings are preallocated by enable_profiling and the span
+    // ring by with_capacity; recording into either must not allocate.
+    ex.enable_profiling(&model.plan);
+    let trace = TraceBuffer::with_capacity(256);
+    let allocs = count_steady_state(3, 10, || {
+        let t0 = std::time::Instant::now();
+        ex.run_into(&model, &input, &mut outs).unwrap();
+        trace.record(SpanRec {
+            kind: SpanKind::Exec,
+            req: 1,
+            ts_us: trace.now_us(),
+            dur_us: t0.elapsed().as_micros() as u64,
+            batch_index: 0,
+            batch_size: 1,
+            status: 200,
+        });
+    });
+    assert_eq!(
+        allocs, 0,
+        "steady-state profiled+traced run performed {allocs} heap allocations"
+    );
+    let prof = ex.profiler().expect("profiling enabled");
+    assert_eq!(prof.len(), model.plan.instrs.len());
+    assert_eq!(prof.runs(), 13, "profiler saw warmup + counted runs");
+    assert!(prof.sum_total_s() > 0.0);
+    assert_eq!(trace.total(), 13);
+    assert_eq!(outs[0].shape, vec![1, 10]);
 }
