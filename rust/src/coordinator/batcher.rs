@@ -11,7 +11,7 @@ use std::time::Instant;
 
 use anyhow::{bail, Result};
 
-use super::{Request, Shared};
+use super::{ReplyOutcome, Request, Responder, Shared};
 use crate::dlrt::tensor::Tensor;
 
 /// Block until a batch is available; `None` means the worker should exit.
@@ -66,7 +66,12 @@ pub(super) fn collect_batch(shared: &Shared) -> Option<Vec<Request>> {
 /// Hard stop: answer every queued request with an explicit typed error.
 fn fail_pending(q: &mut Vec<Request>) {
     for r in q.drain(..) {
-        let _ = r.tx.send(Err(anyhow::Error::new(super::ServerStopping)));
+        match r.resp {
+            Responder::Channel(tx) => {
+                let _ = tx.send(Err(anyhow::Error::new(super::ServerStopping)));
+            }
+            Responder::Callback(cb) => cb(ReplyOutcome::Stopping),
+        }
     }
 }
 

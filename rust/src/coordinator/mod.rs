@@ -22,6 +22,7 @@
 pub mod batcher;
 pub mod metrics;
 pub mod postproc;
+pub mod replica;
 
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{mpsc, Arc, Condvar, Mutex};
@@ -33,21 +34,32 @@ use crate::dlrt::tensor::Tensor;
 use crate::exec::{CompiledModel, Executor};
 
 pub use metrics::MetricsSnapshot;
+pub use replica::ReplicaState;
 
 #[derive(Clone, Copy, Debug)]
 pub struct ServerConfig {
+    /// batch workers *per replica*
     pub workers: usize,
     pub max_batch: usize,
     pub max_wait: Duration,
-    /// kernel-level threads per worker (keep workers*threads <= cores)
+    /// kernel-level threads per worker (keep replicas*workers*threads <=
+    /// cores)
     pub threads_per_worker: usize,
     /// max requests waiting in the queue; 0 = derive from the memory
     /// budget when one is set, else unbounded
     pub queue_cap: usize,
-    /// arena memory budget in bytes across all workers; 0 = no budget.
-    /// Clamps the effective `max_batch` (each worker owns one arena of
-    /// `arena_bytes(max_batch)`) and sizes the queue bound.
+    /// arena memory budget in bytes across all workers of all replicas;
+    /// 0 = no budget. Clamps the effective `max_batch` (each worker owns
+    /// one arena of `arena_bytes(max_batch)`) and sizes the queue bound.
     pub mem_budget_bytes: usize,
+    /// independent executor pools per model; replicas share the queue but
+    /// never share kernel threads, so one model's replicas (and different
+    /// models') stop contending for the global pool. 1 (the default)
+    /// preserves the original single-pool behavior exactly.
+    pub replicas: usize,
+    /// pin each replica's threads to a disjoint core slice (Linux only;
+    /// best effort elsewhere)
+    pub pin_cores: bool,
 }
 
 impl Default for ServerConfig {
@@ -59,6 +71,8 @@ impl Default for ServerConfig {
             threads_per_worker: 1,
             queue_cap: 0,
             mem_budget_bytes: 0,
+            replicas: 1,
+            pin_cores: false,
         }
     }
 }
@@ -112,10 +126,45 @@ pub struct InferReply {
     pub exec_us: u64,
 }
 
+/// Borrowed view of one request's share of a completed batch. `outputs`
+/// are the *batched* tensors (`[B, ...]`); the receiver slices sample
+/// `batch_index` out itself — the event-loop gateway renders the raw wire
+/// body directly from the batched slice, one copy total, instead of
+/// materializing per-request tensors first.
+pub struct ReplyRef<'a> {
+    pub outputs: &'a [Tensor],
+    pub batch_index: usize,
+    pub batch_size: usize,
+    pub queue_us: u64,
+    pub exec_us: u64,
+}
+
+/// What a [`ReplyCallback`] is invoked with, exactly once per request.
+pub enum ReplyOutcome<'a> {
+    Ok(ReplyRef<'a>),
+    /// batch execution failed
+    Err(&'a anyhow::Error),
+    /// the server hard-stopped before the request ran (maps to 503)
+    Stopping,
+}
+
+/// Completion callback for [`InferenceServer::try_submit_cb`]. Runs on the
+/// batch worker thread right after execution — keep it cheap (render +
+/// hand off); it must never block on the peer.
+pub type ReplyCallback = Box<dyn FnOnce(ReplyOutcome<'_>) + Send>;
+
+/// How a request's result gets back to its submitter.
+enum Responder {
+    /// `try_submit`: per-request outputs sliced and sent over a channel
+    Channel(mpsc::Sender<Result<InferReply>>),
+    /// `try_submit_cb`: invoked on the worker with the batched outputs
+    Callback(ReplyCallback),
+}
+
 struct Request {
     input: Tensor, // [1, H, W, C]
     enqueued: Instant,
-    tx: mpsc::Sender<Result<InferReply>>,
+    resp: Responder,
 }
 
 struct Shared {
@@ -133,6 +182,7 @@ struct Shared {
 pub struct InferenceServer {
     shared: Arc<Shared>,
     handles: Mutex<Vec<std::thread::JoinHandle<()>>>,
+    replicas: Vec<Arc<ReplicaState>>,
 }
 
 impl InferenceServer {
@@ -143,11 +193,13 @@ impl InferenceServer {
         let mut cfg = cfg;
         cfg.workers = cfg.workers.max(1);
         cfg.max_batch = cfg.max_batch.max(1);
+        cfg.replicas = cfg.replicas.max(1);
+        let total_workers = cfg.workers * cfg.replicas;
         if cfg.mem_budget_bytes > 0 {
             // plan-aware batching: each worker owns an arena that scales
             // linearly with batch, so the largest batch the budget admits
-            // is budget / workers / arena-bytes-per-item
-            let per_worker = cfg.mem_budget_bytes / cfg.workers;
+            // is budget / total-workers / arena-bytes-per-item
+            let per_worker = cfg.mem_budget_bytes / total_workers;
             let fit = model.plan.max_batch_for_budget(per_worker);
             if fit < cfg.max_batch {
                 eprintln!(
@@ -157,7 +209,7 @@ impl InferenceServer {
                     cfg.max_batch,
                     fit,
                     model.plan.arena_bytes(1),
-                    cfg.workers,
+                    total_workers,
                     cfg.mem_budget_bytes
                 );
                 cfg.max_batch = fit;
@@ -168,7 +220,7 @@ impl InferenceServer {
                 // full round of batches so batching stays effective)
                 let per_req = model.plan.input_bytes().max(1);
                 cfg.queue_cap = (cfg.mem_budget_bytes / per_req)
-                    .max(cfg.workers * cfg.max_batch)
+                    .max(total_workers * cfg.max_batch)
                     .min(65_536);
             }
         }
@@ -180,14 +232,24 @@ impl InferenceServer {
             metrics: metrics::Metrics::default(),
             cfg,
         });
-        let handles = (0..cfg.workers)
-            .map(|_| {
+        let replicas = replica::build_replicas(&cfg);
+        let mut handles = Vec::with_capacity(total_workers);
+        for (r, state) in replicas.iter().enumerate() {
+            for w in 0..cfg.workers {
                 let shared = shared.clone();
                 let model = model.clone();
-                std::thread::spawn(move || worker_loop(&shared, &model))
-            })
-            .collect();
-        InferenceServer { shared, handles: Mutex::new(handles) }
+                let state = state.clone();
+                let handle = std::thread::Builder::new()
+                    .name(format!("dlrt-batch-{r}.{w}"))
+                    .spawn(move || {
+                        state.install_on_current_thread();
+                        worker_loop(&shared, &model, &state)
+                    })
+                    .expect("spawning batch worker");
+                handles.push(handle);
+            }
+        }
+        InferenceServer { shared, handles: Mutex::new(handles), replicas }
     }
 
     /// The effective configuration (after plan-aware clamping).
@@ -207,6 +269,25 @@ impl InferenceServer {
         input: Tensor,
     ) -> std::result::Result<mpsc::Receiver<Result<InferReply>>, SubmitError> {
         let (tx, rx) = mpsc::channel();
+        self.enqueue(input, Responder::Channel(tx))?;
+        Ok(rx)
+    }
+
+    /// Submit one input with a completion callback instead of a channel.
+    /// The callback runs on the batch worker thread with a borrowed view of
+    /// the *batched* outputs ([`ReplyOutcome`]) — the event-loop gateway
+    /// uses this to render responses without a per-request tensor copy and
+    /// without parking a thread in `recv()`. On `Err` the callback was not
+    /// (and will never be) invoked; the caller responds synchronously.
+    pub fn try_submit_cb(
+        &self,
+        input: Tensor,
+        cb: ReplyCallback,
+    ) -> std::result::Result<(), SubmitError> {
+        self.enqueue(input, Responder::Callback(cb))
+    }
+
+    fn enqueue(&self, input: Tensor, resp: Responder) -> std::result::Result<(), SubmitError> {
         {
             let mut q = self.shared.queue.lock().unwrap();
             // checked under the queue lock so a drain started after this
@@ -220,10 +301,16 @@ impl InferenceServer {
             if cap > 0 && q.len() >= cap {
                 return Err(SubmitError::QueueFull { cap });
             }
-            q.push(Request { input, enqueued: Instant::now(), tx });
+            q.push(Request { input, enqueued: Instant::now(), resp });
         }
         self.shared.cv.notify_one();
-        Ok(rx)
+        Ok(())
+    }
+
+    /// `(busy workers, total workers)` per replica — the
+    /// `dlrt_model_replica_occupancy` gauge.
+    pub fn replica_occupancy(&self) -> Vec<(u64, usize)> {
+        self.replicas.iter().map(|r| (r.busy(), r.workers)).collect()
     }
 
     /// Submit one input; returns a receiver for its outputs. Admission
@@ -268,6 +355,11 @@ impl InferenceServer {
         for h in handles {
             let _ = h.join();
         }
+        // batch workers are gone; their private kernel pools can now stop
+        // (idempotent — a second drain/drop finds them already down)
+        for r in &self.replicas {
+            r.shutdown_pool();
+        }
     }
 
     /// Graceful shutdown by value (see [`InferenceServer::drain`]).
@@ -292,15 +384,19 @@ impl Drop for InferenceServer {
         for h in handles {
             let _ = h.join();
         }
+        for r in &self.replicas {
+            r.shutdown_pool();
+        }
     }
 }
 
-fn worker_loop(shared: &Shared, model: &CompiledModel) {
+fn worker_loop(shared: &Shared, model: &CompiledModel, state: &ReplicaState) {
     // Each coordinator worker owns its executor — and through it a long-lived
-    // handle on the persistent kernel pool — for its whole lifetime. All
-    // workers run the one execution plan compiled into the shared model;
-    // each keeps a private arena plus reusable output tensors, so at steady
-    // state a batch execution allocates nothing inside the executor.
+    // handle on its replica's kernel pool (the global pool for unpinned
+    // single-replica servers) — for its whole lifetime. All workers run the
+    // one execution plan compiled into the shared model; each keeps a
+    // private arena plus reusable output tensors, so at steady state a
+    // batch execution allocates nothing inside the executor.
     let mut exec = Executor::new(shared.cfg.threads_per_worker);
     // per-instruction rings feed the per-op-class Prometheus counters;
     // preallocated here (plan size is fixed) so the request path stays
@@ -319,6 +415,7 @@ fn worker_loop(shared: &Shared, model: &CompiledModel) {
             .map(|r| dequeued.saturating_duration_since(r.enqueued).as_secs_f64() * 1e3)
             .collect();
         let n = batch.len();
+        state.enter();
         let t0 = Instant::now();
         // catch panics so one poisoned batch cannot kill the (possibly
         // only) worker and leave queued callers blocked in recv() forever
@@ -332,19 +429,31 @@ fn worker_loop(shared: &Shared, model: &CompiledModel) {
             Ok(Ok(())) => {
                 let exec_us = (exec_ms * 1e3) as u64;
                 for (bi, req) in batch.into_iter().enumerate() {
-                    let per: Result<InferReply> = outputs
-                        .iter()
-                        .map(|o| batcher::slice_batch(o, bi))
-                        .collect::<Result<Vec<Tensor>>>()
-                        .map(|outputs| InferReply {
-                            outputs,
+                    let queue_us = (queue_ms[bi] * 1e3) as u64;
+                    shared.metrics.observe(queue_ms[bi], exec_ms, n);
+                    match req.resp {
+                        Responder::Channel(tx) => {
+                            let per: Result<InferReply> = outputs
+                                .iter()
+                                .map(|o| batcher::slice_batch(o, bi))
+                                .collect::<Result<Vec<Tensor>>>()
+                                .map(|outputs| InferReply {
+                                    outputs,
+                                    batch_index: bi,
+                                    batch_size: n,
+                                    queue_us,
+                                    exec_us,
+                                });
+                            let _ = tx.send(per);
+                        }
+                        Responder::Callback(cb) => cb(ReplyOutcome::Ok(ReplyRef {
+                            outputs: &outputs,
                             batch_index: bi,
                             batch_size: n,
-                            queue_us: (queue_ms[bi] * 1e3) as u64,
+                            queue_us,
                             exec_us,
-                        });
-                    shared.metrics.observe(queue_ms[bi], exec_ms, n);
-                    let _ = req.tx.send(per);
+                        })),
+                    }
                 }
                 // fold this batch's per-op-class instruction time into the
                 // model's metrics (rendered by /metrics)
@@ -353,10 +462,14 @@ fn worker_loop(shared: &Shared, model: &CompiledModel) {
                 }
             }
             Ok(Err(e)) => {
-                let msg = format!("{e:#}");
                 shared.metrics.observe_errors(n);
                 for req in batch {
-                    let _ = req.tx.send(Err(anyhow!("{msg}")));
+                    match req.resp {
+                        Responder::Channel(tx) => {
+                            let _ = tx.send(Err(anyhow!("{:#}", e)));
+                        }
+                        Responder::Callback(cb) => cb(ReplyOutcome::Err(&e)),
+                    }
                 }
             }
             Err(_panic) => {
@@ -366,11 +479,18 @@ fn worker_loop(shared: &Shared, model: &CompiledModel) {
                 exec.enable_profiling(&model.plan);
                 outputs = Vec::new();
                 shared.metrics.observe_errors(n);
+                let err = anyhow!("worker panicked during batch execution");
                 for req in batch {
-                    let _ = req.tx.send(Err(anyhow!("worker panicked during batch execution")));
+                    match req.resp {
+                        Responder::Channel(tx) => {
+                            let _ = tx.send(Err(anyhow!("worker panicked during batch execution")));
+                        }
+                        Responder::Callback(cb) => cb(ReplyOutcome::Err(&err)),
+                    }
                 }
             }
         }
+        state.leave();
     }
 }
 

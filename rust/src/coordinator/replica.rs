@@ -1,0 +1,174 @@
+//! Replica executor pools: per-model, per-replica kernel thread pools
+//! pinned to disjoint core slices.
+//!
+//! With one shared kernel pool, every model (and every batch worker) in
+//! the process contends for the same threads — under mixed-model load a
+//! heavy model's GEMMs stall a light model's. A *replica* is an
+//! independent execution unit: `ServerConfig::workers` batch workers plus
+//! a private [`ThreadPool`] of `threads_per_worker - 1` kernel threads,
+//! optionally pinned ([`ServerConfig::pin_cores`]) to a core slice carved
+//! out of the host with the same [`chunk_ranges`] arithmetic the kernels
+//! partition rows with. Replicas share the model's request queue — the
+//! batcher stays one — but never share kernel threads.
+//!
+//! The default (`replicas = 1`, unpinned) builds no private pool at all:
+//! batch workers keep using the process-wide global pool, which preserves
+//! the pre-replica behavior (and its tests) exactly.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+use crate::util::threads::{self, chunk_ranges, ThreadPool};
+
+use super::ServerConfig;
+
+/// One replica's execution state: occupancy counter, core slice, and the
+/// private kernel pool its batch workers dispatch to (None = global pool).
+pub struct ReplicaState {
+    /// batch workers of this replica currently executing a batch
+    busy: AtomicU64,
+    /// batch workers in this replica
+    pub workers: usize,
+    /// cores this replica's threads pin to (empty = unpinned)
+    pub cores: Vec<usize>,
+    pool: Option<Arc<ThreadPool>>,
+}
+
+impl ReplicaState {
+    /// Batch workers of this replica currently executing.
+    pub fn busy(&self) -> u64 {
+        self.busy.load(Ordering::Relaxed)
+    }
+
+    pub(super) fn enter(&self) {
+        self.busy.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub(super) fn leave(&self) {
+        self.busy.fetch_sub(1, Ordering::Relaxed);
+    }
+
+    /// Called once by each batch worker at startup: pin to the replica's
+    /// cores and route this thread's `par_ranges` calls to the replica's
+    /// private pool (when it has one).
+    pub(super) fn install_on_current_thread(&self) {
+        if !self.cores.is_empty() {
+            threads::pin_to_cores(&self.cores);
+        }
+        if let Some(pool) = &self.pool {
+            threads::set_current_pool(Some(pool.clone()));
+        }
+    }
+
+    /// Stop the private pool (no-op for global-pool replicas). Called after
+    /// the batch workers have been joined, so no job can arrive later.
+    pub(super) fn shutdown_pool(&self) {
+        if let Some(pool) = &self.pool {
+            pool.shutdown();
+        }
+    }
+}
+
+/// Build the per-replica states for `cfg` (already clamped: `replicas` and
+/// `workers` are >= 1). Core slices split the host's cores evenly across
+/// replicas; when there are more replicas than cores the slices wrap.
+pub(super) fn build_replicas(cfg: &ServerConfig) -> Vec<Arc<ReplicaState>> {
+    let private = cfg.replicas > 1 || cfg.pin_cores;
+    let slices: Vec<Vec<usize>> = if cfg.pin_cores {
+        chunk_ranges(threads::default_threads(), cfg.replicas)
+            .map(|(lo, hi)| (lo..hi).collect())
+            .collect()
+    } else {
+        Vec::new()
+    };
+    (0..cfg.replicas)
+        .map(|r| {
+            let cores: Vec<usize> = if slices.is_empty() {
+                Vec::new()
+            } else {
+                // wrap when replicas outnumber cores (degenerate but legal)
+                slices[r % slices.len()].clone()
+            };
+            // the batch worker runs chunk 0 of every kernel call itself, so
+            // the pool only needs the remaining threads_per_worker - 1
+            let pool_workers = cfg.threads_per_worker.saturating_sub(1);
+            let pool = if private && pool_workers > 0 {
+                Some(ThreadPool::pinned(pool_workers, &cores))
+            } else {
+                None
+            };
+            Arc::new(ReplicaState {
+                busy: AtomicU64::new(0),
+                workers: cfg.workers,
+                cores,
+                pool,
+            })
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::time::Duration;
+
+    fn cfg(replicas: usize, pin: bool, threads: usize) -> ServerConfig {
+        ServerConfig {
+            replicas,
+            pin_cores: pin,
+            threads_per_worker: threads,
+            workers: 1,
+            max_batch: 4,
+            max_wait: Duration::from_millis(1),
+            queue_cap: 0,
+            mem_budget_bytes: 0,
+        }
+    }
+
+    #[test]
+    fn default_single_replica_builds_no_private_pool() {
+        let reps = build_replicas(&cfg(1, false, 4));
+        assert_eq!(reps.len(), 1);
+        assert!(reps[0].pool.is_none(), "replicas=1 unpinned must keep the global pool");
+        assert!(reps[0].cores.is_empty());
+        reps[0].shutdown_pool(); // no-op
+    }
+
+    #[test]
+    fn multi_replica_gets_private_pools_and_disjoint_cores() {
+        let reps = build_replicas(&cfg(2, true, 2));
+        assert_eq!(reps.len(), 2);
+        for r in &reps {
+            assert!(r.pool.is_some(), "replicas>1 must isolate kernel pools");
+        }
+        // core slices are disjoint when the host has >= 2 cores
+        if threads::default_threads() >= 2 {
+            assert!(reps[0].cores.iter().all(|c| !reps[1].cores.contains(c)));
+            assert!(!reps[0].cores.is_empty() && !reps[1].cores.is_empty());
+        }
+        for r in &reps {
+            r.shutdown_pool();
+        }
+    }
+
+    #[test]
+    fn single_kernel_thread_needs_no_pool_even_when_pinned() {
+        // threads_per_worker=1 executes inline; pinning still records cores
+        let reps = build_replicas(&cfg(2, true, 1));
+        assert!(reps.iter().all(|r| r.pool.is_none()));
+        assert!(reps.iter().all(|r| !r.cores.is_empty()));
+    }
+
+    #[test]
+    fn occupancy_counts_enter_leave() {
+        let reps = build_replicas(&cfg(1, false, 1));
+        assert_eq!(reps[0].busy(), 0);
+        reps[0].enter();
+        reps[0].enter();
+        assert_eq!(reps[0].busy(), 2);
+        reps[0].leave();
+        assert_eq!(reps[0].busy(), 1);
+        reps[0].leave();
+        assert_eq!(reps[0].busy(), 0);
+    }
+}

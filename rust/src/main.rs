@@ -17,13 +17,17 @@
 //! dlrt cost    [--model ...] [--res N] [--cpu a53|a72|a57] [--threads N]
 //! dlrt serve   --models spec[,spec...] [--listen ADDR] [--workers W]
 //!              [--max-batch B] [--max-wait-ms MS] [--threads N]
-//!              [--queue-cap Q] [--mem-budget-mb MB]
+//!              [--queue-cap Q] [--mem-budget-mb MB] [--replicas R]
+//!              [--pin-cores] [--event-loops E] [--max-connections C]
 //!              # spec: [name=]file.dlrt | [name=]model_dir | [name=]builder[@res]
+//!              #       each spec takes ;key=value coordinator overrides,
+//!              #       e.g. det=yolov5n@320;replicas=2;pin_cores=true
 //!              # HTTP: GET /healthz /metrics /v1/models
 //!              #       POST /v1/models/{name}/infer|load|unload
 //!              #       POST /v1/admin/shutdown (graceful drain)
 //! dlrt client  [--addr HOST:PORT] [--model NAME] [--requests N]
 //!              [--concurrency C] [--rate RPS] [--json]   # loadgen
+//!              [--conns K]               # keep-alive sockets (0 = per sender)
 //!              [--out summary.json]      # machine-readable run summary
 //! dlrt pjrt    <artifact_stem>        # run a JAX-AOT HLO artifact
 //! ```
@@ -675,6 +679,8 @@ fn cmd_serve(args: &Args) -> Result<()> {
         threads_per_worker: args.usize_or("threads", 1)?,
         queue_cap,
         mem_budget_bytes,
+        replicas: args.usize_or("replicas", 1)?,
+        pin_cores: args.flag("pin-cores"),
     };
     let registry = Arc::new(ModelRegistry::new(base));
     for item in specs.split(',').filter(|s| !s.trim().is_empty()) {
@@ -695,6 +701,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let gw_cfg = GatewayConfig {
         max_body_bytes: args.usize_or("max-body-mb", 64)? << 20,
         max_connections: args.usize_or("max-connections", 256)?,
+        event_loops: args.usize_or("event-loops", 0)?,
         ..GatewayConfig::default()
     };
     let gateway = Gateway::bind(listen, registry, gw_cfg)?;
@@ -706,9 +713,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
     // Serve until a client POSTs /v1/admin/shutdown (graceful drain); a
     // signal kills the process without draining, so orchestrators should
     // hit the endpoint first.
-    while !gateway.shutdown_requested() {
-        std::thread::sleep(std::time::Duration::from_millis(200));
-    }
+    gateway.wait_shutdown_requested();
     println!("shutdown requested; draining in-flight connections and model queues ...");
     gateway.shutdown();
     println!("drained cleanly");
@@ -724,6 +729,7 @@ fn cmd_client(args: &Args) -> Result<()> {
         rate: args.f64_or("rate", 0.0)?,
         json: args.flag("json"),
         timeout: std::time::Duration::from_millis(args.usize_or("timeout-ms", 30_000)? as u64),
+        conns: args.usize_or("conns", 0)?,
     };
     let mode = if cfg.rate > 0.0 {
         format!("open loop @ {:.1} req/s", cfg.rate)

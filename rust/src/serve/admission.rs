@@ -54,15 +54,25 @@ impl ConnLimiter {
     }
 }
 
-/// Seconds a 429'd client should back off before retrying: roughly the
-/// time for one queue's worth of work to clear, floored at 1s.
-fn retry_after_secs(snap: &MetricsSnapshot) -> u64 {
-    let clear_ms = snap.p50_exec_ms.max(1.0) * 2.0;
+/// Seconds a 429'd client should back off before retrying: the estimated
+/// time for the *current* queue to clear — queued batches (depth rounded
+/// up to whole `max_batch` groups, at least one) times the median
+/// per-batch execution, floored at 1s. A deep queue quotes a longer
+/// back-off than a queue that just tipped over the cap.
+fn retry_after_secs(snap: &MetricsSnapshot, queue_depth: usize, max_batch: usize) -> u64 {
+    let batches = queue_depth.div_ceil(max_batch.max(1)).max(1) as f64;
+    let clear_ms = batches * snap.p50_exec_ms.max(1.0);
     (clear_ms / 1000.0).ceil().max(1.0) as u64
 }
 
 /// Map a coordinator admission refusal to its HTTP response.
-pub fn reject_response(err: &SubmitError, snap: &MetricsSnapshot) -> Response {
+/// `queue_depth` / `max_batch` size the `Retry-After` quote.
+pub fn reject_response(
+    err: &SubmitError,
+    snap: &MetricsSnapshot,
+    queue_depth: usize,
+    max_batch: usize,
+) -> Response {
     match err {
         SubmitError::QueueFull { cap } => {
             let body = obj(vec![
@@ -70,7 +80,7 @@ pub fn reject_response(err: &SubmitError, snap: &MetricsSnapshot) -> Response {
                 ("queue_cap", num(*cap as f64)),
             ]);
             Response::json(429, &body)
-                .header("Retry-After", &retry_after_secs(snap).to_string())
+                .header("Retry-After", &retry_after_secs(snap, queue_depth, max_batch).to_string())
         }
         SubmitError::Stopping => {
             let body: Json = obj(vec![("error", s("model draining"))]);
@@ -97,7 +107,7 @@ mod tests {
     #[test]
     fn queue_full_maps_to_429_with_retry_after() {
         let snap = MetricsSnapshot { p50_exec_ms: 40.0, ..MetricsSnapshot::default() };
-        let resp = reject_response(&SubmitError::QueueFull { cap: 8 }, &snap);
+        let resp = reject_response(&SubmitError::QueueFull { cap: 8 }, &snap, 8, 4);
         assert_eq!(resp.status, 429);
         assert!(resp.headers.iter().any(|(k, _)| k == "Retry-After"));
         let body = String::from_utf8(resp.body).unwrap();
@@ -107,7 +117,19 @@ mod tests {
 
     #[test]
     fn stopping_maps_to_503() {
-        let resp = reject_response(&SubmitError::Stopping, &MetricsSnapshot::default());
+        let resp = reject_response(&SubmitError::Stopping, &MetricsSnapshot::default(), 0, 1);
         assert_eq!(resp.status, 503);
+    }
+
+    #[test]
+    fn retry_after_scales_with_queue_depth() {
+        // p50 of 500ms per batch: empty queue quotes the 1s floor, 64
+        // queued at max_batch 8 is 8 batches = 4s, 160 queued is 10s
+        let snap = MetricsSnapshot { p50_exec_ms: 500.0, ..MetricsSnapshot::default() };
+        assert_eq!(retry_after_secs(&snap, 0, 8), 1);
+        assert_eq!(retry_after_secs(&snap, 64, 8), 4);
+        assert_eq!(retry_after_secs(&snap, 160, 8), 10);
+        // max_batch of 0 must not divide by zero
+        assert_eq!(retry_after_secs(&snap, 4, 0), 2);
     }
 }

@@ -1,0 +1,906 @@
+//! Readiness-driven connection engine for the gateway.
+//!
+//! N shard threads each own a listener (SO_REUSEPORT on Linux so the
+//! kernel spreads connections across per-shard accept queues; a cloned
+//! listener handle elsewhere), a `poll(2)` loop over their accepted
+//! connections, and an injector queue that batch-worker completion
+//! callbacks push finished responses into. No thread ever blocks on a
+//! client socket: reads are non-blocking and feed the resumable
+//! [`StreamParser`], writes are buffered and flushed on `POLLOUT`, and a
+//! peer that stops reading only stalls its own connection slot — never
+//! the accept path, never another connection.
+//!
+//! Cross-shard signaling uses a loopback TCP pair as a self-pipe (std
+//! has no eventfd): coordinator workers push a [`Completion`] and write
+//! one byte to the shard's waker, which `poll` observes as readability.
+
+use std::collections::VecDeque;
+use std::io::{ErrorKind, Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::Ordering;
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::obs::trace::{SpanKind, SpanRec};
+
+use super::http::{ParseEvent, Response, StreamParser};
+use super::{Action, GwShared, ReqCtx};
+
+/// How long an over-cap shed connection gets to pick up its 503 before
+/// the slot is reclaimed; a stalled peer never holds resources longer.
+const SHED_FLUSH_TIMEOUT: Duration = Duration::from_secs(2);
+
+/// Per-shard read scratch, reused across connections.
+const READ_CHUNK: usize = 64 * 1024;
+
+// ---------------------------------------------------------------------------
+// poll(2) binding
+// ---------------------------------------------------------------------------
+
+#[cfg(unix)]
+mod sys {
+    use std::os::raw::{c_int, c_short};
+
+    #[repr(C)]
+    #[derive(Clone, Copy)]
+    pub struct PollFd {
+        pub fd: c_int,
+        pub events: c_short,
+        pub revents: c_short,
+    }
+
+    pub const POLLIN: c_short = 0x001;
+    pub const POLLOUT: c_short = 0x004;
+    pub const POLLERR: c_short = 0x008;
+    pub const POLLHUP: c_short = 0x010;
+
+    #[cfg(target_os = "linux")]
+    type NfdsT = std::os::raw::c_ulong;
+    #[cfg(not(target_os = "linux"))]
+    type NfdsT = std::os::raw::c_uint;
+
+    extern "C" {
+        fn poll(fds: *mut PollFd, nfds: NfdsT, timeout: c_int) -> c_int;
+    }
+
+    /// `poll(2)`; a negative timeout blocks until an event. EINTR retries.
+    pub fn poll_fds(fds: &mut [PollFd], timeout_ms: i32) -> usize {
+        loop {
+            // SAFETY: the pointer/length pair describes a live mutable
+            // slice of #[repr(C)] pollfd records matching the kernel ABI;
+            // the kernel only writes `revents` within those bounds.
+            let rc = unsafe { poll(fds.as_mut_ptr(), fds.len() as NfdsT, timeout_ms) };
+            if rc >= 0 {
+                return rc as usize;
+            }
+            if std::io::Error::last_os_error().kind() != std::io::ErrorKind::Interrupted {
+                // unrecoverable poll failure: report nothing ready — the
+                // deadline sweep still makes progress
+                return 0;
+            }
+        }
+    }
+}
+
+#[cfg(not(unix))]
+mod sys {
+    //! Degraded fallback for platforms without `poll(2)`: after a short
+    //! sleep every descriptor is reported ready. The loop burns a little
+    //! CPU but stays correct, because all I/O is non-blocking and every
+    //! read/write path tolerates `WouldBlock`.
+
+    #[repr(C)]
+    #[derive(Clone, Copy)]
+    pub struct PollFd {
+        pub fd: i32,
+        pub events: i16,
+        pub revents: i16,
+    }
+
+    pub const POLLIN: i16 = 0x001;
+    pub const POLLOUT: i16 = 0x004;
+    pub const POLLERR: i16 = 0x008;
+    pub const POLLHUP: i16 = 0x010;
+
+    pub fn poll_fds(fds: &mut [PollFd], timeout_ms: i32) -> usize {
+        let ms = if timeout_ms < 0 { 2 } else { timeout_ms.min(2) };
+        std::thread::sleep(std::time::Duration::from_millis(ms as u64));
+        for f in fds.iter_mut() {
+            f.revents = f.events;
+        }
+        fds.len()
+    }
+}
+
+#[cfg(unix)]
+fn raw_fd(s: &TcpStream) -> i32 {
+    use std::os::unix::io::AsRawFd;
+    s.as_raw_fd()
+}
+
+#[cfg(unix)]
+fn raw_listener_fd(l: &TcpListener) -> i32 {
+    use std::os::unix::io::AsRawFd;
+    l.as_raw_fd()
+}
+
+#[cfg(not(unix))]
+fn raw_fd(_s: &TcpStream) -> i32 {
+    -1
+}
+
+#[cfg(not(unix))]
+fn raw_listener_fd(_l: &TcpListener) -> i32 {
+    -1
+}
+
+// ---------------------------------------------------------------------------
+// SO_REUSEPORT acceptor sharding (Linux)
+// ---------------------------------------------------------------------------
+
+#[cfg(target_os = "linux")]
+mod reuseport {
+    use std::net::{SocketAddr, TcpListener};
+    use std::os::raw::{c_int, c_uint};
+    use std::os::unix::io::FromRawFd;
+
+    const AF_INET: c_int = 2;
+    const SOCK_STREAM: c_int = 1;
+    const SOCK_CLOEXEC: c_int = 0o2000000;
+    const SOL_SOCKET: c_int = 1;
+    const SO_REUSEADDR: c_int = 2;
+    const SO_REUSEPORT: c_int = 15;
+
+    #[repr(C)]
+    struct SockaddrIn {
+        sin_family: u16,
+        /// network byte order
+        sin_port: u16,
+        /// network byte order
+        sin_addr: u32,
+        sin_zero: [u8; 8],
+    }
+
+    extern "C" {
+        fn socket(domain: c_int, ty: c_int, protocol: c_int) -> c_int;
+        fn setsockopt(
+            fd: c_int,
+            level: c_int,
+            name: c_int,
+            val: *const c_int,
+            len: c_uint,
+        ) -> c_int;
+        #[link_name = "bind"]
+        fn c_bind(fd: c_int, addr: *const SockaddrIn, len: c_uint) -> c_int;
+        fn listen(fd: c_int, backlog: c_int) -> c_int;
+        fn close(fd: c_int) -> c_int;
+    }
+
+    /// Bind an IPv4 listener with SO_REUSEPORT set, giving each shard its
+    /// own kernel accept queue. Returns `None` (the caller falls back to a
+    /// shared listener) for IPv6 addresses or on any syscall failure.
+    pub fn bind(addr: SocketAddr) -> Option<TcpListener> {
+        let SocketAddr::V4(v4) = addr else { return None };
+        // SAFETY: plain socket(2) call; the returned fd is checked below
+        // and either closed or moved into a TcpListener.
+        let fd = unsafe { socket(AF_INET, SOCK_STREAM | SOCK_CLOEXEC, 0) };
+        if fd < 0 {
+            return None;
+        }
+        let sa = SockaddrIn {
+            sin_family: AF_INET as u16,
+            sin_port: v4.port().to_be(),
+            // octets() are already network-ordered; keep their memory layout
+            sin_addr: u32::from_ne_bytes(v4.ip().octets()),
+            sin_zero: [0; 8],
+        };
+        let one: c_int = 1;
+        let optlen = std::mem::size_of::<c_int>() as c_uint;
+        let salen = std::mem::size_of::<SockaddrIn>() as c_uint;
+        // SAFETY: fd is a live socket we own; the option value and
+        // sockaddr pointers reference properly sized stack locals for the
+        // duration of each call.
+        let rc = unsafe {
+            let mut rc = setsockopt(fd, SOL_SOCKET, SO_REUSEADDR, &one, optlen);
+            if rc == 0 {
+                rc = setsockopt(fd, SOL_SOCKET, SO_REUSEPORT, &one, optlen);
+            }
+            if rc == 0 {
+                rc = c_bind(fd, &sa, salen);
+            }
+            if rc == 0 {
+                rc = listen(fd, 1024);
+            }
+            rc
+        };
+        if rc != 0 {
+            // SAFETY: fd came from socket(2) above and was never wrapped.
+            unsafe { close(fd) };
+            return None;
+        }
+        // SAFETY: fd is a freshly bound, listening socket; ownership moves
+        // into the TcpListener, which closes it on drop.
+        Some(unsafe { TcpListener::from_raw_fd(fd) })
+    }
+}
+
+/// Raise the process fd soft limit toward the hard limit when `need`
+/// concurrent sockets would not fit (CI runners default to 1024, far
+/// below a 10k-connection soak). Best effort; failure is harmless.
+#[cfg(target_os = "linux")]
+pub fn raise_nofile_limit(need: usize) {
+    #[repr(C)]
+    struct Rlimit {
+        cur: u64,
+        max: u64,
+    }
+    const RLIMIT_NOFILE: i32 = 7;
+    extern "C" {
+        fn getrlimit(resource: i32, rlim: *mut Rlimit) -> i32;
+        fn setrlimit(resource: i32, rlim: *const Rlimit) -> i32;
+    }
+    let mut lim = Rlimit { cur: 0, max: 0 };
+    // SAFETY: the pointer references a live, correctly laid out local
+    // struct the kernel fills in.
+    if unsafe { getrlimit(RLIMIT_NOFILE, &mut lim) } != 0 {
+        return;
+    }
+    // headroom for listeners, wakers, model files, and stdio
+    let want = need as u64 + 64;
+    if lim.cur >= want {
+        return;
+    }
+    let new = Rlimit { cur: want.min(lim.max), max: lim.max };
+    // SAFETY: the pointer references a live local struct; raising only
+    // the soft limit toward the hard limit needs no privileges.
+    let _ = unsafe { setrlimit(RLIMIT_NOFILE, &new) };
+}
+
+#[cfg(not(target_os = "linux"))]
+pub fn raise_nofile_limit(_need: usize) {}
+
+// ---------------------------------------------------------------------------
+// tokens, wakers, injectors
+// ---------------------------------------------------------------------------
+
+/// Identifies one connection slot in one shard. The generation guards
+/// against slot reuse: a completion for a connection that died while its
+/// request executed carries a stale generation and is dropped.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub struct ConnToken {
+    slot: u32,
+    gen: u32,
+}
+
+/// A finished response headed back to a shard's event loop.
+pub(super) struct Completion {
+    pub token: ConnToken,
+    pub resp: Response,
+    /// close after flushing (the request asked, or the gateway is draining)
+    pub close: bool,
+}
+
+/// Self-pipe: writing one byte makes the owning shard's `poll` return.
+struct Waker {
+    tx: TcpStream,
+}
+
+impl Waker {
+    fn wake(&self) {
+        // non-blocking 1-byte write; WouldBlock means wakes are already
+        // pending, which is just as good
+        let _ = (&self.tx).write(&[1]);
+    }
+}
+
+/// Build a connected loopback pair (std has no socketpair/eventfd). The
+/// accept side verifies the peer is our own connect, not a stranger that
+/// raced us to the ephemeral port.
+fn wake_pair() -> std::io::Result<(TcpStream, TcpStream)> {
+    let l = TcpListener::bind("127.0.0.1:0")?;
+    let tx = TcpStream::connect(l.local_addr()?)?;
+    let local = tx.local_addr()?;
+    loop {
+        let (rx, peer) = l.accept()?;
+        if peer == local {
+            tx.set_nonblocking(true)?;
+            rx.set_nonblocking(true)?;
+            return Ok((tx, rx));
+        }
+    }
+}
+
+/// Completion mailbox of one shard. Coordinator-worker callbacks push
+/// from their threads; the shard drains on its next loop iteration.
+pub struct Injector {
+    queue: Mutex<Vec<Completion>>,
+    waker: Waker,
+}
+
+impl Injector {
+    pub(super) fn push(&self, c: Completion) {
+        self.queue.lock().unwrap().push(c);
+        self.waker.wake();
+    }
+
+    /// Wake the shard without queueing anything (stop signal).
+    pub(super) fn wake(&self) {
+        self.waker.wake();
+    }
+
+    fn drain(&self) -> Vec<Completion> {
+        std::mem::take(&mut *self.queue.lock().unwrap())
+    }
+}
+
+// ---------------------------------------------------------------------------
+// listener sharding
+// ---------------------------------------------------------------------------
+
+/// One listener per shard: SO_REUSEPORT when available (per-shard kernel
+/// accept queues), otherwise clones of a single shared listener.
+fn shard_listeners(listen: &str, n: usize) -> Result<(SocketAddr, Vec<TcpListener>)> {
+    use std::net::ToSocketAddrs;
+    let addr = listen
+        .to_socket_addrs()
+        .with_context(|| format!("resolving {listen}"))?
+        .next()
+        .ok_or_else(|| anyhow!("no address for {listen}"))?;
+    #[cfg(target_os = "linux")]
+    if n > 1 {
+        if let Some(first) = reuseport::bind(addr) {
+            if let Ok(bound) = first.local_addr() {
+                // port 0 resolved by the first bind; siblings join it
+                let mut ls = vec![first];
+                while ls.len() < n {
+                    match reuseport::bind(bound) {
+                        Some(l) => ls.push(l),
+                        None => break,
+                    }
+                }
+                if ls.len() == n {
+                    for l in &ls {
+                        l.set_nonblocking(true).context("set_nonblocking")?;
+                    }
+                    return Ok((bound, ls));
+                }
+                // partial failure: drop what we made, fall through to the
+                // shared-listener path
+            }
+        }
+    }
+    let first = TcpListener::bind(addr).with_context(|| format!("binding {listen}"))?;
+    first.set_nonblocking(true).context("set_nonblocking")?;
+    let bound = first.local_addr()?;
+    let mut ls = vec![first];
+    while ls.len() < n {
+        ls.push(ls[0].try_clone().context("cloning listener")?);
+    }
+    Ok((bound, ls))
+}
+
+// ---------------------------------------------------------------------------
+// shard event loop
+// ---------------------------------------------------------------------------
+
+struct Conn {
+    stream: TcpStream,
+    parser: StreamParser,
+    /// outgoing chunks; `out_off` bytes of the front one already written
+    out: VecDeque<Vec<u8>>,
+    out_off: usize,
+    /// an infer is in flight: reads pause so responses stay ordered and a
+    /// flooding peer gets TCP backpressure instead of unbounded buffering
+    pending: bool,
+    close_after_flush: bool,
+    /// holds a ConnLimiter slot (over-cap shed connections do not)
+    holds_slot: bool,
+    /// over-cap 503: close at this deadline even if the peer never reads
+    shed_deadline: Option<Instant>,
+    last_activity: Instant,
+}
+
+impl Conn {
+    fn new(stream: TcpStream, max_body: usize, holds_slot: bool) -> Conn {
+        Conn {
+            stream,
+            parser: StreamParser::new(max_body),
+            out: VecDeque::new(),
+            out_off: 0,
+            pending: false,
+            close_after_flush: false,
+            holds_slot,
+            shed_deadline: None,
+            last_activity: Instant::now(),
+        }
+    }
+}
+
+/// Queue `resp` on `conn` as head + body chunks. The body `Vec` moves into
+/// the write queue — raw-f32 infer bodies are written from the single
+/// buffer the completion callback rendered, no further copies.
+fn queue_response(conn: &mut Conn, resp: Response, close: bool) {
+    conn.out.push_back(resp.head_bytes(close));
+    if !resp.body.is_empty() {
+        conn.out.push_back(resp.body);
+    }
+    if close {
+        conn.close_after_flush = true;
+    }
+}
+
+/// A running shard: its injector (for completions and stop wakes) plus
+/// the loop thread to join on shutdown.
+pub(super) struct ShardHandle {
+    pub injector: Arc<Injector>,
+    pub thread: JoinHandle<()>,
+}
+
+/// Bind `listen` and start `n` shard event loops over it.
+pub(super) fn spawn_shards(
+    listen: &str,
+    n: usize,
+    shared: &Arc<GwShared>,
+) -> Result<(SocketAddr, Vec<ShardHandle>)> {
+    let (addr, listeners) = shard_listeners(listen, n.max(1))?;
+    let mut shards = Vec::with_capacity(listeners.len());
+    for (i, listener) in listeners.into_iter().enumerate() {
+        let (wtx, wrx) = wake_pair().context("creating shard waker")?;
+        let injector =
+            Arc::new(Injector { queue: Mutex::new(Vec::new()), waker: Waker { tx: wtx } });
+        let shard = Shard {
+            shared: shared.clone(),
+            injector: injector.clone(),
+            listener: Some(listener),
+            waker_rx: wrx,
+            conns: Vec::new(),
+            gens: Vec::new(),
+            free: Vec::new(),
+            scratch: vec![0u8; READ_CHUNK],
+            draining: false,
+            drain_deadline: None,
+        };
+        let thread = std::thread::Builder::new()
+            .name(format!("dlrt-gw-{i}"))
+            .spawn(move || shard.run())
+            .context("spawning gateway shard")?;
+        shards.push(ShardHandle { injector, thread });
+    }
+    Ok((addr, shards))
+}
+
+struct Shard {
+    shared: Arc<GwShared>,
+    injector: Arc<Injector>,
+    listener: Option<TcpListener>,
+    waker_rx: TcpStream,
+    conns: Vec<Option<Conn>>,
+    /// per-slot generation, bumped on close so stale tokens miss
+    gens: Vec<u32>,
+    free: Vec<usize>,
+    scratch: Vec<u8>,
+    draining: bool,
+    drain_deadline: Option<Instant>,
+}
+
+impl Shard {
+    fn run(mut self) {
+        loop {
+            if !self.draining && self.shared.stop.load(Ordering::SeqCst) {
+                self.begin_drain();
+            }
+            for c in self.injector.drain() {
+                self.complete(c);
+            }
+            if self.draining {
+                if self.conns.iter().all(Option::is_none) {
+                    return;
+                }
+                if self.drain_deadline.is_some_and(|d| Instant::now() >= d) {
+                    return; // deadline: remaining connections drop here
+                }
+            }
+            self.poll_once();
+            self.sweep_deadlines();
+        }
+    }
+
+    /// Stop accepting (the listener drops, closing the port), close idle
+    /// connections, and mark the rest close-after-flush. Connections with
+    /// an infer in flight stay until their completion arrives — the
+    /// registry drain happening in parallel guarantees it will.
+    fn begin_drain(&mut self) {
+        self.draining = true;
+        self.drain_deadline = Some(Instant::now() + self.shared.cfg.drain_timeout);
+        self.listener = None;
+        for slot in 0..self.conns.len() {
+            let close_now = match self.conns[slot].as_ref() {
+                Some(c) => !c.pending && c.out.is_empty(),
+                None => false,
+            };
+            if close_now {
+                self.close_conn(slot);
+            } else if let Some(c) = self.conns[slot].as_mut() {
+                c.close_after_flush = true;
+            }
+        }
+    }
+
+    /// Deliver one completion pushed by a coordinator worker callback.
+    fn complete(&mut self, c: Completion) {
+        let slot = c.token.slot as usize;
+        if slot >= self.conns.len() || self.gens[slot] != c.token.gen {
+            return; // connection died while the batch executed
+        }
+        let close = c.close || self.draining;
+        {
+            let Some(conn) = self.conns[slot].as_mut() else { return };
+            conn.pending = false;
+            conn.last_activity = Instant::now();
+            queue_response(conn, c.resp, close);
+        }
+        self.flush(slot);
+        // pipelined bytes may already hold the next request
+        self.advance(slot);
+    }
+
+    fn poll_timeout_ms(&self) -> i32 {
+        let now = Instant::now();
+        let mut next: Option<Instant> = None;
+        for c in self.conns.iter().flatten() {
+            let dl = match c.shed_deadline {
+                Some(d) => d,
+                // pending connections are woken by their completion
+                None if c.pending => continue,
+                None => c.last_activity + self.shared.cfg.idle_timeout,
+            };
+            next = Some(next.map_or(dl, |n| n.min(dl)));
+        }
+        if let Some(d) = self.drain_deadline {
+            next = Some(next.map_or(d, |n| n.min(d)));
+        }
+        match next {
+            // +1 rounds up so we don't spin on a sub-ms remainder
+            Some(d) => d.saturating_duration_since(now).as_millis().min(60_000) as i32 + 1,
+            None => -1,
+        }
+    }
+
+    fn poll_once(&mut self) {
+        let mut fds: Vec<sys::PollFd> = Vec::with_capacity(self.conns.len() + 2);
+        fds.push(sys::PollFd { fd: raw_fd(&self.waker_rx), events: sys::POLLIN, revents: 0 });
+        let listener_at = self.listener.as_ref().map(|l| {
+            fds.push(sys::PollFd { fd: raw_listener_fd(l), events: sys::POLLIN, revents: 0 });
+            fds.len() - 1
+        });
+        let base = fds.len();
+        let mut slots: Vec<usize> = Vec::with_capacity(self.conns.len());
+        for (slot, conn) in self.conns.iter().enumerate() {
+            let Some(c) = conn else { continue };
+            let mut ev = 0;
+            if !c.pending && !c.close_after_flush && c.shed_deadline.is_none() {
+                ev |= sys::POLLIN;
+            }
+            if !c.out.is_empty() {
+                ev |= sys::POLLOUT;
+            }
+            // POLLERR/POLLHUP are reported regardless of `events`
+            fds.push(sys::PollFd { fd: raw_fd(&c.stream), events: ev, revents: 0 });
+            slots.push(slot);
+        }
+        if sys::poll_fds(&mut fds, self.poll_timeout_ms()) == 0 {
+            return;
+        }
+        if fds[0].revents != 0 {
+            self.drain_waker();
+        }
+        if let Some(i) = listener_at {
+            if fds[i].revents != 0 {
+                self.accept_ready();
+            }
+        }
+        for (k, &slot) in slots.iter().enumerate() {
+            let re = fds[base + k].revents;
+            if re == 0 {
+                continue;
+            }
+            if re & sys::POLLERR != 0 {
+                self.close_conn(slot);
+                continue;
+            }
+            if re & sys::POLLOUT != 0 {
+                self.flush(slot);
+            }
+            if re & (sys::POLLIN | sys::POLLHUP) != 0 {
+                self.read_ready(slot);
+            }
+        }
+    }
+
+    fn drain_waker(&mut self) {
+        let mut buf = [0u8; 64];
+        loop {
+            match self.waker_rx.read(&mut buf) {
+                Ok(0) => return, // write side gone (gateway teardown)
+                Ok(_) => continue,
+                Err(_) => return, // WouldBlock: drained
+            }
+        }
+    }
+
+    fn accept_ready(&mut self) {
+        loop {
+            let Some(listener) = self.listener.as_ref() else { return };
+            match listener.accept() {
+                Ok((stream, _peer)) => {
+                    if stream.set_nonblocking(true).is_err() {
+                        continue;
+                    }
+                    let _ = stream.set_nodelay(true);
+                    let seq = self.shared.stats.connections.fetch_add(1, Ordering::Relaxed);
+                    self.shared.trace.record(SpanRec {
+                        kind: SpanKind::Accept,
+                        req: seq,
+                        ts_us: self.shared.trace.now_us(),
+                        dur_us: 0,
+                        batch_index: 0,
+                        batch_size: 0,
+                        status: 0,
+                    });
+                    let admitted = self.shared.conns.try_acquire();
+                    let mut conn = Conn::new(stream, self.shared.cfg.max_body_bytes, admitted);
+                    if !admitted {
+                        // over the connection cap: shed WITHOUT blocking —
+                        // the 503 is queued and flushed by POLLOUT; a peer
+                        // that never reads it is cut off at the deadline
+                        let resp = Response::text(503, "too many connections\n");
+                        self.shared.stats.record(resp.status);
+                        queue_response(&mut conn, resp, true);
+                        conn.shed_deadline = Some(Instant::now() + SHED_FLUSH_TIMEOUT);
+                    }
+                    let slot = self.insert(conn);
+                    if self.conns[slot].as_ref().is_some_and(|c| !c.out.is_empty()) {
+                        self.flush(slot);
+                    }
+                }
+                Err(e) if e.kind() == ErrorKind::WouldBlock => return,
+                Err(_) => return,
+            }
+        }
+    }
+
+    fn insert(&mut self, conn: Conn) -> usize {
+        match self.free.pop() {
+            Some(slot) => {
+                self.conns[slot] = Some(conn);
+                slot
+            }
+            None => {
+                self.conns.push(Some(conn));
+                self.gens.push(0);
+                self.conns.len() - 1
+            }
+        }
+    }
+
+    fn close_conn(&mut self, slot: usize) {
+        if let Some(c) = self.conns[slot].take() {
+            if c.holds_slot {
+                self.shared.conns.release();
+            }
+            self.gens[slot] = self.gens[slot].wrapping_add(1);
+            self.free.push(slot);
+        }
+    }
+
+    fn read_ready(&mut self, slot: usize) {
+        let mut saw_eof = false;
+        loop {
+            let Some(c) = self.conns[slot].as_mut() else { return };
+            if c.pending || c.close_after_flush || c.shed_deadline.is_some() {
+                break;
+            }
+            match c.stream.read(&mut self.scratch) {
+                Ok(0) => {
+                    saw_eof = true;
+                    break;
+                }
+                Ok(n) => {
+                    c.last_activity = Instant::now();
+                    c.parser.feed(&self.scratch[..n]);
+                }
+                Err(e) if e.kind() == ErrorKind::WouldBlock => break,
+                Err(e) if e.kind() == ErrorKind::Interrupted => continue,
+                Err(_) => {
+                    self.close_conn(slot);
+                    return;
+                }
+            }
+        }
+        self.advance(slot);
+        if saw_eof {
+            // peer closed: anything parseable has been dispatched; the
+            // socket can produce no further requests
+            self.close_conn(slot);
+        }
+    }
+
+    /// Drain parser events: dispatch complete requests, answer protocol
+    /// errors, stop at the first in-flight infer (response ordering).
+    fn advance(&mut self, slot: usize) {
+        loop {
+            let token = ConnToken { slot: slot as u32, gen: self.gens[slot] };
+            let event = {
+                let Some(c) = self.conns[slot].as_mut() else { return };
+                if c.pending || c.close_after_flush {
+                    return;
+                }
+                match c.parser.next() {
+                    Ok(Some(ev)) => ev,
+                    Ok(None) => return,
+                    Err(_) => {
+                        let resp = Response::text(400, "malformed request\n");
+                        self.shared.stats.record(resp.status);
+                        queue_response(c, resp, true);
+                        self.flush(slot);
+                        return;
+                    }
+                }
+            };
+            match event {
+                ParseEvent::Request(req) => {
+                    let close = req.close || self.draining;
+                    let ctx = ReqCtx { token, injector: self.injector.clone() };
+                    match super::dispatch(&self.shared, req, ctx) {
+                        Action::Respond(resp) => {
+                            let Some(c) = self.conns[slot].as_mut() else { return };
+                            queue_response(c, resp, close);
+                        }
+                        Action::Pending => {
+                            let Some(c) = self.conns[slot].as_mut() else { return };
+                            c.pending = true;
+                        }
+                    }
+                }
+                ParseEvent::TooLarge(n) => {
+                    let resp = Response::text(413, &format!("body of {n} bytes over limit\n"));
+                    self.shared.stats.record(resp.status);
+                    let Some(c) = self.conns[slot].as_mut() else { return };
+                    queue_response(c, resp, true);
+                }
+                ParseEvent::Unsupported(what) => {
+                    let resp = Response::text(501, &format!("{what}\n"));
+                    self.shared.stats.record(resp.status);
+                    let Some(c) = self.conns[slot].as_mut() else { return };
+                    queue_response(c, resp, true);
+                }
+            }
+            self.flush(slot);
+        }
+    }
+
+    /// Write queued chunks until the socket would block; close once empty
+    /// if the connection is marked close-after-flush (or we are draining
+    /// and nothing is in flight).
+    fn flush(&mut self, slot: usize) {
+        loop {
+            let Some(c) = self.conns[slot].as_mut() else { return };
+            let Some(front) = c.out.front() else { break };
+            match c.stream.write(&front[c.out_off..]) {
+                Ok(0) => {
+                    self.close_conn(slot);
+                    return;
+                }
+                Ok(n) => {
+                    c.out_off += n;
+                    if c.out_off >= front.len() {
+                        c.out.pop_front();
+                        c.out_off = 0;
+                    }
+                }
+                Err(e) if e.kind() == ErrorKind::WouldBlock => return,
+                Err(e) if e.kind() == ErrorKind::Interrupted => continue,
+                Err(_) => {
+                    self.close_conn(slot);
+                    return;
+                }
+            }
+        }
+        let Some(c) = self.conns[slot].as_mut() else { return };
+        if c.out.is_empty() && (c.close_after_flush || (self.draining && !c.pending)) {
+            self.close_conn(slot);
+        }
+    }
+
+    fn sweep_deadlines(&mut self) {
+        let now = Instant::now();
+        let idle = self.shared.cfg.idle_timeout;
+        for slot in 0..self.conns.len() {
+            let expired = match self.conns[slot].as_ref() {
+                Some(c) => match c.shed_deadline {
+                    Some(d) => now >= d,
+                    None => {
+                        !c.pending && now.saturating_duration_since(c.last_activity) >= idle
+                    }
+                },
+                None => false,
+            };
+            if expired {
+                self.close_conn(slot);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn wake_pair_signals_and_drains() {
+        let (tx, mut rx) = wake_pair().unwrap();
+        let w = Waker { tx };
+        w.wake();
+        w.wake();
+        // non-blocking read sees the bytes (possibly coalesced)
+        let mut buf = [0u8; 8];
+        let deadline = Instant::now() + Duration::from_secs(5);
+        let n = loop {
+            match rx.read(&mut buf) {
+                Ok(n) => break n,
+                Err(e) if e.kind() == ErrorKind::WouldBlock => {
+                    assert!(Instant::now() < deadline, "wake byte never arrived");
+                    std::thread::sleep(Duration::from_millis(1));
+                }
+                Err(e) => panic!("{e}"),
+            }
+        };
+        assert!(n >= 1);
+    }
+
+    #[test]
+    fn injector_queue_roundtrip() {
+        let (tx, _rx) = wake_pair().unwrap();
+        let inj = Injector { queue: Mutex::new(Vec::new()), waker: Waker { tx } };
+        inj.push(Completion {
+            token: ConnToken { slot: 3, gen: 7 },
+            resp: Response::text(200, "ok\n"),
+            close: false,
+        });
+        let got = inj.drain();
+        assert_eq!(got.len(), 1);
+        assert_eq!(got[0].token, ConnToken { slot: 3, gen: 7 });
+        assert!(inj.drain().is_empty());
+    }
+
+    #[test]
+    fn shard_listeners_share_one_port() {
+        let (addr, ls) = shard_listeners("127.0.0.1:0", 3).unwrap();
+        assert_eq!(ls.len(), 3);
+        for l in &ls {
+            assert_eq!(l.local_addr().unwrap().port(), addr.port());
+        }
+        // the port actually accepts
+        let _c = TcpStream::connect(addr).unwrap();
+    }
+
+    #[test]
+    fn nofile_limit_raise_is_harmless() {
+        raise_nofile_limit(64); // must never panic or error loudly
+    }
+
+    #[test]
+    fn response_chunks_preserve_wire_bytes() {
+        let resp = Response::bytes(200, vec![1, 2, 3]).header("X-T", "v");
+        let mut whole = Vec::new();
+        resp.write_to(&mut whole, false).unwrap();
+        let mut conn_out: Vec<u8> = Vec::new();
+        let head = resp.head_bytes(false);
+        conn_out.extend_from_slice(&head);
+        conn_out.extend_from_slice(&resp.body);
+        assert_eq!(whole, conn_out, "chunked queueing must match write_to bytes");
+    }
+}

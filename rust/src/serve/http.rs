@@ -5,8 +5,13 @@
 //! Deliberately small: `Content-Length` bodies only (no chunked encoding),
 //! keep-alive by default, `Connection: close` honored. That subset is what
 //! `curl`, Prometheus scrapers, and our own loadgen speak.
+//!
+//! Server-side parsing is a *resumable* state machine ([`StreamParser`]):
+//! the event loop feeds it whatever bytes a non-blocking read produced and
+//! it yields complete requests as they materialize — no thread ever blocks
+//! waiting for a slow peer's next byte.
 
-use std::io::{BufRead, BufReader, ErrorKind, Read, Write};
+use std::io::{BufRead, BufReader, Read, Write};
 use std::net::TcpStream;
 use std::time::Duration;
 
@@ -14,13 +19,6 @@ use anyhow::{anyhow, bail, Context, Result};
 
 /// Cap on request-line + header bytes (defense against garbage peers).
 pub const MAX_HEADER_BYTES: usize = 16 * 1024;
-
-/// How many consecutive socket-timeout reads to tolerate *mid-message*
-/// (headers/body) before giving up on a stalled peer. With the gateway's
-/// 500ms read timeout this allows ~60s of stall, so slow links finish
-/// instead of getting a spurious 400. (Between requests the caller handles
-/// timeouts itself via [`ReadOutcome::IdleTimeout`].)
-const MAX_MID_MESSAGE_STALLS: u32 = 120;
 
 /// The raw wire format for tensor data: f32 little-endian. Defined once
 /// here, next to the framing code, and shared by the gateway handlers,
@@ -122,7 +120,10 @@ impl Response {
         self
     }
 
-    pub fn write_to(&self, w: &mut impl Write, close: bool) -> std::io::Result<()> {
+    /// Serialized status line + headers (everything before the body). The
+    /// event loop queues this and the body as two separate chunks, so the
+    /// body `Vec` is moved into the write queue without a copy.
+    pub fn head_bytes(&self, close: bool) -> Vec<u8> {
         let mut head = format!(
             "HTTP/1.1 {} {}\r\nContent-Type: {}\r\nContent-Length: {}\r\nConnection: {}\r\n",
             self.status,
@@ -138,7 +139,11 @@ impl Response {
             head.push_str("\r\n");
         }
         head.push_str("\r\n");
-        w.write_all(head.as_bytes())?;
+        head.into_bytes()
+    }
+
+    pub fn write_to(&self, w: &mut impl Write, close: bool) -> std::io::Result<()> {
+        w.write_all(&self.head_bytes(close))?;
         w.write_all(&self.body)?;
         w.flush()
     }
@@ -165,16 +170,12 @@ pub fn reason(status: u16) -> &'static str {
 // server-side parsing
 // ---------------------------------------------------------------------------
 
-/// Outcome of trying to read one request off a connection.
+/// One event the [`StreamParser`] can yield. Malformed input (bad request
+/// line, bad header, bad `Content-Length`, oversized headers) comes back as
+/// `Err` from [`StreamParser::next`]; the caller responds 400 and closes.
 #[derive(Debug)]
-pub enum ReadOutcome {
+pub enum ParseEvent {
     Request(Request),
-    /// peer closed cleanly between requests
-    Eof,
-    /// read timed out before the request line completed — the caller
-    /// decides whether to keep waiting (idle keep-alive) or close;
-    /// partially-read bytes stay in `line` and survive the retry
-    IdleTimeout,
     /// declared body exceeds the limit; respond 413 and close
     TooLarge(usize),
     /// request uses a feature this server does not implement (e.g.
@@ -182,105 +183,120 @@ pub enum ReadOutcome {
     Unsupported(&'static str),
 }
 
-/// Read one line tolerating mid-line socket timeouts (the peer is slow,
-/// not gone). Returns the bytes appended; 0 means EOF.
-fn read_line_stalls<R: BufRead>(r: &mut R, line: &mut String) -> std::io::Result<usize> {
-    let start = line.len();
-    let mut stalls = 0u32;
-    let mut last_len = line.len();
-    loop {
-        match r.read_line(line) {
-            Ok(0) => return Ok(line.len() - start), // EOF (possibly mid-line)
-            Ok(_) => {
-                if line.ends_with('\n') {
-                    return Ok(line.len() - start);
-                }
-                // partial without newline: keep reading
-            }
-            Err(e) if e.kind() == ErrorKind::Interrupted => {}
-            Err(e)
-                if (e.kind() == ErrorKind::WouldBlock || e.kind() == ErrorKind::TimedOut)
-                    && stalls < MAX_MID_MESSAGE_STALLS =>
-            {
-                stalls += 1;
-            }
-            Err(e) => return Err(e),
-        }
-        // slow-but-alive peers reset the stall budget on any progress
-        // (mirrors read_full_stalls)
-        if line.len() > last_len {
-            last_len = line.len();
-            stalls = 0;
-        }
-    }
+enum ParseState {
+    /// accumulating request-line + headers
+    Head,
+    /// head parsed; `need` body bytes outstanding
+    Body { req: Box<Request>, need: usize },
 }
 
-/// `read_exact` tolerating mid-body socket timeouts.
-fn read_full_stalls<R: Read>(r: &mut R, buf: &mut [u8]) -> std::io::Result<()> {
-    let mut filled = 0usize;
-    let mut stalls = 0u32;
-    while filled < buf.len() {
-        match r.read(&mut buf[filled..]) {
-            Ok(0) => return Err(std::io::Error::from(ErrorKind::UnexpectedEof)),
-            Ok(n) => {
-                filled += n;
-                stalls = 0;
-            }
-            Err(e) if e.kind() == ErrorKind::Interrupted => {}
-            Err(e)
-                if (e.kind() == ErrorKind::WouldBlock || e.kind() == ErrorKind::TimedOut)
-                    && stalls < MAX_MID_MESSAGE_STALLS =>
-            {
-                stalls += 1;
-            }
-            Err(e) => return Err(e),
-        }
-    }
-    Ok(())
-}
-
-/// Read one request. `line` is caller-owned so a timeout mid-request-line
-/// keeps the partial bytes for the next attempt (it is cleared only after
-/// the request line parses).
-pub fn read_request<R: BufRead>(
-    r: &mut R,
-    line: &mut String,
+/// Resumable HTTP/1.1 request parser. [`feed`](StreamParser::feed) it the
+/// bytes a non-blocking read produced, then drain [`next`](StreamParser::next)
+/// until it returns `Ok(None)` — pipelined requests yield multiple events
+/// from one feed, and a request split across many reads completes when its
+/// last byte arrives.
+pub struct StreamParser {
+    buf: Vec<u8>,
+    state: ParseState,
     max_body: usize,
-) -> Result<ReadOutcome> {
-    match r.read_line(line) {
-        Ok(0) => return Ok(ReadOutcome::Eof),
-        Ok(_) => {}
-        Err(e) if e.kind() == ErrorKind::WouldBlock || e.kind() == ErrorKind::TimedOut => {
-            return Ok(ReadOutcome::IdleTimeout)
+}
+
+/// Byte offset just past the `\r\n\r\n` (or bare `\n\n`) head terminator.
+fn find_head_end(buf: &[u8]) -> Option<usize> {
+    let mut i = 0;
+    while i < buf.len() {
+        if buf[i] != b'\n' {
+            i += 1;
+            continue;
         }
-        Err(e) => return Err(e.into()),
+        // a newline followed by an (optionally CR-prefixed) blank line
+        if buf[i + 1..].starts_with(b"\r\n") {
+            return Some(i + 3);
+        }
+        if buf[i + 1..].starts_with(b"\n") {
+            return Some(i + 2);
+        }
+        i += 1;
     }
-    if !line.ends_with('\n') {
-        // timed out (or EOF'd) mid-line: report idle, keep partial bytes
-        return Ok(ReadOutcome::IdleTimeout);
+    None
+}
+
+impl StreamParser {
+    pub fn new(max_body: usize) -> StreamParser {
+        StreamParser { buf: Vec::new(), state: ParseState::Head, max_body }
     }
+
+    /// Append bytes read off the socket.
+    pub fn feed(&mut self, bytes: &[u8]) {
+        self.buf.extend_from_slice(bytes);
+    }
+
+    /// True when the peer is mid-message (bytes buffered or a body pending)
+    /// — an EOF here is a truncated request, not a clean close.
+    pub fn mid_message(&self) -> bool {
+        !self.buf.is_empty() || matches!(self.state, ParseState::Body { .. })
+    }
+
+    /// Try to complete one event from the buffered bytes.
+    pub fn next(&mut self) -> Result<Option<ParseEvent>> {
+        loop {
+            match &mut self.state {
+                ParseState::Head => {
+                    let Some(head_end) = find_head_end(&self.buf) else {
+                        if self.buf.len() > MAX_HEADER_BYTES {
+                            bail!("headers exceed {MAX_HEADER_BYTES} bytes");
+                        }
+                        return Ok(None);
+                    };
+                    if head_end > MAX_HEADER_BYTES {
+                        bail!("headers exceed {MAX_HEADER_BYTES} bytes");
+                    }
+                    let (event, need) = parse_head(&self.buf[..head_end], self.max_body)?;
+                    self.buf.drain(..head_end);
+                    match (event, need) {
+                        (ParseEvent::Request(req), n) if n > 0 => {
+                            self.state = ParseState::Body { req: Box::new(req), need: n };
+                            // fall through: the body may already be buffered
+                        }
+                        (event, _) => return Ok(Some(event)),
+                    }
+                }
+                ParseState::Body { need, .. } => {
+                    if self.buf.len() < *need {
+                        return Ok(None);
+                    }
+                    let need = *need;
+                    let rest = self.buf.split_off(need);
+                    let body = std::mem::replace(&mut self.buf, rest);
+                    let ParseState::Body { mut req, .. } =
+                        std::mem::replace(&mut self.state, ParseState::Head)
+                    else {
+                        unreachable!("state checked above");
+                    };
+                    req.body = body;
+                    return Ok(Some(ParseEvent::Request(*req)));
+                }
+            }
+        }
+    }
+}
+
+/// Parse a complete request head (everything through the blank line).
+/// Returns the event plus the body length still to read (0 unless the event
+/// is a `Request` with a `Content-Length`).
+fn parse_head(head: &[u8], max_body: usize) -> Result<(ParseEvent, usize)> {
+    let text = std::str::from_utf8(head).map_err(|_| anyhow!("non-utf8 request head"))?;
+    let mut lines = text.lines();
+    let line = lines.next().unwrap_or("");
     let mut parts = line.split_whitespace();
     let (method, path, version) = match (parts.next(), parts.next(), parts.next()) {
-        (Some(m), Some(p), Some(v)) => (m.to_string(), p.to_string(), v.to_string()),
+        (Some(m), Some(p), Some(v)) => (m, p, v),
         _ => bail!("malformed request line {line:?}"),
     };
-    line.clear();
-    let mut req = Request::new(&method, &path);
+    let mut req = Request::new(method, path);
     req.close = version == "HTTP/1.0";
-
-    // headers until the blank line (stall-tolerant: we are mid-message)
-    let mut header_bytes = 0usize;
-    loop {
-        let mut h = String::new();
-        let n = read_line_stalls(r, &mut h).context("reading header")?;
-        if n == 0 {
-            bail!("connection closed mid-headers");
-        }
-        header_bytes += n;
-        if header_bytes > MAX_HEADER_BYTES {
-            bail!("headers exceed {MAX_HEADER_BYTES} bytes");
-        }
-        let h = h.trim_end_matches(&['\r', '\n'][..]);
+    for h in lines {
+        let h = h.trim_end_matches('\r');
         if h.is_empty() {
             break;
         }
@@ -295,22 +311,16 @@ pub fn read_request<R: BufRead>(
     if req.header("transfer-encoding").is_some() {
         // chunked (or any transfer coding) is not implemented; RFC 9112
         // says a server may respond 501 — and must not guess at framing
-        return Ok(ReadOutcome::Unsupported("Transfer-Encoding is not supported"));
+        return Ok((ParseEvent::Unsupported("Transfer-Encoding is not supported"), 0));
     }
-
     let len = match req.header("content-length") {
         Some(v) => v.trim().parse::<usize>().context("bad content-length")?,
         None => 0,
     };
     if len > max_body {
-        return Ok(ReadOutcome::TooLarge(len));
+        return Ok((ParseEvent::TooLarge(len), 0));
     }
-    if len > 0 {
-        let mut body = vec![0u8; len];
-        read_full_stalls(r, &mut body).context("reading body")?;
-        req.body = body;
-    }
-    Ok(ReadOutcome::Request(req))
+    Ok((ParseEvent::Request(req), len))
 }
 
 // ---------------------------------------------------------------------------
@@ -499,17 +509,17 @@ mod tests {
     use super::*;
     use std::io::Cursor;
 
-    fn parse(raw: &[u8]) -> Result<ReadOutcome> {
-        let mut r = Cursor::new(raw.to_vec());
-        let mut line = String::new();
-        read_request(&mut r, &mut line, 1024)
+    fn parse(raw: &[u8]) -> Result<Option<ParseEvent>> {
+        let mut p = StreamParser::new(1024);
+        p.feed(raw);
+        p.next()
     }
 
     #[test]
     fn parses_request_with_body() {
         let raw = b"POST /v1/models/m/infer HTTP/1.1\r\nHost: x\r\nContent-Type: application/json\r\nContent-Length: 4\r\n\r\nabcd";
         match parse(raw).unwrap() {
-            ReadOutcome::Request(req) => {
+            Some(ParseEvent::Request(req)) => {
                 assert_eq!(req.method, "POST");
                 assert_eq!(req.path, "/v1/models/m/infer");
                 assert_eq!(req.header("content-type"), Some("application/json"));
@@ -523,29 +533,65 @@ mod tests {
     #[test]
     fn keep_alive_parses_back_to_back_requests() {
         let raw = b"GET /healthz HTTP/1.1\r\n\r\nGET /metrics HTTP/1.1\r\nConnection: close\r\n\r\n";
-        let mut r = Cursor::new(raw.to_vec());
-        let mut line = String::new();
-        let first = match read_request(&mut r, &mut line, 1024).unwrap() {
-            ReadOutcome::Request(req) => req,
+        let mut p = StreamParser::new(1024);
+        p.feed(raw);
+        let first = match p.next().unwrap() {
+            Some(ParseEvent::Request(req)) => req,
             other => panic!("{other:?}"),
         };
         assert_eq!(first.path, "/healthz");
         assert!(!first.close);
-        let second = match read_request(&mut r, &mut line, 1024).unwrap() {
-            ReadOutcome::Request(req) => req,
+        let second = match p.next().unwrap() {
+            Some(ParseEvent::Request(req)) => req,
             other => panic!("{other:?}"),
         };
         assert_eq!(second.path, "/metrics");
         assert!(second.close);
-        assert!(matches!(read_request(&mut r, &mut line, 1024).unwrap(), ReadOutcome::Eof));
+        assert!(p.next().unwrap().is_none());
+        assert!(!p.mid_message());
+    }
+
+    #[test]
+    fn resumes_across_arbitrary_feed_boundaries() {
+        let raw: &[u8] = b"POST /x HTTP/1.1\r\nContent-Length: 5\r\n\r\nhelloGET /y HTTP/1.1\r\n\r\n";
+        // every split point must yield the same two requests
+        for cut in 1..raw.len() {
+            let mut p = StreamParser::new(1024);
+            p.feed(&raw[..cut]);
+            let mut got = Vec::new();
+            while let Some(ev) = p.next().unwrap() {
+                got.push(ev);
+            }
+            if got.len() < 2 {
+                assert!(p.mid_message(), "cut={cut} left no partial state");
+            }
+            p.feed(&raw[cut..]);
+            while let Some(ev) = p.next().unwrap() {
+                got.push(ev);
+            }
+            assert_eq!(got.len(), 2, "cut={cut}");
+            match (&got[0], &got[1]) {
+                (ParseEvent::Request(a), ParseEvent::Request(b)) => {
+                    assert_eq!(a.path, "/x");
+                    assert_eq!(a.body, b"hello");
+                    assert_eq!(b.path, "/y");
+                }
+                other => panic!("cut={cut}: {other:?}"),
+            }
+            assert!(!p.mid_message());
+        }
     }
 
     #[test]
     fn rejects_malformed_and_limits_body() {
         assert!(parse(b"NOT-HTTP\r\n\r\n").is_err());
         let big = b"POST /x HTTP/1.1\r\nContent-Length: 9999\r\n\r\n";
-        assert!(matches!(parse(big).unwrap(), ReadOutcome::TooLarge(9999)));
+        assert!(matches!(parse(big).unwrap(), Some(ParseEvent::TooLarge(9999))));
         assert!(parse(b"POST /x HTTP/1.1\r\nContent-Length: nope\r\n\r\n").is_err());
+        // unterminated head past the cap errors instead of buffering forever
+        let mut p = StreamParser::new(1024);
+        p.feed(&vec![b'A'; MAX_HEADER_BYTES + 2]);
+        assert!(p.next().is_err());
     }
 
     #[test]
@@ -559,7 +605,7 @@ mod tests {
     fn rejects_transfer_encoding_as_unsupported() {
         let raw = b"POST /x HTTP/1.1\r\nTransfer-Encoding: chunked\r\n\r\n5\r\nhello\r\n0\r\n\r\n";
         match parse(raw).unwrap() {
-            ReadOutcome::Unsupported(_) => {}
+            Some(ParseEvent::Unsupported(_)) => {}
             other => panic!("{other:?}"),
         }
     }
@@ -567,7 +613,12 @@ mod tests {
     #[test]
     fn http10_and_connection_close_set_close() {
         match parse(b"GET / HTTP/1.0\r\n\r\n").unwrap() {
-            ReadOutcome::Request(req) => assert!(req.close),
+            Some(ParseEvent::Request(req)) => assert!(req.close),
+            other => panic!("{other:?}"),
+        }
+        // bare-LF line endings are tolerated too
+        match parse(b"GET / HTTP/1.1\nConnection: close\n\n").unwrap() {
+            Some(ParseEvent::Request(req)) => assert!(req.close),
             other => panic!("{other:?}"),
         }
     }

@@ -38,6 +38,10 @@ pub struct LoadgenConfig {
     /// send JSON bodies instead of raw f32 bytes
     pub json: bool,
     pub timeout: Duration,
+    /// total keep-alive connections spread round-robin across senders
+    /// (0 = one per sender); lets a small sender pool exercise thousands
+    /// of concurrent sockets against the event-driven accept path
+    pub conns: usize,
 }
 
 impl Default for LoadgenConfig {
@@ -50,6 +54,7 @@ impl Default for LoadgenConfig {
             rate: 0.0,
             json: false,
             timeout: Duration::from_secs(30),
+            conns: 0,
         }
     }
 }
@@ -72,12 +77,15 @@ pub struct LoadgenReport {
 }
 
 impl LoadgenReport {
-    /// Fraction of sent requests the gateway shed with 429.
+    /// Fraction of sent requests the gateway shed — 429 (queue full) plus
+    /// 503 (connection cap / draining) over everything sent.
     pub fn shed_rate(&self) -> f64 {
         if self.sent == 0 {
             return 0.0;
         }
-        *self.status_counts.get(&429).unwrap_or(&0) as f64 / self.sent as f64
+        let shed = self.status_counts.get(&429).unwrap_or(&0)
+            + self.status_counts.get(&503).unwrap_or(&0);
+        shed as f64 / self.sent as f64
     }
 
     /// Machine-readable run summary (`dlrt client --out`).
@@ -94,6 +102,8 @@ impl LoadgenReport {
             ("transport_errors", num(self.transport_errors as f64)),
             ("status_counts", Json::Obj(statuses)),
             ("shed_rate", num(self.shed_rate())),
+            ("shed_429", num(*self.status_counts.get(&429).unwrap_or(&0) as f64)),
+            ("shed_503", num(*self.status_counts.get(&503).unwrap_or(&0) as f64)),
             ("p50_ms", num(self.p50_ms)),
             ("p95_ms", num(self.p95_ms)),
             ("p99_ms", num(self.p99_ms)),
@@ -143,11 +153,18 @@ fn discover(cfg: &LoadgenConfig) -> Result<(String, Vec<usize>)> {
 }
 
 pub fn run(cfg: &LoadgenConfig) -> Result<LoadgenReport> {
+    // opening thousands of client sockets trips the default soft FD limit
+    super::event::raise_nofile_limit(cfg.conns.max(cfg.concurrency));
     let (model, shape) = discover(cfg).context("discovering target model")?;
     let (content_type, body) = build_body(&shape, cfg.json);
     let path = format!("/v1/models/{model}/infer");
     let total = cfg.requests;
     let senders = cfg.concurrency.max(1);
+    // connections per sender: each sender owns a disjoint slice of the
+    // `conns` pool and round-robins its requests across them, so `conns`
+    // keep-alive sockets stay live without `conns` OS threads
+    let per_sender =
+        if cfg.conns == 0 { 1 } else { cfg.conns.div_ceil(senders).max(1) };
     let interval = if cfg.rate > 0.0 {
         Some(Duration::from_secs_f64(1.0 / cfg.rate))
     } else {
@@ -162,7 +179,9 @@ pub fn run(cfg: &LoadgenConfig) -> Result<LoadgenReport> {
     std::thread::scope(|scope| {
         for _ in 0..senders {
             scope.spawn(|| {
-                let mut client = HttpClient::new(&cfg.addr, cfg.timeout);
+                let mut clients: Vec<HttpClient> =
+                    (0..per_sender).map(|_| HttpClient::new(&cfg.addr, cfg.timeout)).collect();
+                let mut turn = 0usize;
                 let mut local: Vec<(u16, f64)> = Vec::new();
                 loop {
                     let i = next.fetch_add(1, Ordering::Relaxed);
@@ -183,6 +202,8 @@ pub fn run(cfg: &LoadgenConfig) -> Result<LoadgenReport> {
                         None => Instant::now(),
                     };
                     let req = Request::with_body("POST", &path, &content_type, body.clone());
+                    let client = &mut clients[turn % per_sender];
+                    turn = turn.wrapping_add(1);
                     let status = match client.send(&req) {
                         Ok(resp) => resp.status,
                         Err(_) => 0,
@@ -267,5 +288,20 @@ mod tests {
         assert!((v.get("shed_rate").unwrap().num().unwrap() - 0.2).abs() < 1e-12);
         assert_eq!(v.get("status_counts").unwrap().get("429").unwrap().usize().unwrap(), 2);
         assert!((v.get("achieved_rps").unwrap().num().unwrap() - 16.0).abs() < 1e-12);
+        // the summary splits queue sheds from connection/drain sheds
+        assert_eq!(v.get("shed_429").unwrap().usize().unwrap(), 2);
+        assert_eq!(v.get("shed_503").unwrap().usize().unwrap(), 0);
+    }
+
+    #[test]
+    fn shed_rate_counts_both_429_and_503() {
+        let mut rep = LoadgenReport { sent: 10, ok: 6, ..Default::default() };
+        rep.status_counts.insert(429, 2);
+        rep.status_counts.insert(503, 2);
+        assert!((rep.shed_rate() - 0.4).abs() < 1e-12);
+        let v = Json::parse(&rep.to_json().to_string()).unwrap();
+        assert_eq!(v.get("shed_429").unwrap().usize().unwrap(), 2);
+        assert_eq!(v.get("shed_503").unwrap().usize().unwrap(), 2);
+        assert!((v.get("shed_rate").unwrap().num().unwrap() - 0.4).abs() < 1e-12);
     }
 }

@@ -61,6 +61,8 @@ pub struct ModelStats {
     pub max_batch: usize,
     pub workers: usize,
     pub arena_bytes_per_item: usize,
+    /// per-replica (busy batch workers, total workers), indexed by replica
+    pub replica_busy: Vec<(u64, usize)>,
     pub snap: MetricsSnapshot,
 }
 
@@ -177,6 +179,23 @@ pub fn render_prometheus(stats: &GatewayStats, models: &[ModelStats]) -> String 
     header(&mut out, "dlrt_model_workers", "coordinator workers per model", "gauge");
     for m in models {
         sample(&mut out, "dlrt_model_workers", &[("model", &m.name)], m.workers as f64);
+    }
+    header(
+        &mut out,
+        "dlrt_model_replica_occupancy",
+        "batch workers currently executing, per replica",
+        "gauge",
+    );
+    for m in models {
+        for (r, (busy, _workers)) in m.replica_busy.iter().enumerate() {
+            let replica = format!("{r}");
+            sample(
+                &mut out,
+                "dlrt_model_replica_occupancy",
+                &[("model", &m.name), ("replica", &replica)],
+                *busy as f64,
+            );
+        }
     }
     header(
         &mut out,
@@ -298,6 +317,7 @@ mod tests {
             max_batch: 4,
             workers: 2,
             arena_bytes_per_item: 4096,
+            replica_busy: vec![(1, 1), (0, 1)],
             snap: MetricsSnapshot {
                 completed: 10,
                 errors: 1,
@@ -350,6 +370,9 @@ mod tests {
         assert!(text.contains("dlrt_model_completed_total{model=\"tiny\"} 10"));
         assert!(text.contains("dlrt_http_responses_total{class=\"429\"} 1"));
         assert!(text.contains("quantile=\"0.99\""));
+        // one occupancy gauge per replica, labeled by index
+        assert!(text.contains("dlrt_model_replica_occupancy{model=\"tiny\",replica=\"0\"} 1"));
+        assert!(text.contains("dlrt_model_replica_occupancy{model=\"tiny\",replica=\"1\"} 0"));
     }
 
     #[test]

@@ -1,9 +1,15 @@
 //! Network inference gateway: the `dlrt serve` HTTP surface.
 //!
-//! A std-only threaded HTTP/1.1 server (accept loop + one thread per
-//! connection, keep-alive) in front of the [`registry::ModelRegistry`].
-//! The request path is socket → registry lookup → bounded coordinator
-//! queue → batcher → planned executor → response; admission refusals are
+//! A std-only event-driven HTTP/1.1 server in front of the
+//! [`registry::ModelRegistry`]. Connections are handled by N shard event
+//! loops ([`event`]) on readiness-based polling — no thread-per-connection,
+//! no blocking reads, and an accept path that never blocks on a client
+//! socket. Inference requests are submitted to the coordinator with a
+//! completion callback (`try_submit_cb`): the batch worker renders the
+//! response straight from the batched output tensors and injects it back
+//! into the owning shard, so unrelated sockets coalesce into one NHWC
+//! batch and raw-f32 bodies cross exactly one copy between the executor's
+//! arena-backed output and the socket write queue. Admission refusals are
 //! shed at the edge as 429/503 instead of queueing unboundedly.
 //!
 //! Endpoints:
@@ -25,29 +31,32 @@
 //! f32 data and carry an `X-DLRT-Shapes` JSON header; JSON responses are
 //! `{"outputs": [{"shape": [...], "data": [...]}]}`. Both round-trip f32
 //! exactly, so gateway outputs are bit-identical to a direct
-//! `Executor::run` (the integration test asserts it).
+//! `Executor::run` (the integration test asserts it). Successful infer
+//! responses also carry `X-DLRT-Batch-Index` / `X-DLRT-Batch-Size`, which
+//! is how clients (and the cross-connection-batching test) observe
+//! coalescing.
 
 pub mod admission;
+mod event;
 pub mod http;
 pub mod loadgen;
 pub mod metrics;
 pub mod registry;
 
-use std::io::{BufReader, ErrorKind};
-use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::net::SocketAddr;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
-use std::sync::{Arc, RwLock};
-use std::thread::JoinHandle;
+use std::sync::{Arc, Condvar, Mutex, RwLock};
 use std::time::{Duration, Instant};
 
 use anyhow::{bail, Context, Result};
 
+use crate::coordinator::{ReplyCallback, ReplyOutcome};
 use crate::dlrt::tensor::Tensor;
 use crate::exec::CompiledModel;
 use crate::obs::trace::{SpanKind, SpanRec, TraceBuffer};
 use crate::util::json::{arr, num, obj, s, Json};
 
-use self::http::{ReadOutcome, Request, Response};
+use self::http::{Request, Response};
 use self::metrics::{GatewayStats, ModelStats};
 use self::registry::{ModelRegistry, ModelSpec};
 
@@ -67,8 +76,11 @@ pub struct GatewayConfig {
     pub max_connections: usize,
     /// how long shutdown waits for in-flight connections to finish
     pub drain_timeout: Duration,
-    /// per-read socket timeout; bounds shutdown latency of idle keep-alives
-    pub read_timeout: Duration,
+    /// close a keep-alive connection after this long with no request
+    pub idle_timeout: Duration,
+    /// shard event loops, each with its own listener and poll set;
+    /// 0 = auto (min(4, available cores))
+    pub event_loops: usize,
 }
 
 impl Default for GatewayConfig {
@@ -77,7 +89,8 @@ impl Default for GatewayConfig {
             max_body_bytes: 64 << 20,
             max_connections: 256,
             drain_timeout: Duration::from_secs(10),
-            read_timeout: Duration::from_millis(500),
+            idle_timeout: Duration::from_secs(30),
+            event_loops: 0,
         }
     }
 }
@@ -86,10 +99,12 @@ struct GwShared {
     registry: Arc<ModelRegistry>,
     stats: GatewayStats,
     conns: admission::ConnLimiter,
-    /// stop accepting; close keep-alive connections after their response
+    /// stop accepting; shards drain in-flight work and exit
     stop: AtomicBool,
-    /// set by `POST /v1/admin/shutdown`; the CLI polls it and drains
+    /// set by `POST /v1/admin/shutdown`; the CLI blocks on it and drains
     shutdown_requested: AtomicBool,
+    /// condvar pair behind [`Gateway::wait_shutdown_requested`]
+    shutdown_signal: (Mutex<bool>, Condvar),
     /// bounded request-lifecycle span ring (`GET /v1/debug/trace`)
     trace: TraceBuffer,
     /// request sequence numbers — the numeric `tid` tying trace spans to
@@ -106,46 +121,69 @@ impl GwShared {
             None => eprintln!("[access] {line}"),
         }
     }
+
+    fn request_shutdown(&self) {
+        self.shutdown_requested.store(true, Ordering::SeqCst);
+        let (mu, cv) = &self.shutdown_signal;
+        *mu.lock().unwrap() = true;
+        cv.notify_all();
+    }
+}
+
+/// What the event loop should do with a dispatched request.
+enum Action {
+    /// write this response now
+    Respond(Response),
+    /// a completion will arrive through the shard's injector later
+    Pending,
+}
+
+/// Async-completion handle for one request: which connection to answer
+/// (generation-checked token) and which shard mailbox the response goes
+/// through.
+struct ReqCtx {
+    token: event::ConnToken,
+    injector: Arc<event::Injector>,
 }
 
 /// A bound, serving gateway. Dropping it (or calling
-/// [`Gateway::shutdown`]) stops the accept loop, waits for in-flight
+/// [`Gateway::shutdown`]) stops the shard event loops, drains in-flight
 /// connections, then drains every registered model server.
 pub struct Gateway {
     addr: SocketAddr,
     shared: Arc<GwShared>,
-    accept: Option<JoinHandle<()>>,
+    shards: Vec<event::ShardHandle>,
 }
 
 impl Gateway {
     /// Bind `listen` (e.g. `127.0.0.1:8080`, port 0 for ephemeral) and
-    /// start serving `registry`.
+    /// start serving `registry` on N shard event loops (`SO_REUSEPORT`
+    /// sibling listeners where the platform has it).
     pub fn bind(
         listen: &str,
         registry: Arc<ModelRegistry>,
         cfg: GatewayConfig,
     ) -> Result<Gateway> {
-        let listener =
-            TcpListener::bind(listen).with_context(|| format!("binding {listen}"))?;
-        // non-blocking accept so the loop can observe the stop flag
-        listener.set_nonblocking(true).context("set_nonblocking")?;
-        let addr = listener.local_addr()?;
+        event::raise_nofile_limit(cfg.max_connections);
+        let loops = if cfg.event_loops == 0 {
+            std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1).min(4)
+        } else {
+            cfg.event_loops
+        };
         let shared = Arc::new(GwShared {
             registry,
             stats: GatewayStats::default(),
             conns: admission::ConnLimiter::new(cfg.max_connections),
             stop: AtomicBool::new(false),
             shutdown_requested: AtomicBool::new(false),
+            shutdown_signal: (Mutex::new(false), Condvar::new()),
             trace: TraceBuffer::with_capacity(TRACE_CAP),
             req_seq: AtomicU64::new(1),
             access_sink: RwLock::new(None),
             cfg,
         });
-        let accept = {
-            let shared = shared.clone();
-            std::thread::spawn(move || accept_loop(&listener, &shared))
-        };
-        Ok(Gateway { addr, shared, accept: Some(accept) })
+        let (addr, shards) = event::spawn_shards(listen, loops, &shared)?;
+        Ok(Gateway { addr, shared, shards })
     }
 
     pub fn local_addr(&self) -> SocketAddr {
@@ -157,163 +195,86 @@ impl Gateway {
         self.shared.shutdown_requested.load(Ordering::SeqCst)
     }
 
+    /// Block until a client POSTs `/v1/admin/shutdown` (condvar wait; the
+    /// CLI used to sleep-poll [`Gateway::shutdown_requested`] instead).
+    pub fn wait_shutdown_requested(&self) {
+        let (mu, cv) = &self.shared.shutdown_signal;
+        let mut requested = mu.lock().unwrap();
+        while !*requested {
+            requested = cv.wait(requested).unwrap();
+        }
+    }
+
     /// Redirect structured access-log lines (stderr by default). Tests
     /// install a capturing sink to assert on the lines.
     pub fn set_access_sink(&self, sink: AccessSink) {
         *self.shared.access_sink.write().unwrap() = Some(sink);
     }
 
-    /// Graceful drain: stop accepting, let in-flight connections finish
-    /// (bounded by `drain_timeout`), then drain every model server so
-    /// queued inference completes before the process exits.
+    /// Graceful drain: stop accepting (the port closes immediately), drain
+    /// every model server so queued inference completes, deliver those
+    /// responses, then join the shard loops (bounded by `drain_timeout`).
     pub fn shutdown(mut self) {
         self.stop_internal();
     }
 
     fn stop_internal(&mut self) {
-        self.shared.stop.store(true, Ordering::SeqCst);
-        if let Some(h) = self.accept.take() {
-            let _ = h.join();
+        if self.shards.is_empty() {
+            return;
         }
-        // Drain the model servers first: queued requests execute
-        // immediately (the batcher skips its window while draining), which
-        // unblocks the connection threads waiting on them; requests that
-        // arrive on live keep-alive connections after this point are shed
-        // with 503.
+        self.shared.stop.store(true, Ordering::SeqCst);
+        for shard in &self.shards {
+            shard.injector.wake();
+        }
+        // Drain the model servers: queued requests execute immediately (the
+        // batcher skips its window while draining) and their completion
+        // callbacks land in the shard injectors; requests arriving on live
+        // keep-alive connections after this point are shed with 503.
         self.shared.registry.drain_all();
-        let deadline = Instant::now() + self.shared.cfg.drain_timeout;
-        while self.shared.conns.active() > 0 && Instant::now() < deadline {
-            std::thread::sleep(Duration::from_millis(10));
+        // Every completion is now queued or delivered — the shards flush,
+        // close, and exit; joining replaces the old 10ms sleep-poll wait.
+        for shard in self.shards.drain(..) {
+            shard.injector.wake();
+            let _ = shard.thread.join();
         }
     }
 }
 
 impl Drop for Gateway {
     fn drop(&mut self) {
-        if self.accept.is_some() {
-            self.stop_internal();
-        }
+        self.stop_internal();
     }
 }
 
-fn accept_loop(listener: &TcpListener, shared: &Arc<GwShared>) {
-    loop {
-        if shared.stop.load(Ordering::SeqCst) {
-            return; // listener drops here: port closes, backlog is reset
-        }
-        match listener.accept() {
-            Ok((stream, _peer)) => {
-                let conn = shared.stats.connections.fetch_add(1, Ordering::Relaxed);
-                shared.trace.record(SpanRec {
-                    kind: SpanKind::Accept,
-                    req: conn,
-                    ts_us: shared.trace.now_us(),
-                    dur_us: 0,
-                    batch_index: 0,
-                    batch_size: 0,
-                    status: 0,
-                });
-                if !shared.conns.try_acquire() {
-                    // over the connection cap: shed before spawning
-                    let mut stream = stream;
-                    let _ = stream.set_nonblocking(false);
-                    let _ = Response::text(503, "too many connections\n")
-                        .write_to(&mut stream, true);
-                    shared.stats.record(503);
-                    continue;
-                }
-                let shared = shared.clone();
-                std::thread::spawn(move || {
-                    handle_connection(stream, &shared);
-                    shared.conns.release();
-                });
-            }
-            Err(e) if e.kind() == ErrorKind::WouldBlock => {
-                std::thread::sleep(Duration::from_millis(5));
-            }
-            Err(_) => std::thread::sleep(Duration::from_millis(5)),
-        }
+/// Route one parsed request. Sync responses are recorded in the gateway
+/// stats here; `Pending` paths (infer, load, unload) record when their
+/// completion is pushed.
+fn dispatch(shared: &Arc<GwShared>, req: Request, ctx: ReqCtx) -> Action {
+    let action = route(shared, req, ctx);
+    if let Action::Respond(resp) = &action {
+        shared.stats.record(resp.status);
     }
+    action
 }
 
-fn handle_connection(stream: TcpStream, shared: &GwShared) {
-    // accepted sockets may inherit the listener's non-blocking mode on
-    // some platforms — force blocking + a finite read timeout
-    if stream.set_nonblocking(false).is_err() {
-        return;
-    }
-    let _ = stream.set_nodelay(true);
-    let _ = stream.set_read_timeout(Some(shared.cfg.read_timeout));
-    // a peer that stops reading its response must not block this thread
-    // (and its ConnLimiter slot) forever once the TCP send buffer fills
-    let _ = stream.set_write_timeout(Some(Duration::from_secs(10)));
-    let mut writer = match stream.try_clone() {
-        Ok(w) => w,
-        Err(_) => return,
-    };
-    let mut reader = BufReader::new(stream);
-    let mut line = String::new();
-    // an idle keep-alive may wait this many read timeouts for its next
-    // request before we close it — without a cap, silent peers would hold
-    // their ConnLimiter slots forever and lock out new connections
-    let max_idle = 60u32;
-    let mut idle = 0u32;
-    loop {
-        match http::read_request(&mut reader, &mut line, shared.cfg.max_body_bytes) {
-            Ok(ReadOutcome::Eof) => return,
-            Ok(ReadOutcome::IdleTimeout) => {
-                idle += 1;
-                if shared.stop.load(Ordering::SeqCst) || idle >= max_idle {
-                    return; // draining, or idle too long: close the slot
-                }
-            }
-            Ok(ReadOutcome::TooLarge(n)) => {
-                let resp = Response::text(413, &format!("body of {n} bytes over limit\n"));
-                shared.stats.record(resp.status);
-                let _ = resp.write_to(&mut writer, true);
-                return;
-            }
-            Ok(ReadOutcome::Unsupported(what)) => {
-                let resp = Response::text(501, &format!("{what}\n"));
-                shared.stats.record(resp.status);
-                let _ = resp.write_to(&mut writer, true);
-                return;
-            }
-            Ok(ReadOutcome::Request(req)) => {
-                idle = 0;
-                let close = req.close || shared.stop.load(Ordering::SeqCst);
-                let resp = route(shared, &req);
-                shared.stats.record(resp.status);
-                if resp.write_to(&mut writer, close).is_err() || close {
-                    return;
-                }
-            }
-            Err(_) => {
-                let resp = Response::text(400, "malformed request\n");
-                shared.stats.record(resp.status);
-                let _ = resp.write_to(&mut writer, true);
-                return;
-            }
-        }
-    }
-}
-
-fn route(shared: &GwShared, req: &Request) -> Response {
-    let path = req.path.split('?').next().unwrap_or("");
+fn route(shared: &Arc<GwShared>, req: Request, ctx: ReqCtx) -> Action {
+    let path = req.path.split('?').next().unwrap_or("").to_string();
     let parts: Vec<&str> = path.split('/').filter(|p| !p.is_empty()).collect();
-    match (req.method.as_str(), parts.as_slice()) {
+    let resp = match (req.method.as_str(), parts.as_slice()) {
         ("GET", ["healthz"]) => Response::text(200, "ok\n"),
         ("GET", ["metrics"]) => {
             Response::new(200, "text/plain; version=0.0.4", render_metrics(shared).into_bytes())
         }
         ("GET", ["v1", "models"]) => models_json(shared),
         ("GET", ["v1", "debug", "trace"]) => trace_json(shared),
-        // slice-pattern bindings on `&[&str]` are `&&str`: deref at use
-        ("POST", ["v1", "models", name, "infer"]) => infer(shared, *name, req),
-        ("POST", ["v1", "models", name, "load"]) => load_model(shared, *name, req),
-        ("POST", ["v1", "models", name, "unload"]) => unload_model(shared, *name),
+        // slice-pattern bindings on `&[&str]` are `&&str`: deref-coerced
+        ("POST", ["v1", "models", name, "infer"]) => return infer(shared, name, &req, ctx),
+        ("POST", ["v1", "models", name, "load"]) => return load_model(shared, name, &req, ctx),
+        ("POST", ["v1", "models", name, "unload"]) => {
+            return unload_model(shared, name, req.close, ctx)
+        }
         ("POST", ["v1", "admin", "shutdown"]) => {
-            shared.shutdown_requested.store(true, Ordering::SeqCst);
+            shared.request_shutdown();
             Response::text(200, "draining\n")
         }
         // 405 only for known paths hit with the wrong method; unknown
@@ -324,14 +285,15 @@ fn route(shared: &GwShared, req: &Request) -> Response {
         | (_, ["v1", "models", _, "infer" | "load" | "unload"])
         | (_, ["v1", "admin", "shutdown"]) => Response::text(405, "method not allowed\n"),
         _ => Response::text(404, "not found\n"),
-    }
+    };
+    Action::Respond(resp)
 }
 
 // ---------------------------------------------------------------------------
 // handlers
 // ---------------------------------------------------------------------------
 
-/// Per-request timing collected by [`infer_inner`] for the access log.
+/// Per-request timing reported by the access log.
 #[derive(Default)]
 struct ReqTiming {
     batch_index: usize,
@@ -340,7 +302,7 @@ struct ReqTiming {
     exec_us: u64,
 }
 
-fn infer(shared: &GwShared, name: &str, req: &Request) -> Response {
+fn infer(shared: &Arc<GwShared>, name: &str, req: &Request, ctx: ReqCtx) -> Action {
     let t_start = Instant::now();
     // honor a client-supplied X-Request-Id; generate one otherwise
     let rid = req
@@ -350,41 +312,40 @@ fn infer(shared: &GwShared, name: &str, req: &Request) -> Response {
         .map(str::to_string)
         .unwrap_or_else(crate::obs::gen_request_id);
     let seq = shared.req_seq.fetch_add(1, Ordering::Relaxed);
-    let mut timing = ReqTiming::default();
-    let resp = infer_inner(shared, name, req, seq, &mut timing);
-    let total_us = t_start.elapsed().as_micros() as u64;
-    shared.log_access(&crate::obs::access_line(
-        crate::obs::unix_ms(),
-        &rid,
-        name,
-        timing.batch_index,
-        timing.batch_size,
-        resp.status,
-        timing.queue_us,
-        timing.exec_us,
-        total_us,
-    ));
-    resp.header("X-Request-Id", &rid)
+    match submit_infer(shared, name, req, ctx, seq, &rid, t_start) {
+        Ok(()) => Action::Pending,
+        Err(resp) => {
+            // refused before reaching a worker: log the access line now
+            let total_us = t_start.elapsed().as_micros() as u64;
+            shared.log_access(&crate::obs::access_line(
+                crate::obs::unix_ms(),
+                &rid,
+                name,
+                0,
+                0,
+                resp.status,
+                0,
+                0,
+                total_us,
+            ));
+            Action::Respond(resp.header("X-Request-Id", &rid))
+        }
+    }
 }
 
-fn infer_inner(
-    shared: &GwShared,
+/// Parse + submit one inference with a completion callback; `Err` is the
+/// synchronous refusal (unknown model, bad input, admission shed).
+fn submit_infer(
+    shared: &Arc<GwShared>,
     name: &str,
     req: &Request,
+    ctx: ReqCtx,
     seq: u64,
-    timing: &mut ReqTiming,
-) -> Response {
-    let span = |kind: SpanKind, ts_us: u64, dur_us: u64, timing: &ReqTiming, status: u16| SpanRec {
-        kind,
-        req: seq,
-        ts_us,
-        dur_us,
-        batch_index: timing.batch_index as u32,
-        batch_size: timing.batch_size as u32,
-        status,
-    };
+    rid: &str,
+    t_start: Instant,
+) -> std::result::Result<(), Response> {
     let Some(entry) = shared.registry.get(name) else {
-        return Response::text(404, &format!("no such model {name:?}\n"));
+        return Err(Response::text(404, &format!("no such model {name:?}\n")));
     };
     let json_io = req
         .header("content-type")
@@ -394,65 +355,107 @@ fn infer_inner(
     let t_parse = Instant::now();
     let input = match parse_input(req, json_io, &entry.model) {
         Ok(t) => t,
-        Err(e) => return Response::text(400, &format!("bad input: {e:#}\n")),
+        Err(e) => return Err(Response::text(400, &format!("bad input: {e:#}\n"))),
     };
-    let parse_us = t_parse.elapsed().as_micros() as u64;
-    shared.trace.record(span(SpanKind::Parse, t_parse_us, parse_us, timing, 0));
+    shared.trace.record(SpanRec {
+        kind: SpanKind::Parse,
+        req: seq,
+        ts_us: t_parse_us,
+        dur_us: t_parse.elapsed().as_micros() as u64,
+        batch_index: 0,
+        batch_size: 0,
+        status: 0,
+    });
     let t_submit_us = shared.trace.now_us();
-    match entry.server.try_submit(input) {
-        Err(e) => admission::reject_response(&e, &entry.server.metrics()),
-        Ok(rx) => {
-            shared.stats.in_flight.fetch_add(1, Ordering::Relaxed);
-            let got = rx.recv();
-            shared.stats.in_flight.fetch_sub(1, Ordering::Relaxed);
-            match got {
-                Ok(Ok(reply)) => {
-                    timing.batch_index = reply.batch_index;
-                    timing.batch_size = reply.batch_size;
-                    timing.queue_us = reply.queue_us;
-                    timing.exec_us = reply.exec_us;
-                    let t_recv_us = shared.trace.now_us();
-                    // queue-wait from submit; batch = assembly window +
-                    // execution; exec = the plan-execution tail of it
-                    let t_batch_us = t_submit_us + reply.queue_us;
-                    shared
-                        .trace
-                        .record(span(SpanKind::Queue, t_submit_us, reply.queue_us, timing, 200));
-                    shared.trace.record(span(
-                        SpanKind::Batch,
-                        t_batch_us,
-                        t_recv_us.saturating_sub(t_batch_us),
-                        timing,
-                        200,
-                    ));
-                    shared.trace.record(span(
-                        SpanKind::Exec,
-                        t_recv_us.saturating_sub(reply.exec_us),
-                        reply.exec_us,
-                        timing,
-                        200,
-                    ));
-                    let t_resp_us = shared.trace.now_us();
-                    let t_resp = Instant::now();
-                    let resp = render_outputs(&reply.outputs, json_io);
-                    shared.trace.record(span(
-                        SpanKind::Respond,
-                        t_resp_us,
-                        t_resp.elapsed().as_micros() as u64,
-                        timing,
-                        200,
-                    ));
-                    resp
-                }
-                Ok(Err(e)) => {
-                    if e.is::<crate::coordinator::ServerStopping>() {
-                        Response::text(503, "server stopping\n")
-                    } else {
-                        Response::text(500, &format!("inference failed: {e:#}\n"))
-                    }
-                }
-                Err(_) => Response::text(503, "model worker gone\n"),
+    let cb_shared = shared.clone();
+    let rid = rid.to_string();
+    let model_name = name.to_string();
+    let close = req.close;
+    shared.stats.in_flight.fetch_add(1, Ordering::Relaxed);
+    // Runs on the batch worker right after execution: render the response
+    // from the *batched* outputs (one copy for raw bodies), then hand it
+    // to the connection's shard — the worker never blocks on the peer.
+    let cb: ReplyCallback = Box::new(move |outcome| {
+        cb_shared.stats.in_flight.fetch_sub(1, Ordering::Relaxed);
+        let (resp, timing) = match outcome {
+            ReplyOutcome::Ok(r) => {
+                let timing = ReqTiming {
+                    batch_index: r.batch_index,
+                    batch_size: r.batch_size,
+                    queue_us: r.queue_us,
+                    exec_us: r.exec_us,
+                };
+                let span = |kind: SpanKind, ts_us: u64, dur_us: u64| SpanRec {
+                    kind,
+                    req: seq,
+                    ts_us,
+                    dur_us,
+                    batch_index: timing.batch_index as u32,
+                    batch_size: timing.batch_size as u32,
+                    status: 200,
+                };
+                let t_recv_us = cb_shared.trace.now_us();
+                // queue-wait from submit; batch = assembly window +
+                // execution; exec = the plan-execution tail of it
+                let t_batch_us = t_submit_us + r.queue_us;
+                cb_shared.trace.record(span(SpanKind::Queue, t_submit_us, r.queue_us));
+                cb_shared.trace.record(span(
+                    SpanKind::Batch,
+                    t_batch_us,
+                    t_recv_us.saturating_sub(t_batch_us),
+                ));
+                cb_shared.trace.record(span(
+                    SpanKind::Exec,
+                    t_recv_us.saturating_sub(r.exec_us),
+                    r.exec_us,
+                ));
+                let t_resp_us = cb_shared.trace.now_us();
+                let t_resp = Instant::now();
+                let resp = render_batched(r.outputs, r.batch_index, json_io)
+                    .header("X-DLRT-Batch-Index", &r.batch_index.to_string())
+                    .header("X-DLRT-Batch-Size", &r.batch_size.to_string());
+                cb_shared.trace.record(span(
+                    SpanKind::Respond,
+                    t_resp_us,
+                    t_resp.elapsed().as_micros() as u64,
+                ));
+                (resp, timing)
             }
+            ReplyOutcome::Err(e) => (
+                Response::text(500, &format!("inference failed: {e:#}\n")),
+                ReqTiming::default(),
+            ),
+            ReplyOutcome::Stopping => {
+                (Response::text(503, "server stopping\n"), ReqTiming::default())
+            }
+        };
+        let total_us = t_start.elapsed().as_micros() as u64;
+        cb_shared.log_access(&crate::obs::access_line(
+            crate::obs::unix_ms(),
+            &rid,
+            &model_name,
+            timing.batch_index,
+            timing.batch_size,
+            resp.status,
+            timing.queue_us,
+            timing.exec_us,
+            total_us,
+        ));
+        let resp = resp.header("X-Request-Id", &rid);
+        cb_shared.stats.record(resp.status);
+        ctx.injector.push(event::Completion { token: ctx.token, resp, close });
+    });
+    match entry.server.try_submit_cb(input, cb) {
+        Ok(()) => Ok(()),
+        Err(e) => {
+            // the callback was never (and will never be) invoked
+            shared.stats.in_flight.fetch_sub(1, Ordering::Relaxed);
+            Err(admission::reject_response(
+                &e,
+                &entry.server.metrics(),
+                entry.server.queue_depth(),
+                entry.server.config().max_batch,
+            ))
         }
     }
 }
@@ -499,25 +502,46 @@ fn shape_json(shape: &[usize]) -> Json {
     arr(shape.iter().map(|&d| num(d as f64)).collect())
 }
 
-fn render_outputs(outs: &[Tensor], json_io: bool) -> Response {
+/// Render sample `bi` straight from the batched output tensors. For the
+/// raw wire format this is the single copy between the executor's output
+/// buffer and the socket write queue (the event loop moves the rendered
+/// body `Vec` into the connection without touching the bytes again).
+fn render_batched(outs: &[Tensor], bi: usize, json_io: bool) -> Response {
+    let per_sample: Vec<(Vec<usize>, &[f32])> = outs
+        .iter()
+        .map(|o| {
+            let per: usize =
+                if o.shape.is_empty() { 1 } else { o.shape[1..].iter().product() };
+            let mut shape = o.shape.clone();
+            match shape.first_mut() {
+                Some(b) => *b = 1,
+                None => shape.push(1),
+            }
+            let end = ((bi + 1) * per).min(o.data.len());
+            let start = (bi * per).min(end);
+            (shape, &o.data[start..end])
+        })
+        .collect();
     if json_io {
-        let outputs = arr(outs
+        let outputs = arr(per_sample
             .iter()
-            .map(|o| {
+            .map(|(shape, data)| {
                 obj(vec![
-                    ("shape", shape_json(&o.shape)),
-                    ("data", arr(o.data.iter().map(|&v| num(v as f64)).collect())),
+                    ("shape", shape_json(shape)),
+                    ("data", arr(data.iter().map(|&v| num(v as f64)).collect())),
                 ])
             })
             .collect());
         Response::json(200, &obj(vec![("outputs", outputs)]))
     } else {
-        let total: usize = outs.iter().map(|o| 4 * o.numel()).sum();
+        let total: usize = per_sample.iter().map(|(_, d)| 4 * d.len()).sum();
         let mut body = Vec::with_capacity(total);
-        for o in outs {
-            body.extend_from_slice(&http::f32s_to_le_bytes(&o.data));
+        for (_, data) in &per_sample {
+            for v in *data {
+                body.extend_from_slice(&v.to_le_bytes());
+            }
         }
-        let shapes = arr(outs.iter().map(|o| shape_json(&o.shape)).collect());
+        let shapes = arr(per_sample.iter().map(|(shape, _)| shape_json(shape)).collect());
         Response::bytes(200, body).header("X-DLRT-Shapes", &shapes.to_string())
     }
 }
@@ -544,6 +568,7 @@ fn models_json(shared: &GwShared) -> Response {
                 ("input_shape", shape_json(&ishape)),
                 ("engines", engines),
                 ("workers", num(cfg.workers as f64)),
+                ("replicas", num(cfg.replicas as f64)),
                 ("max_batch", num(cfg.max_batch as f64)),
                 ("queue_cap", num(cfg.queue_cap as f64)),
                 ("queue_depth", num(e.server.queue_depth() as f64)),
@@ -556,26 +581,47 @@ fn models_json(shared: &GwShared) -> Response {
     Response::json(200, &obj(vec![("models", models)]))
 }
 
-fn load_model(shared: &GwShared, name: &str, req: &Request) -> Response {
+/// Model loads compile on a helper thread — a multi-second compile must
+/// not stall every other connection on the shard's event loop.
+fn load_model(shared: &Arc<GwShared>, name: &str, req: &Request, ctx: ReqCtx) -> Action {
     let spec = match std::str::from_utf8(&req.body)
         .map_err(anyhow::Error::from)
         .and_then(Json::parse)
         .and_then(|v| ModelSpec::from_json(name, &v))
     {
         Ok(spec) => spec,
-        Err(e) => return Response::text(400, &format!("bad load request: {e:#}\n")),
+        Err(e) => {
+            return Action::Respond(Response::text(400, &format!("bad load request: {e:#}\n")))
+        }
     };
-    match shared.registry.load_spec(&spec) {
-        Ok(()) => Response::json(200, &obj(vec![("loaded", s(name))])),
-        Err(e) => Response::text(400, &format!("load failed: {e:#}\n")),
-    }
+    let shared = shared.clone();
+    let name = name.to_string();
+    let close = req.close;
+    std::thread::spawn(move || {
+        let resp = match shared.registry.load_spec(&spec) {
+            Ok(()) => Response::json(200, &obj(vec![("loaded", s(&name))])),
+            Err(e) => Response::text(400, &format!("load failed: {e:#}\n")),
+        };
+        shared.stats.record(resp.status);
+        ctx.injector.push(event::Completion { token: ctx.token, resp, close });
+    });
+    Action::Pending
 }
 
-fn unload_model(shared: &GwShared, name: &str) -> Response {
-    match shared.registry.unload(name) {
-        Ok(()) => Response::json(200, &obj(vec![("unloaded", s(name))])),
-        Err(e) => Response::text(404, &format!("{e:#}\n")),
-    }
+/// Unloads drain the replaced server (in-flight work finishes) — also off
+/// the event loop, for the same reason as [`load_model`].
+fn unload_model(shared: &Arc<GwShared>, name: &str, close: bool, ctx: ReqCtx) -> Action {
+    let shared = shared.clone();
+    let name = name.to_string();
+    std::thread::spawn(move || {
+        let resp = match shared.registry.unload(&name) {
+            Ok(()) => Response::json(200, &obj(vec![("unloaded", s(&name))])),
+            Err(e) => Response::text(404, &format!("{e:#}\n")),
+        };
+        shared.stats.record(resp.status);
+        ctx.injector.push(event::Completion { token: ctx.token, resp, close });
+    });
+    Action::Pending
 }
 
 fn render_metrics(shared: &GwShared) -> String {
@@ -592,6 +638,7 @@ fn render_metrics(shared: &GwShared) -> String {
                 max_batch: cfg.max_batch,
                 workers: cfg.workers,
                 arena_bytes_per_item: e.model.plan.arena_bytes(1),
+                replica_busy: e.server.replica_occupancy(),
                 snap: e.server.metrics(),
             }
         })

@@ -40,24 +40,48 @@ impl ModelSource {
     }
 }
 
-/// One `--models` item / admin-load request, resolved to a name + source.
+/// One `--models` item / admin-load request, resolved to a name + source
+/// plus optional per-model coordinator overrides.
 #[derive(Clone, Debug)]
 pub struct ModelSpec {
     pub name: String,
     pub source: ModelSource,
+    /// `key=value` coordinator overrides from the spec's `;`-segments,
+    /// applied over the registry default by [`ModelSpec::apply_overrides`]
+    pub overrides: Vec<(String, String)>,
 }
 
 impl ModelSpec {
-    /// Parse one `--models` item: `[name=]source` where `source` is a path
-    /// (contains a separator, ends in `.dlrt`, or exists on disk) or a
-    /// builder spec `model[@res]`. Without `name=`, paths are named by
-    /// file stem and builders by their spec string (`resnet18@64`).
+    /// Parse one `--models` item: `[name=]source[;key=value...]` where
+    /// `source` is a path (contains a separator, ends in `.dlrt`, or
+    /// exists on disk) or a builder spec `model[@res]`. Without `name=`,
+    /// paths are named by file stem and builders by their spec string
+    /// (`resnet18@64`). Trailing `;key=value` segments override the
+    /// per-model coordinator config (`workers`, `max_batch`,
+    /// `max_wait_ms`, `threads_per_worker`, `queue_cap`, `replicas`,
+    /// `pin_cores`), e.g. `det=yolov5n@320;replicas=2;pin_cores=true`.
     pub fn parse(item: &str) -> Result<ModelSpec> {
         let item = item.trim();
         if item.is_empty() {
             bail!("empty model spec");
         }
-        let (name, src) = match item.split_once('=') {
+        let mut segments = item.split(';');
+        let head = segments.next().unwrap_or("").trim();
+        if head.is_empty() {
+            bail!("empty model spec");
+        }
+        let mut overrides = Vec::new();
+        for seg in segments {
+            let seg = seg.trim();
+            if seg.is_empty() {
+                continue;
+            }
+            let (k, v) = seg
+                .split_once('=')
+                .ok_or_else(|| anyhow!("model override {seg:?} is not key=value"))?;
+            overrides.push((k.trim().to_string(), v.trim().to_string()));
+        }
+        let (name, src) = match head.split_once('=') {
             Some((n, s)) => (Some(n.trim().to_string()), s.trim().to_string()),
             None => (None, item.to_string()),
         };
@@ -81,7 +105,42 @@ impl ModelSpec {
                 .unwrap_or_else(|| p.clone()),
             ModelSource::Builder { .. } => src.clone(),
         });
-        Ok(ModelSpec { name, source })
+        Ok(ModelSpec { name, source, overrides })
+    }
+
+    /// Apply this spec's `;key=value` overrides over `base`. Unknown keys
+    /// and unparseable values are errors (a typo must not silently serve
+    /// with the default config).
+    pub fn apply_overrides(&self, mut base: ServerConfig) -> Result<ServerConfig> {
+        for (k, v) in &self.overrides {
+            let bad = || anyhow!("model {:?}: bad value {v:?} for override {k:?}", self.name);
+            match k.as_str() {
+                "workers" => base.workers = v.parse().map_err(|_| bad())?,
+                "max_batch" => base.max_batch = v.parse().map_err(|_| bad())?,
+                "max_wait_ms" => {
+                    base.max_wait =
+                        std::time::Duration::from_millis(v.parse().map_err(|_| bad())?)
+                }
+                "threads_per_worker" => {
+                    base.threads_per_worker = v.parse().map_err(|_| bad())?
+                }
+                "queue_cap" => base.queue_cap = v.parse().map_err(|_| bad())?,
+                "replicas" => base.replicas = v.parse().map_err(|_| bad())?,
+                "pin_cores" => {
+                    base.pin_cores = match v.as_str() {
+                        "true" | "1" => true,
+                        "false" | "0" => false,
+                        _ => return Err(bad()),
+                    }
+                }
+                _ => bail!(
+                    "model {:?}: unknown override {k:?} (expected workers, max_batch, \
+                     max_wait_ms, threads_per_worker, queue_cap, replicas, or pin_cores)",
+                    self.name
+                ),
+            }
+        }
+        Ok(base)
     }
 
     /// Admin-endpoint body → spec: `{"path": "m.dlrt"}` or
@@ -107,7 +166,7 @@ impl ModelSpec {
         } else {
             bail!("load body needs \"path\" or \"builder\"");
         };
-        Ok(ModelSpec { name: name.to_string(), source })
+        Ok(ModelSpec { name: name.to_string(), source, overrides: Vec::new() })
     }
 
     /// Compile/load the model this spec names.
@@ -154,18 +213,31 @@ impl ModelRegistry {
     /// entry flips; the old one drains outside the lock (in-flight
     /// requests finish, late holders of the old entry get 503s).
     pub fn load_spec(&self, spec: &ModelSpec) -> Result<()> {
+        let cfg = spec.apply_overrides(self.default_cfg)?;
         let compiled = spec.build()?;
-        self.install(&spec.name, &spec.source.describe(), compiled)
+        self.install_with_config(&spec.name, &spec.source.describe(), compiled, cfg)
     }
 
-    /// Register an already-compiled model under `name` (also the test
-    /// seam — no filesystem needed).
+    /// Register an already-compiled model under `name` with the registry's
+    /// default config (also the test seam — no filesystem needed).
     pub fn install(&self, name: &str, source: &str, compiled: CompiledModel) -> Result<()> {
+        self.install_with_config(name, source, compiled, self.default_cfg)
+    }
+
+    /// Register an already-compiled model with an explicit (e.g.
+    /// spec-overridden) coordinator config.
+    pub fn install_with_config(
+        &self,
+        name: &str,
+        source: &str,
+        compiled: CompiledModel,
+        cfg: ServerConfig,
+    ) -> Result<()> {
         if name.is_empty() || name.contains('/') {
             bail!("model name {name:?} must be non-empty and slash-free");
         }
         let model = Arc::new(compiled);
-        let server = InferenceServer::start(model.clone(), self.default_cfg);
+        let server = InferenceServer::start(model.clone(), cfg);
         let entry = Arc::new(ModelEntry {
             name: name.to_string(),
             source: source.to_string(),
@@ -250,6 +322,58 @@ mod tests {
 
         assert!(ModelSpec::parse("").is_err());
         assert!(ModelSpec::parse("resnet18@notanumber").is_err());
+    }
+
+    #[test]
+    fn spec_overrides_parse_and_apply() {
+        let s = ModelSpec::parse("det=yolov5n@320;replicas=2;pin_cores=true;max_wait_ms=5")
+            .unwrap();
+        assert_eq!(s.name, "det");
+        assert_eq!(s.overrides.len(), 3);
+        let cfg = s.apply_overrides(ServerConfig::default()).unwrap();
+        assert_eq!(cfg.replicas, 2);
+        assert!(cfg.pin_cores);
+        assert_eq!(cfg.max_wait, std::time::Duration::from_millis(5));
+        // untouched fields keep the base value
+        assert_eq!(cfg.workers, ServerConfig::default().workers);
+
+        // paths still parse when override segments follow
+        let s = ModelSpec::parse("prod=checkpoints/best.dlrt;queue_cap=4").unwrap();
+        assert_eq!(s.name, "prod");
+        assert!(matches!(s.source, ModelSource::Path(_)));
+        assert_eq!(s.apply_overrides(ServerConfig::default()).unwrap().queue_cap, 4);
+
+        // specs without overrides behave exactly as before
+        assert!(ModelSpec::parse("resnet18@64").unwrap().overrides.is_empty());
+    }
+
+    #[test]
+    fn spec_overrides_reject_garbage() {
+        // unknown key, bad value, and a segment that isn't key=value
+        assert!(ModelSpec::parse("m=resnet18@64;turbo=yes")
+            .unwrap()
+            .apply_overrides(ServerConfig::default())
+            .is_err());
+        assert!(ModelSpec::parse("m=resnet18@64;workers=lots")
+            .unwrap()
+            .apply_overrides(ServerConfig::default())
+            .is_err());
+        assert!(ModelSpec::parse("m=resnet18@64;replicas").is_err());
+    }
+
+    #[test]
+    fn load_spec_applies_overrides_to_server() {
+        let reg = ModelRegistry::new(ServerConfig::default());
+        // install through the spec path with an explicit config override
+        let spec = ModelSpec {
+            name: "tiny".to_string(),
+            source: ModelSource::Path("unused".to_string()),
+            overrides: vec![("max_batch".to_string(), "2".to_string())],
+        };
+        let cfg = spec.apply_overrides(reg.default_config()).unwrap();
+        reg.install_with_config("tiny", "test", tiny(), cfg).unwrap();
+        assert_eq!(reg.get("tiny").unwrap().server.config().max_batch, 2);
+        reg.drain_all();
     }
 
     #[test]

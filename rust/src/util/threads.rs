@@ -14,12 +14,20 @@
 //!
 //! `par_ranges` / `par_chunks_rows` keep their original signatures, so all
 //! kernels migrated to the pool transparently.
+//!
+//! Beyond the process-wide [`global`] pool, replica executors create
+//! *private* pools ([`ThreadPool::pinned`]) whose workers are pinned to a
+//! core subset; a thread installs one with [`set_current_pool`] and every
+//! `par_ranges` call made from that thread dispatches to it instead of the
+//! global pool. Threads that never install a pool keep the old behavior
+//! exactly.
 
+use std::cell::RefCell;
 use std::collections::VecDeque;
 use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::{Arc, Condvar, Mutex, OnceLock};
-use std::thread::{Thread, ThreadId};
+use std::thread::{JoinHandle, Thread, ThreadId};
 use std::time::Duration;
 
 /// Number of worker threads to use by default (overridable per call).
@@ -104,6 +112,9 @@ impl Latch {
 struct PoolShared {
     queue: Mutex<VecDeque<Job>>,
     cv: Condvar,
+    /// Set (under the queue lock) by [`ThreadPool::shutdown`]; workers exit
+    /// once it is set and the queue has drained.
+    stop: AtomicBool,
 }
 
 /// A persistent pool of kernel worker threads (plus the caller, which always
@@ -111,22 +122,61 @@ struct PoolShared {
 pub struct ThreadPool {
     shared: Arc<PoolShared>,
     worker_ids: Vec<ThreadId>,
+    /// Join handles for [`shutdown`](ThreadPool::shutdown); the global pool
+    /// never joins, private replica pools do on model drain.
+    handles: Mutex<Vec<JoinHandle<()>>>,
 }
 
 impl ThreadPool {
     fn with_workers(workers: usize) -> ThreadPool {
-        let shared =
-            Arc::new(PoolShared { queue: Mutex::new(VecDeque::new()), cv: Condvar::new() });
+        ThreadPool::spawn("dlrt-pool", workers, Vec::new())
+    }
+
+    /// A private pool whose workers are pinned to `cores` (best effort;
+    /// no-op off Linux or when `cores` is empty). Replica executors use one
+    /// per replica so models stop contending for the global pool.
+    pub fn pinned(workers: usize, cores: &[usize]) -> Arc<ThreadPool> {
+        Arc::new(ThreadPool::spawn("dlrt-replica", workers, cores.to_vec()))
+    }
+
+    fn spawn(prefix: &str, workers: usize, cores: Vec<usize>) -> ThreadPool {
+        let shared = Arc::new(PoolShared {
+            queue: Mutex::new(VecDeque::new()),
+            cv: Condvar::new(),
+            stop: AtomicBool::new(false),
+        });
         let mut worker_ids = Vec::with_capacity(workers);
+        let mut handles = Vec::with_capacity(workers);
         for i in 0..workers {
             let sh = shared.clone();
+            let cores = cores.clone();
             let handle = std::thread::Builder::new()
-                .name(format!("dlrt-pool-{i}"))
-                .spawn(move || worker_loop(&sh))
+                .name(format!("{prefix}-{i}"))
+                .spawn(move || {
+                    pin_to_cores(&cores);
+                    worker_loop(&sh)
+                })
                 .expect("spawning pool worker");
             worker_ids.push(handle.thread().id());
+            handles.push(handle);
         }
-        ThreadPool { shared, worker_ids }
+        ThreadPool { shared, worker_ids, handles: Mutex::new(handles) }
+    }
+
+    /// Stop the workers once the queue drains and join them. Safe to call
+    /// more than once; submitting after shutdown would hang, so callers
+    /// (replica drains) shut down only after their executors are gone.
+    pub fn shutdown(&self) {
+        {
+            // set under the queue lock so a worker between "queue empty" and
+            // "wait" cannot miss the wakeup
+            let _q = self.shared.queue.lock().unwrap();
+            self.shared.stop.store(true, Ordering::Release);
+        }
+        self.shared.cv.notify_all();
+        for h in self.handles.lock().unwrap().drain(..) {
+            let _ = h.join();
+        }
     }
 
     /// Number of pooled worker threads (callers add themselves per call).
@@ -201,13 +251,61 @@ fn worker_loop(shared: &PoolShared) {
             let mut q = shared.queue.lock().unwrap();
             loop {
                 if let Some(j) = q.pop_front() {
-                    break j;
+                    break Some(j);
+                }
+                if shared.stop.load(Ordering::Acquire) {
+                    break None;
                 }
                 q = shared.cv.wait(q).unwrap();
             }
         };
-        run_job(&job);
+        match job {
+            Some(j) => run_job(&j),
+            None => return,
+        }
     }
+}
+
+/// Pin the calling thread to `cores` (best effort). Linux-only; a no-op
+/// elsewhere and under Miri (which cannot interpret the syscall).
+#[cfg(all(target_os = "linux", not(miri)))]
+pub fn pin_to_cores(cores: &[usize]) {
+    if cores.is_empty() {
+        return;
+    }
+    // cpu_set_t is a 1024-bit mask on Linux; declared by hand because the
+    // repo links no libc crate (the symbol itself is always in libc).
+    let mut mask = [0u64; 16];
+    for &c in cores {
+        if c < 1024 {
+            mask[c / 64] |= 1u64 << (c % 64);
+        }
+    }
+    extern "C" {
+        fn sched_setaffinity(pid: i32, cpusetsize: usize, mask: *const u64) -> i32;
+    }
+    // SAFETY: pid 0 targets the calling thread; the mask pointer and length
+    // describe a live, correctly-sized local buffer. Failure is ignored —
+    // pinning is a performance hint, never a correctness requirement.
+    let _ = unsafe { sched_setaffinity(0, std::mem::size_of_val(&mask), mask.as_ptr()) };
+}
+
+/// Pin the calling thread to `cores` (best effort). Linux-only; a no-op
+/// elsewhere and under Miri (which cannot interpret the syscall).
+#[cfg(not(all(target_os = "linux", not(miri))))]
+pub fn pin_to_cores(_cores: &[usize]) {}
+
+thread_local! {
+    /// The pool `par_ranges` dispatches to from this thread; `None` means
+    /// the process-wide [`global`] pool.
+    static CURRENT_POOL: RefCell<Option<Arc<ThreadPool>>> = const { RefCell::new(None) };
+}
+
+/// Install (or clear) the pool that `par_ranges` calls made from *this
+/// thread* dispatch to. Replica batch workers install their replica's
+/// private pinned pool at startup; everything else keeps the global pool.
+pub fn set_current_pool(pool: Option<Arc<ThreadPool>>) {
+    CURRENT_POOL.with(|p| *p.borrow_mut() = pool);
 }
 
 /// The process-wide kernel pool, created on first use and reused by every
@@ -284,7 +382,14 @@ where
         f(0, n);
         return;
     }
-    global().run_partitioned(n, nthreads, &f);
+    // Arc clone (refcount bump, no allocation) instead of holding the
+    // RefCell borrow across the dispatch, so nested par_ranges from a job
+    // closure stays legal.
+    let pool = CURRENT_POOL.with(|p| p.borrow().clone());
+    match pool {
+        Some(pool) => pool.run_partitioned(n, nthreads, &f),
+        None => global().run_partitioned(n, nthreads, &f),
+    }
 }
 
 #[cfg(test)]
@@ -424,5 +529,46 @@ mod tests {
         for h in handles {
             h.join().unwrap();
         }
+    }
+
+    #[test]
+    fn private_pool_serves_par_ranges_and_shuts_down() {
+        // with a private pool installed, chunks must land on ITS workers (or
+        // the caller) — never on the global pool
+        let pool = ThreadPool::pinned(2, &[]);
+        set_current_pool(Some(pool.clone()));
+        let seen = Mutex::new(BTreeSet::new());
+        let reps = if cfg!(miri) { 2 } else { 16 };
+        for _ in 0..reps {
+            par_ranges(60, 3, |_, _| {
+                seen.lock().unwrap().insert(std::thread::current().id());
+            });
+        }
+        set_current_pool(None);
+        let seen = seen.into_inner().unwrap();
+        let mut allowed: BTreeSet<ThreadId> = pool.worker_ids().iter().copied().collect();
+        allowed.insert(std::thread::current().id());
+        assert!(seen.is_subset(&allowed), "chunks escaped the private pool");
+        pool.shutdown();
+        pool.shutdown(); // idempotent
+        // this thread's par_ranges falls back to the global pool again
+        let count = AtomicUsize::new(0);
+        par_ranges(30, 3, |lo, hi| {
+            count.fetch_add(hi - lo, Ordering::SeqCst);
+        });
+        assert_eq!(count.load(Ordering::SeqCst), 30);
+    }
+
+    #[test]
+    fn shutdown_waits_for_queued_jobs() {
+        let pool = ThreadPool::pinned(2, &[]);
+        set_current_pool(Some(pool.clone()));
+        let count = AtomicUsize::new(0);
+        par_ranges(100, 3, |lo, hi| {
+            count.fetch_add(hi - lo, Ordering::SeqCst);
+        });
+        set_current_pool(None);
+        pool.shutdown();
+        assert_eq!(count.load(Ordering::SeqCst), 100);
     }
 }
