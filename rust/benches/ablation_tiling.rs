@@ -135,7 +135,7 @@ fn main() {
     for &isa in &isas {
         let uk = kernel_for(isa).expect("listed ISA has a kernel");
         let pw = PackedW::from_packed(&wp, uk.weight_layout());
-        let tt = bench_ms(1, 9, || (uk.gemm_bit)(&ap, &pw, 2, &mut out, 1));
+        let tt = bench_ms(1, 9, || (uk.gemm_bit)(&uk.desc, &ap, &pw, 2, &mut out, 1));
         rows.push((
             isa.name().to_string(),
             format!("({},{})", uk.desc.tile_m, uk.desc.tile_n),
@@ -143,7 +143,17 @@ fn main() {
         ));
     }
     // available_isas() keeps scalar last, so the baseline is the final row
+    // (captured before the tuned extra row below)
     let scalar_ms = rows.last().map(|r| r.2).unwrap_or(1.0);
+    // tuned-vs-default: the `dlrt tune` geometry search on the best kernel,
+    // weights repacked to the winning tile order
+    if let Some((desc, _, tuned_ms)) = dlrt::tune::tune_bit_shape(isas[0], m, n, k, 6, 5) {
+        rows.push((
+            format!("{} tuned", isas[0].name()),
+            format!("({},{})", desc.tile_m, desc.tile_n),
+            tuned_ms,
+        ));
+    }
     for (name, tile, med) in rows {
         t.row(vec![name, tile, ms(med), format!("{:.2}x", scalar_ms / med)]);
     }

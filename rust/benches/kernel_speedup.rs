@@ -12,6 +12,7 @@ use dlrt::kernels::fp32::gemm_rowmajor_bt;
 use dlrt::kernels::int8::gemm_u8i8_i32;
 use dlrt::kernels::ukernel::{available_isas, kernel_for, PackedW};
 use dlrt::models::build_resnet;
+use dlrt::tune::tune_bit_shape;
 use dlrt::util::rng::Rng;
 
 /// ResNet18-layer-shaped GEMMs: (rows = OH*OW, k = kh*kw*cin, n = cout).
@@ -74,7 +75,8 @@ fn main() {
     let isas = available_isas();
     let cols: Vec<String> = std::iter::once("shape (rows,k,n)".to_string())
         .chain(isas.iter().map(|i| i.name().to_string()))
-        .chain(std::iter::once("SIMD vs scalar".to_string()))
+        .chain(["SIMD vs scalar".to_string(), "tuned".to_string(),
+                "tuned vs default".to_string()])
         .collect();
     let col_refs: Vec<&str> = cols.iter().map(|s| s.as_str()).collect();
     let mut t_isa = Table::new(
@@ -92,15 +94,21 @@ fn main() {
         for &isa in &isas {
             let uk = kernel_for(isa).expect("listed ISA has a kernel");
             let pw = PackedW::from_packed(&wp, uk.weight_layout());
-            let first = bench_ms(0, 1, || (uk.gemm_bit)(&ap, &pw, 2, &mut out_b, 1));
+            let first = bench_ms(0, 1, || (uk.gemm_bit)(&uk.desc, &ap, &pw, 2, &mut out_b, 1));
             let reps = reps_for(first.median_ms, 800.0);
-            let tt = bench_ms(1, reps, || (uk.gemm_bit)(&ap, &pw, 2, &mut out_b, 1));
+            let tt = bench_ms(1, reps, || (uk.gemm_bit)(&uk.desc, &ap, &pw, 2, &mut out_b, 1));
             medians.push(tt.median_ms);
             row.push(ms(tt.median_ms));
         }
         // available_isas() is best-first with scalar always last
         let scalar_ms = *medians.last().unwrap();
         row.push(format!("{:.2}x", scalar_ms / medians[0]));
+        // tuned-vs-default: the `dlrt tune` geometry search on the best
+        // kernel for this shape (tuned is never slower by construction)
+        let (_, default_ms, tuned_ms) =
+            tune_bit_shape(isas[0], m, n, k, 6, 5).expect("best ISA has a kernel");
+        row.push(ms(tuned_ms));
+        row.push(format!("{:.2}x", default_ms / tuned_ms.max(1e-9)));
         t_isa.row(row);
     }
     t_isa.print();

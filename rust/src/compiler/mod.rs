@@ -167,7 +167,7 @@ pub fn parse_arch(arch_text: &str, weights: &[f32]) -> Result<Graph> {
 /// mismatches are compile errors.
 pub fn compile_graph(g: &Graph, engine: EngineChoice) -> Result<CompiledModel> {
     let isa = ukernel::selected_isa().map_err(anyhow::Error::msg)?;
-    compile_graph_for_isa(g, engine, isa)
+    compile_graph_tuned(g, engine, isa, crate::tune::ambient_db())
 }
 
 /// [`compile_graph`] pinned to an explicit micro-kernel ISA: bitserial
@@ -175,9 +175,39 @@ pub fn compile_graph(g: &Graph, engine: EngineChoice) -> Result<CompiledModel> {
 /// is recorded on the model. Errors when this host cannot run `isa` (tests
 /// sweep [`ukernel::available_isas`]).
 pub fn compile_graph_for_isa(g: &Graph, engine: EngineChoice, isa: Isa) -> Result<CompiledModel> {
+    compile_graph_tuned(g, engine, isa, crate::tune::ambient_db())
+}
+
+/// [`compile_graph_for_isa`] with an explicit tuning DB (`dlrt tune`
+/// winners). Per conv the DB is consulted by (op, GEMM shape, engine, ISA):
+/// exact-shape hit first, then nearest-shape within the log-distance
+/// cutoff, else the kernel's static defaults. A matched schedule is
+/// recorded on the [`CompiledConv`] and its bitserial weights are prepacked
+/// in the *tuned* tile order, so the serving path never repacks. A DB with
+/// no entries for `isa` (e.g. tuned on another machine, or `DLRT_FORCE_ISA`
+/// overriding the tuned target) degrades to defaults with a note — never an
+/// error.
+pub fn compile_graph_tuned(
+    g: &Graph,
+    engine: EngineChoice,
+    isa: Isa,
+    db: Option<&crate::tune::TuningDb>,
+) -> Result<CompiledModel> {
     let uk = ukernel::kernel_for(isa)
         .ok_or_else(|| anyhow!("ISA '{}' is not available on this host", isa.name()))?;
     let layout = uk.weight_layout();
+    let db = db.filter(|d| !d.is_empty());
+    if let Some(d) = db {
+        if !d.has_isa(isa) {
+            eprintln!("note: tuning DB has no entries for ISA '{}'; \
+                       compiling with static kernel defaults", isa.name());
+        }
+    }
+    // GEMM shapes for tuning lookups (only materialized when a DB is live)
+    let gemm_shapes = match db {
+        Some(_) => crate::exec::planner::conv_gemm_shapes(g)?,
+        None => Vec::new(),
+    };
     let mut convs = Vec::new();
     let mut denses = Vec::new();
     for node in &g.nodes {
@@ -191,8 +221,23 @@ pub fn compile_graph_for_isa(g: &Graph, engine: EngineChoice, isa: Isa) -> Resul
                 if nw.w.len() != k * cout {
                     bail!("{}: weight size {} != {}", node.name, nw.w.len(), k * cout);
                 }
-                let compiled =
-                    compile_conv(&node.name, nw, k, *cout, kernel, *cin, *qcfg, engine, layout)?;
+                let sched = db.and_then(|d| {
+                    let sh = gemm_shapes.iter().find(|s| s.name == node.name)?;
+                    let label = match (engine, qcfg.enabled) {
+                        (EngineChoice::Auto, true) => "bitserial",
+                        (EngineChoice::Auto, false) | (EngineChoice::ForceFp32, _) => "fp32",
+                        (EngineChoice::ForceInt8, _) => "int8",
+                    };
+                    let (e, _) = d.lookup("conv", sh.rows, sh.k, sh.cout, label, isa)?;
+                    Some(e.sched)
+                });
+                // a tuned schedule owns the prepack tile order for its conv
+                let conv_layout = match &sched {
+                    Some(s) => uk.weight_layout_for(&s.desc_for(isa)),
+                    None => layout,
+                };
+                let compiled = compile_conv(&node.name, nw, k, *cout, kernel, *cin, *qcfg,
+                                            engine, conv_layout, sched)?;
                 convs.push(compiled);
             }
             Op::Dense { cin, cout } => {
@@ -224,6 +269,7 @@ fn compile_conv(
     qcfg: QCfg,
     engine: EngineChoice,
     layout: WLayout,
+    sched: Option<crate::tune::Schedule>,
 ) -> Result<CompiledConv> {
     let kernel = match (engine, qcfg.enabled) {
         (EngineChoice::Auto, true) => {
@@ -269,6 +315,7 @@ fn compile_conv(
         kernel,
         scale: nw.scale.clone(),
         bias: nw.bias.clone(),
+        sched,
     })
 }
 
@@ -319,11 +366,41 @@ mod tests {
         for isa in ukernel::available_isas() {
             let m = compile_graph_for_isa(&g, EngineChoice::Auto, isa).unwrap();
             assert_eq!(m.isa, isa);
-            let layout = ukernel::kernel_for(isa).unwrap().weight_layout();
+            let uk = ukernel::kernel_for(isa).unwrap();
             for c in &m.convs {
+                // schedule-aware: a DLRT_TUNE_DB in the environment attaches
+                // tuned schedules, which own their conv's prepack tile order
+                let want = match &c.sched {
+                    Some(s) => uk.weight_layout_for(&s.desc_for(isa)),
+                    None => uk.weight_layout(),
+                };
                 if let ConvKernel::Bitserial { packed, .. } = &c.kernel {
-                    assert_eq!(packed.layout, layout, "{} on {}", c.name, isa.name());
+                    assert_eq!(packed.layout, want, "{} on {}", c.name, isa.name());
                 }
+            }
+        }
+    }
+
+    #[test]
+    fn tuned_compilation_attaches_schedules_and_prepacks_their_layout() {
+        let g = tiny_test_graph(true);
+        for isa in ukernel::available_isas() {
+            let db = crate::tune::synthetic_db(&g, isa).unwrap();
+            let uk = ukernel::kernel_for(isa).unwrap();
+            let m = compile_graph_tuned(&g, EngineChoice::Auto, isa, Some(&db)).unwrap();
+            for c in &m.convs {
+                let s = c.sched.expect("synthetic DB covers every conv/engine");
+                if let ConvKernel::Bitserial { packed, .. } = &c.kernel {
+                    assert_eq!(packed.layout, uk.weight_layout_for(&s.desc_for(isa)),
+                               "{} on {}", c.name, isa.name());
+                }
+            }
+            // a DB tuned only for a different ISA must fall back to defaults
+            let other = ukernel::available_isas().into_iter().find(|i| *i != isa);
+            if let Some(other) = other {
+                let m2 = compile_graph_tuned(&g, EngineChoice::Auto, other, Some(&db)).unwrap();
+                assert!(m2.convs.iter().all(|c| c.sched.is_none()),
+                        "DB for {} must not schedule {}", isa.name(), other.name());
             }
         }
     }

@@ -42,11 +42,29 @@ impl EngineKind {
     }
 }
 
-/// Cost of one conv layer on `cpu`, in seconds.
+/// Cost of one conv layer on `cpu`, in seconds, under the host-selected
+/// micro-kernel's default tile geometry.
 pub fn conv_cost_s(
     cpu: &CpuParams,
     rows: usize,   // N*OH*OW output pixels
     k: usize,      // patch = kh*kw*cin
+    cout: usize,
+    engine: EngineKind,
+    threads: usize,
+) -> f64 {
+    conv_cost_s_for(cpu, &host_kernel_desc(), rows, k, cout, engine, threads)
+}
+
+/// Cost of one conv layer on `cpu` under an explicit tile geometry — the
+/// schedule-search prior for `dlrt tune`, which ranks candidate
+/// `UKernelDesc` overrides by this projection before benchmarking the top
+/// of the ranking on the actual machine.
+#[allow(clippy::too_many_arguments)]
+pub fn conv_cost_s_for(
+    cpu: &CpuParams,
+    desc: &UKernelDesc,
+    rows: usize,
+    k: usize,
     cout: usize,
     engine: EngineKind,
     threads: usize,
@@ -69,10 +87,9 @@ pub fn conv_cost_s(
             // The blocked kernel refetches each weight-plane word once per
             // M-tile and each activation word once per N-tile; everything
             // else stays cache/register resident, so the amortized reload
-            // overhead per word-op follows the tile geometry of whichever
-            // micro-kernel the host would dispatch to.
-            let d = host_kernel_desc();
-            let tile_reload = 1.0 + 1.0 / d.tile_m as f64 + 1.0 / d.tile_n as f64;
+            // overhead per word-op follows the tile geometry being costed.
+            let tile_reload =
+                1.0 + 1.0 / desc.tile_m.max(1) as f64 + 1.0 / desc.tile_n.max(1) as f64;
             let gemm = word_ops * tile_reload / (cpu.bitops_per_cycle * hz * eff_cores);
             // im2col + quantize + pack: ~3 passes over rows*k bytes
             let pack = 3.0 * (rows * k) as f64

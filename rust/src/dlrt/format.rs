@@ -4,7 +4,7 @@
 //!
 //! ```text
 //!   bytes 0..4    magic  b"DLRT"
-//!   bytes 4..8    version u32 (currently 2)
+//!   bytes 4..8    version u32 (currently 3; version-2 files still load)
 //!   bytes 8..16   header length u64
 //!   header        JSON: graph topology + per-layer engine records whose
 //!                 blob fields are {offset, len} references into the payload
@@ -22,6 +22,17 @@
 //! `isa` for provenance. A loader whose own selected kernel wants a
 //! different layout repacks once at load time, so the serving path always
 //! runs the layout its kernel streams best.
+//!
+//! **Version 3** adds the `dlrt tune` sections, both optional (a v3 file
+//! without them is a v2 file with a bumped version): a per-conv `sched`
+//! record (tuned tile geometry / thread split / staging the conv was
+//! prepacked with) and a top-level `tuning` section holding the whole
+//! tuning DB. Both are validated on load — `load` is the trust boundary —
+//! and both degrade, never error, on ISA skew: when the loading host's
+//! selected ISA differs from the file's (different machine, or
+//! `DLRT_FORCE_ISA`), the per-conv schedules are dropped, the embedded DB
+//! is re-consulted for the host's ISA, and whatever misses falls back to
+//! the kernel's static defaults with a logged note.
 
 use std::collections::BTreeMap;
 use std::path::Path;
@@ -35,7 +46,9 @@ use crate::kernels::ukernel::{self, PackedW, WLayout};
 use crate::util::json::{arr, num, obj, s, Json};
 
 pub const MAGIC: &[u8; 4] = b"DLRT";
-pub const VERSION: u32 = 2;
+pub const VERSION: u32 = 3;
+/// Oldest version `load` still accepts (pre-tuning files load unchanged).
+pub const MIN_VERSION: u32 = 2;
 
 // ---------------------------------------------------------------------------
 // payload writer / reader
@@ -242,6 +255,18 @@ pub fn graph_from_json(v: &Json) -> Result<Graph> {
 // ---------------------------------------------------------------------------
 
 pub fn save(model: &CompiledModel, path: &Path) -> Result<()> {
+    save_with(model, crate::tune::ambient_db(), path)
+}
+
+/// [`save`] with an explicit tuning DB to embed (`dlrt tune --out` feeds
+/// `dlrt compile --tune-db` feeds this): per-conv tuned schedules ride on
+/// their conv records; `db` lands whole in the header's `tuning` section so
+/// a loading host with a *different* ISA can still look its own entries up.
+pub fn save_with(
+    model: &CompiledModel,
+    db: Option<&crate::tune::TuningDb>,
+    path: &Path,
+) -> Result<()> {
     let mut payload = Payload::default();
     let mut convs = BTreeMap::new();
     for c in &model.convs {
@@ -281,6 +306,9 @@ pub fn save(model: &CompiledModel, path: &Path) -> Result<()> {
                 fields.push(("s_a", num(*s_a as f64)));
             }
         }
+        if let Some(sc) = &c.sched {
+            fields.push(("sched", crate::tune::sched_to_json(sc)));
+        }
         convs.insert(c.name.clone(), obj(fields));
     }
     let mut denses = BTreeMap::new();
@@ -288,14 +316,17 @@ pub fn save(model: &CompiledModel, path: &Path) -> Result<()> {
         denses.insert(d.name.clone(),
                       obj(vec![("w", payload.put_f32(&d.w)), ("b", payload.put_f32(&d.b))]));
     }
-    let header = obj(vec![
+    let mut header_fields = vec![
         ("graph", graph_to_json(&model.graph)),
         // writer provenance: which ISA the planes were prepacked for
         ("isa", s(model.isa.name())),
         ("convs", Json::Obj(convs)),
         ("denses", Json::Obj(denses)),
-    ])
-    .to_string();
+    ];
+    if let Some(d) = db.filter(|d| !d.is_empty()) {
+        header_fields.push(("tuning", d.to_json()));
+    }
+    let header = obj(header_fields).to_string();
 
     let mut out = Vec::with_capacity(16 + header.len() + payload.bytes.len());
     out.extend_from_slice(MAGIC);
@@ -313,7 +344,7 @@ pub fn load(path: &Path) -> Result<CompiledModel> {
         bail!("{}: not a .dlrt file", path.display());
     }
     let version = u32::from_le_bytes([bytes[4], bytes[5], bytes[6], bytes[7]]);
-    if version != VERSION {
+    if !(MIN_VERSION..=VERSION).contains(&version) {
         bail!("unsupported .dlrt version {version}");
     }
     let hlen: usize = u64::from_le_bytes(bytes[8..16].try_into().unwrap())
@@ -335,9 +366,34 @@ pub fn load(path: &Path) -> Result<CompiledModel> {
     // the loading host's own selected kernel decides the layout weights
     // must end up in; the file's recorded `isa` is provenance only
     let isa = ukernel::selected_isa().map_err(anyhow::Error::msg)?;
-    let want_layout = ukernel::kernel_for(isa)
-        .ok_or_else(|| anyhow!("selected ISA '{}' has no kernel entry", isa.name()))?
-        .weight_layout();
+    let uk = ukernel::kernel_for(isa)
+        .ok_or_else(|| anyhow!("selected ISA '{}' has no kernel entry", isa.name()))?;
+    let default_layout = uk.weight_layout();
+
+    // v3 tuning sections. `load` is the trust boundary: the embedded DB is
+    // bounds-checked record by record before any schedule can steer a
+    // prepack or a GEMM.
+    let label = path.display().to_string();
+    let tuning_db = match header.opt("tuning") {
+        Some(tj) => Some(crate::tune::TuningDb::from_json(&label, tj)?),
+        None => None,
+    };
+    let file_isa = header.opt("isa").and_then(|v| v.str().ok()).unwrap_or("").to_string();
+    let same_isa = file_isa == isa.name();
+    // ISA skew (another machine's file, or DLRT_FORCE_ISA overriding the
+    // tuned target): the per-conv schedules were searched — and their
+    // weights prepacked — for the file's ISA, so drop them and re-consult
+    // the embedded DB for entries tuned for ours. Misses degrade to the
+    // kernel's static defaults; never an error, never a mis-prepack.
+    let fallback_db = tuning_db.as_ref().filter(|d| !same_isa && d.has_isa(isa));
+    let gemm_shapes = match fallback_db {
+        Some(_) => crate::exec::planner::conv_gemm_shapes(&graph)?,
+        None => Vec::new(),
+    };
+    if !same_isa && tuning_db.is_some() && fallback_db.is_none() {
+        eprintln!("note: {label}: tuned for ISA {file_isa:?} but this host selected '{}'; \
+                   using static kernel defaults", isa.name());
+    }
 
     let mut conv_recs: BTreeMap<&str, &Json> = BTreeMap::new();
     if let Json::Obj(convs) = header.get("convs")? {
@@ -366,7 +422,30 @@ pub fn load(path: &Path) -> Result<CompiledModel> {
                     .ok_or_else(|| anyhow!("{name}: conv node has no kernel record"))?;
                 let scale = get_f32(payload, c.get("scale")?)?;
                 let bias = get_f32(payload, c.get("bias")?)?;
-                let kernel = match c.get("engine")?.str()? {
+                let engine_str = c.get("engine")?.str()?;
+                let sched = if same_isa {
+                    match c.opt("sched") {
+                        Some(sj) => {
+                            let sc = crate::tune::sched_from_json(sj)
+                                .and_then(|sc| {
+                                    crate::tune::validate_sched(engine_str, isa, &sc)
+                                        .map(|()| sc)
+                                })
+                                .map_err(|e| {
+                                    anyhow!("{label}: {name}: bad tuned schedule: {e}")
+                                })?;
+                            Some(sc)
+                        }
+                        None => None,
+                    }
+                } else {
+                    fallback_db.and_then(|d| {
+                        let sh = gemm_shapes.iter().find(|sh| sh.name == name)?;
+                        d.lookup("conv", sh.rows, sh.k, sh.cout, engine_str, isa)
+                            .map(|(e, _)| e.sched)
+                    })
+                };
+                let kernel = match engine_str {
                     "bitserial" => {
                         let rows = c.get("rows")?.usize()?;
                         let k = c.get("k")?.usize()?;
@@ -419,9 +498,14 @@ pub fn load(path: &Path) -> Result<CompiledModel> {
                             data,
                         };
                         // cross-ISA repack: serialized layout doesn't match
-                        // what this host's kernel streams — rebuild once here
-                        if packed.layout != want_layout {
-                            packed = PackedW::from_packed(&packed.to_row_major(), want_layout);
+                        // what this host's kernel streams — rebuild once
+                        // here (a tuned schedule owns its conv's layout)
+                        let want = match &sched {
+                            Some(sc) => uk.weight_layout_for(&sc.desc_for(isa)),
+                            None => default_layout,
+                        };
+                        if packed.layout != want {
+                            packed = PackedW::from_packed(&packed.to_row_major(), want);
                         }
                         ConvKernel::Bitserial {
                             packed,
@@ -444,6 +528,7 @@ pub fn load(path: &Path) -> Result<CompiledModel> {
                     kernel,
                     scale,
                     bias,
+                    sched,
                 });
             }
             Op::Dense { .. } => {
@@ -541,6 +626,151 @@ mod tests {
             let y2 = ex.run(&m2, &x).unwrap();
             assert_eq!(y1[0].data, y2[0].data, "saved under {}", isa.name());
         }
+    }
+
+    /// v3 same-ISA roundtrip: tuned schedules and the embedded DB survive
+    /// save/load, the loader validates and re-applies them, and outputs
+    /// stay bit-identical to the in-memory tuned model.
+    #[test]
+    fn tuned_roundtrip_applies_schedules_and_stays_bit_exact() {
+        use crate::compiler::compile_graph_tuned;
+        let g = tiny_test_graph(false);
+        let isa = ukernel::selected_isa().unwrap();
+        let db = crate::tune::synthetic_db(&g, isa).unwrap();
+        let m = compile_graph_tuned(&g, EngineChoice::Auto, isa, Some(&db)).unwrap();
+        assert!(m.convs.iter().all(|c| c.sched.is_some()));
+        let path = tmp("tuned.dlrt");
+        save_with(&m, Some(&db), &path).unwrap();
+        let m2 = load(&path).unwrap();
+        std::fs::remove_file(&path).ok();
+        for (a, b) in m.convs.iter().zip(&m2.convs) {
+            assert_eq!(a.sched, b.sched, "{}", a.name);
+        }
+        let mut x = Tensor::zeros(vec![1, 8, 8, 3]);
+        for (i, v) in x.data.iter_mut().enumerate() {
+            *v = (i % 5) as f32 * 0.1;
+        }
+        let mut ex = Executor::new(2);
+        let y1 = ex.run(&m, &x).unwrap();
+        let y2 = ex.run(&m2, &x).unwrap();
+        assert_eq!(y1[0].data, y2[0].data);
+    }
+
+    /// A `.dlrt` tuned (and prepacked) for one ISA must load on a host that
+    /// selects another without error or mis-prepack: per-conv schedules are
+    /// dropped, the embedded DB is re-consulted for the host's ISA, and
+    /// misses fall back to static defaults. Swept over every available ISA,
+    /// so the selected one exercises the apply direction and every other
+    /// one the fallback direction.
+    #[test]
+    fn cross_isa_tuned_roundtrip_falls_back_cleanly() {
+        use crate::compiler::compile_graph_tuned;
+        use crate::kernels::ukernel::available_isas;
+        let g = tiny_test_graph(false);
+        let host = ukernel::selected_isa().unwrap();
+        let mut x = Tensor::zeros(vec![1, 8, 8, 3]);
+        for (i, v) in x.data.iter_mut().enumerate() {
+            *v = (i % 7) as f32 * 0.09;
+        }
+        for isa in available_isas() {
+            let db = crate::tune::synthetic_db(&g, isa).unwrap();
+            let m = compile_graph_tuned(&g, EngineChoice::Auto, isa, Some(&db)).unwrap();
+            let path = tmp(&format!("xtuned_{}.dlrt", isa.name()));
+            save_with(&m, Some(&db), &path).unwrap();
+            let m2 = load(&path).unwrap();
+            std::fs::remove_file(&path).ok();
+            assert_eq!(m2.isa, host);
+            if isa == host {
+                assert!(m2.convs.iter().all(|c| c.sched.is_some()));
+            } else {
+                // the embedded DB only holds entries tuned for the saving
+                // ISA — this host must degrade to defaults, not error
+                assert!(m2.convs.iter().all(|c| c.sched.is_none()));
+            }
+            let mut ex = Executor::new(1);
+            let y1 = ex.run(&m, &x).unwrap();
+            let y2 = ex.run(&m2, &x).unwrap();
+            assert_eq!(y1[0].data, y2[0].data, "saved tuned under {}", isa.name());
+        }
+    }
+
+    /// Version-2 files (pre-tuning) still load: both v3 sections are
+    /// optional, so a sched-free v3 body is bytewise a valid v2 body.
+    #[test]
+    fn loads_version2_files() {
+        use crate::compiler::compile_graph_tuned;
+        let g = tiny_test_graph(false);
+        let isa = ukernel::selected_isa().unwrap();
+        let m = compile_graph_tuned(&g, EngineChoice::Auto, isa, None).unwrap();
+        let path = tmp("v2.dlrt");
+        save_with(&m, None, &path).unwrap();
+        let mut bytes = std::fs::read(&path).unwrap();
+        bytes[4..8].copy_from_slice(&2u32.to_le_bytes());
+        std::fs::write(&path, &bytes).unwrap();
+        let m2 = load(&path).unwrap();
+        std::fs::remove_file(&path).ok();
+        assert_eq!(m.engine_summary(), m2.engine_summary());
+    }
+
+    /// Patch the header JSON in place (same-length substitution keeps the
+    /// binary framing intact) to simulate a hostile/corrupt tuning record.
+    fn corrupt_header(path: &Path, from: &str, to: &str) {
+        assert_eq!(from.len(), to.len());
+        let mut bytes = std::fs::read(path).unwrap();
+        let hlen = u64::from_le_bytes(bytes[8..16].try_into().unwrap()) as usize;
+        let hdr = std::str::from_utf8(&bytes[16..16 + hlen]).unwrap();
+        let patched = hdr.replacen(from, to, 1);
+        assert_ne!(patched, hdr, "pattern {from:?} not found in header");
+        bytes[16..16 + hlen].copy_from_slice(patched.as_bytes());
+        std::fs::write(path, bytes).unwrap();
+    }
+
+    /// Untrusted tuning-DB records must be refused at load with a
+    /// path-prefixed diagnostic — zero tile geometry, bogus staging tags
+    /// and a bad DB version all reject instead of mis-prepacking
+    /// (alongside the existing bad-magic / bad-version / truncation cases).
+    #[test]
+    fn rejects_corrupt_tuning_records() {
+        use crate::compiler::compile_graph_tuned;
+        let g = tiny_test_graph(false);
+        let isa = ukernel::selected_isa().unwrap();
+        let db = crate::tune::synthetic_db(&g, isa).unwrap();
+        // compile untuned so the only tuning bytes in the file are the
+        // embedded DB section itself
+        let plain = compile_graph_tuned(&g, EngineChoice::Auto, isa, None).unwrap();
+        for (what, from, to) in [
+            ("zero tile_m", "\"tile_m\":5", "\"tile_m\":0"),
+            ("bad staging", "\"staging\":\"gather\"", "\"staging\":\"gathxr\""),
+            ("bad DB version", "\"version\":1", "\"version\":9"),
+        ] {
+            let path = tmp(&format!("baddb_{}.dlrt", what.replace(' ', "_")));
+            save_with(&plain, Some(&db), &path).unwrap();
+            corrupt_header(&path, from, to);
+            let err = load(&path).unwrap_err().to_string();
+            std::fs::remove_file(&path).ok();
+            assert!(err.contains(&path.display().to_string()),
+                    "{what}: diagnostic not path-prefixed: {err}");
+        }
+    }
+
+    /// A corrupt per-conv `sched` record (as opposed to the DB section) is
+    /// likewise refused with a path-prefixed diagnostic naming the conv.
+    #[test]
+    fn rejects_corrupt_per_conv_schedule() {
+        use crate::compiler::compile_graph_tuned;
+        let g = tiny_test_graph(false);
+        let isa = ukernel::selected_isa().unwrap();
+        let db = crate::tune::synthetic_db(&g, isa).unwrap();
+        let m = compile_graph_tuned(&g, EngineChoice::Auto, isa, Some(&db)).unwrap();
+        let path = tmp("badsched.dlrt");
+        // no embedded DB: the only "tile_m" bytes are per-conv scheds
+        save_with(&m, None, &path).unwrap();
+        corrupt_header(&path, "\"tile_m\":5", "\"tile_m\":0");
+        let err = load(&path).unwrap_err().to_string();
+        std::fs::remove_file(&path).ok();
+        assert!(err.contains("bad tuned schedule") && err.contains("tile_m")
+                    && err.contains(&path.display().to_string()),
+                "unexpected error: {err}");
     }
 
     #[test]

@@ -35,7 +35,9 @@ use crate::kernels::bitserial::{
 };
 use crate::kernels::elementwise::{self as ew, ActKind};
 use crate::kernels::fp32::{dense_rowmajor, scale_bias_rows_act, scale_bias_rows_add_act};
-use crate::kernels::im2col::{im2col_f32_view, im2col_quant_u8_view, ConvDims};
+use crate::kernels::im2col::{
+    im2col_f32_view, im2col_quant_u8_view, quantize_direct_u8, stage_direct_f32, ConvDims,
+};
 use crate::kernels::pool;
 use crate::kernels::ukernel::{self, Isa, PackedW, UKernel};
 use crate::obs;
@@ -74,6 +76,11 @@ pub struct CompiledConv {
     /// per-channel folded-BN scale and bias
     pub scale: Vec<f32>,
     pub bias: Vec<f32>,
+    /// Tuned schedule from the tuning DB (`dlrt tune`), if one matched at
+    /// compile/load time: geometry override for the bitserial GEMM (the
+    /// weights are prepacked in its tile order), a per-conv thread split,
+    /// and the im2col staging strategy. `None` = static kernel defaults.
+    pub sched: Option<crate::tune::Schedule>,
 }
 
 #[derive(Clone, Debug)]
@@ -662,21 +669,42 @@ fn conv_stage_cols(
 ) {
     let rows = d.rows();
     let patch = d.patch();
+    // A tuned `Staging::Direct` schedule skips the per-patch gather: on a
+    // unit conv (1x1, stride 1, no padding) reading a dense input the patch
+    // matrix IS the input, so staging degenerates to a flat copy/quantize.
+    // Guarded on the exact dims here (not just the DB entry) so a stale or
+    // nearest-shape entry can never mis-stage — it only falls back to the
+    // gather, which is bit-identical by construction.
+    let direct = conv.sched.map(|s| s.staging == crate::tune::Staging::Direct).unwrap_or(false)
+        && d.kh == 1 && d.kw == 1 && d.stride == [1, 1] && d.padding == [0, 0]
+        && src_off == 0 && src_stride == d.c;
     match &conv.kernel {
         ConvKernel::Fp32 { .. } => {
             scratch.cols_f32.resize(rows * patch, 0.0);
-            im2col_f32_view(x, d, src_stride, src_off, &mut scratch.cols_f32);
+            if direct {
+                stage_direct_f32(x, &mut scratch.cols_f32);
+            } else {
+                im2col_f32_view(x, d, src_stride, src_off, &mut scratch.cols_f32);
+            }
         }
         ConvKernel::Bitserial { s_a, a_bits, .. } => {
             let (qp_a, _) = qp_qn(*a_bits, false);
             scratch.cols_u8.resize(rows * patch, 0);
-            im2col_quant_u8_view(x, d, *s_a, qp_a as u8, src_stride, src_off,
-                                 &mut scratch.cols_u8);
+            if direct {
+                quantize_direct_u8(x, *s_a, qp_a as u8, &mut scratch.cols_u8);
+            } else {
+                im2col_quant_u8_view(x, d, *s_a, qp_a as u8, src_stride, src_off,
+                                     &mut scratch.cols_u8);
+            }
         }
         ConvKernel::Int8 { s_a, .. } => {
             scratch.cols_u8.resize(rows * patch, 0);
-            im2col_quant_u8_view(x, d, *s_a, 255, src_stride, src_off,
-                                 &mut scratch.cols_u8);
+            if direct {
+                quantize_direct_u8(x, *s_a, 255, &mut scratch.cols_u8);
+            } else {
+                im2col_quant_u8_view(x, d, *s_a, 255, src_stride, src_off,
+                                     &mut scratch.cols_u8);
+            }
         }
     }
 }
@@ -714,6 +742,14 @@ fn conv_finish(
     debug_assert_eq!(out.len(), rows * ostride);
     debug_assert!(res.map(|r| r.len() == rows * cout).unwrap_or(true));
     let plain = res.is_none() && view.is_none();
+    // Tuned schedule: tile-geometry override for the bitserial GEMM (the
+    // weights were prepacked in this tile order) plus an optional per-conv
+    // thread split. Integer GEMMs are bit-exact at any thread count; fp32
+    // schedules always inherit (enforced at DB validation).
+    let (desc, gthreads) = match conv.sched {
+        Some(s) => (s.desc_for(uk.desc.isa), s.gemm_threads(nthreads)),
+        None => (uk.desc, nthreads),
+    };
     match &conv.kernel {
         ConvKernel::Fp32 { wt } => {
             if plain {
@@ -733,8 +769,8 @@ fn conv_finish(
             pack_rows_u8_into(&scratch.cols_u8, rows, patch, *a_bits as usize,
                               &mut scratch.packed);
             scratch.acc.resize(rows * cout, 0);
-            (uk.gemm_bit)(&scratch.packed, packed, *w_bits as usize,
-                          &mut scratch.acc[..rows * cout], nthreads);
+            (uk.gemm_bit)(&desc, &scratch.packed, packed, *w_bits as usize,
+                          &mut scratch.acc[..rows * cout], gthreads);
             if plain {
                 dequant_scale_bias_act(&scratch.acc[..rows * cout], cout, s_a * s_w,
                                        &conv.scale, &conv.bias, fused, out);
@@ -747,7 +783,7 @@ fn conv_finish(
         ConvKernel::Int8 { codes, s_w, s_a } => {
             scratch.acc.resize(rows * cout, 0);
             (uk.gemm_u8i8)(&scratch.cols_u8, codes, rows, cout, patch,
-                           &mut scratch.acc[..rows * cout], nthreads);
+                           &mut scratch.acc[..rows * cout], gthreads);
             if plain {
                 dequant_scale_bias_act(&scratch.acc[..rows * cout], cout, s_a * s_w,
                                        &conv.scale, &conv.bias, fused, out);

@@ -97,6 +97,46 @@ pub fn peak_live_elems(g: &Graph) -> anyhow::Result<usize> {
     Ok(peak)
 }
 
+/// The GEMM problem one conv lowers to (im2col rows × patch × cout), plus
+/// whether it is a unit conv (1×1, stride 1, no padding) — the shape key
+/// the tuning DB (`crate::tune`) is indexed by and the eligibility bit for
+/// the direct (copy-free) im2col staging strategy.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ConvGemmShape {
+    pub name: String,
+    /// GEMM M at batch 1: `oh * ow` output positions.
+    pub rows: usize,
+    /// GEMM K: `kh * kw * cin` patch elements.
+    pub k: usize,
+    /// GEMM N: output channels.
+    pub cout: usize,
+    /// 1×1 / stride 1 / pad 0 — im2col is the identity permutation.
+    pub unit: bool,
+}
+
+/// Per-conv GEMM shapes in node order (shared by `dlrt tune`, the tuned
+/// compile path, and `format::load`'s cross-ISA schedule re-resolution).
+pub fn conv_gemm_shapes(g: &Graph) -> Result<Vec<ConvGemmShape>> {
+    let shapes = g.infer_shapes()?;
+    let mut out = Vec::new();
+    for n in &g.nodes {
+        if let Op::Conv2d { kernel, stride, padding, cin, cout, .. } = &n.op {
+            let os = &shapes[&n.output];
+            // output shape is [n, oh, ow, cout]; rows is per batch item
+            let rows: usize = os[1..os.len() - 1].iter().product();
+            let unit = *kernel == [1, 1] && *stride == [1, 1] && *padding == [0, 0];
+            out.push(ConvGemmShape {
+                name: n.name.clone(),
+                rows,
+                k: kernel[0] * kernel[1] * cin,
+                cout: *cout,
+                unit,
+            });
+        }
+    }
+    Ok(out)
+}
+
 // ---------------------------------------------------------------------------
 // ExecPlan
 // ---------------------------------------------------------------------------

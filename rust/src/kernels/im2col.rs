@@ -171,6 +171,28 @@ pub fn im2col_quant_u8_view(
     }
 }
 
+/// Direct staging for a unit conv (1×1, stride 1, pad 0) over a dense
+/// input: im2col is the identity permutation there, so staging the patch
+/// matrix is one flat copy. Selected by a tuned schedule's
+/// `staging = direct` (`crate::tune::Staging`); the gather path stays the
+/// default and the only option for strided/padded reads.
+pub fn stage_direct_f32(x: &[f32], out: &mut [f32]) {
+    debug_assert!(x.len() >= out.len());
+    out.copy_from_slice(&x[..out.len()]);
+}
+
+/// [`stage_direct_f32`]'s quantizing twin: the exact cast-based saturating
+/// quantizer of [`im2col_quant_u8_view`] applied as one flat pass, so the
+/// staged codes are bit-identical to the gather path's.
+pub fn quantize_direct_u8(x: &[f32], s_a: f32, qp: u8, out: &mut [u8]) {
+    debug_assert!(x.len() >= out.len());
+    let inv = 1.0 / s_a;
+    let qpf = qp as u32;
+    for (dst, &v) in out.iter_mut().zip(x) {
+        *dst = ((v * inv + 0.5) as u32).min(qpf) as u8;
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -237,6 +259,25 @@ mod tests {
                 assert_eq!(got_q, want_q, "u8 k{k} s{s} stride {stride} off {off}");
             }
         }
+    }
+
+    /// Direct staging must be bit-identical to the gather path on its only
+    /// legal shape class (unit convs over dense inputs), f32 and quantized.
+    #[test]
+    fn direct_staging_matches_gather_on_unit_convs() {
+        let d = ConvDims::new(2, 3, 4, 5, 1, 1, [1, 1], [0, 0]);
+        let x: Vec<f32> =
+            (0..d.n * d.h * d.w * d.c).map(|v| (v as f32 * 0.49).sin()).collect();
+        let mut want = vec![0.0f32; d.rows() * d.patch()];
+        im2col_f32(&x, &d, &mut want);
+        let mut got = vec![0.0f32; want.len()];
+        stage_direct_f32(&x, &mut got);
+        assert_eq!(got, want);
+        let mut want_q = vec![0u8; want.len()];
+        im2col_quant_u8(&x, &d, 0.13, 3, &mut want_q);
+        let mut got_q = vec![0u8; want.len()];
+        quantize_direct_u8(&x, 0.13, 3, &mut got_q);
+        assert_eq!(got_q, want_q);
     }
 
     #[test]

@@ -40,7 +40,14 @@ pub static KERNEL: UKernel = UKernel {
     gemm_f32: crate::kernels::fp32::gemm_rowmajor_bt,
 };
 
-fn gemm_bit(a: &Packed, w: &PackedW, w_bits_signed: usize, out: &mut [i32], nthreads: usize) {
+fn gemm_bit(
+    desc: &UKernelDesc,
+    a: &Packed,
+    w: &PackedW,
+    w_bits_signed: usize,
+    out: &mut [i32],
+    nthreads: usize,
+) {
     assert_eq!(a.k, w.k, "reduction dim mismatch");
     assert_eq!(a.words_per_row, w.words_per_row);
     assert_eq!(w.plane_stride % CHUNK, 0, "AVX2 kernel needs chunk-padded weight planes");
@@ -51,18 +58,23 @@ fn gemm_bit(a: &Packed, w: &PackedW, w_bits_signed: usize, out: &mut [i32], nthr
         return;
     }
     let (_, qn) = qp_qn(w_bits_signed as u8, true);
+    // tuned geometry: M clamps to the stack-staged block (corrections +
+    // activation tail chunks are const-sized), N is free loop blocking
+    let tile_m = desc.tile_m.clamp(1, TILE_M);
+    let tile_n = desc.tile_n.max(1);
     threads::par_chunks_rows(out, n, nthreads, |row0, chunk| {
         // SAFETY: this entry is only reachable through the registry, which
         // hands out the AVX2 kernel after `is_x86_feature_detected!("avx2")`
         // succeeded (`host_supports`), satisfying the target_feature
         // contract of `bit_rows_block`.
-        unsafe { bit_rows_block(a, w, qn, row0, chunk, n) }
+        unsafe { bit_rows_block(a, w, qn, row0, chunk, n, tile_m, tile_n) }
     });
 }
 
-/// One worker's block of whole output rows, tiled `TILE_M`×`TILE_N` like the
+/// One worker's block of whole output rows, tiled `tile_m`×`tile_n` like the
 /// scalar kernel (exact integer arithmetic — tiling cannot change results).
 #[target_feature(enable = "avx2")]
+#[allow(clippy::too_many_arguments)]
 unsafe fn bit_rows_block(
     a: &Packed,
     w: &PackedW,
@@ -70,6 +82,8 @@ unsafe fn bit_rows_block(
     row0: usize,
     chunk: &mut [i32],
     n: usize,
+    tile_m: usize,
+    tile_n: usize,
 ) {
     let rows = chunk.len() / n;
     let nwords = a.words_per_row;
@@ -81,7 +95,7 @@ unsafe fn bit_rows_block(
     let mut tails = [[0u64; CHUNK]; TILE_M * MAX_BITS];
     let mut mt = 0;
     while mt < rows {
-        let mt_end = (mt + TILE_M).min(rows);
+        let mt_end = (mt + tile_m).min(rows);
         for mi in mt..mt_end {
             corr[mi - mt] = qn * row_code_sum(a, row0 + mi);
             for ab in 0..a.bits {
@@ -93,7 +107,7 @@ unsafe fn bit_rows_block(
         }
         let mut nt = 0;
         while nt < n {
-            let nt_end = (nt + TILE_N).min(n);
+            let nt_end = (nt + tile_n).min(n);
             for mi in mt..mt_end {
                 let c = corr[mi - mt];
                 for col in nt..nt_end {

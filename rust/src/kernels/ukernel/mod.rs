@@ -168,8 +168,11 @@ impl PackedW {
 }
 
 /// Bitserial GEMM: packed unsigned activations × prepacked offset-encoded
-/// weights → i32 (same contract as `bitserial::gemm_bitserial`).
-pub type BitGemmFn = fn(a: &Packed, w: &PackedW, w_bits_signed: usize, out: &mut [i32], nthreads: usize);
+/// weights → i32 (same contract as `bitserial::gemm_bitserial`). The first
+/// argument carries the tile geometry to run with — normally the kernel's
+/// own `desc`, or a tuned override from the schedule DB (`dlrt tune`); the
+/// kernel clamps it to whatever its register blocking can honor.
+pub type BitGemmFn = fn(desc: &UKernelDesc, a: &Packed, w: &PackedW, w_bits_signed: usize, out: &mut [i32], nthreads: usize);
 /// int8 GEMM: `a` m×k u8 codes, `b` n×k i8 codes, i32 accumulate.
 pub type I8GemmFn = fn(a: &[u8], b: &[i8], m: usize, n: usize, k: usize, out: &mut [i32], nthreads: usize);
 /// fp32 GEMM: `a` m×k, `b` n×k (transposed B), f32 accumulate.
@@ -184,14 +187,32 @@ pub struct UKernel {
 }
 
 impl UKernel {
-    /// The weight bit-plane layout this kernel's bitserial GEMM consumes.
+    /// The weight bit-plane layout this kernel's bitserial GEMM consumes
+    /// under its default (untuned) geometry.
     pub fn weight_layout(&self) -> WLayout {
+        self.weight_layout_for(&self.desc)
+    }
+
+    /// The layout for an overridden geometry (a tuned schedule): same rule,
+    /// but tile/chunk come from `desc` instead of the static defaults.
+    pub fn weight_layout_for(&self, desc: &UKernelDesc) -> WLayout {
         match self.desc.isa {
             Isa::Scalar => WLayout::RowMajor,
             Isa::Neon | Isa::Avx2 => {
-                WLayout::TileN { tile_n: self.desc.tile_n, chunk: self.desc.k_unroll }
+                WLayout::TileN { tile_n: desc.tile_n, chunk: desc.k_unroll }
             }
         }
+    }
+}
+
+/// The packed-word chunk the ISA's bitserial inner loop natively consumes
+/// per vector step; tuned `k_unroll` values must be a positive multiple of
+/// this so padded planes keep satisfying the kernel's stride asserts.
+pub fn native_chunk(isa: Isa) -> usize {
+    match isa {
+        Isa::Scalar => 1,
+        Isa::Neon => 2,
+        Isa::Avx2 => 4,
     }
 }
 
@@ -376,10 +397,55 @@ mod tests {
                         gemm_bitserial(&ap, &wp, wb, &mut want, 1);
                         for threads in [1usize, 3] {
                             let mut got = vec![0i32; m * n];
-                            (uk.gemm_bit)(&ap, &pw, wb, &mut got, threads);
+                            (uk.gemm_bit)(&uk.desc, &ap, &pw, wb, &mut got, threads);
                             assert_eq!(
                                 got, want,
                                 "{} m={m} n={n} k={k} {ab}A{wb}W t={threads}",
+                                isa.name()
+                            );
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    /// Tuned-geometry sweep: deliberately odd `UKernelDesc` overrides
+    /// (prime tiles, doubled k_unroll) against the scalar reference —
+    /// tile blocking must never change the integer result, and the
+    /// prepacked layout must follow the override, not the default.
+    #[test]
+    fn tuned_desc_overrides_stay_bit_exact() {
+        let mut rng = Rng::new(24_601);
+        for isa in available_isas() {
+            let uk = kernel_for(isa).unwrap();
+            let overrides = [
+                UKernelDesc { tile_m: 5, tile_n: 3, ..uk.desc },
+                UKernelDesc { tile_m: 1, tile_n: 1, ..uk.desc },
+                UKernelDesc { tile_m: 64, tile_n: 32, k_unroll: uk.desc.k_unroll * 2, ..uk.desc },
+            ];
+            for desc in &overrides {
+                let layout = uk.weight_layout_for(desc);
+                for &(m, n, k) in &[(1usize, 1usize, 1usize), (5, 17, 130), (4, 7, 300)] {
+                    for wb in [1usize, 2, 8] {
+                        let (qp, qn) = qp_qn(wb as u8, true);
+                        let ab = 2usize;
+                        let a: Vec<u8> =
+                            (0..m * k).map(|_| rng.usize(1 << ab) as u8).collect();
+                        let w: Vec<i32> = (0..n * k)
+                            .map(|_| rng.range(-(qn as i64), qp as i64 + 1) as i32)
+                            .collect();
+                        let ap = pack_rows_u8(&a, m, k, ab);
+                        let wp = pack_weights_offset(&w, n, k, wb);
+                        let pw = PackedW::from_packed(&wp, layout);
+                        let mut want = vec![0i32; m * n];
+                        gemm_bitserial(&ap, &wp, wb, &mut want, 1);
+                        for threads in [1usize, 3] {
+                            let mut got = vec![0i32; m * n];
+                            (uk.gemm_bit)(desc, &ap, &pw, wb, &mut got, threads);
+                            assert_eq!(
+                                got, want,
+                                "{} {desc:?} m={m} n={n} k={k} t={threads}",
                                 isa.name()
                             );
                         }

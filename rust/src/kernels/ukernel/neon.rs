@@ -5,9 +5,10 @@
 //! popcount with `vcntq_u8` (each byte ≤ 8, so 31 chunks stay < 256 before
 //! the `vaddlvq_u8` horizontal flush), weight planes chunk-padded by the
 //! `TileN` prepack so every weight load is a whole in-bounds vector, and a
-//! zero-padded stack chunk for the activation tail. The int8 path stays on
-//! the portable scalar GEMM for now — the SDOT specialization is seeded as
-//! a ROADMAP follow-up.
+//! zero-padded stack chunk for the activation tail. The int8 path takes a
+//! `+dotprod`-gated SDOT kernel when the CPU reports the feature (u8·i8
+//! via the unsigned-dot + XOR-0x80 offset identity below) and falls back
+//! to the portable scalar GEMM otherwise.
 
 use std::arch::aarch64::*;
 
@@ -29,11 +30,18 @@ const TILE_N: usize = 16;
 pub static KERNEL: UKernel = UKernel {
     desc: UKernelDesc { isa: Isa::Neon, tile_m: TILE_M, tile_n: TILE_N, k_unroll: CHUNK },
     gemm_bit,
-    gemm_u8i8: crate::kernels::int8::gemm_u8i8_i32,
+    gemm_u8i8,
     gemm_f32: crate::kernels::fp32::gemm_rowmajor_bt,
 };
 
-fn gemm_bit(a: &Packed, w: &PackedW, w_bits_signed: usize, out: &mut [i32], nthreads: usize) {
+fn gemm_bit(
+    desc: &UKernelDesc,
+    a: &Packed,
+    w: &PackedW,
+    w_bits_signed: usize,
+    out: &mut [i32],
+    nthreads: usize,
+) {
     assert_eq!(a.k, w.k, "reduction dim mismatch");
     assert_eq!(a.words_per_row, w.words_per_row);
     assert_eq!(w.plane_stride % CHUNK, 0, "NEON kernel needs chunk-padded weight planes");
@@ -44,18 +52,23 @@ fn gemm_bit(a: &Packed, w: &PackedW, w_bits_signed: usize, out: &mut [i32], nthr
         return;
     }
     let (_, qn) = qp_qn(w_bits_signed as u8, true);
+    // tuned geometry: M clamps to the stack-staged block (corrections +
+    // activation tail chunks are const-sized), N is free loop blocking
+    let tile_m = desc.tile_m.clamp(1, TILE_M);
+    let tile_n = desc.tile_n.max(1);
     threads::par_chunks_rows(out, n, nthreads, |row0, chunk| {
         // SAFETY: this entry is only reachable through the registry, which
         // hands out the NEON kernel after runtime feature detection
         // (`host_supports`), satisfying `bit_rows_block`'s target_feature
         // contract.
-        unsafe { bit_rows_block(a, w, qn, row0, chunk, n) }
+        unsafe { bit_rows_block(a, w, qn, row0, chunk, n, tile_m, tile_n) }
     });
 }
 
-/// One worker's block of whole output rows, tiled `TILE_M`×`TILE_N` like the
+/// One worker's block of whole output rows, tiled `tile_m`×`tile_n` like the
 /// scalar kernel (exact integer arithmetic — tiling cannot change results).
 #[target_feature(enable = "neon")]
+#[allow(clippy::too_many_arguments)]
 unsafe fn bit_rows_block(
     a: &Packed,
     w: &PackedW,
@@ -63,6 +76,8 @@ unsafe fn bit_rows_block(
     row0: usize,
     chunk: &mut [i32],
     n: usize,
+    tile_m: usize,
+    tile_n: usize,
 ) {
     let rows = chunk.len() / n;
     let nwords = a.words_per_row;
@@ -72,7 +87,7 @@ unsafe fn bit_rows_block(
     let mut tails = [[0u64; CHUNK]; TILE_M * MAX_BITS];
     let mut mt = 0;
     while mt < rows {
-        let mt_end = (mt + TILE_M).min(rows);
+        let mt_end = (mt + tile_m).min(rows);
         for mi in mt..mt_end {
             corr[mi - mt] = qn * row_code_sum(a, row0 + mi);
             for ab in 0..a.bits {
@@ -84,7 +99,7 @@ unsafe fn bit_rows_block(
         }
         let mut nt = 0;
         while nt < n {
-            let nt_end = (nt + TILE_N).min(n);
+            let nt_end = (nt + tile_n).min(n);
             for mi in mt..mt_end {
                 let c = corr[mi - mt];
                 for col in nt..nt_end {
@@ -162,5 +177,70 @@ unsafe fn dot_plane_pair(
             total += vaddlvq_u8(bytes) as u64;
         }
         total
+    }
+}
+
+fn gemm_u8i8(a: &[u8], b: &[i8], m: usize, n: usize, k: usize, out: &mut [i32], nthreads: usize) {
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(b.len(), n * k);
+    debug_assert_eq!(out.len(), m * n);
+    if m == 0 || n == 0 {
+        return;
+    }
+    // SDOT lives in the optional dotprod extension (Armv8.2+), not baseline
+    // NEON — gate on runtime detection and keep the portable loop as the
+    // fallback so pre-8.2 cores still dispatch correctly.
+    if !std::arch::is_aarch64_feature_detected!("dotprod") {
+        crate::kernels::int8::gemm_u8i8_i32(a, b, m, n, k, out, nthreads);
+        return;
+    }
+    threads::par_chunks_rows(out, n, nthreads, |row0, chunk| {
+        // SAFETY: the dotprod detection above succeeded on this CPU (and
+        // NEON is implied by reaching this registry entry), satisfying
+        // `i8_rows_block_sdot`'s target_feature contract.
+        unsafe { i8_rows_block_sdot(a, b, k, n, row0, chunk) }
+    });
+}
+
+/// u8·i8 GEMM on the SDOT 4-way dot-accumulate (`vdotq_u32`): the signed
+/// operand is offset to unsigned on the fly (`(b ⊕ 0x80) as u8 == b + 128`),
+/// so `Σ a·b = Σ a·(b ⊕ 0x80) − 128·Σa` — exact in i64, narrowed to i32 at
+/// the end. Per-u32-lane partial sums stay below 2³² for any reduction up to
+/// k ≈ 2.6e5 (4·255·255 per step), far past any conv patch here.
+#[target_feature(enable = "neon,dotprod")]
+unsafe fn i8_rows_block_sdot(
+    a: &[u8],
+    b: &[i8],
+    k: usize,
+    n: usize,
+    row0: usize,
+    chunk: &mut [i32],
+) {
+    let kv = k / 16 * 16;
+    for (i, orow) in chunk.chunks_mut(n).enumerate() {
+        let arow = &a[(row0 + i) * k..(row0 + i + 1) * k];
+        let rowsum: i64 = arow.iter().map(|&v| v as i64).sum();
+        for (j, o) in orow.iter_mut().enumerate() {
+            let brow = &b[j * k..(j + 1) * k];
+            // SAFETY: every 16-byte load stays inside `arow`/`brow`
+            // (`kk + 16 <= kv <= k`); NEON+dotprod are guaranteed by this
+            // fn's target_feature contract (upheld at the dispatch check).
+            unsafe {
+                let bias = vdupq_n_u8(0x80);
+                let mut accv = vdupq_n_u32(0);
+                let mut kk = 0;
+                while kk < kv {
+                    let av = vld1q_u8(arow.as_ptr().add(kk));
+                    let bv = vld1q_u8(brow.as_ptr().add(kk) as *const u8);
+                    accv = vdotq_u32(accv, av, veorq_u8(bv, bias));
+                    kk += 16;
+                }
+                let mut s = vaddlvq_u32(accv) as i64;
+                for kk in kv..k {
+                    s += arow[kk] as i64 * (brow[kk] as i64 + 128);
+                }
+                *o = (s - 128 * rowsum) as i32;
+            }
+        }
     }
 }

@@ -21,8 +21,11 @@ pub static KERNEL: UKernel = UKernel {
 /// loop nest and arithmetic to `bitserial::gemm_bitserial_tiled`, but the
 /// weight planes are read at `w.plane_stride` spacing so both `RowMajor`
 /// and chunk-padded `TileN` layouts work (padding words are zero and a
-/// plane dot only reads the first `words_per_row` of each plane).
+/// plane dot only reads the first `words_per_row` of each plane). Tile
+/// geometry comes from `desc` (default or tuned); blocking never changes
+/// the integer result, only the cache walk.
 pub(super) fn gemm_bit(
+    desc: &UKernelDesc,
     a: &Packed,
     w: &PackedW,
     w_bits_signed: usize,
@@ -37,7 +40,7 @@ pub(super) fn gemm_bit(
     if m == 0 || n == 0 {
         return;
     }
-    let (tile_m, tile_n) = (KERNEL.desc.tile_m.min(MAX_TILE_M), KERNEL.desc.tile_n);
+    let (tile_m, tile_n) = (desc.tile_m.clamp(1, MAX_TILE_M), desc.tile_n.max(1));
     let nwords = a.words_per_row;
 
     threads::par_chunks_rows(out, n, nthreads, |row0, chunk| {

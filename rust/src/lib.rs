@@ -42,6 +42,9 @@
 //!   profiler rings, request-scoped span tracing with Chrome trace-event
 //!   export, structured access logs (`dlrt profile`, `GET /v1/debug/trace`).
 //! * [`costmodel`] — analytical Cortex-A53/A72/A57 latency projection.
+//! * [`tune`] — `dlrt tune`: on-device schedule search over micro-kernel
+//!   tile geometry / thread splits / im2col staging, persisted to a
+//!   versioned tuning DB the compiler and `.dlrt` loader consult.
 //! * [`models`] — native graph builders for the paper's evaluation models.
 //! * [`bench_harness`] — timing + paper-table reporting used by `cargo bench`.
 //! * [`util`] — hand-rolled substrates for this offline environment: JSON
@@ -67,6 +70,7 @@ pub mod quant;
 #[cfg(feature = "pjrt")]
 pub mod runtime;
 pub mod serve;
+pub mod tune;
 pub mod util;
 
 pub use dlrt::graph::{Graph, Node, Op, QCfg};

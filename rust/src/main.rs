@@ -2,6 +2,14 @@
 //!
 //! ```text
 //! dlrt compile <model_dir> --out <file.dlrt> [--engine auto|fp32|int8]
+//!              [--tune-db tune.json]   # consult a dlrt-tune DB and embed it
+//! dlrt tune    [<model_dir> | --model NAME --res N] [--budget N] [--reps N]
+//!              [--threads N] [--out tune.json] [--synthetic]
+//!              # on-device schedule search for this host's selected ISA;
+//!              # merges measured winners into the --out DB (re-run after
+//!              # any kernel change — entries are benchmarks, not proofs);
+//!              # --synthetic skips the search and writes deterministic
+//!              # coverage schedules (CI / test fixture)
 //! dlrt run     <file.dlrt | model_dir> [--threads N] [--reps N] [--batch B]
 //! dlrt inspect [<file.dlrt | model_dir>] [--model NAME --res N] [--layers]
 //!              [--plan]                  # dump the lowered execution plan
@@ -67,6 +75,7 @@ fn main() {
     };
     let result = match cmd.as_str() {
         "compile" => cmd_compile(&args),
+        "tune" => cmd_tune(&args),
         "run" => cmd_run(&args),
         "inspect" => cmd_inspect(&args),
         "profile" => cmd_profile(&args),
@@ -95,8 +104,8 @@ fn main() {
 fn print_usage() {
     eprintln!("dlrt — ultra-low-bit bitserial inference runtime (DeepliteRT repro)");
     eprintln!(
-        "commands: compile | run | inspect | profile | verify | bench | cost | serve | \
-         client | pjrt"
+        "commands: compile | tune | run | inspect | profile | verify | bench | cost | \
+         serve | client | pjrt"
     );
     eprintln!("see rust/src/main.rs docs or README.md for flags");
 }
@@ -159,12 +168,43 @@ fn cmd_compile(args: &Args) -> Result<()> {
     // accepts an exported model dir positionally, or a native builder via
     // --model NAME --res N (so CI can roundtrip a .dlrt without artifacts)
     let engine = EngineChoice::parse(args.get_or("engine", "auto"))?;
-    let (name, model) = load_model(args, engine)?;
+    let tune_db = match args.get("tune-db") {
+        Some(p) => Some(dlrt::tune::TuningDb::load(Path::new(p))?),
+        None => None,
+    };
+    let (name, model) = match &tune_db {
+        Some(db) => {
+            // compile against the explicit DB (load_model would only see
+            // the DLRT_TUNE_DB ambient one)
+            let isa = dlrt::kernels::ukernel::selected_isa().map_err(anyhow::Error::msg)?;
+            let (name, g) = if let Some(path) = args.positional.first() {
+                if Path::new(path).extension().map(|e| e == "dlrt").unwrap_or(false) {
+                    bail!("--tune-db applies at compile time; pass a model dir or builder, \
+                           not an already-compiled .dlrt");
+                }
+                let g = load_arch(Path::new(path))?;
+                (g.name.clone(), g)
+            } else {
+                let name = args.get_or("model", "resnet18").to_string();
+                let res = args.usize_or("res", default_res(&name))?;
+                (format!("{name}@{res}"), build_named(&name, res, args)?)
+            };
+            (name, dlrt::compiler::compile_graph_tuned(&g, engine, isa, Some(db))?)
+        }
+        None => load_model(args, engine)?,
+    };
     let out = PathBuf::from(args.get_or("out", "model.dlrt"));
-    format::save(&model, &out)?;
+    match &tune_db {
+        Some(db) => format::save_with(&model, Some(db), &out)?,
+        None => format::save(&model, &out)?,
+    }
     let fp32_bytes: usize = model.graph.weights.values().map(|w| w.w.len() * 4).sum();
     println!("compiled {name} -> {}", out.display());
     println!("engines: {:?}", model.engine_summary());
+    if tune_db.is_some() {
+        let tuned = model.convs.iter().filter(|c| c.sched.is_some()).count();
+        println!("tuned  : {tuned}/{} convs scheduled from the DB", model.convs.len());
+    }
     if fp32_bytes > 0 {
         println!(
             "weights: {} B packed vs {} B fp32 ({:.2}x compression)",
@@ -175,6 +215,83 @@ fn cmd_compile(args: &Args) -> Result<()> {
     } else {
         println!("weights: {} B packed", model.weight_bytes());
     }
+    Ok(())
+}
+
+/// `dlrt tune` — benchmark candidate kernel schedules per (conv GEMM shape,
+/// engine) on *this* machine and persist measured winners to a tuning DB.
+/// The cost model only ranks the candidate grid (search prior); every
+/// persisted entry won a wall-clock measurement by ≥2%, and lookups that
+/// miss fall back to static defaults, so tuned plans are never slower by
+/// construction.
+fn cmd_tune(args: &Args) -> Result<()> {
+    let isa = dlrt::kernels::ukernel::selected_isa().map_err(anyhow::Error::msg)?;
+    let g = if let Some(path) = args.positional.first() {
+        load_arch(Path::new(path))?
+    } else {
+        let name = args.get_or("model", "resnet18").to_string();
+        let res = args.usize_or("res", default_res(&name))?;
+        build_named(&name, res, args)?
+    };
+    let opts = dlrt::tune::TuneOpts {
+        budget: args.usize_or("budget", 8)?,
+        reps: args.usize_or("reps", 5)?,
+        threads: args.usize_or("threads", 1)?,
+    };
+    let out = PathBuf::from(args.get_or("out", "tune.json"));
+    // merge into an existing DB so successive runs accumulate shapes
+    let mut db = if out.exists() {
+        dlrt::tune::TuningDb::load(&out)?
+    } else {
+        dlrt::tune::TuningDb::new()
+    };
+    if args.flag("synthetic") {
+        // deterministic coverage DB (CI / tests): no measurement, every
+        // conv GEMM shape gets a synthetic schedule for each engine
+        let syn = dlrt::tune::synthetic_db(&g, isa)?;
+        let n = syn.entries.len();
+        for e in syn.entries {
+            db.upsert(e);
+        }
+        db.save(&out)?;
+        println!("dlrt tune — {} on isa {}: synthetic coverage DB (no search)",
+                 g.name, isa.name());
+        println!("wrote {n} synthetic entries -> {} ({} entries total)",
+                 out.display(), db.entries.len());
+        println!("apply with: dlrt compile --tune-db {} | DLRT_TUNE_DB={}",
+                 out.display(), out.display());
+        return Ok(());
+    }
+    println!("dlrt tune — {} on isa {} (budget {}, reps {}, threads {})",
+             g.name, isa.name(), opts.budget, opts.reps, opts.threads);
+    let reports = dlrt::tune::tune_graph(&g, isa, &opts, &mut db)?;
+    let mut table = Table::new(
+        &format!("schedule search — {} @ {}", g.name, isa.name()),
+        &["shape MxKxN", "convs", "engine", "default", "tuned", "schedule", "result"],
+    );
+    for r in &reports {
+        table.row(vec![
+            format!("{}x{}x{}", r.m, r.k, r.n),
+            r.convs.to_string(),
+            r.engine.clone(),
+            ms(r.default_ms),
+            ms(r.tuned_ms),
+            format!("{}x{} u{} t{} {}", r.sched.tile_m, r.sched.tile_n, r.sched.k_unroll,
+                    r.sched.threads, r.sched.staging.name()),
+            if r.improved {
+                format!("{:.2}x", r.default_ms / r.tuned_ms.max(1e-9))
+            } else {
+                "default kept".to_string()
+            },
+        ]);
+    }
+    table.print();
+    db.save(&out)?;
+    let kept = reports.iter().filter(|r| r.improved).count();
+    println!("kept {kept}/{} searched schedules -> {} ({} entries total)",
+             reports.len(), out.display(), db.entries.len());
+    println!("apply with: dlrt compile --tune-db {} | DLRT_TUNE_DB={}",
+             out.display(), out.display());
     Ok(())
 }
 
@@ -288,6 +405,8 @@ fn cmd_inspect(args: &Args) -> Result<()> {
         println!("stripe readers      : {}", p.read_view_instrs());
         println!("same-slot stripes   : {}", p.same_slot_stripe_instrs());
         println!("concat copy instrs  : {}", p.concat_copy_instrs());
+        let tuned = model.convs.iter().filter(|c| c.sched.is_some()).count();
+        println!("tuned schedules     : {tuned}/{} convs", model.convs.len());
         match dlrt::exec::verify::verify(p) {
             Ok(rep) => println!(
                 "verifier: OK — {} regions, {} kills, {} reads, {} race partitions",
@@ -320,15 +439,20 @@ fn cmd_inspect(args: &Args) -> Result<()> {
             let mode = if ins.in_place { " (in-place)" } else { "" };
             let kern = match (ins.kernel_idx, desc) {
                 (Some(ki), Some(d)) => {
-                    let eng = match &ins.op {
-                        dlrt::dlrt::graph::Op::Conv2d { .. } => model
-                            .convs
-                            .get(ki)
-                            .map(|c| c.kernel.engine_name())
-                            .unwrap_or("?"),
-                        _ => "dense",
+                    let (eng, sched) = match &ins.op {
+                        dlrt::dlrt::graph::Op::Conv2d { .. } => {
+                            let c = model.convs.get(ki);
+                            (c.map(|c| c.kernel.engine_name()).unwrap_or("?"),
+                             c.and_then(|c| c.sched))
+                        }
+                        _ => ("dense", None),
                     };
-                    format!(" uk#{ki}[{eng} {} {}x{}]", d.isa.name(), d.tile_m, d.tile_n)
+                    // a tuned schedule overrides the default tile geometry
+                    let (tm, tn, tag) = match sched {
+                        Some(sc) => (sc.tile_m, sc.tile_n, " tuned"),
+                        None => (d.tile_m, d.tile_n, ""),
+                    };
+                    format!(" uk#{ki}[{eng} {} {tm}x{tn}{tag}]", d.isa.name())
                 }
                 _ => String::new(),
             };
@@ -394,6 +518,8 @@ fn inspect_json(model: &dlrt::exec::CompiledModel, peak: usize) -> Json {
         ("weight_bytes", num(model.weight_bytes() as f64)),
         ("peak_act_elems", num(peak as f64)),
         ("isa", s(model.isa.name())),
+        ("tuned_convs",
+         num(model.convs.iter().filter(|c| c.sched.is_some()).count() as f64)),
         (
             "plan",
             obj(vec![

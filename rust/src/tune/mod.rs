@@ -1,0 +1,861 @@
+//! `dlrt tune` — per-(op, shape, engine, ISA) schedule search with a
+//! persisted, versioned tuning DB.
+//!
+//! The registry (`kernels::ukernel`) carries one static tile geometry per
+//! ISA; "Automating Generation of Low Precision Deep Learning Operators"
+//! (PAPERS.md) shows searched schedules beat one-shape-fits-all constants.
+//! This module searches candidate [`UKernelDesc`] overrides — tile_m /
+//! tile_n / k_unroll, a thread split, and the im2col staging strategy —
+//! per conv GEMM shape, **benchmarking candidates on the actual machine**
+//! with the analytical cost model ([`crate::costmodel::conv_cost_s_for`])
+//! demoted to the search *prior*: it ranks the candidate grid, the top of
+//! the ranking gets measured, and only a measured ≥2% win is persisted —
+//! so a tuned model is never slower than the defaults by construction.
+//!
+//! Winners land in a [`TuningDb`] (JSON, `version` 1) consulted by
+//! `compiler::compile_graph_tuned` at compile time: exact-shape hit first,
+//! then nearest-shape fallback (log-space distance under a cutoff), then
+//! the static defaults. The DB ships inside `.dlrt` (format v3), travels
+//! via `DLRT_TUNE_DB` ([`ambient_db`]), and every record is validated at
+//! the trust boundary ([`validate_entry`]) — tile geometry > 0, within
+//! the kernels' clamp limits, k_unroll a multiple of the ISA's native
+//! chunk, known ISA tag, fp32 never thread-overridden.
+
+use std::path::Path;
+use std::sync::OnceLock;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::bench_harness::bench_ms;
+use crate::costmodel::{conv_cost_s_for, CORTEX_A72, EngineKind};
+use crate::dlrt::graph::Graph;
+use crate::exec::planner::{conv_gemm_shapes, ConvGemmShape};
+use crate::kernels::bitserial::{pack_rows_u8, pack_weights_offset, MAX_TILE_M};
+use crate::kernels::im2col::{
+    im2col_f32, im2col_quant_u8, quantize_direct_u8, stage_direct_f32, ConvDims,
+};
+use crate::kernels::ukernel::{self, native_chunk, Isa, PackedW, UKernel, UKernelDesc};
+use crate::util::json::{arr, num, obj, s, Json};
+use crate::util::rng::Rng;
+
+/// Tuning-DB file format version (`{"version": 1, "entries": [...]}`).
+pub const DB_VERSION: u32 = 1;
+
+/// Largest `tile_n` a schedule may carry (pure loop blocking, but bounded
+/// so corrupt records can't smuggle absurd values through the format).
+pub const MAX_TILE_N: usize = 256;
+
+/// Nearest-shape fallback cutoff: sum of |ln| distances over (m, k, n).
+/// 2.0 ≈ "within one combined order of magnitude"; farther shapes fall
+/// back to the static defaults instead of a stale schedule.
+pub const NEAREST_CUTOFF: f64 = 2.0;
+
+/// How a conv stages its im2col patch matrix.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Staging {
+    /// The general gather (padding/stride aware) — always correct.
+    Gather,
+    /// Flat copy/quantize for unit convs (1×1, stride 1, pad 0) reading a
+    /// dense input; the executor falls back to gather when the instruction
+    /// reads a strided view, so `Direct` is a hint, never a hazard.
+    Direct,
+}
+
+impl Staging {
+    pub fn name(self) -> &'static str {
+        match self {
+            Staging::Gather => "gather",
+            Staging::Direct => "direct",
+        }
+    }
+
+    pub fn parse(v: &str) -> Result<Staging> {
+        match v {
+            "gather" => Ok(Staging::Gather),
+            "direct" => Ok(Staging::Direct),
+            other => bail!("unknown staging {other:?} (expected gather|direct)"),
+        }
+    }
+}
+
+/// One tuned schedule: a [`UKernelDesc`] geometry override plus the thread
+/// split and staging strategy. ISA-independent on purpose — the owning
+/// [`TuneEntry`] carries the ISA, and `desc_for` re-attaches it.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Schedule {
+    pub tile_m: usize,
+    pub tile_n: usize,
+    pub k_unroll: usize,
+    /// GEMM worker threads for this conv: 0 = inherit the request level.
+    /// Integer GEMMs are bit-exact at any thread count; fp32 schedules
+    /// must keep 0 (the fp32 row partition is not bit-stable).
+    pub threads: usize,
+    pub staging: Staging,
+}
+
+impl Schedule {
+    /// The default (untuned) schedule of a kernel's static geometry.
+    pub fn from_desc(d: &UKernelDesc) -> Schedule {
+        Schedule {
+            tile_m: d.tile_m,
+            tile_n: d.tile_n,
+            k_unroll: d.k_unroll,
+            threads: 0,
+            staging: Staging::Gather,
+        }
+    }
+
+    /// Re-attach an ISA to get the override the GEMM runs with.
+    pub fn desc_for(&self, isa: Isa) -> UKernelDesc {
+        UKernelDesc { isa, tile_m: self.tile_m, tile_n: self.tile_n, k_unroll: self.k_unroll }
+    }
+
+    /// Effective GEMM thread count under a request-level `nthreads`.
+    pub fn gemm_threads(&self, nthreads: usize) -> usize {
+        if self.threads == 0 {
+            nthreads
+        } else {
+            self.threads.min(nthreads.max(1))
+        }
+    }
+}
+
+/// One tuning-DB record: the schedule that won for a GEMM shape on one
+/// engine and ISA, plus the measured gain (default_ms / tuned_ms).
+#[derive(Clone, Debug, PartialEq)]
+pub struct TuneEntry {
+    pub op: String,
+    /// GEMM M (im2col rows at batch 1).
+    pub m: usize,
+    /// GEMM K (patch elements).
+    pub k: usize,
+    /// GEMM N (output channels).
+    pub n: usize,
+    /// `bitserial` | `int8` | `fp32`.
+    pub engine: String,
+    pub isa: Isa,
+    pub sched: Schedule,
+    pub gain: f64,
+}
+
+/// How a lookup resolved.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DbMatch {
+    Exact,
+    Nearest,
+}
+
+/// The versioned tuning DB: a flat record list, searched exact-first.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct TuningDb {
+    pub entries: Vec<TuneEntry>,
+}
+
+impl TuningDb {
+    pub fn new() -> TuningDb {
+        TuningDb::default()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// Does any record target `isa`? (The cross-ISA fallback check.)
+    pub fn has_isa(&self, isa: Isa) -> bool {
+        self.entries.iter().any(|e| e.isa == isa)
+    }
+
+    /// Insert, replacing any record with the same (op, shape, engine, ISA).
+    pub fn upsert(&mut self, entry: TuneEntry) {
+        let pos = self.entries.iter().position(|e| {
+            e.op == entry.op
+                && e.m == entry.m
+                && e.k == entry.k
+                && e.n == entry.n
+                && e.engine == entry.engine
+                && e.isa == entry.isa
+        });
+        match pos {
+            Some(i) => self.entries[i] = entry,
+            None => self.entries.push(entry),
+        }
+    }
+
+    /// Resolve a schedule for a GEMM shape: exact (op, m, k, n, engine,
+    /// ISA) hit first, else the nearest same-(op, engine, ISA) shape by
+    /// log-space distance under [`NEAREST_CUTOFF`], else `None` (static
+    /// defaults).
+    pub fn lookup(
+        &self,
+        op: &str,
+        m: usize,
+        k: usize,
+        n: usize,
+        engine: &str,
+        isa: Isa,
+    ) -> Option<(&TuneEntry, DbMatch)> {
+        let mut best: Option<(&TuneEntry, f64)> = None;
+        for e in &self.entries {
+            if e.op != op || e.engine != engine || e.isa != isa {
+                continue;
+            }
+            if e.m == m && e.k == k && e.n == n {
+                return Some((e, DbMatch::Exact));
+            }
+            let d = ln_dist(e.m, m) + ln_dist(e.k, k) + ln_dist(e.n, n);
+            if d <= NEAREST_CUTOFF && best.is_none_or(|(_, bd)| d < bd) {
+                best = Some((e, d));
+            }
+        }
+        best.map(|(e, _)| (e, DbMatch::Nearest))
+    }
+
+    pub fn to_json(&self) -> Json {
+        obj(vec![
+            ("version", num(DB_VERSION as f64)),
+            ("entries", arr(self.entries.iter().map(entry_to_json).collect())),
+        ])
+    }
+
+    /// Parse and validate a DB. `label` prefixes every diagnostic (the
+    /// file path at the `format::load` / `DLRT_TUNE_DB` trust boundaries).
+    pub fn from_json(label: &str, j: &Json) -> Result<TuningDb> {
+        let version =
+            j.get("version").and_then(|v| v.usize()).map_err(|e| anyhow!("{label}: {e}"))?;
+        if version != DB_VERSION as usize {
+            bail!("{label}: unsupported tuning DB version {version} (expected {DB_VERSION})");
+        }
+        let entries =
+            j.get("entries").and_then(|v| v.arr()).map_err(|e| anyhow!("{label}: {e}"))?;
+        let mut db = TuningDb::new();
+        for (i, ej) in entries.iter().enumerate() {
+            let e = entry_from_json(ej)
+                .and_then(|e| validate_entry(&e).map(|()| e))
+                .map_err(|err| anyhow!("{label}: tuning entry {i}: {err}"))?;
+            db.entries.push(e);
+        }
+        Ok(db)
+    }
+
+    pub fn load(path: &Path) -> Result<TuningDb> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("{}: reading tuning DB", path.display()))?;
+        let j = Json::parse(&text).map_err(|e| anyhow!("{}: {e}", path.display()))?;
+        TuningDb::from_json(&path.display().to_string(), &j)
+    }
+
+    pub fn save(&self, path: &Path) -> Result<()> {
+        std::fs::write(path, self.to_json().to_string())
+            .with_context(|| format!("{}: writing tuning DB", path.display()))
+    }
+}
+
+fn ln_dist(a: usize, b: usize) -> f64 {
+    ((a.max(1) as f64).ln() - (b.max(1) as f64).ln()).abs()
+}
+
+pub fn entry_to_json(e: &TuneEntry) -> Json {
+    obj(vec![
+        ("op", s(&e.op)),
+        ("m", num(e.m as f64)),
+        ("k", num(e.k as f64)),
+        ("n", num(e.n as f64)),
+        ("engine", s(&e.engine)),
+        ("isa", s(e.isa.name())),
+        ("tile_m", num(e.sched.tile_m as f64)),
+        ("tile_n", num(e.sched.tile_n as f64)),
+        ("k_unroll", num(e.sched.k_unroll as f64)),
+        ("threads", num(e.sched.threads as f64)),
+        ("staging", s(e.sched.staging.name())),
+        ("gain", num(e.gain)),
+    ])
+}
+
+pub fn entry_from_json(j: &Json) -> Result<TuneEntry> {
+    let isa = Isa::parse(j.get("isa")?.str()?).map_err(|e| anyhow!("{e}"))?;
+    Ok(TuneEntry {
+        op: j.get("op")?.str()?.to_string(),
+        m: j.get("m")?.usize()?,
+        k: j.get("k")?.usize()?,
+        n: j.get("n")?.usize()?,
+        engine: j.get("engine")?.str()?.to_string(),
+        isa,
+        sched: Schedule {
+            tile_m: j.get("tile_m")?.usize()?,
+            tile_n: j.get("tile_n")?.usize()?,
+            k_unroll: j.get("k_unroll")?.usize()?,
+            threads: j.get("threads")?.usize()?,
+            staging: Staging::parse(j.get("staging")?.str()?)?,
+        },
+        gain: j.get("gain")?.num()?,
+    })
+}
+
+/// Bounds-check one record: the trust-boundary gate every DB passes
+/// through before any schedule reaches a prepack or a GEMM.
+pub fn validate_entry(e: &TuneEntry) -> Result<()> {
+    if e.op != "conv" {
+        bail!("unknown op {:?}", e.op);
+    }
+    if !matches!(e.engine.as_str(), "bitserial" | "int8" | "fp32") {
+        bail!("unknown engine {:?}", e.engine);
+    }
+    if e.m == 0 || e.k == 0 || e.n == 0 {
+        bail!("degenerate GEMM shape {}x{}x{}", e.m, e.k, e.n);
+    }
+    let sc = &e.sched;
+    if sc.tile_m == 0 || sc.tile_m > MAX_TILE_M {
+        bail!("tile_m {} outside 1..={MAX_TILE_M}", sc.tile_m);
+    }
+    if sc.tile_n == 0 || sc.tile_n > MAX_TILE_N {
+        bail!("tile_n {} outside 1..={MAX_TILE_N}", sc.tile_n);
+    }
+    let chunk = native_chunk(e.isa);
+    if sc.k_unroll == 0 || sc.k_unroll > 16 || sc.k_unroll % chunk != 0 {
+        bail!(
+            "k_unroll {} must be a multiple of {chunk} in 1..=16 for {}",
+            sc.k_unroll,
+            e.isa.name()
+        );
+    }
+    if sc.threads > 256 {
+        bail!("threads {} outside 0..=256", sc.threads);
+    }
+    if e.engine == "fp32" && sc.threads != 0 {
+        bail!("fp32 schedules must inherit threads (threaded fp32 GEMM is not bit-stable)");
+    }
+    Ok(())
+}
+
+/// A bare [`Schedule`] as JSON — the per-conv `sched` record inside `.dlrt`
+/// (the owning conv record carries engine/shape, so only geometry is here).
+pub fn sched_to_json(sc: &Schedule) -> Json {
+    obj(vec![
+        ("tile_m", num(sc.tile_m as f64)),
+        ("tile_n", num(sc.tile_n as f64)),
+        ("k_unroll", num(sc.k_unroll as f64)),
+        ("threads", num(sc.threads as f64)),
+        ("staging", s(sc.staging.name())),
+    ])
+}
+
+pub fn sched_from_json(j: &Json) -> Result<Schedule> {
+    Ok(Schedule {
+        tile_m: j.get("tile_m")?.usize()?,
+        tile_n: j.get("tile_n")?.usize()?,
+        k_unroll: j.get("k_unroll")?.usize()?,
+        threads: j.get("threads")?.usize()?,
+        staging: Staging::parse(j.get("staging")?.str()?)?,
+    })
+}
+
+/// [`validate_entry`] for a bare per-conv schedule: wrap it in a synthetic
+/// unit-shape entry so every geometry/thread/engine rule applies unchanged.
+pub fn validate_sched(engine: &str, isa: Isa, sc: &Schedule) -> Result<()> {
+    validate_entry(&TuneEntry {
+        op: "conv".to_string(),
+        m: 1,
+        k: 1,
+        n: 1,
+        engine: engine.to_string(),
+        isa,
+        sched: *sc,
+        gain: 1.0,
+    })
+}
+
+/// The process-ambient tuning DB (`DLRT_TUNE_DB=<path>`), read once. A
+/// missing/empty var is "no DB"; an unreadable or invalid file logs a
+/// warning and is ignored — the override must never break a compile.
+pub fn ambient_db() -> Option<&'static TuningDb> {
+    static DB: OnceLock<Option<TuningDb>> = OnceLock::new();
+    DB.get_or_init(|| {
+        let path = std::env::var("DLRT_TUNE_DB").ok()?;
+        let path = path.trim().to_string();
+        if path.is_empty() {
+            return None;
+        }
+        match TuningDb::load(Path::new(&path)) {
+            Ok(db) => Some(db),
+            Err(e) => {
+                eprintln!("warning: ignoring DLRT_TUNE_DB: {e:#}");
+                None
+            }
+        }
+    })
+    .as_ref()
+}
+
+/// A synthetic DB with deliberately odd (but valid) schedules for every
+/// conv shape of `g` on every engine — the test substrate that rotates
+/// `plan_parity` / `plan_fuzz` through tuned-vs-default plans without
+/// paying for a real search.
+pub fn synthetic_db(g: &Graph, isa: Isa) -> Result<TuningDb> {
+    let shapes = conv_gemm_shapes(g)?;
+    let mut db = TuningDb::new();
+    for (i, sh) in shapes.iter().enumerate() {
+        for engine in ["bitserial", "int8", "fp32"] {
+            let sched = Schedule {
+                tile_m: [5, 7, 11][i % 3],
+                tile_n: [3, 13, 5][i % 3],
+                k_unroll: native_chunk(isa) * (1 + i % 2),
+                threads: if engine == "fp32" { 0 } else { [0, 2][i % 2] },
+                staging: if sh.unit { Staging::Direct } else { Staging::Gather },
+            };
+            db.upsert(TuneEntry {
+                op: "conv".to_string(),
+                m: sh.rows,
+                k: sh.k,
+                n: sh.cout,
+                engine: engine.to_string(),
+                isa,
+                sched,
+                gain: 1.0,
+            });
+        }
+    }
+    Ok(db)
+}
+
+// ---------------------------------------------------------------------------
+// The search
+// ---------------------------------------------------------------------------
+
+/// Search knobs for `tune_graph`.
+#[derive(Clone, Copy, Debug)]
+pub struct TuneOpts {
+    /// Candidates benchmarked per (shape, engine) beyond the default —
+    /// the prior ranks the grid, the top `budget` get measured.
+    pub budget: usize,
+    /// Timed repetitions per measurement (median-of-reps).
+    pub reps: usize,
+    /// Request-level thread count the schedules are tuned for.
+    pub threads: usize,
+}
+
+impl Default for TuneOpts {
+    fn default() -> Self {
+        TuneOpts { budget: 8, reps: 5, threads: 1 }
+    }
+}
+
+/// One (shape, engine) search outcome for reporting.
+#[derive(Clone, Debug)]
+pub struct ShapeReport {
+    /// Representative conv name (first in node order with this shape).
+    pub name: String,
+    /// How many convs of the graph share the shape.
+    pub convs: usize,
+    pub m: usize,
+    pub k: usize,
+    pub n: usize,
+    pub engine: String,
+    pub default_ms: f64,
+    pub tuned_ms: f64,
+    pub sched: Schedule,
+    /// Whether the winner beat the default by the persistence margin.
+    pub improved: bool,
+}
+
+/// Run the schedule search for every unique conv GEMM shape of `g` on
+/// `isa`, upserting measured winners into `db`. Only a ≥2% measured win is
+/// persisted — lookups on un-persisted shapes fall back to the defaults,
+/// which is what makes "tuned is never slower" hold by construction.
+pub fn tune_graph(
+    g: &Graph,
+    isa: Isa,
+    opts: &TuneOpts,
+    db: &mut TuningDb,
+) -> Result<Vec<ShapeReport>> {
+    let uk = ukernel::kernel_for(isa)
+        .ok_or_else(|| anyhow!("ISA {} is not runnable on this host", isa.name()))?;
+    let shapes = conv_gemm_shapes(g)?;
+    // dedupe by (m, k, n, unit) keeping node order and a share count
+    let mut uniq: Vec<(ConvGemmShape, usize)> = Vec::new();
+    for sh in shapes {
+        if let Some((_, count)) = uniq.iter_mut().find(|(u, _)| {
+            u.rows == sh.rows && u.k == sh.k && u.cout == sh.cout && u.unit == sh.unit
+        }) {
+            *count += 1;
+        } else {
+            uniq.push((sh, 1));
+        }
+    }
+    let mut reports = Vec::new();
+    for (sh, convs) in &uniq {
+        let stage = search_staging(sh.unit, sh.rows, sh.k, opts.reps);
+        for engine in ["bitserial", "int8", "fp32"] {
+            let (sched, default_ms, tuned_ms) = match engine {
+                "bitserial" => search_bitserial(uk, sh.rows, sh.cout, sh.k, opts),
+                "int8" => search_int8(uk, sh.rows, sh.cout, sh.k, opts),
+                _ => (Schedule::from_desc(&uk.desc), 0.0, 0.0),
+            };
+            let (staging, stage_default, stage_tuned) = if engine == "fp32" {
+                search_staging_f32(sh.unit, sh.rows, sh.k, opts.reps)
+                    .unwrap_or((Staging::Gather, 0.0, 0.0))
+            } else {
+                stage.unwrap_or((Staging::Gather, 0.0, 0.0))
+            };
+            let sched = Schedule { staging, ..sched };
+            let default_total = default_ms + stage_default;
+            let tuned_total = tuned_ms + stage_tuned;
+            let improved =
+                tuned_total < default_total * 0.98 && sched != Schedule::from_desc(&uk.desc);
+            if improved {
+                db.upsert(TuneEntry {
+                    op: "conv".to_string(),
+                    m: sh.rows,
+                    k: sh.k,
+                    n: sh.cout,
+                    engine: engine.to_string(),
+                    isa,
+                    sched,
+                    gain: if tuned_total > 0.0 { default_total / tuned_total } else { 1.0 },
+                });
+            }
+            reports.push(ShapeReport {
+                name: sh.name.clone(),
+                convs: *convs,
+                m: sh.rows,
+                k: sh.k,
+                n: sh.cout,
+                engine: engine.to_string(),
+                default_ms: default_total,
+                tuned_ms: tuned_total,
+                sched,
+                improved,
+            });
+        }
+    }
+    Ok(reports)
+}
+
+/// Bitserial geometry grid for `isa`: loop-blocking tiles (and, on SIMD
+/// entries, the prepack chunk) the kernels can honor.
+fn bit_candidates(isa: Isa) -> Vec<UKernelDesc> {
+    let chunk = native_chunk(isa);
+    let (tms, tns, kus): (&[usize], &[usize], Vec<usize>) = if isa == Isa::Scalar {
+        (&[8, 16, 32, 64, 128], &[8, 16, 32, 64], vec![2])
+    } else {
+        (&[8, 16, 32], &[4, 8, 16, 32], vec![chunk, 2 * chunk])
+    };
+    let mut out = Vec::new();
+    for &tm in tms {
+        for &tn in tns {
+            for &ku in &kus {
+                out.push(UKernelDesc { isa, tile_m: tm, tile_n: tn, k_unroll: ku });
+            }
+        }
+    }
+    out
+}
+
+/// Search the bitserial schedule for one GEMM shape: the cost model ranks
+/// (geometry × thread-split) candidates, the top `budget` are benchmarked
+/// on synthetic 2A2W data, and the measured winner is returned alongside
+/// the default's measurement.
+fn search_bitserial(
+    uk: &'static UKernel,
+    m: usize,
+    n: usize,
+    k: usize,
+    opts: &TuneOpts,
+) -> (Schedule, f64, f64) {
+    let isa = uk.desc.isa;
+    let mut rng = Rng::new(0x7e57 ^ ((m as u64) << 32) ^ ((n as u64) << 16) ^ k as u64);
+    let a: Vec<u8> = (0..m * k).map(|_| rng.usize(4) as u8).collect();
+    let w: Vec<i32> = (0..n * k).map(|_| rng.range(-1, 2) as i32).collect();
+    let ap = pack_rows_u8(&a, m, k, 2);
+    let wp = pack_weights_offset(&w, n, k, 2);
+    let mut out = vec![0i32; m * n];
+    let eng = EngineKind::Bitserial { w_bits: 2, a_bits: 2 };
+
+    let mut bench = |desc: &UKernelDesc, threads: usize| -> f64 {
+        let pw = PackedW::from_packed(&wp, uk.weight_layout_for(desc));
+        bench_ms(1, opts.reps, || (uk.gemm_bit)(desc, &ap, &pw, 2, &mut out, threads)).median_ms
+    };
+
+    let default_ms = bench(&uk.desc, opts.threads);
+    // rank candidates by the cost-model prior, then measure the top
+    let mut cands: Vec<(UKernelDesc, usize, f64)> = Vec::new();
+    for desc in bit_candidates(isa) {
+        for threads in thread_splits(opts.threads) {
+            let t = if threads == 0 { opts.threads } else { threads };
+            let prior = conv_cost_s_for(&CORTEX_A72, &desc, m, k, n, eng, t);
+            cands.push((desc, threads, prior));
+        }
+    }
+    cands.sort_by(|x, y| x.2.total_cmp(&y.2));
+    cands.truncate(opts.budget.max(1));
+    let mut best = (Schedule::from_desc(&uk.desc), default_ms);
+    for (desc, threads, _) in &cands {
+        if *desc == uk.desc && *threads == 0 {
+            continue; // already measured as the default
+        }
+        let t = if *threads == 0 { opts.threads } else { *threads };
+        let ms = bench(desc, t);
+        if ms < best.1 {
+            best = (Schedule { threads: *threads, ..Schedule::from_desc(desc) }, ms);
+        }
+    }
+    (best.0, default_ms, best.1)
+}
+
+/// int8 search: geometry doesn't reach the int8 GEMM, so only the thread
+/// split is searched.
+fn search_int8(
+    uk: &'static UKernel,
+    m: usize,
+    n: usize,
+    k: usize,
+    opts: &TuneOpts,
+) -> (Schedule, f64, f64) {
+    let mut rng = Rng::new(0x178 ^ ((m as u64) << 32) ^ ((n as u64) << 16) ^ k as u64);
+    let a: Vec<u8> = (0..m * k).map(|_| rng.usize(256) as u8).collect();
+    let b: Vec<i8> = (0..n * k).map(|_| rng.range(-128, 128) as i8).collect();
+    let mut out = vec![0i32; m * n];
+    let mut bench = |threads: usize| -> f64 {
+        bench_ms(1, opts.reps, || (uk.gemm_u8i8)(&a, &b, m, n, k, &mut out, threads)).median_ms
+    };
+    let default_ms = bench(opts.threads);
+    let mut best = (Schedule::from_desc(&uk.desc), default_ms);
+    for threads in thread_splits(opts.threads) {
+        if threads == 0 {
+            continue;
+        }
+        let ms = bench(threads);
+        if ms < best.1 {
+            best = (Schedule { threads, ..Schedule::from_desc(&uk.desc) }, ms);
+        }
+    }
+    (best.0, default_ms, best.1)
+}
+
+/// Thread-split candidates at request level `nthreads`: inherit (0) plus
+/// explicit narrower splits (a small GEMM often wins single-threaded).
+fn thread_splits(nthreads: usize) -> Vec<usize> {
+    let mut v = vec![0];
+    if nthreads > 1 {
+        v.push(1);
+        if nthreads > 2 {
+            v.push(nthreads / 2);
+        }
+    }
+    v
+}
+
+/// Benchmark gather-vs-direct staging of the quantized patch matrix for a
+/// unit conv shape; `None` when the shape can't stage direct at all.
+fn search_staging(unit: bool, rows: usize, k: usize, reps: usize) -> Option<(Staging, f64, f64)> {
+    if !unit {
+        return None;
+    }
+    let d = ConvDims::new(1, rows, 1, k, 1, 1, [1, 1], [0, 0]);
+    let mut rng = Rng::new(0x57a6e ^ rows as u64 ^ ((k as u64) << 24));
+    let x: Vec<f32> = (0..rows * k).map(|_| rng.range_f32(-0.2, 1.0)).collect();
+    let mut cols = vec![0u8; rows * k];
+    let gather = bench_ms(1, reps, || im2col_quant_u8(&x, &d, 0.1, 3, &mut cols)).median_ms;
+    let direct = bench_ms(1, reps, || quantize_direct_u8(&x, 0.1, 3, &mut cols)).median_ms;
+    if direct < gather {
+        Some((Staging::Direct, gather, direct))
+    } else {
+        Some((Staging::Gather, gather, gather))
+    }
+}
+
+/// `search_staging`'s f32 twin (the fp32 engine's only tunable today).
+fn search_staging_f32(
+    unit: bool,
+    rows: usize,
+    k: usize,
+    reps: usize,
+) -> Option<(Staging, f64, f64)> {
+    if !unit {
+        return None;
+    }
+    let d = ConvDims::new(1, rows, 1, k, 1, 1, [1, 1], [0, 0]);
+    let mut rng = Rng::new(0xf32 ^ rows as u64 ^ ((k as u64) << 24));
+    let x: Vec<f32> = (0..rows * k).map(|_| rng.range_f32(-1.0, 1.0)).collect();
+    let mut cols = vec![0.0f32; rows * k];
+    let gather = bench_ms(1, reps, || im2col_f32(&x, &d, &mut cols)).median_ms;
+    let direct = bench_ms(1, reps, || stage_direct_f32(&x, &mut cols)).median_ms;
+    if direct < gather {
+        Some((Staging::Direct, gather, direct))
+    } else {
+        Some((Staging::Gather, gather, gather))
+    }
+}
+
+/// Standalone bitserial geometry search for one GEMM shape — the hook the
+/// fig benches use for their tuned-vs-default columns. Returns
+/// `(winning desc, default median ms, tuned median ms)`; the winner is the
+/// default itself when nothing beat it.
+pub fn tune_bit_shape(
+    isa: Isa,
+    m: usize,
+    n: usize,
+    k: usize,
+    budget: usize,
+    reps: usize,
+) -> Option<(UKernelDesc, f64, f64)> {
+    let uk = ukernel::kernel_for(isa)?;
+    let opts = TuneOpts { budget, reps, threads: 1 };
+    let (sched, default_ms, tuned_ms) = search_bitserial(uk, m, n, k, &opts);
+    Some((sched.desc_for(isa), default_ms, tuned_ms))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::tiny_test_graph;
+
+    fn entry(m: usize, k: usize, n: usize, engine: &str, isa: Isa) -> TuneEntry {
+        TuneEntry {
+            op: "conv".to_string(),
+            m,
+            k,
+            n,
+            engine: engine.to_string(),
+            isa,
+            sched: Schedule {
+                tile_m: 5,
+                tile_n: 3,
+                k_unroll: native_chunk(isa),
+                threads: 0,
+                staging: Staging::Gather,
+            },
+            gain: 1.5,
+        }
+    }
+
+    #[test]
+    fn lookup_prefers_exact_then_nearest_under_cutoff() {
+        let mut db = TuningDb::new();
+        db.upsert(entry(64, 288, 16, "bitserial", Isa::Scalar));
+        db.upsert(entry(100, 300, 20, "bitserial", Isa::Scalar));
+        let (e, m) = db.lookup("conv", 100, 300, 20, "bitserial", Isa::Scalar).unwrap();
+        assert_eq!((e.m, m), (100, DbMatch::Exact));
+        // near miss resolves to the closest shape
+        let (e, m) = db.lookup("conv", 96, 290, 18, "bitserial", Isa::Scalar).unwrap();
+        assert_eq!((e.m, m), (100, DbMatch::Nearest));
+        // wrong engine/ISA never match
+        assert!(db.lookup("conv", 100, 300, 20, "int8", Isa::Scalar).is_none());
+        assert!(db.lookup("conv", 100, 300, 20, "bitserial", Isa::Neon).is_none());
+        // far shapes fall off the cutoff
+        assert!(db.lookup("conv", 100_000, 3, 9000, "bitserial", Isa::Scalar).is_none());
+    }
+
+    #[test]
+    fn upsert_replaces_same_key() {
+        let mut db = TuningDb::new();
+        db.upsert(entry(8, 9, 4, "int8", Isa::Scalar));
+        let mut e2 = entry(8, 9, 4, "int8", Isa::Scalar);
+        e2.sched.tile_m = 7;
+        db.upsert(e2);
+        assert_eq!(db.entries.len(), 1);
+        assert_eq!(db.entries[0].sched.tile_m, 7);
+    }
+
+    #[test]
+    fn json_roundtrip_preserves_db() {
+        let mut db = TuningDb::new();
+        db.upsert(entry(784, 1152, 128, "bitserial", Isa::Scalar));
+        db.upsert(TuneEntry {
+            sched: Schedule {
+                tile_m: 16,
+                tile_n: 8,
+                k_unroll: 2,
+                threads: 2,
+                staging: Staging::Direct,
+            },
+            ..entry(196, 2304, 256, "int8", Isa::Scalar)
+        });
+        let text = db.to_json().to_string();
+        let back = TuningDb::from_json("test", &Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(back, db);
+    }
+
+    #[test]
+    fn validation_rejects_garbage_records() {
+        let base = entry(8, 9, 4, "bitserial", Isa::Scalar);
+        let cases: Vec<(&str, Box<dyn Fn(&mut TuneEntry)>)> = vec![
+            ("tile_m", Box::new(|e| e.sched.tile_m = 0)),
+            ("tile_m", Box::new(|e| e.sched.tile_m = MAX_TILE_M + 1)),
+            ("tile_n", Box::new(|e| e.sched.tile_n = 0)),
+            ("tile_n", Box::new(|e| e.sched.tile_n = MAX_TILE_N + 1)),
+            ("k_unroll", Box::new(|e| e.sched.k_unroll = 0)),
+            ("k_unroll", Box::new(|e| e.sched.k_unroll = 64)),
+            ("engine", Box::new(|e| e.engine = "cuda".to_string())),
+            ("op", Box::new(|e| e.op = "dense".to_string())),
+            ("shape", Box::new(|e| e.m = 0)),
+            ("threads", Box::new(|e| e.sched.threads = 10_000)),
+        ];
+        for (what, mutate) in cases {
+            let mut e = base.clone();
+            mutate(&mut e);
+            let err = validate_entry(&e).unwrap_err().to_string();
+            assert!(err.contains(what), "{what}: diagnostic names the field: {err}");
+        }
+        // fp32 must never carry a thread override
+        let mut e = base.clone();
+        e.engine = "fp32".to_string();
+        e.sched.threads = 2;
+        let err = validate_entry(&e).unwrap_err().to_string();
+        assert!(err.contains("fp32"), "{err}");
+        // a k_unroll off the ISA's native chunk is rejected too
+        let mut e = entry(8, 9, 4, "bitserial", Isa::Avx2);
+        e.sched.k_unroll = 3;
+        assert!(validate_entry(&e).is_err());
+        validate_entry(&base).expect("baseline entry is valid");
+    }
+
+    #[test]
+    fn from_json_rejects_bad_version_and_prefixes_label() {
+        let err = TuningDb::from_json(
+            "db.json",
+            &Json::parse(r#"{"version": 99, "entries": []}"#).unwrap(),
+        )
+        .unwrap_err()
+        .to_string();
+        assert!(err.starts_with("db.json:"), "{err}");
+        assert!(err.contains("version 99"), "{err}");
+        let bad = r#"{"version": 1, "entries": [{"op": "conv"}]}"#;
+        let err = TuningDb::from_json("db.json", &Json::parse(bad).unwrap())
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("tuning entry 0"), "{err}");
+    }
+
+    #[test]
+    fn synthetic_db_is_valid_and_covers_every_conv_engine() {
+        let g = tiny_test_graph(true);
+        let db = synthetic_db(&g, Isa::Scalar).unwrap();
+        assert!(!db.is_empty());
+        for e in &db.entries {
+            validate_entry(e).expect("synthetic entries must pass the load gate");
+        }
+        for sh in conv_gemm_shapes(&g).unwrap() {
+            for engine in ["bitserial", "int8", "fp32"] {
+                let (e, m) = db
+                    .lookup("conv", sh.rows, sh.k, sh.cout, engine, Isa::Scalar)
+                    .expect("every conv shape has an entry");
+                assert_eq!(m, DbMatch::Exact);
+                assert_ne!(
+                    e.sched,
+                    Schedule::from_desc(&ukernel::kernel_for(Isa::Scalar).unwrap().desc),
+                    "synthetic schedules are deliberately odd"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn tune_bit_shape_returns_measurements() {
+        // tiny budget, tiny shape: this is the CI-smoke-sized search
+        let (desc, default_ms, tuned_ms) = tune_bit_shape(Isa::Scalar, 16, 8, 64, 2, 1).unwrap();
+        assert_eq!(desc.isa, Isa::Scalar);
+        assert!(default_ms >= 0.0);
+        // the winner is never slower than the default by construction
+        assert!(tuned_ms <= default_ms);
+    }
+}

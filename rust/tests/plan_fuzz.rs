@@ -9,7 +9,9 @@
 //! across {bitserial, fp32, int8} × {1, 3} threads × batch {1, 3}. Seeds
 //! rotate through every host-available micro-kernel ISA (forced at compile
 //! time), so the SIMD and scalar inner kernels both see the full graph zoo
-//! without multiplying the runtime by the ISA count.
+//! without multiplying the runtime by the ISA count. Odd seeds additionally
+//! compile against a synthetic tuning DB (odd tile sizes, thread splits,
+//! direct staging), so tuned schedules ride the same differential harness.
 //!
 //! A failure prints the reproducing seed and a full graph dump; re-run a
 //! single seed with `DLRT_FUZZ_SEED=<seed> cargo test --test plan_fuzz`.
@@ -17,7 +19,7 @@
 mod common;
 
 use common::{dump, fuzz_input, random_graph};
-use dlrt::compiler::{compile_graph_for_isa, EngineChoice};
+use dlrt::compiler::{compile_graph_for_isa, compile_graph_tuned, EngineChoice};
 use dlrt::dlrt::graph::Graph;
 use dlrt::exec::{reference, Executor};
 use dlrt::kernels::ukernel::{available_isas, Isa};
@@ -39,6 +41,8 @@ struct Coverage {
     same_slot: usize,
     fused_acts: usize,
     in_place: usize,
+    /// plans compiled with at least one tuned conv schedule attached
+    tuned_plans: usize,
     /// seeds run per micro-kernel ISA (each must stay non-zero)
     isa_seeds: std::collections::BTreeMap<&'static str, usize>,
 }
@@ -54,14 +58,32 @@ fn fail(seed: u64, g: &Graph, what: &str, detail: String) -> ! {
 fn check_seed(seed: u64, isa: Isa, cov: &mut Coverage) {
     let g = random_graph(seed);
     *cov.isa_seeds.entry(isa.name()).or_insert(0) += 1;
+    // odd seeds compile against a synthetic tuning DB so tuned loop
+    // blocking / thread splits / direct staging face the same zoo
+    let db = if seed % 2 == 1 {
+        match dlrt::tune::synthetic_db(&g, isa) {
+            Ok(d) => Some(d),
+            Err(e) => fail(seed, &g, "synthetic tuning DB failed",
+                           format!("isa={}: {e:#}", isa.name())),
+        }
+    } else {
+        None
+    };
     for engine in [EngineChoice::Auto, EngineChoice::ForceFp32, EngineChoice::ForceInt8] {
-        let model = match compile_graph_for_isa(&g, engine, isa) {
+        let compiled = match &db {
+            Some(d) => compile_graph_tuned(&g, engine, isa, Some(d)),
+            None => compile_graph_for_isa(&g, engine, isa),
+        };
+        let model = match compiled {
             Ok(m) => m,
             Err(e) => {
                 fail(seed, &g, "compile failed",
                      format!("{engine:?} isa={}: {e:#}", isa.name()))
             }
         };
+        if model.convs.iter().any(|c| c.sched.is_some()) {
+            cov.tuned_plans += 1;
+        }
         cov.fused_adds += model.plan.fused_add_instrs();
         cov.in_place_concats += model.plan.in_place_concats;
         cov.partial_concats += model.plan.partial_concats;
@@ -152,6 +174,7 @@ fn randomized_graphs_match_reference_bit_for_bit() {
     assert!(cov.same_slot > 0, "no same-slot stripe hops across {SEEDS} seeds");
     assert!(cov.fused_acts > 0, "no fused activations across {SEEDS} seeds");
     assert!(cov.in_place > 0, "no in-place activations across {SEEDS} seeds");
+    assert!(cov.tuned_plans > 0, "no tuned plans compiled across {SEEDS} seeds");
     for isa in &isas {
         assert!(
             cov.isa_seeds.get(isa.name()).copied().unwrap_or(0) > 0,
@@ -162,6 +185,7 @@ fn randomized_graphs_match_reference_bit_for_bit() {
     let isa_cov: Vec<String> =
         cov.isa_seeds.iter().map(|(n, c)| format!("{n}x{c}")).collect();
     println!("plan_fuzz isa rotation: {}", isa_cov.join(", "));
+    println!("plan_fuzz tuned plans: {}", cov.tuned_plans);
     println!(
         "plan_fuzz: {SEEDS} seeds × 3 engines — {} fused adds, {} in-place concats \
          ({} partial concats, {} fallbacks), {} striped writers, {} stripe readers \

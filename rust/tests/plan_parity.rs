@@ -385,6 +385,45 @@ fn plan_slots_are_disjoint_per_instruction() {
     }
 }
 
+/// Tuned schedules from a synthetic DB with deliberately odd tile sizes,
+/// per-conv thread splits and direct staging must stay bit-identical both
+/// to the untuned plan and to the reference interpreter, across engines ×
+/// host ISAs × thread counts — and every tuned plan must stay green under
+/// the static verifier (geometry is loop blocking, never a layout hazard).
+#[test]
+fn tuned_schedules_stay_bit_identical_and_verifier_green() {
+    use dlrt::compiler::compile_graph_tuned;
+    use dlrt::tune::synthetic_db;
+    let graphs: Vec<(&str, Graph)> = vec![
+        ("tiny_exact", tiny_test_graph(true)),
+        ("multi_op", multi_op_graph()),
+    ];
+    for (gname, g) in &graphs {
+        for engine in [EngineChoice::Auto, EngineChoice::ForceFp32, EngineChoice::ForceInt8] {
+            for isa in available_isas() {
+                let db = synthetic_db(g, isa).unwrap();
+                let tuned = compile_graph_tuned(g, engine, isa, Some(&db)).unwrap();
+                assert!(tuned.convs.iter().all(|c| c.sched.is_some()),
+                        "{gname}: synthetic DB must cover every conv");
+                dlrt::exec::verify::verify(&tuned.plan).unwrap_or_else(|d| {
+                    panic!("{gname}/{engine:?}/{}: tuned plan rejected — {d}", isa.name())
+                });
+                let untuned = compile_graph_tuned(g, engine, isa, None).unwrap();
+                let x = smooth_input(vec![1, 8, 8, 3]);
+                for nthreads in [1usize, 3] {
+                    let mut ex = Executor::new(nthreads);
+                    let got = ex.run(&tuned, &x).unwrap();
+                    let base = ex.run(&untuned, &x).unwrap();
+                    let want = reference::run_unfused(&untuned, &x, nthreads).unwrap();
+                    let label = format!("tuned {gname}/{engine:?}/{}/t{nthreads}", isa.name());
+                    assert_bit_identical(&got, &base, &label);
+                    assert_bit_identical(&got, &want, &label);
+                }
+            }
+        }
+    }
+}
+
 #[test]
 fn multi_op_plan_uses_every_lowering() {
     let g = multi_op_graph();
